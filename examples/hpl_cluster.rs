@@ -1,0 +1,64 @@
+//! HPL cluster scenario: Figs 4, 5 and 7 regenerated, with the network
+//! ablation (what if Monte Cimone had 10 GbE?) and the N-sensitivity of
+//! multi-node scaling — the two questions the paper's Fig 5 raises.
+//!
+//! ```bash
+//! cargo run --release --example hpl_cluster
+//! ```
+
+use cimone::arch::presets;
+use cimone::coordinator::report;
+use cimone::hpl::model::{project, ClusterConfig};
+use cimone::net::Link;
+use cimone::util::table::Table;
+
+fn main() {
+    println!("{}\n", report::render_fig4());
+    println!("{}\n", report::render_fig5());
+    println!("{}\n", report::render_fig7());
+
+    // N-sensitivity of the 2-node MCv2 configuration
+    let mut t = Table::new(vec!["N", "2-node Gflop/s", "scaling vs 1 node", "comm share"]);
+    let one_node = project(&ClusterConfig::mcv2_default(presets::sg2042(), 1, 64)).gflops;
+    for n in [20_000usize, 40_000, 57_600, 80_000, 115_200] {
+        let mut cfg = ClusterConfig::mcv2_default(presets::sg2042(), 2, 64);
+        cfg.n = n;
+        cfg.nb = 192;
+        let p = project(&cfg);
+        t.row(vec![
+            n.to_string(),
+            format!("{:.1}", p.gflops),
+            format!("{:.2}x", p.gflops / one_node),
+            format!("{:.0}%", 100.0 * p.t_comm / (p.t_comp + p.t_comm)),
+        ]);
+    }
+    println!("2-node scaling vs problem size (1 GbE):\n{}", t.render());
+
+    // network ablation
+    let mut t = Table::new(vec!["fabric", "2-node Gflop/s", "scaling", "MCv1 8-node Gflop/s"]);
+    for (name, link) in [("1 GbE (paper)", Link::gbe()), ("10 GbE (ablation)", Link::ten_gbe())] {
+        let mut cfg = ClusterConfig::mcv2_default(presets::sg2042(), 2, 64);
+        cfg.link = link;
+        let p = project(&cfg);
+        let mut v1 = ClusterConfig::mcv2_default(presets::u740(), 8, 4);
+        v1.lib = cimone::ukernel::UkernelId::OpenblasGeneric;
+        v1.link = link;
+        t.row(vec![
+            name.to_string(),
+            format!("{:.1}", p.gflops),
+            format!("{:.2}x", p.gflops / one_node),
+            format!("{:.1}", project(&v1).gflops),
+        ]);
+    }
+    println!("fabric ablation:\n{}", t.render());
+    println!(
+        "conclusion: the 1 GbE that served MCv1 ({:.0}% efficiency) caps MCv2 scaling;\n\
+         a 10 GbE fabric would restore near-linear 2-node scaling.",
+        100.0 * project(&{
+            let mut v1 = ClusterConfig::mcv2_default(presets::u740(), 8, 4);
+            v1.lib = cimone::ukernel::UkernelId::OpenblasGeneric;
+            v1
+        })
+        .efficiency_vs_one_node
+    );
+}

@@ -1,0 +1,64 @@
+//! Quickstart: the five-minute tour of the cimone stack.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Walks through: (1) the fleet, (2) one real HPL solve with validation,
+//! (3) one PJRT-backed matrix multiply (Pallas -> JAX -> HLO -> Rust),
+//! (4) the paper's headline numbers.
+
+use cimone::cluster::monte_cimone_v2;
+use cimone::coordinator::report;
+use cimone::hpl::driver::{run, Backend, HplConfig};
+use cimone::util::Matrix;
+
+fn main() -> Result<(), String> {
+    // 1. the machine
+    let inv = monte_cimone_v2();
+    println!("Monte Cimone v2: {} nodes, {:.0} Gflop/s peak", inv.nodes.len(), inv.peak_gflops());
+    for n in &inv.nodes {
+        println!(
+            "  {:<9} {:<26} {:>3} cores {:>7.1} GF/s peak  {}",
+            n.hostname,
+            n.desc.kind.label(),
+            n.cores(),
+            n.peak_gflops(),
+            n.os
+        );
+    }
+
+    // 2. a real HPL solve (factor, solve, residual-check)
+    let r = run(&HplConfig { n: 256, nb: 32, seed: 42, backend: Backend::Native })
+        .map_err(|e| e)?;
+    println!(
+        "\nHPL N=256: {:.2} host Gflop/s, residual {:.2e} -> {}",
+        r.host_gflops,
+        r.residual,
+        if r.passed { "PASSED" } else { "FAILED" }
+    );
+
+    // 3. the three-layer path: Pallas-authored GEMM through PJRT
+    match cimone::runtime::Runtime::new() {
+        Ok(mut rt) => {
+            let n = rt.manifest.n_gemm;
+            let a = Matrix::random_hpl(n, n, 1);
+            let b = Matrix::random_hpl(n, n, 2);
+            let c = cimone::runtime::entries::gemm(&mut rt, &a, &b).map_err(|e| e.to_string())?;
+            let mut want = Matrix::zeros(n, n);
+            Matrix::gemm_acc(&mut want, &a, &b);
+            println!(
+                "PJRT {}x{} GEMM on {}: {}",
+                n,
+                n,
+                rt.platform(),
+                if c.allclose(&want, 1e-9, 1e-9) { "matches native numerics" } else { "MISMATCH" }
+            );
+        }
+        Err(e) => println!("PJRT step skipped ({e}); run `make artifacts`"),
+    }
+
+    // 4. headline
+    println!("\n{}", report::render_headline());
+    Ok(())
+}

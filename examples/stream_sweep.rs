@@ -1,0 +1,53 @@
+//! STREAM scenario: full Fig-3 regeneration with a thread sweep on every
+//! node type and the oversubscription / pinning ablations the paper
+//! mentions in prose.
+//!
+//! ```bash
+//! cargo run --release --example stream_sweep
+//! ```
+
+use cimone::arch::presets;
+use cimone::mem::stream_model::predict_node_bandwidth;
+use cimone::stream::harness::{run_sweep, StreamConfig};
+use cimone::util::table::Table;
+
+fn main() {
+    // the figure itself
+    println!("{}", cimone::coordinator::report::render_fig3());
+
+    // thread sweep per node type (projection)
+    let mut t = Table::new(vec!["threads", "MCv1 GB/s", "MCv2 1S GB/s", "MCv2 2S GB/s"]);
+    for threads in [1usize, 2, 4, 8, 16, 32, 48, 64, 96, 128] {
+        t.row(vec![
+            threads.to_string(),
+            format!("{:.2}", predict_node_bandwidth(&presets::u740(), threads, true) / 1e9),
+            format!("{:.1}", predict_node_bandwidth(&presets::sg2042(), threads, true) / 1e9),
+            format!("{:.1}", predict_node_bandwidth(&presets::sg2042_dual(), threads, true) / 1e9),
+        ]);
+    }
+    println!("bandwidth vs threads (symmetric pinning):\n{}", t.render());
+
+    // the paper's two prose observations
+    let d = presets::sg2042_dual();
+    println!(
+        "pinning ablation @64 threads on the dual-socket node: symmetric {:.1} GB/s vs packed {:.1} GB/s",
+        predict_node_bandwidth(&d, 64, true) / 1e9,
+        predict_node_bandwidth(&d, 64, false) / 1e9,
+    );
+    let s1 = presets::sg2042();
+    println!(
+        "oversubscription on the single socket: 64 thr {:.1} GB/s -> 128 thr {:.1} GB/s",
+        predict_node_bandwidth(&s1, 64, true) / 1e9,
+        predict_node_bandwidth(&s1, 128, true) / 1e9,
+    );
+
+    // run the real kernels once (host) to validate the methodology
+    let rep = run_sweep(
+        &StreamConfig { n: 1 << 21, reps: 2, thread_counts: vec![64] },
+        &presets::sg2042(),
+    );
+    println!("\nSTREAM kernel validation: {}", if rep.validated { "ok" } else { "FAILED" });
+    for k in rep.results {
+        println!("  host {:<6} {:.2} GB/s", k.kernel, k.host_bytes_per_sec / 1e9);
+    }
+}

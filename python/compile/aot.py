@@ -1,0 +1,147 @@
+"""AOT export: lower every Layer-2 entry point to HLO *text* artifacts.
+
+HLO text — NOT ``lowered.compile()`` output or a serialized
+``HloModuleProto`` — is the interchange format: jax >= 0.5 emits protos
+with 64-bit instruction ids which the Rust side's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the HLO text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+
+Writes one ``<name>.hlo.txt`` per manifest entry plus ``manifest.json``
+describing shapes/dtypes, which rust/src/runtime/artifacts.rs consumes.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402  (after x64 flag)
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model  # noqa: E402
+from compile.kernels import microkernel as mk  # noqa: E402
+
+F64 = "f64"
+
+# Fixed export shapes. HPL's trailing update shrinks every iteration; the
+# Rust driver zero-pads to the next exported geometry (padding rows/cols of
+# A and B contribute exact zeros to C, so numerics are unaffected).
+NB = 32          # HPL block size used by the Rust driver
+N_GEMM = 256     # square GEMM artifact edge
+N_STREAM = 1 << 20  # STREAM vector length (8 MiB/operand, beats any LLC)
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+def manifest_entries():
+    """(name, fn, arg_specs) for every artifact."""
+    return [
+        ("gemm_256", model.gemm, [_spec(N_GEMM, N_GEMM), _spec(N_GEMM, N_GEMM)]),
+        # L2 perf ablation: the same contraction as one XLA dot (no Pallas
+        # grid) — quantifies what the interpret-mode lowering costs on CPU
+        # (EXPERIMENTS.md section Perf).
+        (
+            "gemm_xla_256",
+            lambda a, b: jnp.dot(a, b, preferred_element_type=jnp.float64),
+            [_spec(N_GEMM, N_GEMM), _spec(N_GEMM, N_GEMM)],
+        ),
+        ("gemm_lmul1_64", model.gemm_lmul1, [_spec(64, 64), _spec(64, 64)]),
+        (
+            "trailing_update_256",
+            model.trailing_update,
+            [_spec(N_GEMM, N_GEMM), _spec(N_GEMM, NB), _spec(NB, N_GEMM)],
+        ),
+        (
+            "panel_solve_32",
+            model.panel_solve,
+            [_spec(NB, NB), _spec(NB, N_GEMM)],
+        ),
+        (
+            "residual_256",
+            model.residual_inf,
+            [_spec(N_GEMM, N_GEMM), _spec(N_GEMM), _spec(N_GEMM)],
+        ),
+        ("stream_copy", model.stream_copy, [_spec(N_STREAM)]),
+        ("stream_scale", model.stream_scale, [_spec(N_STREAM)]),
+        ("stream_add", model.stream_add, [_spec(N_STREAM), _spec(N_STREAM)]),
+        ("stream_triad", model.stream_triad, [_spec(N_STREAM), _spec(N_STREAM)]),
+        (
+            "ukernel_lmul1",
+            mk.ukernel_lmul1,
+            [_spec(8, 64), _spec(64, 8), _spec(8, 8)],
+        ),
+        (
+            "ukernel_lmul4",
+            mk.ukernel_lmul4,
+            [_spec(8, 64), _spec(64, 8), _spec(8, 8)],
+        ),
+    ]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_one(name, fn, specs, out_dir):
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    out_specs = jax.eval_shape(fn, *specs)
+    if not isinstance(out_specs, (tuple, list)):
+        out_specs = (out_specs,)
+    return {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "inputs": [{"shape": list(s.shape), "dtype": F64} for s in specs],
+        "outputs": [{"shape": list(s.shape), "dtype": F64} for s in out_specs],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated subset of entry names"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    entries = []
+    for name, fn, specs in manifest_entries():
+        if only and name not in only:
+            continue
+        entries.append(export_one(name, fn, specs, args.out))
+        print(f"  lowered {name}: {entries[-1]['file']}")
+
+    manifest = {
+        "format": 1,
+        "dtype_note": "all artifacts are float64 (HPL is a DP benchmark)",
+        "nb": NB,
+        "n_gemm": N_GEMM,
+        "n_stream": N_STREAM,
+        "entries": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Layer-1 Pallas GEMM micro-kernels — the paper's Fig 2 schedules on TPU terms.
+
+The paper's contribution (Section 3.3.2) rewrites the BLIS RVV micro-kernel
+from per-vector-register rank-1 updates (Fig 2a, LMUL=1: four `vle64` +
+four `vfmacc.vf` per 8-element AB column) into register-grouped updates
+(Fig 2b, LMUL=4: one load + one `vfmacc.vf` per column).
+
+HARDWARE ADAPTATION (DESIGN.md section 2): on TPU the analogous resource is
+VMEM-resident tiles feeding the MXU, not 128-bit vector registers. We
+express the same two schedules as Pallas kernels:
+
+- ``ukernel_lmul1`` — the k-loop performs MR/2 *independent* 2-row FMA
+  updates per step, mirroring the four disjoint vector registers of
+  Fig 2a. Structurally more ops per k-step, identical math.
+- ``ukernel_lmul4`` — the k-loop performs ONE full-column rank-1 update
+  per step (a single fused multiply-accumulate over the whole MR-row
+  group), mirroring the LMUL=4 register group of Fig 2b.
+
+Both are lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); correctness is asserted against ``ref.ref_microkernel`` and
+the *structural* cost difference (ops per k-step, VMEM footprint) is what
+the Rust ISA-level model measures for real (rust/src/ukernel/).
+
+Blocking geometry: MR = NR = 8. Eight FP64 rows = 4 C920 vregs x 2 lanes —
+exactly the paper's "eight-element column of AB"; on the MXU side an 8x8
+FP64 tile is one systolic-array pass worth of work.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MR = 8  # micro-tile rows: 4 vector registers x 2 FP64 lanes (VLEN=128)
+NR = 8  # micro-tile cols
+LANES = 2  # FP64 lanes per 128-bit vector register
+VREGS_PER_COLUMN = MR // LANES  # 4: what LMUL=4 grouping collapses to 1
+
+
+def _lmul1_step(a_col, b_row, c):
+    """One Fig-2a k-step: MR/LANES independent 2-lane rank-1 updates.
+
+    Each slice ``a_col[2g:2g+2]`` models one 128-bit vector register; the
+    update of the matching C rows is an independent `vfmacc.vf`. jnp
+    concatenation keeps the register groups disjoint, as in the paper.
+    """
+    groups = []
+    for g in range(VREGS_PER_COLUMN):
+        seg = jax.lax.dynamic_slice_in_dim(a_col, g * LANES, LANES)  # one vreg
+        c_rows = jax.lax.dynamic_slice_in_dim(c, g * LANES, LANES)
+        groups.append(c_rows + seg[:, None] * b_row[None, :])
+    return jnp.concatenate(groups, axis=0)
+
+
+def _lmul4_step(a_col, b_row, c):
+    """One Fig-2b k-step: a single whole-column (LMUL=4 group) FMA."""
+    return c + a_col[:, None] * b_row[None, :]
+
+
+def _microkernel_body(step_fn, a_ref, b_ref, cin_ref, o_ref):
+    """Shared k-loop: KC rank-1 updates of the (MR, NR) accumulator."""
+    kc = a_ref.shape[1]
+
+    def body(k, c):
+        return step_fn(a_ref[:, k], b_ref[k, :], c)
+
+    o_ref[...] = jax.lax.fori_loop(0, kc, body, cin_ref[...])
+
+
+def _make_microkernel(step_fn):
+    def ukernel(a, b, c):
+        """C + A@B on an (MR,KC)x(KC,NR) micro-panel pair."""
+        mr, kc = a.shape
+        _, nr = b.shape
+        assert c.shape == (mr, nr), (a.shape, b.shape, c.shape)
+        return pl.pallas_call(
+            functools.partial(_microkernel_body, step_fn),
+            out_shape=jax.ShapeDtypeStruct((mr, nr), c.dtype),
+            interpret=True,
+        )(a, b, c)
+
+    return ukernel
+
+
+#: Fig 2a schedule — BLIS's shipped rv64iv micro-kernel structure.
+ukernel_lmul1 = _make_microkernel(_lmul1_step)
+
+#: Fig 2b schedule — the paper's optimized LMUL=4 register-grouped kernel.
+ukernel_lmul4 = _make_microkernel(_lmul4_step)
+
+
+def gemm_tiled(a, b, *, variant="lmul4", mr=MR, nr=NR):
+    """Blocked GEMM: grid of (M/mr, N/nr) micro-kernel invocations.
+
+    This is the macro-kernel wrapping of BLIS (Section 3.3 of the paper):
+    BlockSpec pulls an (mr, K) sliver of A and a (K, nr) sliver of B into
+    VMEM per grid point — the HBM<->VMEM schedule that BLIS expresses with
+    its packing buffers and the paper's CUDA-era analogues express with
+    threadblocks.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and m % mr == 0 and n % nr == 0, (a.shape, b.shape)
+    step_fn = _lmul4_step if variant == "lmul4" else _lmul1_step
+
+    def kernel(a_ref, b_ref, o_ref):
+        def body(kk, c):
+            return step_fn(a_ref[:, kk], b_ref[kk, :], c)
+
+        o_ref[...] = jax.lax.fori_loop(
+            0, k, body, jnp.zeros((mr, nr), a_ref.dtype)
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // mr, n // nr),
+        in_specs=[
+            pl.BlockSpec((mr, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, nr), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((mr, nr), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+def vmem_footprint_bytes(mr, nr, kc, itemsize=8):
+    """Estimated VMEM residency of one micro-kernel invocation.
+
+    A-sliver + B-sliver + C-tile; used by DESIGN.md section 6 and asserted
+    < 16 MiB by the test suite for every exported shape.
+    """
+    return (mr * kc + kc * nr + mr * nr) * itemsize

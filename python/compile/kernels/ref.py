@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: pytest asserts `allclose` between
+each Pallas kernel (interpret mode) and the corresponding function here,
+and the Rust side re-validates the AOT'd HLO against matrices generated
+with the same seeds.
+
+The micro-kernel semantics mirror the BLIS GEMM micro-kernel of the paper
+(Fig 2): an (MR x KC) panel of A times a (KC x NR) panel of B accumulated
+into an (MR x NR) tile of C via KC rank-1 updates.
+"""
+
+import jax.numpy as jnp
+
+# C920 geometry: VLEN = 128 bits = 2 FP64 lanes; the paper's micro-kernel
+# updates an 8-element column of AB, i.e. MR = 4 vregs x 2 lanes.
+MR = 8
+NR = 8
+
+
+def ref_microkernel(a, b, c):
+    """C_tile = c + a @ b for a:(MR,KC) b:(KC,NR) c:(MR,NR)."""
+    return c + jnp.dot(a, b, preferred_element_type=c.dtype)
+
+
+def ref_gemm(a, b):
+    """Plain full-precision GEMM oracle."""
+    return jnp.dot(a, b, preferred_element_type=a.dtype)
+
+
+def ref_trailing_update(c, a, b):
+    """HPL trailing-submatrix update: C <- C - A @ B (right-looking LU)."""
+    return c - jnp.dot(a, b, preferred_element_type=c.dtype)
+
+
+def ref_stream_copy(a):
+    return a
+
+
+def ref_stream_scale(a, scalar):
+    return scalar * a
+
+
+def ref_stream_add(a, b):
+    return a + b
+
+
+def ref_stream_triad(a, b, scalar):
+    return a + scalar * b
+
+
+def ref_residual_inf(a, x, b):
+    """HPL-style residual numerator: max_i |A x - b|_i."""
+    return jnp.max(jnp.abs(jnp.dot(a, x, preferred_element_type=a.dtype) - b))

@@ -1,0 +1,80 @@
+"""Layer-1 Pallas STREAM kernels (McCalpin's four: copy/scale/add/triad).
+
+STREAM is the paper's memory-bandwidth probe (Fig 3). The kernels are
+trivially bandwidth-bound; what matters for the TPU mapping is the
+HBM<->VMEM blocking, which BlockSpec expresses: each grid point streams a
+BLOCK-element chunk through VMEM exactly once (no reuse — STREAM by
+construction defeats caches).
+
+All four are exported AOT so the Rust coordinator runs the *same* kernels
+it times with the DDR model, and the numerics are asserted against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Elements per grid step. 4096 f64 = 32 KiB per operand — comfortably
+#: VMEM-resident with double-buffering headroom.
+BLOCK = 4096
+
+
+def _blocked_1d(kernel_fn, n_out_dtype, arrays, scalars=()):
+    n = arrays[0].shape[0]
+    assert n % BLOCK == 0, n
+    grid = (n // BLOCK,)
+    in_specs = [pl.BlockSpec((BLOCK,), lambda i: (i,)) for _ in arrays]
+    return pl.pallas_call(
+        kernel_fn,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), n_out_dtype),
+        interpret=True,
+    )(*arrays)
+
+
+def stream_copy(a):
+    """c[i] = a[i]"""
+
+    def kernel(a_ref, o_ref):
+        o_ref[...] = a_ref[...]
+
+    return _blocked_1d(kernel, a.dtype, (a,))
+
+
+def stream_scale(a, scalar):
+    """b[i] = q * a[i] — scalar is closed over (STREAM uses a constant q)."""
+
+    def kernel(a_ref, o_ref):
+        o_ref[...] = scalar * a_ref[...]
+
+    return _blocked_1d(kernel, a.dtype, (a,))
+
+
+def stream_add(a, b):
+    """c[i] = a[i] + b[i]"""
+
+    def kernel(a_ref, b_ref, o_ref):
+        o_ref[...] = a_ref[...] + b_ref[...]
+
+    return _blocked_1d(kernel, a.dtype, (a, b))
+
+
+def stream_triad(a, b, scalar):
+    """a[i] = b[i] + q * c[i] (canonical STREAM triad, renamed operands)."""
+
+    def kernel(a_ref, b_ref, o_ref):
+        o_ref[...] = a_ref[...] + scalar * b_ref[...]
+
+    return _blocked_1d(kernel, a.dtype, (a, b))
+
+
+#: Bytes moved per element for each kernel, used to convert kernel time to
+#: GB/s exactly as stream.c does (copy/scale: 16 B, add/triad: 24 B).
+BYTES_PER_ELEM = {
+    "copy": 16,
+    "scale": 16,
+    "add": 24,
+    "triad": 24,
+}

@@ -1,0 +1,93 @@
+"""Layer-2 JAX compute graphs — the HPL/STREAM numerical payloads.
+
+Everything here is pure JAX calling the Layer-1 Pallas kernels, so a
+single `jax.jit(...).lower()` produces one fused HLO module per entry
+point. `aot.py` exports each entry at the fixed shapes listed in its
+manifest; the Rust runtime (rust/src/runtime/) loads and executes them on
+the request path — Python never runs after `make artifacts`.
+
+Entry points:
+
+- ``gemm``            C = A @ B           (micro-kernel-tiled, Fig 2b schedule)
+- ``gemm_lmul1``      C = A @ B           (Fig 2a schedule — ablation twin)
+- ``trailing_update`` C <- C - A @ B      (the DGEMM inside each HPL iteration)
+- ``panel_solve``     U row-block solve   (unit-lower TRSM, HPL's DTRSM)
+- ``residual_inf``    max|Ax - b|         (HPL validation numerator)
+- ``stream_*``        the four STREAM kernels
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import microkernel as mk
+from compile.kernels import stream as sk
+
+
+def gemm(a, b):
+    """C = A @ B with the paper's optimized (LMUL=4 / Fig 2b) schedule."""
+    return mk.gemm_tiled(a, b, variant="lmul4")
+
+
+def gemm_lmul1(a, b):
+    """C = A @ B with the baseline (LMUL=1 / Fig 2a) schedule.
+
+    Numerically identical to :func:`gemm`; exists so both schedules are
+    exercised end-to-end through AOT and the Rust runtime (ablation twin).
+    """
+    return mk.gemm_tiled(a, b, variant="lmul1")
+
+
+def trailing_update(c, a, b):
+    """HPL right-looking trailing update: C <- C - A @ B.
+
+    A is the (rows x nb) panel column below the diagonal block, B the
+    (nb x cols) row slab right of it. This single call is >90% of HPL's
+    FLOPs, which is why the paper's whole Section 4 reduces to DGEMM
+    micro-kernel quality.
+    """
+    return c - mk.gemm_tiled(a, b, variant="lmul4")
+
+
+def panel_solve(l_block, u_rows):
+    """Solve L * X = U_rows for X where L is unit lower triangular (nb x nb).
+
+    This is HPL's DTRSM on the row slab right of the diagonal block.
+    Forward substitution expressed as a scan over rows so XLA emits one
+    compact loop instead of nb unrolled updates.
+    """
+    l_block = jnp.asarray(l_block)
+    u_rows = jnp.asarray(u_rows)
+    nb = l_block.shape[0]
+
+    def body(carry, i):
+        x = carry
+        # x[i, :] -= L[i, :i] @ x[:i, :]  (masked full-row form, scan-safe)
+        mask = (jnp.arange(nb) < i).astype(l_block.dtype)
+        contrib = (l_block[i, :] * mask) @ x
+        x = x.at[i, :].add(-contrib)
+        return x, ()
+
+    x, _ = jax.lax.scan(body, u_rows, jnp.arange(nb))
+    return x
+
+
+def residual_inf(a, x, b):
+    """HPL validation numerator max_i |A x - b|_i (scalar f64)."""
+    r = a @ x - b
+    return jnp.max(jnp.abs(r))
+
+
+def stream_copy(a):
+    return sk.stream_copy(a)
+
+
+def stream_scale(a):
+    return sk.stream_scale(a, 3.0)  # STREAM's constant q = 3.0
+
+
+def stream_add(a, b):
+    return sk.stream_add(a, b)
+
+
+def stream_triad(a, b):
+    return sk.stream_triad(a, b, 3.0)

@@ -1,0 +1,153 @@
+"""Layer-2 correctness: model graphs vs numpy, incl. the HPL building blocks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref, stream as sk
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+class TestGemm:
+    def test_gemm_256_matches_numpy(self):
+        r = rng(0)
+        a = r.standard_normal((64, 64))
+        b = r.standard_normal((64, 64))
+        np.testing.assert_allclose(model.gemm(a, b), a @ b, rtol=1e-11)
+
+    def test_gemm_variants_equal(self):
+        r = rng(1)
+        a = r.standard_normal((32, 32))
+        b = r.standard_normal((32, 32))
+        np.testing.assert_array_equal(
+            np.asarray(model.gemm(a, b)), np.asarray(model.gemm_lmul1(a, b))
+        )
+
+
+class TestGemmXlaParity:
+    def test_pallas_grid_equals_fused_dot(self):
+        """The L2 perf-ablation artifact (plain jnp.dot) must agree with
+        the Pallas-tiled gemm to fp64 precision — same contraction, two
+        lowerings (EXPERIMENTS.md section Perf quantifies their speed gap)."""
+        r = rng(77)
+        a = r.standard_normal((64, 64))
+        b = r.standard_normal((64, 64))
+        pallas = np.asarray(model.gemm(a, b))
+        fused = np.asarray(jnp.dot(jnp.asarray(a), jnp.asarray(b)))
+        np.testing.assert_allclose(pallas, fused, rtol=1e-12, atol=1e-12)
+
+
+class TestTrailingUpdate:
+    def test_matches_ref(self):
+        r = rng(2)
+        c = r.standard_normal((64, 64))
+        a = r.standard_normal((64, 32))
+        b = r.standard_normal((32, 64))
+        np.testing.assert_allclose(
+            model.trailing_update(c, a, b),
+            ref.ref_trailing_update(c, a, b),
+            rtol=1e-11,
+        )
+
+    def test_zero_padding_invariance(self):
+        """Zero-padded A/B rows+cols must not change the live region of C.
+
+        This is the property the Rust HPL driver relies on to reuse one
+        fixed-shape artifact for every (shrinking) trailing submatrix.
+        """
+        r = rng(3)
+        live = 40
+        c = r.standard_normal((64, 64))
+        a = np.zeros((64, 32))
+        b = np.zeros((32, 64))
+        a[:live, :] = r.standard_normal((live, 32))
+        b[:, :live] = r.standard_normal((32, live))
+        out = np.asarray(model.trailing_update(c, a, b))
+        expected_live = c[:live, :live] - a[:live] @ b[:, :live]
+        np.testing.assert_allclose(out[:live, :live], expected_live, rtol=1e-11)
+        # dead region: C untouched where A rows or B cols are zero
+        np.testing.assert_allclose(out[live:, :], c[live:, :], rtol=1e-12)
+        np.testing.assert_allclose(out[:, live:], c[:, live:], rtol=1e-12)
+
+
+class TestPanelSolve:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31))
+    def test_unit_lower_trsm(self, seed):
+        r = rng(seed)
+        nb, n = 16, 24
+        l = np.tril(r.standard_normal((nb, nb)), k=-1) + np.eye(nb)
+        u = r.standard_normal((nb, n))
+        x = np.asarray(model.panel_solve(l, u))
+        np.testing.assert_allclose(l @ x, u, rtol=1e-10, atol=1e-10)
+
+    def test_identity_l_is_noop(self):
+        u = rng(7).standard_normal((16, 8))
+        x = np.asarray(model.panel_solve(np.eye(16), u))
+        np.testing.assert_allclose(x, u, rtol=1e-12)
+
+
+class TestResidual:
+    def test_exact_solution_zero_residual(self):
+        r = rng(8)
+        a = r.standard_normal((32, 32)) + 32 * np.eye(32)
+        x = r.standard_normal(32)
+        b = a @ x
+        res = float(model.residual_inf(a, x, b))
+        assert res < 1e-9
+
+    def test_perturbed_solution_nonzero(self):
+        r = rng(9)
+        a = r.standard_normal((32, 32)) + 32 * np.eye(32)
+        x = r.standard_normal(32)
+        b = a @ x
+        res = float(model.residual_inf(a, x + 1e-3, b))
+        assert res > 1e-4
+
+
+class TestStream:
+    N = 8192
+
+    def arr(self, seed, n=None):
+        return rng(seed).standard_normal(n or self.N)
+
+    def test_copy(self):
+        a = self.arr(0)
+        np.testing.assert_array_equal(np.asarray(model.stream_copy(a)), a)
+
+    def test_scale(self):
+        a = self.arr(1)
+        np.testing.assert_allclose(model.stream_scale(a), 3.0 * a, rtol=1e-14)
+
+    def test_add(self):
+        a, b = self.arr(2), self.arr(3)
+        np.testing.assert_allclose(model.stream_add(a, b), a + b, rtol=1e-14)
+
+    def test_triad(self):
+        a, b = self.arr(4), self.arr(5)
+        np.testing.assert_allclose(
+            model.stream_triad(a, b), a + 3.0 * b, rtol=1e-14, atol=1e-14
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seed=st.integers(min_value=0, max_value=2**31),
+        scalar=st.floats(min_value=-8.0, max_value=8.0, allow_nan=False),
+    )
+    def test_triad_kernel_sweep(self, seed, scalar):
+        a, b = self.arr(seed), self.arr(seed + 1)
+        np.testing.assert_allclose(
+            sk.stream_triad(a, b, scalar),
+            ref.ref_stream_triad(a, b, scalar),
+            rtol=1e-13,
+            atol=1e-13,
+        )
+
+    def test_bytes_per_elem_table(self):
+        assert sk.BYTES_PER_ELEM == {"copy": 16, "scale": 16, "add": 24, "triad": 24}

@@ -1,0 +1,42 @@
+//! Bench: regenerate Fig 3 — STREAM bandwidth on MCv1 / MCv2 1S / MCv2 2S.
+//!
+//! Measures the real kernels on this host (timed with the in-house
+//! harness) and prints the projected RISC-V-target series next to the
+//! paper's numbers.
+
+use cimone::arch::presets;
+use cimone::coordinator::report;
+use cimone::stream::harness::{run_sweep, StreamConfig};
+use cimone::util::bench::Bench;
+use cimone::util::units::fmt_gbs;
+
+fn main() {
+    println!("=== Fig 3: STREAM benchmark ===\n");
+    println!("{}", report::render_fig3());
+
+    // host-side kernel measurement (methodology check: our kernels move
+    // the bytes STREAM says they move)
+    let cfg = StreamConfig { n: 1 << 22, reps: 3, thread_counts: vec![1, 4, 16, 32, 64, 128] };
+    let rep = run_sweep(&cfg, &presets::sg2042());
+    assert!(rep.validated, "STREAM validation failed");
+    println!("host kernel rates (this machine, single thread):");
+    for k in &rep.results {
+        println!("  {:<6} {}", k.kernel, fmt_gbs(k.host_bytes_per_sec));
+    }
+
+    println!("\nprojected MCv2 single-socket bandwidth vs threads (copy):");
+    for (t, bw) in &rep.results[0].projected {
+        println!("  {t:>4} threads: {}", fmt_gbs(*bw));
+    }
+
+    // timing of the projection itself (it sits on monitoring hot paths)
+    let b = Bench::default();
+    let m = b.run("predict_node_bandwidth(sg2042_dual, 64)", || {
+        std::hint::black_box(cimone::mem::stream_model::predict_node_bandwidth(
+            &presets::sg2042_dual(),
+            64,
+            true,
+        ));
+    });
+    println!("\n{}", m.report());
+}

@@ -1,0 +1,41 @@
+//! Bench: regenerate Fig 4 — HPL vs core count, OpenBLAS generic vs
+//! optimized, on the MCv2 single-socket node.
+//!
+//! Also times the full model pipeline (ISA cycle analysis -> node
+//! projection), since `cimone report-all` runs it interactively.
+
+use cimone::arch::presets;
+use cimone::blas::perf::PerfModel;
+use cimone::coordinator::report;
+use cimone::ukernel::{analysis, UkernelId};
+use cimone::util::bench::Bench;
+
+fn main() {
+    println!("=== Fig 4: HPL with OpenBLAS (generic vs optimized target) ===\n");
+    println!("{}", report::render_fig4());
+
+    // the kernel-model numbers underneath the figure
+    let core = presets::c920();
+    for id in [UkernelId::OpenblasGeneric, UkernelId::OpenblasC920] {
+        let p = analysis::analyze(id, &core);
+        println!(
+            "{:<28} {:>6.2} insts/k-step {:>7.2} cyc/k-step {:>6.2} raw GF/s {:>6.2} eff GF/s",
+            format!("{id:?}"),
+            p.insts_per_kstep,
+            p.cycles_per_kstep,
+            p.raw_gflops,
+            p.effective_gflops
+        );
+    }
+
+    let b = Bench::default();
+    let d = presets::sg2042();
+    let m1 = b.run("PerfModel::new (cycle analysis)", || {
+        std::hint::black_box(PerfModel::new(&d, UkernelId::OpenblasC920));
+    });
+    let pm = PerfModel::new(&d, UkernelId::OpenblasC920);
+    let m2 = b.run("node_gflops(64)", || {
+        std::hint::black_box(pm.node_gflops(64));
+    });
+    println!("\n{}\n{}", m1.report(), m2.report());
+}

@@ -1,0 +1,48 @@
+//! Bench: regenerate Fig 5 — HPL across node configurations (MCv1 full
+//! machine, MCv2 1S, 2x1S over 1 GbE, 1x2S), plus a REAL small HPL run
+//! end to end (native backend) to anchor the projection in executed
+//! numerics.
+
+use cimone::coordinator::report;
+use cimone::hpl::driver::{run, Backend, HplConfig};
+use cimone::hpl::model::{project, ClusterConfig};
+use cimone::net::Link;
+use cimone::util::bench::Bench;
+
+fn main() {
+    println!("=== Fig 5: HPL on different node configurations ===\n");
+    println!("{}", report::render_fig5());
+
+    // communication breakdown for the 2-node case (the paper's point)
+    let cfg = ClusterConfig::mcv2_default(cimone::arch::presets::sg2042(), 2, 64);
+    let p = project(&cfg);
+    println!(
+        "2-node breakdown: comp {:.0}s, comm {:.0}s ({:.0}% overhead) at N={}",
+        p.t_comp,
+        p.t_comm,
+        100.0 * p.t_comm / p.t_comp,
+        cfg.n
+    );
+    // ablation: the same cluster on 10 GbE
+    let mut ten = cfg.clone();
+    ten.link = Link::ten_gbe();
+    let p10 = project(&ten);
+    println!(
+        "ablation (10 GbE): {:.1} Gflop/s, efficiency {:.2} (1 GbE: {:.2})",
+        p10.gflops, p10.efficiency_vs_one_node, p.efficiency_vs_one_node
+    );
+
+    // real numerics anchor: factor + solve + validate, timed
+    let b = Bench::quick();
+    let m = b.run("real HPL N=256 native (factor+solve+validate)", || {
+        let r = run(&HplConfig { n: 256, nb: 32, seed: 1, backend: Backend::Native }).unwrap();
+        assert!(r.passed);
+        std::hint::black_box(r.host_gflops);
+    });
+    println!("\n{}", m.report());
+    let r = run(&HplConfig { n: 256, nb: 32, seed: 1, backend: Backend::Native }).unwrap();
+    println!(
+        "host HPL N=256: {:.2} Gflop/s, residual {:.3e} (threshold 16)",
+        r.host_gflops, r.residual
+    );
+}

@@ -1,0 +1,110 @@
+//! Perf-pass harness: times every hot path in the stack and prints a
+//! before/after-friendly report (EXPERIMENTS.md section Perf records the
+//! iteration log against these numbers).
+//!
+//! Hot paths:
+//!   L3-sim  : isa::exec dispatch loop (the functional vector machine)
+//!   L3-sim  : cache trace simulation (element-weighted line accesses)
+//!   L3-num  : blocked LU factorization (native trailing updates)
+//!   L3-pjrt : PJRT gemm_256 end-to-end latency (when artifacts exist)
+//!   L3-model: full report-all projection pipeline
+
+use cimone::arch::presets;
+use cimone::blas::blocking::Blocking;
+use cimone::cache::{simulate_gemm, GemmTraceConfig};
+use cimone::hpl::lu::{lu_blocked, native_update};
+use cimone::ukernel::{MicroKernel, UkernelId};
+use cimone::util::bench::Bench;
+use cimone::util::stats::hpl_flops;
+use cimone::util::Matrix;
+use std::time::Instant;
+
+fn main() {
+    let b = Bench::default();
+    println!("=== perf hot paths ===");
+
+    // --- ISA functional machine throughput ---
+    let k = UkernelId::BlisLmul4.build();
+    let a = Matrix::random_hpl(8, 256, 1);
+    let bm = Matrix::random_hpl(256, 4, 2);
+    let c = Matrix::random_hpl(8, 4, 3);
+    let m = b.run("isa exec: lmul4 ukernel kc=256", || {
+        std::hint::black_box(k.run(&a, &bm, &c, 128).unwrap());
+    });
+    // 256 k-steps x 12 insts + 9 fixed
+    let insts = 256.0 * 12.0 + 9.0;
+    println!("{}   ({:.1} M simulated insts/s)", m.report(), insts / m.secs_per_iter / 1e6);
+
+    // --- cache trace simulator throughput ---
+    let socket = presets::sg2042().sockets[0].clone();
+    let cfg = GemmTraceConfig {
+        m: 192,
+        n: 192,
+        k: 768,
+        blocking: Blocking::blis_for(&socket, 8, 4),
+        cores: 2,
+    };
+    let t = Instant::now();
+    let st = simulate_gemm(&cfg, &socket);
+    let secs = t.elapsed().as_secs_f64();
+    println!(
+        "cache sim: {:>10.1} M element-accesses/s ({} accesses, {:.3}s)",
+        st.l1_accesses as f64 / secs / 1e6,
+        st.l1_accesses,
+        secs
+    );
+
+    // --- native blocked LU (the real-numerics anchor) ---
+    let n = 384;
+    let a = Matrix::random_hpl(n, n, 7);
+    let m = b.run("lu_blocked n=384 nb=32 (native)", || {
+        std::hint::black_box(lu_blocked(&a, 32, &mut native_update).unwrap());
+    });
+    println!(
+        "{}   ({:.2} host Gflop/s)",
+        m.report(),
+        hpl_flops(n) / m.secs_per_iter / 1e9
+    );
+
+    // --- PJRT end-to-end latency (if artifacts are built) ---
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        use cimone::runtime::{entries, Runtime};
+        let mut rt = Runtime::with_dir("artifacts").expect("runtime");
+        let n = rt.manifest.n_gemm;
+        let ga = Matrix::random_hpl(n, n, 11);
+        let gb = Matrix::random_hpl(n, n, 12);
+        // warm the compile cache first
+        entries::gemm(&mut rt, &ga, &gb).unwrap();
+        let m = Bench::quick().run("PJRT gemm_256 end-to-end", || {
+            std::hint::black_box(entries::gemm(&mut rt, &ga, &gb).unwrap());
+        });
+        let flops = 2.0 * (n as f64).powi(3);
+        println!("{}   ({:.2} Gflop/s through PJRT)", m.report(), flops / m.secs_per_iter / 1e9);
+        // L2 ablation: same contraction as one fused XLA dot (no Pallas grid)
+        if rt.manifest.entry("gemm_xla_256").is_some() {
+            let ra = ga.to_row_major();
+            let rb = gb.to_row_major();
+            rt.call("gemm_xla_256", &[&ra, &rb]).unwrap();
+            let m = Bench::quick().run("PJRT gemm_xla_256 (fused dot)", || {
+                std::hint::black_box(rt.call("gemm_xla_256", &[&ra, &rb]).unwrap());
+            });
+            println!(
+                "{}   ({:.2} Gflop/s through PJRT)",
+                m.report(),
+                flops / m.secs_per_iter / 1e9
+            );
+        }
+    } else {
+        println!("PJRT gemm: skipped (artifacts not built)");
+    }
+
+    // --- whole projection pipeline ---
+    let m = b.run("report pipeline (figs 3/4/5/7 + headline)", || {
+        std::hint::black_box(cimone::coordinator::report::render_fig3());
+        std::hint::black_box(cimone::coordinator::report::render_fig4());
+        std::hint::black_box(cimone::coordinator::report::render_fig5());
+        std::hint::black_box(cimone::coordinator::report::render_fig7());
+        std::hint::black_box(cimone::coordinator::report::render_headline());
+    });
+    println!("{}", m.report());
+}

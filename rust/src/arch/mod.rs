@@ -1,0 +1,17 @@
+//! Hardware architecture descriptors for the Monte Cimone fleet.
+//!
+//! The paper's testbed spans two SoC generations:
+//! - MCv1: SiFive Freedom U740 (E4 RV007 blades) — no vector unit.
+//! - MCv2: Sophgo Sophon SG2042 (Milk-V Pioneer / SR1-2208A0) — 64 × T-Head
+//!   C920 cores with RVV 0.7.1.
+//!
+//! These descriptors parameterize every model downstream: the ISA timing
+//! model reads pipeline widths, the cache simulator reads the hierarchy
+//! geometry, the DDR model reads channel counts, and the HPL projection
+//! reads peak FLOP rates.
+
+pub mod presets;
+pub mod soc;
+
+pub use presets::{sg2042, sg2042_dual, u740};
+pub use soc::{CacheGeom, CoreModel, MemorySystem, NodeKind, Socket, SocDescriptor};

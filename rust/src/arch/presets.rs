@@ -1,0 +1,170 @@
+//! Concrete descriptors for the Monte Cimone fleet, from the paper and
+//! the SG2042 TRM (paper refs [9], [10]).
+
+use super::soc::{CacheGeom, CoreModel, MemorySystem, NodeKind, Socket, SocDescriptor};
+
+const GB: u64 = 1 << 30;
+
+/// T-Head C920 core as integrated in the SG2042.
+///
+/// - 2.0 GHz, dual-issue in-order front end.
+/// - RVV 0.7.1, VLEN = 128 (2 FP64 lanes), fused multiply-add.
+/// - `vinst_dispatch_cycles` = 2.0: calibrated so the BLIS LMUL=1 -> 4
+///   rewrite yields the paper's ~1.9x micro-kernel / +49% HPL gain
+///   (EXPERIMENTS.md section Fig7 shows the calibration fit).
+pub fn c920() -> CoreModel {
+    CoreModel {
+        freq_hz: 2.0e9,
+        issue_width: 2,
+        vlen_bits: 128,
+        vfma_lanes_per_cycle: 2,
+        vinst_dispatch_cycles: 2.0,
+        scalar_fma_per_cycle: 1.0,
+        lsu_per_cycle: 1.0,
+    }
+}
+
+/// SiFive U74 core (U740 SoC): no RVV, single FP pipe.
+///
+/// MCv1 peak is 4.0 GF/s/node over 4 application cores = 1.0 GF/s/core
+/// = 0.5 GHz-equivalent FMA issue at 1.0 GHz... in reality the U74 runs
+/// 1.2 GHz with one FMA every ~2.4 cycles; we encode the paper's peak
+/// directly: freq 1.0 GHz x 2 flops x 0.5 FMA/cycle = 1.0 GF/s.
+pub fn u74() -> CoreModel {
+    CoreModel {
+        freq_hz: 1.0e9,
+        issue_width: 2,
+        vlen_bits: 0,
+        vfma_lanes_per_cycle: 0,
+        vinst_dispatch_cycles: 0.0,
+        scalar_fma_per_cycle: 0.5,
+        lsu_per_cycle: 1.0,
+    }
+}
+
+fn sg2042_socket() -> Socket {
+    Socket {
+        cores: 64,
+        core: c920(),
+        // 64 KB L1D per core, 8-way, 64 B lines
+        l1d: CacheGeom { size_bytes: 64 * 1024, line_bytes: 64, ways: 8, shared_by: 1 },
+        // 1 MB L2 per 4-core cluster, 16-way
+        l2: CacheGeom { size_bytes: 1 << 20, line_bytes: 64, ways: 16, shared_by: 4 },
+        // 64 MB system L3, 16-way
+        l3: Some(CacheGeom { size_bytes: 64 << 20, line_bytes: 64, ways: 16, shared_by: 64 }),
+        mem: MemorySystem {
+            channels: 4,
+            channel_bw_bytes: 25.6e9, // DDR4-3200
+            // paper Fig 3: 41.9 GB/s attained of 102.4 GB/s theoretical
+            efficiency: 0.409,
+            // ramp slope: an in-order C920 keeps ~1.35 GB/s in flight, so a
+            // socket saturates near 32 threads — which is why the paper's
+            // dual-socket node hits 82.9 GB/s with only 64 threads pinned
+            // symmetrically (32 per socket)
+            per_core_bw_bytes: 1.35e9,
+            capacity_bytes: 128 * GB,
+        },
+    }
+}
+
+/// MCv2 Milk-V Pioneer Box: single SG2042, 128 GB DDR4.
+pub fn sg2042() -> SocDescriptor {
+    SocDescriptor {
+        name: "milkv-pioneer",
+        kind: NodeKind::Mcv2Pioneer,
+        sockets: vec![sg2042_socket()],
+        numa_penalty: 1.0,
+    }
+}
+
+/// MCv2 dual-socket Sophgo SR1-2208A0: 2x SG2042, 256 GB.
+///
+/// `numa_penalty` = 0.88 calibrated to the paper's 1.76x dual/single
+/// HPL ratio (2 x 0.88 = 1.76).
+pub fn sg2042_dual() -> SocDescriptor {
+    SocDescriptor {
+        name: "sophgo-sr1-2208a0",
+        kind: NodeKind::Mcv2DualSocket,
+        sockets: vec![sg2042_socket(), sg2042_socket()],
+        numa_penalty: 0.88,
+    }
+}
+
+/// MCv1 E4 RV007 blade: SiFive HiFive Unmatched (Freedom U740), 16 GB.
+pub fn u740() -> SocDescriptor {
+    SocDescriptor {
+        name: "e4-rv007-u740",
+        kind: NodeKind::Mcv1U740,
+        sockets: vec![Socket {
+            cores: 4,
+            core: u74(),
+            l1d: CacheGeom { size_bytes: 32 * 1024, line_bytes: 64, ways: 8, shared_by: 1 },
+            l2: CacheGeom { size_bytes: 2 << 20, line_bytes: 64, ways: 16, shared_by: 4 },
+            l3: None,
+            mem: MemorySystem {
+                channels: 1,
+                channel_bw_bytes: 8.5e9, // DDR4-2133 single channel (FU740)
+                // paper: 1.1 GB/s attained — the FU740 memory controller is
+                // notoriously inefficient
+                efficiency: 0.129,
+                per_core_bw_bytes: 0.32e9,
+                capacity_bytes: 16 * GB,
+            },
+        }],
+        numa_penalty: 1.0,
+    }
+}
+
+/// Look a preset up by name (config files / CLI).
+pub fn by_name(name: &str) -> Option<SocDescriptor> {
+    match name {
+        "u740" | "mcv1" => Some(u740()),
+        "sg2042" | "mcv2" | "pioneer" => Some(sg2042()),
+        "sg2042-dual" | "mcv2-dual" | "sr1-2208a0" => Some(sg2042_dual()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sg2042_memory_geometry_matches_trm() {
+        let s = sg2042();
+        let sk = &s.sockets[0];
+        assert_eq!(sk.l1d.size_bytes, 64 * 1024);
+        assert_eq!(sk.l2.size_bytes, 1 << 20);
+        assert_eq!(sk.l2.shared_by, 4);
+        assert_eq!(sk.l3.unwrap().size_bytes, 64 << 20);
+        assert!((sk.mem.peak_bw() - 102.4e9).abs() < 1e7);
+    }
+
+    #[test]
+    fn sg2042_attained_bw_matches_fig3() {
+        let s = sg2042();
+        let bw = s.sockets[0].mem.attainable_bw();
+        assert!((bw - 41.9e9).abs() < 0.2e9, "{bw}");
+    }
+
+    #[test]
+    fn u740_attained_bw_matches_fig3() {
+        let s = u740();
+        let bw = s.sockets[0].mem.attainable_bw();
+        assert!((bw - 1.1e9).abs() < 0.05e9, "{bw}");
+    }
+
+    #[test]
+    fn numa_penalty_yields_176x() {
+        let d = sg2042_dual();
+        assert!((2.0 * d.numa_penalty - 1.76).abs() < 1e-9);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(by_name("mcv1").unwrap().kind, NodeKind::Mcv1U740);
+        assert_eq!(by_name("sg2042").unwrap().kind, NodeKind::Mcv2Pioneer);
+        assert_eq!(by_name("mcv2-dual").unwrap().kind, NodeKind::Mcv2DualSocket);
+        assert!(by_name("epyc").is_none());
+    }
+}

@@ -1,0 +1,200 @@
+//! SoC / node descriptor types.
+
+/// Geometry of one cache level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheGeom {
+    pub size_bytes: usize,
+    pub line_bytes: usize,
+    pub ways: usize,
+    /// Cores sharing one instance of this cache (1 = private,
+    /// 4 = per-cluster like the SG2042 L2, usize::MAX = chip-wide).
+    pub shared_by: usize,
+}
+
+impl CacheGeom {
+    pub fn sets(&self) -> usize {
+        self.size_bytes / (self.line_bytes * self.ways)
+    }
+}
+
+/// Core microarchitecture parameters consumed by `isa::timing`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoreModel {
+    pub freq_hz: f64,
+    /// Scalar instructions issued per cycle (C920: dual-issue in-order).
+    pub issue_width: usize,
+    /// Vector register length in bits (0 = no vector unit).
+    pub vlen_bits: usize,
+    /// FP64 lanes the vector FMA datapath retires per cycle.
+    pub vfma_lanes_per_cycle: usize,
+    /// Fixed dispatch/sequencing overhead, in cycles, charged per vector
+    /// instruction regardless of LMUL. This models the C920's in-order
+    /// fetch/decode bottleneck — the quantity the paper's LMUL=4 rewrite
+    /// amortizes over 4x more work.
+    pub vinst_dispatch_cycles: f64,
+    /// Scalar FP64 FMA throughput (instructions/cycle).
+    pub scalar_fma_per_cycle: f64,
+    /// Scalar load/store units.
+    pub lsu_per_cycle: f64,
+}
+
+impl CoreModel {
+    /// FP64 lanes per vector register (VLEN / 64).
+    pub fn f64_lanes(&self) -> usize {
+        self.vlen_bits / 64
+    }
+
+    /// Peak FP64 FLOP/s of one core (vector FMA path if present).
+    pub fn peak_flops(&self) -> f64 {
+        if self.vlen_bits > 0 {
+            // FMA = 2 flops per lane per cycle
+            2.0 * self.vfma_lanes_per_cycle as f64 * self.freq_hz
+        } else {
+            2.0 * self.scalar_fma_per_cycle * self.freq_hz
+        }
+    }
+}
+
+/// Memory system of one socket.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemorySystem {
+    pub channels: usize,
+    /// Per-channel peak (e.g. DDR4-3200: 25.6 GB/s).
+    pub channel_bw_bytes: f64,
+    /// Fraction of theoretical bandwidth attainable by cores (controller
+    /// efficiency x coherence traffic); calibrated to the paper's STREAM.
+    pub efficiency: f64,
+    /// Single-core attainable load/store bandwidth (bytes/s) — the ramp
+    /// slope of the STREAM-vs-threads curve.
+    pub per_core_bw_bytes: f64,
+    pub capacity_bytes: u64,
+}
+
+impl MemorySystem {
+    pub fn peak_bw(&self) -> f64 {
+        self.channels as f64 * self.channel_bw_bytes
+    }
+    pub fn attainable_bw(&self) -> f64 {
+        self.peak_bw() * self.efficiency
+    }
+}
+
+/// One socket: cores + caches + memory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Socket {
+    pub cores: usize,
+    pub core: CoreModel,
+    pub l1d: CacheGeom,
+    pub l2: CacheGeom,
+    pub l3: Option<CacheGeom>,
+    pub mem: MemorySystem,
+}
+
+impl Socket {
+    pub fn peak_flops(&self) -> f64 {
+        self.cores as f64 * self.core.peak_flops()
+    }
+}
+
+/// What kind of node this is, for reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NodeKind {
+    /// MCv1 blade: SiFive HiFive Unmatched board (U740).
+    Mcv1U740,
+    /// MCv2 Milk-V Pioneer Box (1x SG2042, 128 GB).
+    Mcv2Pioneer,
+    /// MCv2 dual-socket SR1-2208A0 (2x SG2042, 256 GB).
+    Mcv2DualSocket,
+}
+
+impl NodeKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            NodeKind::Mcv1U740 => "MCv1 (U740)",
+            NodeKind::Mcv2Pioneer => "MCv2 1-socket (SG2042)",
+            NodeKind::Mcv2DualSocket => "MCv2 2-socket (SG2042x2)",
+        }
+    }
+}
+
+/// A full node descriptor (possibly multi-socket).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SocDescriptor {
+    pub name: &'static str,
+    pub kind: NodeKind,
+    pub sockets: Vec<Socket>,
+    /// Attained-bandwidth penalty when threads span sockets without
+    /// symmetric pinning (NUMA effect the paper observes on the
+    /// dual-socket node).
+    pub numa_penalty: f64,
+}
+
+impl SocDescriptor {
+    pub fn total_cores(&self) -> usize {
+        self.sockets.iter().map(|s| s.cores).sum()
+    }
+
+    pub fn peak_flops(&self) -> f64 {
+        self.sockets.iter().map(|s| s.peak_flops()).sum()
+    }
+
+    pub fn total_memory(&self) -> u64 {
+        self.sockets.iter().map(|s| s.mem.capacity_bytes).sum()
+    }
+
+    /// Largest HPL problem fitting in (fraction of) memory:
+    /// N = sqrt(frac * bytes / 8).
+    pub fn hpl_max_n(&self, mem_fraction: f64) -> usize {
+        let bytes = self.total_memory() as f64 * mem_fraction;
+        (bytes / 8.0).sqrt() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn cache_sets_geometry() {
+        let g = CacheGeom { size_bytes: 64 * 1024, line_bytes: 64, ways: 4, shared_by: 1 };
+        assert_eq!(g.sets(), 256);
+    }
+
+    #[test]
+    fn sg2042_peak_matches_paper_math() {
+        // 64 cores x 2 GHz x 2 lanes x 2 flops = 512 GF/s per socket
+        let s = presets::sg2042();
+        assert_eq!(s.total_cores(), 64);
+        assert!((s.peak_flops() - 512e9).abs() < 1e6, "{}", s.peak_flops());
+    }
+
+    #[test]
+    fn u740_peak_matches_mcv1_spec() {
+        // paper: 4.0 Gflop/s theoretical peak per MCv1 node
+        let s = presets::u740();
+        assert!((s.peak_flops() - 4.0e9).abs() < 1e6, "{}", s.peak_flops());
+    }
+
+    #[test]
+    fn dual_socket_doubles_resources() {
+        let one = presets::sg2042();
+        let two = presets::sg2042_dual();
+        assert_eq!(two.total_cores(), 2 * one.total_cores());
+        assert_eq!(two.total_memory(), 2 * one.total_memory());
+    }
+
+    #[test]
+    fn hpl_max_n_scales_with_memory() {
+        let one = presets::sg2042();
+        let n = one.hpl_max_n(0.8);
+        // 128 GB * 0.8 / 8 = 12.8e9 doubles -> N ~ 113k
+        assert!(n > 100_000 && n < 120_000, "{n}");
+    }
+
+    #[test]
+    fn vector_core_lanes() {
+        let s = presets::sg2042();
+        assert_eq!(s.sockets[0].core.f64_lanes(), 2);
+    }
+}

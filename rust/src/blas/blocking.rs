@@ -1,0 +1,145 @@
+//! BLIS-style cache blocking (MC/KC/NC/MR/NR) derived from cache geometry.
+//!
+//! BLIS's analytical model (Low et al., "Analytical Modeling Is Enough for
+//! High-Performance BLIS"): the micro-panel of B (KC x NR) lives in L1,
+//! the packed A block (MC x KC) in L2, the packed B panel (KC x NC) in L3.
+//! OpenBLAS uses fixed, x86-tuned parameters — the difference Fig 6
+//! measures as cache-miss-rate gaps.
+
+use crate::arch::soc::Socket;
+
+/// The five blocking parameters of a level-3 BLAS implementation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Blocking {
+    pub mr: usize,
+    pub nr: usize,
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
+}
+
+impl Blocking {
+    /// Derive BLIS-style blocking from a socket's cache geometry.
+    pub fn blis_for(socket: &Socket, mr: usize, nr: usize) -> Blocking {
+        let elem = 8; // f64
+        // KC: the B micro-panel (KC x NR) plus an A micro-panel (MR x KC)
+        // should fill ~half of L1D (leave room for C and streams).
+        let l1_budget = socket.l1d.size_bytes / 2;
+        let kc_raw = l1_budget / (elem * (mr + nr));
+        let kc = round_down_pow2ish(kc_raw.clamp(64, 512));
+        // MC: packed A block (MC x KC) fills ~half of the L2 share per core.
+        let l2_per_core = socket.l2.size_bytes / socket.l2.shared_by;
+        let mc_raw = (l2_per_core / 2) / (elem * kc);
+        let mc = (mc_raw / mr).max(1) * mr;
+        // NC: packed B panel (KC x NC) fills ~half of the per-core L3 share.
+        let nc = match socket.l3 {
+            Some(l3) => {
+                let l3_per_core = l3.size_bytes / l3.shared_by;
+                let nc_raw = (l3_per_core / 2) / (elem * kc);
+                (nc_raw / nr).max(1) * nr
+            }
+            None => 4096,
+        };
+        Blocking { mr, nr, mc, kc, nc }
+    }
+
+    /// OpenBLAS's fixed parameter set (x86-cache-ratio tuned; what its
+    /// `param.h` ships for generic 64-bit targets, sized for 512 KB+
+    /// private L2s and 32 MB LLCs). On the SG2042 this is doubly wrong:
+    /// the A micro-panel stream (MRxKC = 48 KB) plus the B micro-panel
+    /// (KCxNR = 24 KB) overflow the 64 KB L1D, evicting B between reuses,
+    /// and the packed A block (MCxKC = 4.7 MB) dwarfs the 256 KB
+    /// per-core L2 share — the locality gap Fig 6 measures.
+    pub fn openblas_fixed(mr: usize, nr: usize) -> Blocking {
+        Blocking { mr, nr, mc: 768, kc: 768, nc: 8192 }
+    }
+
+    /// Working-set bytes per cache level: (L1 set, L2 set, L3 set).
+    pub fn working_sets(&self) -> (usize, usize, usize) {
+        let e = 8;
+        (
+            self.kc * self.nr * e + self.mr * self.kc * e,
+            self.mc * self.kc * e,
+            self.kc * self.nc * e,
+        )
+    }
+
+    /// Effective DGEMM DRAM traffic in bytes per FLOP for this blocking —
+    /// the demand number the contention model feeds on. Classic result:
+    /// each element of A/B/C moves ~(1/NC + 1/MC + 2/KC) x 8 bytes per
+    /// 2 flops, plus packing traffic.
+    pub fn dram_bytes_per_flop(&self) -> f64 {
+        let e = 8.0;
+        let reuse = 1.0 / self.nc as f64 + 1.0 / self.mc as f64 + 2.0 / self.kc as f64;
+        // packing reads+writes A and B once per block pass
+        let packing = 2.0 / self.kc.min(self.nc) as f64;
+        // 1.5x: empirical scale from ideal-reuse traffic to attained traffic
+        // (TLB refills, write-allocate on C, prefetcher overshoot)
+        e * (reuse + packing) / 2.0 * 1.5
+    }
+}
+
+fn round_down_pow2ish(x: usize) -> usize {
+    // round down to a multiple of 32 (vector-friendly KC)
+    (x / 32).max(1) * 32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn blis_blocking_fits_sg2042_caches() {
+        let s = &presets::sg2042().sockets[0];
+        let b = Blocking::blis_for(s, 8, 4);
+        let (l1, l2, l3) = b.working_sets();
+        assert!(l1 <= s.l1d.size_bytes, "L1 set {l1}");
+        assert!(l2 <= s.l2.size_bytes / s.l2.shared_by, "L2 set {l2}");
+        assert!(l3 <= s.l3.unwrap().size_bytes / 64, "L3 set {l3}");
+        assert_eq!(b.mc % b.mr, 0);
+        assert_eq!(b.nc % b.nr, 0);
+    }
+
+    #[test]
+    fn openblas_fixed_overflows_sg2042_l2_share() {
+        // the premise of Fig 6: OpenBLAS's blocking doesn't fit the SG2042's
+        // small per-cluster L2, BLIS's derived blocking does
+        let s = &presets::sg2042().sockets[0];
+        let ob = Blocking::openblas_fixed(8, 4);
+        let (_, l2, _) = ob.working_sets();
+        assert!(l2 > s.l2.size_bytes / s.l2.shared_by);
+    }
+
+    #[test]
+    fn kc_in_sane_range() {
+        let s = &presets::sg2042().sockets[0];
+        let b = Blocking::blis_for(s, 8, 4);
+        assert!((64..=512).contains(&b.kc), "kc={}", b.kc);
+    }
+
+    #[test]
+    fn u740_gets_smaller_blocks() {
+        let v1 = &presets::u740().sockets[0];
+        let v2 = &presets::sg2042().sockets[0];
+        let b1 = Blocking::blis_for(v1, 4, 4);
+        let b2 = Blocking::blis_for(v2, 8, 4);
+        assert!(b1.kc <= b2.kc);
+    }
+
+    #[test]
+    fn traffic_decreases_with_bigger_blocks() {
+        let small = Blocking { mr: 8, nr: 4, mc: 64, kc: 64, nc: 512 };
+        let big = Blocking { mr: 8, nr: 4, mc: 256, kc: 256, nc: 4096 };
+        assert!(big.dram_bytes_per_flop() < small.dram_bytes_per_flop());
+    }
+
+    #[test]
+    fn sg2042_traffic_near_calibration() {
+        // EXPERIMENTS.md 'Calibration': ~0.25 B/flop effective DGEMM traffic
+        let s = &presets::sg2042().sockets[0];
+        let b = Blocking::blis_for(s, 8, 4);
+        let t = b.dram_bytes_per_flop();
+        assert!((0.1..0.5).contains(&t), "traffic {t}");
+    }
+}

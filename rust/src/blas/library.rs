@@ -1,0 +1,63 @@
+//! The four BLAS libraries of the paper's evaluation, as (micro-kernel,
+//! blocking) pairs with a uniform interface.
+
+use super::blocking::Blocking;
+use crate::arch::soc::Socket;
+use crate::ukernel::{MicroKernel, UkernelId};
+
+/// A BLAS library = micro-kernel + blocking policy + metadata.
+pub struct BlasLibrary {
+    pub id: UkernelId,
+    pub kernel: Box<dyn MicroKernel>,
+    pub blocking: Blocking,
+}
+
+impl BlasLibrary {
+    /// Instantiate a library for a given socket (blocking derives from the
+    /// cache geometry for BLIS, is fixed for OpenBLAS).
+    pub fn for_socket(id: UkernelId, socket: &Socket) -> BlasLibrary {
+        let kernel = id.build();
+        let (mr, nr) = kernel.tile();
+        let blocking = match id {
+            // BLIS derives blocking analytically from the cache hierarchy
+            UkernelId::BlisLmul1 | UkernelId::BlisLmul4 => Blocking::blis_for(socket, mr, nr),
+            // OpenBLAS ships fixed parameters tuned elsewhere
+            UkernelId::OpenblasGeneric | UkernelId::OpenblasC920 => {
+                Blocking::openblas_fixed(mr, nr)
+            }
+        };
+        BlasLibrary { id, kernel, blocking }
+    }
+
+    pub fn label(&self) -> &'static str {
+        self.id.label()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn blis_and_openblas_blockings_differ() {
+        let s = &presets::sg2042().sockets[0];
+        let blis = BlasLibrary::for_socket(UkernelId::BlisLmul4, s);
+        let ob = BlasLibrary::for_socket(UkernelId::OpenblasC920, s);
+        assert_ne!(blis.blocking, ob.blocking);
+        // the Fig-6 premise: BLIS's working set fits the per-cluster L2
+        let l2_share = s.l2.size_bytes / s.l2.shared_by;
+        assert!(blis.blocking.working_sets().1 <= l2_share);
+        assert!(ob.blocking.working_sets().1 > l2_share);
+    }
+
+    #[test]
+    fn tiles_match_kernels() {
+        let s = &presets::sg2042().sockets[0];
+        for id in UkernelId::all() {
+            let lib = BlasLibrary::for_socket(id, s);
+            let (mr, nr) = lib.kernel.tile();
+            assert_eq!((lib.blocking.mr, lib.blocking.nr), (mr, nr));
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! BLAS-library substrate: blocked GEMM over the micro-kernels, BLIS-style
+//! cache-blocking derivation, the calibrated machine-performance model,
+//! and the BLAS call-trace recorder the cache simulator consumes.
+
+pub mod blocking;
+pub mod gemm;
+pub mod library;
+pub mod perf;
+pub mod trace;
+
+pub use blocking::Blocking;
+pub use library::BlasLibrary;
+pub use perf::PerfModel;

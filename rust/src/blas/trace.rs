@@ -1,0 +1,107 @@
+//! BLAS call-trace recorder: captures the sequence of (level-3) BLAS calls
+//! an HPL factorization issues, so the cache simulator can replay the
+//! *actual* loop nests with the *actual* shapes.
+
+/// One recorded BLAS call.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BlasCall {
+    /// dgemm: C(m x n) -= A(m x k) * B(k x n)
+    Dgemm { m: usize, n: usize, k: usize },
+    /// dtrsm: solve L(nb x nb) X = B(nb x n)
+    Dtrsm { nb: usize, n: usize },
+    /// dger-ish panel rank-1 update inside the panel factorization
+    PanelUpdate { rows: usize, cols: usize },
+}
+
+impl BlasCall {
+    pub fn flops(&self) -> f64 {
+        match *self {
+            BlasCall::Dgemm { m, n, k } => 2.0 * m as f64 * n as f64 * k as f64,
+            BlasCall::Dtrsm { nb, n } => nb as f64 * nb as f64 * n as f64,
+            BlasCall::PanelUpdate { rows, cols } => 2.0 * rows as f64 * cols as f64,
+        }
+    }
+}
+
+/// Accumulates calls; exposes mix statistics.
+#[derive(Debug, Default, Clone)]
+pub struct CallTrace {
+    pub calls: Vec<BlasCall>,
+}
+
+impl CallTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, call: BlasCall) {
+        self.calls.push(call);
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.calls.iter().map(|c| c.flops()).sum()
+    }
+
+    /// Fraction of FLOPs spent in DGEMM — HPL is >90% DGEMM at sane block
+    /// sizes, the premise of the paper's whole methodology.
+    pub fn dgemm_fraction(&self) -> f64 {
+        let total = self.total_flops();
+        if total == 0.0 {
+            return 0.0;
+        }
+        let dgemm: f64 = self
+            .calls
+            .iter()
+            .filter(|c| matches!(c, BlasCall::Dgemm { .. }))
+            .map(|c| c.flops())
+            .sum();
+        dgemm / total
+    }
+
+    /// Largest DGEMM in the trace (the representative shape for cache sim).
+    pub fn largest_dgemm(&self) -> Option<BlasCall> {
+        self.calls
+            .iter()
+            .filter(|c| matches!(c, BlasCall::Dgemm { .. }))
+            .copied()
+            .max_by(|a, b| a.flops().partial_cmp(&b.flops()).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flop_formulas() {
+        assert_eq!(BlasCall::Dgemm { m: 10, n: 10, k: 10 }.flops(), 2000.0);
+        assert_eq!(BlasCall::Dtrsm { nb: 4, n: 10 }.flops(), 160.0);
+        assert_eq!(BlasCall::PanelUpdate { rows: 8, cols: 4 }.flops(), 64.0);
+    }
+
+    #[test]
+    fn dgemm_fraction_of_mixed_trace() {
+        let mut t = CallTrace::new();
+        t.record(BlasCall::Dgemm { m: 100, n: 100, k: 100 }); // 2e6
+        t.record(BlasCall::Dtrsm { nb: 10, n: 100 }); // 1e4
+        let f = t.dgemm_fraction();
+        assert!(f > 0.99, "{f}");
+    }
+
+    #[test]
+    fn empty_trace_fraction_zero() {
+        assert_eq!(CallTrace::new().dgemm_fraction(), 0.0);
+    }
+
+    #[test]
+    fn largest_dgemm_found() {
+        let mut t = CallTrace::new();
+        t.record(BlasCall::Dgemm { m: 10, n: 10, k: 10 });
+        t.record(BlasCall::Dgemm { m: 50, n: 50, k: 10 });
+        t.record(BlasCall::Dtrsm { nb: 99, n: 999 });
+        match t.largest_dgemm().unwrap() {
+            BlasCall::Dgemm { m: 50, .. } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+}

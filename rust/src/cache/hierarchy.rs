@@ -1,0 +1,194 @@
+//! Multi-core L1/L2/L3 composition matching the SG2042 topology:
+//! private L1D per core, L2 shared per 4-core cluster, chip-wide L3.
+
+use super::set_assoc::SetAssocCache;
+use super::stats::LevelStats;
+use crate::arch::soc::Socket;
+
+/// The cache hierarchy for `cores` active cores of one socket.
+pub struct MultiCoreHierarchy {
+    l1: Vec<SetAssocCache>,
+    l2: Vec<SetAssocCache>,
+    l3: Option<SetAssocCache>,
+    l2_shared_by: usize,
+}
+
+impl MultiCoreHierarchy {
+    pub fn new(socket: &Socket, cores: usize) -> Self {
+        assert!(cores >= 1 && cores <= socket.cores);
+        let n_l2 = cores.div_ceil(socket.l2.shared_by);
+        MultiCoreHierarchy {
+            l1: (0..cores).map(|_| SetAssocCache::new(socket.l1d)).collect(),
+            l2: (0..n_l2).map(|_| SetAssocCache::new(socket.l2)).collect(),
+            l3: socket.l3.map(SetAssocCache::new),
+            l2_shared_by: socket.l2.shared_by,
+        }
+    }
+
+    pub fn cores(&self) -> usize {
+        self.l1.len()
+    }
+
+    /// One memory access by `core` at byte address `addr`. Misses propagate
+    /// down the hierarchy.
+    pub fn access(&mut self, core: usize, addr: u64) {
+        self.access_block(core, addr, 1);
+    }
+
+    /// `elem_count` element accesses coalesced into the line at `addr`.
+    pub fn access_block(&mut self, core: usize, addr: u64, elem_count: u64) {
+        if self.l1[core].access_block(addr, elem_count) {
+            return;
+        }
+        let l2_idx = core / self.l2_shared_by;
+        if self.l2[l2_idx].access(addr) {
+            return;
+        }
+        if let Some(l3) = &mut self.l3 {
+            l3.access(addr);
+        }
+    }
+
+    /// A contiguous element range [lo, hi) in bytes: touch each line once
+    /// with the element count it covers.
+    pub fn access_range(&mut self, core: usize, lo: u64, hi: u64) {
+        const LINE: u64 = 64;
+        const ELEM: u64 = 8;
+        let mut a = lo & !(LINE - 1);
+        while a < hi {
+            let seg_lo = a.max(lo);
+            let seg_hi = (a + LINE).min(hi);
+            let elems = (seg_hi - seg_lo).div_ceil(ELEM).max(1);
+            self.access_block(core, a, elems);
+            a += LINE;
+        }
+    }
+
+    /// Aggregate stats per level.
+    pub fn stats(&self) -> LevelStats {
+        let sum = |cs: &[SetAssocCache]| {
+            let a: u64 = cs.iter().map(|c| c.accesses).sum();
+            let m: u64 = cs.iter().map(|c| c.misses).sum();
+            (a, m)
+        };
+        let (l1a, l1m) = sum(&self.l1);
+        let (l2a, l2m) = sum(&self.l2);
+        let (l3a, l3m) = self.l3.as_ref().map(|c| (c.accesses, c.misses)).unwrap_or((0, 0));
+        LevelStats { l1_accesses: l1a, l1_misses: l1m, l2_accesses: l2a, l2_misses: l2m, l3_accesses: l3a, l3_misses: l3m }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    #[test]
+    fn property_inclusion_counting_invariants() {
+        // for any access stream: L2 accesses == L1 misses, L3 accesses ==
+        // L2 misses, and per-level misses <= accesses
+        prop::check(
+            "hierarchy counting invariants",
+            0xCAFE,
+            30,
+            |rng: &mut Rng, size: usize| {
+                let n = 50 + size * 40;
+                let cores = 1 + rng.below(8) as usize;
+                let seed = rng.next_u64();
+                (n, cores, seed)
+            },
+            |&(n, cores, seed)| {
+                let s = &presets::sg2042().sockets[0];
+                let mut h = MultiCoreHierarchy::new(s, cores);
+                let mut rng = Rng::new(seed);
+                for _ in 0..n {
+                    let core = rng.below(cores as u64) as usize;
+                    // mixed working set: hot region + cold streaming
+                    let addr = if rng.below(2) == 0 {
+                        rng.below(4096) * 8
+                    } else {
+                        rng.below(1 << 24) * 8
+                    };
+                    h.access(core, addr);
+                }
+                let st = h.stats();
+                if st.l2_accesses != st.l1_misses {
+                    return Err(format!("L2 acc {} != L1 miss {}", st.l2_accesses, st.l1_misses));
+                }
+                if st.l3_accesses != st.l2_misses {
+                    return Err(format!("L3 acc {} != L2 miss {}", st.l3_accesses, st.l2_misses));
+                }
+                for (m, a) in [
+                    (st.l1_misses, st.l1_accesses),
+                    (st.l2_misses, st.l2_accesses),
+                    (st.l3_misses, st.l3_accesses),
+                ] {
+                    if m > a {
+                        return Err(format!("misses {m} > accesses {a}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_weighted_access_only_inflates_hits() {
+        // access_block(addr, k) must change accesses by k but misses by
+        // at most 1, for any k
+        let s = &presets::sg2042().sockets[0];
+        let mut h = MultiCoreHierarchy::new(s, 1);
+        h.access_block(0, 0, 8);
+        let st = h.stats();
+        assert_eq!(st.l1_accesses, 8);
+        assert_eq!(st.l1_misses, 1);
+        h.access_block(0, 0, 100);
+        let st = h.stats();
+        assert_eq!(st.l1_accesses, 108);
+        assert_eq!(st.l1_misses, 1);
+    }
+
+    #[test]
+    fn topology_matches_sg2042() {
+        let s = &presets::sg2042().sockets[0];
+        let h = MultiCoreHierarchy::new(s, 8);
+        assert_eq!(h.l1.len(), 8);
+        assert_eq!(h.l2.len(), 2); // 8 cores / 4 per cluster
+        assert!(h.l3.is_some());
+    }
+
+    #[test]
+    fn private_l1_isolated_between_cores() {
+        let s = &presets::sg2042().sockets[0];
+        let mut h = MultiCoreHierarchy::new(s, 2);
+        h.access(0, 0);
+        h.access(0, 0); // hit in core 0's L1
+        h.access(1, 0); // core 1 misses L1, hits L2 (same cluster)
+        let st = h.stats();
+        assert_eq!(st.l1_accesses, 3);
+        assert_eq!(st.l1_misses, 2);
+        assert_eq!(st.l2_accesses, 2);
+        assert_eq!(st.l2_misses, 1);
+    }
+
+    #[test]
+    fn cross_cluster_sharing_happens_in_l3() {
+        let s = &presets::sg2042().sockets[0];
+        let mut h = MultiCoreHierarchy::new(s, 8);
+        h.access(0, 4096); // cluster 0: L1 miss, L2 miss, L3 miss
+        h.access(7, 4096); // cluster 1: L1 miss, L2 miss, L3 HIT
+        let st = h.stats();
+        assert_eq!(st.l3_accesses, 2);
+        assert_eq!(st.l3_misses, 1);
+    }
+
+    #[test]
+    fn u740_has_no_l3() {
+        let s = &presets::u740().sockets[0];
+        let mut h = MultiCoreHierarchy::new(s, 4);
+        h.access(0, 0);
+        assert_eq!(h.stats().l3_accesses, 0);
+    }
+}

@@ -1,0 +1,292 @@
+//! GEMM loop-nest address-trace generation.
+//!
+//! Replays the exact memory-access pattern of a library's blocked DGEMM
+//! (packing loops + the five BLIS loops + micro-kernel streaming) through
+//! a [`MultiCoreHierarchy`], with element-weighted line accesses (miss
+//! rates are per retired load, the way `perf` counts them in Fig 6).
+//!
+//! Cores parallelize the jc (N-dimension) loop like threaded BLIS /
+//! OpenBLAS. Core interleaving happens at (pc, ic)-block granularity: each
+//! core replays one block of its share, round-robin — coarse enough to be
+//! cheap, fine enough that per-core packing buffers genuinely compete for
+//! the shared L3.
+//!
+//! Address map: A, B, C column-major back to back; per-core packing
+//! buffers (packed-A block, packed-B panel) above them.
+
+use super::hierarchy::MultiCoreHierarchy;
+use super::stats::LevelStats;
+use crate::arch::soc::Socket;
+use crate::blas::blocking::Blocking;
+
+const ELEM: u64 = 8;
+
+/// One simulated DGEMM: C(m x n) += A(m x k) B(k x n).
+#[derive(Debug, Clone, Copy)]
+pub struct GemmTraceConfig {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub blocking: Blocking,
+    pub cores: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct AddrMap {
+    a_base: u64,
+    b_base: u64,
+    c_base: u64,
+    pack_base: u64,
+    pack_stride: u64,
+    m: u64,
+    k: u64,
+    /// offset of packed B within a core's packing region (after packed A)
+    packed_b_off: u64,
+}
+
+impl AddrMap {
+    fn new(cfg: &GemmTraceConfig) -> AddrMap {
+        let (m, n, k) = (cfg.m as u64, cfg.n as u64, cfg.k as u64);
+        let bl = cfg.blocking;
+        let packed_a_bytes = (bl.mc * bl.kc) as u64 * ELEM;
+        let packed_b_bytes = (bl.kc * bl.nc) as u64 * ELEM;
+        AddrMap {
+            a_base: 0,
+            b_base: m * k * ELEM,
+            c_base: (m * k + k * n) * ELEM,
+            pack_base: (m * k + k * n + m * n) * ELEM,
+            pack_stride: packed_a_bytes + packed_b_bytes + 4096,
+            m,
+            k,
+            packed_b_off: packed_a_bytes + 2048,
+        }
+    }
+
+    fn a_col(&self, i: u64, j: u64) -> u64 {
+        self.a_base + (i + j * self.m) * ELEM
+    }
+
+    fn b_col(&self, i: u64, j: u64) -> u64 {
+        self.b_base + (i + j * self.k) * ELEM
+    }
+
+    fn c_col(&self, i: u64, j: u64) -> u64 {
+        self.c_base + (i + j * self.m) * ELEM
+    }
+
+    fn packed_a(&self, core: u64, elem_off: u64) -> u64 {
+        self.pack_base + core * self.pack_stride + elem_off * ELEM
+    }
+
+    fn packed_b(&self, core: u64, elem_off: u64) -> u64 {
+        self.pack_base + core * self.pack_stride + self.packed_b_off + elem_off * ELEM
+    }
+}
+
+/// One (jc, pc, ic) block of one core's work-list.
+#[derive(Debug, Clone, Copy)]
+struct BlockTask {
+    core: usize,
+    jc: usize,
+    ncb: usize,
+    pc: usize,
+    kcb: usize,
+    ic: usize,
+    mcb: usize,
+    /// pack B in this block? (only on the first ic of each (jc, pc))
+    pack_b: bool,
+}
+
+/// Replay one block's access stream into the hierarchy.
+fn replay_block(h: &mut MultiCoreHierarchy, map: &AddrMap, bl: &Blocking, t: &BlockTask) {
+    let core = t.core as u64;
+    let cid = t.core;
+    // --- pack B panel (kc x nc): read B columns, write packed ---
+    if t.pack_b {
+        for j in 0..t.ncb as u64 {
+            let col = map.b_col(t.pc as u64, t.jc as u64 + j);
+            h.access_range(cid, col, col + t.kcb as u64 * ELEM);
+        }
+        h.access_range(cid, map.packed_b(core, 0), map.packed_b(core, (t.kcb * t.ncb) as u64));
+    }
+    // --- pack A block (mc x kc): read A columns, write packed ---
+    for kk in 0..t.kcb as u64 {
+        let col = map.a_col(t.ic as u64, t.pc as u64 + kk);
+        h.access_range(cid, col, col + t.mcb as u64 * ELEM);
+    }
+    h.access_range(cid, map.packed_a(core, 0), map.packed_a(core, (t.mcb * t.kcb) as u64));
+    // --- macro-kernel: micro-tiles stream the packed panels ---
+    for jr in (0..t.ncb).step_by(bl.nr) {
+        let nrb = bl.nr.min(t.ncb - jr);
+        for ir in (0..t.mcb).step_by(bl.mr) {
+            let mrb = bl.mr.min(t.mcb - ir);
+            // C tile load + store
+            for j in 0..nrb as u64 {
+                let col = map.c_col((t.ic + ir) as u64, (t.jc + jr) as u64 + j);
+                h.access_range(cid, col, col + mrb as u64 * ELEM);
+                h.access_range(cid, col, col + mrb as u64 * ELEM);
+            }
+            // k-loop streams: packed A micro-panel (mr x kc), packed B
+            // micro-panel (kc x nr)
+            let a_off = (ir * t.kcb) as u64;
+            h.access_range(
+                cid,
+                map.packed_a(core, a_off),
+                map.packed_a(core, a_off + (mrb * t.kcb) as u64),
+            );
+            let b_off = (jr * t.kcb) as u64;
+            h.access_range(
+                cid,
+                map.packed_b(core, b_off),
+                map.packed_b(core, b_off + (t.kcb * nrb) as u64),
+            );
+        }
+    }
+}
+
+/// Run the trace through a hierarchy built for `socket`. Returns stats.
+pub fn simulate_gemm(cfg: &GemmTraceConfig, socket: &Socket) -> LevelStats {
+    assert!(cfg.cores >= 1);
+    let mut h = MultiCoreHierarchy::new(socket, cfg.cores);
+    let map = AddrMap::new(cfg);
+    let bl = cfg.blocking;
+
+    // build per-core block lists (jc loop split over cores)
+    let mut lists: Vec<Vec<BlockTask>> = vec![Vec::new(); cfg.cores];
+    for core in 0..cfg.cores {
+        let n0 = (core * cfg.n) / cfg.cores;
+        let n1 = ((core + 1) * cfg.n) / cfg.cores;
+        for jc in (n0..n1).step_by(bl.nc) {
+            let ncb = bl.nc.min(n1 - jc);
+            for pc in (0..cfg.k).step_by(bl.kc) {
+                let kcb = bl.kc.min(cfg.k - pc);
+                let mut first = true;
+                for ic in (0..cfg.m).step_by(bl.mc) {
+                    let mcb = bl.mc.min(cfg.m - ic);
+                    lists[core].push(BlockTask {
+                        core,
+                        jc,
+                        ncb,
+                        pc,
+                        kcb,
+                        ic,
+                        mcb,
+                        pack_b: first,
+                    });
+                    first = false;
+                }
+            }
+        }
+    }
+
+    // round-robin the block lists so cores advance together
+    let mut idx = vec![0usize; cfg.cores];
+    let mut live = true;
+    while live {
+        live = false;
+        for core in 0..cfg.cores {
+            if idx[core] < lists[core].len() {
+                replay_block(&mut h, &map, &bl, &lists[core][idx[core]]);
+                idx[core] += 1;
+                live = true;
+            }
+        }
+    }
+    h.stats()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    fn sg_socket() -> crate::arch::soc::Socket {
+        presets::sg2042().sockets[0].clone()
+    }
+
+    fn blis_cfg(n: usize, cores: usize) -> GemmTraceConfig {
+        let s = sg_socket();
+        GemmTraceConfig { m: n, n, k: n, blocking: Blocking::blis_for(&s, 8, 4), cores }
+    }
+
+    fn openblas_cfg(n: usize, cores: usize) -> GemmTraceConfig {
+        GemmTraceConfig { m: n, n, k: n, blocking: Blocking::openblas_fixed(8, 4), cores }
+    }
+
+    #[test]
+    fn produces_plausible_miss_rates() {
+        let st = simulate_gemm(&blis_cfg(256, 1), &sg_socket());
+        assert!(st.l1_accesses > 100_000);
+        // L1 miss rate for blocked DGEMM must be low single digits
+        let r = st.l1_miss_rate();
+        assert!(r > 0.0005 && r < 0.10, "L1 miss rate {r:.4}");
+    }
+
+    /// Deep-K config: KC only unfolds fully when k >= OpenBLAS's 768.
+    fn deep_cfg(blocking: Blocking, cores: usize) -> GemmTraceConfig {
+        GemmTraceConfig { m: 256, n: 256, k: 768, blocking, cores }
+    }
+
+    #[test]
+    fn blis_beats_openblas_on_l1_misses() {
+        // the Fig 6 premise: OpenBLAS's x86-sized KC makes the A stream +
+        // B micro-panel (48+24 KB) overflow the 64 KB L1D, so B re-reads
+        // miss; BLIS's derived KC keeps both resident
+        let s = sg_socket();
+        let blis = simulate_gemm(&deep_cfg(Blocking::blis_for(&s, 8, 4), 1), &s);
+        let ob = simulate_gemm(&deep_cfg(Blocking::openblas_fixed(8, 4), 1), &s);
+        assert!(
+            blis.l1_miss_rate() < 0.85 * ob.l1_miss_rate(),
+            "blis {:.4} vs openblas {:.4}",
+            blis.l1_miss_rate(),
+            ob.l1_miss_rate()
+        );
+    }
+
+    #[test]
+    fn blis_beats_openblas_on_l2_traffic() {
+        let s = sg_socket();
+        let blis = simulate_gemm(&deep_cfg(Blocking::blis_for(&s, 8, 4), 1), &s);
+        let ob = simulate_gemm(&deep_cfg(Blocking::openblas_fixed(8, 4), 1), &s);
+        // OpenBLAS's 4.7 MiB packed-A block cannot live in the 256 KiB L2
+        // share; BLIS's derived block can
+        assert!(
+            blis.l2_miss_rate() < ob.l2_miss_rate(),
+            "blis {:.4} vs openblas {:.4}",
+            blis.l2_miss_rate(),
+            ob.l2_miss_rate()
+        );
+    }
+
+    #[test]
+    fn blis_beats_openblas_on_l3_under_multicore_pressure() {
+        // L3 story (tested on a scaled-down L3 so the unit test stays
+        // fast; the bench regenerates it at full geometry): OpenBLAS's
+        // giant per-core packing regions thrash the shared L3, BLIS's
+        // NC-blocking keeps its panel L3-resident
+        let mut s = sg_socket();
+        s.l3 = Some(crate::arch::soc::CacheGeom {
+            size_bytes: 2 << 20,
+            line_bytes: 64,
+            ways: 16,
+            shared_by: 64,
+        });
+        let blis_bl = Blocking::blis_for(&s, 8, 4);
+        let blis = simulate_gemm(&deep_cfg(blis_bl, 4), &s);
+        let ob = simulate_gemm(&deep_cfg(Blocking::openblas_fixed(8, 4), 4), &s);
+        assert!(
+            blis.l3_misses_per_load() < ob.l3_misses_per_load(),
+            "blis {:.5} vs openblas {:.5}",
+            blis.l3_misses_per_load(),
+            ob.l3_misses_per_load()
+        );
+    }
+
+    #[test]
+    fn access_count_scales_with_problem_size() {
+        let s = sg_socket();
+        let small = simulate_gemm(&blis_cfg(64, 1), &s);
+        let big = simulate_gemm(&blis_cfg(256, 1), &s);
+        assert!(big.l1_accesses > 8 * small.l1_accesses);
+    }
+}

@@ -1,0 +1,92 @@
+//! The Monte Cimone v2 fleet, as Section 3.1 describes it:
+//! 8 MCv1 blades (4 E4 RV007 servers x 2 boards) + 3 Milk-V Pioneer boxes
+//! + 1 dual-socket Sophgo SR1-2208A0, on one 1 Gb/s network, exposed as
+//! two SLURM partitions.
+
+use super::node::Node;
+use crate::arch::presets;
+use crate::net::Link;
+use crate::sched::{Partition, Scheduler};
+
+/// The full machine: nodes + fabric.
+#[derive(Debug, Clone)]
+pub struct Inventory {
+    pub nodes: Vec<Node>,
+    pub fabric: Link,
+}
+
+impl Inventory {
+    pub fn node(&self, id: usize) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn ids_of_kind(&self, kind: crate::arch::soc::NodeKind) -> Vec<usize> {
+        self.nodes.iter().filter(|n| n.desc.kind == kind).map(|n| n.id).collect()
+    }
+
+    /// Build the SLURM-like scheduler with the paper's two partitions.
+    pub fn scheduler(&self) -> Scheduler {
+        use crate::arch::soc::NodeKind::*;
+        let mcv1 = self.ids_of_kind(Mcv1U740);
+        let mut mcv2 = self.ids_of_kind(Mcv2Pioneer);
+        mcv2.extend(self.ids_of_kind(Mcv2DualSocket));
+        Scheduler::new(vec![Partition::new("mcv1", mcv1), Partition::new("mcv2", mcv2)])
+    }
+
+    /// Total peak FP64 of the machine.
+    pub fn peak_gflops(&self) -> f64 {
+        self.nodes.iter().map(|n| n.peak_gflops()).sum()
+    }
+}
+
+/// The MCv2 machine of the paper.
+pub fn monte_cimone_v2() -> Inventory {
+    let mut nodes = Vec::new();
+    // 8 MCv1 U740 boards
+    for i in 0..8 {
+        nodes.push(Node::new(i, format!("mc-{:02}", i + 1), presets::u740()));
+    }
+    // 3 Milk-V Pioneer boxes
+    for i in 0..3 {
+        nodes.push(Node::new(8 + i, format!("mcv2-{:02}", i + 1), presets::sg2042()));
+    }
+    // 1 dual-socket SR1-2208A0
+    nodes.push(Node::new(11, "mcv2-04", presets::sg2042_dual()));
+    Inventory { nodes, fabric: Link::gbe() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::soc::NodeKind;
+
+    #[test]
+    fn fleet_matches_paper() {
+        let inv = monte_cimone_v2();
+        assert_eq!(inv.nodes.len(), 12);
+        assert_eq!(inv.ids_of_kind(NodeKind::Mcv1U740).len(), 8);
+        assert_eq!(inv.ids_of_kind(NodeKind::Mcv2Pioneer).len(), 3);
+        assert_eq!(inv.ids_of_kind(NodeKind::Mcv2DualSocket).len(), 1);
+    }
+
+    #[test]
+    fn partitions_cover_fleet() {
+        let inv = monte_cimone_v2();
+        let s = inv.scheduler();
+        assert_eq!(s.partitions["mcv1"].size(), 8);
+        assert_eq!(s.partitions["mcv2"].size(), 4);
+    }
+
+    #[test]
+    fn dual_socket_node_has_128_cores() {
+        let inv = monte_cimone_v2();
+        assert_eq!(inv.node(11).cores(), 128);
+    }
+
+    #[test]
+    fn machine_peak_dominated_by_mcv2() {
+        let inv = monte_cimone_v2();
+        // 8*4 + 3*512 + 1024 = 32 + 2560 = ~2592
+        assert!((inv.peak_gflops() - 2592.0).abs() < 5.0, "{}", inv.peak_gflops());
+    }
+}

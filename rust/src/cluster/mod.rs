@@ -1,0 +1,12 @@
+//! Cluster inventory, topology and monitoring — the Monte Cimone machine
+//! itself as a simulated object: node fleet (MCv1 blades + MCv2 Pioneers +
+//! the dual-socket SR1), the 1 GbE fabric, and an ExaMon-like metric sink.
+
+pub mod inventory;
+pub mod monitor;
+pub mod node;
+pub mod power;
+
+pub use inventory::{monte_cimone_v2, Inventory};
+pub use monitor::Monitor;
+pub use node::Node;

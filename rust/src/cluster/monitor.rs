@@ -1,0 +1,91 @@
+//! ExaMon-like monitoring sink: named time-series of metrics, queried by
+//! the coordinator's reports (the paper integrates MCv2 into ExaMon for
+//! exactly this role).
+
+use std::collections::BTreeMap;
+
+/// One sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    pub t: f64,
+    pub value: f64,
+}
+
+/// The metric store.
+#[derive(Debug, Default, Clone)]
+pub struct Monitor {
+    series: BTreeMap<String, Vec<Sample>>,
+}
+
+impl Monitor {
+    pub fn new() -> Monitor {
+        Monitor::default()
+    }
+
+    /// Record `metric` = `value` at time `t`. Metric names follow ExaMon's
+    /// dotted convention, e.g. `node08.hpl.gflops`.
+    pub fn record(&mut self, metric: &str, t: f64, value: f64) {
+        self.series.entry(metric.to_string()).or_default().push(Sample { t, value });
+    }
+
+    pub fn series(&self, metric: &str) -> Option<&[Sample]> {
+        self.series.get(metric).map(|v| v.as_slice())
+    }
+
+    pub fn latest(&self, metric: &str) -> Option<f64> {
+        self.series.get(metric).and_then(|v| v.last()).map(|s| s.value)
+    }
+
+    pub fn mean(&self, metric: &str) -> Option<f64> {
+        let s = self.series.get(metric)?;
+        if s.is_empty() {
+            return None;
+        }
+        Some(s.iter().map(|x| x.value).sum::<f64>() / s.len() as f64)
+    }
+
+    /// All metrics matching a prefix (dotted-hierarchy query).
+    pub fn query_prefix(&self, prefix: &str) -> Vec<(&str, f64)> {
+        self.series
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .filter_map(|(k, v)| v.last().map(|s| (k.as_str(), s.value)))
+            .collect()
+    }
+
+    pub fn metric_count(&self) -> usize {
+        self.series.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_query() {
+        let mut m = Monitor::new();
+        m.record("node08.hpl.gflops", 0.0, 100.0);
+        m.record("node08.hpl.gflops", 1.0, 139.4);
+        assert_eq!(m.latest("node08.hpl.gflops"), Some(139.4));
+        assert_eq!(m.mean("node08.hpl.gflops"), Some(119.7));
+        assert_eq!(m.series("node08.hpl.gflops").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn prefix_query() {
+        let mut m = Monitor::new();
+        m.record("node08.power.w", 0.0, 120.0);
+        m.record("node08.hpl.gflops", 0.0, 139.0);
+        m.record("node09.power.w", 0.0, 118.0);
+        let node8 = m.query_prefix("node08.");
+        assert_eq!(node8.len(), 2);
+    }
+
+    #[test]
+    fn missing_metric_is_none() {
+        let m = Monitor::new();
+        assert_eq!(m.latest("nope"), None);
+        assert_eq!(m.mean("nope"), None);
+    }
+}

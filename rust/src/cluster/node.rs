@@ -1,0 +1,53 @@
+//! One cluster node: hardware descriptor + identity + runtime state.
+
+use crate::arch::soc::{NodeKind, SocDescriptor};
+
+/// A named node in the fleet.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: usize,
+    pub hostname: String,
+    pub desc: SocDescriptor,
+    /// OS image, as the paper records it (Ubuntu 21.04 on MCv1, Fedora 38
+    /// on MCv2).
+    pub os: &'static str,
+    pub up: bool,
+}
+
+impl Node {
+    pub fn new(id: usize, hostname: impl Into<String>, desc: SocDescriptor) -> Node {
+        let os = match desc.kind {
+            NodeKind::Mcv1U740 => "Ubuntu 21.04",
+            NodeKind::Mcv2Pioneer | NodeKind::Mcv2DualSocket => "Fedora 38",
+        };
+        Node { id, hostname: hostname.into(), desc, os, up: true }
+    }
+
+    pub fn cores(&self) -> usize {
+        self.desc.total_cores()
+    }
+
+    pub fn peak_gflops(&self) -> f64 {
+        self.desc.peak_flops() / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn os_follows_generation() {
+        let v1 = Node::new(0, "mc-01", presets::u740());
+        let v2 = Node::new(8, "mcv2-01", presets::sg2042());
+        assert_eq!(v1.os, "Ubuntu 21.04");
+        assert_eq!(v2.os, "Fedora 38");
+    }
+
+    #[test]
+    fn peak_gflops_sane() {
+        let v2 = Node::new(0, "x", presets::sg2042());
+        assert!((v2.peak_gflops() - 512.0).abs() < 1.0);
+    }
+}

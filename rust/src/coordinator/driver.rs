@@ -1,0 +1,154 @@
+//! End-to-end cluster driver: the full system composed.
+//!
+//! Submits the paper's benchmark campaign to the SLURM-like scheduler
+//! over the simulated Monte Cimone fleet, runs the real-numerics HPL and
+//! STREAM kernels (through the PJRT artifacts when available, natively
+//! otherwise), records every metric into the ExaMon-like monitor, and
+//! returns a campaign report. This is what `examples/e2e_cluster.rs` and
+//! `cimone campaign` run.
+
+use crate::arch::soc::NodeKind;
+use crate::blas::perf::PerfModel;
+use crate::cluster::{monte_cimone_v2, Inventory, Monitor};
+use crate::hpl::driver::{run as hpl_run, Backend, HplConfig};
+use crate::hpl::model::{project, ClusterConfig};
+use crate::mem::stream_model::predict_node_bandwidth;
+use crate::stream::kernels::validate_kernels;
+use crate::ukernel::UkernelId;
+
+/// Campaign outcome.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    /// (job name, simulated seconds, metric value)
+    pub jobs: Vec<(String, f64, f64)>,
+    pub makespan_s: f64,
+    /// real-numerics validation outcomes
+    pub hpl_residual: f64,
+    pub hpl_passed: bool,
+    pub stream_validated: bool,
+    pub monitor: Monitor,
+}
+
+/// Run the full campaign on the standard fleet.
+pub fn run_campaign(validate_n: usize) -> Result<CampaignReport, String> {
+    let inv = monte_cimone_v2();
+    run_campaign_on(&inv, validate_n)
+}
+
+/// Run the campaign on a given inventory.
+pub fn run_campaign_on(inv: &Inventory, validate_n: usize) -> Result<CampaignReport, String> {
+    let mut sched = inv.scheduler();
+    let mut mon = Monitor::new();
+    let mut jobs = Vec::new();
+
+    // --- 1. real-numerics validation runs (host execution) ---
+    let hpl = hpl_run(&HplConfig {
+        n: validate_n,
+        nb: 32.min(validate_n),
+        seed: 42,
+        backend: Backend::Native,
+    })
+    .map_err(|e| format!("validation HPL: {e}"))?;
+    let stream_ok = validate_kernels(1 << 16).is_ok();
+    mon.record("frontend.hpl.residual", 0.0, hpl.residual);
+
+    // --- 2. the paper's campaign as SLURM jobs with modelled runtimes ---
+    // STREAM on each node kind
+    for (name, kind, part, nodes, threads) in [
+        ("stream-mcv1", NodeKind::Mcv1U740, "mcv1", 1usize, 4usize),
+        ("stream-mcv2-1s", NodeKind::Mcv2Pioneer, "mcv2", 1, 64),
+        ("stream-mcv2-2s", NodeKind::Mcv2DualSocket, "mcv2", 1, 64),
+    ] {
+        let node_id = inv.ids_of_kind(kind)[0];
+        let bw = predict_node_bandwidth(&inv.node(node_id).desc, threads, true);
+        // STREAM runtime: 10 iterations x 3 arrays x 8 MiB-ish / bw
+        let bytes = 10.0 * 3.0 * 128e6;
+        let runtime = (bytes / bw).max(1.0);
+        sched.submit(name, part, nodes, runtime)?;
+        mon.record(&format!("{name}.bandwidth", ), sched.now, bw);
+        jobs.push((name.to_string(), runtime, bw / 1e9));
+    }
+
+    // HPL node configurations (Fig 5)
+    let single = ClusterConfig::mcv2_default(
+        inv.node(inv.ids_of_kind(NodeKind::Mcv2Pioneer)[0]).desc.clone(),
+        1,
+        64,
+    );
+    let two_node = ClusterConfig { nodes: 2, ..single.clone() };
+    let dual = ClusterConfig::mcv2_default(
+        inv.node(inv.ids_of_kind(NodeKind::Mcv2DualSocket)[0]).desc.clone(),
+        1,
+        128,
+    );
+    let mut mcv1 = ClusterConfig::mcv2_default(
+        inv.node(inv.ids_of_kind(NodeKind::Mcv1U740)[0]).desc.clone(),
+        8,
+        4,
+    );
+    mcv1.lib = UkernelId::OpenblasGeneric;
+    for (name, part, nodes, cfg) in [
+        ("hpl-mcv1-full", "mcv1", 8usize, &mcv1),
+        ("hpl-mcv2-1s", "mcv2", 1, &single),
+        ("hpl-mcv2-2n", "mcv2", 2, &two_node),
+        ("hpl-mcv2-2s", "mcv2", 1, &dual),
+    ] {
+        let p = project(cfg);
+        let runtime = p.t_comp + p.t_comm;
+        sched.submit(name, part, nodes, runtime)?;
+        mon.record(&format!("{name}.gflops"), sched.now, p.gflops);
+        jobs.push((name.to_string(), runtime, p.gflops));
+    }
+
+    // BLIS comparison (Fig 7 @128)
+    let dual_desc = inv.node(11).desc.clone();
+    for (name, lib) in [
+        ("hpl-blis-vanilla", UkernelId::BlisLmul1),
+        ("hpl-blis-opt", UkernelId::BlisLmul4),
+    ] {
+        let gf = PerfModel::new(&dual_desc, lib).node_gflops(128);
+        sched.submit(name, "mcv2", 1, 3600.0)?;
+        mon.record(&format!("{name}.gflops"), sched.now, gf);
+        jobs.push((name.to_string(), 3600.0, gf));
+    }
+
+    let makespan = sched.drain();
+    Ok(CampaignReport {
+        jobs,
+        makespan_s: makespan,
+        hpl_residual: hpl.residual,
+        hpl_passed: hpl.passed,
+        stream_validated: stream_ok,
+        monitor: mon,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn campaign_runs_and_validates() {
+        let r = run_campaign(96).unwrap();
+        assert!(r.hpl_passed, "residual {}", r.hpl_residual);
+        assert!(r.stream_validated);
+        assert_eq!(r.jobs.len(), 9);
+        assert!(r.makespan_s > 0.0);
+    }
+
+    #[test]
+    fn campaign_metrics_recorded() {
+        let r = run_campaign(64).unwrap();
+        assert!(r.monitor.latest("hpl-mcv2-1s.gflops").unwrap() > 100.0);
+        assert!(r.monitor.metric_count() >= 9);
+    }
+
+    #[test]
+    fn campaign_fig5_ordering() {
+        let r = run_campaign(64).unwrap();
+        let get = |n: &str| r.monitor.latest(n).unwrap();
+        assert!(get("hpl-mcv1-full.gflops") < get("hpl-mcv2-1s.gflops"));
+        assert!(get("hpl-mcv2-2n.gflops") < get("hpl-mcv2-2s.gflops"));
+        assert!(get("hpl-blis-opt.gflops") > get("hpl-blis-vanilla.gflops"));
+    }
+}

@@ -1,0 +1,188 @@
+//! One function per paper figure, returning the same rows/series the
+//! paper plots. The bench targets (`rust/benches/fig*.rs`) and the CLI
+//! both call these.
+
+use crate::arch::presets;
+use crate::blas::blocking::Blocking;
+use crate::blas::perf::PerfModel;
+use crate::cache::{simulate_gemm, GemmTraceConfig};
+use crate::hpl::model::{cluster_hpl_gflops, ClusterConfig};
+use crate::mem::stream_model::predict_node_bandwidth;
+use crate::ukernel::UkernelId;
+
+/// Fig 3 — STREAM bandwidth: one row per node configuration.
+/// Returns (label, threads, GB/s).
+pub fn fig3() -> Vec<(String, usize, f64)> {
+    vec![
+        (
+            "MCv1 (U740), 4 threads".into(),
+            4,
+            predict_node_bandwidth(&presets::u740(), 4, true) / 1e9,
+        ),
+        (
+            "MCv2 1-socket, 64 threads".into(),
+            64,
+            predict_node_bandwidth(&presets::sg2042(), 64, true) / 1e9,
+        ),
+        (
+            "MCv2 2-socket, 64 threads (symmetric)".into(),
+            64,
+            predict_node_bandwidth(&presets::sg2042_dual(), 64, true) / 1e9,
+        ),
+        (
+            "MCv2 2-socket, 128 threads".into(),
+            128,
+            predict_node_bandwidth(&presets::sg2042_dual(), 128, true) / 1e9,
+        ),
+    ]
+}
+
+/// Fig 4 — HPL vs core count for generic/optimized OpenBLAS on one MCv2
+/// socket. Returns (cores, generic GF/s, optimized GF/s).
+pub fn fig4(core_counts: &[usize]) -> Vec<(usize, f64, f64)> {
+    let d = presets::sg2042();
+    let gen = PerfModel::new(&d, UkernelId::OpenblasGeneric);
+    let opt = PerfModel::new(&d, UkernelId::OpenblasC920);
+    core_counts
+        .iter()
+        .map(|&c| (c, gen.node_gflops(c), opt.node_gflops(c)))
+        .collect()
+}
+
+/// Default Fig 4 x-axis.
+pub const FIG4_CORES: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// Fig 5 — HPL across node configurations. Returns (label, GF/s).
+pub fn fig5() -> Vec<(String, f64)> {
+    let mut mcv1 = ClusterConfig::mcv2_default(presets::u740(), 8, 4);
+    mcv1.lib = UkernelId::OpenblasGeneric;
+    vec![
+        ("MCv1 32-cores (8 nodes, 1GbE)".into(), cluster_hpl_gflops(&mcv1)),
+        (
+            "MCv2 64-cores (1 socket)".into(),
+            cluster_hpl_gflops(&ClusterConfig::mcv2_default(presets::sg2042(), 1, 64)),
+        ),
+        (
+            "MCv2 128-cores (2 nodes, 1GbE)".into(),
+            cluster_hpl_gflops(&ClusterConfig::mcv2_default(presets::sg2042(), 2, 64)),
+        ),
+        (
+            "MCv2 128-cores (1 dual-socket node)".into(),
+            cluster_hpl_gflops(&ClusterConfig::mcv2_default(presets::sg2042_dual(), 1, 128)),
+        ),
+    ]
+}
+
+/// Fig 6 — L1/L3 miss rates, HPL's dominant DGEMM, OpenBLAS-opt vs
+/// BLIS-vanilla. Returns (cores, ob_l1, ob_l3, blis_l1, blis_l3) in %.
+///
+/// Geometry: m = n = 512*scale, k = 768 (deep enough that OpenBLAS's
+/// x86-sized KC=768 fully unfolds — the condition under which its
+/// micro-panels overflow the C920's L1D). `scale` shrinks m/n so tests
+/// can trade fidelity for time; the CLI/bench use 1.0.
+pub fn fig6(core_counts: &[usize], scale: f64) -> Vec<(usize, f64, f64, f64, f64)> {
+    let socket = presets::sg2042().sockets[0].clone();
+    let mn = ((512.0 * scale) as usize).max(192);
+    let k = 768;
+    let run = |blocking: Blocking, cores: usize| {
+        let st = simulate_gemm(
+            &GemmTraceConfig { m: mn, n: mn, k, blocking, cores },
+            &socket,
+        );
+        (st.l1_miss_rate() * 100.0, st.l3_misses_per_load() * 100.0)
+    };
+    core_counts
+        .iter()
+        .map(|&c| {
+            let cc = c.min(socket.cores);
+            let (ob1, ob3) = run(Blocking::openblas_fixed(8, 4), cc);
+            let (bl1, bl3) = run(Blocking::blis_for(&socket, 8, 4), cc);
+            (cc, ob1, ob3, bl1, bl3)
+        })
+        .collect()
+}
+
+/// Default Fig 6 x-axis.
+pub const FIG6_CORES: [usize; 4] = [1, 8, 16, 32];
+
+/// Fig 7 — HPL with OpenBLAS-opt / BLIS-vanilla / BLIS-opt across core
+/// counts on the MCv2 dual-socket node. Returns
+/// (cores, openblas, blis_vanilla, blis_opt).
+pub fn fig7(core_counts: &[usize]) -> Vec<(usize, f64, f64, f64)> {
+    let d = presets::sg2042_dual();
+    let ob = PerfModel::new(&d, UkernelId::OpenblasC920);
+    let bv = PerfModel::new(&d, UkernelId::BlisLmul1);
+    let bo = PerfModel::new(&d, UkernelId::BlisLmul4);
+    core_counts
+        .iter()
+        .map(|&c| (c, ob.node_gflops(c), bv.node_gflops(c), bo.node_gflops(c)))
+        .collect()
+}
+
+/// Default Fig 7 x-axis.
+pub const FIG7_CORES: [usize; 6] = [1, 8, 16, 32, 64, 128];
+
+/// The abstract's headline: node-level uplift MCv2 vs MCv1.
+/// Returns (hpl_uplift, stream_uplift).
+pub fn headline() -> (f64, f64) {
+    let hpl_old = PerfModel::new(&presets::u740(), UkernelId::OpenblasGeneric).node_gflops(4);
+    let hpl_new =
+        PerfModel::new(&presets::sg2042_dual(), UkernelId::OpenblasC920).node_gflops(128);
+    let st_old = predict_node_bandwidth(&presets::u740(), 4, true);
+    let st_new = predict_node_bandwidth(&presets::sg2042_dual(), 64, true);
+    (hpl_new / hpl_old, st_new / st_old)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_shape() {
+        let rows = fig3();
+        assert_eq!(rows.len(), 4);
+        assert!((rows[0].2 - 1.1).abs() < 0.1); // MCv1
+        assert!((rows[1].2 - 41.9).abs() < 1.0); // MCv2 1S
+        assert!((rows[2].2 - 82.9).abs() < 3.0); // MCv2 2S
+    }
+
+    #[test]
+    fn fig4_efficiency_rises() {
+        let rows = fig4(&FIG4_CORES);
+        let first = rows[0].1 / rows[0].2;
+        let last = rows.last().unwrap().1 / rows.last().unwrap().2;
+        assert!(last > first, "ratio must rise: {first:.3} -> {last:.3}");
+    }
+
+    #[test]
+    fn fig5_ordering_matches_paper() {
+        let rows = fig5();
+        // single-socket < 2-node < dual-socket, MCv1 smallest
+        assert!(rows[0].1 < rows[1].1);
+        assert!(rows[1].1 < rows[2].1);
+        assert!(rows[2].1 < rows[3].1);
+    }
+
+    #[test]
+    fn fig6_blis_wins_both_levels() {
+        for (c, ob1, ob3, bl1, bl3) in fig6(&[1, 4], 0.5) {
+            assert!(bl1 < ob1, "L1 at {c} cores: blis {bl1:.2}% vs ob {ob1:.2}%");
+            assert!(bl3 <= ob3 + 1.0, "L3 at {c} cores: blis {bl3:.2}% vs ob {ob3:.2}%");
+        }
+    }
+
+    #[test]
+    fn fig7_blis_opt_catches_openblas() {
+        let rows = fig7(&FIG7_CORES);
+        let (_, ob, bv, bo) = rows.last().unwrap();
+        assert!(bo > bv, "optimized must beat vanilla");
+        assert!((bo / ob - 1.0).abs() < 0.06, "parity: {bo:.1} vs {ob:.1}");
+    }
+
+    #[test]
+    fn headline_ratios() {
+        let (hpl, stream) = headline();
+        assert!((100.0..160.0).contains(&hpl), "{hpl:.0}");
+        assert!((60.0..85.0).contains(&stream), "{stream:.0}");
+    }
+}

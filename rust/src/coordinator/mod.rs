@@ -1,0 +1,10 @@
+//! The coordinator: experiment definitions for every paper figure, report
+//! rendering, and the end-to-end cluster driver (scheduler + monitor +
+//! PJRT-validated numerics).
+
+pub mod driver;
+pub mod experiments;
+pub mod report;
+pub mod sweeps;
+
+pub use experiments::{fig3, fig4, fig5, fig6, fig7, headline};

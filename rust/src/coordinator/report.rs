@@ -1,0 +1,142 @@
+//! Report rendering: every figure as an ASCII table + bar chart, in the
+//! paper's own units and row order.
+
+use super::experiments;
+use crate::util::table::{bar_chart, Table};
+
+pub fn render_fig3() -> String {
+    let rows = experiments::fig3();
+    let mut t = Table::new(vec!["configuration", "threads", "GB/s"]);
+    for (label, threads, gbs) in &rows {
+        t.row(vec![label.clone(), threads.to_string(), format!("{gbs:.1}")]);
+    }
+    let bars: Vec<(String, f64)> =
+        rows.iter().map(|(l, _, v)| (l.clone(), *v)).collect();
+    format!(
+        "Fig 3 — STREAM bandwidth (paper: MCv1 1.1, MCv2 1S 41.9, 2S 82.9 GB/s)\n{}\n{}",
+        t.render(),
+        bar_chart("STREAM triad-class bandwidth", &bars, "GB/s", 40)
+    )
+}
+
+pub fn render_fig4() -> String {
+    let rows = experiments::fig4(&experiments::FIG4_CORES);
+    let mut t = Table::new(vec!["cores", "OpenBLAS generic", "OpenBLAS optimized", "ratio"]);
+    for (c, g, o) in &rows {
+        t.row(vec![
+            c.to_string(),
+            format!("{g:.1}"),
+            format!("{o:.1}"),
+            format!("{:.0}%", 100.0 * g / o),
+        ]);
+    }
+    format!(
+        "Fig 4 — HPL vs cores, MCv2 socket (paper: ratio 68% @1 core -> 89%)\n{}",
+        t.render()
+    )
+}
+
+pub fn render_fig5() -> String {
+    let rows = experiments::fig5();
+    let mut t = Table::new(vec!["configuration", "Gflop/s"]);
+    for (label, gf) in &rows {
+        t.row(vec![label.clone(), format!("{gf:.1}")]);
+    }
+    let single = rows[1].1;
+    let extra = format!(
+        "2-node scaling: {:.2}x (paper 1.33x) | dual-socket: {:.2}x (paper 1.76x)\n",
+        rows[2].1 / single,
+        rows[3].1 / single
+    );
+    format!(
+        "Fig 5 — HPL across node configurations (paper: 13 / 139 / 185 / 245 Gflop/s)\n{}\n{extra}",
+        t.render()
+    )
+}
+
+pub fn render_fig6(scale: f64) -> String {
+    let rows = experiments::fig6(&experiments::FIG6_CORES, scale);
+    let mut t = Table::new(vec![
+        "cores",
+        "OpenBLAS L1 miss%",
+        "BLIS L1 miss%",
+        "OpenBLAS L3 miss%",
+        "BLIS L3 miss%",
+    ]);
+    for (c, ob1, ob3, bl1, bl3) in &rows {
+        t.row(vec![
+            c.to_string(),
+            format!("{ob1:.2}"),
+            format!("{bl1:.2}"),
+            format!("{ob3:.2}"),
+            format!("{bl3:.2}"),
+        ]);
+    }
+    format!(
+        "Fig 6 — cache miss rates, HPL DGEMM (paper: BLIS < OpenBLAS at L1 and L3)\n{}",
+        t.render()
+    )
+}
+
+pub fn render_fig7() -> String {
+    let rows = experiments::fig7(&experiments::FIG7_CORES);
+    let mut t =
+        Table::new(vec!["cores", "OpenBLAS opt", "BLIS vanilla", "BLIS optimized", "opt/vanilla"]);
+    for (c, ob, bv, bo) in &rows {
+        t.row(vec![
+            c.to_string(),
+            format!("{ob:.1}"),
+            format!("{bv:.1}"),
+            format!("{bo:.1}"),
+            format!("{:+.0}%", 100.0 * (bo / bv - 1.0)),
+        ]);
+    }
+    format!(
+        "Fig 7 — HPL by BLAS library (paper @128: 244.9 / 165.0 / 245.8, +49%)\n{}",
+        t.render()
+    )
+}
+
+pub fn render_headline() -> String {
+    let (hpl, stream) = experiments::headline();
+    format!(
+        "Headline (abstract): node uplift MCv2 vs MCv1\n  HPL DP FLOP/s : {hpl:.0}x (paper: 127x)\n  STREAM BW     : {stream:.0}x (paper: 69x)\n"
+    )
+}
+
+pub fn render_all(fig6_scale: f64) -> String {
+    [
+        render_fig3(),
+        render_fig4(),
+        render_fig5(),
+        render_fig6(fig6_scale),
+        render_fig7(),
+        render_headline(),
+    ]
+    .join("\n\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_reports_render_nonempty() {
+        for s in [render_fig3(), render_fig4(), render_fig5(), render_fig7(), render_headline()] {
+            assert!(s.len() > 100, "{s}");
+        }
+    }
+
+    #[test]
+    fn fig5_mentions_ratios() {
+        let s = render_fig5();
+        assert!(s.contains("paper 1.33x"));
+        assert!(s.contains("paper 1.76x"));
+    }
+
+    #[test]
+    fn fig6_small_scale_renders() {
+        let s = render_fig6(0.25);
+        assert!(s.contains("BLIS L1"));
+    }
+}

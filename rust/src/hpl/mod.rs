@@ -1,0 +1,20 @@
+//! HPL — High-Performance Linpack, the paper's FP64 benchmark.
+//!
+//! Two faces, like the real benchmark:
+//! - **numerics** ([`lu`], [`validate`]): a right-looking blocked LU with
+//!   partial pivoting whose trailing updates can run through any BLAS
+//!   library model or through the AOT'd PJRT artifacts, validated with
+//!   HPL's own residual criterion;
+//! - **performance** ([`model`]): GFLOP/s projection for node and cluster
+//!   configurations, combining the per-node machine model
+//!   ([`crate::blas::perf`]) with the interconnect cost model
+//!   ([`crate::net`]) — the generator behind Figs 4, 5 and 7.
+
+pub mod driver;
+pub mod lu;
+pub mod model;
+pub mod validate;
+
+pub use driver::{HplConfig, HplResult};
+pub use lu::{lu_blocked, lu_solve};
+pub use model::{cluster_hpl_gflops, ClusterConfig};

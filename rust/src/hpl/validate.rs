@@ -1,0 +1,76 @@
+//! HPL's correctness criterion.
+//!
+//! The benchmark accepts a run iff
+//! `||Ax-b||_inf / (eps * (||A||_inf * ||x||_inf + ||b||_inf) * N) < 16`.
+
+use crate::util::Matrix;
+
+/// Infinity norm of a vector.
+pub fn inf_norm(v: &[f64]) -> f64 {
+    v.iter().fold(0.0_f64, |m, x| m.max(x.abs()))
+}
+
+/// Infinity norm of a matrix (max row sum).
+pub fn mat_inf_norm(a: &Matrix) -> f64 {
+    let mut max = 0.0_f64;
+    for i in 0..a.rows() {
+        let mut s = 0.0;
+        for j in 0..a.cols() {
+            s += a[(i, j)].abs();
+        }
+        max = max.max(s);
+    }
+    max
+}
+
+/// HPL's scaled residual; a run "passes" when this is < 16.
+pub fn hpl_residual(a: &Matrix, x: &[f64], b: &[f64]) -> f64 {
+    let n = a.rows();
+    let ax = a.matvec(x);
+    let r: Vec<f64> = ax.iter().zip(b).map(|(y, bb)| y - bb).collect();
+    let eps = f64::EPSILON;
+    let denom = eps * (mat_inf_norm(a) * inf_norm(x) + inf_norm(b)) * n as f64;
+    if denom == 0.0 {
+        return f64::INFINITY;
+    }
+    inf_norm(&r) / denom
+}
+
+/// The acceptance threshold from the HPL source.
+pub const HPL_THRESHOLD: f64 = 16.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_solution_passes() {
+        let a = Matrix::random_dd(16, 1);
+        let x: Vec<f64> = (0..16).map(|i| (i as f64) * 0.25 - 2.0).collect();
+        let b = a.matvec(&x);
+        assert!(hpl_residual(&a, &x, &b) < HPL_THRESHOLD);
+    }
+
+    #[test]
+    fn corrupted_solution_fails() {
+        let a = Matrix::random_dd(16, 2);
+        let x: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        let b = a.matvec(&x);
+        let mut bad = x.clone();
+        bad[7] += 0.5;
+        assert!(hpl_residual(&a, &bad, &b) > HPL_THRESHOLD);
+    }
+
+    #[test]
+    fn norms_basic() {
+        assert_eq!(inf_norm(&[1.0, -3.0, 2.0]), 3.0);
+        let a = Matrix::from_rows(2, 2, &[1.0, -2.0, 0.5, 0.5]);
+        assert_eq!(mat_inf_norm(&a), 3.0);
+    }
+
+    #[test]
+    fn degenerate_zero_system_is_infinite() {
+        let a = Matrix::zeros(2, 2);
+        assert!(hpl_residual(&a, &[0.0, 0.0], &[0.0, 0.0]).is_infinite());
+    }
+}

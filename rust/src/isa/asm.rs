@@ -1,0 +1,122 @@
+//! Assembly text rendering for both dialects.
+//!
+//! The paper's Section 3.3.1 retrofit is a *textual* port: RVV 1.0 mnemonics
+//! (`vle64.v`, `vsetvli ... e64, m1, ta, ma`) become XuanTie theadvector
+//! ones (`th.vle.v`, `th.vsetvli ... e64, m1` — element width lives in
+//! vtype, no tail/mask flags, and GCC 14 requires the `th.` prefix to
+//! recognize them). Rendering both lets tests diff our translator's output
+//! against hand-written expectations.
+
+use super::inst::{Dialect, Inst, Program};
+use super::rvv::{Lmul, Sew};
+
+fn lmul_text(l: Lmul) -> &'static str {
+    match l {
+        Lmul::M1 => "m1",
+        Lmul::M2 => "m2",
+        Lmul::M4 => "m4",
+        Lmul::M8 => "m8",
+        Lmul::Fractional => "mf2",
+    }
+}
+
+fn sew_text(s: Sew) -> &'static str {
+    match s {
+        Sew::E32 => "e32",
+        Sew::E64 => "e64",
+    }
+}
+
+/// Render one instruction in the given dialect.
+pub fn render_inst(inst: &Inst, dialect: Dialect) -> String {
+    let pre = match dialect {
+        Dialect::Rvv10 => "",
+        Dialect::Thead071 => "th.",
+    };
+    match *inst {
+        Inst::Vsetvli { avl, vtype } => match dialect {
+            Dialect::Rvv10 => format!(
+                "vsetvli t0, {avl}, {}, {}, ta, ma",
+                sew_text(vtype.sew),
+                lmul_text(vtype.lmul)
+            ),
+            // 0.7.1: no tail/mask-agnostic flags
+            Dialect::Thead071 => format!(
+                "th.vsetvli t0, {avl}, {}, {}",
+                sew_text(vtype.sew),
+                lmul_text(vtype.lmul)
+            ),
+        },
+        Inst::Vle { sew, vd, addr } => match dialect {
+            // 1.0 encodes EEW in the mnemonic...
+            Dialect::Rvv10 => format!("vle{}.v v{vd}, {addr}(a0)", sew.bits()),
+            // ...0.7.1 takes it from vtype
+            Dialect::Thead071 => format!("th.vle.v v{vd}, {addr}(a0)"),
+        },
+        Inst::Vse { sew, vs, addr } => match dialect {
+            Dialect::Rvv10 => format!("vse{}.v v{vs}, {addr}(a0)", sew.bits()),
+            Dialect::Thead071 => format!("th.vse.v v{vs}, {addr}(a0)"),
+        },
+        Inst::VfmaccVf { vd, fs, vs2 } => format!("{pre}vfmacc.vf v{vd}, f{fs}, v{vs2}"),
+        Inst::VfmulVf { vd, fs, vs2 } => format!("{pre}vfmul.vf v{vd}, f{fs}, v{vs2}"),
+        Inst::VfmvVf { vd, fs } => format!("{pre}vfmv.v.f v{vd}, f{fs}"),
+        Inst::VfaddVv { vd, vs1, vs2 } => format!("{pre}vfadd.vv v{vd}, v{vs1}, v{vs2}"),
+        Inst::Fld { fd, addr } => format!("fld f{fd}, {addr}(a1)"),
+        Inst::Fsd { fs, addr } => format!("fsd f{fs}, {addr}(a1)"),
+        Inst::FmaddD { fd, fs1, fs2, fs3 } => {
+            format!("fmadd.d f{fd}, f{fs1}, f{fs2}, f{fs3}")
+        }
+        Inst::Addi => "addi a0, a0, 8".to_string(),
+        Inst::Bnez => "bnez t1, .loop".to_string(),
+    }
+}
+
+/// Render a whole program as assembly listing.
+pub fn render_program(prog: &Program) -> String {
+    prog.insts
+        .iter()
+        .map(|i| format!("    {}", render_inst(i, prog.dialect)))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::rvv::VType;
+
+    #[test]
+    fn vsetvli_dialect_difference() {
+        let i = Inst::Vsetvli { avl: 8, vtype: VType::new(Sew::E64, Lmul::M4) };
+        assert_eq!(render_inst(&i, Dialect::Rvv10), "vsetvli t0, 8, e64, m4, ta, ma");
+        assert_eq!(render_inst(&i, Dialect::Thead071), "th.vsetvli t0, 8, e64, m4");
+    }
+
+    #[test]
+    fn load_mnemonic_difference() {
+        let i = Inst::Vle { sew: Sew::E64, vd: 8, addr: 64 };
+        assert_eq!(render_inst(&i, Dialect::Rvv10), "vle64.v v8, 64(a0)");
+        assert_eq!(render_inst(&i, Dialect::Thead071), "th.vle.v v8, 64(a0)");
+    }
+
+    #[test]
+    fn th_prefix_on_arith() {
+        let i = Inst::VfmaccVf { vd: 0, fs: 1, vs2: 8 };
+        assert_eq!(render_inst(&i, Dialect::Rvv10), "vfmacc.vf v0, f1, v8");
+        assert_eq!(render_inst(&i, Dialect::Thead071), "th.vfmacc.vf v0, f1, v8");
+    }
+
+    #[test]
+    fn scalar_insts_unprefixed() {
+        let i = Inst::FmaddD { fd: 0, fs1: 1, fs2: 2, fs3: 0 };
+        assert_eq!(render_inst(&i, Dialect::Thead071), "fmadd.d f0, f1, f2, f0");
+    }
+
+    #[test]
+    fn listing_has_one_line_per_inst() {
+        let mut p = Program::new(Dialect::Thead071);
+        p.push(Inst::Addi);
+        p.push(Inst::Bnez);
+        assert_eq!(render_program(&p).lines().count(), 2);
+    }
+}

@@ -1,0 +1,315 @@
+//! Functional RVV machine: executes [`Program`]s on real f64 data.
+//!
+//! This is what makes the micro-kernel comparison *real* rather than a
+//! spreadsheet: the LMUL=1 and LMUL=4 kernels run on this machine and
+//! must produce bit-identical GEMM tiles (tested against the naive
+//! [`crate::util::Matrix`] oracle and, transitively, against the Pallas
+//! kernels through the shared seeds in the integration tests).
+
+use super::inst::{Inst, Program};
+use super::rvv::{vsetvl, Lmul, Sew, VType};
+
+/// Maximum lanes of one register *group* we ever need (LMUL=8 × 2 lanes).
+const MAX_GROUP_LANES: usize = 16;
+/// Physical lanes per architectural register at VLEN=128.
+const fn lanes_per_reg(vlen_bits: usize) -> usize {
+    vlen_bits / 64
+}
+
+/// The machine state.
+#[derive(Debug, Clone)]
+pub struct VecMachine {
+    pub vlen_bits: usize,
+    /// log2(lanes per register) — lanes are a power of two (2 or 4), so
+    /// group indexing uses shifts/masks instead of div/mod (hot path).
+    lane_shift: u32,
+    /// 32 architectural vector registers, each `vlen/64` f64 lanes.
+    v: [[f64; 8]; 32],
+    /// 32 scalar FP registers.
+    pub f: [f64; 32],
+    /// Flat f64 memory, element-addressed.
+    pub mem: Vec<f64>,
+    /// Current vl (elements) and vtype.
+    pub vl: usize,
+    pub vtype: VType,
+    /// Retired instruction count (for the paper's fetched-instruction metric).
+    pub retired: u64,
+    /// Retired FP64 FLOPs.
+    pub flops: u64,
+}
+
+impl VecMachine {
+    /// New machine with `mem_elems` f64 words of zeroed memory.
+    pub fn new(vlen_bits: usize, mem_elems: usize) -> Self {
+        assert!(vlen_bits == 128 || vlen_bits == 256, "unsupported VLEN");
+        assert!(lanes_per_reg(vlen_bits) <= 8);
+        VecMachine {
+            vlen_bits,
+            lane_shift: lanes_per_reg(vlen_bits).trailing_zeros(),
+            v: [[0.0; 8]; 32],
+            f: [0.0; 32],
+            mem: vec![0.0; mem_elems],
+            vl: 0,
+            vtype: VType::new(Sew::E64, Lmul::M1),
+            retired: 0,
+            flops: 0,
+        }
+    }
+
+    fn lanes(&self) -> usize {
+        lanes_per_reg(self.vlen_bits)
+    }
+
+    /// Read lane `i` of the *group* rooted at `vreg` (crosses register
+    /// boundaries under LMUL>1, as hardware does).
+    #[inline(always)]
+    fn group_get(&self, vreg: u8, i: usize) -> f64 {
+        let mask = (1usize << self.lane_shift) - 1;
+        self.v[vreg as usize + (i >> self.lane_shift)][i & mask]
+    }
+
+    #[inline(always)]
+    fn group_set(&mut self, vreg: u8, i: usize, val: f64) {
+        let mask = (1usize << self.lane_shift) - 1;
+        self.v[vreg as usize + (i >> self.lane_shift)][i & mask] = val;
+    }
+
+    /// Execute one instruction.
+    pub fn step(&mut self, inst: &Inst) -> Result<(), String> {
+        match *inst {
+            Inst::Vsetvli { avl, vtype } => {
+                if vtype.lmul.is_fractional() {
+                    return Err("fractional LMUL unsupported on this machine".into());
+                }
+                self.vtype = vtype;
+                self.vl = vsetvl(avl, vtype, self.vlen_bits);
+            }
+            Inst::Vle { sew, vd, addr } => {
+                self.check_sew(sew)?;
+                self.check_group(vd)?;
+                if addr + self.vl > self.mem.len() {
+                    return Err(format!("vle OOB at {}..{}", addr, addr + self.vl));
+                }
+                for i in 0..self.vl {
+                    let m = self.mem[addr + i];
+                    self.group_set(vd, i, m);
+                }
+            }
+            Inst::Vse { sew, vs, addr } => {
+                self.check_sew(sew)?;
+                self.check_group(vs)?;
+                if addr + self.vl > self.mem.len() {
+                    return Err(format!("vse OOB at {}..{}", addr, addr + self.vl));
+                }
+                for i in 0..self.vl {
+                    self.mem[addr + i] = self.group_get(vs, i);
+                }
+            }
+            Inst::VfmaccVf { vd, fs, vs2 } => {
+                self.check_group(vd)?;
+                self.check_group(vs2)?;
+                let s = self.f[fs as usize];
+                for i in 0..self.vl {
+                    let acc = self.group_get(vd, i) + s * self.group_get(vs2, i);
+                    self.group_set(vd, i, acc);
+                }
+                self.flops += 2 * self.vl as u64;
+            }
+            Inst::VfmulVf { vd, fs, vs2 } => {
+                self.check_group(vd)?;
+                self.check_group(vs2)?;
+                let s = self.f[fs as usize];
+                for i in 0..self.vl {
+                    self.group_set(vd, i, s * self.group_get(vs2, i));
+                }
+                self.flops += self.vl as u64;
+            }
+            Inst::VfmvVf { vd, fs } => {
+                self.check_group(vd)?;
+                let s = self.f[fs as usize];
+                for i in 0..self.vl {
+                    self.group_set(vd, i, s);
+                }
+            }
+            Inst::VfaddVv { vd, vs1, vs2 } => {
+                self.check_group(vd)?;
+                self.check_group(vs1)?;
+                self.check_group(vs2)?;
+                for i in 0..self.vl {
+                    let sum = self.group_get(vs1, i) + self.group_get(vs2, i);
+                    self.group_set(vd, i, sum);
+                }
+                self.flops += self.vl as u64;
+            }
+            Inst::Fld { fd, addr } => {
+                self.f[fd as usize] =
+                    *self.mem.get(addr).ok_or_else(|| format!("fld OOB at {addr}"))?;
+            }
+            Inst::Fsd { fs, addr } => {
+                let v = self.f[fs as usize];
+                *self.mem.get_mut(addr).ok_or_else(|| format!("fsd OOB at {addr}"))? = v;
+            }
+            Inst::FmaddD { fd, fs1, fs2, fs3 } => {
+                self.f[fd as usize] =
+                    self.f[fs1 as usize].mul_add(self.f[fs2 as usize], self.f[fs3 as usize]);
+                self.flops += 2;
+            }
+            Inst::Addi | Inst::Bnez => {}
+        }
+        self.retired += 1;
+        Ok(())
+    }
+
+    /// Run a whole program.
+    pub fn run(&mut self, prog: &Program) -> Result<(), String> {
+        prog.validate_register_groups(self.vlen_bits)?;
+        for inst in &prog.insts {
+            self.step(inst)?;
+        }
+        Ok(())
+    }
+
+    fn check_sew(&self, sew: Sew) -> Result<(), String> {
+        if sew != self.vtype.sew {
+            return Err(format!("SEW mismatch: inst {:?}, vtype {:?}", sew, self.vtype.sew));
+        }
+        Ok(())
+    }
+
+    fn check_group(&self, vreg: u8) -> Result<(), String> {
+        let need = self.vl.div_ceil(self.lanes().max(1)).max(1);
+        if vreg as usize + need > 32 {
+            return Err(format!("register group v{vreg} (+{need}) out of file"));
+        }
+        let _ = MAX_GROUP_LANES;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::inst::Dialect;
+
+    fn m128() -> VecMachine {
+        VecMachine::new(128, 256)
+    }
+
+    fn vt(lmul: Lmul) -> VType {
+        VType::new(Sew::E64, lmul)
+    }
+
+    #[test]
+    fn vle_vse_roundtrip_m1() {
+        let mut m = m128();
+        m.mem[0] = 1.5;
+        m.mem[1] = -2.5;
+        m.step(&Inst::Vsetvli { avl: 2, vtype: vt(Lmul::M1) }).unwrap();
+        m.step(&Inst::Vle { sew: Sew::E64, vd: 0, addr: 0 }).unwrap();
+        m.step(&Inst::Vse { sew: Sew::E64, vs: 0, addr: 10 }).unwrap();
+        assert_eq!(m.mem[10], 1.5);
+        assert_eq!(m.mem[11], -2.5);
+    }
+
+    #[test]
+    fn lmul4_load_spans_four_registers() {
+        let mut m = m128();
+        for i in 0..8 {
+            m.mem[i] = i as f64;
+        }
+        m.step(&Inst::Vsetvli { avl: 8, vtype: vt(Lmul::M4) }).unwrap();
+        assert_eq!(m.vl, 8);
+        m.step(&Inst::Vle { sew: Sew::E64, vd: 4, addr: 0 }).unwrap();
+        // lanes must land across v4..v7
+        assert_eq!(m.v[4][0], 0.0);
+        assert_eq!(m.v[4][1], 1.0);
+        assert_eq!(m.v[5][0], 2.0);
+        assert_eq!(m.v[7][1], 7.0);
+    }
+
+    #[test]
+    fn vfmacc_vf_computes_fma() {
+        let mut m = m128();
+        m.mem[0] = 2.0;
+        m.mem[1] = 3.0;
+        m.f[1] = 10.0;
+        m.step(&Inst::Vsetvli { avl: 2, vtype: vt(Lmul::M1) }).unwrap();
+        m.step(&Inst::Vle { sew: Sew::E64, vd: 8, addr: 0 }).unwrap();
+        // v0 starts zero: v0 += f1 * v8
+        m.step(&Inst::VfmaccVf { vd: 0, fs: 1, vs2: 8 }).unwrap();
+        m.step(&Inst::Vse { sew: Sew::E64, vs: 0, addr: 4 }).unwrap();
+        assert_eq!(m.mem[4], 20.0);
+        assert_eq!(m.mem[5], 30.0);
+        assert_eq!(m.flops, 4);
+    }
+
+    #[test]
+    fn vfmacc_lmul4_rank1_column() {
+        // the paper's Fig 2b: ONE vfmacc updates an 8-element column
+        let mut m = m128();
+        for i in 0..8 {
+            m.mem[i] = (i + 1) as f64; // column of A
+        }
+        m.f[0] = 2.0; // b scalar
+        m.step(&Inst::Vsetvli { avl: 8, vtype: vt(Lmul::M4) }).unwrap();
+        m.step(&Inst::Vle { sew: Sew::E64, vd: 8, addr: 0 }).unwrap();
+        m.step(&Inst::VfmaccVf { vd: 0, fs: 0, vs2: 8 }).unwrap();
+        m.step(&Inst::Vse { sew: Sew::E64, vs: 0, addr: 16 }).unwrap();
+        for i in 0..8 {
+            assert_eq!(m.mem[16 + i], 2.0 * (i + 1) as f64);
+        }
+        assert_eq!(m.flops, 16);
+    }
+
+    #[test]
+    fn scalar_fmadd_matches_mul_add() {
+        let mut m = m128();
+        m.f[1] = 3.0;
+        m.f[2] = 4.0;
+        m.f[3] = 0.5;
+        m.step(&Inst::FmaddD { fd: 0, fs1: 1, fs2: 2, fs3: 3 }).unwrap();
+        assert_eq!(m.f[0], 12.5);
+    }
+
+    #[test]
+    fn oob_load_is_error_not_panic() {
+        let mut m = VecMachine::new(128, 4);
+        m.step(&Inst::Vsetvli { avl: 2, vtype: vt(Lmul::M1) }).unwrap();
+        assert!(m.step(&Inst::Vle { sew: Sew::E64, vd: 0, addr: 3 }).is_err());
+        assert!(m.step(&Inst::Fld { fd: 0, addr: 99 }).is_err());
+    }
+
+    #[test]
+    fn sew_mismatch_detected() {
+        let mut m = m128();
+        m.step(&Inst::Vsetvli { avl: 2, vtype: vt(Lmul::M1) }).unwrap();
+        assert!(m.step(&Inst::Vle { sew: Sew::E32, vd: 0, addr: 0 }).is_err());
+    }
+
+    #[test]
+    fn program_run_validates_groups() {
+        let mut p = Program::new(Dialect::Rvv10);
+        p.push(Inst::Vsetvli { avl: 8, vtype: vt(Lmul::M4) });
+        p.push(Inst::Vle { sew: Sew::E64, vd: 3, addr: 0 }); // misaligned
+        assert!(m128().run(&p).is_err());
+    }
+
+    #[test]
+    fn retired_and_flops_counted() {
+        let mut m = m128();
+        let mut p = Program::new(Dialect::Rvv10);
+        p.push(Inst::Vsetvli { avl: 2, vtype: vt(Lmul::M1) });
+        p.push(Inst::VfmaccVf { vd: 0, fs: 0, vs2: 4 });
+        p.push(Inst::Addi);
+        m.run(&p).unwrap();
+        assert_eq!(m.retired, 3);
+        assert_eq!(m.flops, 4);
+    }
+
+    #[test]
+    fn fractional_lmul_rejected() {
+        let mut m = m128();
+        let bad = VType::new(Sew::E64, Lmul::Fractional);
+        assert!(m.step(&Inst::Vsetvli { avl: 2, vtype: bad }).is_err());
+    }
+}

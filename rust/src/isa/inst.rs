@@ -1,0 +1,219 @@
+//! Instruction IR for the GEMM micro-kernels.
+//!
+//! Deliberately small: exactly the instructions appearing in BLIS's RVV
+//! rank-1-update micro-kernel and OpenBLAS's C920 DGEMM kernel, plus the
+//! scalar bookkeeping (address bumps, loop branches) that contributes to
+//! the fetched-instruction count the paper optimizes.
+//!
+//! Addresses are *element indices* into the machine's flat f64 memory —
+//! the cycle model charges them like byte addresses and the functional
+//! executor indexes with them directly.
+
+use super::rvv::{Lmul, Sew, VType};
+
+/// Which assembly dialect a program is written in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dialect {
+    /// RVV 1.0 (`rv64iv` target) — what BLIS ships.
+    Rvv10,
+    /// RVV 0.7.1 / XuanTie `theadvector` (`th.` prefixed mnemonics) —
+    /// what the SG2042 executes.
+    Thead071,
+}
+
+/// One instruction. `v*` fields are vector register numbers (0..32),
+/// `f*` scalar FP registers, `x*` integer registers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Inst {
+    /// `vsetvli rd, avl, <vtype>` — set vl/vtype. avl is immediate here.
+    Vsetvli { avl: usize, vtype: VType },
+    /// Unit-stride vector load of the current register group at `vd`.
+    Vle { sew: Sew, vd: u8, addr: usize },
+    /// Unit-stride vector store.
+    Vse { sew: Sew, vs: u8, addr: usize },
+    /// `vfmacc.vf vd, fs, vs2` — vd[i] += f[fs] * vs2[i].
+    VfmaccVf { vd: u8, fs: u8, vs2: u8 },
+    /// `vfmul.vf vd, fs, vs2`.
+    VfmulVf { vd: u8, fs: u8, vs2: u8 },
+    /// Splat scalar into a vector group: `vfmv.v.f vd, fs`.
+    VfmvVf { vd: u8, fs: u8 },
+    /// Vector-vector add (used by stream kernels): vd = vs1 + vs2.
+    VfaddVv { vd: u8, vs1: u8, vs2: u8 },
+    /// Scalar FP64 load `fld fd, addr`.
+    Fld { fd: u8, addr: usize },
+    /// Scalar FP64 store `fsd fs, addr`.
+    Fsd { fs: u8, addr: usize },
+    /// Scalar fused multiply-add `fmadd.d fd, fs1, fs2, fs3`
+    /// (fd = fs1*fs2 + fs3) — the whole OpenBLAS generic kernel.
+    FmaddD { fd: u8, fs1: u8, fs2: u8, fs3: u8 },
+    /// Scalar address bump / loop counter op (functionally a no-op for
+    /// FP state; charged by the cycle model).
+    Addi,
+    /// Loop back-edge (functionally a no-op marker; charged as a branch).
+    Bnez,
+}
+
+impl Inst {
+    /// Is this a vector-unit instruction?
+    pub fn is_vector(&self) -> bool {
+        matches!(
+            self,
+            Inst::Vle { .. }
+                | Inst::Vse { .. }
+                | Inst::VfmaccVf { .. }
+                | Inst::VfmulVf { .. }
+                | Inst::VfmvVf { .. }
+                | Inst::VfaddVv { .. }
+        )
+    }
+
+    /// Does this instruction use the load/store unit?
+    pub fn is_mem(&self) -> bool {
+        matches!(self, Inst::Vle { .. } | Inst::Vse { .. } | Inst::Fld { .. } | Inst::Fsd { .. })
+    }
+
+    /// FP64 FLOPs retired (given current vl for vector ops).
+    pub fn flops(&self, vl: usize) -> usize {
+        match self {
+            Inst::VfmaccVf { .. } => 2 * vl,
+            Inst::VfmulVf { .. } => vl,
+            Inst::VfaddVv { .. } => vl,
+            Inst::FmaddD { .. } => 2,
+            _ => 0,
+        }
+    }
+}
+
+/// A straight-line instruction sequence tagged with its dialect.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Program {
+    pub dialect: Dialect,
+    pub insts: Vec<Inst>,
+}
+
+impl Program {
+    pub fn new(dialect: Dialect) -> Self {
+        Program { dialect, insts: Vec::new() }
+    }
+
+    pub fn push(&mut self, i: Inst) -> &mut Self {
+        self.insts.push(i);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.insts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.insts.is_empty()
+    }
+
+    /// Instruction-mix counts: (vector, scalar-mem, scalar-other).
+    pub fn mix(&self) -> (usize, usize, usize) {
+        let mut v = 0;
+        let mut m = 0;
+        let mut s = 0;
+        for i in &self.insts {
+            if i.is_vector() {
+                v += 1;
+            } else if i.is_mem() {
+                m += 1;
+            } else {
+                s += 1;
+            }
+        }
+        (v, m, s)
+    }
+
+    /// Largest register-group alignment used; LMUL=4 ops must address
+    /// v0/v4/v8/... — validated here (a real RVV constraint that bites
+    /// when retrofitting kernels).
+    pub fn validate_register_groups(&self, vlen_bits: usize) -> Result<(), String> {
+        let mut vtype = VType::new(Sew::E64, Lmul::M1);
+        for (idx, inst) in self.insts.iter().enumerate() {
+            match inst {
+                Inst::Vsetvli { vtype: vt, .. } => vtype = *vt,
+                Inst::Vle { vd, .. } | Inst::Vse { vs: vd, .. } => {
+                    let m = vtype.lmul.multiplier();
+                    if *vd as usize % m != 0 {
+                        return Err(format!(
+                            "inst {idx}: v{vd} not aligned to LMUL={m} group"
+                        ));
+                    }
+                    if *vd as usize + m > 32 {
+                        return Err(format!("inst {idx}: group v{vd}..v{} overflows", vd + m as u8));
+                    }
+                }
+                Inst::VfmaccVf { vd, vs2, .. }
+                | Inst::VfmulVf { vd, vs2, .. }
+                | Inst::VfaddVv { vd, vs1: _, vs2 } => {
+                    let m = vtype.lmul.multiplier();
+                    for r in [*vd, *vs2] {
+                        if r as usize % m != 0 {
+                            return Err(format!("inst {idx}: v{r} not aligned to LMUL={m}"));
+                        }
+                    }
+                }
+                Inst::VfmvVf { vd, .. } => {
+                    let m = vtype.lmul.multiplier();
+                    if *vd as usize % m != 0 {
+                        return Err(format!("inst {idx}: v{vd} not aligned to LMUL={m}"));
+                    }
+                }
+                _ => {}
+            }
+            let _ = vlen_bits;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vt(lmul: Lmul) -> VType {
+        VType::new(Sew::E64, lmul)
+    }
+
+    #[test]
+    fn mix_counts() {
+        let mut p = Program::new(Dialect::Rvv10);
+        p.push(Inst::Vsetvli { avl: 2, vtype: vt(Lmul::M1) });
+        p.push(Inst::Vle { sew: Sew::E64, vd: 0, addr: 0 });
+        p.push(Inst::Fld { fd: 0, addr: 10 });
+        p.push(Inst::VfmaccVf { vd: 4, fs: 0, vs2: 0 });
+        p.push(Inst::Addi);
+        let (v, m, s) = p.mix();
+        assert_eq!((v, m, s), (2, 1, 2)); // vsetvli counts as scalar-other
+    }
+
+    #[test]
+    fn flops_per_inst() {
+        assert_eq!(Inst::VfmaccVf { vd: 0, fs: 0, vs2: 4 }.flops(8), 16);
+        assert_eq!(Inst::FmaddD { fd: 0, fs1: 1, fs2: 2, fs3: 0 }.flops(8), 2);
+        assert_eq!(Inst::Vle { sew: Sew::E64, vd: 0, addr: 0 }.flops(8), 0);
+    }
+
+    #[test]
+    fn group_alignment_enforced() {
+        let mut p = Program::new(Dialect::Rvv10);
+        p.push(Inst::Vsetvli { avl: 8, vtype: vt(Lmul::M4) });
+        p.push(Inst::Vle { sew: Sew::E64, vd: 2, addr: 0 }); // v2 not /4
+        assert!(p.validate_register_groups(128).is_err());
+
+        let mut ok = Program::new(Dialect::Rvv10);
+        ok.push(Inst::Vsetvli { avl: 8, vtype: vt(Lmul::M4) });
+        ok.push(Inst::Vle { sew: Sew::E64, vd: 4, addr: 0 });
+        assert!(ok.validate_register_groups(128).is_ok());
+    }
+
+    #[test]
+    fn group_overflow_detected() {
+        let mut p = Program::new(Dialect::Rvv10);
+        p.push(Inst::Vsetvli { avl: 16, vtype: vt(Lmul::M8) });
+        p.push(Inst::Vle { sew: Sew::E64, vd: 28, addr: 0 }); // v28..v36 overflows... wait 28%8!=0
+        assert!(p.validate_register_groups(128).is_err());
+    }
+}

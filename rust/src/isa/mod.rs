@@ -1,0 +1,32 @@
+//! RISC-V Vector (RVV) instruction-set substrate.
+//!
+//! The paper's software contribution lives at the ISA level: BLIS ships
+//! micro-kernels written for RVV 1.0 (`rv64iv`), the SG2042's C920 cores
+//! only speak RVV 0.7.1 (`theadvector` in GCC 14 terms), and the authors
+//! (a) retrofit the kernels 1.0 -> 0.7.1 (Section 3.3.1) and (b) rewrite the
+//! schedule from per-register rank-1 updates to LMUL=4 register groups
+//! (Section 3.3.2).
+//!
+//! This module implements that substrate for real:
+//! - [`rvv`] — vtype/SEW/LMUL semantics and `vsetvl` behaviour.
+//! - [`inst`] — a small instruction IR covering the GEMM micro-kernels.
+//! - [`asm`] — assembly text rendering in *both* dialects (RVV 1.0 and
+//!   XuanTie/theadvector 0.7.1 with the `th.` prefix).
+//! - [`translate`] — the verified 1.0 -> 0.7.1 retrofit pass.
+//! - [`exec`] — a functional vector machine executing the IR on real f64
+//!   data (numerics tested against [`crate::util::Matrix`] GEMM).
+//! - [`timing`] — the per-instruction cycle model that reproduces the
+//!   fetched-instruction bottleneck the paper optimizes.
+
+pub mod asm;
+pub mod exec;
+pub mod inst;
+pub mod parse;
+pub mod rvv;
+pub mod timing;
+pub mod translate;
+
+pub use exec::VecMachine;
+pub use inst::{Dialect, Inst, Program};
+pub use rvv::{Lmul, Sew, VType};
+pub use timing::{CycleModel, TimingBreakdown};

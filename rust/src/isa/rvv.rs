@@ -1,0 +1,109 @@
+//! RVV configuration state: SEW, LMUL, vtype and `vsetvl` semantics.
+//!
+//! Only the features the GEMM micro-kernels use are modelled; notably
+//! RVV 0.7.1 has **no fractional LMUL** and no tail/mask agnosticism
+//! flags — exactly the differences `translate` must police.
+
+/// Selected element width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Sew {
+    E32,
+    E64,
+}
+
+impl Sew {
+    pub fn bits(&self) -> usize {
+        match self {
+            Sew::E32 => 32,
+            Sew::E64 => 64,
+        }
+    }
+}
+
+/// Register-group multiplier. RVV 1.0 additionally defines fractional
+/// LMUL (mf2/mf4/mf8) which 0.7.1 lacks; we model the integer ones plus a
+/// marker for fractional so the translator can reject it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lmul {
+    M1,
+    M2,
+    M4,
+    M8,
+    /// Fractional LMUL (RVV 1.0 only) — carried so translation fails loudly.
+    Fractional,
+}
+
+impl Lmul {
+    pub fn multiplier(&self) -> usize {
+        match self {
+            Lmul::M1 => 1,
+            Lmul::M2 => 2,
+            Lmul::M4 => 4,
+            Lmul::M8 => 8,
+            Lmul::Fractional => panic!("fractional LMUL has no integer multiplier"),
+        }
+    }
+
+    pub fn is_fractional(&self) -> bool {
+        matches!(self, Lmul::Fractional)
+    }
+}
+
+/// The dynamic vector configuration set by `vsetvli`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VType {
+    pub sew: Sew,
+    pub lmul: Lmul,
+    /// Tail-agnostic flag — RVV 1.0 syntax only (`ta`); 0.7.1 has no
+    /// notion of it (tail-undisturbed always).
+    pub tail_agnostic: bool,
+    pub mask_agnostic: bool,
+}
+
+impl VType {
+    pub fn new(sew: Sew, lmul: Lmul) -> Self {
+        VType { sew, lmul, tail_agnostic: false, mask_agnostic: false }
+    }
+
+    /// Elements per register group for a given VLEN.
+    pub fn vlmax(&self, vlen_bits: usize) -> usize {
+        vlen_bits / self.sew.bits() * self.lmul.multiplier()
+    }
+}
+
+/// `vsetvl` result: vl = min(avl, VLMAX).
+pub fn vsetvl(avl: usize, vtype: VType, vlen_bits: usize) -> usize {
+    avl.min(vtype.vlmax(vlen_bits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vlmax_e64() {
+        // VLEN=128: m1 -> 2 lanes, m4 -> 8 lanes (the paper's key numbers)
+        assert_eq!(VType::new(Sew::E64, Lmul::M1).vlmax(128), 2);
+        assert_eq!(VType::new(Sew::E64, Lmul::M4).vlmax(128), 8);
+        assert_eq!(VType::new(Sew::E64, Lmul::M8).vlmax(128), 16);
+    }
+
+    #[test]
+    fn vlmax_e32_doubles() {
+        assert_eq!(VType::new(Sew::E32, Lmul::M1).vlmax(128), 4);
+    }
+
+    #[test]
+    fn vsetvl_clamps_to_vlmax() {
+        let vt = VType::new(Sew::E64, Lmul::M4);
+        assert_eq!(vsetvl(100, vt, 128), 8);
+        assert_eq!(vsetvl(5, vt, 128), 5);
+        assert_eq!(vsetvl(0, vt, 128), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn fractional_multiplier_panics() {
+        Lmul::Fractional.multiplier();
+    }
+}

@@ -1,0 +1,248 @@
+//! Per-instruction cycle model for the C920 (and scalar U74).
+//!
+//! The quantity the paper optimizes is *fetched instructions per unit of
+//! work*: the C920's in-order front end serializes on vector-instruction
+//! dispatch, so a schedule that does the same FLOPs with fewer, longer
+//! (higher-LMUL) vector instructions runs faster even though the vector
+//! datapath is equally busy. The model:
+//!
+//! - vector instruction:  max(dispatch_overhead, active_lanes / lane_rate)
+//!   cycles of pipeline occupancy;
+//! - scalar FP load (`fld`): 1 LSU cycle + `FLD_USE_STALL` (the in-order
+//!   core stalls the dependent `vfmacc.vf` on the freshly loaded scalar);
+//! - other scalar ops: dual-issued (1/issue_width cycles each);
+//! - scalar `fmadd.d`: limited by `scalar_fma_per_cycle`.
+//!
+//! Calibration (see EXPERIMENTS.md 'Calibration'): with the C920 preset
+//! (dispatch = 2.0 cycles), the BLIS LMUL=1 -> LMUL=4 rewrite speeds the
+//! micro-kernel up by ~1.9x, which propagates through the HPL model to
+//! the paper's +49% at 128 cores.
+
+use super::inst::{Inst, Program};
+use super::rvv::{Lmul, Sew, VType};
+use crate::arch::soc::CoreModel;
+
+/// Extra stall cycles charged when a scalar FP load feeds the vector unit
+/// (in-order bypass latency).
+pub const FLD_USE_STALL: f64 = 1.5;
+
+/// Cycle accounting for one program execution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingBreakdown {
+    pub cycles: f64,
+    pub vector_cycles: f64,
+    pub scalar_mem_cycles: f64,
+    pub scalar_fma_cycles: f64,
+    pub scalar_other_cycles: f64,
+    pub insts: usize,
+    pub flops: usize,
+}
+
+impl TimingBreakdown {
+    pub fn flops_per_cycle(&self) -> f64 {
+        if self.cycles == 0.0 {
+            0.0
+        } else {
+            self.flops as f64 / self.cycles
+        }
+    }
+
+    /// GFLOP/s at the core's frequency.
+    pub fn gflops(&self, core: &CoreModel) -> f64 {
+        self.flops_per_cycle() * core.freq_hz / 1e9
+    }
+}
+
+/// The cycle model: walks a straight-line program tracking vtype/vl like
+/// the functional machine, charging cycles per the rules above.
+pub struct CycleModel<'a> {
+    pub core: &'a CoreModel,
+}
+
+impl<'a> CycleModel<'a> {
+    pub fn new(core: &'a CoreModel) -> Self {
+        CycleModel { core }
+    }
+
+    /// Cost of one vector instruction at the given active lane count.
+    fn vector_cost(&self, lanes: usize) -> f64 {
+        let busy = lanes as f64 / self.core.vfma_lanes_per_cycle.max(1) as f64;
+        busy.max(self.core.vinst_dispatch_cycles)
+    }
+
+    /// Analyze a program. `Program`s are straight-line; loops must be
+    /// peeled/multiplied by the caller (ukernel::analysis does this).
+    pub fn analyze(&self, prog: &Program) -> TimingBreakdown {
+        let mut _vtype = VType::new(Sew::E64, Lmul::M1);
+        let mut vl = 0usize;
+        let vlen = self.core.vlen_bits.max(128);
+        let mut t = TimingBreakdown {
+            cycles: 0.0,
+            vector_cycles: 0.0,
+            scalar_mem_cycles: 0.0,
+            scalar_fma_cycles: 0.0,
+            scalar_other_cycles: 0.0,
+            insts: prog.len(),
+            flops: 0,
+        };
+        for (idx, inst) in prog.insts.iter().enumerate() {
+            match inst {
+                Inst::Vsetvli { avl, vtype: vt } => {
+                    _vtype = *vt;
+                    vl = super::rvv::vsetvl(*avl, *vt, vlen);
+                    // vsetvli itself is a cheap scalar op
+                    t.scalar_other_cycles += 1.0 / self.core.issue_width as f64;
+                }
+                Inst::Vle { .. } | Inst::Vse { .. } => {
+                    t.vector_cycles += self.vector_cost(vl);
+                }
+                Inst::VfmaccVf { .. } | Inst::VfmulVf { .. } | Inst::VfaddVv { .. } => {
+                    t.vector_cycles += self.vector_cost(vl);
+                    t.flops += inst.flops(vl);
+                }
+                Inst::VfmvVf { .. } => {
+                    t.vector_cycles += self.vector_cost(vl);
+                }
+                Inst::Fld { fd, .. } => {
+                    t.scalar_mem_cycles += 1.0 / self.core.lsu_per_cycle;
+                    // In-order bypass stall: charged only when a vector op
+                    // consumes the freshly loaded scalar within the next
+                    // two slots. Software-pipelined kernels (OpenBLAS's
+                    // C920 asm) hoist their flds and dodge this; BLIS's
+                    // naive rank-1 schedule eats it every column.
+                    let consumed_soon = prog.insts[idx + 1..].iter().take(2).any(|n| {
+                        matches!(n,
+                            Inst::VfmaccVf { fs, .. }
+                            | Inst::VfmulVf { fs, .. }
+                            | Inst::VfmvVf { fs, .. } if fs == fd)
+                    });
+                    if consumed_soon {
+                        t.scalar_mem_cycles += FLD_USE_STALL;
+                    }
+                }
+                Inst::Fsd { .. } => {
+                    t.scalar_mem_cycles += 1.0 / self.core.lsu_per_cycle;
+                }
+                Inst::FmaddD { .. } => {
+                    t.scalar_fma_cycles += 1.0 / self.core.scalar_fma_per_cycle.max(0.01);
+                    t.flops += 2;
+                }
+                Inst::Addi | Inst::Bnez => {
+                    t.scalar_other_cycles += 1.0 / self.core.issue_width as f64;
+                }
+            }
+        }
+        // In-order pipe: vector occupancy serializes with scalar memory
+        // traffic (shared LSU) and with the scalar FMA pipe; cheap scalar
+        // ALU bookkeeping overlaps ~half.
+        t.cycles = t.vector_cycles
+            + t.scalar_mem_cycles
+            + t.scalar_fma_cycles
+            + 0.5 * t.scalar_other_cycles;
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::c920;
+    use crate::isa::inst::Dialect;
+
+    fn vt(lmul: Lmul) -> VType {
+        VType::new(Sew::E64, lmul)
+    }
+
+    /// One k-step of the Fig-2a (LMUL=1) schedule for an 8x8 tile:
+    /// 4 A-loads + per column (8): fld + 4 vfmacc.
+    fn lmul1_kstep() -> Program {
+        let mut p = Program::new(Dialect::Rvv10);
+        p.push(Inst::Vsetvli { avl: 2, vtype: vt(Lmul::M1) });
+        for r in 0..4 {
+            p.push(Inst::Vle { sew: Sew::E64, vd: 24 + r, addr: 0 });
+        }
+        for _col in 0..8 {
+            p.push(Inst::Fld { fd: 0, addr: 0 });
+            for r in 0..4 {
+                p.push(Inst::VfmaccVf { vd: r * 2, fs: 0, vs2: 24 + r });
+            }
+        }
+        p.push(Inst::Addi);
+        p.push(Inst::Bnez);
+        p
+    }
+
+    /// One k-step of the Fig-2b (LMUL=4) schedule:
+    /// 1 grouped A-load + per column: fld + 1 grouped vfmacc.
+    fn lmul4_kstep() -> Program {
+        let mut p = Program::new(Dialect::Rvv10);
+        p.push(Inst::Vsetvli { avl: 8, vtype: vt(Lmul::M4) });
+        p.push(Inst::Vle { sew: Sew::E64, vd: 24, addr: 0 });
+        for col in 0..8u8 {
+            p.push(Inst::Fld { fd: 0, addr: 0 });
+            p.push(Inst::VfmaccVf { vd: (col % 2) * 4, fs: 0, vs2: 24 });
+        }
+        p.push(Inst::Addi);
+        p.push(Inst::Bnez);
+        p
+    }
+
+    #[test]
+    fn lmul4_schedule_is_faster_same_flops() {
+        let core = c920();
+        let m = CycleModel::new(&core);
+        let t1 = m.analyze(&lmul1_kstep());
+        let t4 = m.analyze(&lmul4_kstep());
+        assert_eq!(t1.flops, 128);
+        assert_eq!(t4.flops, 128);
+        let speedup = t1.cycles / t4.cycles;
+        assert!(
+            (1.5..2.5).contains(&speedup),
+            "LMUL=4 speedup {speedup:.2} outside paper-plausible band (t1={:.1}, t4={:.1})",
+            t1.cycles,
+            t4.cycles
+        );
+    }
+
+    #[test]
+    fn fewer_instructions_is_the_mechanism() {
+        // the paper: "reducing the number of fetched instructions"
+        let p1 = lmul1_kstep();
+        let p4 = lmul4_kstep();
+        assert!(p4.len() < p1.len() / 2, "{} vs {}", p4.len(), p1.len());
+    }
+
+    #[test]
+    fn vector_cost_respects_dispatch_floor() {
+        let core = c920();
+        let m = CycleModel::new(&core);
+        // LMUL=1: 2 lanes / 2 per cycle = 1 < dispatch 2 -> cost 2
+        assert!((m.vector_cost(2) - core.vinst_dispatch_cycles).abs() < 1e-12);
+        // LMUL=4: 8 lanes / 2 = 4 > dispatch -> cost 4
+        assert!((m.vector_cost(8) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scalar_kernel_counts_fma_throughput() {
+        let core = c920();
+        let m = CycleModel::new(&core);
+        let mut p = Program::new(Dialect::Rvv10);
+        for _ in 0..10 {
+            p.push(Inst::FmaddD { fd: 0, fs1: 1, fs2: 2, fs3: 0 });
+        }
+        let t = m.analyze(&p);
+        assert_eq!(t.flops, 20);
+        assert!(t.scalar_fma_cycles >= 10.0);
+        assert!(t.cycles >= t.scalar_fma_cycles);
+    }
+
+    #[test]
+    fn gflops_scales_with_frequency() {
+        let mut core = c920();
+        let t = CycleModel::new(&core).analyze(&lmul4_kstep());
+        let g1 = t.gflops(&core);
+        core.freq_hz *= 2.0;
+        let g2 = t.gflops(&core);
+        assert!((g2 / g1 - 2.0).abs() < 1e-9);
+    }
+}

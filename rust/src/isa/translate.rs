@@ -1,0 +1,193 @@
+//! The RVV 1.0 -> 0.7.1 (theadvector) retrofit pass — Section 3.3.1 of the
+//! paper, implemented as a verified IR transformation.
+//!
+//! What the paper did by hand on BLIS's assembly, we do mechanically:
+//! 1. adapt load/store instructions (`vle64.v` -> `th.vle.v`; EEW moves
+//!    from the mnemonic into vtype — we *verify* the SEW already matches
+//!    the active vtype, the condition under which the textual rewrite is
+//!    sound);
+//! 2. adapt `vsetvl` operations to the older syntax (drop `ta, ma`);
+//! 3. add the `th.` prefix so GCC 14's `theadvector` target recognizes
+//!    the mnemonics (in our IR: retag the dialect).
+//!
+//! The pass also *rejects* programs using RVV 1.0 features with no 0.7.1
+//! equivalent (fractional LMUL), which is exactly where a blind textual
+//! port would miscompile.
+
+use super::inst::{Dialect, Inst, Program};
+use super::rvv::{Sew, VType};
+
+/// Translation failure modes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TranslateError {
+    /// Program is not RVV 1.0 to begin with.
+    WrongSourceDialect,
+    /// Fractional LMUL has no theadvector encoding.
+    FractionalLmul { at: usize },
+    /// A load/store EEW disagrees with the active vtype SEW; the 0.7.1
+    /// form (EEW from vtype) would change semantics.
+    EewMismatch { at: usize, inst_sew: Sew, vtype_sew: Sew },
+}
+
+impl std::fmt::Display for TranslateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TranslateError::WrongSourceDialect => write!(f, "source is not RVV 1.0"),
+            TranslateError::FractionalLmul { at } => {
+                write!(f, "inst {at}: fractional LMUL unsupported in RVV 0.7.1")
+            }
+            TranslateError::EewMismatch { at, inst_sew, vtype_sew } => write!(
+                f,
+                "inst {at}: load/store EEW {:?} != vtype SEW {:?}; textual port unsound",
+                inst_sew, vtype_sew
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TranslateError {}
+
+/// Translate an RVV 1.0 program to theadvector 0.7.1.
+pub fn rvv10_to_thead(prog: &Program) -> Result<Program, TranslateError> {
+    if prog.dialect != Dialect::Rvv10 {
+        return Err(TranslateError::WrongSourceDialect);
+    }
+    let mut out = Program::new(Dialect::Thead071);
+    let mut vtype: Option<VType> = None;
+    for (at, inst) in prog.insts.iter().enumerate() {
+        let new = match *inst {
+            Inst::Vsetvli { avl, vtype: vt } => {
+                if vt.lmul.is_fractional() {
+                    return Err(TranslateError::FractionalLmul { at });
+                }
+                vtype = Some(vt);
+                // 0.7.1 vsetvli has no ta/ma flags: normalize them away so
+                // the rendered text matches the old syntax.
+                Inst::Vsetvli {
+                    avl,
+                    vtype: VType { tail_agnostic: false, mask_agnostic: false, ..vt },
+                }
+            }
+            Inst::Vle { sew, vd, addr } => {
+                check_eew(at, sew, vtype)?;
+                Inst::Vle { sew, vd, addr }
+            }
+            Inst::Vse { sew, vs, addr } => {
+                check_eew(at, sew, vtype)?;
+                Inst::Vse { sew, vs, addr }
+            }
+            other => other,
+        };
+        out.push(new);
+    }
+    Ok(out)
+}
+
+fn check_eew(at: usize, inst_sew: Sew, vtype: Option<VType>) -> Result<(), TranslateError> {
+    match vtype {
+        Some(vt) if vt.sew != inst_sew => Err(TranslateError::EewMismatch {
+            at,
+            inst_sew,
+            vtype_sew: vt.sew,
+        }),
+        // No vsetvli seen yet: a real kernel always configures first; treat
+        // as mismatch at position `at` against an undefined vtype.
+        None => Err(TranslateError::EewMismatch { at, inst_sew, vtype_sew: inst_sew }),
+        _ => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::asm::render_program;
+    use crate::isa::exec::VecMachine;
+    use crate::isa::rvv::{Lmul, Sew, VType};
+
+    fn vt(lmul: Lmul) -> VType {
+        let mut v = VType::new(Sew::E64, lmul);
+        v.tail_agnostic = true; // RVV 1.0 style
+        v.mask_agnostic = true;
+        v
+    }
+
+    fn sample_rvv10() -> Program {
+        let mut p = Program::new(Dialect::Rvv10);
+        p.push(Inst::Vsetvli { avl: 8, vtype: vt(Lmul::M4) });
+        p.push(Inst::Vle { sew: Sew::E64, vd: 8, addr: 0 });
+        p.push(Inst::Fld { fd: 0, addr: 100 });
+        p.push(Inst::VfmaccVf { vd: 0, fs: 0, vs2: 8 });
+        p.push(Inst::Vse { sew: Sew::E64, vs: 0, addr: 16 });
+        p
+    }
+
+    #[test]
+    fn translation_retags_and_strips_flags() {
+        let t = rvv10_to_thead(&sample_rvv10()).unwrap();
+        assert_eq!(t.dialect, Dialect::Thead071);
+        match t.insts[0] {
+            Inst::Vsetvli { vtype, .. } => {
+                assert!(!vtype.tail_agnostic && !vtype.mask_agnostic)
+            }
+            _ => panic!(),
+        }
+        let text = render_program(&t);
+        assert!(text.contains("th.vle.v"));
+        assert!(text.contains("th.vfmacc.vf"));
+        assert!(!text.contains("ta, ma"));
+    }
+
+    #[test]
+    fn translation_preserves_numerics() {
+        // The paper's correctness criterion: the retrofitted kernel computes
+        // the same result. Run both programs on identical machines.
+        let src = sample_rvv10();
+        let dst = rvv10_to_thead(&src).unwrap();
+        let mut m1 = VecMachine::new(128, 256);
+        let mut m2 = VecMachine::new(128, 256);
+        for i in 0..8 {
+            m1.mem[i] = (i as f64) * 1.25 - 2.0;
+            m2.mem[i] = (i as f64) * 1.25 - 2.0;
+        }
+        m1.mem[100] = 3.5;
+        m2.mem[100] = 3.5;
+        m1.run(&src).unwrap();
+        m2.run(&dst).unwrap();
+        assert_eq!(m1.mem, m2.mem);
+        assert_eq!(m1.flops, m2.flops);
+    }
+
+    #[test]
+    fn fractional_lmul_rejected() {
+        let mut p = Program::new(Dialect::Rvv10);
+        p.push(Inst::Vsetvli { avl: 1, vtype: VType::new(Sew::E64, Lmul::Fractional) });
+        assert_eq!(
+            rvv10_to_thead(&p).unwrap_err(),
+            TranslateError::FractionalLmul { at: 0 }
+        );
+    }
+
+    #[test]
+    fn eew_mismatch_rejected() {
+        let mut p = Program::new(Dialect::Rvv10);
+        p.push(Inst::Vsetvli { avl: 4, vtype: vt(Lmul::M1) }); // e64
+        p.push(Inst::Vle { sew: Sew::E32, vd: 0, addr: 0 }); // e32 load
+        match rvv10_to_thead(&p).unwrap_err() {
+            TranslateError::EewMismatch { at: 1, .. } => {}
+            e => panic!("{e:?}"),
+        }
+    }
+
+    #[test]
+    fn load_before_vsetvli_rejected() {
+        let mut p = Program::new(Dialect::Rvv10);
+        p.push(Inst::Vle { sew: Sew::E64, vd: 0, addr: 0 });
+        assert!(rvv10_to_thead(&p).is_err());
+    }
+
+    #[test]
+    fn wrong_source_dialect() {
+        let p = Program::new(Dialect::Thead071);
+        assert_eq!(rvv10_to_thead(&p).unwrap_err(), TranslateError::WrongSourceDialect);
+    }
+}

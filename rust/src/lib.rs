@@ -1,0 +1,45 @@
+//! # cimone — Monte Cimone v2 reproduction stack
+//!
+//! A Rust + JAX + Pallas three-layer reproduction of *"Monte Cimone v2:
+//! Down the Road of RISC-V High-Performance Computers"* (CS.DC 2025).
+//!
+//! The paper evaluates the MCv2 RISC-V cluster (Sophgo SG2042 / Milk-V
+//! Pioneer nodes) with STREAM and HPL across BLAS libraries, and
+//! contributes a BLIS micro-kernel optimization for the C920's RVV 0.7.1
+//! vector unit (LMUL register grouping). Since the physical testbed is
+//! unavailable, this crate implements the complete substrate as a
+//! simulation + real-numerics stack:
+//!
+//! - [`isa`] — RVV 0.7.1 (theadvector) / RVV 1.0 instruction model with a
+//!   *functional* vector machine (real f64 numerics) and a timing model.
+//! - [`ukernel`] — the four GEMM micro-kernels of the paper (OpenBLAS
+//!   generic/C920, BLIS LMUL=1 of Fig 2a, BLIS LMUL=4 of Fig 2b) as
+//!   instruction schedules.
+//! - [`blas`] — BLIS-style blocked GEMM over the micro-kernels, cache
+//!   blocking derivation and the calibrated per-library performance model.
+//! - [`cache`] — trace-driven set-associative L1/L2/L3 simulator (Fig 6).
+//! - [`mem`] — DDR4 multi-channel bandwidth model (Fig 3).
+//! - [`net`] — 1 GbE + MPI-collective cost models (Fig 5).
+//! - [`hpl`] / [`stream`] — the benchmarks themselves, with real numerics.
+//! - [`sched`] / [`cluster`] — SLURM-like scheduler and node inventory.
+//! - [`runtime`] — PJRT client executing the JAX/Pallas-authored HLO
+//!   artifacts (`artifacts/*.hlo.txt`); Python never runs at this layer.
+//! - [`coordinator`] — experiment drivers regenerating every paper figure.
+
+pub mod util;
+pub mod arch;
+pub mod isa;
+pub mod ukernel;
+pub mod blas;
+pub mod cache;
+pub mod mem;
+pub mod net;
+pub mod hpl;
+pub mod stream;
+pub mod sched;
+pub mod cluster;
+pub mod runtime;
+pub mod coordinator;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,179 @@
+//! `cimone` — the Monte Cimone v2 reproduction CLI.
+//!
+//! Subcommands map one-to-one onto the paper's evaluation:
+//!
+//! ```text
+//! cimone stream                      Fig 3: STREAM bandwidth table
+//! cimone hpl [--cores a,b,..]        Fig 4: HPL vs cores, OpenBLAS variants
+//! cimone cluster-hpl                 Fig 5: node-configuration comparison
+//! cimone cache-miss [--scale 0.5]    Fig 6: L1/L3 miss rates OB vs BLIS
+//! cimone blis-compare                Fig 7: three-library comparison
+//! cimone headline                    the abstract's 127x / 69x
+//! cimone report-all                  everything above
+//! cimone run-hpl [--n 256 --nb 32]   real-numerics HPL + residual check
+//! cimone validate [--artifacts dir]  PJRT artifacts vs native numerics
+//! cimone campaign [--n 96]           end-to-end: SLURM sim + monitor
+//! cimone translate-demo              section 3.3.1 RVV 1.0 -> 0.7.1 retrofit
+//! ```
+
+use cimone::coordinator::{driver, report};
+use cimone::hpl::driver::{run as hpl_run, Backend, HplConfig};
+use cimone::isa::asm::render_program;
+use cimone::isa::translate::rvv10_to_thead;
+use cimone::ukernel::{MicroKernel, PanelLayout, UkernelId};
+use cimone::util::cli::Args;
+use cimone::util::Matrix;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<(), String> {
+    match args.subcommand.as_deref() {
+        Some("stream") => {
+            println!("{}", report::render_fig3());
+        }
+        Some("hpl") => {
+            println!("{}", report::render_fig4());
+        }
+        Some("cluster-hpl") => {
+            println!("{}", report::render_fig5());
+        }
+        Some("cache-miss") => {
+            let scale = args.get_f64("scale", 1.0)?;
+            println!("{}", report::render_fig6(scale));
+        }
+        Some("blis-compare") => {
+            println!("{}", report::render_fig7());
+        }
+        Some("headline") => {
+            println!("{}", report::render_headline());
+        }
+        Some("report-all") => {
+            let scale = args.get_f64("scale", 0.5)?;
+            println!("{}", report::render_all(scale));
+        }
+        Some("sweeps") => {
+            println!("{}", cimone::coordinator::sweeps::render_all());
+        }
+        Some("run-hpl") => {
+            let n = args.get_usize("n", 256)?;
+            let nb = args.get_usize("nb", 32)?;
+            let backend = match args.get("lib") {
+                None => Backend::Native,
+                Some(l) => Backend::SimulatedBlas(
+                    UkernelId::parse(l).ok_or_else(|| format!("unknown library `{l}`"))?,
+                ),
+            };
+            let r = hpl_run(&HplConfig { n, nb, seed: args.get_usize("seed", 42)? as u64, backend })
+                .map_err(|e| e)?;
+            println!(
+                "HPL n={} : {:.3}s host ({:.2} Gflop/s), residual {:.3e} -> {}",
+                r.n,
+                r.seconds,
+                r.host_gflops,
+                r.residual,
+                if r.passed { "PASSED" } else { "FAILED" }
+            );
+            if !r.passed {
+                return Err("HPL residual check failed".into());
+            }
+        }
+        Some("validate") => {
+            validate_artifacts(args)?;
+        }
+        Some("campaign") => {
+            let n = args.get_usize("n", 96)?;
+            let r = driver::run_campaign(n).map_err(|e| e)?;
+            println!("campaign: {} jobs, makespan {:.0}s (simulated)", r.jobs.len(), r.makespan_s);
+            println!(
+                "validation: HPL residual {:.3e} ({}), STREAM {}",
+                r.hpl_residual,
+                if r.hpl_passed { "passed" } else { "FAILED" },
+                if r.stream_validated { "validated" } else { "FAILED" }
+            );
+            for (name, runtime, metric) in &r.jobs {
+                println!("  {name:<18} {runtime:>10.1}s  -> {metric:.1}");
+            }
+        }
+        Some("translate-demo") => {
+            let kernel = cimone::ukernel::blis_lmul1::BlisLmul1;
+            let prog = kernel.program(PanelLayout::new(8, 4, 1));
+            println!("--- BLIS rv64iv micro-kernel (RVV 1.0), one k-step ---");
+            println!("{}", render_program(&prog));
+            let translated = rvv10_to_thead(&prog).map_err(|e| e.to_string())?;
+            println!("\n--- retrofitted to XuanTie theadvector (RVV 0.7.1) ---");
+            println!("{}", render_program(&translated));
+        }
+        Some(other) => {
+            return Err(format!("unknown subcommand `{other}` (see --help in README)"));
+        }
+        None => {
+            println!("usage: cimone <stream|hpl|cluster-hpl|cache-miss|blis-compare|headline|report-all|run-hpl|validate|campaign|translate-demo>");
+        }
+    }
+    Ok(())
+}
+
+/// `cimone validate`: run the PJRT artifacts against native numerics.
+fn validate_artifacts(args: &Args) -> Result<(), String> {
+    use cimone::runtime::{entries, Runtime};
+    let dir = args.get_or("artifacts", &cimone::runtime::ArtifactManifest::default_dir()).to_string();
+    let mut rt = Runtime::with_dir(&dir).map_err(|e| e.to_string())?;
+    println!("PJRT platform: {}", rt.platform());
+    let n = rt.manifest.n_gemm;
+
+    // GEMM artifact vs native
+    let a = Matrix::random_hpl(n, n, 1);
+    let b = Matrix::random_hpl(n, n, 2);
+    let got = entries::gemm(&mut rt, &a, &b).map_err(|e| e.to_string())?;
+    let mut want = Matrix::zeros(n, n);
+    Matrix::gemm_acc(&mut want, &a, &b);
+    if !got.allclose(&want, 1e-10, 1e-10) {
+        return Err("gemm_256 artifact disagrees with native GEMM".into());
+    }
+    println!("gemm_256          OK ({n}x{n})");
+
+    // micro-kernel artifacts vs the ISA machine
+    let a8 = Matrix::random_hpl(8, 64, 3);
+    let b8 = Matrix::random_hpl(64, 8, 4);
+    let c8 = Matrix::random_hpl(8, 8, 5);
+    for variant in ["lmul1", "lmul4"] {
+        let got = entries::ukernel(&mut rt, variant, &a8, &b8, &c8).map_err(|e| e.to_string())?;
+        let mut want = c8.clone();
+        Matrix::gemm_acc(&mut want, &a8, &b8);
+        if !got.allclose(&want, 1e-10, 1e-10) {
+            return Err(format!("ukernel_{variant} artifact mismatch"));
+        }
+        println!("ukernel_{variant}     OK (8x8x64)");
+    }
+
+    // STREAM triad artifact
+    let ns = rt.manifest.n_stream;
+    let sa: Vec<f64> = (0..ns).map(|i| (i % 97) as f64 * 0.5).collect();
+    let sb: Vec<f64> = (0..ns).map(|i| (i % 89) as f64 * 0.25).collect();
+    let got = entries::stream(&mut rt, "triad", &sa, Some(&sb)).map_err(|e| e.to_string())?;
+    for i in (0..ns).step_by(ns / 17) {
+        let want = sa[i] + 3.0 * sb[i];
+        if (got[i] - want).abs() > 1e-12 {
+            return Err(format!("stream_triad mismatch at {i}: {} vs {want}", got[i]));
+        }
+    }
+    println!("stream_triad      OK ({ns} elems)");
+    println!("all artifacts validated against native numerics");
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! DDR4 multi-channel bandwidth model.
+//!
+//! The shape the paper's Fig 3 reports: attained bandwidth ramps with
+//! thread count (each in-order core can only keep ~1.35 GB/s of requests
+//! in flight on the SG2042), saturates at the controller's attainable
+//! ceiling, and *degrades* under oversubscription ("increasing the number
+//! of OpenMP threads reduces the attained bandwidth").
+
+use crate::arch::soc::MemorySystem;
+
+/// Per-thread oversubscription penalty beyond the core count (fraction of
+/// ceiling lost per extra thread: context switching + bank conflicts).
+pub const OVERSUB_PENALTY: f64 = 0.004;
+
+/// Bandwidth model for one socket's memory system.
+#[derive(Debug, Clone, Copy)]
+pub struct DdrModel {
+    pub mem: MemorySystem,
+    pub cores: usize,
+}
+
+impl DdrModel {
+    pub fn new(mem: MemorySystem, cores: usize) -> Self {
+        DdrModel { mem, cores }
+    }
+
+    /// Attained STREAM bandwidth (bytes/s) with `threads` on this socket.
+    pub fn bandwidth(&self, threads: usize) -> f64 {
+        if threads == 0 {
+            return 0.0;
+        }
+        let ceiling = self.mem.attainable_bw();
+        let ramp = threads as f64 * self.mem.per_core_bw_bytes;
+        let base = ramp.min(ceiling);
+        if threads > self.cores {
+            let over = (threads - self.cores) as f64;
+            (base * (1.0 - OVERSUB_PENALTY * over)).max(0.1 * ceiling)
+        } else {
+            base
+        }
+    }
+
+    /// Threads needed to reach 95% of the ceiling.
+    pub fn saturation_threads(&self) -> usize {
+        let ceiling = self.mem.attainable_bw();
+        ((0.95 * ceiling) / self.mem.per_core_bw_bytes).ceil() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    fn sg() -> DdrModel {
+        let s = &presets::sg2042().sockets[0];
+        DdrModel::new(s.mem, s.cores)
+    }
+
+    fn u7() -> DdrModel {
+        let s = &presets::u740().sockets[0];
+        DdrModel::new(s.mem, s.cores)
+    }
+
+    #[test]
+    fn sg2042_saturates_to_41_9() {
+        let m = sg();
+        let bw = m.bandwidth(64);
+        assert!((bw - 41.9e9).abs() < 0.5e9, "{bw}");
+    }
+
+    #[test]
+    fn ramp_is_linear_before_saturation() {
+        let m = sg();
+        let b8 = m.bandwidth(8);
+        let b16 = m.bandwidth(16);
+        assert!((b16 / b8 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn oversubscription_degrades() {
+        let m = sg();
+        assert!(m.bandwidth(96) < m.bandwidth(64));
+        assert!(m.bandwidth(128) < m.bandwidth(96));
+    }
+
+    #[test]
+    fn u740_saturates_at_1_1_with_4_threads() {
+        let m = u7();
+        let bw = m.bandwidth(4);
+        assert!((bw - 1.1e9).abs() < 0.1e9, "{bw}");
+        // and ~saturated already at 4 threads (paper's configuration)
+        assert!(m.saturation_threads() <= 4);
+    }
+
+    #[test]
+    fn zero_threads_zero_bandwidth() {
+        assert_eq!(sg().bandwidth(0), 0.0);
+    }
+
+    #[test]
+    fn sg2042_saturation_point_below_64() {
+        // per-core 0.9 GB/s -> ~45 threads to saturate; 64 certainly does
+        let t = sg().saturation_threads();
+        assert!(t <= 64, "{t}");
+    }
+}

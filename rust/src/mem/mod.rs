@@ -1,0 +1,8 @@
+//! Memory-system models: DDR4 channel bandwidth and the STREAM
+//! bandwidth-vs-threads saturation curve (Fig 3).
+
+pub mod ddr;
+pub mod stream_model;
+
+pub use ddr::DdrModel;
+pub use stream_model::{predict_node_bandwidth, KERNEL_FACTORS};

@@ -1,0 +1,108 @@
+//! Node-level STREAM prediction: composes per-socket DDR models with the
+//! thread-pinning policy, producing the Fig 3 numbers.
+
+use super::ddr::DdrModel;
+use crate::arch::soc::SocDescriptor;
+
+/// Relative bandwidth of the four STREAM kernels vs copy (empirical:
+/// add/triad slightly beat copy/scale on most DDR4 systems because two
+/// read streams amortize write-allocate traffic).
+pub const KERNEL_FACTORS: [(&str, f64); 4] =
+    [("copy", 1.00), ("scale", 0.985), ("add", 1.04), ("triad", 1.045)];
+
+/// Predicted aggregate bandwidth (bytes/s) for `threads` spread over the
+/// node. `symmetric_pinning` splits threads evenly across sockets (the
+/// paper's best configuration); otherwise all threads land on socket 0
+/// until full, then spill.
+pub fn predict_node_bandwidth(
+    desc: &SocDescriptor,
+    threads: usize,
+    symmetric_pinning: bool,
+) -> f64 {
+    if threads == 0 {
+        return 0.0;
+    }
+    let n_sock = desc.sockets.len();
+    let mut per_socket_threads = vec![0usize; n_sock];
+    if symmetric_pinning {
+        for s in 0..n_sock {
+            per_socket_threads[s] = threads / n_sock + usize::from(s < threads % n_sock);
+        }
+    } else {
+        let mut left = threads;
+        for (s, sock) in desc.sockets.iter().enumerate() {
+            let take = left.min(sock.cores);
+            per_socket_threads[s] = take;
+            left -= take;
+        }
+        // oversubscription: leftover threads pile on socket 0
+        per_socket_threads[0] += left;
+    }
+    desc.sockets
+        .iter()
+        .zip(&per_socket_threads)
+        .map(|(sock, &t)| DdrModel::new(sock.mem, sock.cores).bandwidth(t))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn fig3_mcv2_single_socket() {
+        let d = presets::sg2042();
+        let bw = predict_node_bandwidth(&d, 64, true);
+        assert!((bw - 41.9e9).abs() < 0.5e9, "{bw}");
+    }
+
+    #[test]
+    fn fig3_mcv2_dual_socket_symmetric() {
+        // paper: 82.9 GB/s with 64 threads pinned symmetrically
+        let d = presets::sg2042_dual();
+        let bw = predict_node_bandwidth(&d, 64, true);
+        assert!((82.0e9..86.0e9).contains(&bw), "{bw}");
+    }
+
+    #[test]
+    fn fig3_mcv1() {
+        let d = presets::u740();
+        let bw = predict_node_bandwidth(&d, 4, true);
+        assert!((bw - 1.1e9).abs() < 0.1e9, "{bw}");
+    }
+
+    #[test]
+    fn dual_socket_more_threads_reduces_bandwidth() {
+        // "increasing the number of OpenMP threads reduces the attained
+        // bandwidth" — 128 threads oversubscribe nothing (128 cores) but
+        // on the single socket 128 threads certainly degrade:
+        let d1 = presets::sg2042();
+        assert!(
+            predict_node_bandwidth(&d1, 128, true) < predict_node_bandwidth(&d1, 64, true)
+        );
+    }
+
+    #[test]
+    fn asymmetric_pinning_hurts_dual_socket() {
+        let d = presets::sg2042_dual();
+        let sym = predict_node_bandwidth(&d, 64, true);
+        let asym = predict_node_bandwidth(&d, 64, false);
+        assert!(asym < sym, "sym={sym} asym={asym}");
+    }
+
+    #[test]
+    fn headline_69x_stream_uplift() {
+        // abstract: "69x on Stream Memory Bandwidth" (node vs node)
+        let v1 = predict_node_bandwidth(&presets::u740(), 4, true);
+        let v2 = predict_node_bandwidth(&presets::sg2042_dual(), 64, true);
+        let ratio = v2 / v1;
+        assert!((60.0..85.0).contains(&ratio), "uplift {ratio:.0}x");
+    }
+
+    #[test]
+    fn kernel_factors_cover_all_four() {
+        let names: Vec<&str> = KERNEL_FACTORS.iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["copy", "scale", "add", "triad"]);
+    }
+}

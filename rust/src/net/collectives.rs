@@ -1,0 +1,103 @@
+//! MPI collective cost models over a flat switched fabric (Monte Cimone's
+//! topology: every node one hop from the switch).
+//!
+//! Standard LogP-flavoured formulas: ring broadcast/allreduce for large
+//! payloads, binomial trees for small ones — what OpenMPI selects on
+//! ethernet at these scales.
+
+use super::link::Link;
+
+/// Collective-time calculator for `p` ranks over `link`.
+#[derive(Debug, Clone, Copy)]
+pub struct Collectives {
+    pub link: Link,
+    pub p: usize,
+}
+
+impl Collectives {
+    pub fn new(link: Link, p: usize) -> Self {
+        assert!(p >= 1);
+        Collectives { link, p }
+    }
+
+    fn log2p(&self) -> f64 {
+        (self.p as f64).log2().ceil().max(1.0)
+    }
+
+    /// Broadcast `bytes` from one rank to all others.
+    /// Binomial for small messages, pipelined ring for large.
+    pub fn bcast(&self, bytes: f64) -> f64 {
+        if self.p == 1 {
+            return 0.0;
+        }
+        let binomial = self.log2p() * self.link.msg_time(bytes);
+        let ring = (self.p - 1) as f64 * self.link.latency_s
+            + bytes / self.link.payload_bytes_per_sec();
+        binomial.min(ring)
+    }
+
+    /// Allreduce of `bytes` (ring algorithm: 2(p-1)/p of the data crosses
+    /// each link, 2(p-1) message latencies).
+    pub fn allreduce(&self, bytes: f64) -> f64 {
+        if self.p == 1 {
+            return 0.0;
+        }
+        let pf = self.p as f64;
+        2.0 * (pf - 1.0) * self.link.latency_s
+            + 2.0 * (pf - 1.0) / pf * bytes / self.link.payload_bytes_per_sec()
+    }
+
+    /// Pairwise exchange (HPL's row swaps): each rank sends/receives
+    /// `bytes` once.
+    pub fn exchange(&self, bytes: f64) -> f64 {
+        if self.p == 1 {
+            return 0.0;
+        }
+        self.link.msg_time(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_rank_costs_nothing() {
+        let c = Collectives::new(Link::gbe(), 1);
+        assert_eq!(c.bcast(1e9), 0.0);
+        assert_eq!(c.allreduce(1e9), 0.0);
+    }
+
+    #[test]
+    fn bcast_monotone_in_ranks() {
+        let small = Collectives::new(Link::gbe(), 2).bcast(1e6);
+        let large = Collectives::new(Link::gbe(), 8).bcast(1e6);
+        assert!(large >= small);
+    }
+
+    #[test]
+    fn large_bcast_approaches_bandwidth_bound() {
+        // pipelined ring: T -> bytes/bw for big payloads
+        let c = Collectives::new(Link::gbe(), 8);
+        let bytes = 1e9;
+        let t = c.bcast(bytes);
+        let bw_bound = bytes / c.link.payload_bytes_per_sec();
+        assert!(t < 1.2 * bw_bound, "t={t:.2} bound={bw_bound:.2}");
+    }
+
+    #[test]
+    fn allreduce_costs_about_twice_the_data() {
+        let c = Collectives::new(Link::gbe(), 8);
+        let bytes = 1e8;
+        let t = c.allreduce(bytes);
+        let one_pass = bytes / c.link.payload_bytes_per_sec();
+        assert!(t > 1.5 * one_pass && t < 2.5 * one_pass, "{t}");
+    }
+
+    #[test]
+    fn small_allreduce_latency_dominated() {
+        let c = Collectives::new(Link::gbe(), 4);
+        let t = c.allreduce(8.0);
+        assert!(t >= 6.0 * c.link.latency_s * 0.99);
+    }
+}

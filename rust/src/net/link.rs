@@ -1,0 +1,81 @@
+//! Point-to-point link model: bandwidth + latency + protocol efficiency.
+
+/// A network link (full duplex).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    /// Raw signalling rate, bits per second.
+    pub raw_bps: f64,
+    /// One-way small-message latency in seconds (TCP/IP over GbE: ~60 us
+    /// with interrupt coalescing — RISC-V NIC drivers of the era were not
+    /// tuned; the paper's SLURM/MPI stack rode TCP).
+    pub latency_s: f64,
+    /// Fraction of raw bandwidth attainable by MPI payloads (TCP + MPI
+    /// envelope overhead).
+    pub efficiency: f64,
+}
+
+impl Link {
+    /// Monte Cimone's 1 Gb/s Ethernet.
+    pub fn gbe() -> Link {
+        Link { raw_bps: 1e9, latency_s: 65e-6, efficiency: 0.94 }
+    }
+
+    /// A hypothetical upgrade used by the ablation benches.
+    pub fn ten_gbe() -> Link {
+        Link { raw_bps: 10e9, latency_s: 20e-6, efficiency: 0.95 }
+    }
+
+    /// Attainable payload bytes/s.
+    pub fn payload_bytes_per_sec(&self) -> f64 {
+        self.raw_bps * self.efficiency / 8.0
+    }
+
+    /// Time to move one message of `bytes`.
+    pub fn msg_time(&self, bytes: f64) -> f64 {
+        self.latency_s + bytes / self.payload_bytes_per_sec()
+    }
+
+    /// Time for `count` messages totalling `bytes` (latency per message).
+    pub fn burst_time(&self, bytes: f64, count: f64) -> f64 {
+        count * self.latency_s + bytes / self.payload_bytes_per_sec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gbe_payload_rate() {
+        let l = Link::gbe();
+        let r = l.payload_bytes_per_sec();
+        assert!((r - 117.5e6).abs() < 1e6, "{r}");
+    }
+
+    #[test]
+    fn small_message_latency_bound() {
+        let l = Link::gbe();
+        let t = l.msg_time(64.0);
+        assert!(t > 0.9 * l.latency_s && t < 2.0 * l.latency_s);
+    }
+
+    #[test]
+    fn large_message_bandwidth_bound() {
+        let l = Link::gbe();
+        let t = l.msg_time(1e9);
+        assert!((t - 1e9 / l.payload_bytes_per_sec()).abs() / t < 0.01);
+    }
+
+    #[test]
+    fn burst_charges_per_message_latency() {
+        let l = Link::gbe();
+        let one = l.burst_time(1e6, 1.0);
+        let many = l.burst_time(1e6, 1000.0);
+        assert!(many > one + 0.9 * 999.0 * l.latency_s);
+    }
+
+    #[test]
+    fn ten_gbe_is_faster() {
+        assert!(Link::ten_gbe().msg_time(1e8) < Link::gbe().msg_time(1e8));
+    }
+}

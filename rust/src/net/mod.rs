@@ -1,0 +1,14 @@
+//! Cluster-interconnect models: the 1 Gb/s Ethernet fabric Monte Cimone
+//! uses for MPI, plus collective-operation cost models.
+//!
+//! Fig 5's punchline depends on this substrate: the same 1 GbE that let
+//! MCv1 scale HPL almost linearly is "no longer sufficient" for MCv2's
+//! 100x-faster nodes — a pure compute/communication-ratio effect.
+
+pub mod collectives;
+pub mod link;
+pub mod topo;
+
+pub use collectives::Collectives;
+pub use link::Link;
+pub use topo::Switch;

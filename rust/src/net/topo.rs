@@ -1,0 +1,135 @@
+//! Switch topology: Monte Cimone's single 1 GbE top-of-rack switch.
+//!
+//! Every node hangs one hop off the switch; what the flat [`super::link`]
+//! model misses is *fan-in contention*: when several ranks send to the
+//! same destination (HPL's panel broadcast root, or an all-to-one
+//! gather), the destination port serializes the flows. This module adds
+//! that — the difference is invisible at P=2 (Fig 5) but matters for the
+//! node-count-scaling extension sweeps.
+
+use super::link::Link;
+
+/// A non-blocking switch with per-port capacity equal to the link rate.
+#[derive(Debug, Clone, Copy)]
+pub struct Switch {
+    pub link: Link,
+    pub ports: usize,
+    /// Internal speedup of the backplane vs sum of ports (1.0 =
+    /// non-blocking, <1.0 = oversubscribed fabric).
+    pub backplane_factor: f64,
+}
+
+impl Switch {
+    /// Monte Cimone's unmanaged 1 GbE switch: non-blocking at this scale.
+    pub fn monte_cimone() -> Switch {
+        Switch { link: Link::gbe(), ports: 16, backplane_factor: 1.0 }
+    }
+
+    /// Time to complete a set of point-to-point flows, each `(src, dst,
+    /// bytes)`, all starting simultaneously. Ports serialize: a port's
+    /// finish time is the sum of its flows' transmission times (fair
+    /// sharing makes the *last* finisher identical to serialization for
+    /// equal-start flows), plus one latency.
+    pub fn flows_time(&self, flows: &[(usize, usize, f64)]) -> f64 {
+        if flows.is_empty() {
+            return 0.0;
+        }
+        let rate = self.link.payload_bytes_per_sec();
+        let mut tx_load = vec![0.0f64; self.ports];
+        let mut rx_load = vec![0.0f64; self.ports];
+        for &(src, dst, bytes) in flows {
+            assert!(src < self.ports && dst < self.ports, "port out of range");
+            if src == dst {
+                continue; // loopback is free at this fidelity
+            }
+            tx_load[src] += bytes;
+            rx_load[dst] += bytes;
+        }
+        // backplane limit: aggregate bytes / (ports x rate x factor)
+        let aggregate: f64 = tx_load.iter().sum();
+        let backplane =
+            aggregate / (self.ports as f64 * rate * self.backplane_factor);
+        let port_bound = tx_load
+            .iter()
+            .chain(rx_load.iter())
+            .fold(0.0f64, |m, &b| m.max(b / rate));
+        self.link.latency_s + port_bound.max(backplane)
+    }
+
+    /// All-to-one gather of `bytes` from `p-1` senders to rank 0 — the
+    /// fan-in worst case the flat model underestimates by (p-1)x.
+    pub fn gather_time(&self, p: usize, bytes: f64) -> f64 {
+        let flows: Vec<(usize, usize, f64)> =
+            (1..p).map(|src| (src, 0usize, bytes)).collect();
+        self.flows_time(&flows)
+    }
+
+    /// Pairwise ring shift (rank i -> i+1): no fan-in, full parallelism.
+    pub fn ring_shift_time(&self, p: usize, bytes: f64) -> f64 {
+        let flows: Vec<(usize, usize, f64)> =
+            (0..p).map(|i| (i, (i + 1) % p, bytes)).collect();
+        self.flows_time(&flows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sw() -> Switch {
+        Switch::monte_cimone()
+    }
+
+    #[test]
+    fn empty_flows_cost_nothing() {
+        assert_eq!(sw().flows_time(&[]), 0.0);
+    }
+
+    #[test]
+    fn single_flow_matches_link_model() {
+        let s = sw();
+        let t = s.flows_time(&[(0, 1, 1e8)]);
+        let expect = s.link.msg_time(1e8);
+        assert!((t - expect).abs() / expect < 0.01, "{t} vs {expect}");
+    }
+
+    #[test]
+    fn fan_in_serializes_on_the_destination_port() {
+        let s = sw();
+        let one = s.flows_time(&[(1, 0, 1e8)]);
+        let four = s.gather_time(5, 1e8);
+        // 4 senders into one port: ~4x one transfer
+        assert!(four > 3.5 * one && four < 4.5 * one, "{four} vs {one}");
+    }
+
+    #[test]
+    fn ring_shift_is_fully_parallel() {
+        let s = sw();
+        let solo = s.flows_time(&[(0, 1, 1e8)]);
+        let ring = s.ring_shift_time(8, 1e8);
+        assert!(ring < 1.1 * solo, "{ring} vs {solo}");
+    }
+
+    #[test]
+    fn disjoint_pairs_run_concurrently() {
+        let s = sw();
+        let t = s.flows_time(&[(0, 1, 1e8), (2, 3, 1e8), (4, 5, 1e8)]);
+        let solo = s.flows_time(&[(0, 1, 1e8)]);
+        assert!((t - solo).abs() / solo < 0.05);
+    }
+
+    #[test]
+    fn oversubscribed_backplane_caps_aggregate() {
+        let mut s = sw();
+        s.backplane_factor = 0.1; // 10:1 oversubscription
+        let parallel = s.flows_time(&[(0, 1, 1e8), (2, 3, 1e8), (4, 5, 1e8), (6, 7, 1e8)]);
+        let nonblocking = sw().flows_time(&[(0, 1, 1e8), (2, 3, 1e8), (4, 5, 1e8), (6, 7, 1e8)]);
+        assert!(parallel > 2.0 * nonblocking, "{parallel} vs {nonblocking}");
+    }
+
+    #[test]
+    #[should_panic(expected = "port out of range")]
+    fn port_bounds_checked() {
+        sw().flows_time(&[(0, 99, 1.0)]);
+    }
+}

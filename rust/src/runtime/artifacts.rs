@@ -1,0 +1,157 @@
+//! Artifact manifest: what `python/compile/aot.py` exported.
+
+use crate::util::json::Json;
+
+/// Shape+dtype of one input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+}
+
+impl TensorMeta {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT entry point.
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: String,
+    pub nb: usize,
+    pub n_gemm: usize,
+    pub n_stream: usize,
+    pub entries: Vec<EntryMeta>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> Result<ArtifactManifest, String> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{path}: {e} (run `make artifacts` first)"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &str, text: &str) -> Result<ArtifactManifest, String> {
+        let j = Json::parse(text)?;
+        let req_usize = |k: &str| {
+            j.get(k).and_then(Json::as_usize).ok_or_else(|| format!("manifest missing `{k}`"))
+        };
+        let tensors = |e: &Json, k: &str| -> Result<Vec<TensorMeta>, String> {
+            e.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("entry missing `{k}`"))?
+                .iter()
+                .map(|t| {
+                    let shape = t
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or("tensor missing shape")?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or("bad dim"))
+                        .collect::<Result<Vec<_>, _>>()?;
+                    Ok(TensorMeta { shape })
+                })
+                .collect()
+        };
+        let entries = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("manifest missing `entries`")?
+            .iter()
+            .map(|e| {
+                Ok(EntryMeta {
+                    name: e.get("name").and_then(Json::as_str).ok_or("entry missing name")?.into(),
+                    file: e.get("file").and_then(Json::as_str).ok_or("entry missing file")?.into(),
+                    inputs: tensors(e, "inputs")?,
+                    outputs: tensors(e, "outputs")?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(ArtifactManifest {
+            dir: dir.to_string(),
+            nb: req_usize("nb")?,
+            n_gemm: req_usize("n_gemm")?,
+            n_stream: req_usize("n_stream")?,
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&EntryMeta> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn path_of(&self, e: &EntryMeta) -> String {
+        format!("{}/{}", self.dir, e.file)
+    }
+
+    /// Default artifact location: `$CIMONE_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> String {
+        std::env::var("CIMONE_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format": 1, "nb": 32, "n_gemm": 256, "n_stream": 1048576,
+        "entries": [
+            {"name": "gemm_256", "file": "gemm_256.hlo.txt", "sha256": "xx",
+             "inputs": [{"shape": [256, 256], "dtype": "f64"},
+                        {"shape": [256, 256], "dtype": "f64"}],
+             "outputs": [{"shape": [256, 256], "dtype": "f64"}]},
+            {"name": "residual_256", "file": "residual_256.hlo.txt",
+             "inputs": [{"shape": [256, 256], "dtype": "f64"},
+                        {"shape": [256], "dtype": "f64"},
+                        {"shape": [256], "dtype": "f64"}],
+             "outputs": [{"shape": [], "dtype": "f64"}]}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse("artifacts", SAMPLE).unwrap();
+        assert_eq!(m.nb, 32);
+        assert_eq!(m.entries.len(), 2);
+        let g = m.entry("gemm_256").unwrap();
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.inputs[0].elems(), 65536);
+        assert_eq!(m.path_of(g), "artifacts/gemm_256.hlo.txt");
+    }
+
+    #[test]
+    fn scalar_output_has_one_elem() {
+        let m = ArtifactManifest::parse("a", SAMPLE).unwrap();
+        let r = m.entry("residual_256").unwrap();
+        assert_eq!(r.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(r.outputs[0].elems(), 1);
+    }
+
+    #[test]
+    fn missing_entry_is_none() {
+        let m = ArtifactManifest::parse("a", SAMPLE).unwrap();
+        assert!(m.entry("nope").is_none());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // exercised for real in integration tests; here only if present
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            let m = ArtifactManifest::load("artifacts").unwrap();
+            assert!(m.entry("gemm_256").is_some());
+            assert!(m.entry("ukernel_lmul4").is_some());
+        }
+    }
+}

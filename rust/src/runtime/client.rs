@@ -1,0 +1,65 @@
+//! PJRT client wrapper: one CPU client, a cache of compiled executables.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::ArtifactManifest;
+use super::executable::LoadedExecutable;
+
+/// The runtime: PJRT client + manifest + compiled-executable cache.
+///
+/// Compilation happens once per entry (first use); execution after that is
+/// pure PJRT with no Python anywhere.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: ArtifactManifest,
+    cache: BTreeMap<String, LoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create against the default artifact dir (`$CIMONE_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn new() -> Result<Runtime> {
+        Self::with_dir(&ArtifactManifest::default_dir())
+    }
+
+    pub fn with_dir(dir: &str) -> Result<Runtime> {
+        let manifest = ArtifactManifest::load(dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: BTreeMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling on first use) the executable for a manifest entry.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let entry = self
+                .manifest
+                .entry(name)
+                .ok_or_else(|| anyhow!("no artifact named `{name}` in manifest"))?
+                .clone();
+            let path = self.manifest.path_of(&entry);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+            self.cache.insert(name.to_string(), LoadedExecutable::new(entry, exe));
+        }
+        Ok(self.cache.get(name).unwrap())
+    }
+
+    /// Execute an entry on f64 buffers (shapes validated vs the manifest).
+    pub fn call(&mut self, name: &str, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        // (borrow dance: load mutates the cache, execute doesn't)
+        self.load(name)?;
+        self.cache.get(name).unwrap().execute_f64(inputs)
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        self.cache.len()
+    }
+}

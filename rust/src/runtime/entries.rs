@@ -1,0 +1,91 @@
+//! Typed convenience wrappers over the AOT entry points — the API the
+//! benchmarks and examples actually call.
+
+use anyhow::{anyhow, Result};
+
+use super::client::Runtime;
+use crate::util::Matrix;
+
+/// C = A @ B via the `gemm_256` artifact (A, B must be n_gemm x n_gemm).
+pub fn gemm(rt: &mut Runtime, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    let n = rt.manifest.n_gemm;
+    check_square(a, n)?;
+    check_square(b, n)?;
+    let out = rt.call("gemm_256", &[&a.to_row_major(), &b.to_row_major()])?;
+    Ok(Matrix::from_row_major(n, n, &out[0]))
+}
+
+/// C -= A @ B via `trailing_update_256`, zero-padding to the artifact's
+/// fixed geometry (padding contributes exact zeros — the property
+/// python/tests/test_model.py::test_zero_padding_invariance proves).
+pub fn trailing_update(rt: &mut Runtime, c: &mut Matrix, a: &Matrix, b: &Matrix) -> Result<()> {
+    let n = rt.manifest.n_gemm;
+    let nb = rt.manifest.nb;
+    let (rows, cols, k) = (c.rows(), c.cols(), a.cols());
+    if rows > n || cols > n || k > nb {
+        return Err(anyhow!(
+            "trailing_update: live region {rows}x{cols} (k={k}) exceeds artifact {n}x{n} (nb={nb})"
+        ));
+    }
+    let mut cp = Matrix::zeros(n, n);
+    cp.set_block(0, 0, c);
+    let mut ap = Matrix::zeros(n, nb);
+    ap.set_block(0, 0, a);
+    let mut bp = Matrix::zeros(nb, n);
+    bp.set_block(0, 0, b);
+    let out = rt.call(
+        "trailing_update_256",
+        &[&cp.to_row_major(), &ap.to_row_major(), &bp.to_row_major()],
+    )?;
+    let full = Matrix::from_row_major(n, n, &out[0]);
+    *c = full.block(0, 0, rows, cols);
+    Ok(())
+}
+
+/// HPL residual numerator max|Ax-b| via `residual_256`.
+pub fn residual_inf(rt: &mut Runtime, a: &Matrix, x: &[f64], b: &[f64]) -> Result<f64> {
+    let n = rt.manifest.n_gemm;
+    check_square(a, n)?;
+    if x.len() != n || b.len() != n {
+        return Err(anyhow!("residual_256 wants vectors of len {n}"));
+    }
+    let out = rt.call("residual_256", &[&a.to_row_major(), x, b])?;
+    Ok(out[0][0])
+}
+
+/// One STREAM kernel via its artifact; returns the output array.
+pub fn stream(rt: &mut Runtime, kernel: &str, a: &[f64], b: Option<&[f64]>) -> Result<Vec<f64>> {
+    let name = match kernel {
+        "copy" => "stream_copy",
+        "scale" => "stream_scale",
+        "add" => "stream_add",
+        "triad" => "stream_triad",
+        other => return Err(anyhow!("unknown STREAM kernel `{other}`")),
+    };
+    let needs_two = matches!(kernel, "add" | "triad");
+    let out = match (needs_two, b) {
+        (true, Some(b)) => rt.call(name, &[a, b])?,
+        (false, None) => rt.call(name, &[a])?,
+        _ => return Err(anyhow!("{kernel}: wrong operand count")),
+    };
+    Ok(out.into_iter().next().unwrap())
+}
+
+/// The two micro-kernel artifacts (8x64 @ 64x8 + 8x8 accumulator); used by
+/// the integration tests to tie the Pallas schedules to the Rust ISA ones.
+pub fn ukernel(rt: &mut Runtime, variant: &str, a: &Matrix, b: &Matrix, c: &Matrix) -> Result<Matrix> {
+    let name = match variant {
+        "lmul1" => "ukernel_lmul1",
+        "lmul4" => "ukernel_lmul4",
+        other => return Err(anyhow!("unknown ukernel variant `{other}`")),
+    };
+    let out = rt.call(name, &[&a.to_row_major(), &b.to_row_major(), &c.to_row_major()])?;
+    Ok(Matrix::from_row_major(c.rows(), c.cols(), &out[0]))
+}
+
+fn check_square(m: &Matrix, n: usize) -> Result<()> {
+    if m.rows() != n || m.cols() != n {
+        return Err(anyhow!("expected {n}x{n}, got {}x{}", m.rows(), m.cols()));
+    }
+    Ok(())
+}

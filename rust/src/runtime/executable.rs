@@ -1,0 +1,79 @@
+//! A compiled artifact with typed, shape-checked execution.
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifacts::EntryMeta;
+
+/// One compiled entry point.
+pub struct LoadedExecutable {
+    pub meta: EntryMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedExecutable {
+    pub fn new(meta: EntryMeta, exe: xla::PjRtLoadedExecutable) -> Self {
+        LoadedExecutable { meta, exe }
+    }
+
+    /// Execute on f64 inputs; returns one Vec per declared output.
+    ///
+    /// Inputs are row-major (jax convention); shapes must match the
+    /// manifest exactly — AOT artifacts are shape-specialized.
+    pub fn execute_f64(&self, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (buf, meta)) in inputs.iter().zip(&self.meta.inputs).enumerate() {
+            if buf.len() != meta.elems() {
+                return Err(anyhow!(
+                    "{} input {i}: expected {} elems (shape {:?}), got {}",
+                    self.meta.name,
+                    meta.elems(),
+                    meta.shape,
+                    buf.len()
+                ));
+            }
+            let lit = xla::Literal::vec1(buf);
+            let dims: Vec<i64> = meta.shape.iter().map(|&d| d as i64).collect();
+            let lit = if dims.is_empty() {
+                lit
+            } else {
+                lit.reshape(&dims).with_context(|| format!("reshape input {i}"))?
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple
+        let elems = result.to_tuple()?;
+        if elems.len() != self.meta.outputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} outputs, got {}",
+                self.meta.name,
+                self.meta.outputs.len(),
+                elems.len()
+            ));
+        }
+        let mut out = Vec::with_capacity(elems.len());
+        for (lit, meta) in elems.into_iter().zip(&self.meta.outputs) {
+            let v = lit.to_vec::<f64>().context("output to_vec")?;
+            if v.len() != meta.elems() {
+                return Err(anyhow!(
+                    "{}: output had {} elems, manifest says {}",
+                    self.meta.name,
+                    v.len(),
+                    meta.elems()
+                ));
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+}

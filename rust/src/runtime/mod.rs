@@ -1,0 +1,17 @@
+//! PJRT runtime — the Layer-3 side of the AOT bridge.
+//!
+//! `make artifacts` lowers the JAX/Pallas compute graphs to HLO *text*
+//! (xla_extension 0.5.1 rejects jax>=0.5 serialized protos; the text
+//! parser reassigns instruction ids). This module loads those artifacts
+//! with `xla::PjRtClient::cpu()`, compiles them once, and exposes typed
+//! entry points the benchmarks call on the hot path. Python never runs
+//! here.
+
+pub mod artifacts;
+pub mod client;
+pub mod executable;
+pub mod entries;
+
+pub use artifacts::{ArtifactManifest, EntryMeta};
+pub use client::Runtime;
+pub use executable::LoadedExecutable;

@@ -1,0 +1,65 @@
+//! Core-level allocation within a node: thread pinning policies.
+//!
+//! The paper pins STREAM threads "symmetrically in the two sockets" on the
+//! dual-socket node; HPL ranks get whole nodes. This module captures those
+//! policies so experiments state their pinning explicitly.
+
+use crate::arch::soc::SocDescriptor;
+
+/// How threads map onto a node's sockets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pinning {
+    /// Spread evenly across sockets (paper's best configuration).
+    Symmetric,
+    /// Fill socket 0 first, then socket 1 (OpenMP default without binding).
+    Packed,
+}
+
+/// Threads assigned to each socket under a policy.
+pub fn threads_per_socket(desc: &SocDescriptor, threads: usize, pinning: Pinning) -> Vec<usize> {
+    let n = desc.sockets.len();
+    let mut out = vec![0usize; n];
+    match pinning {
+        Pinning::Symmetric => {
+            for s in 0..n {
+                out[s] = threads / n + usize::from(s < threads % n);
+            }
+        }
+        Pinning::Packed => {
+            let mut left = threads;
+            for (s, sock) in desc.sockets.iter().enumerate() {
+                let take = left.min(sock.cores);
+                out[s] = take;
+                left -= take;
+            }
+            out[0] += left; // oversubscription lands on socket 0
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn symmetric_splits_evenly() {
+        let d = presets::sg2042_dual();
+        assert_eq!(threads_per_socket(&d, 64, Pinning::Symmetric), vec![32, 32]);
+        assert_eq!(threads_per_socket(&d, 65, Pinning::Symmetric), vec![33, 32]);
+    }
+
+    #[test]
+    fn packed_fills_socket_zero_first() {
+        let d = presets::sg2042_dual();
+        assert_eq!(threads_per_socket(&d, 64, Pinning::Packed), vec![64, 0]);
+        assert_eq!(threads_per_socket(&d, 100, Pinning::Packed), vec![64, 36]);
+    }
+
+    #[test]
+    fn packed_oversubscribes_socket_zero() {
+        let d = presets::sg2042();
+        assert_eq!(threads_per_socket(&d, 80, Pinning::Packed), vec![80]);
+    }
+}

@@ -1,0 +1,96 @@
+//! Batch jobs.
+
+/// Job identifier.
+pub type JobId = u64;
+
+/// Lifecycle of a job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum JobState {
+    Pending,
+    Running { start: f64 },
+    Completed { start: f64, end: f64 },
+}
+
+/// A batch job: a resource request plus a (simulated) runtime.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: JobId,
+    pub name: String,
+    pub partition: String,
+    pub nodes: usize,
+    /// Simulated wall-clock the job occupies its nodes for.
+    pub runtime_s: f64,
+    pub submit_s: f64,
+    pub state: JobState,
+    /// Node indices allocated (filled when running).
+    pub allocated: Vec<usize>,
+}
+
+impl Job {
+    pub fn new(
+        id: JobId,
+        name: impl Into<String>,
+        partition: impl Into<String>,
+        nodes: usize,
+        runtime_s: f64,
+        submit_s: f64,
+    ) -> Job {
+        assert!(nodes >= 1);
+        assert!(runtime_s > 0.0);
+        Job {
+            id,
+            name: name.into(),
+            partition: partition.into(),
+            nodes,
+            runtime_s,
+            submit_s,
+            state: JobState::Pending,
+            allocated: vec![],
+        }
+    }
+
+    pub fn is_pending(&self) -> bool {
+        matches!(self.state, JobState::Pending)
+    }
+
+    pub fn end_time(&self) -> Option<f64> {
+        match self.state {
+            JobState::Running { start } => Some(start + self.runtime_s),
+            JobState::Completed { end, .. } => Some(end),
+            JobState::Pending => None,
+        }
+    }
+
+    /// Queue wait time, defined once the job has started.
+    pub fn wait_time(&self) -> Option<f64> {
+        match self.state {
+            JobState::Running { start } | JobState::Completed { start, .. } => {
+                Some(start - self.submit_s)
+            }
+            JobState::Pending => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_accessors() {
+        let mut j = Job::new(1, "hpl", "mcv2", 2, 100.0, 5.0);
+        assert!(j.is_pending());
+        assert_eq!(j.end_time(), None);
+        j.state = JobState::Running { start: 10.0 };
+        assert_eq!(j.end_time(), Some(110.0));
+        assert_eq!(j.wait_time(), Some(5.0));
+        j.state = JobState::Completed { start: 10.0, end: 110.0 };
+        assert_eq!(j.end_time(), Some(110.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_nodes_rejected() {
+        Job::new(1, "x", "p", 0, 1.0, 0.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! SLURM-like batch scheduler substrate.
+//!
+//! Monte Cimone exposes its MCv1 and MCv2 machines as SLURM partitions;
+//! the multi-node experiments (Fig 5) submit jobs against them. This
+//! module implements the orchestration layer: partitions, a job queue
+//! with FIFO + conservative-backfill scheduling over a simulated-time
+//! event loop, and node allocation tracking.
+
+pub mod allocation;
+pub mod job;
+pub mod partition;
+pub mod scheduler;
+
+pub use job::{Job, JobId, JobState};
+pub use partition::Partition;
+pub use scheduler::Scheduler;

@@ -1,0 +1,145 @@
+//! SLURM-style partitions: named groups of nodes with availability state.
+
+/// Per-node state within a partition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotState {
+    Idle,
+    Busy,
+    /// Drained by the operator / failed (failure injection for tests and
+    /// resilience experiments) — never allocated until marked up.
+    Down,
+}
+
+/// A partition of the cluster (e.g. `mcv1`, `mcv2`).
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub name: String,
+    /// Global node indices belonging to this partition.
+    pub node_ids: Vec<usize>,
+    /// state[i] corresponds to node_ids[i].
+    state: Vec<SlotState>,
+}
+
+impl Partition {
+    pub fn new(name: impl Into<String>, node_ids: Vec<usize>) -> Partition {
+        let n = node_ids.len();
+        Partition { name: name.into(), node_ids, state: vec![SlotState::Idle; n] }
+    }
+
+    /// Schedulable size (up nodes only).
+    pub fn size(&self) -> usize {
+        self.state.iter().filter(|s| **s != SlotState::Down).count()
+    }
+
+    pub fn idle_count(&self) -> usize {
+        self.state.iter().filter(|s| **s == SlotState::Idle).count()
+    }
+
+    /// Mark a node down (failure injection / drain). Busy nodes finish
+    /// their job first in this model (graceful drain); returns false if
+    /// the id is not in this partition.
+    pub fn mark_down(&mut self, id: usize) -> bool {
+        match self.node_ids.iter().position(|n| *n == id) {
+            Some(slot) if self.state[slot] == SlotState::Idle => {
+                self.state[slot] = SlotState::Down;
+                true
+            }
+            Some(_) => false, // busy: cannot hard-down in this model
+            None => false,
+        }
+    }
+
+    /// Return a downed node to service.
+    pub fn mark_up(&mut self, id: usize) -> bool {
+        match self.node_ids.iter().position(|n| *n == id) {
+            Some(slot) if self.state[slot] == SlotState::Down => {
+                self.state[slot] = SlotState::Idle;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Try to allocate `n` nodes; returns their global ids.
+    pub fn allocate(&mut self, n: usize) -> Option<Vec<usize>> {
+        if self.idle_count() < n {
+            return None;
+        }
+        let mut out = Vec::with_capacity(n);
+        for (slot, s) in self.state.iter_mut().enumerate() {
+            if *s == SlotState::Idle {
+                *s = SlotState::Busy;
+                out.push(self.node_ids[slot]);
+                if out.len() == n {
+                    break;
+                }
+            }
+        }
+        Some(out)
+    }
+
+    /// Release nodes by global id.
+    pub fn release(&mut self, ids: &[usize]) {
+        for id in ids {
+            if let Some(slot) = self.node_ids.iter().position(|n| n == id) {
+                if self.state[slot] == SlotState::Busy {
+                    self.state[slot] = SlotState::Idle;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_and_release() {
+        let mut p = Partition::new("mcv2", vec![8, 9, 10, 11]);
+        assert_eq!(p.idle_count(), 4);
+        let got = p.allocate(2).unwrap();
+        assert_eq!(got, vec![8, 9]);
+        assert_eq!(p.idle_count(), 2);
+        assert!(p.allocate(3).is_none());
+        p.release(&got);
+        assert_eq!(p.idle_count(), 4);
+    }
+
+    #[test]
+    fn release_unknown_id_is_harmless() {
+        let mut p = Partition::new("x", vec![1]);
+        p.release(&[99]);
+        assert_eq!(p.idle_count(), 1);
+    }
+
+    #[test]
+    fn downed_node_not_allocated() {
+        let mut p = Partition::new("mcv2", vec![8, 9, 10, 11]);
+        assert!(p.mark_down(9));
+        assert_eq!(p.size(), 3);
+        assert_eq!(p.idle_count(), 3);
+        let got = p.allocate(3).unwrap();
+        assert!(!got.contains(&9));
+        assert!(p.allocate(1).is_none());
+        assert!(p.mark_up(9));
+        assert!(p.allocate(1).unwrap().contains(&9));
+    }
+
+    #[test]
+    fn busy_node_cannot_be_hard_downed() {
+        let mut p = Partition::new("x", vec![1, 2]);
+        let got = p.allocate(1).unwrap();
+        assert!(!p.mark_down(got[0]), "busy nodes drain gracefully");
+        p.release(&got);
+        assert!(p.mark_down(got[0]));
+    }
+
+    #[test]
+    fn release_does_not_resurrect_downed_node() {
+        let mut p = Partition::new("x", vec![1]);
+        p.mark_down(1);
+        p.release(&[1]); // stray release of a downed node
+        assert_eq!(p.idle_count(), 0);
+    }
+}

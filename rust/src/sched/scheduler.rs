@@ -1,0 +1,248 @@
+//! FIFO + conservative-backfill scheduler over simulated time.
+//!
+//! Semantics match SLURM's default behaviour closely enough for the
+//! experiments: jobs are considered in submit order; the head-of-queue
+//! job reserves the earliest time enough nodes free up; later jobs may
+//! backfill onto idle nodes only if they finish before that reservation.
+
+use std::collections::BTreeMap;
+
+use super::job::{Job, JobId, JobState};
+use super::partition::Partition;
+
+/// The scheduler: owns partitions and the job queue.
+pub struct Scheduler {
+    pub partitions: BTreeMap<String, Partition>,
+    pub jobs: Vec<Job>,
+    pub now: f64,
+    next_id: JobId,
+}
+
+impl Scheduler {
+    pub fn new(partitions: Vec<Partition>) -> Scheduler {
+        Scheduler {
+            partitions: partitions.into_iter().map(|p| (p.name.clone(), p)).collect(),
+            jobs: Vec::new(),
+            now: 0.0,
+            next_id: 1,
+        }
+    }
+
+    /// Submit a job at the current simulated time; returns its id.
+    pub fn submit(
+        &mut self,
+        name: &str,
+        partition: &str,
+        nodes: usize,
+        runtime_s: f64,
+    ) -> Result<JobId, String> {
+        let p = self
+            .partitions
+            .get(partition)
+            .ok_or_else(|| format!("no such partition `{partition}`"))?;
+        if nodes > p.size() {
+            return Err(format!(
+                "job `{name}` wants {nodes} nodes, partition `{partition}` has {}",
+                p.size()
+            ));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.jobs.push(Job::new(id, name, partition, nodes, runtime_s, self.now));
+        self.try_start();
+        Ok(id)
+    }
+
+    /// Earliest running-job end time, if any.
+    fn next_completion(&self) -> Option<f64> {
+        self.jobs
+            .iter()
+            .filter_map(|j| match j.state {
+                JobState::Running { .. } => j.end_time(),
+                _ => None,
+            })
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Earliest time `extra` nodes will be free in `partition`, given the
+    /// currently running jobs (the head job's EASY-backfill reservation).
+    fn reservation_time(&self, partition: &str, want: usize) -> f64 {
+        let part = &self.partitions[partition];
+        let mut idle = part.idle_count();
+        if idle >= want {
+            return self.now;
+        }
+        // accumulate releases in end-time order
+        let mut ends: Vec<(f64, usize)> = self
+            .jobs
+            .iter()
+            .filter(|j| j.partition == partition)
+            .filter_map(|j| match j.state {
+                JobState::Running { .. } => j.end_time().map(|e| (e, j.nodes)),
+                _ => None,
+            })
+            .collect();
+        ends.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for (end, nodes) in ends {
+            idle += nodes;
+            if idle >= want {
+                return end;
+            }
+        }
+        f64::INFINITY
+    }
+
+    /// Start every job that can start right now: FIFO head first, then
+    /// EASY backfill (later jobs may jump the queue only if they finish
+    /// before the head job's reservation time).
+    fn try_start(&mut self) {
+        // per-partition head-of-line reservation: (demand, reserved time)
+        let mut hol: BTreeMap<String, f64> = BTreeMap::new();
+        let now = self.now;
+        for idx in 0..self.jobs.len() {
+            if !self.jobs[idx].is_pending() {
+                continue;
+            }
+            let (part_name, want, runtime) = (
+                self.jobs[idx].partition.clone(),
+                self.jobs[idx].nodes,
+                self.jobs[idx].runtime_s,
+            );
+            let head_reservation = hol.get(&part_name).copied();
+            let idle = self.partitions[&part_name].idle_count();
+            let can_start = match head_reservation {
+                None => idle >= want,
+                // backfill window: must complete before the head's start
+                Some(t_res) => idle >= want && now + runtime <= t_res + 1e-9,
+            };
+            if can_start {
+                let part = self.partitions.get_mut(&part_name).unwrap();
+                let alloc = part.allocate(want).expect("idle_count said yes");
+                let job = &mut self.jobs[idx];
+                job.allocated = alloc;
+                job.state = JobState::Running { start: now };
+            } else if head_reservation.is_none() {
+                let t = self.reservation_time(&part_name, want);
+                hol.insert(part_name, t);
+            }
+        }
+    }
+
+    /// Advance simulated time to `t`, completing and starting jobs.
+    pub fn advance_to(&mut self, t: f64) {
+        assert!(t >= self.now);
+        loop {
+            match self.next_completion() {
+                Some(end) if end <= t => {
+                    self.now = end;
+                    // complete everything ending at `end`
+                    let mut released: Vec<(String, Vec<usize>)> = vec![];
+                    for j in self.jobs.iter_mut() {
+                        if let JobState::Running { start } = j.state {
+                            if (start + j.runtime_s - end).abs() < 1e-9 {
+                                j.state = JobState::Completed { start, end };
+                                released.push((j.partition.clone(), j.allocated.clone()));
+                            }
+                        }
+                    }
+                    for (part, ids) in released {
+                        self.partitions.get_mut(&part).unwrap().release(&ids);
+                    }
+                    self.try_start();
+                }
+                _ => break,
+            }
+        }
+        self.now = t;
+    }
+
+    /// Run until all jobs complete; returns the makespan.
+    pub fn drain(&mut self) -> f64 {
+        while let Some(end) = self.next_completion() {
+            self.advance_to(end);
+        }
+        self.now
+    }
+
+    pub fn job(&self, id: JobId) -> Option<&Job> {
+        self.jobs.iter().find(|j| j.id == id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_partition_sched() -> Scheduler {
+        Scheduler::new(vec![
+            Partition::new("mcv1", (0..8).collect()),
+            Partition::new("mcv2", (8..12).collect()),
+        ])
+    }
+
+    #[test]
+    fn fifo_runs_immediately_when_idle() {
+        let mut s = two_partition_sched();
+        let id = s.submit("hpl", "mcv2", 2, 100.0).unwrap();
+        assert!(matches!(s.job(id).unwrap().state, JobState::Running { .. }));
+    }
+
+    #[test]
+    fn queues_when_full_then_starts() {
+        let mut s = two_partition_sched();
+        let a = s.submit("a", "mcv2", 4, 50.0).unwrap();
+        let b = s.submit("b", "mcv2", 4, 50.0).unwrap();
+        assert!(s.job(b).unwrap().is_pending());
+        s.advance_to(50.0);
+        assert!(matches!(s.job(b).unwrap().state, JobState::Running { start } if start == 50.0));
+        assert!(matches!(s.job(a).unwrap().state, JobState::Completed { .. }));
+    }
+
+    #[test]
+    fn backfill_small_job_jumps_queue_safely() {
+        let mut s = two_partition_sched();
+        s.submit("big-running", "mcv2", 3, 100.0).unwrap();
+        let blocked = s.submit("blocked-head", "mcv2", 4, 10.0).unwrap(); // must wait for all 4
+        let small = s.submit("small", "mcv2", 1, 5.0).unwrap();
+        // head job can't start (needs 4, only 1 idle); small one can backfill
+        // because it finishes (t=5) before the head's reservation (t=100)
+        assert!(s.job(blocked).unwrap().is_pending());
+        assert!(matches!(s.job(small).unwrap().state, JobState::Running { .. }));
+        // a long small job must NOT backfill (would delay the head)
+        let long_small = s.submit("long-small", "mcv2", 1, 500.0).unwrap();
+        assert!(s.job(long_small).unwrap().is_pending());
+        // head starts exactly when the big job drains
+        s.advance_to(100.0);
+        assert!(
+            matches!(s.job(blocked).unwrap().state, JobState::Running { start } if start == 100.0)
+        );
+    }
+
+    #[test]
+    fn drain_completes_everything() {
+        let mut s = two_partition_sched();
+        for i in 0..6 {
+            s.submit(&format!("j{i}"), "mcv1", 4, 10.0).unwrap();
+        }
+        let makespan = s.drain();
+        assert!((makespan - 30.0).abs() < 1e-9, "{makespan}"); // 6 jobs, 2 at a time
+        assert!(s.jobs.iter().all(|j| matches!(j.state, JobState::Completed { .. })));
+    }
+
+    #[test]
+    fn submit_validates_partition_and_size() {
+        let mut s = two_partition_sched();
+        assert!(s.submit("x", "gpu", 1, 1.0).is_err());
+        assert!(s.submit("x", "mcv2", 5, 1.0).is_err());
+    }
+
+    #[test]
+    fn wait_times_accumulate_in_fifo_order() {
+        let mut s = two_partition_sched();
+        let a = s.submit("a", "mcv2", 4, 20.0).unwrap();
+        let b = s.submit("b", "mcv2", 4, 20.0).unwrap();
+        s.drain();
+        assert_eq!(s.job(a).unwrap().wait_time(), Some(0.0));
+        assert_eq!(s.job(b).unwrap().wait_time(), Some(20.0));
+    }
+}

@@ -1,0 +1,119 @@
+//! STREAM sweep harness: measures the real kernels on this host AND
+//! projects the RISC-V targets through the DDR model — the two columns
+//! every Fig 3 row needs.
+
+use std::time::Instant;
+
+use super::kernels;
+use crate::arch::soc::SocDescriptor;
+use crate::mem::stream_model::{predict_node_bandwidth, KERNEL_FACTORS};
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    /// Elements per array (stream.c default scale: >= 4x LLC).
+    pub n: usize,
+    /// Repetitions; best-of like stream.c.
+    pub reps: usize,
+    /// Thread counts to report (the projection's x-axis).
+    pub thread_counts: Vec<usize>,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig { n: 1 << 22, reps: 3, thread_counts: vec![1, 2, 4, 8, 16, 32, 64, 128] }
+    }
+}
+
+/// One kernel's outcome.
+#[derive(Debug, Clone)]
+pub struct KernelResult {
+    pub kernel: &'static str,
+    pub host_bytes_per_sec: f64,
+    /// projected (threads, bytes/s) series for the target node
+    pub projected: Vec<(usize, f64)>,
+}
+
+/// Full report.
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    pub results: Vec<KernelResult>,
+    pub validated: bool,
+}
+
+/// Measure host bandwidth of one kernel (best of `reps`).
+fn measure_host(kernel: &'static str, n: usize, reps: usize) -> f64 {
+    let a = vec![1.0_f64; n];
+    let b = vec![2.0_f64; n];
+    let mut out = vec![0.0_f64; n];
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t = Instant::now();
+        match kernel {
+            "copy" => kernels::copy(&mut out, &a),
+            "scale" => kernels::scale(&mut out, &a),
+            "add" => kernels::add(&mut out, &a, &b),
+            "triad" => kernels::triad(&mut out, &a, &b),
+            _ => unreachable!(),
+        }
+        best = best.min(t.elapsed().as_secs_f64());
+        std::hint::black_box(&out);
+    }
+    kernels::bytes_per_elem(kernel) as f64 * n as f64 / best
+}
+
+/// Run the sweep for a target node descriptor.
+pub fn run_sweep(cfg: &StreamConfig, target: &SocDescriptor) -> StreamReport {
+    let validated = kernels::validate_kernels(4096).is_ok();
+    let results = KERNEL_FACTORS
+        .iter()
+        .map(|&(kernel, factor)| {
+            let kernel: &'static str = kernel;
+            let host = measure_host(kernel, cfg.n, cfg.reps);
+            let projected = cfg
+                .thread_counts
+                .iter()
+                .map(|&t| (t, predict_node_bandwidth(target, t, true) * factor))
+                .collect();
+            KernelResult { kernel, host_bytes_per_sec: host, projected }
+        })
+        .collect();
+    StreamReport { results, validated }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    fn tiny() -> StreamConfig {
+        StreamConfig { n: 1 << 14, reps: 1, thread_counts: vec![1, 64] }
+    }
+
+    #[test]
+    fn sweep_produces_all_kernels() {
+        let r = run_sweep(&tiny(), &presets::sg2042());
+        assert!(r.validated);
+        assert_eq!(r.results.len(), 4);
+        for k in &r.results {
+            assert!(k.host_bytes_per_sec > 0.0);
+            assert_eq!(k.projected.len(), 2);
+        }
+    }
+
+    #[test]
+    fn projection_hits_paper_number_at_64_threads() {
+        let r = run_sweep(&tiny(), &presets::sg2042());
+        let copy = &r.results[0];
+        let at64 = copy.projected.iter().find(|(t, _)| *t == 64).unwrap().1;
+        assert!((at64 - 41.9e9).abs() < 1e9, "{at64}");
+    }
+
+    #[test]
+    fn triad_projects_slightly_above_copy() {
+        let r = run_sweep(&tiny(), &presets::sg2042());
+        let copy = r.results[0].projected[1].1;
+        let triad = r.results[3].projected[1].1;
+        assert!(triad > copy);
+    }
+}

@@ -1,0 +1,101 @@
+//! The four STREAM kernels, exactly as stream.c defines them
+//! (FP64, q = 3.0), plus the validation pass stream.c performs.
+
+pub const Q: f64 = 3.0;
+
+/// c[i] = a[i]
+pub fn copy(c: &mut [f64], a: &[f64]) {
+    assert_eq!(c.len(), a.len());
+    c.copy_from_slice(a);
+}
+
+/// b[i] = q * c[i]
+pub fn scale(b: &mut [f64], c: &[f64]) {
+    assert_eq!(b.len(), c.len());
+    for (bo, ci) in b.iter_mut().zip(c) {
+        *bo = Q * ci;
+    }
+}
+
+/// c[i] = a[i] + b[i]
+pub fn add(c: &mut [f64], a: &[f64], b: &[f64]) {
+    assert_eq!(c.len(), a.len());
+    for ((co, ai), bi) in c.iter_mut().zip(a).zip(b) {
+        *co = ai + bi;
+    }
+}
+
+/// a[i] = b[i] + q * c[i]
+pub fn triad(a: &mut [f64], b: &[f64], c: &[f64]) {
+    assert_eq!(a.len(), b.len());
+    for ((ao, bi), ci) in a.iter_mut().zip(b).zip(c) {
+        *ao = bi + Q * ci;
+    }
+}
+
+/// Bytes moved per element per kernel (copy/scale 16, add/triad 24) —
+/// STREAM's own accounting.
+pub fn bytes_per_elem(kernel: &str) -> u64 {
+    match kernel {
+        "copy" | "scale" => 16,
+        "add" | "triad" => 24,
+        other => panic!("unknown STREAM kernel {other}"),
+    }
+}
+
+/// stream.c's end-of-run validation: run the canonical sequence from the
+/// canonical initial values and check the final arrays.
+pub fn validate_kernels(n: usize) -> Result<(), String> {
+    let mut a = vec![1.0; n];
+    let mut b = vec![2.0; n];
+    let mut c = vec![0.0; n];
+    // the canonical iteration: copy, scale, add, triad
+    copy(&mut c, &a);
+    scale(&mut b, &c);
+    let a_snapshot = a.clone();
+    add(&mut c, &a_snapshot, &b);
+    triad(&mut a, &b, &c);
+    // expected: c0=1, b=3, c=1+3=4, a=3+3*4=15
+    for (i, (&ai, (&bi, &ci))) in a.iter().zip(b.iter().zip(c.iter())).enumerate() {
+        if (ai - 15.0).abs() > 1e-13 || (bi - 3.0).abs() > 1e-13 || (ci - 4.0).abs() > 1e-13 {
+            return Err(format!("validation failed at {i}: a={ai} b={bi} c={ci}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_sequence_validates() {
+        validate_kernels(1024).unwrap();
+    }
+
+    #[test]
+    fn triad_formula() {
+        let mut a = vec![0.0; 4];
+        triad(&mut a, &[1.0, 2.0, 3.0, 4.0], &[10.0, 20.0, 30.0, 40.0]);
+        assert_eq!(a, vec![31.0, 62.0, 93.0, 124.0]);
+    }
+
+    #[test]
+    fn add_formula() {
+        let mut c = vec![0.0; 2];
+        add(&mut c, &[1.5, 2.5], &[0.5, 0.5]);
+        assert_eq!(c, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn byte_accounting_matches_stream_c() {
+        assert_eq!(bytes_per_elem("copy"), 16);
+        assert_eq!(bytes_per_elem("triad"), 24);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_kernel_panics() {
+        bytes_per_elem("saxpy");
+    }
+}

@@ -1,0 +1,12 @@
+//! STREAM — McCalpin's memory-bandwidth benchmark (Fig 3).
+//!
+//! [`kernels`] are the real four loops (native Rust; the PJRT-artifact
+//! variants live in [`crate::runtime::stream`]); [`harness`] runs the
+//! sweep and combines measured host behaviour with the DDR model's
+//! RISC-V-target projection.
+
+pub mod harness;
+pub mod kernels;
+
+pub use harness::{run_sweep, StreamConfig, StreamReport};
+pub use kernels::{add, copy, scale, triad, validate_kernels};

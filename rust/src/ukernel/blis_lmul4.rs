@@ -1,0 +1,128 @@
+//! The paper's optimized BLIS micro-kernel — the Fig 2b schedule.
+//!
+//! "We leveraged register grouping by increasing the RVV LMUL parameter
+//! from one to four, with a subsequent remap of data across vector
+//! registers. This adjustment allows a single load operation to populate
+//! four vector registers with an entire column of A, and a single
+//! vfmacc.vf instruction to update a column of AB" (Section 3.3.2).
+//!
+//! Register allocation (LMUL=4 groups):
+//! - v0, v4, v8, v12: C accumulator columns (one group each)
+//! - v16..v19:        current A column (one group)
+//! - f0..f3:          B scalars
+//!
+//! Same data blocking and algorithm as [`super::blis_lmul1`] — only the
+//! instruction schedule changes, which is the paper's point.
+
+use super::layout::PanelLayout;
+use super::registry::{MicroKernel, UkernelId};
+use crate::isa::inst::{Dialect, Inst, Program};
+use crate::isa::rvv::{Lmul, Sew, VType};
+
+pub struct BlisLmul4;
+
+pub const MR: usize = 8;
+pub const NR: usize = 4;
+
+impl MicroKernel for BlisLmul4 {
+    fn id(&self) -> UkernelId {
+        UkernelId::BlisLmul4
+    }
+
+    fn tile(&self) -> (usize, usize) {
+        (MR, NR)
+    }
+
+    fn program(&self, l: PanelLayout) -> Program {
+        assert_eq!((l.mr, l.nr), (MR, NR), "BlisLmul4 is an 8x4 kernel");
+        let mut p = Program::new(Dialect::Rvv10);
+        let mut vt = VType::new(Sew::E64, Lmul::M4);
+        vt.tail_agnostic = true;
+        vt.mask_agnostic = true;
+        p.push(Inst::Vsetvli { avl: MR, vtype: vt });
+
+        // Load C: one grouped load per column.
+        for j in 0..NR {
+            p.push(Inst::Vle { sew: Sew::E64, vd: (j * 4) as u8, addr: l.c_offset(j) });
+        }
+
+        for k in 0..l.kc {
+            // ONE load populates four vector registers with a column of A
+            p.push(Inst::Vle { sew: Sew::E64, vd: 16, addr: l.a_offset(k) });
+            for j in 0..NR {
+                p.push(Inst::Fld { fd: j as u8, addr: l.b_offset(k) + j });
+                // ONE vfmacc.vf updates the whole column of AB
+                p.push(Inst::VfmaccVf { vd: (j * 4) as u8, fs: j as u8, vs2: 16 });
+            }
+            p.push(Inst::Addi);
+            p.push(Inst::Addi);
+            p.push(Inst::Bnez);
+        }
+
+        for j in 0..NR {
+            p.push(Inst::Vse { sew: Sew::E64, vs: (j * 4) as u8, addr: l.c_offset(j) });
+        }
+        p
+    }
+
+    fn host_overhead(&self) -> f64 {
+        // Calibrated: the optimized kernel amortizes packing better (longer
+        // effective inner loop), ~23% outside-kernel time.
+        0.23
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ukernel::blis_lmul1::BlisLmul1;
+    use crate::util::Matrix;
+
+    #[test]
+    fn computes_c_plus_ab() {
+        let k = BlisLmul4;
+        let a = Matrix::random_hpl(MR, 24, 11);
+        let b = Matrix::random_hpl(24, NR, 12);
+        let c = Matrix::random_hpl(MR, NR, 13);
+        let out = k.run(&a, &b, &c, 128).unwrap();
+        let mut want = c.clone();
+        Matrix::gemm_acc(&mut want, &a, &b);
+        assert!(out.allclose(&want, 1e-13, 1e-13));
+    }
+
+    #[test]
+    fn bitwise_identical_to_lmul1() {
+        // The optimization preserves the existing blocking and algorithm:
+        // same rank-1 order, same FP rounding, bit-identical output.
+        let a = Matrix::random_hpl(MR, 32, 21);
+        let b = Matrix::random_hpl(32, NR, 22);
+        let c = Matrix::random_hpl(MR, NR, 23);
+        let o1 = BlisLmul1.run(&a, &b, &c, 128).unwrap();
+        let o4 = BlisLmul4.run(&a, &b, &c, 128).unwrap();
+        assert!(o1.allclose(&o4, 0.0, 0.0), "schedules must round identically");
+    }
+
+    #[test]
+    fn instruction_count_matches_fig2b() {
+        // per k-step: 1 A-load + 4 x (fld + vfmacc) + 3 bookkeeping = 12
+        let kc = 10;
+        let p = BlisLmul4.program(PanelLayout::new(MR, NR, kc));
+        let fixed = 1 + 4 + 4; // vsetvli + C group loads + stores
+        assert_eq!(p.len(), fixed + kc * 12);
+    }
+
+    #[test]
+    fn reduces_instructions_vs_lmul1() {
+        let l = PanelLayout::new(MR, NR, 64);
+        let n1 = BlisLmul1.program(l).len();
+        let n4 = BlisLmul4.program(l).len();
+        // the paper's mechanism: >2x fewer fetched instructions
+        assert!(n4 * 2 < n1, "{n4} vs {n1}");
+    }
+
+    #[test]
+    fn group_alignment_valid() {
+        let p = BlisLmul4.program(PanelLayout::new(MR, NR, 4));
+        assert!(p.validate_register_groups(128).is_ok());
+    }
+}

@@ -1,0 +1,117 @@
+//! Packed-panel memory layout shared by all micro-kernels.
+//!
+//! BLIS packs A into column-major (MR x KC) panels and B into row-major
+//! (KC x NR) panels before entering the micro-kernel; the C tile sits in
+//! the output matrix. We reproduce that layout in the vector machine's
+//! flat f64 memory:
+//!
+//! ```text
+//! [0 .. mr*kc)                 A packed: column k at offset k*mr
+//! [a_len .. a_len + kc*nr)     B packed: row    k at offset k*nr
+//! [b_end .. b_end + mr*nr)     C tile, column-major
+//! ```
+
+use crate::util::Matrix;
+
+/// Geometry + offsets of one micro-kernel invocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PanelLayout {
+    pub mr: usize,
+    pub nr: usize,
+    pub kc: usize,
+}
+
+impl PanelLayout {
+    pub fn new(mr: usize, nr: usize, kc: usize) -> Self {
+        assert!(mr > 0 && nr > 0 && kc > 0);
+        PanelLayout { mr, nr, kc }
+    }
+
+    pub fn a_offset(&self, k: usize) -> usize {
+        k * self.mr
+    }
+
+    pub fn b_offset(&self, k: usize) -> usize {
+        self.mr * self.kc + k * self.nr
+    }
+
+    pub fn c_offset(&self, col: usize) -> usize {
+        self.mr * self.kc + self.kc * self.nr + col * self.mr
+    }
+
+    /// Total f64 words the machine needs.
+    pub fn mem_words(&self) -> usize {
+        self.mr * self.kc + self.kc * self.nr + self.mr * self.nr
+    }
+
+    /// Pack (a, b, c) into a flat memory image.
+    pub fn pack(&self, a: &Matrix, b: &Matrix, c: &Matrix) -> Vec<f64> {
+        assert_eq!((a.rows(), a.cols()), (self.mr, self.kc), "A panel shape");
+        assert_eq!((b.rows(), b.cols()), (self.kc, self.nr), "B panel shape");
+        assert_eq!((c.rows(), c.cols()), (self.mr, self.nr), "C tile shape");
+        let mut mem = vec![0.0; self.mem_words()];
+        for k in 0..self.kc {
+            for i in 0..self.mr {
+                mem[self.a_offset(k) + i] = a[(i, k)];
+            }
+            for j in 0..self.nr {
+                mem[self.b_offset(k) + j] = b[(k, j)];
+            }
+        }
+        for j in 0..self.nr {
+            for i in 0..self.mr {
+                mem[self.c_offset(j) + i] = c[(i, j)];
+            }
+        }
+        mem
+    }
+
+    /// Extract the C tile from a memory image.
+    pub fn unpack_c(&self, mem: &[f64]) -> Matrix {
+        let mut c = Matrix::zeros(self.mr, self.nr);
+        for j in 0..self.nr {
+            for i in 0..self.mr {
+                c[(i, j)] = mem[self.c_offset(j) + i];
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offsets_are_disjoint_and_ordered() {
+        let l = PanelLayout::new(8, 4, 16);
+        assert_eq!(l.a_offset(0), 0);
+        assert_eq!(l.a_offset(15) + 8, 128);
+        assert_eq!(l.b_offset(0), 128);
+        assert_eq!(l.b_offset(15) + 4, 128 + 64);
+        assert_eq!(l.c_offset(0), 192);
+        assert_eq!(l.mem_words(), 128 + 64 + 32);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let l = PanelLayout::new(8, 4, 3);
+        let a = Matrix::random_hpl(8, 3, 1);
+        let b = Matrix::random_hpl(3, 4, 2);
+        let c = Matrix::random_hpl(8, 4, 3);
+        let mem = l.pack(&a, &b, &c);
+        let c2 = l.unpack_c(&mem);
+        assert!(c2.allclose(&c, 0.0, 0.0));
+        // spot-check A packing: column k contiguous
+        assert_eq!(mem[l.a_offset(2) + 5], a[(5, 2)]);
+        assert_eq!(mem[l.b_offset(1) + 3], b[(1, 3)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "A panel shape")]
+    fn pack_validates_shapes() {
+        let l = PanelLayout::new(8, 4, 3);
+        let wrong = Matrix::zeros(4, 3);
+        l.pack(&wrong, &Matrix::zeros(3, 4), &Matrix::zeros(8, 4));
+    }
+}

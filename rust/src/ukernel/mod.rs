@@ -1,0 +1,26 @@
+//! The four GEMM micro-kernels of the paper's evaluation, as instruction
+//! schedules over [`crate::isa`]:
+//!
+//! | name               | paper role                                  |
+//! |--------------------|---------------------------------------------|
+//! | `openblas_generic` | OpenBLAS built for generic RV64 (no RVV)     |
+//! | `openblas_c920`    | OpenBLAS with SG2042-optimized asm kernels   |
+//! | `blis_lmul1`       | BLIS's shipped rv64iv kernel (Fig 2a)        |
+//! | `blis_lmul4`       | the paper's optimized kernel (Fig 2b)        |
+//!
+//! Each generator emits a complete micro-kernel [`Program`] (C-tile loads,
+//! KC rank-1 update steps, C-tile stores) over the packed-panel memory
+//! layout in [`layout`]. The programs EXECUTE for real on the functional
+//! vector machine, and the cycle model turns them into per-core GFLOP/s.
+
+pub mod ablation;
+pub mod analysis;
+pub mod blis_lmul1;
+pub mod blis_lmul4;
+pub mod layout;
+pub mod openblas_c920;
+pub mod openblas_generic;
+pub mod registry;
+
+pub use layout::PanelLayout;
+pub use registry::{MicroKernel, UkernelId};

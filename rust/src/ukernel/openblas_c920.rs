@@ -1,0 +1,142 @@
+//! OpenBLAS's SG2042-optimized DGEMM micro-kernel model.
+//!
+//! The paper's baseline: "an optimized version of OpenBLAS, incorporating
+//! assembly kernels specifically designed for the C920 core and its
+//! vector unit ... compiled with the Xuantie GNU Toolchain" (Section 3.2).
+//!
+//! The real kernel (OpenBLAS `dgemm_kernel_8x4_c920.S`) is hand-scheduled:
+//! LMUL=2 register groups and software-pipelined scalar loads (all four B
+//! scalars are hoisted ahead of the FMA burst, so the in-order core never
+//! stalls on a just-loaded `f` register). That scheduling quality — not a
+//! different algorithm — is why it beats vanilla BLIS.
+//!
+//! Register allocation (LMUL=2 groups):
+//! - v0,v2,v4,v6:  C accumulator columns (8 elements = one m2 group each)
+//! - v16, v18:     current A column (two m2 groups)
+//! - f0..f3:       B scalars (pre-loaded per k-step)
+//!
+//! Dialect: native theadvector (the Xuantie toolchain emits 0.7.1 directly).
+
+use super::layout::PanelLayout;
+use super::registry::{MicroKernel, UkernelId};
+use crate::isa::inst::{Dialect, Inst, Program};
+use crate::isa::rvv::{Lmul, Sew, VType};
+
+pub struct OpenblasC920;
+
+pub const MR: usize = 8;
+pub const NR: usize = 4;
+/// Elements per LMUL=2 group at VLEN=128.
+const GROUP_ELEMS: usize = 4;
+
+impl MicroKernel for OpenblasC920 {
+    fn id(&self) -> UkernelId {
+        UkernelId::OpenblasC920
+    }
+
+    fn tile(&self) -> (usize, usize) {
+        (MR, NR)
+    }
+
+    fn program(&self, l: PanelLayout) -> Program {
+        assert_eq!((l.mr, l.nr), (MR, NR), "OpenblasC920 is an 8x4 kernel");
+        let mut p = Program::new(Dialect::Thead071);
+        let vt = VType::new(Sew::E64, Lmul::M2);
+        p.push(Inst::Vsetvli { avl: GROUP_ELEMS, vtype: vt });
+
+        // C tile: each 8-element column needs two m2 groups; OpenBLAS keeps
+        // only the top half resident and streams the bottom half — we model
+        // the resident half in v0..v7 and reload the rest per store. For
+        // numerics we simply load both halves (2 loads per column).
+        for j in 0..NR {
+            p.push(Inst::Vle { sew: Sew::E64, vd: (j * 2) as u8, addr: l.c_offset(j) });
+            p.push(Inst::Vle {
+                sew: Sew::E64,
+                vd: (8 + j * 2) as u8,
+                addr: l.c_offset(j) + GROUP_ELEMS,
+            });
+        }
+
+        for k in 0..l.kc {
+            // software pipeline: hoist ALL scalar loads first...
+            for j in 0..NR {
+                p.push(Inst::Fld { fd: j as u8, addr: l.b_offset(k) + j });
+            }
+            // ...then the A column (two m2 groups)...
+            p.push(Inst::Vle { sew: Sew::E64, vd: 16, addr: l.a_offset(k) });
+            p.push(Inst::Vle {
+                sew: Sew::E64,
+                vd: 18,
+                addr: l.a_offset(k) + GROUP_ELEMS,
+            });
+            // ...then the FMA burst: two m2 vfmacc per column.
+            for j in 0..NR {
+                p.push(Inst::VfmaccVf { vd: (j * 2) as u8, fs: j as u8, vs2: 16 });
+                p.push(Inst::VfmaccVf { vd: (8 + j * 2) as u8, fs: j as u8, vs2: 18 });
+            }
+            p.push(Inst::Addi);
+            p.push(Inst::Addi);
+            p.push(Inst::Bnez);
+        }
+
+        for j in 0..NR {
+            p.push(Inst::Vse { sew: Sew::E64, vs: (j * 2) as u8, addr: l.c_offset(j) });
+            p.push(Inst::Vse {
+                sew: Sew::E64,
+                vs: (8 + j * 2) as u8,
+                addr: l.c_offset(j) + GROUP_ELEMS,
+            });
+        }
+        p
+    }
+
+    fn host_overhead(&self) -> f64 {
+        // Calibrated: OpenBLAS's level-3 framework + packing costs ~38% on
+        // the SG2042 (its blocking is tuned for x86 cache ratios — exactly
+        // the inefficiency Fig 6 exposes).
+        0.38
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Matrix;
+
+    #[test]
+    fn computes_c_plus_ab() {
+        let k = OpenblasC920;
+        let a = Matrix::random_hpl(MR, 20, 31);
+        let b = Matrix::random_hpl(20, NR, 32);
+        let c = Matrix::random_hpl(MR, NR, 33);
+        let out = k.run(&a, &b, &c, 128).unwrap();
+        let mut want = c.clone();
+        Matrix::gemm_acc(&mut want, &a, &b);
+        assert!(out.allclose(&want, 1e-13, 1e-13));
+    }
+
+    #[test]
+    fn is_native_thead() {
+        let p = OpenblasC920.program(PanelLayout::new(MR, NR, 2));
+        assert_eq!(p.dialect, Dialect::Thead071);
+    }
+
+    #[test]
+    fn flds_are_hoisted_before_fmas() {
+        // the software-pipelining property the cycle model rewards
+        let p = OpenblasC920.program(PanelLayout::new(MR, NR, 1));
+        let insts = &p.insts;
+        let first_fma = insts.iter().position(|i| matches!(i, Inst::VfmaccVf { .. })).unwrap();
+        let last_fld = insts.iter().rposition(|i| matches!(i, Inst::Fld { .. })).unwrap();
+        assert!(last_fld < first_fma, "flds must precede the FMA burst");
+    }
+
+    #[test]
+    fn per_kstep_instruction_count() {
+        // 4 fld + 2 vle + 8 vfmacc + 3 bookkeeping = 17 per k-step
+        let kc = 7;
+        let p = OpenblasC920.program(PanelLayout::new(MR, NR, kc));
+        let fixed = 1 + 8 + 8;
+        assert_eq!(p.len(), fixed + kc * 17);
+    }
+}

@@ -1,0 +1,107 @@
+//! Micro-kernel trait + registry.
+
+use super::layout::PanelLayout;
+use crate::isa::exec::VecMachine;
+use crate::isa::inst::Program;
+use crate::util::Matrix;
+
+/// Identifier for the four kernels of the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UkernelId {
+    OpenblasGeneric,
+    OpenblasC920,
+    BlisLmul1,
+    BlisLmul4,
+}
+
+impl UkernelId {
+    pub fn all() -> [UkernelId; 4] {
+        [
+            UkernelId::OpenblasGeneric,
+            UkernelId::OpenblasC920,
+            UkernelId::BlisLmul1,
+            UkernelId::BlisLmul4,
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            UkernelId::OpenblasGeneric => "OpenBLAS (generic RV64)",
+            UkernelId::OpenblasC920 => "OpenBLAS (C920-optimized)",
+            UkernelId::BlisLmul1 => "BLIS (vanilla RVV, LMUL=1)",
+            UkernelId::BlisLmul4 => "BLIS (optimized, LMUL=4)",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<UkernelId> {
+        match s {
+            "openblas-generic" | "generic" => Some(UkernelId::OpenblasGeneric),
+            "openblas" | "openblas-opt" | "openblas-c920" => Some(UkernelId::OpenblasC920),
+            "blis" | "blis-vanilla" | "blis-lmul1" => Some(UkernelId::BlisLmul1),
+            "blis-opt" | "blis-lmul4" => Some(UkernelId::BlisLmul4),
+            _ => None,
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn MicroKernel> {
+        match self {
+            UkernelId::OpenblasGeneric => Box::new(super::openblas_generic::OpenblasGeneric),
+            UkernelId::OpenblasC920 => Box::new(super::openblas_c920::OpenblasC920),
+            UkernelId::BlisLmul1 => Box::new(super::blis_lmul1::BlisLmul1),
+            UkernelId::BlisLmul4 => Box::new(super::blis_lmul4::BlisLmul4),
+        }
+    }
+}
+
+/// A GEMM micro-kernel: generates an instruction schedule for C += A*B on
+/// packed (MR x KC) x (KC x NR) panels.
+pub trait MicroKernel {
+    fn id(&self) -> UkernelId;
+
+    /// Native register-tile geometry (mr, nr).
+    fn tile(&self) -> (usize, usize);
+
+    /// Emit the full micro-kernel program for KC rank-1 update steps.
+    fn program(&self, layout: PanelLayout) -> Program;
+
+    /// Fraction of end-to-end DGEMM time spent *outside* this kernel
+    /// (packing, edge tiles, BLAS framework dispatch). Calibrated per
+    /// library — see EXPERIMENTS.md 'Calibration'.
+    fn host_overhead(&self) -> f64;
+
+    /// Execute the kernel on real data via the functional machine.
+    /// Returns the updated C tile.
+    fn run(&self, a: &Matrix, b: &Matrix, c: &Matrix, vlen_bits: usize) -> Result<Matrix, String> {
+        let (mr, nr) = self.tile();
+        let layout = PanelLayout::new(mr, nr, a.cols());
+        let prog = self.program(layout);
+        let mut m = VecMachine::new(vlen_bits, layout.mem_words());
+        m.mem = layout.pack(a, b, c);
+        m.run(&prog)?;
+        Ok(layout.unpack_c(&m.mem))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(UkernelId::parse("blis-opt"), Some(UkernelId::BlisLmul4));
+        assert_eq!(UkernelId::parse("openblas"), Some(UkernelId::OpenblasC920));
+        assert_eq!(UkernelId::parse("generic"), Some(UkernelId::OpenblasGeneric));
+        assert_eq!(UkernelId::parse("mkl"), None);
+    }
+
+    #[test]
+    fn all_build() {
+        for id in UkernelId::all() {
+            let k = id.build();
+            assert_eq!(k.id(), id);
+            let (mr, nr) = k.tile();
+            assert!(mr > 0 && nr > 0);
+            assert!((0.0..1.0).contains(&k.host_overhead()));
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! In-house micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Used by every target in `rust/benches/` (all declared `harness = false`)
+//! and by the §Perf optimization loop. Methodology: warmup runs, then N
+//! timed samples of K iterations each; reports median ± spread so one-off
+//! scheduler hiccups don't skew the comparison.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Seconds per iteration (median across samples).
+    pub secs_per_iter: f64,
+    pub summary: Summary,
+    pub iters_per_sample: u64,
+}
+
+impl Measurement {
+    /// Derived throughput given work-per-iteration.
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.secs_per_iter
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (n={}, cv={:.1}%)",
+            self.name,
+            crate::util::units::fmt_secs(self.secs_per_iter),
+            self.summary.n,
+            self.summary.cv() * 100.0
+        )
+    }
+}
+
+/// Benchmark runner with tunable sampling.
+pub struct Bench {
+    pub warmup_iters: u64,
+    pub samples: usize,
+    pub min_sample_secs: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 3, samples: 10, min_sample_secs: 0.05 }
+    }
+}
+
+impl Bench {
+    /// Quick preset for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Bench { warmup_iters: 1, samples: 3, min_sample_secs: 0.01 }
+    }
+
+    /// Time `f`, auto-calibrating iterations per sample so each sample
+    /// runs at least `min_sample_secs`.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        // calibrate
+        let mut iters: u64 = 1;
+        loop {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let el = t.elapsed().as_secs_f64();
+            if el >= self.min_sample_secs || iters >= 1 << 20 {
+                break;
+            }
+            let scale = (self.min_sample_secs / el.max(1e-9)).ceil() as u64;
+            iters = (iters * scale.clamp(2, 100)).min(1 << 20);
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters as f64);
+        }
+        let summary = Summary::of(&samples);
+        Measurement {
+            name: name.to_string(),
+            secs_per_iter: summary.median,
+            summary,
+            iters_per_sample: iters,
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value (std::hint's
+/// black_box is stable since 1.66; thin wrapper for uniformity).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bench { warmup_iters: 1, samples: 3, min_sample_secs: 0.001 };
+        let mut acc = 0u64;
+        let m = b.run("spin", || {
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(m.secs_per_iter > 0.0);
+        assert!(m.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn throughput_inverts_time() {
+        let m = Measurement {
+            name: "x".into(),
+            secs_per_iter: 0.5,
+            summary: Summary::of(&[0.5]),
+            iters_per_sample: 1,
+        };
+        assert!((m.throughput(10.0) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ordering_detects_slower_code() {
+        let b = Bench { warmup_iters: 1, samples: 3, min_sample_secs: 0.002 };
+        let fast = b.run("fast", || {
+            black_box((0..100u64).sum::<u64>());
+        });
+        let slow = b.run("slow", || {
+            black_box((0..20_000u64).sum::<u64>());
+        });
+        assert!(slow.secs_per_iter > fast.secs_per_iter);
+    }
+}

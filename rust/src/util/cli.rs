@@ -1,0 +1,135 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `cimone <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare `--` not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected integer, got `{v}`")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected float, got `{v}`")),
+        }
+    }
+
+    /// Comma-separated usize list (e.g. `--cores 1,8,16,32,64`).
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| t.trim().parse().map_err(|_| format!("--{name}: bad entry `{t}`")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse(&["hpl", "extra"]);
+        assert_eq!(a.subcommand.as_deref(), Some("hpl"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn options_space_and_equals() {
+        let a = parse(&["hpl", "--cores", "64", "--lib=blis-opt"]);
+        assert_eq!(a.get("cores"), Some("64"));
+        assert_eq!(a.get("lib"), Some("blis-opt"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["stream", "--pjrt"]);
+        assert!(a.flag("pjrt"));
+        assert!(!a.flag("other"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--verbose", "--dry-run"]);
+        assert!(a.flag("verbose") && a.flag("dry-run"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["x", "--n", "100", "--f", "2.5", "--cores", "1,2,4"]);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 100);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!((a.get_f64("f", 0.0).unwrap() - 2.5).abs() < 1e-12);
+        assert_eq!(a.get_usize_list("cores", &[]).unwrap(), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! TOML-subset configuration parser (serde/toml are unavailable offline).
+//!
+//! Supports the subset our cluster/experiment configs need:
+//! `[section]` headers, `key = value` with string/int/float/bool values,
+//! flat arrays of those, `#` comments, and `[[section]]` table arrays
+//! (used for node inventories).
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// One `[section]`: ordered key/value map.
+pub type Section = BTreeMap<String, Value>;
+
+/// Parsed config: named sections plus repeated `[[name]]` table arrays.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    pub sections: BTreeMap<String, Section>,
+    pub table_arrays: BTreeMap<String, Vec<Section>>,
+}
+
+impl Config {
+    /// Parse from text; line-based, returns the first error with its line.
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        // current destination: (is_array, name)
+        let mut cur: Option<(bool, String)> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+                let name = name.trim().to_string();
+                cfg.table_arrays.entry(name.clone()).or_default().push(Section::new());
+                cur = Some((true, name));
+            } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim().to_string();
+                cfg.sections.entry(name.clone()).or_default();
+                cur = Some((false, name));
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim().to_string();
+                let val = parse_value(v.trim())
+                    .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+                let dest = match &cur {
+                    Some((true, name)) => {
+                        cfg.table_arrays.get_mut(name).unwrap().last_mut().unwrap()
+                    }
+                    Some((false, name)) => cfg.sections.get_mut(name).unwrap(),
+                    None => cfg.sections.entry(String::new()).or_default(),
+                };
+                dest.insert(key, val);
+            } else {
+                return Err(format!("line {}: unparseable `{line}`", lineno + 1));
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Config::parse(&text)
+    }
+
+    pub fn section(&self, name: &str) -> Option<&Section> {
+        self.sections.get(name)
+    }
+
+    /// Typed lookup with a dotted path `section.key`.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        let (sec, key) = path.split_once('.')?;
+        self.sections.get(sec)?.get(key)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but sufficient: `#` outside quotes ends the line
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(tok: &str) -> Result<Value, String> {
+    if tok.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = tok.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if tok == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if tok == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = tok.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            inner.split(',').map(|t| parse_value(t.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    if let Ok(i) = tok.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = tok.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value `{tok}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# cluster definition
+[cluster]
+name = "monte-cimone"
+nodes = 12
+eth_gbps = 1.0
+monitoring = true
+core_counts = [1, 8, 16]
+
+[[node]]
+name = "mcv1-01"
+soc = "u740"
+
+[[node]]
+name = "mcv2-01"
+soc = "sg2042"
+sockets = 2
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("cluster.name").unwrap().as_str(), Some("monte-cimone"));
+        assert_eq!(c.get("cluster.nodes").unwrap().as_int(), Some(12));
+        assert_eq!(c.get("cluster.eth_gbps").unwrap().as_float(), Some(1.0));
+        assert_eq!(c.get("cluster.monitoring").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let c = Config::parse(SAMPLE).unwrap();
+        match c.get("cluster.core_counts").unwrap() {
+            Value::Array(v) => {
+                assert_eq!(v.len(), 3);
+                assert_eq!(v[1].as_int(), Some(8));
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_table_arrays() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let nodes = &c.table_arrays["node"];
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(nodes[0]["soc"].as_str(), Some("u740"));
+        assert_eq!(nodes[1]["sockets"].as_int(), Some(2));
+    }
+
+    #[test]
+    fn comments_stripped_but_not_in_strings() {
+        let c = Config::parse("[s]\nk = \"a#b\" # trailing\n").unwrap();
+        assert_eq!(c.get("s.k").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn int_vs_float_distinction() {
+        let c = Config::parse("[s]\ni = 3\nf = 3.5\n").unwrap();
+        assert_eq!(c.get("s.i").unwrap().as_int(), Some(3));
+        assert_eq!(c.get("s.i").unwrap().as_float(), Some(3.0)); // int coerces
+        assert_eq!(c.get("s.f").unwrap().as_float(), Some(3.5));
+        assert_eq!(c.get("s.f").unwrap().as_int(), None);
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let err = Config::parse("[s]\nnot a kv\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn empty_array() {
+        let c = Config::parse("[s]\na = []\n").unwrap();
+        assert_eq!(c.get("s.a").unwrap(), &Value::Array(vec![]));
+    }
+}

@@ -1,0 +1,317 @@
+//! Column-major dense `f64` matrix — the in-memory format of HPL/BLAS.
+//!
+//! Column-major because the paper's whole pipeline (HPL, OpenBLAS, BLIS)
+//! is Fortran-layout; keeping the same layout means our address-trace
+//! generator (cache::trace) walks memory in exactly the order the real
+//! libraries do.
+
+use crate::util::rng::Rng;
+
+/// Dense column-major matrix of f64.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    /// Leading dimension (>= rows); data[i + j*ld].
+    ld: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, ld: rows.max(1), data: vec![0.0; rows.max(1) * cols] }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// HPL-style random fill, uniform in [-0.5, 0.5).
+    pub fn random_hpl(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        let mut rng = Rng::new(seed);
+        rng.fill_hpl(&mut m.data);
+        m
+    }
+
+    /// Diagonally dominant random matrix (always nonsingular; what our
+    /// LU tests factor when they want guaranteed stability).
+    pub fn random_dd(n: usize, seed: u64) -> Self {
+        let mut m = Matrix::random_hpl(n, n, seed);
+        for i in 0..n {
+            m[(i, i)] += n as f64;
+        }
+        m
+    }
+
+    /// Build from a row-major slice (test convenience).
+    pub fn from_rows(rows: usize, cols: usize, vals: &[f64]) -> Self {
+        assert_eq!(vals.len(), rows * cols);
+        let mut m = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = vals[i * cols + j];
+            }
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn ld(&self) -> usize {
+        self.ld
+    }
+
+    /// Raw column-major storage.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Flatten to row-major (the layout the PJRT artifacts expect —
+    /// jax arrays are row-major).
+    pub fn to_row_major(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.rows * self.cols);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.push(self[(i, j)]);
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`to_row_major`].
+    pub fn from_row_major(rows: usize, cols: usize, vals: &[f64]) -> Self {
+        Self::from_rows(rows, cols, vals)
+    }
+
+    /// C += A * B, naive triple loop (jki order, column-major friendly).
+    /// The reference semantics every optimized path is tested against.
+    pub fn gemm_acc(c: &mut Matrix, a: &Matrix, b: &Matrix) {
+        assert_eq!(a.cols, b.rows);
+        assert_eq!(c.rows, a.rows);
+        assert_eq!(c.cols, b.cols);
+        for j in 0..b.cols {
+            for k in 0..a.cols {
+                let bkj = b[(k, j)];
+                if bkj == 0.0 {
+                    continue;
+                }
+                for i in 0..a.rows {
+                    c[(i, j)] += a[(i, k)] * bkj;
+                }
+            }
+        }
+    }
+
+    /// C -= A * B, slice-based inner loop (the HPL trailing-update hot
+    /// path — no temporaries, auto-vectorizable i-loop over contiguous
+    /// column storage).
+    pub fn gemm_sub(c: &mut Matrix, a: &Matrix, b: &Matrix) {
+        assert_eq!(a.cols, b.rows);
+        assert_eq!(c.rows, a.rows);
+        assert_eq!(c.cols, b.cols);
+        let m = a.rows;
+        let (ald, cld) = (a.ld, c.ld);
+        for j in 0..b.cols {
+            let ccol = &mut c.data[j * cld..j * cld + m];
+            for k in 0..a.cols {
+                let bkj = b[(k, j)];
+                if bkj == 0.0 {
+                    continue;
+                }
+                let acol = &a.data[k * ald..k * ald + m];
+                for i in 0..m {
+                    ccol[i] -= acol[i] * bkj;
+                }
+            }
+        }
+    }
+
+    /// y = A * x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for j in 0..self.cols {
+            let xj = x[j];
+            for i in 0..self.rows {
+                y[i] += self[(i, j)] * xj;
+            }
+        }
+        y
+    }
+
+    /// Copy a rectangular block into a new matrix.
+    pub fn block(&self, i0: usize, j0: usize, rows: usize, cols: usize) -> Matrix {
+        assert!(i0 + rows <= self.rows && j0 + cols <= self.cols);
+        let mut m = Matrix::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                m[(i, j)] = self[(i0 + i, j0 + j)];
+            }
+        }
+        m
+    }
+
+    /// Write a block back.
+    pub fn set_block(&mut self, i0: usize, j0: usize, src: &Matrix) {
+        assert!(i0 + src.rows <= self.rows && j0 + src.cols <= self.cols);
+        for j in 0..src.cols {
+            for i in 0..src.rows {
+                self[(i0 + i, j0 + j)] = src[(i, j)];
+            }
+        }
+    }
+
+    /// Swap rows r1 and r2 over columns [j0, j1).
+    pub fn swap_rows(&mut self, r1: usize, r2: usize, j0: usize, j1: usize) {
+        if r1 == r2 {
+            return;
+        }
+        for j in j0..j1 {
+            let t = self[(r1, j)];
+            self[(r1, j)] = self[(r2, j)];
+            self[(r2, j)] = t;
+        }
+    }
+
+    /// max |a_ij| (infinity norm of the element set, used by the HPL
+    /// residual check denominator).
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0_f64, |m, v| m.max(v.abs()))
+    }
+
+    /// Frobenius-ish elementwise comparison.
+    pub fn allclose(&self, other: &Matrix, rtol: f64, atol: f64) -> bool {
+        if self.rows != other.rows || self.cols != other.cols {
+            return false;
+        }
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                let (x, y) = (self[(i, j)], other[(i, j)]);
+                if (x - y).abs() > atol + rtol * y.abs() {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i + j * self.ld]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i + j * self.ld]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip() {
+        let mut m = Matrix::zeros(3, 2);
+        m[(2, 1)] = 5.0;
+        assert_eq!(m[(2, 1)], 5.0);
+        assert_eq!(m.as_slice()[2 + 3], 5.0); // column-major position
+    }
+
+    #[test]
+    fn eye_matvec_is_identity() {
+        let m = Matrix::eye(4);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(m.matvec(&x), x);
+    }
+
+    #[test]
+    fn gemm_small_known() {
+        // [[1,2],[3,4]] * [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = Matrix::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_rows(2, 2, &[5.0, 6.0, 7.0, 8.0]);
+        let mut c = Matrix::zeros(2, 2);
+        Matrix::gemm_acc(&mut c, &a, &b);
+        assert_eq!(c, Matrix::from_rows(2, 2, &[19.0, 22.0, 43.0, 50.0]));
+    }
+
+    #[test]
+    fn gemm_accumulates() {
+        let a = Matrix::eye(2);
+        let b = Matrix::eye(2);
+        let mut c = Matrix::eye(2);
+        Matrix::gemm_acc(&mut c, &a, &b);
+        assert_eq!(c[(0, 0)], 2.0);
+        assert_eq!(c[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn block_and_set_block_roundtrip() {
+        let m = Matrix::random_hpl(6, 6, 1);
+        let b = m.block(2, 3, 3, 2);
+        let mut m2 = Matrix::zeros(6, 6);
+        m2.set_block(2, 3, &b);
+        assert_eq!(m2[(2, 3)], m[(2, 3)]);
+        assert_eq!(m2[(4, 4)], m[(4, 4)]);
+        assert_eq!(m2[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn swap_rows_partial_range() {
+        let mut m = Matrix::from_rows(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        m.swap_rows(0, 1, 1, 3);
+        assert_eq!(m[(0, 0)], 1.0); // untouched column
+        assert_eq!(m[(0, 1)], 5.0);
+        assert_eq!(m[(1, 2)], 3.0);
+    }
+
+    #[test]
+    fn row_major_roundtrip() {
+        let m = Matrix::random_hpl(5, 7, 3);
+        let rm = m.to_row_major();
+        let back = Matrix::from_row_major(5, 7, &rm);
+        assert!(back.allclose(&m, 0.0, 0.0));
+    }
+
+    #[test]
+    fn random_dd_is_diagonally_dominant() {
+        let m = Matrix::random_dd(16, 9);
+        for i in 0..16 {
+            let off: f64 = (0..16).filter(|&j| j != i).map(|j| m[(i, j)].abs()).sum();
+            assert!(m[(i, i)].abs() > off);
+        }
+    }
+
+    #[test]
+    fn allclose_detects_difference() {
+        let a = Matrix::eye(3);
+        let mut b = Matrix::eye(3);
+        assert!(a.allclose(&b, 1e-12, 1e-12));
+        b[(1, 1)] += 1e-6;
+        assert!(!a.allclose(&b, 1e-12, 1e-12));
+    }
+}

@@ -1,0 +1,17 @@
+//! In-house substrates the offline build cannot pull from crates.io:
+//! PRNG, CLI parsing, config files, ASCII tables/plots, stats, a bench
+//! harness and a mini property-testing framework.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod matrix;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;
+
+pub use matrix::Matrix;
+pub use rng::Rng;

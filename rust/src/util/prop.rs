@@ -1,0 +1,127 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! `forall` draws `cases` random inputs from a generator and checks a
+//! property; on failure it retries with 16 fresh draws of decreasing
+//! "size" (shrink-lite) and reports the smallest failing case it saw.
+
+use crate::util::rng::Rng;
+
+/// Generator: draws a value of the given size class from the RNG.
+pub trait Gen<T> {
+    fn gen(&self, rng: &mut Rng, size: usize) -> T;
+}
+
+impl<T, F: Fn(&mut Rng, usize) -> T> Gen<T> for F {
+    fn gen(&self, rng: &mut Rng, size: usize) -> T {
+        self(rng, size)
+    }
+}
+
+/// Result of a property run.
+#[derive(Debug)]
+pub enum PropResult<T> {
+    Pass { cases: usize },
+    Fail { case: T, seed: u64, message: String },
+}
+
+/// Run `prop` on `cases` random draws. Deterministic for a given seed.
+pub fn forall<T: Clone + std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    gen: impl Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) -> PropResult<T> {
+    let mut rng = Rng::new(seed);
+    for case_idx in 0..cases {
+        // size grows with the case index so we probe small inputs first
+        let size = 1 + case_idx * 4 / cases.max(1) * 8 + case_idx % 8;
+        let value = gen.gen(&mut rng, size);
+        if let Err(message) = prop(&value) {
+            // shrink-lite: try smaller sizes to find a more minimal failure
+            let mut best = (value, message);
+            for s in (1..size).rev().take(16) {
+                let cand = gen.gen(&mut rng, s);
+                if let Err(m) = prop(&cand) {
+                    best = (cand, m);
+                }
+            }
+            return PropResult::Fail { case: best.0, seed, message: best.1 };
+        }
+    }
+    PropResult::Pass { cases }
+}
+
+/// Assert helper: panics with the failing case on property violation.
+pub fn check<T: Clone + std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: impl Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    match forall(seed, cases, gen, prop) {
+        PropResult::Pass { .. } => {}
+        PropResult::Fail { case, seed, message } => {
+            panic!("property `{name}` failed (seed={seed}): {message}\ncase: {case:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let r = forall(
+            1,
+            100,
+            |rng: &mut Rng, size: usize| rng.range_usize(0, size.max(1) + 1),
+            |&x| if x < 1_000_000 { Ok(()) } else { Err("too big".into()) },
+        );
+        matches!(r, PropResult::Pass { .. })
+            .then_some(())
+            .expect("should pass");
+    }
+
+    #[test]
+    fn failing_property_reports_case() {
+        let r = forall(
+            2,
+            100,
+            |rng: &mut Rng, _| rng.range_usize(0, 100),
+            |&x| if x < 5 { Ok(()) } else { Err(format!("{x} >= 5")) },
+        );
+        match r {
+            PropResult::Fail { case, .. } => assert!(case >= 5),
+            _ => panic!("should fail"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "property `demo` failed")]
+    fn check_panics_with_name() {
+        check(
+            "demo",
+            3,
+            50,
+            |rng: &mut Rng, _| rng.range_usize(0, 10),
+            |_| Err("always".into()),
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let gen = |rng: &mut Rng, _: usize| rng.next_u64();
+        let collect = |seed| {
+            let out = std::cell::RefCell::new(vec![]);
+            let _ = forall(seed, 10, gen, |&v| {
+                out.borrow_mut().push(v);
+                Ok(())
+            });
+            out.into_inner()
+        };
+        assert_eq!(collect(7), collect(7));
+        assert_ne!(collect(7), collect(8));
+    }
+}

@@ -1,0 +1,130 @@
+//! Summary statistics for benchmark samples and monitoring series.
+
+/// Online/batch summary of a sample set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+}
+
+impl Summary {
+    /// Compute a summary; panics on an empty slice.
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of on empty sample set");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Summary {
+            n,
+            mean,
+            stddev: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            median,
+        }
+    }
+
+    /// Coefficient of variation (stddev/mean), 0 for degenerate samples.
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.stddev / self.mean.abs()
+        }
+    }
+}
+
+/// HPL FLOP count for an N×N solve: 2/3 N^3 + 3/2 N^2 (netlib formula).
+pub fn hpl_flops(n: usize) -> f64 {
+    let nf = n as f64;
+    (2.0 / 3.0) * nf * nf * nf + 1.5 * nf * nf
+}
+
+/// GEMM FLOP count (multiply-add pairs counted as 2).
+pub fn gemm_flops(m: usize, n: usize, k: usize) -> f64 {
+    2.0 * m as f64 * n as f64 * k as f64
+}
+
+/// Convert (flops, seconds) to GFLOP/s.
+pub fn gflops(flops: f64, seconds: f64) -> f64 {
+    assert!(seconds > 0.0);
+    flops / seconds / 1e9
+}
+
+/// Geometric mean (used for cross-experiment speedup aggregation).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty() && xs.iter().all(|&x| x > 0.0));
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.median - 2.5).abs() < 1e-12);
+        assert!((s.stddev - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single_sample() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.median, 7.0);
+    }
+
+    #[test]
+    fn odd_median() {
+        assert_eq!(Summary::of(&[3.0, 1.0, 2.0]).median, 2.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_panics() {
+        Summary::of(&[]);
+    }
+
+    #[test]
+    fn hpl_flops_formula() {
+        // N=1000: 2/3e9 + 1.5e6
+        let f = hpl_flops(1000);
+        assert!((f - (2.0 / 3.0 * 1e9 + 1.5e6)).abs() < 1.0);
+    }
+
+    #[test]
+    fn gemm_flops_square() {
+        assert_eq!(gemm_flops(10, 10, 10), 2000.0);
+    }
+
+    #[test]
+    fn gflops_conversion() {
+        assert!((gflops(2e9, 1.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_of_speedups() {
+        let g = geomean(&[2.0, 8.0]);
+        assert!((g - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,163 @@
+//! ASCII table + horizontal bar-chart renderers.
+//!
+//! Every paper figure we regenerate is printed through these, so bench
+//! output is directly comparable with the paper's plots (same rows/series).
+
+/// Simple aligned-column table.
+#[derive(Debug, Default)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Self {
+        Table { headers: headers.into_iter().map(Into::into).collect(), rows: vec![] }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with column alignment; first column left, rest right.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                if i == 0 {
+                    line += &format!(" {:<w$} |", cells[i], w = widths[i]);
+                } else {
+                    line += &format!(" {:>w$} |", cells[i], w = widths[i]);
+                }
+            }
+            line
+        };
+        let sep = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s += &"-".repeat(w + 2);
+                s.push('+');
+            }
+            s
+        };
+        out += &sep;
+        out.push('\n');
+        out += &fmt_row(&self.headers, &widths);
+        out.push('\n');
+        out += &sep;
+        out.push('\n');
+        for row in &self.rows {
+            out += &fmt_row(row, &widths);
+            out.push('\n');
+        }
+        out += &sep;
+        out
+    }
+}
+
+/// Horizontal bar chart (one bar per labelled value) — stands in for the
+/// paper's bar figures (Figs 3, 5, 7).
+pub fn bar_chart(title: &str, entries: &[(String, f64)], unit: &str, width: usize) -> String {
+    let max = entries.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max).max(1e-30);
+    let label_w = entries.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = format!("== {title} ==\n");
+    for (label, v) in entries {
+        let n = ((v / max) * width as f64).round() as usize;
+        out += &format!("{label:<label_w$} | {:<width$} {v:.1} {unit}\n", "#".repeat(n));
+    }
+    out
+}
+
+/// Grouped series chart: for each x-label, one value per series (Figs 4, 6, 7).
+pub fn grouped_chart(
+    title: &str,
+    x_labels: &[String],
+    series: &[(String, Vec<f64>)],
+    unit: &str,
+) -> String {
+    let mut out = format!("== {title} ==\n");
+    let label_w = series.iter().map(|(n, _)| n.len()).max().unwrap_or(0);
+    let max = series
+        .iter()
+        .flat_map(|(_, vs)| vs.iter().copied())
+        .fold(f64::MIN, f64::max)
+        .max(1e-30);
+    for (xi, x) in x_labels.iter().enumerate() {
+        out += &format!("[{x}]\n");
+        for (name, vals) in series {
+            let v = vals[xi];
+            let n = ((v / max) * 40.0).round() as usize;
+            out += &format!("  {name:<label_w$} | {:<40} {v:.2} {unit}\n", "#".repeat(n));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["lib", "gflops"]);
+        t.row(vec!["openblas", "244.9"]);
+        t.row(vec!["blis-opt", "245.8"]);
+        let s = t.render();
+        assert!(s.contains("| lib      |"));
+        assert!(s.contains("| openblas |  244.9 |"));
+        assert_eq!(s.lines().count(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn bar_chart_scales_to_max() {
+        let s = bar_chart(
+            "t",
+            &[("a".into(), 10.0), ("b".into(), 5.0)],
+            "GB/s",
+            20,
+        );
+        // 'a' bar should be twice as long as 'b'
+        let lines: Vec<&str> = s.lines().collect();
+        let count = |l: &str| l.matches('#').count();
+        assert_eq!(count(lines[1]), 20);
+        assert_eq!(count(lines[2]), 10);
+    }
+
+    #[test]
+    fn grouped_chart_includes_all_series() {
+        let s = grouped_chart(
+            "hpl",
+            &["64".into(), "128".into()],
+            &[
+                ("openblas".into(), vec![139.0, 244.9]),
+                ("blis".into(), vec![100.0, 165.0]),
+            ],
+            "Gflop/s",
+        );
+        assert!(s.contains("[64]"));
+        assert!(s.contains("[128]"));
+        assert_eq!(s.matches("openblas").count(), 2);
+    }
+}

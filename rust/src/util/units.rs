@@ -1,0 +1,95 @@
+//! Unit formatting helpers shared by reports, tables and the monitor.
+
+/// Format a byte count with binary prefixes.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a rate in GB/s (decimal, like STREAM reports).
+pub fn fmt_gbs(bytes_per_sec: f64) -> String {
+    format!("{:.1} GB/s", bytes_per_sec / 1e9)
+}
+
+/// Format GFLOP/s (the paper's HPL unit).
+pub fn fmt_gflops(gf: f64) -> String {
+    format!("{gf:.1} Gflop/s")
+}
+
+/// Format a duration in adaptive units.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Parse strings like "128", "4k", "2M", "1G" into u64 (CLI sizes).
+pub fn parse_size(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if s.is_empty() {
+        return None;
+    }
+    let (num, mult) = match s.chars().last().unwrap() {
+        'k' | 'K' => (&s[..s.len() - 1], 1u64 << 10),
+        'm' | 'M' => (&s[..s.len() - 1], 1u64 << 20),
+        'g' | 'G' => (&s[..s.len() - 1], 1u64 << 30),
+        _ => (s, 1),
+    };
+    num.parse::<u64>().ok().map(|v| v * mult)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(64 * 1024 * 1024), "64.00 MiB");
+    }
+
+    #[test]
+    fn gbs_matches_stream_style() {
+        assert_eq!(fmt_gbs(41.9e9), "41.9 GB/s");
+    }
+
+    #[test]
+    fn gflops_style() {
+        assert_eq!(fmt_gflops(244.9), "244.9 Gflop/s");
+    }
+
+    #[test]
+    fn secs_adaptive() {
+        assert_eq!(fmt_secs(2.5), "2.50 s");
+        assert_eq!(fmt_secs(0.0025), "2.50 ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.50 µs");
+        assert_eq!(fmt_secs(3e-9), "3 ns");
+    }
+
+    #[test]
+    fn parse_sizes() {
+        assert_eq!(parse_size("128"), Some(128));
+        assert_eq!(parse_size("4k"), Some(4096));
+        assert_eq!(parse_size("2M"), Some(2 << 20));
+        assert_eq!(parse_size("1G"), Some(1 << 30));
+        assert_eq!(parse_size("x"), None);
+        assert_eq!(parse_size(""), None);
+    }
+}

@@ -1,0 +1,109 @@
+//! Integration: the cluster layer — inventory, SLURM-like scheduling,
+//! the end-to-end campaign, and the Fig 5 projections composed together.
+
+use cimone::cluster::monte_cimone_v2;
+use cimone::coordinator::driver::run_campaign;
+use cimone::coordinator::experiments;
+
+#[test]
+fn campaign_end_to_end() {
+    let r = run_campaign(96).expect("campaign");
+    assert!(r.hpl_passed, "validation HPL failed: residual {}", r.hpl_residual);
+    assert!(r.stream_validated);
+    // all nine jobs scheduled and completed
+    assert_eq!(r.jobs.len(), 9);
+    assert!(r.makespan_s > 0.0 && r.makespan_s.is_finite());
+}
+
+#[test]
+fn campaign_reproduces_fig5_ratios() {
+    let r = run_campaign(64).unwrap();
+    let get = |n: &str| r.monitor.latest(n).unwrap();
+    let single = get("hpl-mcv2-1s.gflops");
+    let two_node = get("hpl-mcv2-2n.gflops");
+    let dual = get("hpl-mcv2-2s.gflops");
+    let scaling_2n = two_node / single;
+    let scaling_2s = dual / single;
+    assert!((1.2..1.45).contains(&scaling_2n), "2-node {scaling_2n:.2} (paper 1.33)");
+    assert!((1.70..1.82).contains(&scaling_2s), "dual {scaling_2s:.2} (paper 1.76)");
+    // headline: MCv2 dual node vs MCv1 full cluster per-node
+    let mcv1_cluster = get("hpl-mcv1-full.gflops");
+    assert!((11.0..15.0).contains(&mcv1_cluster), "MCv1 cluster {mcv1_cluster:.1}");
+}
+
+#[test]
+fn scheduler_respects_partition_boundaries() {
+    let inv = monte_cimone_v2();
+    let mut s = inv.scheduler();
+    // the mcv2 partition has 4 nodes; a 5-node job must be rejected
+    assert!(s.submit("too-big", "mcv2", 5, 10.0).is_err());
+    // fill mcv1 completely, mcv2 stays usable
+    s.submit("fill", "mcv1", 8, 100.0).unwrap();
+    let id = s.submit("mcv2-job", "mcv2", 4, 10.0).unwrap();
+    assert!(matches!(
+        s.job(id).unwrap().state,
+        cimone::sched::JobState::Running { .. }
+    ));
+}
+
+#[test]
+fn failure_injection_degrades_gracefully() {
+    // drain an MCv2 node: 4-node jobs become unschedulable, 3-node jobs
+    // still run; bringing it back restores capacity
+    let inv = monte_cimone_v2();
+    let mut s = inv.scheduler();
+    let mcv2_first = inv.ids_of_kind(cimone::arch::soc::NodeKind::Mcv2Pioneer)[0];
+    assert!(s.partitions.get_mut("mcv2").unwrap().mark_down(mcv2_first));
+    // partition now reports 3 schedulable nodes
+    assert_eq!(s.partitions["mcv2"].size(), 3);
+    assert!(s.submit("four-wide", "mcv2", 4, 10.0).is_err());
+    let ok = s.submit("three-wide", "mcv2", 3, 10.0).unwrap();
+    let job = s.job(ok).unwrap();
+    assert!(matches!(job.state, cimone::sched::JobState::Running { .. }));
+    assert!(!job.allocated.contains(&mcv2_first), "downed node must not be allocated");
+    s.drain();
+    assert!(s.partitions.get_mut("mcv2").unwrap().mark_up(mcv2_first));
+    assert!(s.submit("four-wide-again", "mcv2", 4, 10.0).is_ok());
+}
+
+#[test]
+fn switch_fanin_consistent_with_collectives() {
+    // the topology model's gather must cost at least the flat model's
+    // bcast for the same volume (fan-in can only hurt)
+    use cimone::net::{Collectives, Link, Switch};
+    let bytes = 5e7;
+    for p in [2usize, 4, 8] {
+        let flat = Collectives::new(Link::gbe(), p).bcast(bytes);
+        let fanin = Switch::monte_cimone().gather_time(p, bytes);
+        assert!(
+            fanin >= 0.9 * flat,
+            "p={p}: gather {fanin:.3}s vs bcast {flat:.3}s"
+        );
+    }
+}
+
+#[test]
+fn experiments_are_deterministic() {
+    // projections are pure functions of the calibrated models
+    let a = experiments::fig5();
+    let b = experiments::fig5();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.0, y.0);
+        assert!((x.1 - y.1).abs() < 1e-12);
+    }
+    let (h1, s1) = experiments::headline();
+    let (h2, s2) = experiments::headline();
+    assert_eq!(h1, h2);
+    assert_eq!(s1, s2);
+}
+
+#[test]
+fn monitor_accumulates_campaign_series() {
+    let r = run_campaign(64).unwrap();
+    let streams = r.monitor.query_prefix("stream-");
+    assert_eq!(streams.len(), 3);
+    // MCv1 < MCv2 single < MCv2 dual bandwidth ordering
+    let get = |n: &str| r.monitor.latest(n).unwrap();
+    assert!(get("stream-mcv1.bandwidth") < get("stream-mcv2-1s.bandwidth"));
+    assert!(get("stream-mcv2-1s.bandwidth") < get("stream-mcv2-2s.bandwidth"));
+}

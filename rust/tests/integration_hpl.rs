@@ -1,0 +1,109 @@
+//! Integration: HPL end-to-end through all three layers — the blocked LU
+//! runs its trailing updates through the PJRT artifacts (Pallas micro-
+//! kernel -> JAX graph -> HLO -> Rust), and the solution passes HPL's own
+//! residual criterion.
+
+use cimone::hpl::lu::{lu_blocked, lu_solve, native_update};
+use cimone::hpl::validate::{hpl_residual, HPL_THRESHOLD};
+use cimone::runtime::{entries, ArtifactManifest, Runtime};
+use cimone::util::{Matrix, Rng};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = ArtifactManifest::default_dir();
+    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::with_dir(&dir).expect("runtime"))
+}
+
+#[test]
+fn hpl_with_pjrt_trailing_updates_passes_validation() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let n = 256; // == artifact geometry; nb == manifest nb
+    let nb = rt.manifest.nb;
+    let a = Matrix::random_hpl(n, n, 777);
+    let mut rng = Rng::new(778);
+    let b: Vec<f64> = (0..n).map(|_| rng.hpl_entry()).collect();
+
+    let mut update = |c: &mut Matrix, l: &Matrix, u: &Matrix| {
+        entries::trailing_update(&mut rt, c, l, u).map_err(|e| e.to_string())
+    };
+    let f = lu_blocked(&a, nb, &mut update).expect("factorization");
+    let x = lu_solve(&f, &b);
+
+    let r = hpl_residual(&a, &x, &b);
+    assert!(r < HPL_THRESHOLD, "PJRT-backed HPL residual {r}");
+}
+
+#[test]
+fn pjrt_and_native_factorizations_agree() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let n = 128;
+    let nb = rt.manifest.nb;
+    let a = Matrix::random_hpl(n, n, 999);
+
+    let f_native = lu_blocked(&a, nb, &mut native_update).unwrap();
+    let mut update = |c: &mut Matrix, l: &Matrix, u: &Matrix| {
+        entries::trailing_update(&mut rt, c, l, u).map_err(|e| e.to_string())
+    };
+    let f_pjrt = lu_blocked(&a, nb, &mut update).unwrap();
+
+    assert_eq!(f_native.perm, f_pjrt.perm, "pivot sequences must match");
+    assert!(
+        f_native.lu.allclose(&f_pjrt.lu, 1e-9, 1e-9),
+        "LU factors diverge between native and PJRT backends"
+    );
+}
+
+#[test]
+fn pjrt_residual_check_agrees_with_native_check() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let n = rt.manifest.n_gemm;
+    let a = Matrix::random_hpl(n, n, 555);
+    let mut rng = Rng::new(556);
+    let b: Vec<f64> = (0..n).map(|_| rng.hpl_entry()).collect();
+    let f = lu_blocked(&a, 32, &mut native_update).unwrap();
+    let x = lu_solve(&f, &b);
+
+    let native = hpl_residual(&a, &x, &b);
+    // rebuild the scaled residual from the PJRT numerator
+    let num = entries::residual_inf(&mut rt, &a, &x, &b).unwrap();
+    let denom = {
+        use cimone::hpl::validate::{inf_norm, mat_inf_norm};
+        f64::EPSILON * (mat_inf_norm(&a) * inf_norm(&x) + inf_norm(&b)) * n as f64
+    };
+    let pjrt = num / denom;
+    // the numerator is a catastrophically-cancelled quantity (Ax-b ~ eps);
+    // XLA's dot-product order differs from our column-major matvec, so only
+    // a few-percent relative agreement is meaningful
+    assert!(
+        (native - pjrt).abs() < 0.05 * (native + pjrt) + 1e-12,
+        "{native} vs {pjrt}"
+    );
+    assert!(pjrt < HPL_THRESHOLD);
+}
+
+#[test]
+fn panel_solve_artifact_is_a_valid_trsm() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let nb = rt.manifest.nb;
+    let n = rt.manifest.n_gemm;
+    // unit-lower L
+    let mut l = Matrix::eye(nb);
+    let mut rng = Rng::new(31337);
+    for i in 0..nb {
+        for j in 0..i {
+            l[(i, j)] = rng.hpl_entry();
+        }
+    }
+    let u = Matrix::random_hpl(nb, n, 31338);
+    let out = rt
+        .call("panel_solve_32", &[&l.to_row_major(), &u.to_row_major()])
+        .expect("panel_solve");
+    let x = Matrix::from_row_major(nb, n, &out[0]);
+    // check L * X == U
+    let mut lx = Matrix::zeros(nb, n);
+    Matrix::gemm_acc(&mut lx, &l, &x);
+    assert!(lx.allclose(&u, 1e-9, 1e-9), "panel_solve is not a TRSM");
+}

@@ -1,0 +1,173 @@
+//! Integration: the PJRT runtime executes the JAX/Pallas-authored
+//! artifacts and agrees with native Rust numerics — the contract that
+//! makes the three-layer architecture trustworthy.
+//!
+//! Requires `make artifacts` (skips cleanly if they're absent so
+//! `cargo test` works on a fresh checkout).
+
+use cimone::runtime::{entries, ArtifactManifest, Runtime};
+use cimone::util::Matrix;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = ArtifactManifest::default_dir();
+    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::with_dir(&dir).expect("runtime"))
+}
+
+#[test]
+fn manifest_covers_all_entry_points() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for name in [
+        "gemm_256",
+        "gemm_lmul1_64",
+        "trailing_update_256",
+        "panel_solve_32",
+        "residual_256",
+        "stream_copy",
+        "stream_scale",
+        "stream_add",
+        "stream_triad",
+        "ukernel_lmul1",
+        "ukernel_lmul4",
+    ] {
+        assert!(rt.manifest.entry(name).is_some(), "missing {name}");
+    }
+}
+
+#[test]
+fn gemm_artifact_matches_native() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let n = rt.manifest.n_gemm;
+    let a = Matrix::random_hpl(n, n, 11);
+    let b = Matrix::random_hpl(n, n, 12);
+    let got = entries::gemm(&mut rt, &a, &b).expect("gemm");
+    let mut want = Matrix::zeros(n, n);
+    Matrix::gemm_acc(&mut want, &a, &b);
+    assert!(got.allclose(&want, 1e-9, 1e-9), "PJRT gemm disagrees with native");
+}
+
+#[test]
+fn ukernel_artifacts_match_isa_machine() {
+    // The same micro-panel through (a) the Pallas-authored HLO and (b) the
+    // RVV functional machine running the BLIS schedules: one paper, three
+    // layers, one answer.
+    use cimone::ukernel::{MicroKernel, UkernelId};
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = Matrix::random_hpl(8, 64, 21);
+    let b = Matrix::random_hpl(64, 8, 22);
+    let c = Matrix::random_hpl(8, 8, 23);
+    for variant in ["lmul1", "lmul4"] {
+        let pjrt = entries::ukernel(&mut rt, variant, &a, &b, &c).expect("pjrt ukernel");
+        // ISA kernels are 8x4: split the 8-column problem into two calls
+        let id = if variant == "lmul1" { UkernelId::BlisLmul1 } else { UkernelId::BlisLmul4 };
+        let k = id.build();
+        let left =
+            k.run(&a, &b.block(0, 0, 64, 4), &c.block(0, 0, 8, 4), 128).expect("isa left");
+        let right =
+            k.run(&a, &b.block(0, 4, 64, 4), &c.block(0, 4, 8, 4), 128).expect("isa right");
+        let mut isa = Matrix::zeros(8, 8);
+        isa.set_block(0, 0, &left);
+        isa.set_block(0, 4, &right);
+        assert!(pjrt.allclose(&isa, 1e-12, 1e-12), "{variant}: PJRT vs ISA mismatch");
+    }
+}
+
+#[test]
+fn trailing_update_handles_shrinking_live_regions() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let nb = rt.manifest.nb;
+    for live in [256, 200, 64, 8] {
+        let mut c = Matrix::random_hpl(live, live, live as u64);
+        let a = Matrix::random_hpl(live, nb, live as u64 + 1);
+        let b = Matrix::random_hpl(nb, live, live as u64 + 2);
+        let mut want = c.clone();
+        let mut neg = a.clone();
+        for v in neg.as_mut_slice() {
+            *v = -*v;
+        }
+        Matrix::gemm_acc(&mut want, &neg, &b);
+        entries::trailing_update(&mut rt, &mut c, &a, &b).expect("trailing update");
+        assert!(c.allclose(&want, 1e-10, 1e-10), "live={live}");
+    }
+}
+
+#[test]
+fn trailing_update_rejects_oversize() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let n = rt.manifest.n_gemm;
+    let mut c = Matrix::zeros(n + 1, n + 1);
+    let a = Matrix::zeros(n + 1, rt.manifest.nb);
+    let b = Matrix::zeros(rt.manifest.nb, n + 1);
+    assert!(entries::trailing_update(&mut rt, &mut c, &a, &b).is_err());
+}
+
+#[test]
+fn stream_artifacts_match_kernels() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let n = rt.manifest.n_stream;
+    let a: Vec<f64> = (0..n).map(|i| ((i * 7 + 1) % 1000) as f64 * 0.01).collect();
+    let b: Vec<f64> = (0..n).map(|i| ((i * 13 + 5) % 1000) as f64 * 0.02).collect();
+
+    let copy = entries::stream(&mut rt, "copy", &a, None).unwrap();
+    assert_eq!(&copy[..64], &a[..64]);
+
+    let scale = entries::stream(&mut rt, "scale", &a, None).unwrap();
+    assert!((scale[17] - 3.0 * a[17]).abs() < 1e-12);
+
+    let add = entries::stream(&mut rt, "add", &a, Some(&b)).unwrap();
+    assert!((add[1234] - (a[1234] + b[1234])).abs() < 1e-12);
+
+    let triad = entries::stream(&mut rt, "triad", &a, Some(&b)).unwrap();
+    let mut want = vec![0.0; n];
+    cimone::stream::kernels::triad(&mut want, &a, &b);
+    for i in (0..n).step_by(n / 31) {
+        assert!((triad[i] - want[i]).abs() < 1e-12, "at {i}");
+    }
+}
+
+#[test]
+fn residual_artifact_matches_native() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let n = rt.manifest.n_gemm;
+    let a = Matrix::random_dd(n, 31);
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+    let b = a.matvec(&x);
+    // exact solution: residual ~ 0
+    let r0 = entries::residual_inf(&mut rt, &a, &x, &b).unwrap();
+    assert!(r0 < 1e-8, "{r0}");
+    // perturbed: matches native computation
+    let mut xp = x.clone();
+    xp[n / 2] += 0.125;
+    let got = entries::residual_inf(&mut rt, &a, &xp, &b).unwrap();
+    let native = {
+        let ax = a.matvec(&xp);
+        ax.iter().zip(&b).map(|(y, bb)| (y - bb).abs()).fold(0.0_f64, f64::max)
+    };
+    assert!((got - native).abs() < 1e-9 * (1.0 + native), "{got} vs {native}");
+}
+
+#[test]
+fn executable_shape_validation() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // wrong input arity
+    assert!(rt.call("gemm_256", &[&[0.0; 65536]]).is_err());
+    // wrong element count
+    assert!(rt.call("gemm_256", &[&[0.0; 100], &[0.0; 65536]]).is_err());
+    // unknown entry
+    assert!(rt.call("nonexistent", &[]).is_err());
+}
+
+#[test]
+fn executables_are_cached() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    assert_eq!(rt.loaded_count(), 0);
+    let a = vec![0.5; 8 * 64];
+    let b = vec![0.25; 64 * 8];
+    let c = vec![0.0; 64];
+    rt.call("ukernel_lmul4", &[&a, &b, &c]).unwrap();
+    rt.call("ukernel_lmul4", &[&a, &b, &c]).unwrap();
+    assert_eq!(rt.loaded_count(), 1);
+}
