@@ -20,16 +20,18 @@
 
 use std::time::Instant;
 
+use anyhow::Context;
 use cimone::cluster::monte_cimone_v2;
 use cimone::coordinator::driver::run_campaign_on;
 use cimone::coordinator::report;
+use cimone::error::CimoneError;
 use cimone::hpl::lu::{lu_blocked, lu_solve};
 use cimone::hpl::validate::{hpl_residual, HPL_THRESHOLD};
 use cimone::runtime::{entries, Runtime};
 use cimone::util::stats::hpl_flops;
 use cimone::util::{Matrix, Rng};
 
-fn main() -> Result<(), String> {
+fn main() -> cimone::Result<()> {
     let t0 = Instant::now();
     println!("==================================================================");
     println!(" Monte Cimone v2 reproduction — end-to-end driver");
@@ -46,7 +48,7 @@ fn main() -> Result<(), String> {
     );
 
     // --- 2. real HPL through the PJRT artifacts (all three layers) ---
-    let mut rt = Runtime::new().map_err(|e| format!("{e} — run `make artifacts`"))?;
+    let mut rt = Runtime::new().context("run `make artifacts`")?;
     println!("[2/5] PJRT runtime up on `{}`; running HPL N=256 via artifacts...", rt.platform());
     let n = rt.manifest.n_gemm;
     let nb = rt.manifest.nb;
@@ -55,7 +57,7 @@ fn main() -> Result<(), String> {
     let b: Vec<f64> = (0..n).map(|_| rng.hpl_entry()).collect();
     let t = Instant::now();
     let mut update = |c: &mut Matrix, l: &Matrix, u: &Matrix| {
-        entries::trailing_update(&mut rt, c, l, u).map_err(|e| e.to_string())
+        entries::trailing_update(&mut rt, c, l, u).map_err(CimoneError::from)
     };
     let f = lu_blocked(&a, nb, &mut update)?;
     let x = lu_solve(&f, &b);
@@ -69,7 +71,7 @@ fn main() -> Result<(), String> {
         if res < HPL_THRESHOLD { "PASSED" } else { "FAILED" }
     );
     if res >= HPL_THRESHOLD {
-        return Err("PJRT-backed HPL failed validation".into());
+        anyhow::bail!("PJRT-backed HPL failed validation");
     }
     println!("      dgemm fraction of trace: {:.1}%", 100.0 * f.trace.dgemm_fraction());
 
@@ -77,7 +79,7 @@ fn main() -> Result<(), String> {
     let ns = rt.manifest.n_stream;
     let sa: Vec<f64> = (0..ns).map(|i| ((i % 911) as f64) * 0.01).collect();
     let sb: Vec<f64> = (0..ns).map(|i| ((i % 677) as f64) * 0.02).collect();
-    let triad = entries::stream(&mut rt, "triad", &sa, Some(&sb)).map_err(|e| e.to_string())?;
+    let triad = entries::stream(&mut rt, "triad", &sa, Some(&sb))?;
     let mut want = vec![0.0; ns];
     cimone::stream::kernels::triad(&mut want, &sa, &sb);
     let ok = triad
@@ -86,7 +88,7 @@ fn main() -> Result<(), String> {
         .all(|(g, w)| (g - w).abs() < 1e-12);
     println!("[3/5] STREAM artifacts: triad over {ns} elems -> {}", if ok { "validated" } else { "MISMATCH" });
     if !ok {
-        return Err("stream artifact mismatch".into());
+        anyhow::bail!("stream artifact mismatch");
     }
 
     // --- 4. the campaign on the scheduler ---

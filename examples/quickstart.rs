@@ -13,7 +13,7 @@ use cimone::coordinator::report;
 use cimone::hpl::driver::{run, Backend, HplConfig};
 use cimone::util::Matrix;
 
-fn main() -> Result<(), String> {
+fn main() -> cimone::Result<()> {
     // 1. the machine
     let inv = monte_cimone_v2();
     println!("Monte Cimone v2: {} nodes, {:.0} Gflop/s peak", inv.nodes.len(), inv.peak_gflops());
@@ -29,8 +29,7 @@ fn main() -> Result<(), String> {
     }
 
     // 2. a real HPL solve (factor, solve, residual-check)
-    let r = run(&HplConfig { n: 256, nb: 32, seed: 42, backend: Backend::Native })
-        .map_err(|e| e)?;
+    let r = run(&HplConfig { n: 256, nb: 32, seed: 42, backend: Backend::Native })?;
     println!(
         "\nHPL N=256: {:.2} host Gflop/s, residual {:.2e} -> {}",
         r.host_gflops,
@@ -44,7 +43,7 @@ fn main() -> Result<(), String> {
             let n = rt.manifest.n_gemm;
             let a = Matrix::random_hpl(n, n, 1);
             let b = Matrix::random_hpl(n, n, 2);
-            let c = cimone::runtime::entries::gemm(&mut rt, &a, &b).map_err(|e| e.to_string())?;
+            let c = cimone::runtime::entries::gemm(&mut rt, &a, &b)?;
             let mut want = Matrix::zeros(n, n);
             Matrix::gemm_acc(&mut want, &a, &b);
             println!(

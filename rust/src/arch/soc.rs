@@ -115,6 +115,16 @@ impl NodeKind {
             NodeKind::Mcv2DualSocket => "MCv2 2-socket (SG2042x2)",
         }
     }
+
+    /// Parse the config-file spelling of a node kind (campaign specs).
+    pub fn parse(s: &str) -> Option<NodeKind> {
+        match s {
+            "mcv1" | "u740" | "mcv1-u740" => Some(NodeKind::Mcv1U740),
+            "mcv2" | "sg2042" | "pioneer" | "mcv2-1s" => Some(NodeKind::Mcv2Pioneer),
+            "mcv2-dual" | "sg2042-dual" | "dual" | "mcv2-2s" => Some(NodeKind::Mcv2DualSocket),
+            _ => None,
+        }
+    }
 }
 
 /// A full node descriptor (possibly multi-socket).

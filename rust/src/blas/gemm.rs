@@ -16,22 +16,27 @@
 //! handles shrinking HPL submatrices.
 
 use super::library::BlasLibrary;
+use crate::error::CimoneError;
 use crate::util::Matrix;
 
 /// C += A * B through the library's micro-kernel.
-pub fn gemm_acc(lib: &BlasLibrary, c: &mut Matrix, a: &Matrix, b: &Matrix) -> Result<(), String> {
+pub fn gemm_acc(
+    lib: &BlasLibrary,
+    c: &mut Matrix,
+    a: &Matrix,
+    b: &Matrix,
+) -> Result<(), CimoneError> {
     let (m, k) = (a.rows(), a.cols());
     let (k2, n) = (b.rows(), b.cols());
     if k != k2 || c.rows() != m || c.cols() != n {
-        return Err(format!(
-            "gemm shape mismatch: C{}x{} A{}x{} B{}x{}",
-            c.rows(),
-            c.cols(),
-            m,
-            k,
-            k2,
-            n
-        ));
+        return Err(CimoneError::GemmShape {
+            cm: c.rows(),
+            cn: c.cols(),
+            am: m,
+            ak: k,
+            bk: k2,
+            bn: n,
+        });
     }
     let bl = lib.blocking;
     for jc in (0..n).step_by(bl.nc) {
@@ -135,7 +140,7 @@ mod tests {
                 let b = Matrix::random_hpl(k, n, seed ^ 1);
                 let mut c = Matrix::random_hpl(m, n, seed ^ 2);
                 let mut want = c.clone();
-                gemm_acc(&l, &mut c, &a, &b).map_err(|e| e)?;
+                gemm_acc(&l, &mut c, &a, &b).map_err(|e| e.to_string())?;
                 Matrix::gemm_acc(&mut want, &a, &b);
                 if c.allclose(&want, 1e-10, 1e-10) {
                     Ok(())

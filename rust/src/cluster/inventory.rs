@@ -16,8 +16,13 @@ pub struct Inventory {
 }
 
 impl Inventory {
+    /// Node by *id* (not vector position — the two coincide in the
+    /// standard fleet but diverge in pruned/reordered inventories).
     pub fn node(&self, id: usize) -> &Node {
-        &self.nodes[id]
+        self.nodes
+            .iter()
+            .find(|n| n.id == id)
+            .unwrap_or_else(|| panic!("no node with id {id} in the inventory"))
     }
 
     pub fn ids_of_kind(&self, kind: crate::arch::soc::NodeKind) -> Vec<usize> {

@@ -1,0 +1,470 @@
+//! Declarative campaign descriptions: the benchmark campaign as *data*.
+//!
+//! A [`CampaignSpec`] is an ordered list of [`WorkloadSpec`] descriptors
+//! plus the real-numerics validation problem size. It can be built in
+//! code ([`CampaignSpec::paper_default`] reproduces the paper's 9-job
+//! campaign exactly) or parsed from a `util::config` TOML-subset file
+//! ([`CampaignSpec::load`] / [`CampaignSpec::from_config`]), so new
+//! scenarios — more node kinds, other libraries, different node counts à
+//! la Monte Cimone v3 — are config changes, not code changes.
+//!
+//! Spec file format (`cimone campaign --spec file.toml`):
+//!
+//! ```text
+//! [campaign]
+//! validate_n = 96          # real-numerics HPL validation size
+//!
+//! [[workload]]
+//! kind = "stream"          # stream | hpl | blis-ablation
+//! name = "stream-mcv2-1s"
+//! node = "mcv2"            # node kind: mcv1 | mcv2 | mcv2-dual
+//! partition = "mcv2"
+//! nodes = 1
+//! threads = 64
+//!
+//! [[workload]]
+//! kind = "hpl"
+//! name = "hpl-mcv2-2n"
+//! node = "mcv2"
+//! partition = "mcv2"
+//! nodes = 2
+//! cores_per_node = 64
+//! # cluster_nodes = 2      # defaults to `nodes`
+//! # lib = "openblas-c920"  # defaults to the MCv2 library
+//!
+//! [[workload]]
+//! kind = "blis-ablation"
+//! name = "hpl-blis-opt"
+//! partition = "mcv2"
+//! lib = "blis-opt"
+//! cores = 128
+//! # runtime_s = 3600
+//! ```
+
+use crate::arch::soc::NodeKind;
+use crate::error::CimoneError;
+use crate::ukernel::UkernelId;
+use crate::util::config::{Config, Section, Value};
+
+use super::workload::{BlisAblationWorkload, HplWorkload, StreamWorkload, Workload};
+
+/// One workload descriptor — plain data, buildable from code or config.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSpec {
+    Stream { name: String, partition: String, nodes: usize, kind: NodeKind, threads: usize },
+    Hpl {
+        name: String,
+        partition: String,
+        nodes: usize,
+        kind: NodeKind,
+        cluster_nodes: usize,
+        cores_per_node: usize,
+        lib: Option<UkernelId>,
+    },
+    BlisAblation { name: String, partition: String, lib: UkernelId, cores: usize, runtime_s: f64 },
+}
+
+impl WorkloadSpec {
+    /// Job name of the described workload.
+    pub fn name(&self) -> &str {
+        match self {
+            WorkloadSpec::Stream { name, .. }
+            | WorkloadSpec::Hpl { name, .. }
+            | WorkloadSpec::BlisAblation { name, .. } => name,
+        }
+    }
+
+    /// Instantiate the runnable workload this descriptor names.
+    pub fn build(&self) -> Box<dyn Workload> {
+        match self.clone() {
+            WorkloadSpec::Stream { name, partition, nodes, kind, threads } => {
+                Box::new(StreamWorkload { name, partition, nodes, kind, threads })
+            }
+            WorkloadSpec::Hpl {
+                name,
+                partition,
+                nodes,
+                kind,
+                cluster_nodes,
+                cores_per_node,
+                lib,
+            } => Box::new(HplWorkload {
+                name,
+                partition,
+                nodes,
+                kind,
+                cluster_nodes,
+                cores_per_node,
+                lib,
+            }),
+            WorkloadSpec::BlisAblation { name, partition, lib, cores, runtime_s } => {
+                Box::new(BlisAblationWorkload { name, partition, lib, cores, runtime_s })
+            }
+        }
+    }
+
+    /// Parse one `[[workload]]` section.
+    pub fn from_section(sec: &Section) -> Result<WorkloadSpec, CimoneError> {
+        let name = req_str(sec, "name", "?")?.to_string();
+        let partition = req_str(sec, "partition", &name)?.to_string();
+        match req_str(sec, "kind", &name)? {
+            "stream" => Ok(WorkloadSpec::Stream {
+                nodes: opt_usize(sec, "nodes", &name)?.unwrap_or(1),
+                kind: req_node_kind(sec, &name)?,
+                threads: opt_usize(sec, "threads", &name)?.ok_or_else(|| {
+                    CimoneError::Spec(format!("workload `{name}`: missing `threads`"))
+                })?,
+                name,
+                partition,
+            }),
+            "hpl" => {
+                let nodes = opt_usize(sec, "nodes", &name)?.unwrap_or(1);
+                Ok(WorkloadSpec::Hpl {
+                    kind: req_node_kind(sec, &name)?,
+                    cluster_nodes: opt_usize(sec, "cluster_nodes", &name)?.unwrap_or(nodes),
+                    cores_per_node: opt_usize(sec, "cores_per_node", &name)?.ok_or_else(
+                        || CimoneError::Spec(format!("workload `{name}`: missing `cores_per_node`")),
+                    )?,
+                    lib: opt_lib(sec, &name)?,
+                    nodes,
+                    name,
+                    partition,
+                })
+            }
+            "blis-ablation" => Ok(WorkloadSpec::BlisAblation {
+                lib: opt_lib(sec, &name)?.ok_or_else(|| {
+                    CimoneError::Spec(format!("workload `{name}`: missing `lib`"))
+                })?,
+                cores: opt_usize(sec, "cores", &name)?.unwrap_or(128),
+                runtime_s: sec
+                    .get("runtime_s")
+                    .map(|v| {
+                        v.as_float().filter(|f| f.is_finite() && *f > 0.0).ok_or_else(|| {
+                            CimoneError::Spec(format!(
+                                "workload `{name}`: `runtime_s` must be a positive number"
+                            ))
+                        })
+                    })
+                    .transpose()?
+                    .unwrap_or(3600.0),
+                name,
+                partition,
+            }),
+            other => Err(CimoneError::Spec(format!(
+                "workload `{name}`: unknown kind `{other}` (stream | hpl | blis-ablation)"
+            ))),
+        }
+    }
+}
+
+fn req_str<'a>(sec: &'a Section, key: &str, who: &str) -> Result<&'a str, CimoneError> {
+    sec.get(key)
+        .and_then(Value::as_str)
+        .ok_or_else(|| CimoneError::Spec(format!("workload `{who}`: missing string key `{key}`")))
+}
+
+/// Positive-integer key: 0 would flow into the models as a divisor and
+/// produce infinite simulated runtimes.
+fn opt_usize(sec: &Section, key: &str, who: &str) -> Result<Option<usize>, CimoneError> {
+    match sec.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_int()
+            .filter(|i| *i > 0)
+            .map(|i| Some(i as usize))
+            .ok_or_else(|| {
+                CimoneError::Spec(format!("workload `{who}`: `{key}` must be a positive int"))
+            }),
+    }
+}
+
+fn req_node_kind(sec: &Section, who: &str) -> Result<NodeKind, CimoneError> {
+    let s = req_str(sec, "node", who)?;
+    NodeKind::parse(s)
+        .ok_or_else(|| CimoneError::Spec(format!("workload `{who}`: unknown node kind `{s}`")))
+}
+
+fn opt_lib(sec: &Section, who: &str) -> Result<Option<UkernelId>, CimoneError> {
+    match sec.get("lib") {
+        None => Ok(None),
+        Some(v) => {
+            let s = v.as_str().ok_or_else(|| {
+                CimoneError::Spec(format!("workload `{who}`: `lib` must be a string"))
+            })?;
+            UkernelId::parse(s)
+                .map(Some)
+                .ok_or_else(|| CimoneError::Spec(format!("workload `{who}`: unknown library `{s}`")))
+        }
+    }
+}
+
+/// A full campaign: ordered workloads + validation problem size.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignSpec {
+    pub workloads: Vec<WorkloadSpec>,
+    /// Problem size for the real-numerics HPL validation run that anchors
+    /// the campaign's modelled numbers in executed arithmetic.
+    pub validate_n: usize,
+}
+
+impl Default for CampaignSpec {
+    fn default() -> Self {
+        CampaignSpec { workloads: Vec::new(), validate_n: 96 }
+    }
+}
+
+impl CampaignSpec {
+    /// Empty campaign (drains to a zero makespan).
+    pub fn new() -> CampaignSpec {
+        CampaignSpec::default()
+    }
+
+    pub fn push(&mut self, w: WorkloadSpec) {
+        self.workloads.push(w);
+    }
+
+    pub fn len(&self) -> usize {
+        self.workloads.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workloads.is_empty()
+    }
+
+    /// The paper's own campaign: STREAM on each node kind (Fig 3), HPL on
+    /// the four node configurations (Fig 5), and the BLIS micro-kernel
+    /// ablation at 128 cores (Fig 7) — 9 jobs, in figure order.
+    pub fn paper_default() -> CampaignSpec {
+        use NodeKind::*;
+        let mut spec = CampaignSpec::new();
+        for (name, kind, partition, threads) in [
+            ("stream-mcv1", Mcv1U740, "mcv1", 4usize),
+            ("stream-mcv2-1s", Mcv2Pioneer, "mcv2", 64),
+            ("stream-mcv2-2s", Mcv2DualSocket, "mcv2", 64),
+        ] {
+            spec.push(WorkloadSpec::Stream {
+                name: name.into(),
+                partition: partition.into(),
+                nodes: 1,
+                kind,
+                threads,
+            });
+        }
+        for (name, partition, nodes, kind, cores_per_node, lib) in [
+            ("hpl-mcv1-full", "mcv1", 8usize, Mcv1U740, 4usize, Some(UkernelId::OpenblasGeneric)),
+            ("hpl-mcv2-1s", "mcv2", 1, Mcv2Pioneer, 64, None),
+            ("hpl-mcv2-2n", "mcv2", 2, Mcv2Pioneer, 64, None),
+            ("hpl-mcv2-2s", "mcv2", 1, Mcv2DualSocket, 128, None),
+        ] {
+            spec.push(WorkloadSpec::Hpl {
+                name: name.into(),
+                partition: partition.into(),
+                nodes,
+                kind,
+                cluster_nodes: nodes,
+                cores_per_node,
+                lib,
+            });
+        }
+        for (name, lib) in [
+            ("hpl-blis-vanilla", UkernelId::BlisLmul1),
+            ("hpl-blis-opt", UkernelId::BlisLmul4),
+        ] {
+            spec.push(WorkloadSpec::BlisAblation {
+                name: name.into(),
+                partition: "mcv2".into(),
+                lib,
+                cores: 128,
+                runtime_s: 3600.0,
+            });
+        }
+        spec
+    }
+
+    /// Build a campaign from a parsed config: `[campaign]` scalars plus
+    /// one `[[workload]]` table per job.
+    pub fn from_config(cfg: &Config) -> Result<CampaignSpec, CimoneError> {
+        let mut spec = CampaignSpec::new();
+        if let Some(v) = cfg.get("campaign.validate_n") {
+            spec.validate_n = v
+                .as_int()
+                .filter(|i| *i > 0)
+                .ok_or_else(|| {
+                    CimoneError::Spec("campaign.validate_n must be a positive int".into())
+                })? as usize;
+        }
+        for sec in cfg.table_arrays.get("workload").map(Vec::as_slice).unwrap_or(&[]) {
+            spec.push(WorkloadSpec::from_section(sec)?);
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Cross-workload invariants (unique job names). Called by the config
+    /// loaders and again by the engine, so code-built specs are held to
+    /// the same rules.
+    pub fn validate(&self) -> Result<(), CimoneError> {
+        let mut seen = std::collections::BTreeSet::new();
+        for w in &self.workloads {
+            if !seen.insert(w.name()) {
+                return Err(CimoneError::Spec(format!("duplicate workload name `{}`", w.name())));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a spec from config text.
+    pub fn parse(text: &str) -> Result<CampaignSpec, CimoneError> {
+        let cfg = Config::parse(text).map_err(CimoneError::Spec)?;
+        CampaignSpec::from_config(&cfg)
+    }
+
+    /// Load a spec file from disk.
+    pub fn load(path: &str) -> Result<CampaignSpec, CimoneError> {
+        let cfg = Config::load(path).map_err(CimoneError::Spec)?;
+        CampaignSpec::from_config(&cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_is_the_nine_jobs_in_figure_order() {
+        let spec = CampaignSpec::paper_default();
+        let names: Vec<&str> = spec.workloads.iter().map(|w| w.name()).collect();
+        assert_eq!(
+            names,
+            [
+                "stream-mcv1",
+                "stream-mcv2-1s",
+                "stream-mcv2-2s",
+                "hpl-mcv1-full",
+                "hpl-mcv2-1s",
+                "hpl-mcv2-2n",
+                "hpl-mcv2-2s",
+                "hpl-blis-vanilla",
+                "hpl-blis-opt",
+            ]
+        );
+        assert_eq!(spec.validate_n, 96);
+    }
+
+    const SAMPLE: &str = r#"
+[campaign]
+validate_n = 64
+
+[[workload]]
+kind = "stream"
+name = "stream-one"
+node = "mcv2"
+partition = "mcv2"
+threads = 64
+
+[[workload]]
+kind = "hpl"
+name = "hpl-two-node"
+node = "mcv2"
+partition = "mcv2"
+nodes = 2
+cores_per_node = 64
+
+[[workload]]
+kind = "blis-ablation"
+name = "ablate-opt"
+partition = "mcv2"
+lib = "blis-opt"
+"#;
+
+    #[test]
+    fn parses_all_three_kinds_from_config() {
+        let spec = CampaignSpec::parse(SAMPLE).unwrap();
+        assert_eq!(spec.validate_n, 64);
+        assert_eq!(spec.len(), 3);
+        assert_eq!(
+            spec.workloads[0],
+            WorkloadSpec::Stream {
+                name: "stream-one".into(),
+                partition: "mcv2".into(),
+                nodes: 1,
+                kind: NodeKind::Mcv2Pioneer,
+                threads: 64,
+            }
+        );
+        match &spec.workloads[1] {
+            WorkloadSpec::Hpl { nodes, cluster_nodes, cores_per_node, lib, .. } => {
+                assert_eq!((*nodes, *cluster_nodes, *cores_per_node), (2, 2, 64));
+                assert!(lib.is_none());
+            }
+            other => panic!("expected Hpl, got {other:?}"),
+        }
+        match &spec.workloads[2] {
+            WorkloadSpec::BlisAblation { lib, cores, runtime_s, .. } => {
+                assert_eq!(*lib, UkernelId::BlisLmul4);
+                assert_eq!(*cores, 128);
+                assert_eq!(*runtime_s, 3600.0);
+            }
+            other => panic!("expected BlisAblation, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_kind_is_a_spec_error() {
+        let err = CampaignSpec::parse(
+            "[[workload]]\nkind = \"dgemm\"\nname = \"x\"\npartition = \"mcv2\"\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CimoneError::Spec(ref m) if m.contains("unknown kind `dgemm`")));
+    }
+
+    #[test]
+    fn missing_required_key_is_a_spec_error() {
+        let err = CampaignSpec::parse(
+            "[[workload]]\nkind = \"stream\"\nname = \"s\"\npartition = \"mcv2\"\nnode = \"mcv2\"\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CimoneError::Spec(ref m) if m.contains("threads")));
+    }
+
+    #[test]
+    fn zero_or_negative_numerics_rejected() {
+        // threads = 0 would project zero bandwidth -> infinite runtime
+        let err = CampaignSpec::parse(
+            "[[workload]]\nkind = \"stream\"\nname = \"s\"\npartition = \"mcv2\"\nnode = \"mcv2\"\nthreads = 0\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CimoneError::Spec(ref m) if m.contains("positive int")));
+        let err = CampaignSpec::parse(
+            "[[workload]]\nkind = \"blis-ablation\"\nname = \"b\"\npartition = \"mcv2\"\nlib = \"blis\"\nruntime_s = -5.0\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CimoneError::Spec(ref m) if m.contains("positive number")));
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let text = "[[workload]]\nkind = \"stream\"\nname = \"a\"\npartition = \"p\"\nnode = \"mcv1\"\nthreads = 4\n\
+                    \n[[workload]]\nkind = \"stream\"\nname = \"a\"\npartition = \"p\"\nnode = \"mcv1\"\nthreads = 4\n";
+        assert!(matches!(
+            CampaignSpec::parse(text),
+            Err(CimoneError::Spec(ref m)) if m.contains("duplicate")
+        ));
+    }
+
+    #[test]
+    fn empty_text_is_an_empty_campaign() {
+        let spec = CampaignSpec::parse("").unwrap();
+        assert!(spec.is_empty());
+        assert_eq!(spec.validate_n, 96);
+    }
+
+    #[test]
+    fn descriptors_build_matching_workloads() {
+        for w in CampaignSpec::paper_default().workloads {
+            let built = w.build();
+            assert_eq!(built.name(), w.name());
+            assert!(built.nodes() >= 1);
+        }
+    }
+}

@@ -1,25 +1,30 @@
-//! End-to-end cluster driver: the full system composed.
+//! The campaign engine: execute a declarative [`CampaignSpec`] end to
+//! end over a simulated Monte Cimone fleet.
 //!
-//! Submits the paper's benchmark campaign to the SLURM-like scheduler
-//! over the simulated Monte Cimone fleet, runs the real-numerics HPL and
-//! STREAM kernels (through the PJRT artifacts when available, natively
-//! otherwise), records every metric into the ExaMon-like monitor, and
-//! returns a campaign report. This is what `examples/e2e_cluster.rs` and
-//! `cimone campaign` run.
+//! The engine (1) anchors the campaign in real numerics by running the
+//! host HPL solve + STREAM validation, (2) instantiates every workload
+//! descriptor and *estimates them in parallel* (rayon) against the
+//! inventory, (3) submits the jobs to the SLURM-like scheduler in spec
+//! order — deterministic queueing — recording each workload's metrics in
+//! the ExaMon-like monitor, and (4) drains the partitions concurrently
+//! ([`Scheduler::drain_parallel`](crate::sched::Scheduler::drain_parallel)),
+//! which keeps simulated-time accounting identical to a serial drain.
+//! This is what `examples/e2e_cluster.rs` and `cimone campaign` run.
 
-use crate::arch::soc::NodeKind;
-use crate::blas::perf::PerfModel;
+use rayon::prelude::*;
+
 use crate::cluster::{monte_cimone_v2, Inventory, Monitor};
+use crate::error::CimoneError;
 use crate::hpl::driver::{run as hpl_run, Backend, HplConfig};
-use crate::hpl::model::{project, ClusterConfig};
-use crate::mem::stream_model::predict_node_bandwidth;
 use crate::stream::kernels::validate_kernels;
-use crate::ukernel::UkernelId;
+
+use super::campaign::CampaignSpec;
+use super::workload::{JobEstimate, Workload};
 
 /// Campaign outcome.
 #[derive(Debug, Clone)]
 pub struct CampaignReport {
-    /// (job name, simulated seconds, metric value)
+    /// (job name, simulated seconds, headline metric value)
     pub jobs: Vec<(String, f64, f64)>,
     pub makespan_s: f64,
     /// real-numerics validation outcomes
@@ -29,90 +34,55 @@ pub struct CampaignReport {
     pub monitor: Monitor,
 }
 
-/// Run the full campaign on the standard fleet.
-pub fn run_campaign(validate_n: usize) -> Result<CampaignReport, String> {
+/// Run the paper's campaign on the standard fleet.
+pub fn run_campaign(validate_n: usize) -> Result<CampaignReport, CimoneError> {
     let inv = monte_cimone_v2();
     run_campaign_on(&inv, validate_n)
 }
 
-/// Run the campaign on a given inventory.
-pub fn run_campaign_on(inv: &Inventory, validate_n: usize) -> Result<CampaignReport, String> {
+/// Run the paper's campaign on a given inventory.
+pub fn run_campaign_on(inv: &Inventory, validate_n: usize) -> Result<CampaignReport, CimoneError> {
+    let mut spec = CampaignSpec::paper_default();
+    spec.validate_n = validate_n;
+    run_campaign_spec(inv, &spec)
+}
+
+/// Run an arbitrary campaign spec on a given inventory.
+pub fn run_campaign_spec(
+    inv: &Inventory,
+    spec: &CampaignSpec,
+) -> Result<CampaignReport, CimoneError> {
+    spec.validate()?;
     let mut sched = inv.scheduler();
     let mut mon = Monitor::new();
-    let mut jobs = Vec::new();
 
     // --- 1. real-numerics validation runs (host execution) ---
     let hpl = hpl_run(&HplConfig {
-        n: validate_n,
-        nb: 32.min(validate_n),
+        n: spec.validate_n,
+        nb: 32.min(spec.validate_n),
         seed: 42,
         backend: Backend::Native,
     })
-    .map_err(|e| format!("validation HPL: {e}"))?;
+    .map_err(|e| CimoneError::ValidationRun { n: spec.validate_n, cause: Box::new(e) })?;
     let stream_ok = validate_kernels(1 << 16).is_ok();
     mon.record("frontend.hpl.residual", 0.0, hpl.residual);
 
-    // --- 2. the paper's campaign as SLURM jobs with modelled runtimes ---
-    // STREAM on each node kind
-    for (name, kind, part, nodes, threads) in [
-        ("stream-mcv1", NodeKind::Mcv1U740, "mcv1", 1usize, 4usize),
-        ("stream-mcv2-1s", NodeKind::Mcv2Pioneer, "mcv2", 1, 64),
-        ("stream-mcv2-2s", NodeKind::Mcv2DualSocket, "mcv2", 1, 64),
-    ] {
-        let node_id = inv.ids_of_kind(kind)[0];
-        let bw = predict_node_bandwidth(&inv.node(node_id).desc, threads, true);
-        // STREAM runtime: 10 iterations x 3 arrays x 8 MiB-ish / bw
-        let bytes = 10.0 * 3.0 * 128e6;
-        let runtime = (bytes / bw).max(1.0);
-        sched.submit(name, part, nodes, runtime)?;
-        mon.record(&format!("{name}.bandwidth", ), sched.now, bw);
-        jobs.push((name.to_string(), runtime, bw / 1e9));
+    // --- 2. instantiate + estimate every workload, in parallel ---
+    let workloads: Vec<Box<dyn Workload>> = spec.workloads.iter().map(|w| w.build()).collect();
+    let estimates: Vec<Result<JobEstimate, CimoneError>> =
+        workloads.par_iter().map(|w| w.estimate(inv)).collect();
+
+    // --- 3. submit in spec order (deterministic queueing + metrics) ---
+    let mut jobs = Vec::with_capacity(workloads.len());
+    for (w, est) in workloads.iter().zip(estimates) {
+        let est = est?;
+        sched.submit(w.name(), w.partition(), w.nodes(), est.runtime_s)?;
+        w.metrics(&mut mon, sched.now, &est);
+        jobs.push((w.name().to_string(), est.runtime_s, est.headline));
     }
 
-    // HPL node configurations (Fig 5)
-    let single = ClusterConfig::mcv2_default(
-        inv.node(inv.ids_of_kind(NodeKind::Mcv2Pioneer)[0]).desc.clone(),
-        1,
-        64,
-    );
-    let two_node = ClusterConfig { nodes: 2, ..single.clone() };
-    let dual = ClusterConfig::mcv2_default(
-        inv.node(inv.ids_of_kind(NodeKind::Mcv2DualSocket)[0]).desc.clone(),
-        1,
-        128,
-    );
-    let mut mcv1 = ClusterConfig::mcv2_default(
-        inv.node(inv.ids_of_kind(NodeKind::Mcv1U740)[0]).desc.clone(),
-        8,
-        4,
-    );
-    mcv1.lib = UkernelId::OpenblasGeneric;
-    for (name, part, nodes, cfg) in [
-        ("hpl-mcv1-full", "mcv1", 8usize, &mcv1),
-        ("hpl-mcv2-1s", "mcv2", 1, &single),
-        ("hpl-mcv2-2n", "mcv2", 2, &two_node),
-        ("hpl-mcv2-2s", "mcv2", 1, &dual),
-    ] {
-        let p = project(cfg);
-        let runtime = p.t_comp + p.t_comm;
-        sched.submit(name, part, nodes, runtime)?;
-        mon.record(&format!("{name}.gflops"), sched.now, p.gflops);
-        jobs.push((name.to_string(), runtime, p.gflops));
-    }
-
-    // BLIS comparison (Fig 7 @128)
-    let dual_desc = inv.node(11).desc.clone();
-    for (name, lib) in [
-        ("hpl-blis-vanilla", UkernelId::BlisLmul1),
-        ("hpl-blis-opt", UkernelId::BlisLmul4),
-    ] {
-        let gf = PerfModel::new(&dual_desc, lib).node_gflops(128);
-        sched.submit(name, "mcv2", 1, 3600.0)?;
-        mon.record(&format!("{name}.gflops"), sched.now, gf);
-        jobs.push((name.to_string(), 3600.0, gf));
-    }
-
-    let makespan = sched.drain();
+    // --- 4. drain independent partitions concurrently ---
+    let makespan = sched.drain_parallel();
     Ok(CampaignReport {
         jobs,
         makespan_s: makespan,
@@ -150,5 +120,88 @@ mod tests {
         assert!(get("hpl-mcv1-full.gflops") < get("hpl-mcv2-1s.gflops"));
         assert!(get("hpl-mcv2-2n.gflops") < get("hpl-mcv2-2s.gflops"));
         assert!(get("hpl-blis-opt.gflops") > get("hpl-blis-vanilla.gflops"));
+    }
+
+    #[test]
+    fn empty_spec_drains_to_zero_makespan() {
+        let inv = monte_cimone_v2();
+        let spec = CampaignSpec { workloads: vec![], validate_n: 64 };
+        let r = run_campaign_spec(&inv, &spec).unwrap();
+        assert!(r.jobs.is_empty());
+        assert_eq!(r.makespan_s, 0.0);
+        assert!(r.hpl_passed);
+    }
+
+    #[test]
+    fn spec_engine_matches_legacy_campaign_shape() {
+        // the declarative path must reproduce the seed campaign exactly
+        let r = run_campaign(64).unwrap();
+        let names: Vec<&str> = r.jobs.iter().map(|(n, _, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            [
+                "stream-mcv1",
+                "stream-mcv2-1s",
+                "stream-mcv2-2s",
+                "hpl-mcv1-full",
+                "hpl-mcv2-1s",
+                "hpl-mcv2-2n",
+                "hpl-mcv2-2s",
+                "hpl-blis-vanilla",
+                "hpl-blis-opt",
+            ]
+        );
+        // blis jobs occupy their fixed 3600 s slot
+        assert_eq!(r.jobs[7].1, 3600.0);
+        assert_eq!(r.jobs[8].1, 3600.0);
+    }
+
+    #[test]
+    fn config_driven_spec_runs() {
+        let inv = monte_cimone_v2();
+        let spec = CampaignSpec::parse(
+            "[campaign]\nvalidate_n = 48\n\n\
+             [[workload]]\nkind = \"stream\"\nname = \"s1\"\nnode = \"mcv2\"\npartition = \"mcv2\"\nthreads = 64\n\n\
+             [[workload]]\nkind = \"hpl\"\nname = \"h1\"\nnode = \"mcv2-dual\"\npartition = \"mcv2\"\ncores_per_node = 128\n",
+        )
+        .unwrap();
+        let r = run_campaign_spec(&inv, &spec).unwrap();
+        assert_eq!(r.jobs.len(), 2);
+        assert!(r.monitor.latest("s1.bandwidth").unwrap() > 1e9);
+        assert!(r.monitor.latest("h1.gflops").unwrap() > 100.0);
+    }
+
+    #[test]
+    fn duplicate_job_names_rejected_by_engine() {
+        use super::super::campaign::WorkloadSpec;
+        use crate::arch::soc::NodeKind;
+        let inv = monte_cimone_v2();
+        let mut spec = CampaignSpec::new();
+        for _ in 0..2 {
+            spec.push(WorkloadSpec::Stream {
+                name: "dup".into(),
+                partition: "mcv2".into(),
+                nodes: 1,
+                kind: NodeKind::Mcv2Pioneer,
+                threads: 64,
+            });
+        }
+        assert!(matches!(
+            run_campaign_spec(&inv, &spec),
+            Err(CimoneError::Spec(ref m)) if m.contains("duplicate")
+        ));
+    }
+
+    #[test]
+    fn unknown_partition_in_spec_is_typed() {
+        let inv = monte_cimone_v2();
+        let spec = CampaignSpec::parse(
+            "[[workload]]\nkind = \"stream\"\nname = \"s\"\nnode = \"mcv1\"\npartition = \"gpu\"\nthreads = 4\n",
+        )
+        .unwrap();
+        assert!(matches!(
+            run_campaign_spec(&inv, &spec),
+            Err(CimoneError::UnknownPartition(ref p)) if p == "gpu"
+        ));
     }
 }

@@ -1,10 +1,35 @@
-//! The coordinator: experiment definitions for every paper figure, report
-//! rendering, and the end-to-end cluster driver (scheduler + monitor +
-//! PJRT-validated numerics).
+//! The coordinator: a declarative campaign engine over the simulated
+//! Monte Cimone fleet, plus the per-figure experiment definitions and
+//! report rendering.
+//!
+//! The experiment-execution path is data-driven:
+//!
+//! - [`Workload`] (in [`workload`]) is the unit of execution — name,
+//!   partition, node count, an `estimate(&Inventory)` that models the
+//!   job's runtime and metric, and a `metrics(&mut Monitor, ..)` hook.
+//!   [`workload::StreamWorkload`], [`workload::HplWorkload`] and
+//!   [`workload::BlisAblationWorkload`] cover the paper's evaluation.
+//! - [`CampaignSpec`] (in [`campaign`]) describes a campaign as an
+//!   ordered list of [`campaign::WorkloadSpec`] descriptors — built in
+//!   code or parsed from a `util::config` file.
+//!   [`CampaignSpec::paper_default`] is the paper's exact 9-job campaign.
+//! - [`driver::run_campaign_spec`] executes a spec: real-numerics
+//!   validation, parallel workload estimation (rayon), deterministic
+//!   submission to the SLURM-like scheduler, concurrent per-partition
+//!   drain, and an ExaMon-style metric report.
+//!
+//! [`experiments`] / [`report`] / [`sweeps`] regenerate every paper
+//! figure on top of the same models; all failures are typed
+//! [`crate::CimoneError`]s.
 
+pub mod campaign;
 pub mod driver;
 pub mod experiments;
 pub mod report;
 pub mod sweeps;
+pub mod workload;
 
+pub use campaign::{CampaignSpec, WorkloadSpec};
+pub use driver::{run_campaign, run_campaign_on, run_campaign_spec, CampaignReport};
 pub use experiments::{fig3, fig4, fig5, fig6, fig7, headline};
+pub use workload::{JobEstimate, Workload};

@@ -1,0 +1,271 @@
+//! The [`Workload`] trait: one schedulable benchmark of a campaign.
+//!
+//! A workload knows its job identity (`name`, `partition`, `nodes`), how
+//! to *estimate* itself against a concrete [`Inventory`] (simulated
+//! runtime + the metric it produces), and how to record its metrics into
+//! the ExaMon-like [`Monitor`]. The campaign engine
+//! ([`super::driver::run_campaign_spec`]) estimates workloads in
+//! parallel, submits them to the SLURM-like scheduler in spec order, and
+//! drains the partitions concurrently — so adding a new experiment type
+//! to the fleet means implementing this trait, not editing the driver.
+
+use crate::arch::soc::NodeKind;
+use crate::blas::perf::PerfModel;
+use crate::cluster::{Inventory, Monitor};
+use crate::error::CimoneError;
+use crate::hpl::model::{project, ClusterConfig};
+use crate::mem::stream_model::predict_node_bandwidth;
+use crate::ukernel::UkernelId;
+
+/// Bytes one simulated STREAM job moves: 10 iterations x 3 arrays x
+/// ~128 MB, matching the paper-scale working set.
+const STREAM_JOB_BYTES: f64 = 10.0 * 3.0 * 128e6;
+
+/// What a workload contributes to the campaign once estimated on a fleet.
+#[derive(Debug, Clone)]
+pub struct JobEstimate {
+    /// Simulated wall-clock the job occupies its nodes for.
+    pub runtime_s: f64,
+    /// Metric suffix recorded as `<job-name>.<metric>` (ExaMon dotted).
+    pub metric: &'static str,
+    /// Raw metric value (bytes/s for STREAM, GFLOP/s for HPL).
+    pub value: f64,
+    /// Headline value reported in `CampaignReport::jobs` (GB/s, GFLOP/s).
+    pub headline: f64,
+}
+
+/// One schedulable benchmark workload of a campaign.
+pub trait Workload: Send + Sync {
+    /// Job name, unique within a campaign (e.g. `hpl-mcv2-2n`).
+    fn name(&self) -> &str;
+
+    /// SLURM partition the job is submitted to.
+    fn partition(&self) -> &str;
+
+    /// Number of nodes the job allocates.
+    fn nodes(&self) -> usize;
+
+    /// Model this workload against a concrete fleet.
+    fn estimate(&self, inv: &Inventory) -> Result<JobEstimate, CimoneError>;
+
+    /// Record the workload's metrics at simulated time `t`.
+    fn metrics(&self, mon: &mut Monitor, t: f64, est: &JobEstimate) {
+        mon.record(&format!("{}.{}", self.name(), est.metric), t, est.value);
+    }
+}
+
+/// Find the descriptor of the first inventory node of `kind`, so
+/// estimates survive reordered or pruned fleets (no fixed node index).
+fn desc_of_kind<'a>(
+    inv: &'a Inventory,
+    kind: NodeKind,
+) -> Result<&'a crate::arch::soc::SocDescriptor, CimoneError> {
+    inv.nodes
+        .iter()
+        .find(|n| n.desc.kind == kind)
+        .map(|n| &n.desc)
+        .ok_or(CimoneError::NoNodeOfKind(kind.label()))
+}
+
+/// STREAM bandwidth on one node kind (a Fig 3 row).
+#[derive(Debug, Clone)]
+pub struct StreamWorkload {
+    pub name: String,
+    pub partition: String,
+    pub nodes: usize,
+    /// Which node kind supplies the memory-system model.
+    pub kind: NodeKind,
+    pub threads: usize,
+}
+
+impl Workload for StreamWorkload {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn partition(&self) -> &str {
+        &self.partition
+    }
+
+    fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    fn estimate(&self, inv: &Inventory) -> Result<JobEstimate, CimoneError> {
+        let desc = desc_of_kind(inv, self.kind)?;
+        let bw = predict_node_bandwidth(desc, self.threads, true);
+        let runtime_s = (STREAM_JOB_BYTES / bw).max(1.0);
+        Ok(JobEstimate { runtime_s, metric: "bandwidth", value: bw, headline: bw / 1e9 })
+    }
+}
+
+/// HPL on one node configuration (a Fig 5 bar).
+#[derive(Debug, Clone)]
+pub struct HplWorkload {
+    pub name: String,
+    pub partition: String,
+    /// Nodes allocated from the scheduler partition.
+    pub nodes: usize,
+    /// Which node kind supplies the SoC descriptor.
+    pub kind: NodeKind,
+    /// Nodes in the HPL cluster-projection model (usually == `nodes`).
+    pub cluster_nodes: usize,
+    pub cores_per_node: usize,
+    /// BLAS library override; `None` keeps the MCv2 default (OpenBLAS
+    /// C920-optimized).
+    pub lib: Option<UkernelId>,
+}
+
+impl Workload for HplWorkload {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn partition(&self) -> &str {
+        &self.partition
+    }
+
+    fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    fn estimate(&self, inv: &Inventory) -> Result<JobEstimate, CimoneError> {
+        let desc = desc_of_kind(inv, self.kind)?;
+        let mut cfg =
+            ClusterConfig::mcv2_default(desc.clone(), self.cluster_nodes, self.cores_per_node);
+        if let Some(lib) = self.lib {
+            cfg.lib = lib;
+        }
+        let p = project(&cfg);
+        Ok(JobEstimate {
+            runtime_s: p.t_comp + p.t_comm,
+            metric: "gflops",
+            value: p.gflops,
+            headline: p.gflops,
+        })
+    }
+}
+
+/// BLIS micro-kernel ablation on the dual-socket node (Fig 7 @ 128
+/// cores): same HPL job shape, different micro-kernel.
+#[derive(Debug, Clone)]
+pub struct BlisAblationWorkload {
+    pub name: String,
+    pub partition: String,
+    pub lib: UkernelId,
+    pub cores: usize,
+    /// Fixed simulated runtime (the ablation compares rates, not time).
+    pub runtime_s: f64,
+}
+
+impl Workload for BlisAblationWorkload {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn partition(&self) -> &str {
+        &self.partition
+    }
+
+    fn nodes(&self) -> usize {
+        1
+    }
+
+    fn estimate(&self, inv: &Inventory) -> Result<JobEstimate, CimoneError> {
+        // look the dual-socket node up by kind, not by hardcoded index,
+        // so the ablation survives inventory changes
+        let desc = desc_of_kind(inv, NodeKind::Mcv2DualSocket)?;
+        let gf = PerfModel::new(desc, self.lib).node_gflops(self.cores);
+        Ok(JobEstimate { runtime_s: self.runtime_s, metric: "gflops", value: gf, headline: gf })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::monte_cimone_v2;
+
+    #[test]
+    fn stream_workload_estimates_positive_bandwidth() {
+        let inv = monte_cimone_v2();
+        let w = StreamWorkload {
+            name: "stream-mcv2-1s".into(),
+            partition: "mcv2".into(),
+            nodes: 1,
+            kind: NodeKind::Mcv2Pioneer,
+            threads: 64,
+        };
+        let est = w.estimate(&inv).unwrap();
+        assert!(est.value > 1e9, "{}", est.value);
+        assert!(est.runtime_s >= 1.0);
+        assert_eq!(est.metric, "bandwidth");
+    }
+
+    #[test]
+    fn hpl_workload_matches_direct_projection() {
+        let inv = monte_cimone_v2();
+        let w = HplWorkload {
+            name: "hpl-mcv2-1s".into(),
+            partition: "mcv2".into(),
+            nodes: 1,
+            kind: NodeKind::Mcv2Pioneer,
+            cluster_nodes: 1,
+            cores_per_node: 64,
+            lib: None,
+        };
+        let est = w.estimate(&inv).unwrap();
+        let direct = project(&ClusterConfig::mcv2_default(
+            crate::arch::presets::sg2042(),
+            1,
+            64,
+        ));
+        assert!((est.value - direct.gflops).abs() < 1e-9);
+    }
+
+    #[test]
+    fn blis_ablation_uses_kind_lookup_not_index() {
+        // an inventory where the dual-socket node is NOT at index 11 and
+        // node ids no longer match vector positions
+        let mut inv = monte_cimone_v2();
+        inv.nodes.rotate_right(1);
+        let w = BlisAblationWorkload {
+            name: "hpl-blis-opt".into(),
+            partition: "mcv2".into(),
+            lib: UkernelId::BlisLmul4,
+            cores: 128,
+            runtime_s: 3600.0,
+        };
+        let est = w.estimate(&inv).unwrap();
+        assert!(est.value > 100.0, "{}", est.value);
+    }
+
+    #[test]
+    fn missing_node_kind_is_a_typed_error() {
+        let mut inv = monte_cimone_v2();
+        inv.nodes.retain(|n| n.desc.kind != NodeKind::Mcv2DualSocket);
+        let w = BlisAblationWorkload {
+            name: "x".into(),
+            partition: "mcv2".into(),
+            lib: UkernelId::BlisLmul1,
+            cores: 128,
+            runtime_s: 3600.0,
+        };
+        assert!(matches!(w.estimate(&inv), Err(CimoneError::NoNodeOfKind(_))));
+    }
+
+    #[test]
+    fn default_metric_recording_uses_dotted_name() {
+        let inv = monte_cimone_v2();
+        let w = StreamWorkload {
+            name: "stream-mcv1".into(),
+            partition: "mcv1".into(),
+            nodes: 1,
+            kind: NodeKind::Mcv1U740,
+            threads: 4,
+        };
+        let est = w.estimate(&inv).unwrap();
+        let mut mon = Monitor::new();
+        w.metrics(&mut mon, 0.0, &est);
+        assert_eq!(mon.latest("stream-mcv1.bandwidth"), Some(est.value));
+    }
+}

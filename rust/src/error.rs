@@ -1,0 +1,117 @@
+//! Typed error surface for the experiment-execution path.
+//!
+//! Every layer the campaign engine composes — scheduler, cluster,
+//! BLAS/micro-kernel execution, HPL, STREAM, CLI — reports failures as a
+//! [`CimoneError`] variant instead of a bare `String`, so callers can
+//! match on the failure mode (unknown partition vs. singular matrix vs.
+//! spec typo) and the crate-wide [`crate::Result`] (`anyhow`) absorbs
+//! them with full context via the standard `?` conversion.
+
+use thiserror::Error;
+
+/// All failure modes of the campaign/scheduler/benchmark layers.
+#[derive(Debug, Error)]
+pub enum CimoneError {
+    /// A job was submitted to a partition the scheduler does not know.
+    #[error("no such partition `{0}`")]
+    UnknownPartition(String),
+
+    /// A job requested more nodes than its partition can ever provide.
+    #[error("job `{job}` wants {want} nodes, partition `{partition}` has {have}")]
+    PartitionTooSmall { job: String, partition: String, want: usize, have: usize },
+
+    /// A workload asked for a node kind absent from the inventory.
+    #[error("no node of kind {0} in the inventory")]
+    NoNodeOfKind(&'static str),
+
+    /// A job was submitted with a non-finite or non-positive runtime
+    /// (would hang or panic the simulated-time event loop).
+    #[error("job `{job}` has invalid runtime {runtime_s}s (must be finite and > 0)")]
+    InvalidRuntime { job: String, runtime_s: f64 },
+
+    /// LU factorization requires a square system.
+    #[error("lu_blocked requires a square matrix, got {rows}x{cols}")]
+    NonSquareMatrix { rows: usize, cols: usize },
+
+    /// Exact zero pivot column during factorization.
+    #[error("singular at column {0}")]
+    SingularMatrix(usize),
+
+    /// GEMM operand shapes are inconsistent.
+    #[error("gemm shape mismatch: C{cm}x{cn} A{am}x{ak} B{bk}x{bn}")]
+    GemmShape { cm: usize, cn: usize, am: usize, ak: usize, bk: usize, bn: usize },
+
+    /// The functional vector machine rejected or faulted on a program.
+    #[error("vector machine: {0}")]
+    Machine(String),
+
+    /// stream.c-style end-of-run validation failed.
+    #[error("STREAM validation failed at {index}: a={a} b={b} c={c}")]
+    StreamValidation { index: usize, a: f64, b: f64, c: f64 },
+
+    /// HPL's residual acceptance criterion failed.
+    #[error("HPL residual {residual:.3e} exceeds threshold {threshold}")]
+    ResidualCheck { residual: f64, threshold: f64 },
+
+    /// The campaign's pre-flight real-numerics validation solve failed.
+    /// (`cause` is folded into the message rather than exposed as a
+    /// thiserror source, so chain-printing doesn't repeat it.)
+    #[error("validation HPL (n={n}): {cause}")]
+    ValidationRun { n: usize, cause: Box<CimoneError> },
+
+    /// A campaign spec (file or `util::config` text) is malformed.
+    #[error("campaign spec: {0}")]
+    Spec(String),
+
+    /// Command-line usage error.
+    #[error("{0}")]
+    Cli(String),
+
+    /// PJRT runtime / artifact failure (wrapped from `anyhow`).
+    #[error("runtime: {0}")]
+    Runtime(String),
+}
+
+impl From<anyhow::Error> for CimoneError {
+    fn from(e: anyhow::Error) -> Self {
+        CimoneError::Runtime(format!("{e:#}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_render_with_context() {
+        let e = CimoneError::UnknownPartition("gpu".into());
+        assert_eq!(e.to_string(), "no such partition `gpu`");
+        let e = CimoneError::PartitionTooSmall {
+            job: "hpl".into(),
+            partition: "mcv2".into(),
+            want: 5,
+            have: 4,
+        };
+        assert!(e.to_string().contains("wants 5 nodes"));
+    }
+
+    #[test]
+    fn converts_into_anyhow_and_back() {
+        let e: anyhow::Error = CimoneError::SingularMatrix(3).into();
+        assert!(e.to_string().contains("column 3"));
+        let back: CimoneError = e.into();
+        assert!(matches!(back, CimoneError::Runtime(_)));
+    }
+
+    #[test]
+    fn question_mark_into_crate_result() {
+        fn typed() -> Result<(), CimoneError> {
+            Err(CimoneError::NoNodeOfKind("MCv2 2-socket (SG2042x2)"))
+        }
+        fn inner() -> crate::Result<()> {
+            typed()?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+}

@@ -12,6 +12,7 @@ use super::lu::{lu_blocked, lu_solve, native_update};
 use super::validate::{hpl_residual, HPL_THRESHOLD};
 use crate::blas::gemm::gemm_acc;
 use crate::blas::library::BlasLibrary;
+use crate::error::CimoneError;
 use crate::util::stats::hpl_flops;
 use crate::util::{Matrix, Rng};
 
@@ -52,7 +53,7 @@ pub struct HplResult {
 }
 
 /// Execute the benchmark.
-pub fn run(cfg: &HplConfig) -> Result<HplResult, String> {
+pub fn run(cfg: &HplConfig) -> Result<HplResult, CimoneError> {
     let a = Matrix::random_hpl(cfg.n, cfg.n, cfg.seed);
     let mut rng = Rng::new(cfg.seed ^ 0xB00B5);
     let b: Vec<f64> = (0..cfg.n).map(|_| rng.hpl_entry()).collect();

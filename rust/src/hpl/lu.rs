@@ -9,11 +9,12 @@
 //! do agree, which ties every layer of the stack together.
 
 use crate::blas::trace::{BlasCall, CallTrace};
+use crate::error::CimoneError;
 use crate::util::Matrix;
 
 /// The pluggable trailing-update: C -= A * B.
 pub type TrailingUpdate<'a> =
-    dyn FnMut(&mut Matrix, &Matrix, &Matrix) -> Result<(), String> + 'a;
+    dyn FnMut(&mut Matrix, &Matrix, &Matrix) -> Result<(), CimoneError> + 'a;
 
 /// Outcome of a factorization.
 #[derive(Debug, Clone)]
@@ -27,7 +28,7 @@ pub struct LuFactors {
 }
 
 /// Native trailing update (used when no BLAS model/runtime is supplied).
-pub fn native_update(c: &mut Matrix, a: &Matrix, b: &Matrix) -> Result<(), String> {
+pub fn native_update(c: &mut Matrix, a: &Matrix, b: &Matrix) -> Result<(), CimoneError> {
     Matrix::gemm_sub(c, a, b);
     Ok(())
 }
@@ -37,10 +38,10 @@ pub fn lu_blocked(
     a: &Matrix,
     nb: usize,
     update: &mut TrailingUpdate<'_>,
-) -> Result<LuFactors, String> {
+) -> Result<LuFactors, CimoneError> {
     let n = a.rows();
     if a.cols() != n {
-        return Err("lu_blocked requires a square matrix".into());
+        return Err(CimoneError::NonSquareMatrix { rows: n, cols: a.cols() });
     }
     let mut lu = a.clone();
     let mut perm: Vec<usize> = (0..n).collect();
@@ -63,7 +64,7 @@ pub fn lu_blocked(
                 }
             }
             if max == 0.0 {
-                return Err(format!("singular at column {k}"));
+                return Err(CimoneError::SingularMatrix(k));
             }
             if piv != k {
                 lu.swap_rows(piv, k, 0, n);
@@ -235,7 +236,7 @@ mod tests {
                 let a = Matrix::random_dd(n, seed);
                 let mut rng = Rng::new(seed ^ 0xF00D);
                 let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-                let f = lu_blocked(&a, nb, &mut native_update).map_err(|e| e)?;
+                let f = lu_blocked(&a, nb, &mut native_update).map_err(|e| e.to_string())?;
                 let x = lu_solve(&f, &b);
                 let y = a.matvec(&x);
                 for i in 0..n {

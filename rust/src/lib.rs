@@ -21,11 +21,22 @@
 //! - [`mem`] — DDR4 multi-channel bandwidth model (Fig 3).
 //! - [`net`] — 1 GbE + MPI-collective cost models (Fig 5).
 //! - [`hpl`] / [`stream`] — the benchmarks themselves, with real numerics.
-//! - [`sched`] / [`cluster`] — SLURM-like scheduler and node inventory.
+//! - [`sched`] / [`cluster`] — SLURM-like scheduler and node inventory,
+//!   with a parallel per-partition drain for independent job streams.
 //! - [`runtime`] — PJRT client executing the JAX/Pallas-authored HLO
 //!   artifacts (`artifacts/*.hlo.txt`); Python never runs at this layer.
-//! - [`coordinator`] — experiment drivers regenerating every paper figure.
+//! - [`coordinator`] — the declarative campaign engine: a
+//!   [`coordinator::Workload`] trait (STREAM, HPL, BLIS-ablation
+//!   implementations) plus a [`coordinator::CampaignSpec`] describing a
+//!   benchmark campaign as *data* — buildable in code or parsed from a
+//!   `util::config` file — which `run_campaign_spec` estimates in
+//!   parallel, schedules, monitors, and reports. The paper's own 9-job
+//!   campaign is `CampaignSpec::paper_default()`; figure renderers live
+//!   alongside in [`coordinator::report`].
+//! - [`error`] — the typed [`CimoneError`] every layer above reports
+//!   failures with (convertible into the crate-wide [`Result`]).
 
+pub mod error;
 pub mod util;
 pub mod arch;
 pub mod isa;
@@ -40,6 +51,8 @@ pub mod sched;
 pub mod cluster;
 pub mod runtime;
 pub mod coordinator;
+
+pub use error::CimoneError;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -13,11 +13,15 @@
 //! cimone run-hpl [--n 256 --nb 32]   real-numerics HPL + residual check
 //! cimone validate [--artifacts dir]  PJRT artifacts vs native numerics
 //! cimone campaign [--n 96]           end-to-end: SLURM sim + monitor
+//!         [--spec file.toml]         ... driven by a declarative campaign spec
 //! cimone translate-demo              section 3.3.1 RVV 1.0 -> 0.7.1 retrofit
 //! ```
 
-use cimone::coordinator::{driver, report};
+use cimone::cluster::monte_cimone_v2;
+use cimone::coordinator::{driver, report, CampaignSpec};
+use cimone::error::CimoneError;
 use cimone::hpl::driver::{run as hpl_run, Backend, HplConfig};
+use cimone::hpl::validate::HPL_THRESHOLD;
 use cimone::isa::asm::render_program;
 use cimone::isa::translate::rvv10_to_thead;
 use cimone::ukernel::{MicroKernel, PanelLayout, UkernelId};
@@ -42,7 +46,7 @@ fn main() {
     std::process::exit(code);
 }
 
-fn run(args: &Args) -> Result<(), String> {
+fn run(args: &Args) -> Result<(), CimoneError> {
     match args.subcommand.as_deref() {
         Some("stream") => {
             println!("{}", report::render_fig3());
@@ -76,11 +80,12 @@ fn run(args: &Args) -> Result<(), String> {
             let backend = match args.get("lib") {
                 None => Backend::Native,
                 Some(l) => Backend::SimulatedBlas(
-                    UkernelId::parse(l).ok_or_else(|| format!("unknown library `{l}`"))?,
+                    UkernelId::parse(l)
+                        .ok_or_else(|| CimoneError::Cli(format!("unknown library `{l}`")))?,
                 ),
             };
-            let r = hpl_run(&HplConfig { n, nb, seed: args.get_usize("seed", 42)? as u64, backend })
-                .map_err(|e| e)?;
+            let r =
+                hpl_run(&HplConfig { n, nb, seed: args.get_usize("seed", 42)? as u64, backend })?;
             println!(
                 "HPL n={} : {:.3}s host ({:.2} Gflop/s), residual {:.3e} -> {}",
                 r.n,
@@ -90,15 +95,28 @@ fn run(args: &Args) -> Result<(), String> {
                 if r.passed { "PASSED" } else { "FAILED" }
             );
             if !r.passed {
-                return Err("HPL residual check failed".into());
+                return Err(CimoneError::ResidualCheck {
+                    residual: r.residual,
+                    threshold: HPL_THRESHOLD,
+                });
             }
         }
         Some("validate") => {
             validate_artifacts(args)?;
         }
         Some("campaign") => {
-            let n = args.get_usize("n", 96)?;
-            let r = driver::run_campaign(n).map_err(|e| e)?;
+            // declarative path: --spec <file> describes the campaign;
+            // without it the paper's 9-job default runs
+            let mut spec = match args.get("spec") {
+                Some(path) => CampaignSpec::load(path)?,
+                None => CampaignSpec::paper_default(),
+            };
+            // an explicit --n overrides the spec's validation size
+            if args.get("n").is_some() {
+                spec.validate_n = args.get_usize("n", spec.validate_n)?;
+            }
+            let inv = monte_cimone_v2();
+            let r = driver::run_campaign_spec(&inv, &spec)?;
             println!("campaign: {} jobs, makespan {:.0}s (simulated)", r.jobs.len(), r.makespan_s);
             println!(
                 "validation: HPL residual {:.3e} ({}), STREAM {}",
@@ -115,12 +133,15 @@ fn run(args: &Args) -> Result<(), String> {
             let prog = kernel.program(PanelLayout::new(8, 4, 1));
             println!("--- BLIS rv64iv micro-kernel (RVV 1.0), one k-step ---");
             println!("{}", render_program(&prog));
-            let translated = rvv10_to_thead(&prog).map_err(|e| e.to_string())?;
+            let translated =
+                rvv10_to_thead(&prog).map_err(|e| CimoneError::Machine(e.to_string()))?;
             println!("\n--- retrofitted to XuanTie theadvector (RVV 0.7.1) ---");
             println!("{}", render_program(&translated));
         }
         Some(other) => {
-            return Err(format!("unknown subcommand `{other}` (see --help in README)"));
+            return Err(CimoneError::Cli(format!(
+                "unknown subcommand `{other}` (see --help in README)"
+            )));
         }
         None => {
             println!("usage: cimone <stream|hpl|cluster-hpl|cache-miss|blis-compare|headline|report-all|run-hpl|validate|campaign|translate-demo>");
@@ -130,21 +151,22 @@ fn run(args: &Args) -> Result<(), String> {
 }
 
 /// `cimone validate`: run the PJRT artifacts against native numerics.
-fn validate_artifacts(args: &Args) -> Result<(), String> {
+fn validate_artifacts(args: &Args) -> Result<(), CimoneError> {
     use cimone::runtime::{entries, Runtime};
-    let dir = args.get_or("artifacts", &cimone::runtime::ArtifactManifest::default_dir()).to_string();
-    let mut rt = Runtime::with_dir(&dir).map_err(|e| e.to_string())?;
+    let dir =
+        args.get_or("artifacts", &cimone::runtime::ArtifactManifest::default_dir()).to_string();
+    let mut rt = Runtime::with_dir(&dir)?;
     println!("PJRT platform: {}", rt.platform());
     let n = rt.manifest.n_gemm;
 
     // GEMM artifact vs native
     let a = Matrix::random_hpl(n, n, 1);
     let b = Matrix::random_hpl(n, n, 2);
-    let got = entries::gemm(&mut rt, &a, &b).map_err(|e| e.to_string())?;
+    let got = entries::gemm(&mut rt, &a, &b)?;
     let mut want = Matrix::zeros(n, n);
     Matrix::gemm_acc(&mut want, &a, &b);
     if !got.allclose(&want, 1e-10, 1e-10) {
-        return Err("gemm_256 artifact disagrees with native GEMM".into());
+        return Err(CimoneError::Runtime("gemm_256 artifact disagrees with native GEMM".into()));
     }
     println!("gemm_256          OK ({n}x{n})");
 
@@ -153,11 +175,11 @@ fn validate_artifacts(args: &Args) -> Result<(), String> {
     let b8 = Matrix::random_hpl(64, 8, 4);
     let c8 = Matrix::random_hpl(8, 8, 5);
     for variant in ["lmul1", "lmul4"] {
-        let got = entries::ukernel(&mut rt, variant, &a8, &b8, &c8).map_err(|e| e.to_string())?;
+        let got = entries::ukernel(&mut rt, variant, &a8, &b8, &c8)?;
         let mut want = c8.clone();
         Matrix::gemm_acc(&mut want, &a8, &b8);
         if !got.allclose(&want, 1e-10, 1e-10) {
-            return Err(format!("ukernel_{variant} artifact mismatch"));
+            return Err(CimoneError::Runtime(format!("ukernel_{variant} artifact mismatch")));
         }
         println!("ukernel_{variant}     OK (8x8x64)");
     }
@@ -166,11 +188,14 @@ fn validate_artifacts(args: &Args) -> Result<(), String> {
     let ns = rt.manifest.n_stream;
     let sa: Vec<f64> = (0..ns).map(|i| (i % 97) as f64 * 0.5).collect();
     let sb: Vec<f64> = (0..ns).map(|i| (i % 89) as f64 * 0.25).collect();
-    let got = entries::stream(&mut rt, "triad", &sa, Some(&sb)).map_err(|e| e.to_string())?;
+    let got = entries::stream(&mut rt, "triad", &sa, Some(&sb))?;
     for i in (0..ns).step_by(ns / 17) {
         let want = sa[i] + 3.0 * sb[i];
         if (got[i] - want).abs() > 1e-12 {
-            return Err(format!("stream_triad mismatch at {i}: {} vs {want}", got[i]));
+            return Err(CimoneError::Runtime(format!(
+                "stream_triad mismatch at {i}: {} vs {want}",
+                got[i]
+            )));
         }
     }
     println!("stream_triad      OK ({ns} elems)");

@@ -6,6 +6,10 @@ use anyhow::{anyhow, Context, Result};
 
 use super::artifacts::ArtifactManifest;
 use super::executable::LoadedExecutable;
+// without the `pjrt` feature the xla-rs bindings are replaced by a stub
+// whose client constructor fails gracefully (see xla_stub.rs)
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub as xla;
 
 /// The runtime: PJRT client + manifest + compiled-executable cache.
 ///

@@ -3,6 +3,8 @@
 use anyhow::{anyhow, Context, Result};
 
 use super::artifacts::EntryMeta;
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub as xla;
 
 /// One compiled entry point.
 pub struct LoadedExecutable {

@@ -11,6 +11,8 @@ pub mod artifacts;
 pub mod client;
 pub mod executable;
 pub mod entries;
+#[cfg(not(feature = "pjrt"))]
+pub(crate) mod xla_stub;
 
 pub use artifacts::{ArtifactManifest, EntryMeta};
 pub use client::Runtime;

@@ -1,6 +1,8 @@
 //! The four STREAM kernels, exactly as stream.c defines them
 //! (FP64, q = 3.0), plus the validation pass stream.c performs.
 
+use crate::error::CimoneError;
+
 pub const Q: f64 = 3.0;
 
 /// c[i] = a[i]
@@ -45,7 +47,7 @@ pub fn bytes_per_elem(kernel: &str) -> u64 {
 
 /// stream.c's end-of-run validation: run the canonical sequence from the
 /// canonical initial values and check the final arrays.
-pub fn validate_kernels(n: usize) -> Result<(), String> {
+pub fn validate_kernels(n: usize) -> Result<(), CimoneError> {
     let mut a = vec![1.0; n];
     let mut b = vec![2.0; n];
     let mut c = vec![0.0; n];
@@ -58,7 +60,7 @@ pub fn validate_kernels(n: usize) -> Result<(), String> {
     // expected: c0=1, b=3, c=1+3=4, a=3+3*4=15
     for (i, (&ai, (&bi, &ci))) in a.iter().zip(b.iter().zip(c.iter())).enumerate() {
         if (ai - 15.0).abs() > 1e-13 || (bi - 3.0).abs() > 1e-13 || (ci - 4.0).abs() > 1e-13 {
-            return Err(format!("validation failed at {i}: a={ai} b={bi} c={ci}"));
+            return Err(CimoneError::StreamValidation { index: i, a: ai, b: bi, c: ci });
         }
     }
     Ok(())

@@ -1,6 +1,7 @@
 //! Micro-kernel trait + registry.
 
 use super::layout::PanelLayout;
+use crate::error::CimoneError;
 use crate::isa::exec::VecMachine;
 use crate::isa::inst::Program;
 use crate::util::Matrix;
@@ -71,13 +72,19 @@ pub trait MicroKernel {
 
     /// Execute the kernel on real data via the functional machine.
     /// Returns the updated C tile.
-    fn run(&self, a: &Matrix, b: &Matrix, c: &Matrix, vlen_bits: usize) -> Result<Matrix, String> {
+    fn run(
+        &self,
+        a: &Matrix,
+        b: &Matrix,
+        c: &Matrix,
+        vlen_bits: usize,
+    ) -> Result<Matrix, CimoneError> {
         let (mr, nr) = self.tile();
         let layout = PanelLayout::new(mr, nr, a.cols());
         let prog = self.program(layout);
         let mut m = VecMachine::new(vlen_bits, layout.mem_words());
         m.mem = layout.pack(a, b, c);
-        m.run(&prog)?;
+        m.run(&prog).map_err(CimoneError::Machine)?;
         Ok(layout.unpack_c(&m.mem))
     }
 }

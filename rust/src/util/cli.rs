@@ -4,6 +4,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::error::CimoneError;
+
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -15,13 +17,13 @@ pub struct Args {
 
 impl Args {
     /// Parse from an iterator of raw args (without argv[0]).
-    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, CimoneError> {
         let mut out = Args::default();
         let mut it = raw.into_iter().peekable();
         while let Some(tok) = it.next() {
             if let Some(name) = tok.strip_prefix("--") {
                 if name.is_empty() {
-                    return Err("bare `--` not supported".into());
+                    return Err(CimoneError::Cli("bare `--` not supported".into()));
                 }
                 if let Some((k, v)) = name.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
@@ -41,7 +43,7 @@ impl Args {
     }
 
     /// Parse the process arguments.
-    pub fn from_env() -> Result<Args, String> {
+    pub fn from_env() -> Result<Args, CimoneError> {
         Args::parse(std::env::args().skip(1))
     }
 
@@ -57,27 +59,39 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CimoneError> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| format!("--{name}: expected integer, got `{v}`")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CimoneError::Cli(format!("--{name}: expected integer, got `{v}`"))),
         }
     }
 
-    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CimoneError> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| format!("--{name}: expected float, got `{v}`")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CimoneError::Cli(format!("--{name}: expected float, got `{v}`"))),
         }
     }
 
     /// Comma-separated usize list (e.g. `--cores 1,8,16,32,64`).
-    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+    pub fn get_usize_list(
+        &self,
+        name: &str,
+        default: &[usize],
+    ) -> Result<Vec<usize>, CimoneError> {
         match self.get(name) {
             None => Ok(default.to_vec()),
             Some(v) => v
                 .split(',')
-                .map(|t| t.trim().parse().map_err(|_| format!("--{name}: bad entry `{t}`")))
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .map_err(|_| CimoneError::Cli(format!("--{name}: bad entry `{t}`")))
+                })
                 .collect(),
         }
     }

@@ -1,0 +1,123 @@
+//! Integration: the declarative campaign engine — Workload/CampaignSpec
+//! composed with the scheduler, monitor, and typed-error surface.
+
+use cimone::cluster::{monte_cimone_v2, Monitor};
+use cimone::coordinator::driver::{run_campaign, run_campaign_spec};
+use cimone::coordinator::CampaignSpec;
+use cimone::error::CimoneError;
+
+#[test]
+fn paper_default_spec_reproduces_seed_campaign() {
+    // 9 jobs, same names, Fig-5 ordering invariants — the frozen
+    // figure-reproduction script as a spec
+    let r = run_campaign(64).expect("campaign");
+    assert_eq!(r.jobs.len(), 9);
+    let names: Vec<&str> = r.jobs.iter().map(|(n, _, _)| n.as_str()).collect();
+    assert_eq!(
+        names,
+        [
+            "stream-mcv1",
+            "stream-mcv2-1s",
+            "stream-mcv2-2s",
+            "hpl-mcv1-full",
+            "hpl-mcv2-1s",
+            "hpl-mcv2-2n",
+            "hpl-mcv2-2s",
+            "hpl-blis-vanilla",
+            "hpl-blis-opt",
+        ]
+    );
+    let get = |n: &str| r.monitor.latest(n).unwrap();
+    assert!(get("hpl-mcv1-full.gflops") < get("hpl-mcv2-1s.gflops"));
+    assert!(get("hpl-mcv2-2n.gflops") < get("hpl-mcv2-2s.gflops"));
+    assert!(get("hpl-blis-opt.gflops") > get("hpl-blis-vanilla.gflops"));
+}
+
+#[test]
+fn unknown_partition_is_a_typed_error_not_a_panic() {
+    let inv = monte_cimone_v2();
+    let mut s = inv.scheduler();
+    match s.submit("lost", "gpu", 1, 10.0) {
+        Err(CimoneError::UnknownPartition(p)) => assert_eq!(p, "gpu"),
+        other => panic!("expected UnknownPartition, got {other:?}"),
+    }
+}
+
+#[test]
+fn empty_campaign_spec_drains_to_zero_makespan() {
+    let inv = monte_cimone_v2();
+    let spec = CampaignSpec { workloads: vec![], validate_n: 48 };
+    let r = run_campaign_spec(&inv, &spec).unwrap();
+    assert!(r.jobs.is_empty());
+    assert_eq!(r.makespan_s, 0.0);
+}
+
+#[test]
+fn monitor_latest_on_unrecorded_metric_is_none() {
+    let mon = Monitor::new();
+    assert_eq!(mon.latest("never.recorded"), None);
+    // ... and stays None for metrics the campaign never produced
+    let r = run_campaign(48).unwrap();
+    assert_eq!(r.monitor.latest("hpl-mcv3.gflops"), None);
+}
+
+#[test]
+fn spec_file_roundtrip_through_config() {
+    // a campaign scenario the hardcoded driver could never express:
+    // 2-node HPL on the MCv1 partition next to a dual-socket STREAM job
+    let text = r#"
+[campaign]
+validate_n = 48
+
+[[workload]]
+kind = "hpl"
+name = "hpl-mcv1-2n"
+node = "mcv1"
+partition = "mcv1"
+nodes = 2
+cores_per_node = 4
+lib = "openblas-generic"
+
+[[workload]]
+kind = "stream"
+name = "stream-dual"
+node = "mcv2-dual"
+partition = "mcv2"
+threads = 128
+"#;
+    let spec = CampaignSpec::parse(text).unwrap();
+    assert_eq!(spec.len(), 2);
+    let inv = monte_cimone_v2();
+    let r = run_campaign_spec(&inv, &spec).unwrap();
+    assert_eq!(r.jobs.len(), 2);
+    assert!(r.monitor.latest("hpl-mcv1-2n.gflops").unwrap() > 0.0);
+    assert!(r.monitor.latest("stream-dual.bandwidth").unwrap() > 1e9);
+    assert!(r.makespan_s > 0.0);
+}
+
+#[test]
+fn oversubscribed_campaign_queues_and_completes() {
+    // 4 single-node jobs on the 4-node mcv2 partition + one 4-wide job:
+    // the wide job must wait for the whole partition, so the makespan
+    // exceeds the longest single job
+    let mut text = String::from("[campaign]\nvalidate_n = 48\n");
+    for i in 0..4 {
+        text.push_str(&format!(
+            "\n[[workload]]\nkind = \"stream\"\nname = \"s{i}\"\nnode = \"mcv2\"\npartition = \"mcv2\"\nthreads = 64\n"
+        ));
+    }
+    text.push_str(
+        "\n[[workload]]\nkind = \"hpl\"\nname = \"wide\"\nnode = \"mcv2\"\npartition = \"mcv2\"\nnodes = 4\ncluster_nodes = 4\ncores_per_node = 64\n",
+    );
+    let spec = CampaignSpec::parse(&text).unwrap();
+    let inv = monte_cimone_v2();
+    let r = run_campaign_spec(&inv, &spec).unwrap();
+    assert_eq!(r.jobs.len(), 5);
+    let longest_single = r.jobs.iter().map(|(_, t, _)| *t).fold(0.0f64, f64::max);
+    assert!(
+        r.makespan_s > longest_single,
+        "wide job must queue: makespan {} vs longest {}",
+        r.makespan_s,
+        longest_single
+    );
+}

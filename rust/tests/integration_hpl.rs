@@ -3,6 +3,7 @@
 //! kernel -> JAX graph -> HLO -> Rust), and the solution passes HPL's own
 //! residual criterion.
 
+use cimone::error::CimoneError;
 use cimone::hpl::lu::{lu_blocked, lu_solve, native_update};
 use cimone::hpl::validate::{hpl_residual, HPL_THRESHOLD};
 use cimone::runtime::{entries, ArtifactManifest, Runtime};
@@ -27,7 +28,7 @@ fn hpl_with_pjrt_trailing_updates_passes_validation() {
     let b: Vec<f64> = (0..n).map(|_| rng.hpl_entry()).collect();
 
     let mut update = |c: &mut Matrix, l: &Matrix, u: &Matrix| {
-        entries::trailing_update(&mut rt, c, l, u).map_err(|e| e.to_string())
+        entries::trailing_update(&mut rt, c, l, u).map_err(CimoneError::from)
     };
     let f = lu_blocked(&a, nb, &mut update).expect("factorization");
     let x = lu_solve(&f, &b);
@@ -45,7 +46,7 @@ fn pjrt_and_native_factorizations_agree() {
 
     let f_native = lu_blocked(&a, nb, &mut native_update).unwrap();
     let mut update = |c: &mut Matrix, l: &Matrix, u: &Matrix| {
-        entries::trailing_update(&mut rt, c, l, u).map_err(|e| e.to_string())
+        entries::trailing_update(&mut rt, c, l, u).map_err(CimoneError::from)
     };
     let f_pjrt = lu_blocked(&a, nb, &mut update).unwrap();
 
