@@ -100,8 +100,14 @@ fn main() -> cimone::Result<()> {
         campaign.makespan_s / 3600.0,
         campaign.monitor.metric_count()
     );
-    for (name, _, metric) in &campaign.jobs {
-        println!("        {name:<18} -> {metric:.1}");
+    for j in &campaign.jobs {
+        println!(
+            "        {:<18} -> {:>8.1}  ({:.0} W/node, {:.0} kJ)",
+            j.name,
+            j.headline,
+            j.avg_node_w,
+            j.energy_j / 1e3
+        );
     }
 
     // --- 5. every figure ---

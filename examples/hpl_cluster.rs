@@ -6,7 +6,7 @@
 //! cargo run --release --example hpl_cluster
 //! ```
 
-use cimone::arch::presets;
+use cimone::arch::platform::{mcv1_u740, mcv2_pioneer};
 use cimone::coordinator::report;
 use cimone::hpl::model::{project, ClusterConfig};
 use cimone::net::Link;
@@ -19,9 +19,9 @@ fn main() {
 
     // N-sensitivity of the 2-node MCv2 configuration
     let mut t = Table::new(vec!["N", "2-node Gflop/s", "scaling vs 1 node", "comm share"]);
-    let one_node = project(&ClusterConfig::mcv2_default(presets::sg2042(), 1, 64)).gflops;
+    let one_node = project(&ClusterConfig::hpl_default(mcv2_pioneer(), 1, 64)).gflops;
     for n in [20_000usize, 40_000, 57_600, 80_000, 115_200] {
-        let mut cfg = ClusterConfig::mcv2_default(presets::sg2042(), 2, 64);
+        let mut cfg = ClusterConfig::hpl_default(mcv2_pioneer(), 2, 64);
         cfg.n = n;
         cfg.nb = 192;
         let p = project(&cfg);
@@ -37,11 +37,11 @@ fn main() {
     // network ablation
     let mut t = Table::new(vec!["fabric", "2-node Gflop/s", "scaling", "MCv1 8-node Gflop/s"]);
     for (name, link) in [("1 GbE (paper)", Link::gbe()), ("10 GbE (ablation)", Link::ten_gbe())] {
-        let mut cfg = ClusterConfig::mcv2_default(presets::sg2042(), 2, 64);
+        let mut cfg = ClusterConfig::hpl_default(mcv2_pioneer(), 2, 64);
         cfg.link = link;
         let p = project(&cfg);
-        let mut v1 = ClusterConfig::mcv2_default(presets::u740(), 8, 4);
-        v1.lib = cimone::ukernel::UkernelId::OpenblasGeneric;
+        // mcv1-u740's platform default is already OpenBLAS-generic
+        let mut v1 = ClusterConfig::hpl_default(mcv1_u740(), 8, 4);
         v1.link = link;
         t.row(vec![
             name.to_string(),
@@ -54,11 +54,6 @@ fn main() {
     println!(
         "conclusion: the 1 GbE that served MCv1 ({:.0}% efficiency) caps MCv2 scaling;\n\
          a 10 GbE fabric would restore near-linear 2-node scaling.",
-        100.0 * project(&{
-            let mut v1 = ClusterConfig::mcv2_default(presets::u740(), 8, 4);
-            v1.lib = cimone::ukernel::UkernelId::OpenblasGeneric;
-            v1
-        })
-        .efficiency_vs_one_node
+        100.0 * project(&ClusterConfig::hpl_default(mcv1_u740(), 8, 4)).efficiency_vs_one_node
     );
 }

@@ -21,10 +21,10 @@ fn main() -> cimone::Result<()> {
         println!(
             "  {:<9} {:<26} {:>3} cores {:>7.1} GF/s peak  {}",
             n.hostname,
-            n.desc.kind.label(),
+            n.platform.label,
             n.cores(),
             n.peak_gflops(),
-            n.os
+            n.os()
         );
     }
 

@@ -29,7 +29,7 @@ fn main() {
     }
 
     let b = Bench::default();
-    let d = presets::sg2042();
+    let d = cimone::arch::platform::mcv2_pioneer();
     let m1 = b.run("PerfModel::new (cycle analysis)", || {
         std::hint::black_box(PerfModel::new(&d, UkernelId::OpenblasC920));
     });

@@ -14,7 +14,7 @@ fn main() {
     println!("{}", report::render_fig5());
 
     // communication breakdown for the 2-node case (the paper's point)
-    let cfg = ClusterConfig::mcv2_default(cimone::arch::presets::sg2042(), 2, 64);
+    let cfg = ClusterConfig::hpl_default(cimone::arch::platform::mcv2_pioneer(), 2, 64);
     let p = project(&cfg);
     println!(
         "2-node breakdown: comp {:.0}s, comm {:.0}s ({:.0}% overhead) at N={}",

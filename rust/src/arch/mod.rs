@@ -1,17 +1,29 @@
-//! Hardware architecture descriptors for the Monte Cimone fleet.
+//! Hardware architecture descriptors — the open platform API.
 //!
-//! The paper's testbed spans two SoC generations:
-//! - MCv1: SiFive Freedom U740 (E4 RV007 blades) — no vector unit.
-//! - MCv2: Sophgo Sophon SG2042 (Milk-V Pioneer / SR1-2208A0) — 64 × T-Head
-//!   C920 cores with RVV 0.7.1.
+//! The layer has three levels:
 //!
-//! These descriptors parameterize every model downstream: the ISA timing
-//! model reads pipeline widths, the cache simulator reads the hierarchy
-//! geometry, the DDR model reads channel counts, and the HPL projection
-//! reads peak FLOP rates.
+//! - [`soc`] — raw geometry types ([`CoreModel`], [`CacheGeom`],
+//!   [`MemorySystem`], [`Socket`], [`SocDescriptor`]) that parameterize
+//!   every model downstream: the ISA timing model reads pipeline widths,
+//!   the cache simulator reads hierarchy geometry, the DDR model reads
+//!   channel counts, and the HPL projection reads peak FLOP rates.
+//! - [`presets`] — concrete descriptors for each SoC generation: U740
+//!   (MCv1), SG2042 single/dual socket (MCv2), and the SG2044 / MCv3
+//!   successors from arXiv 2508.13840 and 2605.22831.
+//! - [`platform`] — the data-driven registry. A [`Platform`] bundles a
+//!   descriptor with its [`platform::PowerModel`], perf calibration
+//!   ([`platform::PerfCalib`]), partition/hostname/OS identity and
+//!   default BLAS library; a [`PlatformRegistry`] resolves them by
+//!   string id or alias. Everything above (power, perf calibration,
+//!   workloads, inventories, campaign specs) goes through the registry,
+//!   so adding a SoC generation is a `register()` call — or a
+//!   `[[platform]]` section in a campaign spec file — instead of a
+//!   cross-cutting enum match.
 
+pub mod platform;
 pub mod presets;
 pub mod soc;
 
-pub use presets::{sg2042, sg2042_dual, u740};
-pub use soc::{CacheGeom, CoreModel, MemorySystem, NodeKind, Socket, SocDescriptor};
+pub use platform::{PerfCalib, Platform, PlatformRegistry, PowerModel};
+pub use presets::{sg2042, sg2042_dual, sg2044_dual, u740};
+pub use soc::{CacheGeom, CoreModel, MemorySystem, Socket, SocDescriptor};

@@ -1,0 +1,598 @@
+//! The open platform API: a [`Platform`] bundles everything the stack
+//! needs to know about one SoC generation — hardware geometry
+//! ([`SocDescriptor`]), a [`PowerModel`], perf-calibration constants
+//! ([`PerfCalib`]), scheduling identity (partition, hostname prefix, OS
+//! image) and the default BLAS library — registered by string id in a
+//! [`PlatformRegistry`].
+//!
+//! This replaces the closed `NodeKind` enum the seed matched on in five
+//! modules: adding a SoC generation is now a [`PlatformRegistry::register`]
+//! call (or a `[[platform]]` section in a campaign spec file), not a
+//! cross-cutting code change. The built-in fleet covers the paper plus
+//! its successors:
+//!
+//! | id             | node                                    | source            |
+//! |----------------|-----------------------------------------|-------------------|
+//! | `mcv1-u740`    | E4 RV007 blade, SiFive U740             | the paper (MCv1)  |
+//! | `mcv2-pioneer` | Milk-V Pioneer, 1x SG2042               | the paper (MCv2)  |
+//! | `mcv2-dual`    | Sophgo SR1-2208A0, 2x SG2042            | the paper (MCv2)  |
+//! | `sg2044`       | Pioneer II class, 1x SG2044 (C920v2)    | arXiv 2508.13840  |
+//! | `mcv3`         | projected MCv3 node, 2x SG2044          | arXiv 2605.22831  |
+//!
+//! Platforms validate their own invariants on registration (non-zero
+//! frequency, coherent socket/core counts, sane power and calibration
+//! constants) and report violations as typed
+//! [`CimoneError::InvalidPlatform`] values.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::presets;
+use super::soc::SocDescriptor;
+use crate::error::CimoneError;
+use crate::ukernel::UkernelId;
+use crate::util::config::Section;
+
+/// Node power as idle + per-active-core dynamic draw (Monte Cimone has
+/// carried fine-grained power monitoring since MCv1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerModel {
+    pub idle_w: f64,
+    pub per_core_active_w: f64,
+}
+
+impl PowerModel {
+    /// Whole-node draw with `active_cores` busy.
+    pub fn node_power(&self, active_cores: usize) -> f64 {
+        self.idle_w + self.per_core_active_w * active_cores as f64
+    }
+}
+
+/// Calibration constants of the node-level DGEMM/HPL performance model
+/// ([`crate::blas::perf::PerfModel`]); see DESIGN.md section 5.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PerfCalib {
+    /// Effective DGEMM DRAM traffic per FLOP (bytes). SG2042-class caches
+    /// hold ~0.25 B/flop at HPL block sizes; the U740's tiny L2 and
+    /// absent L3 force ~0.6 B/flop (EXPERIMENTS.md 'Calibration').
+    pub traffic_bytes_per_flop: f64,
+    /// SoC-wide SMP scaling friction per additional core.
+    pub smp_alpha: f64,
+    /// Steepness of the bandwidth-contention penalty.
+    pub bw_gamma: f64,
+}
+
+impl PerfCalib {
+    /// SG2042/SG2044-class calibration (large shared L3).
+    pub fn sg2042_class() -> PerfCalib {
+        PerfCalib { traffic_bytes_per_flop: 0.25, smp_alpha: 0.002, bw_gamma: 1.375 }
+    }
+
+    /// U740-class calibration (no L3, 2 MB L2).
+    pub fn u740_class() -> PerfCalib {
+        PerfCalib { traffic_bytes_per_flop: 0.60, smp_alpha: 0.002, bw_gamma: 1.375 }
+    }
+}
+
+/// One registrable node platform: hardware + power + calibration +
+/// fleet identity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Platform {
+    /// Registry key and config-file spelling (e.g. `mcv2-pioneer`).
+    pub id: String,
+    /// Human label used in reports (e.g. `MCv2 1-socket (SG2042)`).
+    pub label: String,
+    /// Alternate spec-file spellings (`sg2042`, `pioneer`, ...).
+    pub aliases: Vec<String>,
+    /// SLURM partition nodes of this platform join.
+    pub partition: String,
+    /// Hostname prefix in [`crate::cluster::Inventory::from_fleet`];
+    /// platforms sharing a prefix share one hostname counter (the paper
+    /// numbers Pioneer boxes and the SR1 in one `mcv2-NN` sequence).
+    pub host_prefix: String,
+    /// OS image, as the fleet records it.
+    pub os: String,
+    /// BLAS library HPL defaults to on this platform.
+    pub default_lib: UkernelId,
+    pub desc: SocDescriptor,
+    pub power: PowerModel,
+    pub calib: PerfCalib,
+}
+
+impl Platform {
+    /// Does `name` refer to this platform (id or alias)?
+    pub fn matches(&self, name: &str) -> bool {
+        self.id == name || self.aliases.iter().any(|a| a == name)
+    }
+
+    /// Peak FP64 GFLOP/s of one node.
+    pub fn peak_gflops(&self) -> f64 {
+        self.desc.peak_flops() / 1e9
+    }
+
+    fn err(&self, reason: impl Into<String>) -> CimoneError {
+        CimoneError::InvalidPlatform { id: self.id.clone(), reason: reason.into() }
+    }
+
+    /// Check the platform's own invariants; every registration path runs
+    /// this, so malformed platforms never reach the models.
+    pub fn validate(&self) -> Result<(), CimoneError> {
+        if self.id.is_empty() || self.id.contains(char::is_whitespace) {
+            return Err(self.err("id must be non-empty and free of whitespace"));
+        }
+        if self.partition.is_empty() {
+            return Err(self.err("partition must be non-empty"));
+        }
+        if self.desc.sockets.is_empty() {
+            return Err(self.err("descriptor has no sockets"));
+        }
+        let cores0 = self.desc.sockets[0].cores;
+        for (i, s) in self.desc.sockets.iter().enumerate() {
+            if s.cores == 0 {
+                return Err(self.err(format!("socket {i} has zero cores")));
+            }
+            if s.cores != cores0 {
+                return Err(self.err(format!(
+                    "incoherent socket core counts ({} vs {} on socket {i})",
+                    cores0, s.cores
+                )));
+            }
+            let c = &s.core;
+            if !(c.freq_hz.is_finite() && c.freq_hz > 0.0) {
+                return Err(self.err(format!("socket {i}: core frequency must be finite and > 0")));
+            }
+            if c.vlen_bits > 0 && c.vfma_lanes_per_cycle == 0 {
+                return Err(self.err(format!("socket {i}: vector unit with zero FMA lanes")));
+            }
+            if c.vlen_bits == 0 && c.scalar_fma_per_cycle <= 0.0 {
+                return Err(self.err(format!("socket {i}: no vector unit and no scalar FMA path")));
+            }
+            let m = &s.mem;
+            if m.channels == 0 || !(m.channel_bw_bytes.is_finite() && m.channel_bw_bytes > 0.0) {
+                return Err(self.err(format!("socket {i}: memory channels/bandwidth must be > 0")));
+            }
+            if !(m.efficiency > 0.0 && m.efficiency <= 1.0) {
+                return Err(self.err(format!("socket {i}: memory efficiency must be in (0, 1]")));
+            }
+            if !(m.per_core_bw_bytes.is_finite() && m.per_core_bw_bytes > 0.0) {
+                return Err(self.err(format!("socket {i}: per-core bandwidth must be > 0")));
+            }
+            if m.capacity_bytes == 0 {
+                return Err(self.err(format!("socket {i}: zero memory capacity")));
+            }
+        }
+        if !(self.desc.numa_penalty > 0.0 && self.desc.numa_penalty <= 1.0) {
+            return Err(self.err("numa_penalty must be in (0, 1]"));
+        }
+        if self.desc.peak_flops() <= 0.0 {
+            return Err(self.err("zero peak FLOP/s"));
+        }
+        let p = &self.power;
+        if !(p.idle_w.is_finite() && p.idle_w >= 0.0)
+            || !(p.per_core_active_w.is_finite() && p.per_core_active_w >= 0.0)
+        {
+            return Err(self.err("power parameters must be finite and >= 0"));
+        }
+        let c = &self.calib;
+        if !(c.traffic_bytes_per_flop.is_finite() && c.traffic_bytes_per_flop > 0.0) {
+            return Err(self.err("traffic_bytes_per_flop must be finite and > 0"));
+        }
+        if !(c.smp_alpha.is_finite() && c.smp_alpha >= 0.0)
+            || !(c.bw_gamma.is_finite() && c.bw_gamma >= 0.0)
+        {
+            return Err(self.err("smp_alpha / bw_gamma must be finite and >= 0"));
+        }
+        Ok(())
+    }
+}
+
+/// MCv1 E4 RV007 blade (SiFive Freedom U740), as the paper fields it.
+pub fn mcv1_u740() -> Platform {
+    Platform {
+        id: "mcv1-u740".into(),
+        label: "MCv1 (U740)".into(),
+        aliases: vec!["mcv1".into(), "u740".into()],
+        partition: "mcv1".into(),
+        host_prefix: "mc".into(),
+        os: "Ubuntu 21.04".into(),
+        default_lib: UkernelId::OpenblasGeneric,
+        desc: presets::u740(),
+        // U740 SoC ~5 W + board overhead
+        power: PowerModel { idle_w: 25.0, per_core_active_w: 1.2 },
+        calib: PerfCalib::u740_class(),
+    }
+}
+
+/// MCv2 Milk-V Pioneer Box (1x SG2042, 128 GB).
+pub fn mcv2_pioneer() -> Platform {
+    Platform {
+        id: "mcv2-pioneer".into(),
+        label: "MCv2 1-socket (SG2042)".into(),
+        aliases: vec!["mcv2".into(), "sg2042".into(), "pioneer".into(), "mcv2-1s".into()],
+        partition: "mcv2".into(),
+        host_prefix: "mcv2".into(),
+        os: "Fedora 38".into(),
+        default_lib: UkernelId::OpenblasC920,
+        desc: presets::sg2042(),
+        // SG2042 TDP ~120 W/socket; Pioneer box idles ~60 W
+        power: PowerModel { idle_w: 60.0, per_core_active_w: 1.4 },
+        calib: PerfCalib::sg2042_class(),
+    }
+}
+
+/// MCv2 dual-socket Sophgo SR1-2208A0 (2x SG2042, 256 GB).
+pub fn mcv2_dual() -> Platform {
+    Platform {
+        id: "mcv2-dual".into(),
+        label: "MCv2 2-socket (SG2042x2)".into(),
+        aliases: vec!["sg2042-dual".into(), "dual".into(), "mcv2-2s".into(), "sr1-2208a0".into()],
+        partition: "mcv2".into(),
+        host_prefix: "mcv2".into(),
+        os: "Fedora 38".into(),
+        default_lib: UkernelId::OpenblasC920,
+        desc: presets::sg2042_dual(),
+        power: PowerModel { idle_w: 110.0, per_core_active_w: 1.4 },
+        calib: PerfCalib::sg2042_class(),
+    }
+}
+
+/// Sophon SG2044 evaluation node (Pioneer II class, 1 socket, DDR5) —
+/// the SG2042 successor Brown et al. evaluate in arXiv 2508.13840.
+pub fn sg2044() -> Platform {
+    Platform {
+        id: "sg2044".into(),
+        label: "SG2044 1-socket (C920v2)".into(),
+        aliases: vec!["sg2044-1s".into(), "pioneer-ii".into()],
+        partition: "sg2044".into(),
+        host_prefix: "sg2044".into(),
+        os: "Fedora 41".into(),
+        default_lib: UkernelId::OpenblasC920,
+        desc: presets::sg2044(),
+        // lower idle than the Pioneer (DDR5 PHY efficiency), hotter cores
+        // at 2.6 GHz
+        power: PowerModel { idle_w: 55.0, per_core_active_w: 1.7 },
+        calib: PerfCalib::sg2042_class(),
+    }
+}
+
+/// Projected Monte Cimone v3 node: dual-socket SG2044, 256 GB DDR5
+/// (arXiv 2605.22831 direction).
+pub fn mcv3() -> Platform {
+    Platform {
+        id: "mcv3".into(),
+        label: "MCv3 2-socket (SG2044x2)".into(),
+        aliases: vec!["mcv3-dual".into(), "sg2044-dual".into()],
+        partition: "mcv3".into(),
+        host_prefix: "mcv3".into(),
+        os: "Fedora 41".into(),
+        default_lib: UkernelId::OpenblasC920,
+        desc: presets::sg2044_dual(),
+        power: PowerModel { idle_w: 100.0, per_core_active_w: 1.7 },
+        calib: PerfCalib::sg2042_class(),
+    }
+}
+
+/// Platforms keyed by id, resolvable by id or alias.
+#[derive(Debug, Clone, Default)]
+pub struct PlatformRegistry {
+    by_id: BTreeMap<String, Arc<Platform>>,
+}
+
+impl PlatformRegistry {
+    /// An empty registry.
+    pub fn new() -> PlatformRegistry {
+        PlatformRegistry::default()
+    }
+
+    /// The built-in fleet: MCv1, both MCv2 node types, and the SG2044 /
+    /// MCv3 successors.
+    pub fn builtin() -> PlatformRegistry {
+        let mut reg = PlatformRegistry::new();
+        for p in [mcv1_u740(), mcv2_pioneer(), mcv2_dual(), sg2044(), mcv3()] {
+            reg.register(p).expect("built-in platforms are valid and unique");
+        }
+        reg
+    }
+
+    /// Validate and add a platform. Ids and aliases share one namespace;
+    /// any clash with an already-registered name is rejected.
+    pub fn register(&mut self, platform: Platform) -> Result<Arc<Platform>, CimoneError> {
+        platform.validate()?;
+        for name in std::iter::once(&platform.id).chain(platform.aliases.iter()) {
+            if self.resolve(name).is_some() {
+                return Err(CimoneError::DuplicatePlatform(name.clone()));
+            }
+        }
+        let arc = Arc::new(platform);
+        self.by_id.insert(arc.id.clone(), Arc::clone(&arc));
+        Ok(arc)
+    }
+
+    fn resolve(&self, name: &str) -> Option<&Arc<Platform>> {
+        self.by_id.get(name).or_else(|| self.by_id.values().find(|p| p.matches(name)))
+    }
+
+    /// Look a platform up by id or alias.
+    pub fn get(&self, name: &str) -> Result<Arc<Platform>, CimoneError> {
+        self.resolve(name).cloned().ok_or_else(|| CimoneError::UnknownPlatform {
+            id: name.to_string(),
+            known: self.ids().join(", "),
+        })
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.resolve(name).is_some()
+    }
+
+    /// Registered ids, sorted.
+    pub fn ids(&self) -> Vec<String> {
+        self.by_id.keys().cloned().collect()
+    }
+
+    /// All registered platforms, in id order.
+    pub fn platforms(&self) -> impl Iterator<Item = &Arc<Platform>> {
+        self.by_id.values()
+    }
+
+    /// Register a platform described by a `[[platform]]` campaign-spec
+    /// section: a required `base` platform (id or alias) plus overrides.
+    ///
+    /// ```text
+    /// [[platform]]
+    /// id = "sg2044-oc"
+    /// base = "sg2044"
+    /// freq_ghz = 3.0          # core clock
+    /// idle_w = 70.0           # power model
+    /// # other overrides: label, partition, os, host_prefix, default_lib,
+    /// # sockets, cores, mem_gb, channels, channel_bw_gb, mem_efficiency,
+    /// # per_core_bw_gb, numa_penalty, per_core_w,
+    /// # traffic_bytes_per_flop, smp_alpha, bw_gamma
+    /// ```
+    pub fn register_section(&mut self, sec: &Section) -> Result<Arc<Platform>, CimoneError> {
+        const KNOWN_KEYS: &[&str] = &[
+            "id",
+            "base",
+            "label",
+            "partition",
+            "os",
+            "host_prefix",
+            "default_lib",
+            "sockets",
+            "cores",
+            "freq_ghz",
+            "mem_gb",
+            "channels",
+            "channel_bw_gb",
+            "mem_efficiency",
+            "per_core_bw_gb",
+            "numa_penalty",
+            "idle_w",
+            "per_core_w",
+            "traffic_bytes_per_flop",
+            "smp_alpha",
+            "bw_gamma",
+        ];
+        let id = sec
+            .get("id")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| CimoneError::Spec("[[platform]]: missing string key `id`".into()))?
+            .to_string();
+        let spec_err =
+            |msg: String| -> CimoneError { CimoneError::Spec(format!("platform `{id}`: {msg}")) };
+        // a misspelled override must be a load-time error, not a platform
+        // silently identical to its base
+        if let Some(unknown) = sec.keys().find(|k| !KNOWN_KEYS.contains(&k.as_str())) {
+            return Err(spec_err(format!(
+                "unknown key `{unknown}` (known: {})",
+                KNOWN_KEYS.join(", ")
+            )));
+        }
+        let base = sec
+            .get("base")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| spec_err("missing string key `base`".into()))?;
+        let mut p: Platform = (*self.get(base)?).clone();
+        let base_label = p.label.clone();
+        p.id = id.clone();
+        p.aliases = Vec::new();
+        p.label = format!("{id} (custom, from {base_label})");
+        p.host_prefix = id.clone();
+
+        for (key, target) in [
+            ("label", &mut p.label),
+            ("partition", &mut p.partition),
+            ("os", &mut p.os),
+            ("host_prefix", &mut p.host_prefix),
+        ] {
+            if let Some(v) = sec.get(key) {
+                *target = v
+                    .as_str()
+                    .ok_or_else(|| spec_err(format!("`{key}` must be a string")))?
+                    .to_string();
+            }
+        }
+        if let Some(v) = sec.get("default_lib") {
+            let s = v.as_str().ok_or_else(|| spec_err("`default_lib` must be a string".into()))?;
+            p.default_lib = UkernelId::parse(s)
+                .ok_or_else(|| spec_err(format!("unknown library `{s}`")))?;
+        }
+
+        let get_f64 = |key: &str| -> Result<Option<f64>, CimoneError> {
+            match sec.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_float()
+                    .filter(|f| f.is_finite())
+                    .map(Some)
+                    .ok_or_else(|| spec_err(format!("`{key}` must be a finite number"))),
+            }
+        };
+        let get_usize = |key: &str| -> Result<Option<usize>, CimoneError> {
+            match sec.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_int()
+                    .filter(|i| *i > 0)
+                    .map(|i| Some(i as usize))
+                    .ok_or_else(|| spec_err(format!("`{key}` must be a positive int"))),
+            }
+        };
+
+        if let Some(n) = get_usize("sockets")? {
+            let proto = p.desc.sockets[0].clone();
+            p.desc.sockets = vec![proto; n];
+        }
+        for s in &mut p.desc.sockets {
+            if let Some(c) = get_usize("cores")? {
+                s.cores = c;
+            }
+            if let Some(f) = get_f64("freq_ghz")? {
+                s.core.freq_hz = f * 1e9;
+            }
+            if let Some(g) = get_f64("mem_gb")? {
+                s.mem.capacity_bytes = (g * (1u64 << 30) as f64) as u64;
+            }
+            if let Some(c) = get_usize("channels")? {
+                s.mem.channels = c;
+            }
+            if let Some(b) = get_f64("channel_bw_gb")? {
+                s.mem.channel_bw_bytes = b * 1e9;
+            }
+            if let Some(e) = get_f64("mem_efficiency")? {
+                s.mem.efficiency = e;
+            }
+            if let Some(b) = get_f64("per_core_bw_gb")? {
+                s.mem.per_core_bw_bytes = b * 1e9;
+            }
+        }
+        if let Some(v) = get_f64("numa_penalty")? {
+            p.desc.numa_penalty = v;
+        }
+        if let Some(v) = get_f64("idle_w")? {
+            p.power.idle_w = v;
+        }
+        if let Some(v) = get_f64("per_core_w")? {
+            p.power.per_core_active_w = v;
+        }
+        if let Some(v) = get_f64("traffic_bytes_per_flop")? {
+            p.calib.traffic_bytes_per_flop = v;
+        }
+        if let Some(v) = get_f64("smp_alpha")? {
+            p.calib.smp_alpha = v;
+        }
+        if let Some(v) = get_f64("bw_gamma")? {
+            p.calib.bw_gamma = v;
+        }
+        self.register(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_fleet_registers_and_resolves_aliases() {
+        let reg = PlatformRegistry::builtin();
+        assert_eq!(reg.ids(), ["mcv1-u740", "mcv2-dual", "mcv2-pioneer", "mcv3", "sg2044"]);
+        assert_eq!(reg.get("mcv1").unwrap().id, "mcv1-u740");
+        assert_eq!(reg.get("sg2042").unwrap().id, "mcv2-pioneer");
+        assert_eq!(reg.get("sr1-2208a0").unwrap().id, "mcv2-dual");
+        assert_eq!(reg.get("pioneer-ii").unwrap().id, "sg2044");
+        assert_eq!(reg.get("sg2044-dual").unwrap().id, "mcv3");
+    }
+
+    #[test]
+    fn unknown_platform_is_typed_and_lists_known_ids() {
+        let reg = PlatformRegistry::builtin();
+        match reg.get("epyc") {
+            Err(CimoneError::UnknownPlatform { id, known }) => {
+                assert_eq!(id, "epyc");
+                assert!(known.contains("mcv2-pioneer"), "{known}");
+            }
+            other => panic!("expected UnknownPlatform, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_id_and_alias_rejected() {
+        let mut reg = PlatformRegistry::builtin();
+        assert!(matches!(reg.register(sg2044()), Err(CimoneError::DuplicatePlatform(_))));
+        // an alias clashing with an existing alias is also a duplicate
+        let mut p = sg2044();
+        p.id = "sg2044-b".into();
+        p.aliases = vec!["pioneer-ii".into()];
+        assert!(matches!(reg.register(p), Err(CimoneError::DuplicatePlatform(_))));
+    }
+
+    #[test]
+    fn validation_catches_broken_invariants() {
+        let mut p = mcv2_pioneer();
+        p.desc.sockets[0].core.freq_hz = 0.0;
+        assert!(matches!(p.validate(), Err(CimoneError::InvalidPlatform { .. })));
+
+        let mut p = mcv2_dual();
+        p.desc.sockets[1].cores = 32; // incoherent with socket 0
+        assert!(matches!(p.validate(), Err(CimoneError::InvalidPlatform { .. })));
+
+        let mut p = sg2044();
+        p.calib.traffic_bytes_per_flop = 0.0;
+        assert!(matches!(p.validate(), Err(CimoneError::InvalidPlatform { .. })));
+
+        let mut p = mcv3();
+        p.desc.numa_penalty = 1.5;
+        assert!(matches!(p.validate(), Err(CimoneError::InvalidPlatform { .. })));
+    }
+
+    #[test]
+    fn sg2044_peak_exceeds_sg2042() {
+        assert!(sg2044().peak_gflops() > mcv2_pioneer().peak_gflops());
+        assert!(mcv3().peak_gflops() > mcv2_dual().peak_gflops());
+    }
+
+    #[test]
+    fn custom_platform_from_section_inherits_and_overrides() {
+        use crate::util::config::Config;
+        let cfg = Config::parse(
+            "[[platform]]\nid = \"sg2044-oc\"\nbase = \"sg2044\"\nfreq_ghz = 3.0\nidle_w = 70.0\n",
+        )
+        .unwrap();
+        let mut reg = PlatformRegistry::builtin();
+        let p = reg.register_section(&cfg.table_arrays["platform"][0]).unwrap();
+        assert_eq!(p.id, "sg2044-oc");
+        assert!((p.desc.sockets[0].core.freq_hz - 3.0e9).abs() < 1.0);
+        assert!((p.power.idle_w - 70.0).abs() < 1e-9);
+        // inherited geometry
+        assert_eq!(p.desc.sockets[0].cores, 64);
+        assert_eq!(reg.get("sg2044-oc").unwrap().id, "sg2044-oc");
+    }
+
+    #[test]
+    fn custom_platform_unknown_key_is_rejected() {
+        use crate::util::config::Config;
+        // `freq_gz` (misspelled) must not silently produce a stock clone
+        let cfg = Config::parse(
+            "[[platform]]\nid = \"typo\"\nbase = \"sg2044\"\nfreq_gz = 3.0\n",
+        )
+        .unwrap();
+        let mut reg = PlatformRegistry::builtin();
+        match reg.register_section(&cfg.table_arrays["platform"][0]) {
+            Err(CimoneError::Spec(m)) => assert!(m.contains("unknown key `freq_gz`"), "{m}"),
+            other => panic!("expected Spec error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn custom_platform_bad_override_is_rejected() {
+        use crate::util::config::Config;
+        let cfg = Config::parse(
+            "[[platform]]\nid = \"dud\"\nbase = \"sg2044\"\nmem_efficiency = 2.0\n",
+        )
+        .unwrap();
+        let mut reg = PlatformRegistry::builtin();
+        assert!(matches!(
+            reg.register_section(&cfg.table_arrays["platform"][0]),
+            Err(CimoneError::InvalidPlatform { .. })
+        ));
+    }
+}

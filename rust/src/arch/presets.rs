@@ -1,7 +1,13 @@
-//! Concrete descriptors for the Monte Cimone fleet, from the paper and
-//! the SG2042 TRM (paper refs [9], [10]).
+//! Concrete hardware descriptors for the Monte Cimone fleet and its
+//! successors: the paper and the SG2042 TRM (paper refs [9], [10]) for
+//! MCv1/MCv2, arXiv 2508.13840 (Brown) for the SG2044, and arXiv
+//! 2605.22831 for the Monte Cimone v3 direction.
+//!
+//! These are raw [`SocDescriptor`] building blocks. The platform layer
+//! ([`crate::arch::platform`]) bundles them with power models and perf
+//! calibration into registrable [`crate::arch::platform::Platform`]s.
 
-use super::soc::{CacheGeom, CoreModel, MemorySystem, NodeKind, Socket, SocDescriptor};
+use super::soc::{CacheGeom, CoreModel, MemorySystem, Socket, SocDescriptor};
 
 const GB: u64 = 1 << 30;
 
@@ -19,6 +25,24 @@ pub fn c920() -> CoreModel {
         vlen_bits: 128,
         vfma_lanes_per_cycle: 2,
         vinst_dispatch_cycles: 2.0,
+        scalar_fma_per_cycle: 1.0,
+        lsu_per_cycle: 1.0,
+    }
+}
+
+/// T-Head C920v2 core as integrated in the SG2044 (arXiv 2508.13840).
+///
+/// Same VLEN-128 FP64 datapath as the C920 but clocked at 2.6 GHz,
+/// speaking ratified RVV 1.0 natively, and with a reworked front end:
+/// `vinst_dispatch_cycles` = 1.0 models the halved vector-dispatch
+/// serialization Brown et al. observe relative to the SG2042.
+pub fn c920v2() -> CoreModel {
+    CoreModel {
+        freq_hz: 2.6e9,
+        issue_width: 2,
+        vlen_bits: 128,
+        vfma_lanes_per_cycle: 2,
+        vinst_dispatch_cycles: 1.0,
         scalar_fma_per_cycle: 1.0,
         lsu_per_cycle: 1.0,
     }
@@ -67,11 +91,31 @@ fn sg2042_socket() -> Socket {
     }
 }
 
+fn sg2044_socket() -> Socket {
+    Socket {
+        cores: 64,
+        core: c920v2(),
+        l1d: CacheGeom { size_bytes: 64 * 1024, line_bytes: 64, ways: 8, shared_by: 1 },
+        // 2 MB L2 per 4-core cluster
+        l2: CacheGeom { size_bytes: 2 << 20, line_bytes: 64, ways: 16, shared_by: 4 },
+        l3: Some(CacheGeom { size_bytes: 64 << 20, line_bytes: 64, ways: 16, shared_by: 64 }),
+        mem: MemorySystem {
+            channels: 4,
+            channel_bw_bytes: 44.8e9, // DDR5-5600
+            // Brown et al.: roughly half the theoretical 179.2 GB/s is
+            // attainable from the cores — a big step over the SG2042's
+            // 41% but still short of x86 controllers
+            efficiency: 0.50,
+            per_core_bw_bytes: 3.0e9,
+            capacity_bytes: 128 * GB,
+        },
+    }
+}
+
 /// MCv2 Milk-V Pioneer Box: single SG2042, 128 GB DDR4.
 pub fn sg2042() -> SocDescriptor {
     SocDescriptor {
-        name: "milkv-pioneer",
-        kind: NodeKind::Mcv2Pioneer,
+        name: "milkv-pioneer".into(),
         sockets: vec![sg2042_socket()],
         numa_penalty: 1.0,
     }
@@ -83,18 +127,37 @@ pub fn sg2042() -> SocDescriptor {
 /// HPL ratio (2 x 0.88 = 1.76).
 pub fn sg2042_dual() -> SocDescriptor {
     SocDescriptor {
-        name: "sophgo-sr1-2208a0",
-        kind: NodeKind::Mcv2DualSocket,
+        name: "sophgo-sr1-2208a0".into(),
         sockets: vec![sg2042_socket(), sg2042_socket()],
         numa_penalty: 0.88,
+    }
+}
+
+/// SG2044 evaluation system (Milk-V Pioneer II class): single SG2044,
+/// 128 GB DDR5 (arXiv 2508.13840).
+pub fn sg2044() -> SocDescriptor {
+    SocDescriptor {
+        name: "milkv-pioneer-ii".into(),
+        sockets: vec![sg2044_socket()],
+        numa_penalty: 1.0,
+    }
+}
+
+/// Projected MCv3-class dual-socket SG2044 node, 256 GB DDR5
+/// (arXiv 2605.22831 direction). Slightly milder NUMA penalty than the
+/// SR1-2208A0: DDR5 leaves more headroom for cross-socket traffic.
+pub fn sg2044_dual() -> SocDescriptor {
+    SocDescriptor {
+        name: "mcv3-sg2044x2".into(),
+        sockets: vec![sg2044_socket(), sg2044_socket()],
+        numa_penalty: 0.90,
     }
 }
 
 /// MCv1 E4 RV007 blade: SiFive HiFive Unmatched (Freedom U740), 16 GB.
 pub fn u740() -> SocDescriptor {
     SocDescriptor {
-        name: "e4-rv007-u740",
-        kind: NodeKind::Mcv1U740,
+        name: "e4-rv007-u740".into(),
         sockets: vec![Socket {
             cores: 4,
             core: u74(),
@@ -112,16 +175,6 @@ pub fn u740() -> SocDescriptor {
             },
         }],
         numa_penalty: 1.0,
-    }
-}
-
-/// Look a preset up by name (config files / CLI).
-pub fn by_name(name: &str) -> Option<SocDescriptor> {
-    match name {
-        "u740" | "mcv1" => Some(u740()),
-        "sg2042" | "mcv2" | "pioneer" => Some(sg2042()),
-        "sg2042-dual" | "mcv2-dual" | "sr1-2208a0" => Some(sg2042_dual()),
-        _ => None,
     }
 }
 
@@ -161,10 +214,21 @@ mod tests {
     }
 
     #[test]
-    fn by_name_roundtrip() {
-        assert_eq!(by_name("mcv1").unwrap().kind, NodeKind::Mcv1U740);
-        assert_eq!(by_name("sg2042").unwrap().kind, NodeKind::Mcv2Pioneer);
-        assert_eq!(by_name("mcv2-dual").unwrap().kind, NodeKind::Mcv2DualSocket);
-        assert!(by_name("epyc").is_none());
+    fn sg2044_outclasses_sg2042() {
+        // higher clock => higher peak, DDR5 => more attainable bandwidth
+        let old = sg2042();
+        let new = sg2044();
+        assert!(new.peak_flops() > old.peak_flops());
+        assert!(
+            new.sockets[0].mem.attainable_bw() > 1.5 * old.sockets[0].mem.attainable_bw()
+        );
+    }
+
+    #[test]
+    fn sg2044_dual_doubles_sg2044() {
+        let one = sg2044();
+        let two = sg2044_dual();
+        assert_eq!(two.total_cores(), 2 * one.total_cores());
+        assert_eq!(two.total_memory(), 2 * one.total_memory());
     }
 }

@@ -96,42 +96,12 @@ impl Socket {
     }
 }
 
-/// What kind of node this is, for reports.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum NodeKind {
-    /// MCv1 blade: SiFive HiFive Unmatched board (U740).
-    Mcv1U740,
-    /// MCv2 Milk-V Pioneer Box (1x SG2042, 128 GB).
-    Mcv2Pioneer,
-    /// MCv2 dual-socket SR1-2208A0 (2x SG2042, 256 GB).
-    Mcv2DualSocket,
-}
-
-impl NodeKind {
-    pub fn label(&self) -> &'static str {
-        match self {
-            NodeKind::Mcv1U740 => "MCv1 (U740)",
-            NodeKind::Mcv2Pioneer => "MCv2 1-socket (SG2042)",
-            NodeKind::Mcv2DualSocket => "MCv2 2-socket (SG2042x2)",
-        }
-    }
-
-    /// Parse the config-file spelling of a node kind (campaign specs).
-    pub fn parse(s: &str) -> Option<NodeKind> {
-        match s {
-            "mcv1" | "u740" | "mcv1-u740" => Some(NodeKind::Mcv1U740),
-            "mcv2" | "sg2042" | "pioneer" | "mcv2-1s" => Some(NodeKind::Mcv2Pioneer),
-            "mcv2-dual" | "sg2042-dual" | "dual" | "mcv2-2s" => Some(NodeKind::Mcv2DualSocket),
-            _ => None,
-        }
-    }
-}
-
-/// A full node descriptor (possibly multi-socket).
+/// A full node descriptor (possibly multi-socket). Pure hardware
+/// geometry — identity, power and calibration live one level up in
+/// [`crate::arch::platform::Platform`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct SocDescriptor {
-    pub name: &'static str,
-    pub kind: NodeKind,
+    pub name: String,
     pub sockets: Vec<Socket>,
     /// Attained-bandwidth penalty when threads span sockets without
     /// symmetric pinning (NUMA effect the paper observes on the

@@ -5,52 +5,41 @@
 //! 1. **Per-core rate** — the ISA cycle model's effective GFLOP/s for the
 //!    library's micro-kernel ([`crate::ukernel::analysis`]).
 //! 2. **SMP friction** — SoC-wide scaling loss (mesh/L3/controller
-//!    serialization): `1 / (1 + ALPHA*(n-1))`, library-independent. At 64
-//!    cores this is 0.888 — the "both of them experience a degradation"
-//!    observation under Fig 4.
+//!    serialization): `1 / (1 + alpha*(n-1))`, library-independent. At 64
+//!    cores the SG2042 calibration gives 0.888 — the "both of them
+//!    experience a degradation" observation under Fig 4.
 //! 3. **Bandwidth contention** — when the library's aggregate DRAM demand
 //!    (rate x traffic-per-flop x cores) exceeds the socket's attainable
 //!    STREAM bandwidth, a hyperbolic penalty kicks in:
-//!    `1 / (1 + GAMMA * excess_ratio)`. Fast vector kernels (OpenBLAS-opt,
+//!    `1 / (1 + gamma * excess_ratio)`. Fast vector kernels (OpenBLAS-opt,
 //!    BLIS-opt) cross this knee near 48 cores; slow ones never do — which
 //!    is exactly why the generic/optimized efficiency ratio *rises* from
 //!    0.68 to 0.89 across Fig 4.
 //! 4. **NUMA penalty** — multiplied once when a job spans two sockets
 //!    (0.88, giving the paper's 1.76x dual/single ratio).
+//!
+//! All three constants live in the platform's [`PerfCalib`] — the model
+//! itself is platform-agnostic and works for any registered platform.
 
-use crate::arch::soc::{NodeKind, SocDescriptor};
+use crate::arch::platform::{PerfCalib, Platform};
+use crate::arch::soc::SocDescriptor;
 use crate::ukernel::analysis;
 use crate::ukernel::UkernelId;
 
-/// SoC-wide SMP scaling friction (per additional core).
-pub const SMP_ALPHA: f64 = 0.002;
-/// Steepness of the bandwidth-contention penalty.
-pub const BW_GAMMA: f64 = 1.375;
-
-/// Effective DGEMM DRAM traffic per FLOP (bytes), per node family.
-/// Calibrated: the SG2042 at HPL block sizes moves ~0.25 B/flop; the U740's
-/// tiny L2 and absent L3 force ~0.6 B/flop (see EXPERIMENTS.md
-/// 'Calibration').
-pub fn traffic_bytes_per_flop(kind: NodeKind) -> f64 {
-    match kind {
-        NodeKind::Mcv1U740 => 0.60,
-        NodeKind::Mcv2Pioneer | NodeKind::Mcv2DualSocket => 0.25,
-    }
-}
-
-/// Node-level performance model for one library on one node type.
+/// Node-level performance model for one library on one platform.
 pub struct PerfModel<'a> {
     pub desc: &'a SocDescriptor,
+    pub calib: PerfCalib,
     pub lib: UkernelId,
     /// Per-core effective DGEMM GFLOP/s at 1 core (cycle model output).
     pub per_core_gflops: f64,
 }
 
 impl<'a> PerfModel<'a> {
-    pub fn new(desc: &'a SocDescriptor, lib: UkernelId) -> Self {
-        let core = &desc.sockets[0].core;
+    pub fn new(platform: &'a Platform, lib: UkernelId) -> Self {
+        let core = &platform.desc.sockets[0].core;
         let per_core_gflops = analysis::analyze(lib, core).effective_gflops;
-        PerfModel { desc, lib, per_core_gflops }
+        PerfModel { desc: &platform.desc, calib: platform.calib, lib, per_core_gflops }
     }
 
     /// Combined scaling factor at `n` active cores on one socket.
@@ -58,13 +47,13 @@ impl<'a> PerfModel<'a> {
         if n == 0 {
             return 0.0;
         }
-        let base = 1.0 / (1.0 + SMP_ALPHA * (n as f64 - 1.0));
+        let base = 1.0 / (1.0 + self.calib.smp_alpha * (n as f64 - 1.0));
         let socket = &self.desc.sockets[0];
         let bw = socket.mem.attainable_bw();
         let demand =
-            self.per_core_gflops * 1e9 * traffic_bytes_per_flop(self.desc.kind) * n as f64;
+            self.per_core_gflops * 1e9 * self.calib.traffic_bytes_per_flop * n as f64;
         let excess = ((demand - bw) / bw).max(0.0);
-        base / (1.0 + BW_GAMMA * excess)
+        base / (1.0 + self.calib.bw_gamma * excess)
     }
 
     /// HPL GFLOP/s of this node with `cores` active, pinned symmetrically
@@ -94,11 +83,11 @@ impl<'a> PerfModel<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::presets::{sg2042, sg2042_dual, u740};
+    use crate::arch::platform::{mcv1_u740, mcv2_dual, mcv2_pioneer, mcv3, sg2044};
 
     #[test]
     fn fig4_one_core_rates() {
-        let d = sg2042();
+        let d = mcv2_pioneer();
         let opt = PerfModel::new(&d, UkernelId::OpenblasC920).node_gflops(1);
         let gen = PerfModel::new(&d, UkernelId::OpenblasGeneric).node_gflops(1);
         assert!((2.9..3.5).contains(&opt), "opt 1-core {opt:.2}");
@@ -109,7 +98,7 @@ mod tests {
     #[test]
     fn fig4_sixty_four_core_node() {
         // paper: MCv2 single-socket HPL ~ 244.9/1.76 ~ 139 Gflop/s
-        let d = sg2042();
+        let d = mcv2_pioneer();
         let opt = PerfModel::new(&d, UkernelId::OpenblasC920).node_gflops(64);
         assert!((125.0..155.0).contains(&opt), "64-core optimized {opt:.1}");
         // "which increases to 89% of the optimized one"
@@ -122,7 +111,7 @@ mod tests {
     fn fig4_relative_degradation_at_full_cores() {
         // both libraries lose per-core efficiency at 64 cores
         for id in [UkernelId::OpenblasC920, UkernelId::OpenblasGeneric] {
-            let d = sg2042();
+            let d = mcv2_pioneer();
             let m = PerfModel::new(&d, id);
             let eff64 = m.node_gflops(64) / 64.0;
             let eff1 = m.node_gflops(1);
@@ -133,7 +122,7 @@ mod tests {
     #[test]
     fn fig7_128_core_numbers() {
         // paper: OpenBLAS-opt 244.9, BLIS-vanilla 165.0, BLIS-opt 245.8
-        let d = sg2042_dual();
+        let d = mcv2_dual();
         let ob = PerfModel::new(&d, UkernelId::OpenblasC920).node_gflops(128);
         let bv = PerfModel::new(&d, UkernelId::BlisLmul1).node_gflops(128);
         let bo = PerfModel::new(&d, UkernelId::BlisLmul4).node_gflops(128);
@@ -150,8 +139,8 @@ mod tests {
     #[test]
     fn fig5_dual_socket_ratio() {
         // paper: dual-socket node = 1.76x single-socket node
-        let d1 = sg2042();
-        let d2 = sg2042_dual();
+        let d1 = mcv2_pioneer();
+        let d2 = mcv2_dual();
         let s = PerfModel::new(&d1, UkernelId::OpenblasC920).node_gflops(64);
         let d = PerfModel::new(&d2, UkernelId::OpenblasC920).node_gflops(128);
         let ratio = d / s;
@@ -161,8 +150,8 @@ mod tests {
     #[test]
     fn headline_127x_over_mcv1() {
         // paper abstract: "127x on HPL DP FLOP/s" node-vs-node
-        let v1 = u740();
-        let v2 = sg2042_dual();
+        let v1 = mcv1_u740();
+        let v2 = mcv2_dual();
         let old = PerfModel::new(&v1, UkernelId::OpenblasGeneric).node_gflops(4);
         let new = PerfModel::new(&v2, UkernelId::OpenblasC920).node_gflops(128);
         let ratio = new / old;
@@ -172,14 +161,31 @@ mod tests {
     #[test]
     fn mcv1_node_matches_cluster_math() {
         // 8 MCv1 nodes reached ~13 Gflop/s => ~1.6 per node
-        let v1 = u740();
+        let v1 = mcv1_u740();
         let node = PerfModel::new(&v1, UkernelId::OpenblasGeneric).node_gflops(4);
         assert!((1.3..2.0).contains(&node), "MCv1 node {node:.2}");
     }
 
     #[test]
+    fn sg2044_node_beats_sg2042_node() {
+        // arXiv 2508.13840: the C920v2 at 2.6 GHz with DDR5 clears the
+        // SG2042 on HPL at every core count
+        let old = mcv2_pioneer();
+        let new = sg2044();
+        for cores in [1usize, 16, 64] {
+            let o = PerfModel::new(&old, UkernelId::OpenblasC920).node_gflops(cores);
+            let n = PerfModel::new(&new, UkernelId::OpenblasC920).node_gflops(cores);
+            assert!(n.is_finite() && n > o, "at {cores} cores: sg2044 {n:.1} vs sg2042 {o:.1}");
+        }
+        // and the MCv3 dual-socket projection clears the SR1
+        let d_old = PerfModel::new(&mcv2_dual(), UkernelId::OpenblasC920).node_gflops(128);
+        let d_new = PerfModel::new(&mcv3(), UkernelId::OpenblasC920).node_gflops(128);
+        assert!(d_new > d_old, "mcv3 {d_new:.1} vs mcv2-dual {d_old:.1}");
+    }
+
+    #[test]
     fn sigma_monotone_nonincreasing() {
-        let d = sg2042();
+        let d = mcv2_pioneer();
         let m = PerfModel::new(&d, UkernelId::OpenblasC920);
         let mut last = f64::INFINITY;
         for n in [1, 2, 4, 8, 16, 32, 48, 64] {
@@ -192,7 +198,7 @@ mod tests {
 
     #[test]
     fn zero_cores_zero_gflops() {
-        let d = sg2042();
+        let d = mcv2_pioneer();
         let m = PerfModel::new(&d, UkernelId::BlisLmul4);
         assert_eq!(m.node_gflops(0), 0.0);
         assert_eq!(m.sigma(0), 0.0);
@@ -200,7 +206,7 @@ mod tests {
 
     #[test]
     fn cores_clamped_to_node() {
-        let d = sg2042();
+        let d = mcv2_pioneer();
         let m = PerfModel::new(&d, UkernelId::BlisLmul4);
         assert_eq!(m.node_gflops(64), m.node_gflops(9999));
     }

@@ -1,12 +1,23 @@
-//! The Monte Cimone v2 fleet, as Section 3.1 describes it:
-//! 8 MCv1 blades (4 E4 RV007 servers x 2 boards) + 3 Milk-V Pioneer boxes
-//! + 1 dual-socket Sophgo SR1-2208A0, on one 1 Gb/s network, exposed as
-//! two SLURM partitions.
+//! Fleet inventories built from `(platform_id, count)` fleet specs.
+//!
+//! The paper's machine (Section 3.1) — 8 MCv1 blades + 3 Milk-V Pioneer
+//! boxes + 1 dual-socket Sophgo SR1-2208A0 on one 1 Gb/s network — is
+//! just [`PAPER_FLEET`] run through [`Inventory::from_fleet`]; any other
+//! fleet (SG2044 testbeds, MCv3 projections, custom platforms) is a
+//! different spec, not different code. SLURM-like partitions are derived
+//! from each platform's `partition` field, in fleet order.
+
+use std::collections::BTreeMap;
 
 use super::node::Node;
-use crate::arch::presets;
+use crate::arch::platform::PlatformRegistry;
+use crate::error::CimoneError;
 use crate::net::Link;
 use crate::sched::{Partition, Scheduler};
+
+/// The paper's fleet as a spec: `(platform id, node count)`.
+pub const PAPER_FLEET: &[(&str, usize)] =
+    &[("mcv1-u740", 8), ("mcv2-pioneer", 3), ("mcv2-dual", 1)];
 
 /// The full machine: nodes + fabric.
 #[derive(Debug, Clone)]
@@ -16,6 +27,29 @@ pub struct Inventory {
 }
 
 impl Inventory {
+    /// Build a fleet from `(platform_id, count)` pairs resolved against a
+    /// registry. Node ids are sequential in spec order; hostnames are
+    /// `<host_prefix>-NN` with one counter per prefix (which reproduces
+    /// the paper's `mc-01..08` / `mcv2-01..04` naming exactly).
+    pub fn from_fleet<S: AsRef<str>>(
+        registry: &PlatformRegistry,
+        fleet: &[(S, usize)],
+    ) -> Result<Inventory, CimoneError> {
+        let mut nodes = Vec::new();
+        let mut counters: BTreeMap<String, usize> = BTreeMap::new();
+        for (platform_id, count) in fleet {
+            let platform = registry.get(platform_id.as_ref())?;
+            for _ in 0..*count {
+                let n = counters.entry(platform.host_prefix.clone()).or_insert(0);
+                *n += 1;
+                let hostname = format!("{}-{:02}", platform.host_prefix, *n);
+                let id = nodes.len();
+                nodes.push(Node::new(id, hostname, platform.clone()));
+            }
+        }
+        Ok(Inventory { nodes, fabric: Link::gbe() })
+    }
+
     /// Node by *id* (not vector position — the two coincide in the
     /// standard fleet but diverge in pruned/reordered inventories).
     pub fn node(&self, id: usize) -> &Node {
@@ -25,17 +59,32 @@ impl Inventory {
             .unwrap_or_else(|| panic!("no node with id {id} in the inventory"))
     }
 
-    pub fn ids_of_kind(&self, kind: crate::arch::soc::NodeKind) -> Vec<usize> {
-        self.nodes.iter().filter(|n| n.desc.kind == kind).map(|n| n.id).collect()
+    /// Ids of every node whose platform matches `name` (id or alias).
+    pub fn ids_of_platform(&self, name: &str) -> Vec<usize> {
+        self.nodes.iter().filter(|n| n.platform.matches(name)).map(|n| n.id).collect()
     }
 
-    /// Build the SLURM-like scheduler with the paper's two partitions.
+    /// Build the SLURM-like scheduler: one partition per distinct
+    /// platform `partition` name, in node order.
     pub fn scheduler(&self) -> Scheduler {
-        use crate::arch::soc::NodeKind::*;
-        let mcv1 = self.ids_of_kind(Mcv1U740);
-        let mut mcv2 = self.ids_of_kind(Mcv2Pioneer);
-        mcv2.extend(self.ids_of_kind(Mcv2DualSocket));
-        Scheduler::new(vec![Partition::new("mcv1", mcv1), Partition::new("mcv2", mcv2)])
+        let mut order: Vec<String> = Vec::new();
+        let mut groups: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for n in &self.nodes {
+            let part = n.platform.partition.clone();
+            if !groups.contains_key(&part) {
+                order.push(part.clone());
+            }
+            groups.entry(part).or_default().push(n.id);
+        }
+        Scheduler::new(
+            order
+                .into_iter()
+                .map(|p| {
+                    let ids = groups.remove(&p).unwrap_or_default();
+                    Partition::new(p, ids)
+                })
+                .collect(),
+        )
     }
 
     /// Total peak FP64 of the machine.
@@ -46,32 +95,33 @@ impl Inventory {
 
 /// The MCv2 machine of the paper.
 pub fn monte_cimone_v2() -> Inventory {
-    let mut nodes = Vec::new();
-    // 8 MCv1 U740 boards
-    for i in 0..8 {
-        nodes.push(Node::new(i, format!("mc-{:02}", i + 1), presets::u740()));
-    }
-    // 3 Milk-V Pioneer boxes
-    for i in 0..3 {
-        nodes.push(Node::new(8 + i, format!("mcv2-{:02}", i + 1), presets::sg2042()));
-    }
-    // 1 dual-socket SR1-2208A0
-    nodes.push(Node::new(11, "mcv2-04", presets::sg2042_dual()));
-    Inventory { nodes, fabric: Link::gbe() }
+    Inventory::from_fleet(&PlatformRegistry::builtin(), PAPER_FLEET)
+        .expect("the paper fleet names built-in platforms")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::soc::NodeKind;
 
     #[test]
     fn fleet_matches_paper() {
         let inv = monte_cimone_v2();
         assert_eq!(inv.nodes.len(), 12);
-        assert_eq!(inv.ids_of_kind(NodeKind::Mcv1U740).len(), 8);
-        assert_eq!(inv.ids_of_kind(NodeKind::Mcv2Pioneer).len(), 3);
-        assert_eq!(inv.ids_of_kind(NodeKind::Mcv2DualSocket).len(), 1);
+        assert_eq!(inv.ids_of_platform("mcv1-u740").len(), 8);
+        assert_eq!(inv.ids_of_platform("mcv2-pioneer").len(), 3);
+        assert_eq!(inv.ids_of_platform("mcv2-dual").len(), 1);
+        // aliases resolve too
+        assert_eq!(inv.ids_of_platform("sg2042").len(), 3);
+    }
+
+    #[test]
+    fn hostnames_match_paper_naming() {
+        let inv = monte_cimone_v2();
+        assert_eq!(inv.node(0).hostname, "mc-01");
+        assert_eq!(inv.node(7).hostname, "mc-08");
+        assert_eq!(inv.node(8).hostname, "mcv2-01");
+        // the SR1 continues the mcv2 hostname sequence
+        assert_eq!(inv.node(11).hostname, "mcv2-04");
     }
 
     #[test]
@@ -93,5 +143,27 @@ mod tests {
         let inv = monte_cimone_v2();
         // 8*4 + 3*512 + 1024 = 32 + 2560 = ~2592
         assert!((inv.peak_gflops() - 2592.0).abs() < 5.0, "{}", inv.peak_gflops());
+    }
+
+    #[test]
+    fn next_gen_fleet_is_a_spec_not_a_refactor() {
+        // the whole point of the registry: an SG2044 + MCv3 testbed is data
+        let reg = PlatformRegistry::builtin();
+        let inv = Inventory::from_fleet(&reg, &[("sg2044", 4), ("mcv3", 2)]).unwrap();
+        assert_eq!(inv.nodes.len(), 6);
+        assert_eq!(inv.node(0).hostname, "sg2044-01");
+        assert_eq!(inv.node(4).hostname, "mcv3-01");
+        let s = inv.scheduler();
+        assert_eq!(s.partitions["sg2044"].size(), 4);
+        assert_eq!(s.partitions["mcv3"].size(), 2);
+    }
+
+    #[test]
+    fn unknown_fleet_platform_is_typed() {
+        let reg = PlatformRegistry::builtin();
+        assert!(matches!(
+            Inventory::from_fleet(&reg, &[("epyc", 2)]),
+            Err(CimoneError::UnknownPlatform { .. })
+        ));
     }
 }

@@ -1,6 +1,9 @@
 //! Cluster inventory, topology and monitoring — the Monte Cimone machine
-//! itself as a simulated object: node fleet (MCv1 blades + MCv2 Pioneers +
-//! the dual-socket SR1), the 1 GbE fabric, and an ExaMon-like metric sink.
+//! itself as a simulated object: a node fleet built from `(platform_id,
+//! count)` specs against the [`crate::arch::PlatformRegistry`] (the
+//! paper's MCv1 blades + MCv2 Pioneers + dual-socket SR1 is
+//! [`inventory::PAPER_FLEET`]), the 1 GbE fabric, and an ExaMon-like
+//! metric sink.
 
 pub mod inventory;
 pub mod monitor;

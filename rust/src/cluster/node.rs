@@ -1,53 +1,61 @@
-//! One cluster node: hardware descriptor + identity + runtime state.
+//! One cluster node: a platform instance with identity + runtime state.
 
-use crate::arch::soc::{NodeKind, SocDescriptor};
+use std::sync::Arc;
 
-/// A named node in the fleet.
+use crate::arch::platform::Platform;
+use crate::arch::soc::SocDescriptor;
+
+/// A named node in the fleet. Hardware, OS image and power model all
+/// come from the shared [`Platform`] the node instantiates.
 #[derive(Debug, Clone)]
 pub struct Node {
     pub id: usize,
     pub hostname: String,
-    pub desc: SocDescriptor,
-    /// OS image, as the paper records it (Ubuntu 21.04 on MCv1, Fedora 38
-    /// on MCv2).
-    pub os: &'static str,
+    pub platform: Arc<Platform>,
     pub up: bool,
 }
 
 impl Node {
-    pub fn new(id: usize, hostname: impl Into<String>, desc: SocDescriptor) -> Node {
-        let os = match desc.kind {
-            NodeKind::Mcv1U740 => "Ubuntu 21.04",
-            NodeKind::Mcv2Pioneer | NodeKind::Mcv2DualSocket => "Fedora 38",
-        };
-        Node { id, hostname: hostname.into(), desc, os, up: true }
+    pub fn new(id: usize, hostname: impl Into<String>, platform: Arc<Platform>) -> Node {
+        Node { id, hostname: hostname.into(), platform, up: true }
+    }
+
+    /// Hardware descriptor of this node's platform.
+    pub fn desc(&self) -> &SocDescriptor {
+        &self.platform.desc
+    }
+
+    /// OS image, as the fleet records it (Ubuntu 21.04 on MCv1, Fedora
+    /// on MCv2 and later).
+    pub fn os(&self) -> &str {
+        &self.platform.os
     }
 
     pub fn cores(&self) -> usize {
-        self.desc.total_cores()
+        self.platform.desc.total_cores()
     }
 
     pub fn peak_gflops(&self) -> f64 {
-        self.desc.peak_flops() / 1e9
+        self.platform.desc.peak_flops() / 1e9
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::presets;
+    use crate::arch::platform;
 
     #[test]
     fn os_follows_generation() {
-        let v1 = Node::new(0, "mc-01", presets::u740());
-        let v2 = Node::new(8, "mcv2-01", presets::sg2042());
-        assert_eq!(v1.os, "Ubuntu 21.04");
-        assert_eq!(v2.os, "Fedora 38");
+        let v1 = Node::new(0, "mc-01", Arc::new(platform::mcv1_u740()));
+        let v2 = Node::new(8, "mcv2-01", Arc::new(platform::mcv2_pioneer()));
+        assert_eq!(v1.os(), "Ubuntu 21.04");
+        assert_eq!(v2.os(), "Fedora 38");
     }
 
     #[test]
     fn peak_gflops_sane() {
-        let v2 = Node::new(0, "x", presets::sg2042());
+        let v2 = Node::new(0, "x", Arc::new(platform::mcv2_pioneer()));
         assert!((v2.peak_gflops() - 512.0).abs() < 1.0);
     }
 }

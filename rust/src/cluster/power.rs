@@ -1,46 +1,26 @@
-//! Node power model (Monte Cimone has carried fine-grained power
-//! monitoring since MCv1; we model socket power as idle + per-active-core
-//! dynamic draw so efficiency tables can be produced).
+//! Node power accounting (Monte Cimone has carried fine-grained power
+//! monitoring since MCv1). The [`PowerModel`] itself lives on the
+//! [`Platform`] — idle + per-active-core dynamic draw, data-driven per
+//! registered platform instead of matched on a closed enum — and this
+//! module keeps the fleet-level efficiency helpers.
 
-use crate::arch::soc::{NodeKind, SocDescriptor};
+pub use crate::arch::platform::PowerModel;
+use crate::arch::platform::Platform;
 
-/// Power parameters per node kind (published SG2042/U740 figures).
-#[derive(Debug, Clone, Copy)]
-pub struct PowerModel {
-    pub idle_w: f64,
-    pub per_core_active_w: f64,
-}
-
-impl PowerModel {
-    pub fn for_kind(kind: NodeKind) -> PowerModel {
-        match kind {
-            // U740 SoC ~5 W + board overhead
-            NodeKind::Mcv1U740 => PowerModel { idle_w: 25.0, per_core_active_w: 1.2 },
-            // SG2042 TDP ~120 W/socket; Pioneer box idles ~60 W
-            NodeKind::Mcv2Pioneer => PowerModel { idle_w: 60.0, per_core_active_w: 1.4 },
-            NodeKind::Mcv2DualSocket => PowerModel { idle_w: 110.0, per_core_active_w: 1.4 },
-        }
-    }
-
-    pub fn node_power(&self, active_cores: usize) -> f64 {
-        self.idle_w + self.per_core_active_w * active_cores as f64
-    }
-}
-
-/// GFLOP/s per watt for a given HPL rate.
-pub fn efficiency_gflops_per_w(desc: &SocDescriptor, active_cores: usize, gflops: f64) -> f64 {
-    let p = PowerModel::for_kind(desc.kind).node_power(active_cores);
-    gflops / p
+/// GFLOP/s per watt of one node of `platform` running `active_cores`
+/// cores at `gflops`.
+pub fn efficiency_gflops_per_w(platform: &Platform, active_cores: usize, gflops: f64) -> f64 {
+    gflops / platform.power.node_power(active_cores)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::presets;
+    use crate::arch::platform;
 
     #[test]
     fn power_scales_with_cores() {
-        let pm = PowerModel::for_kind(NodeKind::Mcv2Pioneer);
+        let pm = platform::mcv2_pioneer().power;
         assert!(pm.node_power(64) > pm.node_power(1));
         assert!((pm.node_power(64) - (60.0 + 1.4 * 64.0)).abs() < 1e-9);
     }
@@ -48,8 +28,18 @@ mod tests {
     #[test]
     fn mcv2_more_efficient_than_mcv1() {
         // ~139 GF at ~150 W vs ~1.6 GF at ~30 W
-        let v2 = efficiency_gflops_per_w(&presets::sg2042(), 64, 139.0);
-        let v1 = efficiency_gflops_per_w(&presets::u740(), 4, 1.63);
+        let v2 = efficiency_gflops_per_w(&platform::mcv2_pioneer(), 64, 139.0);
+        let v1 = efficiency_gflops_per_w(&platform::mcv1_u740(), 4, 1.63);
         assert!(v2 > 10.0 * v1, "v2={v2:.3} v1={v1:.3}");
+    }
+
+    #[test]
+    fn sg2044_generation_power_is_registered_data() {
+        // new generations carry their own power model — no enum to extend
+        let p = platform::sg2044();
+        assert!(p.power.node_power(64) > p.power.idle_w);
+        let e_new = efficiency_gflops_per_w(&p, 64, 250.0);
+        let e_old = efficiency_gflops_per_w(&platform::mcv2_pioneer(), 64, 139.0);
+        assert!(e_new > e_old, "new {e_new:.2} vs old {e_old:.2}");
     }
 }

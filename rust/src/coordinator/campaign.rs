@@ -1,12 +1,14 @@
 //! Declarative campaign descriptions: the benchmark campaign as *data*.
 //!
 //! A [`CampaignSpec`] is an ordered list of [`WorkloadSpec`] descriptors
-//! plus the real-numerics validation problem size. It can be built in
-//! code ([`CampaignSpec::paper_default`] reproduces the paper's 9-job
-//! campaign exactly) or parsed from a `util::config` TOML-subset file
-//! ([`CampaignSpec::load`] / [`CampaignSpec::from_config`]), so new
-//! scenarios — more node kinds, other libraries, different node counts à
-//! la Monte Cimone v3 — are config changes, not code changes.
+//! plus the fleet it runs on and the real-numerics validation problem
+//! size. It can be built in code ([`CampaignSpec::paper_default`]
+//! reproduces the paper's 9-job campaign exactly) or parsed from a
+//! `util::config` TOML-subset file ([`CampaignSpec::load`] /
+//! [`CampaignSpec::from_config`]). Workloads and fleet entries name
+//! platforms by [`PlatformRegistry`] id (or alias), so new scenarios —
+//! SG2044 testbeds, Monte Cimone v3 projections, user-defined platform
+//! variants — are config changes, not code changes.
 //!
 //! Spec file format (`cimone campaign --spec file.toml`):
 //!
@@ -14,23 +16,32 @@
 //! [campaign]
 //! validate_n = 96          # real-numerics HPL validation size
 //!
+//! [[platform]]             # optional: derive a custom platform
+//! id = "sg2044-oc"
+//! base = "sg2044"          # any registered id or alias
+//! freq_ghz = 3.0           # see arch::platform for all override keys
+//!
+//! [[fleet]]                # optional: the machine to simulate;
+//! platform = "sg2044"      # omitted => the paper's 12-node fleet
+//! count = 4
+//!
 //! [[workload]]
 //! kind = "stream"          # stream | hpl | blis-ablation
-//! name = "stream-mcv2-1s"
-//! node = "mcv2"            # node kind: mcv1 | mcv2 | mcv2-dual
-//! partition = "mcv2"
+//! name = "stream-sg2044"
+//! platform = "sg2044"      # registry id or alias (`node` also accepted)
+//! partition = "sg2044"
 //! nodes = 1
 //! threads = 64
 //!
 //! [[workload]]
 //! kind = "hpl"
-//! name = "hpl-mcv2-2n"
-//! node = "mcv2"
-//! partition = "mcv2"
+//! name = "hpl-sg2044-2n"
+//! platform = "sg2044"
+//! partition = "sg2044"
 //! nodes = 2
 //! cores_per_node = 64
 //! # cluster_nodes = 2      # defaults to `nodes`
-//! # lib = "openblas-c920"  # defaults to the MCv2 library
+//! # lib = "openblas-c920"  # defaults to the platform's library
 //!
 //! [[workload]]
 //! kind = "blis-ablation"
@@ -38,10 +49,12 @@
 //! partition = "mcv2"
 //! lib = "blis-opt"
 //! cores = 128
+//! # platform = "mcv2-dual" # default
 //! # runtime_s = 3600
 //! ```
 
-use crate::arch::soc::NodeKind;
+use crate::arch::platform::{Platform, PlatformRegistry};
+use crate::cluster::inventory::{Inventory, PAPER_FLEET};
 use crate::error::CimoneError;
 use crate::ukernel::UkernelId;
 use crate::util::config::{Config, Section, Value};
@@ -49,19 +62,27 @@ use crate::util::config::{Config, Section, Value};
 use super::workload::{BlisAblationWorkload, HplWorkload, StreamWorkload, Workload};
 
 /// One workload descriptor — plain data, buildable from code or config.
+/// Platforms are named by registry id or alias.
 #[derive(Debug, Clone, PartialEq)]
 pub enum WorkloadSpec {
-    Stream { name: String, partition: String, nodes: usize, kind: NodeKind, threads: usize },
+    Stream { name: String, partition: String, nodes: usize, platform: String, threads: usize },
     Hpl {
         name: String,
         partition: String,
         nodes: usize,
-        kind: NodeKind,
+        platform: String,
         cluster_nodes: usize,
         cores_per_node: usize,
         lib: Option<UkernelId>,
     },
-    BlisAblation { name: String, partition: String, lib: UkernelId, cores: usize, runtime_s: f64 },
+    BlisAblation {
+        name: String,
+        partition: String,
+        platform: String,
+        lib: UkernelId,
+        cores: usize,
+        runtime_s: f64,
+    },
 }
 
 impl WorkloadSpec {
@@ -74,17 +95,26 @@ impl WorkloadSpec {
         }
     }
 
+    /// Platform id (or alias) the workload targets.
+    pub fn platform(&self) -> &str {
+        match self {
+            WorkloadSpec::Stream { platform, .. }
+            | WorkloadSpec::Hpl { platform, .. }
+            | WorkloadSpec::BlisAblation { platform, .. } => platform,
+        }
+    }
+
     /// Instantiate the runnable workload this descriptor names.
     pub fn build(&self) -> Box<dyn Workload> {
         match self.clone() {
-            WorkloadSpec::Stream { name, partition, nodes, kind, threads } => {
-                Box::new(StreamWorkload { name, partition, nodes, kind, threads })
+            WorkloadSpec::Stream { name, partition, nodes, platform, threads } => {
+                Box::new(StreamWorkload { name, partition, nodes, platform, threads })
             }
             WorkloadSpec::Hpl {
                 name,
                 partition,
                 nodes,
-                kind,
+                platform,
                 cluster_nodes,
                 cores_per_node,
                 lib,
@@ -92,13 +122,13 @@ impl WorkloadSpec {
                 name,
                 partition,
                 nodes,
-                kind,
+                platform,
                 cluster_nodes,
                 cores_per_node,
                 lib,
             }),
-            WorkloadSpec::BlisAblation { name, partition, lib, cores, runtime_s } => {
-                Box::new(BlisAblationWorkload { name, partition, lib, cores, runtime_s })
+            WorkloadSpec::BlisAblation { name, partition, platform, lib, cores, runtime_s } => {
+                Box::new(BlisAblationWorkload { name, partition, platform, lib, cores, runtime_s })
             }
         }
     }
@@ -110,7 +140,7 @@ impl WorkloadSpec {
         match req_str(sec, "kind", &name)? {
             "stream" => Ok(WorkloadSpec::Stream {
                 nodes: opt_usize(sec, "nodes", &name)?.unwrap_or(1),
-                kind: req_node_kind(sec, &name)?,
+                platform: req_platform(sec, &name)?,
                 threads: opt_usize(sec, "threads", &name)?.ok_or_else(|| {
                     CimoneError::Spec(format!("workload `{name}`: missing `threads`"))
                 })?,
@@ -120,7 +150,7 @@ impl WorkloadSpec {
             "hpl" => {
                 let nodes = opt_usize(sec, "nodes", &name)?.unwrap_or(1);
                 Ok(WorkloadSpec::Hpl {
-                    kind: req_node_kind(sec, &name)?,
+                    platform: req_platform(sec, &name)?,
                     cluster_nodes: opt_usize(sec, "cluster_nodes", &name)?.unwrap_or(nodes),
                     cores_per_node: opt_usize(sec, "cores_per_node", &name)?.ok_or_else(
                         || CimoneError::Spec(format!("workload `{name}`: missing `cores_per_node`")),
@@ -132,6 +162,7 @@ impl WorkloadSpec {
                 })
             }
             "blis-ablation" => Ok(WorkloadSpec::BlisAblation {
+                platform: opt_platform(sec, &name)?.unwrap_or_else(|| "mcv2-dual".to_string()),
                 lib: opt_lib(sec, &name)?.ok_or_else(|| {
                     CimoneError::Spec(format!("workload `{name}`: missing `lib`"))
                 })?,
@@ -178,10 +209,26 @@ fn opt_usize(sec: &Section, key: &str, who: &str) -> Result<Option<usize>, Cimon
     }
 }
 
-fn req_node_kind(sec: &Section, who: &str) -> Result<NodeKind, CimoneError> {
-    let s = req_str(sec, "node", who)?;
-    NodeKind::parse(s)
-        .ok_or_else(|| CimoneError::Spec(format!("workload `{who}`: unknown node kind `{s}`")))
+/// The platform key: `platform = "..."` preferred, `node = "..."` kept as
+/// the legacy spelling.
+fn opt_platform(sec: &Section, who: &str) -> Result<Option<String>, CimoneError> {
+    for key in ["platform", "node"] {
+        if let Some(v) = sec.get(key) {
+            return v
+                .as_str()
+                .map(|s| Some(s.to_string()))
+                .ok_or_else(|| {
+                    CimoneError::Spec(format!("workload `{who}`: `{key}` must be a string"))
+                });
+        }
+    }
+    Ok(None)
+}
+
+fn req_platform(sec: &Section, who: &str) -> Result<String, CimoneError> {
+    opt_platform(sec, who)?.ok_or_else(|| {
+        CimoneError::Spec(format!("workload `{who}`: missing string key `platform`"))
+    })
 }
 
 fn opt_lib(sec: &Section, who: &str) -> Result<Option<UkernelId>, CimoneError> {
@@ -198,18 +245,30 @@ fn opt_lib(sec: &Section, who: &str) -> Result<Option<UkernelId>, CimoneError> {
     }
 }
 
-/// A full campaign: ordered workloads + validation problem size.
+/// A full campaign: ordered workloads, the fleet they run on, and the
+/// validation problem size.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CampaignSpec {
     pub workloads: Vec<WorkloadSpec>,
     /// Problem size for the real-numerics HPL validation run that anchors
     /// the campaign's modelled numbers in executed arithmetic.
     pub validate_n: usize,
+    /// `(platform_id, count)` fleet to simulate; empty means the paper's
+    /// 12-node machine ([`PAPER_FLEET`]).
+    pub fleet: Vec<(String, usize)>,
+    /// Platforms defined by `[[platform]]` sections, registered on top of
+    /// the built-ins when the spec builds its registry/inventory.
+    pub custom_platforms: Vec<Platform>,
 }
 
 impl Default for CampaignSpec {
     fn default() -> Self {
-        CampaignSpec { workloads: Vec::new(), validate_n: 96 }
+        CampaignSpec {
+            workloads: Vec::new(),
+            validate_n: 96,
+            fleet: Vec::new(),
+            custom_platforms: Vec::new(),
+        }
     }
 }
 
@@ -235,32 +294,38 @@ impl CampaignSpec {
     /// the four node configurations (Fig 5), and the BLIS micro-kernel
     /// ablation at 128 cores (Fig 7) — 9 jobs, in figure order.
     pub fn paper_default() -> CampaignSpec {
-        use NodeKind::*;
         let mut spec = CampaignSpec::new();
-        for (name, kind, partition, threads) in [
-            ("stream-mcv1", Mcv1U740, "mcv1", 4usize),
-            ("stream-mcv2-1s", Mcv2Pioneer, "mcv2", 64),
-            ("stream-mcv2-2s", Mcv2DualSocket, "mcv2", 64),
+        for (name, platform, partition, threads) in [
+            ("stream-mcv1", "mcv1-u740", "mcv1", 4usize),
+            ("stream-mcv2-1s", "mcv2-pioneer", "mcv2", 64),
+            ("stream-mcv2-2s", "mcv2-dual", "mcv2", 64),
         ] {
             spec.push(WorkloadSpec::Stream {
                 name: name.into(),
                 partition: partition.into(),
                 nodes: 1,
-                kind,
+                platform: platform.into(),
                 threads,
             });
         }
-        for (name, partition, nodes, kind, cores_per_node, lib) in [
-            ("hpl-mcv1-full", "mcv1", 8usize, Mcv1U740, 4usize, Some(UkernelId::OpenblasGeneric)),
-            ("hpl-mcv2-1s", "mcv2", 1, Mcv2Pioneer, 64, None),
-            ("hpl-mcv2-2n", "mcv2", 2, Mcv2Pioneer, 64, None),
-            ("hpl-mcv2-2s", "mcv2", 1, Mcv2DualSocket, 128, None),
+        for (name, partition, nodes, platform, cores_per_node, lib) in [
+            (
+                "hpl-mcv1-full",
+                "mcv1",
+                8usize,
+                "mcv1-u740",
+                4usize,
+                Some(UkernelId::OpenblasGeneric),
+            ),
+            ("hpl-mcv2-1s", "mcv2", 1, "mcv2-pioneer", 64, None),
+            ("hpl-mcv2-2n", "mcv2", 2, "mcv2-pioneer", 64, None),
+            ("hpl-mcv2-2s", "mcv2", 1, "mcv2-dual", 128, None),
         ] {
             spec.push(WorkloadSpec::Hpl {
                 name: name.into(),
                 partition: partition.into(),
                 nodes,
-                kind,
+                platform: platform.into(),
                 cluster_nodes: nodes,
                 cores_per_node,
                 lib,
@@ -273,6 +338,7 @@ impl CampaignSpec {
             spec.push(WorkloadSpec::BlisAblation {
                 name: name.into(),
                 partition: "mcv2".into(),
+                platform: "mcv2-dual".into(),
                 lib,
                 cores: 128,
                 runtime_s: 3600.0,
@@ -281,8 +347,11 @@ impl CampaignSpec {
         spec
     }
 
-    /// Build a campaign from a parsed config: `[campaign]` scalars plus
-    /// one `[[workload]]` table per job.
+    /// Build a campaign from a parsed config: `[campaign]` scalars,
+    /// optional `[[platform]]` definitions and `[[fleet]]` entries, plus
+    /// one `[[workload]]` table per job. Platform names (fleet and
+    /// workloads) are checked against the spec's own registry here, so a
+    /// typo is a typed error at load time, not at estimation time.
     pub fn from_config(cfg: &Config) -> Result<CampaignSpec, CimoneError> {
         let mut spec = CampaignSpec::new();
         if let Some(v) = cfg.get("campaign.validate_n") {
@@ -293,8 +362,28 @@ impl CampaignSpec {
                     CimoneError::Spec("campaign.validate_n must be a positive int".into())
                 })? as usize;
         }
+        let mut reg = PlatformRegistry::builtin();
+        for sec in cfg.table_arrays.get("platform").map(Vec::as_slice).unwrap_or(&[]) {
+            let p = reg.register_section(sec)?;
+            spec.custom_platforms.push((*p).clone());
+        }
+        for sec in cfg.table_arrays.get("fleet").map(Vec::as_slice).unwrap_or(&[]) {
+            // a misspelled key (e.g. `cout`) must not silently default
+            if let Some(unknown) = sec.keys().find(|k| k.as_str() != "platform" && k.as_str() != "count") {
+                return Err(CimoneError::Spec(format!(
+                    "[[fleet]]: unknown key `{unknown}` (known: platform, count)"
+                )));
+            }
+            let platform = req_str(sec, "platform", "[[fleet]]")?.to_string();
+            let count = opt_usize(sec, "count", "[[fleet]]")?.unwrap_or(1);
+            // resolve now so a bad fleet entry fails at load time
+            reg.get(&platform)?;
+            spec.fleet.push((platform, count));
+        }
         for sec in cfg.table_arrays.get("workload").map(Vec::as_slice).unwrap_or(&[]) {
-            spec.push(WorkloadSpec::from_section(sec)?);
+            let w = WorkloadSpec::from_section(sec)?;
+            reg.get(w.platform())?;
+            spec.push(w);
         }
         spec.validate()?;
         Ok(spec)
@@ -311,6 +400,28 @@ impl CampaignSpec {
             }
         }
         Ok(())
+    }
+
+    /// The platform registry this spec runs against: the built-in fleet
+    /// plus any `[[platform]]` definitions.
+    pub fn registry(&self) -> Result<PlatformRegistry, CimoneError> {
+        let mut reg = PlatformRegistry::builtin();
+        for p in &self.custom_platforms {
+            reg.register(p.clone())?;
+        }
+        Ok(reg)
+    }
+
+    /// Build the inventory this spec describes: its `[[fleet]]` entries
+    /// resolved against [`Self::registry`], or the paper's machine when
+    /// no fleet is given.
+    pub fn build_inventory(&self) -> Result<Inventory, CimoneError> {
+        let reg = self.registry()?;
+        if self.fleet.is_empty() {
+            Inventory::from_fleet(&reg, PAPER_FLEET)
+        } else {
+            Inventory::from_fleet(&reg, &self.fleet)
+        }
     }
 
     /// Parse a spec from config text.
@@ -349,6 +460,7 @@ mod tests {
             ]
         );
         assert_eq!(spec.validate_n, 96);
+        assert!(spec.fleet.is_empty(), "paper campaign runs the paper fleet");
     }
 
     const SAMPLE: &str = r#"
@@ -358,7 +470,7 @@ validate_n = 64
 [[workload]]
 kind = "stream"
 name = "stream-one"
-node = "mcv2"
+platform = "mcv2"
 partition = "mcv2"
 threads = 64
 
@@ -388,22 +500,25 @@ lib = "blis-opt"
                 name: "stream-one".into(),
                 partition: "mcv2".into(),
                 nodes: 1,
-                kind: NodeKind::Mcv2Pioneer,
+                platform: "mcv2".into(),
                 threads: 64,
             }
         );
         match &spec.workloads[1] {
-            WorkloadSpec::Hpl { nodes, cluster_nodes, cores_per_node, lib, .. } => {
+            WorkloadSpec::Hpl { nodes, cluster_nodes, cores_per_node, lib, platform, .. } => {
                 assert_eq!((*nodes, *cluster_nodes, *cores_per_node), (2, 2, 64));
                 assert!(lib.is_none());
+                // legacy `node =` spelling still parses
+                assert_eq!(platform, "mcv2");
             }
             other => panic!("expected Hpl, got {other:?}"),
         }
         match &spec.workloads[2] {
-            WorkloadSpec::BlisAblation { lib, cores, runtime_s, .. } => {
+            WorkloadSpec::BlisAblation { lib, cores, runtime_s, platform, .. } => {
                 assert_eq!(*lib, UkernelId::BlisLmul4);
                 assert_eq!(*cores, 128);
                 assert_eq!(*runtime_s, 3600.0);
+                assert_eq!(platform, "mcv2-dual");
             }
             other => panic!("expected BlisAblation, got {other:?}"),
         }
@@ -416,6 +531,15 @@ lib = "blis-opt"
         )
         .unwrap_err();
         assert!(matches!(err, CimoneError::Spec(ref m) if m.contains("unknown kind `dgemm`")));
+    }
+
+    #[test]
+    fn unknown_platform_in_workload_is_typed_at_load_time() {
+        let err = CampaignSpec::parse(
+            "[[workload]]\nkind = \"stream\"\nname = \"s\"\nplatform = \"epyc\"\npartition = \"mcv2\"\nthreads = 4\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CimoneError::UnknownPlatform { ref id, .. } if id == "epyc"));
     }
 
     #[test]
@@ -457,6 +581,50 @@ lib = "blis-opt"
         let spec = CampaignSpec::parse("").unwrap();
         assert!(spec.is_empty());
         assert_eq!(spec.validate_n, 96);
+        // default inventory is the paper machine
+        assert_eq!(spec.build_inventory().unwrap().nodes.len(), 12);
+    }
+
+    #[test]
+    fn fleet_sections_build_the_described_inventory() {
+        let spec = CampaignSpec::parse(
+            "[[fleet]]\nplatform = \"sg2044\"\ncount = 4\n\n[[fleet]]\nplatform = \"mcv3\"\n",
+        )
+        .unwrap();
+        assert_eq!(spec.fleet, vec![("sg2044".to_string(), 4), ("mcv3".to_string(), 1)]);
+        let inv = spec.build_inventory().unwrap();
+        assert_eq!(inv.nodes.len(), 5);
+        assert_eq!(inv.ids_of_platform("sg2044").len(), 4);
+        assert_eq!(inv.ids_of_platform("mcv3").len(), 1);
+    }
+
+    #[test]
+    fn unknown_fleet_platform_rejected_at_load_time() {
+        let err = CampaignSpec::parse("[[fleet]]\nplatform = \"epyc\"\n").unwrap_err();
+        assert!(matches!(err, CimoneError::UnknownPlatform { ref id, .. } if id == "epyc"));
+    }
+
+    #[test]
+    fn misspelled_fleet_key_rejected_at_load_time() {
+        let err =
+            CampaignSpec::parse("[[fleet]]\nplatform = \"sg2044\"\ncout = 4\n").unwrap_err();
+        assert!(matches!(err, CimoneError::Spec(ref m) if m.contains("unknown key `cout`")));
+    }
+
+    #[test]
+    fn custom_platform_section_feeds_fleet_and_workloads() {
+        let spec = CampaignSpec::parse(
+            "[[platform]]\nid = \"sg2044-oc\"\nbase = \"sg2044\"\nfreq_ghz = 3.0\n\n\
+             [[fleet]]\nplatform = \"sg2044-oc\"\ncount = 2\n\n\
+             [[workload]]\nkind = \"hpl\"\nname = \"h\"\nplatform = \"sg2044-oc\"\npartition = \"sg2044\"\ncores_per_node = 64\n",
+        )
+        .unwrap();
+        assert_eq!(spec.custom_platforms.len(), 1);
+        let inv = spec.build_inventory().unwrap();
+        assert_eq!(inv.nodes.len(), 2);
+        assert!(
+            (inv.node(0).platform.desc.sockets[0].core.freq_hz - 3.0e9).abs() < 1.0
+        );
     }
 
     #[test]

@@ -5,11 +5,18 @@
 //! host HPL solve + STREAM validation, (2) instantiates every workload
 //! descriptor and *estimates them in parallel* (rayon) against the
 //! inventory, (3) submits the jobs to the SLURM-like scheduler in spec
-//! order — deterministic queueing — recording each workload's metrics in
-//! the ExaMon-like monitor, and (4) drains the partitions concurrently
+//! order — deterministic queueing — recording each workload's metrics
+//! (headline + power/energy) in the ExaMon-like monitor, and (4) drains
+//! the partitions concurrently
 //! ([`Scheduler::drain_parallel`](crate::sched::Scheduler::drain_parallel)),
 //! which keeps simulated-time accounting identical to a serial drain.
 //! This is what `examples/e2e_cluster.rs` and `cimone campaign` run.
+//!
+//! [`dry_run_spec`] is the scheduling-free variant: it validates the
+//! spec, estimates every job and checks partition fit, but runs neither
+//! the real-numerics solve nor the drain — `cimone campaign --dry-run`.
+
+use std::collections::BTreeMap;
 
 use rayon::prelude::*;
 
@@ -17,21 +24,95 @@ use crate::cluster::{monte_cimone_v2, Inventory, Monitor};
 use crate::error::CimoneError;
 use crate::hpl::driver::{run as hpl_run, Backend, HplConfig};
 use crate::stream::kernels::validate_kernels;
+use crate::util::json::Json;
 
 use super::campaign::CampaignSpec;
 use super::workload::{JobEstimate, Workload};
 
+/// One campaign job's outcome: runtime, headline metric, and the
+/// power/energy numbers derived from its platform's power model.
+#[derive(Debug, Clone)]
+pub struct JobRow {
+    pub name: String,
+    /// Simulated seconds the job occupies its nodes.
+    pub runtime_s: f64,
+    /// Headline metric (GB/s for STREAM, GFLOP/s for HPL).
+    pub headline: f64,
+    /// Average per-node draw while running (W).
+    pub avg_node_w: f64,
+    /// Energy-to-solution across all allocated nodes (J).
+    pub energy_j: f64,
+    /// GFLOP/s per watt for compute jobs; `None` for bandwidth jobs.
+    pub gflops_per_w: Option<f64>,
+}
+
+fn job_row(w: &dyn Workload, est: &JobEstimate) -> JobRow {
+    // derive total draw from the estimate itself (energy / runtime) so
+    // efficiency uses exactly the node count the metric was modeled on
+    let total_w = if est.runtime_s > 0.0 { est.energy_j / est.runtime_s } else { 0.0 };
+    let gflops_per_w =
+        if est.metric == "gflops" && total_w > 0.0 { Some(est.value / total_w) } else { None };
+    JobRow {
+        name: w.name().to_string(),
+        runtime_s: est.runtime_s,
+        headline: est.headline,
+        avg_node_w: est.avg_node_w,
+        energy_j: est.energy_j,
+        gflops_per_w,
+    }
+}
+
 /// Campaign outcome.
 #[derive(Debug, Clone)]
 pub struct CampaignReport {
-    /// (job name, simulated seconds, headline metric value)
-    pub jobs: Vec<(String, f64, f64)>,
+    pub jobs: Vec<JobRow>,
     pub makespan_s: f64,
     /// real-numerics validation outcomes
     pub hpl_residual: f64,
     pub hpl_passed: bool,
     pub stream_validated: bool,
     pub monitor: Monitor,
+}
+
+impl CampaignReport {
+    /// Machine-readable export for the artifacts pipeline
+    /// (`cimone campaign --json`).
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("makespan_s".to_string(), Json::Num(self.makespan_s));
+        root.insert("hpl_residual".to_string(), Json::Num(self.hpl_residual));
+        root.insert("hpl_passed".to_string(), Json::Bool(self.hpl_passed));
+        root.insert("stream_validated".to_string(), Json::Bool(self.stream_validated));
+        root.insert(
+            "jobs".to_string(),
+            Json::Arr(self.jobs.iter().map(JobRow::to_json).collect()),
+        );
+        let metrics: BTreeMap<String, Json> = self
+            .monitor
+            .query_prefix("")
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), Json::Num(v)))
+            .collect();
+        root.insert("metrics".to_string(), Json::Obj(metrics));
+        Json::Obj(root)
+    }
+}
+
+impl JobRow {
+    /// Machine-readable form, used by both `--json` and `--dry-run --json`.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(self.name.clone()));
+        o.insert("runtime_s".to_string(), Json::Num(self.runtime_s));
+        o.insert("headline".to_string(), Json::Num(self.headline));
+        o.insert("avg_node_w".to_string(), Json::Num(self.avg_node_w));
+        o.insert("energy_j".to_string(), Json::Num(self.energy_j));
+        o.insert(
+            "gflops_per_w".to_string(),
+            self.gflops_per_w.map(Json::Num).unwrap_or(Json::Null),
+        );
+        Json::Obj(o)
+    }
 }
 
 /// Run the paper's campaign on the standard fleet.
@@ -45,6 +126,22 @@ pub fn run_campaign_on(inv: &Inventory, validate_n: usize) -> Result<CampaignRep
     let mut spec = CampaignSpec::paper_default();
     spec.validate_n = validate_n;
     run_campaign_spec(inv, &spec)
+}
+
+/// Instantiate the spec's workloads and estimate them in parallel.
+/// Callers are expected to have run `spec.validate()` first.
+fn estimate_all(
+    inv: &Inventory,
+    spec: &CampaignSpec,
+) -> Result<Vec<(Box<dyn Workload>, JobEstimate)>, CimoneError> {
+    let workloads: Vec<Box<dyn Workload>> = spec.workloads.iter().map(|w| w.build()).collect();
+    let estimates: Vec<Result<JobEstimate, CimoneError>> =
+        workloads.par_iter().map(|w| w.estimate(inv)).collect();
+    workloads
+        .into_iter()
+        .zip(estimates)
+        .map(|(w, est)| est.map(|e| (w, e)))
+        .collect()
 }
 
 /// Run an arbitrary campaign spec on a given inventory.
@@ -68,17 +165,14 @@ pub fn run_campaign_spec(
     mon.record("frontend.hpl.residual", 0.0, hpl.residual);
 
     // --- 2. instantiate + estimate every workload, in parallel ---
-    let workloads: Vec<Box<dyn Workload>> = spec.workloads.iter().map(|w| w.build()).collect();
-    let estimates: Vec<Result<JobEstimate, CimoneError>> =
-        workloads.par_iter().map(|w| w.estimate(inv)).collect();
+    let estimated = estimate_all(inv, spec)?;
 
     // --- 3. submit in spec order (deterministic queueing + metrics) ---
-    let mut jobs = Vec::with_capacity(workloads.len());
-    for (w, est) in workloads.iter().zip(estimates) {
-        let est = est?;
+    let mut jobs = Vec::with_capacity(estimated.len());
+    for (w, est) in &estimated {
         sched.submit(w.name(), w.partition(), w.nodes(), est.runtime_s)?;
-        w.metrics(&mut mon, sched.now, &est);
-        jobs.push((w.name().to_string(), est.runtime_s, est.headline));
+        w.metrics(&mut mon, sched.now, est);
+        jobs.push(job_row(w.as_ref(), est));
     }
 
     // --- 4. drain independent partitions concurrently ---
@@ -91,6 +185,24 @@ pub fn run_campaign_spec(
         stream_validated: stream_ok,
         monitor: mon,
     })
+}
+
+/// Validate a spec against an inventory without scheduling anything:
+/// parse-level invariants, per-workload estimation (platform resolution,
+/// finite runtimes) and partition fit are all checked; the real-numerics
+/// solve and the drain are skipped. Returns the per-job estimates.
+pub fn dry_run_spec(inv: &Inventory, spec: &CampaignSpec) -> Result<Vec<JobRow>, CimoneError> {
+    spec.validate()?;
+    let estimated = estimate_all(inv, spec)?;
+    // a scratch scheduler checks partition existence, width and runtime
+    // validity exactly as the real submission path would
+    let mut sched = inv.scheduler();
+    let mut rows = Vec::with_capacity(estimated.len());
+    for (w, est) in &estimated {
+        sched.submit(w.name(), w.partition(), w.nodes(), est.runtime_s)?;
+        rows.push(job_row(w.as_ref(), est));
+    }
+    Ok(rows)
 }
 
 #[cfg(test)]
@@ -123,9 +235,30 @@ mod tests {
     }
 
     #[test]
+    fn per_job_power_metrics_recorded() {
+        let r = run_campaign(64).unwrap();
+        // every job reports power and energy series
+        for j in &r.jobs {
+            assert!(j.avg_node_w > 0.0, "{}: {}", j.name, j.avg_node_w);
+            assert!(j.energy_j > 0.0, "{}: {}", j.name, j.energy_j);
+            assert_eq!(r.monitor.latest(&format!("{}.power_w", j.name)), Some(j.avg_node_w));
+            assert_eq!(r.monitor.latest(&format!("{}.energy_j", j.name)), Some(j.energy_j));
+        }
+        // HPL jobs surface GFLOP/s-per-W; STREAM jobs don't
+        let by_name = |n: &str| r.jobs.iter().find(|j| j.name == n).unwrap().clone();
+        assert!(by_name("hpl-mcv2-1s").gflops_per_w.unwrap() > 0.5);
+        assert!(by_name("stream-mcv1").gflops_per_w.is_none());
+        // MCv2 is an order of magnitude more efficient than MCv1 (the
+        // paper's Top500/Green500 argument)
+        let v1 = by_name("hpl-mcv1-full").gflops_per_w.unwrap();
+        let v2 = by_name("hpl-mcv2-1s").gflops_per_w.unwrap();
+        assert!(v2 > 5.0 * v1, "v2 {v2:.2} vs v1 {v1:.2}");
+    }
+
+    #[test]
     fn empty_spec_drains_to_zero_makespan() {
         let inv = monte_cimone_v2();
-        let spec = CampaignSpec { workloads: vec![], validate_n: 64 };
+        let spec = CampaignSpec { workloads: vec![], validate_n: 64, ..Default::default() };
         let r = run_campaign_spec(&inv, &spec).unwrap();
         assert!(r.jobs.is_empty());
         assert_eq!(r.makespan_s, 0.0);
@@ -136,7 +269,7 @@ mod tests {
     fn spec_engine_matches_legacy_campaign_shape() {
         // the declarative path must reproduce the seed campaign exactly
         let r = run_campaign(64).unwrap();
-        let names: Vec<&str> = r.jobs.iter().map(|(n, _, _)| n.as_str()).collect();
+        let names: Vec<&str> = r.jobs.iter().map(|j| j.name.as_str()).collect();
         assert_eq!(
             names,
             [
@@ -152,8 +285,8 @@ mod tests {
             ]
         );
         // blis jobs occupy their fixed 3600 s slot
-        assert_eq!(r.jobs[7].1, 3600.0);
-        assert_eq!(r.jobs[8].1, 3600.0);
+        assert_eq!(r.jobs[7].runtime_s, 3600.0);
+        assert_eq!(r.jobs[8].runtime_s, 3600.0);
     }
 
     #[test]
@@ -172,9 +305,64 @@ mod tests {
     }
 
     #[test]
+    fn dry_run_estimates_without_scheduling() {
+        let inv = monte_cimone_v2();
+        let spec = CampaignSpec::paper_default();
+        let rows = dry_run_spec(&inv, &spec).unwrap();
+        assert_eq!(rows.len(), 9);
+        for r in &rows {
+            assert!(r.runtime_s.is_finite() && r.runtime_s > 0.0);
+            assert!(r.headline.is_finite() && r.headline > 0.0);
+        }
+        // dry-run numbers match the real run's rows
+        let full = run_campaign_spec(&inv, &spec).unwrap();
+        for (a, b) in rows.iter().zip(&full.jobs) {
+            assert_eq!(a.name, b.name);
+            assert!((a.headline - b.headline).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn dry_run_rejects_invalid_specs() {
+        let inv = monte_cimone_v2();
+        // partition that doesn't exist
+        let spec = CampaignSpec::parse(
+            "[[workload]]\nkind = \"stream\"\nname = \"s\"\nnode = \"mcv1\"\npartition = \"gpu\"\nthreads = 4\n",
+        )
+        .unwrap();
+        assert!(matches!(
+            dry_run_spec(&inv, &spec),
+            Err(CimoneError::UnknownPartition(ref p)) if p == "gpu"
+        ));
+        // wider than the partition
+        let spec = CampaignSpec::parse(
+            "[[workload]]\nkind = \"hpl\"\nname = \"w\"\nnode = \"mcv2\"\npartition = \"mcv2\"\nnodes = 9\ncluster_nodes = 9\ncores_per_node = 64\n",
+        )
+        .unwrap();
+        assert!(matches!(
+            dry_run_spec(&inv, &spec),
+            Err(CimoneError::PartitionTooSmall { .. })
+        ));
+    }
+
+    #[test]
+    fn report_exports_json() {
+        let r = run_campaign(48).unwrap();
+        let j = r.to_json();
+        let text = j.render();
+        // round-trips through the parser
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("hpl_passed"), Some(&Json::Bool(true)));
+        assert_eq!(back.get("jobs").unwrap().as_arr().unwrap().len(), 9);
+        let job0 = back.get("jobs").unwrap().idx(0).unwrap();
+        assert_eq!(job0.get("name").unwrap().as_str(), Some("stream-mcv1"));
+        assert!(job0.get("avg_node_w").unwrap().as_f64().unwrap() > 0.0);
+        assert!(back.get("metrics").unwrap().get("hpl-mcv2-1s.gflops").is_some());
+    }
+
+    #[test]
     fn duplicate_job_names_rejected_by_engine() {
         use super::super::campaign::WorkloadSpec;
-        use crate::arch::soc::NodeKind;
         let inv = monte_cimone_v2();
         let mut spec = CampaignSpec::new();
         for _ in 0..2 {
@@ -182,7 +370,7 @@ mod tests {
                 name: "dup".into(),
                 partition: "mcv2".into(),
                 nodes: 1,
-                kind: NodeKind::Mcv2Pioneer,
+                platform: "mcv2-pioneer".into(),
                 threads: 64,
             });
         }

@@ -2,6 +2,7 @@
 //! paper plots. The bench targets (`rust/benches/fig*.rs`) and the CLI
 //! both call these.
 
+use crate::arch::platform::{mcv1_u740, mcv2_dual, mcv2_pioneer};
 use crate::arch::presets;
 use crate::blas::blocking::Blocking;
 use crate::blas::perf::PerfModel;
@@ -40,7 +41,7 @@ pub fn fig3() -> Vec<(String, usize, f64)> {
 /// Fig 4 — HPL vs core count for generic/optimized OpenBLAS on one MCv2
 /// socket. Returns (cores, generic GF/s, optimized GF/s).
 pub fn fig4(core_counts: &[usize]) -> Vec<(usize, f64, f64)> {
-    let d = presets::sg2042();
+    let d = mcv2_pioneer();
     let gen = PerfModel::new(&d, UkernelId::OpenblasGeneric);
     let opt = PerfModel::new(&d, UkernelId::OpenblasC920);
     core_counts
@@ -54,21 +55,21 @@ pub const FIG4_CORES: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
 
 /// Fig 5 — HPL across node configurations. Returns (label, GF/s).
 pub fn fig5() -> Vec<(String, f64)> {
-    let mut mcv1 = ClusterConfig::mcv2_default(presets::u740(), 8, 4);
-    mcv1.lib = UkernelId::OpenblasGeneric;
+    // the mcv1-u740 platform's default library is OpenBLAS-generic
+    let mcv1 = ClusterConfig::hpl_default(mcv1_u740(), 8, 4);
     vec![
         ("MCv1 32-cores (8 nodes, 1GbE)".into(), cluster_hpl_gflops(&mcv1)),
         (
             "MCv2 64-cores (1 socket)".into(),
-            cluster_hpl_gflops(&ClusterConfig::mcv2_default(presets::sg2042(), 1, 64)),
+            cluster_hpl_gflops(&ClusterConfig::hpl_default(mcv2_pioneer(), 1, 64)),
         ),
         (
             "MCv2 128-cores (2 nodes, 1GbE)".into(),
-            cluster_hpl_gflops(&ClusterConfig::mcv2_default(presets::sg2042(), 2, 64)),
+            cluster_hpl_gflops(&ClusterConfig::hpl_default(mcv2_pioneer(), 2, 64)),
         ),
         (
             "MCv2 128-cores (1 dual-socket node)".into(),
-            cluster_hpl_gflops(&ClusterConfig::mcv2_default(presets::sg2042_dual(), 1, 128)),
+            cluster_hpl_gflops(&ClusterConfig::hpl_default(mcv2_dual(), 1, 128)),
         ),
     ]
 }
@@ -109,7 +110,7 @@ pub const FIG6_CORES: [usize; 4] = [1, 8, 16, 32];
 /// counts on the MCv2 dual-socket node. Returns
 /// (cores, openblas, blis_vanilla, blis_opt).
 pub fn fig7(core_counts: &[usize]) -> Vec<(usize, f64, f64, f64)> {
-    let d = presets::sg2042_dual();
+    let d = mcv2_dual();
     let ob = PerfModel::new(&d, UkernelId::OpenblasC920);
     let bv = PerfModel::new(&d, UkernelId::BlisLmul1);
     let bo = PerfModel::new(&d, UkernelId::BlisLmul4);
@@ -125,9 +126,10 @@ pub const FIG7_CORES: [usize; 6] = [1, 8, 16, 32, 64, 128];
 /// The abstract's headline: node-level uplift MCv2 vs MCv1.
 /// Returns (hpl_uplift, stream_uplift).
 pub fn headline() -> (f64, f64) {
-    let hpl_old = PerfModel::new(&presets::u740(), UkernelId::OpenblasGeneric).node_gflops(4);
-    let hpl_new =
-        PerfModel::new(&presets::sg2042_dual(), UkernelId::OpenblasC920).node_gflops(128);
+    let v1 = mcv1_u740();
+    let v2 = mcv2_dual();
+    let hpl_old = PerfModel::new(&v1, UkernelId::OpenblasGeneric).node_gflops(4);
+    let hpl_new = PerfModel::new(&v2, UkernelId::OpenblasC920).node_gflops(128);
     let st_old = predict_node_bandwidth(&presets::u740(), 4, true);
     let st_new = predict_node_bandwidth(&presets::sg2042_dual(), 64, true);
     (hpl_new / hpl_old, st_new / st_old)

@@ -1,26 +1,32 @@
-//! The coordinator: a declarative campaign engine over the simulated
-//! Monte Cimone fleet, plus the per-figure experiment definitions and
+//! The coordinator: a declarative campaign engine over simulated
+//! Monte Cimone fleets, plus the per-figure experiment definitions and
 //! report rendering.
 //!
-//! The experiment-execution path is data-driven:
+//! The experiment-execution path is data-driven end to end:
 //!
 //! - [`Workload`] (in [`workload`]) is the unit of execution — name,
 //!   partition, node count, an `estimate(&Inventory)` that models the
-//!   job's runtime and metric, and a `metrics(&mut Monitor, ..)` hook.
-//!   [`workload::StreamWorkload`], [`workload::HplWorkload`] and
-//!   [`workload::BlisAblationWorkload`] cover the paper's evaluation.
+//!   job's runtime, metric and power/energy, and a
+//!   `metrics(&mut Monitor, ..)` hook. Workloads name their platform by
+//!   [`crate::arch::PlatformRegistry`] id, so they run unchanged on any
+//!   registered platform (the paper fleet, SG2044, MCv3, custom specs).
 //! - [`CampaignSpec`] (in [`campaign`]) describes a campaign as an
-//!   ordered list of [`campaign::WorkloadSpec`] descriptors — built in
-//!   code or parsed from a `util::config` file.
+//!   ordered list of [`campaign::WorkloadSpec`] descriptors plus the
+//!   fleet (`(platform_id, count)` pairs) it runs on — built in code or
+//!   parsed from a `util::config` file with `[[platform]]` / `[[fleet]]`
+//!   / `[[workload]]` sections.
 //!   [`CampaignSpec::paper_default`] is the paper's exact 9-job campaign.
 //! - [`driver::run_campaign_spec`] executes a spec: real-numerics
 //!   validation, parallel workload estimation (rayon), deterministic
 //!   submission to the SLURM-like scheduler, concurrent per-partition
-//!   drain, and an ExaMon-style metric report.
+//!   drain, and an ExaMon-style metric report with per-job power, energy
+//!   and GFLOP/s-per-W. [`driver::dry_run_spec`] validates and estimates
+//!   without scheduling, and [`driver::CampaignReport::to_json`] exports
+//!   the report for the artifacts pipeline.
 //!
 //! [`experiments`] / [`report`] / [`sweeps`] regenerate every paper
-//! figure on top of the same models; all failures are typed
-//! [`crate::CimoneError`]s.
+//! figure (and the SG2044/MCv3 extension sweeps) on top of the same
+//! models; all failures are typed [`crate::CimoneError`]s.
 
 pub mod campaign;
 pub mod driver;
@@ -30,6 +36,8 @@ pub mod sweeps;
 pub mod workload;
 
 pub use campaign::{CampaignSpec, WorkloadSpec};
-pub use driver::{run_campaign, run_campaign_on, run_campaign_spec, CampaignReport};
+pub use driver::{
+    dry_run_spec, run_campaign, run_campaign_on, run_campaign_spec, CampaignReport, JobRow,
+};
 pub use experiments::{fig3, fig4, fig5, fig6, fig7, headline};
 pub use workload::{JobEstimate, Workload};

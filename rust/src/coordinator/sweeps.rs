@@ -1,9 +1,12 @@
 //! Parameter-sweep engine: the full evaluation grid beyond the paper's
 //! figures — core-count x library, node-count scaling (extending Fig 5
-//! past 2 nodes), NB sensitivity, and the LMUL ablation. These are the
-//! "what the paper would have shown with more pages" experiments that
-//! DESIGN.md's ablation list calls out.
+//! past 2 nodes), NB sensitivity, the LMUL ablation, and the
+//! "down the road" generation sweep across every registered platform
+//! (MCv1 -> MCv2 -> SG2044 -> MCv3). These are the "what the paper would
+//! have shown with more pages" experiments that DESIGN.md's ablation
+//! list calls out.
 
+use crate::arch::platform::{self, Platform};
 use crate::arch::presets;
 use crate::blas::perf::PerfModel;
 use crate::hpl::model::{project, ClusterConfig};
@@ -15,7 +18,7 @@ use crate::util::table::Table;
 /// Core-count x library grid on the dual-socket node (the superset of
 /// Figs 4 and 7).
 pub fn grid_cores_by_library(core_counts: &[usize]) -> Table {
-    let d = presets::sg2042_dual();
+    let d = platform::mcv2_dual();
     let models: Vec<(UkernelId, PerfModel)> = UkernelId::all()
         .into_iter()
         .map(|id| (id, PerfModel::new(&d, id)))
@@ -48,7 +51,7 @@ pub fn node_scaling(max_nodes: usize) -> Table {
         "10GbE efficiency",
     ]);
     for nodes in 1..=max_nodes {
-        let mut cfg = ClusterConfig::mcv2_default(presets::sg2042(), nodes, 64);
+        let mut cfg = ClusterConfig::hpl_default(platform::mcv2_pioneer(), nodes, 64);
         let p1 = project(&cfg);
         cfg.link = Link::ten_gbe();
         let p10 = project(&cfg);
@@ -68,7 +71,7 @@ pub fn node_scaling(max_nodes: usize) -> Table {
 pub fn nb_sensitivity(n: usize, nbs: &[usize]) -> Table {
     let mut t = Table::new(vec!["NB", "2-node Gflop/s", "comm share"]);
     for &nb in nbs {
-        let mut cfg = ClusterConfig::mcv2_default(presets::sg2042(), 2, 64);
+        let mut cfg = ClusterConfig::hpl_default(platform::mcv2_pioneer(), 2, 64);
         cfg.n = n;
         cfg.nb = nb;
         let p = project(&cfg);
@@ -104,10 +107,22 @@ pub fn lmul_ablation() -> Table {
     t
 }
 
+/// The platform cases of the generation sweeps: each platform with its
+/// full-node core count and the library its fleet runs.
+fn generation_cases() -> Vec<(Platform, UkernelId, usize)> {
+    vec![
+        (platform::mcv1_u740(), UkernelId::OpenblasGeneric, 4),
+        (platform::mcv2_pioneer(), UkernelId::OpenblasC920, 64),
+        (platform::mcv2_dual(), UkernelId::BlisLmul4, 128),
+        (platform::sg2044(), UkernelId::OpenblasC920, 64),
+        (platform::mcv3(), UkernelId::OpenblasC920, 128),
+    ]
+}
+
 /// Energy-to-solution: HPL at fixed N on each node generation — the
-/// efficiency argument implicit in the paper's Top500 comparison.
+/// efficiency argument implicit in the paper's Top500 comparison,
+/// extended down the road to the SG2044 and MCv3 platforms.
 pub fn energy_to_solution(n: usize) -> Table {
-    use crate::cluster::power::PowerModel;
     use crate::util::stats::hpl_flops;
     let mut t = Table::new(vec![
         "node",
@@ -117,22 +132,35 @@ pub fn energy_to_solution(n: usize) -> Table {
         "energy (kWh)",
         "Gflop/s/W",
     ]);
-    let cases = [
-        (presets::u740(), UkernelId::OpenblasGeneric, 4usize),
-        (presets::sg2042(), UkernelId::OpenblasC920, 64),
-        (presets::sg2042_dual(), UkernelId::BlisLmul4, 128),
-    ];
-    for (desc, lib, cores) in cases {
-        let gf = PerfModel::new(&desc, lib).node_gflops(cores);
-        let watts = PowerModel::for_kind(desc.kind).node_power(cores);
+    for (p, lib, cores) in generation_cases() {
+        let gf = PerfModel::new(&p, lib).node_gflops(cores);
+        let watts = p.power.node_power(cores);
         let secs = hpl_flops(n) / (gf * 1e9);
         t.row(vec![
-            desc.kind.label().to_string(),
+            p.label.clone(),
             format!("{gf:.1}"),
             format!("{watts:.0}"),
             format!("{:.2}", secs / 3600.0),
             format!("{:.2}", watts * secs / 3.6e6),
             format!("{:.2}", gf / watts),
+        ]);
+    }
+    t
+}
+
+/// "Down the road": single-node HPL and peak across the registered
+/// platform generations — the trajectory the Monte Cimone papers track.
+pub fn generation_sweep() -> Table {
+    let mut t = Table::new(vec!["platform", "cores", "peak GF/s", "HPL GF/s", "HPL %peak"]);
+    for (p, lib, cores) in generation_cases() {
+        let gf = PerfModel::new(&p, lib).node_gflops(cores);
+        let peak = p.peak_gflops();
+        t.row(vec![
+            p.id.clone(),
+            cores.to_string(),
+            format!("{peak:.1}"),
+            format!("{gf:.1}"),
+            format!("{:.0}%", 100.0 * gf / peak),
         ]);
     }
     t
@@ -145,12 +173,14 @@ pub fn render_all() -> String {
          == Extension: node-count scaling, 1 vs 10 GbE (N=57600) ==\n{}\n\n\
          == Extension: NB sensitivity (N=57600, 2 nodes, 1 GbE) ==\n{}\n\n\
          == Extension: LMUL ablation (why the paper stops at 4) ==\n{}\n\n\
-         == Extension: energy to solution (HPL N=57600) ==\n{}",
+         == Extension: energy to solution (HPL N=57600) ==\n{}\n\n\
+         == Extension: down the road (MCv1 -> MCv2 -> SG2044 -> MCv3) ==\n{}",
         grid_cores_by_library(&[1, 4, 16, 64, 128]).render(),
         node_scaling(4).render(),
         nb_sensitivity(57_600, &[64, 128, 192, 256, 384]).render(),
         lmul_ablation().render(),
-        energy_to_solution(57_600).render()
+        energy_to_solution(57_600).render(),
+        generation_sweep().render()
     )
 }
 
@@ -169,7 +199,7 @@ mod tests {
         let s = node_scaling(4).render();
         assert!(s.contains('%'));
         // 4 nodes on 1 GbE must be well below linear
-        let mut cfg = ClusterConfig::mcv2_default(presets::sg2042(), 4, 64);
+        let mut cfg = ClusterConfig::hpl_default(platform::mcv2_pioneer(), 4, 64);
         let p = project(&cfg);
         assert!(p.efficiency_vs_one_node < 0.55, "{}", p.efficiency_vs_one_node);
         cfg.link = Link::ten_gbe();
@@ -182,7 +212,7 @@ mod tests {
         let vals: Vec<f64> = nbs
             .iter()
             .map(|&nb| {
-                let mut cfg = ClusterConfig::mcv2_default(presets::sg2042(), 2, 64);
+                let mut cfg = ClusterConfig::hpl_default(platform::mcv2_pioneer(), 2, 64);
                 cfg.nb = nb;
                 project(&cfg).gflops
             })
@@ -195,25 +225,40 @@ mod tests {
 
     #[test]
     fn mcv2_wins_energy_to_solution() {
-        use crate::cluster::power::PowerModel;
         use crate::util::stats::hpl_flops;
-        let gf_old = PerfModel::new(&presets::u740(), UkernelId::OpenblasGeneric).node_gflops(4);
-        let gf_new =
-            PerfModel::new(&presets::sg2042_dual(), UkernelId::BlisLmul4).node_gflops(128);
-        let e = |gf: f64, desc: &crate::arch::soc::SocDescriptor, cores| {
-            let w = PowerModel::for_kind(desc.kind).node_power(cores);
-            w * hpl_flops(57_600) / (gf * 1e9)
+        let v1 = platform::mcv1_u740();
+        let v2 = platform::mcv2_dual();
+        let gf_old = PerfModel::new(&v1, UkernelId::OpenblasGeneric).node_gflops(4);
+        let gf_new = PerfModel::new(&v2, UkernelId::BlisLmul4).node_gflops(128);
+        let e = |gf: f64, p: &Platform, cores| {
+            p.power.node_power(cores) * hpl_flops(57_600) / (gf * 1e9)
         };
-        let e_old = e(gf_old, &presets::u740(), 4);
-        let e_new = e(gf_new, &presets::sg2042_dual(), 128);
+        let e_old = e(gf_old, &v1, 4);
+        let e_new = e(gf_new, &v2, 128);
         // MCv2 burns ~10x the power but is ~150x faster
         assert!(e_new < e_old / 10.0, "{e_new:.0} J vs {e_old:.0} J");
+    }
+
+    #[test]
+    fn generation_sweep_is_monotone_down_the_road() {
+        // HPL GF/s must rise with every generation in the sweep
+        let rows = generation_cases();
+        let gfs: Vec<f64> = rows
+            .iter()
+            .map(|(p, lib, cores)| PerfModel::new(p, *lib).node_gflops(*cores))
+            .collect();
+        for w in gfs.windows(2) {
+            assert!(w[1] > w[0], "{gfs:?}");
+        }
+        let s = generation_sweep().render();
+        assert!(s.contains("sg2044") && s.contains("mcv3"), "{s}");
     }
 
     #[test]
     fn render_all_nonempty() {
         let s = render_all();
         assert!(s.contains("LMUL ablation"));
+        assert!(s.contains("down the road"));
         assert!(s.len() > 500);
     }
 }

@@ -2,14 +2,17 @@
 //!
 //! A workload knows its job identity (`name`, `partition`, `nodes`), how
 //! to *estimate* itself against a concrete [`Inventory`] (simulated
-//! runtime + the metric it produces), and how to record its metrics into
-//! the ExaMon-like [`Monitor`]. The campaign engine
-//! ([`super::driver::run_campaign_spec`]) estimates workloads in
-//! parallel, submits them to the SLURM-like scheduler in spec order, and
-//! drains the partitions concurrently — so adding a new experiment type
-//! to the fleet means implementing this trait, not editing the driver.
+//! runtime + the metric it produces + per-job power/energy from the
+//! platform's power model), and how to record its metrics into the
+//! ExaMon-like [`Monitor`]. Workloads name the platform they run on by
+//! registry id (or alias) and resolve it against the inventory at
+//! estimation time — a missing platform is a typed
+//! [`CimoneError::NoNodeOfPlatform`], and a new SoC generation needs no
+//! workload-layer change at all.
 
-use crate::arch::soc::NodeKind;
+use std::sync::Arc;
+
+use crate::arch::platform::Platform;
 use crate::blas::perf::PerfModel;
 use crate::cluster::{Inventory, Monitor};
 use crate::error::CimoneError;
@@ -32,6 +35,10 @@ pub struct JobEstimate {
     pub value: f64,
     /// Headline value reported in `CampaignReport::jobs` (GB/s, GFLOP/s).
     pub headline: f64,
+    /// Average per-node draw while the job runs (platform power model).
+    pub avg_node_w: f64,
+    /// Total energy-to-solution across every allocated node (J).
+    pub energy_j: f64,
 }
 
 /// One schedulable benchmark workload of a campaign.
@@ -48,33 +55,33 @@ pub trait Workload: Send + Sync {
     /// Model this workload against a concrete fleet.
     fn estimate(&self, inv: &Inventory) -> Result<JobEstimate, CimoneError>;
 
-    /// Record the workload's metrics at simulated time `t`.
+    /// Record the workload's metrics at simulated time `t`: the headline
+    /// metric plus the per-job power/energy series.
     fn metrics(&self, mon: &mut Monitor, t: f64, est: &JobEstimate) {
         mon.record(&format!("{}.{}", self.name(), est.metric), t, est.value);
+        mon.record(&format!("{}.power_w", self.name()), t, est.avg_node_w);
+        mon.record(&format!("{}.energy_j", self.name()), t, est.energy_j);
     }
 }
 
-/// Find the descriptor of the first inventory node of `kind`, so
-/// estimates survive reordered or pruned fleets (no fixed node index).
-fn desc_of_kind<'a>(
-    inv: &'a Inventory,
-    kind: NodeKind,
-) -> Result<&'a crate::arch::soc::SocDescriptor, CimoneError> {
+/// Find the platform of the first inventory node matching `name` (id or
+/// alias), so estimates survive reordered or pruned fleets.
+fn platform_of<'a>(inv: &'a Inventory, name: &str) -> Result<&'a Arc<Platform>, CimoneError> {
     inv.nodes
         .iter()
-        .find(|n| n.desc.kind == kind)
-        .map(|n| &n.desc)
-        .ok_or(CimoneError::NoNodeOfKind(kind.label()))
+        .find(|n| n.platform.matches(name))
+        .map(|n| &n.platform)
+        .ok_or_else(|| CimoneError::NoNodeOfPlatform(name.to_string()))
 }
 
-/// STREAM bandwidth on one node kind (a Fig 3 row).
+/// STREAM bandwidth on one platform (a Fig 3 row).
 #[derive(Debug, Clone)]
 pub struct StreamWorkload {
     pub name: String,
     pub partition: String,
     pub nodes: usize,
-    /// Which node kind supplies the memory-system model.
-    pub kind: NodeKind,
+    /// Registry id (or alias) of the platform supplying the memory model.
+    pub platform: String,
     pub threads: usize,
 }
 
@@ -92,10 +99,19 @@ impl Workload for StreamWorkload {
     }
 
     fn estimate(&self, inv: &Inventory) -> Result<JobEstimate, CimoneError> {
-        let desc = desc_of_kind(inv, self.kind)?;
-        let bw = predict_node_bandwidth(desc, self.threads, true);
+        let p = platform_of(inv, &self.platform)?;
+        let bw = predict_node_bandwidth(&p.desc, self.threads, true);
         let runtime_s = (STREAM_JOB_BYTES / bw).max(1.0);
-        Ok(JobEstimate { runtime_s, metric: "bandwidth", value: bw, headline: bw / 1e9 })
+        let active = self.threads.min(p.desc.total_cores());
+        let avg_node_w = p.power.node_power(active);
+        Ok(JobEstimate {
+            runtime_s,
+            metric: "bandwidth",
+            value: bw,
+            headline: bw / 1e9,
+            avg_node_w,
+            energy_j: avg_node_w * self.nodes as f64 * runtime_s,
+        })
     }
 }
 
@@ -106,13 +122,12 @@ pub struct HplWorkload {
     pub partition: String,
     /// Nodes allocated from the scheduler partition.
     pub nodes: usize,
-    /// Which node kind supplies the SoC descriptor.
-    pub kind: NodeKind,
+    /// Registry id (or alias) of the platform supplying the node model.
+    pub platform: String,
     /// Nodes in the HPL cluster-projection model (usually == `nodes`).
     pub cluster_nodes: usize,
     pub cores_per_node: usize,
-    /// BLAS library override; `None` keeps the MCv2 default (OpenBLAS
-    /// C920-optimized).
+    /// BLAS library override; `None` uses the platform's default.
     pub lib: Option<UkernelId>,
 }
 
@@ -130,18 +145,27 @@ impl Workload for HplWorkload {
     }
 
     fn estimate(&self, inv: &Inventory) -> Result<JobEstimate, CimoneError> {
-        let desc = desc_of_kind(inv, self.kind)?;
+        let p = platform_of(inv, &self.platform)?;
         let mut cfg =
-            ClusterConfig::mcv2_default(desc.clone(), self.cluster_nodes, self.cores_per_node);
+            ClusterConfig::hpl_default(Arc::clone(p), self.cluster_nodes, self.cores_per_node);
         if let Some(lib) = self.lib {
             cfg.lib = lib;
         }
-        let p = project(&cfg);
+        let proj = project(&cfg);
+        let runtime_s = proj.t_comp + proj.t_comm;
+        let active = self.cores_per_node.min(p.desc.total_cores());
+        let avg_node_w = p.power.node_power(active);
         Ok(JobEstimate {
-            runtime_s: p.t_comp + p.t_comm,
+            runtime_s,
             metric: "gflops",
-            value: p.gflops,
-            headline: p.gflops,
+            value: proj.gflops,
+            headline: proj.gflops,
+            avg_node_w,
+            // energy follows the *modeled* cluster (`cluster_nodes`, the
+            // same node count the GFLOP/s projection uses), not the
+            // scheduler allocation, so energy and efficiency stay
+            // consistent when the two differ
+            energy_j: avg_node_w * self.cluster_nodes as f64 * runtime_s,
         })
     }
 }
@@ -152,6 +176,8 @@ impl Workload for HplWorkload {
 pub struct BlisAblationWorkload {
     pub name: String,
     pub partition: String,
+    /// Registry id of the node platform (the paper uses `mcv2-dual`).
+    pub platform: String,
     pub lib: UkernelId,
     pub cores: usize,
     /// Fixed simulated runtime (the ablation compares rates, not time).
@@ -172,11 +198,18 @@ impl Workload for BlisAblationWorkload {
     }
 
     fn estimate(&self, inv: &Inventory) -> Result<JobEstimate, CimoneError> {
-        // look the dual-socket node up by kind, not by hardcoded index,
-        // so the ablation survives inventory changes
-        let desc = desc_of_kind(inv, NodeKind::Mcv2DualSocket)?;
-        let gf = PerfModel::new(desc, self.lib).node_gflops(self.cores);
-        Ok(JobEstimate { runtime_s: self.runtime_s, metric: "gflops", value: gf, headline: gf })
+        let p = platform_of(inv, &self.platform)?;
+        let gf = PerfModel::new(p.as_ref(), self.lib).node_gflops(self.cores);
+        let active = self.cores.min(p.desc.total_cores());
+        let avg_node_w = p.power.node_power(active);
+        Ok(JobEstimate {
+            runtime_s: self.runtime_s,
+            metric: "gflops",
+            value: gf,
+            headline: gf,
+            avg_node_w,
+            energy_j: avg_node_w * self.runtime_s,
+        })
     }
 }
 
@@ -192,13 +225,16 @@ mod tests {
             name: "stream-mcv2-1s".into(),
             partition: "mcv2".into(),
             nodes: 1,
-            kind: NodeKind::Mcv2Pioneer,
+            platform: "mcv2-pioneer".into(),
             threads: 64,
         };
         let est = w.estimate(&inv).unwrap();
         assert!(est.value > 1e9, "{}", est.value);
         assert!(est.runtime_s >= 1.0);
         assert_eq!(est.metric, "bandwidth");
+        // power/energy are populated from the platform's power model
+        assert!(est.avg_node_w > 60.0, "{}", est.avg_node_w);
+        assert!((est.energy_j - est.avg_node_w * est.runtime_s).abs() < 1e-9);
     }
 
     #[test]
@@ -208,14 +244,14 @@ mod tests {
             name: "hpl-mcv2-1s".into(),
             partition: "mcv2".into(),
             nodes: 1,
-            kind: NodeKind::Mcv2Pioneer,
+            platform: "mcv2-pioneer".into(),
             cluster_nodes: 1,
             cores_per_node: 64,
             lib: None,
         };
         let est = w.estimate(&inv).unwrap();
-        let direct = project(&ClusterConfig::mcv2_default(
-            crate::arch::presets::sg2042(),
+        let direct = project(&ClusterConfig::hpl_default(
+            crate::arch::platform::mcv2_pioneer(),
             1,
             64,
         ));
@@ -223,7 +259,7 @@ mod tests {
     }
 
     #[test]
-    fn blis_ablation_uses_kind_lookup_not_index() {
+    fn workloads_resolve_platform_by_alias_not_index() {
         // an inventory where the dual-socket node is NOT at index 11 and
         // node ids no longer match vector positions
         let mut inv = monte_cimone_v2();
@@ -231,6 +267,7 @@ mod tests {
         let w = BlisAblationWorkload {
             name: "hpl-blis-opt".into(),
             partition: "mcv2".into(),
+            platform: "sg2042-dual".into(), // alias of mcv2-dual
             lib: UkernelId::BlisLmul4,
             cores: 128,
             runtime_s: 3600.0,
@@ -240,17 +277,18 @@ mod tests {
     }
 
     #[test]
-    fn missing_node_kind_is_a_typed_error() {
+    fn missing_platform_is_a_typed_error() {
         let mut inv = monte_cimone_v2();
-        inv.nodes.retain(|n| n.desc.kind != NodeKind::Mcv2DualSocket);
+        inv.nodes.retain(|n| !n.platform.matches("mcv2-dual"));
         let w = BlisAblationWorkload {
             name: "x".into(),
             partition: "mcv2".into(),
+            platform: "mcv2-dual".into(),
             lib: UkernelId::BlisLmul1,
             cores: 128,
             runtime_s: 3600.0,
         };
-        assert!(matches!(w.estimate(&inv), Err(CimoneError::NoNodeOfKind(_))));
+        assert!(matches!(w.estimate(&inv), Err(CimoneError::NoNodeOfPlatform(_))));
     }
 
     #[test]
@@ -260,12 +298,34 @@ mod tests {
             name: "stream-mcv1".into(),
             partition: "mcv1".into(),
             nodes: 1,
-            kind: NodeKind::Mcv1U740,
+            platform: "mcv1-u740".into(),
             threads: 4,
         };
         let est = w.estimate(&inv).unwrap();
         let mut mon = Monitor::new();
         w.metrics(&mut mon, 0.0, &est);
         assert_eq!(mon.latest("stream-mcv1.bandwidth"), Some(est.value));
+        assert_eq!(mon.latest("stream-mcv1.power_w"), Some(est.avg_node_w));
+        assert_eq!(mon.latest("stream-mcv1.energy_j"), Some(est.energy_j));
+    }
+
+    #[test]
+    fn sg2044_workload_runs_on_a_next_gen_fleet() {
+        use crate::arch::platform::PlatformRegistry;
+        let inv =
+            Inventory::from_fleet(&PlatformRegistry::builtin(), &[("sg2044", 2), ("mcv3", 1)])
+                .unwrap();
+        let w = HplWorkload {
+            name: "hpl-sg2044".into(),
+            partition: "sg2044".into(),
+            nodes: 1,
+            platform: "sg2044".into(),
+            cluster_nodes: 1,
+            cores_per_node: 64,
+            lib: None,
+        };
+        let est = w.estimate(&inv).unwrap();
+        assert!(est.value.is_finite() && est.value > 0.0);
+        assert!(est.energy_j.is_finite() && est.energy_j > 0.0);
     }
 }

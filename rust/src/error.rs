@@ -20,9 +20,22 @@ pub enum CimoneError {
     #[error("job `{job}` wants {want} nodes, partition `{partition}` has {have}")]
     PartitionTooSmall { job: String, partition: String, want: usize, have: usize },
 
-    /// A workload asked for a node kind absent from the inventory.
-    #[error("no node of kind {0} in the inventory")]
-    NoNodeOfKind(&'static str),
+    /// A platform id was looked up in a registry that does not know it.
+    #[error("unknown platform `{id}` (registered: {known})")]
+    UnknownPlatform { id: String, known: String },
+
+    /// A platform (or one of its aliases) was registered twice.
+    #[error("platform name `{0}` is already registered (id or alias clash)")]
+    DuplicatePlatform(String),
+
+    /// A platform descriptor violates its own invariants (zero frequency,
+    /// empty socket list, incoherent core counts, ...).
+    #[error("invalid platform `{id}`: {reason}")]
+    InvalidPlatform { id: String, reason: String },
+
+    /// A workload asked for a platform absent from the inventory.
+    #[error("no node of platform `{0}` in the inventory")]
+    NoNodeOfPlatform(String),
 
     /// A job was submitted with a non-finite or non-positive runtime
     /// (would hang or panic the simulated-time event loop).
@@ -106,7 +119,7 @@ mod tests {
     #[test]
     fn question_mark_into_crate_result() {
         fn typed() -> Result<(), CimoneError> {
-            Err(CimoneError::NoNodeOfKind("MCv2 2-socket (SG2042x2)"))
+            Err(CimoneError::NoNodeOfPlatform("mcv2-dual".into()))
         }
         fn inner() -> crate::Result<()> {
             typed()?;

@@ -5,16 +5,19 @@
 //! structure: per panel, a panel broadcast + a row-slab exchange; per
 //! column, a pivot-search allreduce.
 
-use crate::arch::soc::SocDescriptor;
+use std::sync::Arc;
+
+use crate::arch::platform::Platform;
 use crate::blas::perf::PerfModel;
 use crate::net::{Collectives, Link};
 use crate::ukernel::UkernelId;
 use crate::util::stats::hpl_flops;
 
-/// A homogeneous cluster HPL run.
+/// A homogeneous cluster HPL run. The platform is shared (`Arc`) so
+/// estimates cloned out of an inventory don't deep-copy descriptors.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
-    pub node: SocDescriptor,
+    pub platform: Arc<Platform>,
     pub nodes: usize,
     pub cores_per_node: usize,
     pub lib: UkernelId,
@@ -27,16 +30,17 @@ pub struct ClusterConfig {
 }
 
 impl ClusterConfig {
-    pub fn mcv2_default(node: SocDescriptor, nodes: usize, cores_per_node: usize) -> Self {
-        ClusterConfig {
-            node,
-            nodes,
-            cores_per_node,
-            lib: UkernelId::OpenblasC920,
-            n: 57_600,
-            nb: 192,
-            link: Link::gbe(),
-        }
+    /// The standard run shape: the platform's default BLAS library, the
+    /// calibration problem size, and the paper's 1 GbE fabric. Accepts a
+    /// `Platform` by value or an already-shared `Arc<Platform>`.
+    pub fn hpl_default(
+        platform: impl Into<Arc<Platform>>,
+        nodes: usize,
+        cores_per_node: usize,
+    ) -> Self {
+        let platform = platform.into();
+        let lib = platform.default_lib;
+        ClusterConfig { platform, nodes, cores_per_node, lib, n: 57_600, nb: 192, link: Link::gbe() }
     }
 }
 
@@ -51,7 +55,7 @@ pub struct HplProjection {
 
 /// Project the HPL performance of a cluster configuration.
 pub fn project(cfg: &ClusterConfig) -> HplProjection {
-    let node_rate = PerfModel::new(&cfg.node, cfg.lib).node_gflops(cfg.cores_per_node) * 1e9;
+    let node_rate = PerfModel::new(&cfg.platform, cfg.lib).node_gflops(cfg.cores_per_node) * 1e9;
     let flops = hpl_flops(cfg.n);
     let p = cfg.nodes;
     let t_comp = flops / (p as f64 * node_rate);
@@ -92,10 +96,10 @@ pub fn cluster_hpl_gflops(cfg: &ClusterConfig) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::presets::{sg2042, sg2042_dual, u740};
+    use crate::arch::platform::{mcv1_u740, mcv2_dual, mcv2_pioneer, mcv3, sg2044};
 
     fn mcv2_single() -> ClusterConfig {
-        ClusterConfig::mcv2_default(sg2042(), 1, 64)
+        ClusterConfig::hpl_default(mcv2_pioneer(), 1, 64)
     }
 
     #[test]
@@ -109,7 +113,7 @@ mod tests {
         // "increasing the number of parallel processes reduces the HPL
         // efficiency (only the 1.33x w.r.t single node performance)"
         let one = cluster_hpl_gflops(&mcv2_single());
-        let two = cluster_hpl_gflops(&ClusterConfig::mcv2_default(sg2042(), 2, 64));
+        let two = cluster_hpl_gflops(&ClusterConfig::hpl_default(mcv2_pioneer(), 2, 64));
         let ratio = two / one;
         assert!((1.20..1.45).contains(&ratio), "2-node scaling {ratio:.2}");
     }
@@ -118,16 +122,15 @@ mod tests {
     fn fig5_dual_socket_beats_two_networked_nodes() {
         // the paper's architectural point: one dual-socket node (1.76x)
         // outperforms two single-socket nodes over 1 GbE (1.33x)
-        let two_net = cluster_hpl_gflops(&ClusterConfig::mcv2_default(sg2042(), 2, 64));
-        let dual = cluster_hpl_gflops(&ClusterConfig::mcv2_default(sg2042_dual(), 1, 128));
+        let two_net = cluster_hpl_gflops(&ClusterConfig::hpl_default(mcv2_pioneer(), 2, 64));
+        let dual = cluster_hpl_gflops(&ClusterConfig::hpl_default(mcv2_dual(), 1, 128));
         assert!(dual > two_net, "dual {dual:.1} vs 2-node {two_net:.1}");
     }
 
     #[test]
     fn fig5_mcv1_cluster_13_gflops_near_linear() {
-        let mut cfg = ClusterConfig::mcv2_default(u740(), 8, 4);
-        cfg.lib = UkernelId::OpenblasGeneric;
-        let p = project(&cfg);
+        // the mcv1 platform's default library is already the generic one
+        let p = project(&ClusterConfig::hpl_default(mcv1_u740(), 8, 4));
         assert!((11.0..15.0).contains(&p.gflops), "MCv1 8-node {:.1}", p.gflops);
         // "the 1 Gb/s network was sufficient for obtaining almost an HPL
         // linear scaling"
@@ -136,7 +139,7 @@ mod tests {
 
     #[test]
     fn mcv2_network_efficiency_is_poor() {
-        let cfg = ClusterConfig::mcv2_default(sg2042(), 2, 64);
+        let cfg = ClusterConfig::hpl_default(mcv2_pioneer(), 2, 64);
         let p = project(&cfg);
         assert!(p.efficiency_vs_one_node < 0.75, "{:.3}", p.efficiency_vs_one_node);
         assert!(p.t_comm > 0.3 * p.t_comp, "comm {:.0}s comp {:.0}s", p.t_comm, p.t_comp);
@@ -145,7 +148,7 @@ mod tests {
     #[test]
     fn ten_gbe_ablation_restores_scaling() {
         // DESIGN.md ablation: a 10 GbE fabric would have fixed MCv2 scaling
-        let mut cfg = ClusterConfig::mcv2_default(sg2042(), 2, 64);
+        let mut cfg = ClusterConfig::hpl_default(mcv2_pioneer(), 2, 64);
         cfg.link = Link::ten_gbe();
         let p = project(&cfg);
         assert!(p.efficiency_vs_one_node > 0.85, "{:.3}", p.efficiency_vs_one_node);
@@ -161,11 +164,29 @@ mod tests {
     #[test]
     fn headline_127x() {
         // dual-socket MCv2 node vs one MCv1 node
-        let mut v1 = ClusterConfig::mcv2_default(u740(), 1, 4);
-        v1.lib = UkernelId::OpenblasGeneric;
-        let old = cluster_hpl_gflops(&v1);
-        let new = cluster_hpl_gflops(&ClusterConfig::mcv2_default(sg2042_dual(), 1, 128));
+        let old = cluster_hpl_gflops(&ClusterConfig::hpl_default(mcv1_u740(), 1, 4));
+        let new = cluster_hpl_gflops(&ClusterConfig::hpl_default(mcv2_dual(), 1, 128));
         let r = new / old;
         assert!((100.0..160.0).contains(&r), "{r:.0}x");
+    }
+
+    #[test]
+    fn down_the_road_generations_are_ordered() {
+        // single-node HPL must improve monotonically across generations:
+        // MCv1 < MCv2 1S < MCv2 2S, SG2044 > MCv2 1S, MCv3 > MCv2 2S
+        let g = |p: Platform, cores| {
+            cluster_hpl_gflops(&ClusterConfig::hpl_default(p, 1, cores))
+        };
+        let v1 = g(mcv1_u740(), 4);
+        let v2s = g(mcv2_pioneer(), 64);
+        let v2d = g(mcv2_dual(), 128);
+        let s44 = g(sg2044(), 64);
+        let v3 = g(mcv3(), 128);
+        for v in [v1, v2s, v2d, s44, v3] {
+            assert!(v.is_finite() && v > 0.0, "{v}");
+        }
+        assert!(v1 < v2s && v2s < v2d, "{v1:.1} {v2s:.1} {v2d:.1}");
+        assert!(s44 > v2s, "sg2044 {s44:.1} vs mcv2 {v2s:.1}");
+        assert!(v3 > v2d, "mcv3 {v3:.1} vs mcv2-dual {v2d:.1}");
     }
 }

@@ -21,18 +21,26 @@
 //! - [`mem`] — DDR4 multi-channel bandwidth model (Fig 3).
 //! - [`net`] — 1 GbE + MPI-collective cost models (Fig 5).
 //! - [`hpl`] / [`stream`] — the benchmarks themselves, with real numerics.
-//! - [`sched`] / [`cluster`] — SLURM-like scheduler and node inventory,
-//!   with a parallel per-partition drain for independent job streams.
+//! - [`arch`] — the open platform API: SoC descriptors bundled with
+//!   power models and perf calibration into [`arch::Platform`]s,
+//!   registered by string id in an [`arch::PlatformRegistry`] (built-in:
+//!   MCv1 U740, MCv2 SG2042 single/dual, and the SG2044 / MCv3
+//!   successors; user-defined platforms load from campaign spec files).
+//! - [`sched`] / [`cluster`] — SLURM-like scheduler and node inventories
+//!   built from `(platform_id, count)` fleet specs, with a parallel
+//!   per-partition drain for independent job streams.
 //! - [`runtime`] — PJRT client executing the JAX/Pallas-authored HLO
 //!   artifacts (`artifacts/*.hlo.txt`); Python never runs at this layer.
 //! - [`coordinator`] — the declarative campaign engine: a
 //!   [`coordinator::Workload`] trait (STREAM, HPL, BLIS-ablation
 //!   implementations) plus a [`coordinator::CampaignSpec`] describing a
-//!   benchmark campaign as *data* — buildable in code or parsed from a
-//!   `util::config` file — which `run_campaign_spec` estimates in
-//!   parallel, schedules, monitors, and reports. The paper's own 9-job
-//!   campaign is `CampaignSpec::paper_default()`; figure renderers live
-//!   alongside in [`coordinator::report`].
+//!   benchmark campaign as *data* — workloads, fleet and even custom
+//!   platforms, buildable in code or parsed from a `util::config` file —
+//!   which `run_campaign_spec` estimates in parallel (with per-job
+//!   power/energy), schedules, monitors, and reports (human-readable or
+//!   JSON). The paper's own 9-job campaign is
+//!   `CampaignSpec::paper_default()`; figure renderers live alongside in
+//!   [`coordinator::report`].
 //! - [`error`] — the typed [`CimoneError`] every layer above reports
 //!   failures with (convertible into the crate-wide [`Result`]).
 

@@ -14,10 +14,17 @@
 //! cimone validate [--artifacts dir]  PJRT artifacts vs native numerics
 //! cimone campaign [--n 96]           end-to-end: SLURM sim + monitor
 //!         [--spec file.toml]         ... driven by a declarative campaign spec
+//!         [--dry-run]                ... validate + estimate only, no scheduling
+//!         [--json]                   ... machine-readable CampaignReport
+//! cimone platforms                   the registered platform fleet (SoC table)
 //! cimone translate-demo              section 3.3.1 RVV 1.0 -> 0.7.1 retrofit
 //! ```
+//!
+//! Campaign specs name platforms by registry id or alias (`mcv2-pioneer`,
+//! `sg2044`, ...), may define their own via `[[platform]]` sections, and
+//! pick the simulated machine with `[[fleet]]` entries.
 
-use cimone::cluster::monte_cimone_v2;
+use cimone::arch::PlatformRegistry;
 use cimone::coordinator::{driver, report, CampaignSpec};
 use cimone::error::CimoneError;
 use cimone::hpl::driver::{run as hpl_run, Backend, HplConfig};
@@ -26,6 +33,7 @@ use cimone::isa::asm::render_program;
 use cimone::isa::translate::rvv10_to_thead;
 use cimone::ukernel::{MicroKernel, PanelLayout, UkernelId};
 use cimone::util::cli::Args;
+use cimone::util::table::Table;
 use cimone::util::Matrix;
 
 fn main() {
@@ -105,8 +113,9 @@ fn run(args: &Args) -> Result<(), CimoneError> {
             validate_artifacts(args)?;
         }
         Some("campaign") => {
-            // declarative path: --spec <file> describes the campaign;
-            // without it the paper's 9-job default runs
+            // declarative path: --spec <file> describes the campaign
+            // (workloads + fleet + custom platforms); without it the
+            // paper's 9-job default runs on the paper's 12-node machine
             let mut spec = match args.get("spec") {
                 Some(path) => CampaignSpec::load(path)?,
                 None => CampaignSpec::paper_default(),
@@ -115,18 +124,64 @@ fn run(args: &Args) -> Result<(), CimoneError> {
             if args.get("n").is_some() {
                 spec.validate_n = args.get_usize("n", spec.validate_n)?;
             }
-            let inv = monte_cimone_v2();
-            let r = driver::run_campaign_spec(&inv, &spec)?;
-            println!("campaign: {} jobs, makespan {:.0}s (simulated)", r.jobs.len(), r.makespan_s);
-            println!(
-                "validation: HPL residual {:.3e} ({}), STREAM {}",
-                r.hpl_residual,
-                if r.hpl_passed { "passed" } else { "FAILED" },
-                if r.stream_validated { "validated" } else { "FAILED" }
-            );
-            for (name, runtime, metric) in &r.jobs {
-                println!("  {name:<18} {runtime:>10.1}s  -> {metric:.1}");
+            let inv = spec.build_inventory()?;
+            if args.flag("dry-run") {
+                // validate + estimate only; any spec problem exits non-zero
+                let rows = driver::dry_run_spec(&inv, &spec)?;
+                if args.flag("json") {
+                    let jobs: Vec<_> = rows.iter().map(|j| j.to_json()).collect();
+                    println!("{}", cimone::util::json::Json::Arr(jobs).render());
+                } else {
+                    println!(
+                        "dry run: spec OK — {} jobs on {} nodes, nothing scheduled",
+                        rows.len(),
+                        inv.nodes.len()
+                    );
+                    print_job_rows(&rows);
+                }
+            } else {
+                let r = driver::run_campaign_spec(&inv, &spec)?;
+                if args.flag("json") {
+                    println!("{}", r.to_json().render());
+                } else {
+                    println!(
+                        "campaign: {} jobs, makespan {:.0}s (simulated)",
+                        r.jobs.len(),
+                        r.makespan_s
+                    );
+                    println!(
+                        "validation: HPL residual {:.3e} ({}), STREAM {}",
+                        r.hpl_residual,
+                        if r.hpl_passed { "passed" } else { "FAILED" },
+                        if r.stream_validated { "validated" } else { "FAILED" }
+                    );
+                    print_job_rows(&r.jobs);
+                }
             }
+        }
+        Some("platforms") => {
+            let reg = PlatformRegistry::builtin();
+            let mut t = Table::new(vec![
+                "id",
+                "label",
+                "partition",
+                "cores",
+                "peak GF/s",
+                "idle W",
+                "aliases",
+            ]);
+            for p in reg.platforms() {
+                t.row(vec![
+                    p.id.clone(),
+                    p.label.clone(),
+                    p.partition.clone(),
+                    p.desc.total_cores().to_string(),
+                    format!("{:.1}", p.peak_gflops()),
+                    format!("{:.0}", p.power.idle_w),
+                    p.aliases.join(", "),
+                ]);
+            }
+            println!("{}", t.render());
         }
         Some("translate-demo") => {
             let kernel = cimone::ukernel::blis_lmul1::BlisLmul1;
@@ -144,10 +199,24 @@ fn run(args: &Args) -> Result<(), CimoneError> {
             )));
         }
         None => {
-            println!("usage: cimone <stream|hpl|cluster-hpl|cache-miss|blis-compare|headline|report-all|run-hpl|validate|campaign|translate-demo>");
+            println!("usage: cimone <stream|hpl|cluster-hpl|cache-miss|blis-compare|headline|report-all|run-hpl|validate|campaign|platforms|translate-demo>");
         }
     }
     Ok(())
+}
+
+/// Per-job table shared by `campaign` and `campaign --dry-run`.
+fn print_job_rows(rows: &[cimone::coordinator::JobRow]) {
+    for j in rows {
+        let eff = match j.gflops_per_w {
+            Some(e) => format!("{e:>6.2} GF/W"),
+            None => "      -    ".to_string(),
+        };
+        println!(
+            "  {:<18} {:>10.1}s  -> {:>8.1}  {:>6.0} W/node  {:>10.0} J  {}",
+            j.name, j.runtime_s, j.headline, j.avg_node_w, j.energy_j, eff
+        );
+    }
 }
 
 /// `cimone validate`: run the PJRT artifacts against native numerics.

@@ -1,5 +1,6 @@
-//! Minimal JSON parser (serde is unavailable offline). Supports the full
-//! JSON grammar minus exotic number forms; used for `artifacts/manifest.json`.
+//! Minimal JSON parser + writer (serde is unavailable offline). Supports
+//! the full JSON grammar minus exotic number forms; used for
+//! `artifacts/manifest.json` and the `cimone campaign --json` export.
 
 use std::collections::BTreeMap;
 
@@ -64,6 +65,67 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Serialize to compact JSON text. Non-finite numbers (which JSON
+    /// cannot represent) render as `null`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    out.push_str(&format!("{n}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -288,5 +350,20 @@ mod tests {
     #[test]
     fn unicode_passthrough() {
         assert_eq!(Json::parse("\"µkernel\"").unwrap(), Json::Str("µkernel".into()));
+    }
+
+    #[test]
+    fn render_roundtrips_through_parse() {
+        let doc = r#"{"a": [1, 2.5, -3], "b": {"nested": true}, "s": "x\n\"y\"", "n": null}"#;
+        let j = Json::parse(doc).unwrap();
+        let back = Json::parse(&j.render()).unwrap();
+        assert_eq!(j, back);
+    }
+
+    #[test]
+    fn render_nonfinite_as_null() {
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+        assert_eq!(Json::Num(139.4).render(), "139.4");
     }
 }

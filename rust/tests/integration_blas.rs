@@ -72,7 +72,7 @@ fn lmul_schedules_bitwise_identical_through_blocked_gemm() {
 #[test]
 fn perf_ordering_matches_fig7_at_all_core_counts() {
     use cimone::blas::perf::PerfModel;
-    let d = presets::sg2042_dual();
+    let d = cimone::arch::platform::mcv2_dual();
     for cores in [1, 8, 16, 32, 64, 128] {
         let ob = PerfModel::new(&d, UkernelId::OpenblasC920).node_gflops(cores);
         let bv = PerfModel::new(&d, UkernelId::BlisLmul1).node_gflops(cores);

@@ -12,7 +12,7 @@ fn paper_default_spec_reproduces_seed_campaign() {
     // figure-reproduction script as a spec
     let r = run_campaign(64).expect("campaign");
     assert_eq!(r.jobs.len(), 9);
-    let names: Vec<&str> = r.jobs.iter().map(|(n, _, _)| n.as_str()).collect();
+    let names: Vec<&str> = r.jobs.iter().map(|j| j.name.as_str()).collect();
     assert_eq!(
         names,
         [
@@ -46,7 +46,7 @@ fn unknown_partition_is_a_typed_error_not_a_panic() {
 #[test]
 fn empty_campaign_spec_drains_to_zero_makespan() {
     let inv = monte_cimone_v2();
-    let spec = CampaignSpec { workloads: vec![], validate_n: 48 };
+    let spec = CampaignSpec { workloads: vec![], validate_n: 48, ..Default::default() };
     let r = run_campaign_spec(&inv, &spec).unwrap();
     assert!(r.jobs.is_empty());
     assert_eq!(r.makespan_s, 0.0);
@@ -113,7 +113,7 @@ fn oversubscribed_campaign_queues_and_completes() {
     let inv = monte_cimone_v2();
     let r = run_campaign_spec(&inv, &spec).unwrap();
     assert_eq!(r.jobs.len(), 5);
-    let longest_single = r.jobs.iter().map(|(_, t, _)| *t).fold(0.0f64, f64::max);
+    let longest_single = r.jobs.iter().map(|j| j.runtime_s).fold(0.0f64, f64::max);
     assert!(
         r.makespan_s > longest_single,
         "wide job must queue: makespan {} vs longest {}",

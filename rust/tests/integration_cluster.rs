@@ -52,7 +52,7 @@ fn failure_injection_degrades_gracefully() {
     // still run; bringing it back restores capacity
     let inv = monte_cimone_v2();
     let mut s = inv.scheduler();
-    let mcv2_first = inv.ids_of_kind(cimone::arch::soc::NodeKind::Mcv2Pioneer)[0];
+    let mcv2_first = inv.ids_of_platform("mcv2-pioneer")[0];
     assert!(s.partitions.get_mut("mcv2").unwrap().mark_down(mcv2_first));
     // partition now reports 3 schedulable nodes
     assert_eq!(s.partitions["mcv2"].size(), 3);

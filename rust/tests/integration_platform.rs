@@ -1,0 +1,214 @@
+//! Integration: the open platform API — registry resolution, typed
+//! errors, the SG2044 / MCv3 successor platforms, and spec files that
+//! pick their own fleet, end to end through the campaign engine.
+
+use cimone::arch::platform::{self, PlatformRegistry};
+use cimone::cluster::inventory::Inventory;
+use cimone::coordinator::driver::{dry_run_spec, run_campaign_spec};
+use cimone::coordinator::CampaignSpec;
+use cimone::error::CimoneError;
+
+#[test]
+fn unknown_platform_id_is_a_typed_error() {
+    let reg = PlatformRegistry::builtin();
+    match reg.get("epyc-9654") {
+        Err(CimoneError::UnknownPlatform { id, known }) => {
+            assert_eq!(id, "epyc-9654");
+            // the error lists what IS registered, for spec authors
+            for builtin in ["mcv1-u740", "mcv2-pioneer", "mcv2-dual", "sg2044", "mcv3"] {
+                assert!(known.contains(builtin), "{known}");
+            }
+        }
+        other => panic!("expected UnknownPlatform, got {other:?}"),
+    }
+}
+
+#[test]
+fn duplicate_registration_is_rejected() {
+    let mut reg = PlatformRegistry::builtin();
+    // same id again
+    assert!(matches!(
+        reg.register(platform::sg2044()),
+        Err(CimoneError::DuplicatePlatform(ref n)) if n == "sg2044"
+    ));
+    // fresh id but an alias that collides with an existing id
+    let mut p = platform::sg2044();
+    p.id = "sg2044-respin".into();
+    p.aliases = vec!["mcv3".into()];
+    assert!(matches!(reg.register(p), Err(CimoneError::DuplicatePlatform(ref n)) if n == "mcv3"));
+    // the registry is unchanged after the failed registrations
+    assert_eq!(reg.ids().len(), 5);
+}
+
+#[test]
+fn platform_invariants_are_validated_on_registration() {
+    let mut reg = PlatformRegistry::new();
+    let mut p = platform::sg2044();
+    p.desc.sockets[0].core.freq_hz = 0.0;
+    match reg.register(p) {
+        Err(CimoneError::InvalidPlatform { id, reason }) => {
+            assert_eq!(id, "sg2044");
+            assert!(reason.contains("frequency"), "{reason}");
+        }
+        other => panic!("expected InvalidPlatform, got {other:?}"),
+    }
+}
+
+#[test]
+fn successor_estimates_are_finite_and_ordered_vs_mcv2() {
+    // one fleet holding every generation; jobs target each via platform id
+    let reg = PlatformRegistry::builtin();
+    let inv = Inventory::from_fleet(
+        &reg,
+        &[("mcv2-pioneer", 1), ("mcv2-dual", 1), ("sg2044", 1), ("mcv3", 1)],
+    )
+    .unwrap();
+
+    let mut spec = CampaignSpec::new();
+    for (name, platform, partition, cores) in [
+        ("hpl-sg2042", "mcv2-pioneer", "mcv2", 64usize),
+        ("hpl-sg2042x2", "mcv2-dual", "mcv2", 128),
+        ("hpl-sg2044", "sg2044", "sg2044", 64),
+        ("hpl-mcv3", "mcv3", "mcv3", 128),
+    ] {
+        spec.push(cimone::coordinator::WorkloadSpec::Hpl {
+            name: name.into(),
+            partition: partition.into(),
+            nodes: 1,
+            platform: platform.into(),
+            cluster_nodes: 1,
+            cores_per_node: cores,
+            lib: None,
+        });
+    }
+    spec.validate_n = 48;
+    let r = run_campaign_spec(&inv, &spec).unwrap();
+    let get = |n: &str| r.monitor.latest(n).unwrap();
+    for name in ["hpl-sg2042", "hpl-sg2042x2", "hpl-sg2044", "hpl-mcv3"] {
+        let v = get(&format!("{name}.gflops"));
+        assert!(v.is_finite() && v > 0.0, "{name}: {v}");
+    }
+    // Brown et al.: SG2044 >= SG2042 on HPL; and the dual-socket MCv3
+    // projection clears both MCv2 node types
+    assert!(get("hpl-sg2044.gflops") >= get("hpl-sg2042.gflops"));
+    assert!(get("hpl-mcv3.gflops") > get("hpl-sg2042x2.gflops"));
+}
+
+const SG2044_SPEC: &str = r#"
+[campaign]
+validate_n = 48
+
+[[fleet]]
+platform = "sg2044"
+count = 4
+
+[[workload]]
+kind = "stream"
+name = "stream-sg2044"
+platform = "sg2044"
+partition = "sg2044"
+threads = 64
+
+[[workload]]
+kind = "hpl"
+name = "hpl-sg2044-2n"
+platform = "sg2044"
+partition = "sg2044"
+nodes = 2
+cores_per_node = 64
+"#;
+
+#[test]
+fn sg2044_spec_file_round_trips_through_the_engine() {
+    let spec = CampaignSpec::parse(SG2044_SPEC).unwrap();
+    let inv = spec.build_inventory().unwrap();
+    assert_eq!(inv.nodes.len(), 4);
+    assert_eq!(inv.node(0).hostname, "sg2044-01");
+
+    let r = run_campaign_spec(&inv, &spec).unwrap();
+    assert_eq!(r.jobs.len(), 2);
+    assert!(r.hpl_passed);
+    // STREAM on DDR5 beats the SG2042's 41.9 GB/s
+    let bw = r.monitor.latest("stream-sg2044.bandwidth").unwrap();
+    assert!(bw > 41.9e9, "{bw}");
+    let gf = r.monitor.latest("hpl-sg2044-2n.gflops").unwrap();
+    assert!(gf.is_finite() && gf > 100.0, "{gf}");
+    // per-job power/energy landed in the monitor too
+    assert!(r.monitor.latest("hpl-sg2044-2n.power_w").unwrap() > 55.0);
+    assert!(r.monitor.latest("hpl-sg2044-2n.energy_j").unwrap() > 0.0);
+    assert!(r.makespan_s > 0.0);
+}
+
+#[test]
+fn dry_run_matches_engine_estimates_without_scheduling() {
+    let spec = CampaignSpec::parse(SG2044_SPEC).unwrap();
+    let inv = spec.build_inventory().unwrap();
+    let rows = dry_run_spec(&inv, &spec).unwrap();
+    let full = run_campaign_spec(&inv, &spec).unwrap();
+    assert_eq!(rows.len(), full.jobs.len());
+    for (a, b) in rows.iter().zip(&full.jobs) {
+        assert_eq!(a.name, b.name);
+        assert!((a.headline - b.headline).abs() < 1e-9);
+        assert!((a.energy_j - b.energy_j).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn custom_platform_spec_runs_end_to_end() {
+    // a user-defined overclocked SG2044 defined entirely in the spec file
+    let text = r#"
+[campaign]
+validate_n = 48
+
+[[platform]]
+id = "sg2044-oc"
+base = "sg2044"
+freq_ghz = 3.0
+idle_w = 70.0
+partition = "oc"
+
+[[fleet]]
+platform = "sg2044-oc"
+count = 2
+
+[[workload]]
+kind = "hpl"
+name = "hpl-oc"
+platform = "sg2044-oc"
+partition = "oc"
+cores_per_node = 16
+"#;
+    let spec = CampaignSpec::parse(text).unwrap();
+    let inv = spec.build_inventory().unwrap();
+    assert_eq!(inv.nodes.len(), 2);
+    let r = run_campaign_spec(&inv, &spec).unwrap();
+    let oc = r.monitor.latest("hpl-oc.gflops").unwrap();
+    assert!(oc.is_finite() && oc > 0.0);
+
+    // the same job on the stock sg2044 is slower than the 3.0 GHz respin
+    // (16 cores: the bandwidth-uncontended regime, where clock rules)
+    let stock = CampaignSpec::parse(
+        "[campaign]\nvalidate_n = 48\n\n[[fleet]]\nplatform = \"sg2044\"\ncount = 2\n\n\
+         [[workload]]\nkind = \"hpl\"\nname = \"hpl-stock\"\nplatform = \"sg2044\"\npartition = \"sg2044\"\ncores_per_node = 16\n",
+    )
+    .unwrap();
+    let r2 = run_campaign_spec(&stock.build_inventory().unwrap(), &stock).unwrap();
+    let st = r2.monitor.latest("hpl-stock.gflops").unwrap();
+    assert!(oc > st, "oc {oc:.1} vs stock {st:.1}");
+}
+
+#[test]
+fn paper_campaign_is_untouched_by_the_redesign() {
+    // the frozen 9-job campaign still reproduces byte-for-byte on the
+    // default fleet built through the registry
+    let spec = CampaignSpec::paper_default();
+    let inv = spec.build_inventory().unwrap();
+    assert_eq!(inv.nodes.len(), 12);
+    assert_eq!(inv.node(0).hostname, "mc-01");
+    assert_eq!(inv.node(11).hostname, "mcv2-04");
+    let r = run_campaign_spec(&inv, &spec).unwrap();
+    assert_eq!(r.jobs.len(), 9);
+    let get = |n: &str| r.monitor.latest(n).unwrap();
+    assert!((get("stream-mcv2-1s.bandwidth") - 41.9e9).abs() < 0.5e9);
+    assert!(get("hpl-blis-opt.gflops") > get("hpl-blis-vanilla.gflops"));
+}
