@@ -1,0 +1,48 @@
+//! CI smoke for the scenario sweep: load the generation-matrix spec
+//! file, dry-run it, validate the `--json` output through `Json::parse`,
+//! and check the paper's headline ratios survive. Optionally validates
+//! an externally produced JSON file (e.g. piped from
+//! `cimone sweep --dry-run --json`) passed as the first argument.
+//!
+//! ```text
+//! cargo run --example sweep_smoke [-- sweep.json]
+//! ```
+
+use cimone::coordinator::scenario::{dry_run_matrix, ScenarioMatrix};
+use cimone::util::json::Json;
+
+fn main() -> cimone::Result<()> {
+    let matrix = ScenarioMatrix::load("examples/sweep_generations.toml")?;
+    let report = dry_run_matrix(&matrix)?;
+
+    // the JSON export must round-trip through our own parser
+    let text = report.to_json().render();
+    let parsed = Json::parse(&text).map_err(anyhow::Error::msg)?;
+    let rows = parsed
+        .get("scenarios")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing `scenarios` array"))?;
+    assert_eq!(rows.len(), 5, "expected one scenario per generation");
+
+    let dual = rows
+        .iter()
+        .find(|r| r.get("name").and_then(Json::as_str) == Some("mcv2-dual"))
+        .ok_or_else(|| anyhow::anyhow!("missing mcv2-dual scenario"))?;
+    let hpl_x = dual.get("hpl_speedup").and_then(Json::as_f64).unwrap_or(0.0);
+    let stream_x = dual.get("stream_speedup").and_then(Json::as_f64).unwrap_or(0.0);
+    assert!((100.0..160.0).contains(&hpl_x), "HPL uplift {hpl_x:.0}x (paper 127x)");
+    assert!((55.0..85.0).contains(&stream_x), "STREAM uplift {stream_x:.0}x (paper 69x)");
+
+    // validate an externally produced JSON file when given one
+    if let Some(path) = std::env::args().nth(1) {
+        let external = std::fs::read_to_string(&path)?;
+        let parsed = Json::parse(&external).map_err(anyhow::Error::msg)?;
+        let n = parsed.get("scenarios").and_then(Json::as_arr).map(|a| a.len()).unwrap_or(0);
+        assert!(n > 0, "{path}: no scenarios in the sweep JSON");
+        println!("{path}: valid sweep JSON with {n} scenarios");
+    }
+
+    println!("sweep smoke OK: mcv2-dual at {hpl_x:.0}x HPL / {stream_x:.0}x STREAM vs MCv1");
+    println!("{}", report.render());
+    Ok(())
+}

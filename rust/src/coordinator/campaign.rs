@@ -95,6 +95,32 @@ impl WorkloadSpec {
         }
     }
 
+    /// Spec-file kind keyword (`stream` | `hpl` | `blis-ablation`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            WorkloadSpec::Stream { .. } => "stream",
+            WorkloadSpec::Hpl { .. } => "hpl",
+            WorkloadSpec::BlisAblation { .. } => "blis-ablation",
+        }
+    }
+
+    /// Nodes the described job allocates from its partition.
+    pub fn nodes(&self) -> usize {
+        match self {
+            WorkloadSpec::Stream { nodes, .. } | WorkloadSpec::Hpl { nodes, .. } => *nodes,
+            WorkloadSpec::BlisAblation { .. } => 1,
+        }
+    }
+
+    /// SLURM partition the described job is submitted to.
+    pub fn partition(&self) -> &str {
+        match self {
+            WorkloadSpec::Stream { partition, .. }
+            | WorkloadSpec::Hpl { partition, .. }
+            | WorkloadSpec::BlisAblation { partition, .. } => partition,
+        }
+    }
+
     /// Platform id (or alias) the workload targets.
     pub fn platform(&self) -> &str {
         match self {
@@ -186,6 +212,56 @@ impl WorkloadSpec {
             ))),
         }
     }
+
+    /// Render back to a `[[workload]]` section;
+    /// [`WorkloadSpec::from_section`] on the result reconstructs an equal
+    /// value (every defaultable key is written out explicitly).
+    pub fn render(&self) -> String {
+        match self {
+            WorkloadSpec::Stream { name, partition, nodes, platform, threads } => format!(
+                "[[workload]]\nkind = \"stream\"\nname = \"{name}\"\nplatform = \"{platform}\"\n\
+                 partition = \"{partition}\"\nnodes = {nodes}\nthreads = {threads}\n"
+            ),
+            WorkloadSpec::Hpl {
+                name,
+                partition,
+                nodes,
+                platform,
+                cluster_nodes,
+                cores_per_node,
+                lib,
+            } => {
+                let mut s = format!(
+                    "[[workload]]\nkind = \"hpl\"\nname = \"{name}\"\nplatform = \"{platform}\"\n\
+                     partition = \"{partition}\"\nnodes = {nodes}\ncluster_nodes = {cluster_nodes}\n\
+                     cores_per_node = {cores_per_node}\n"
+                );
+                if let Some(lib) = lib {
+                    s.push_str(&format!("lib = \"{}\"\n", lib.spec_name()));
+                }
+                s
+            }
+            WorkloadSpec::BlisAblation { name, partition, platform, lib, cores, runtime_s } => {
+                format!(
+                    "[[workload]]\nkind = \"blis-ablation\"\nname = \"{name}\"\n\
+                     platform = \"{platform}\"\npartition = \"{partition}\"\nlib = \"{}\"\n\
+                     cores = {cores}\nruntime_s = {}\n",
+                    lib.spec_name(),
+                    fmt_float(*runtime_s)
+                )
+            }
+        }
+    }
+}
+
+/// Format a float so `util::config` re-parses it as a float (never an
+/// int): integral values keep one decimal place.
+pub(crate) fn fmt_float(v: f64) -> String {
+    if v == v.trunc() && v.is_finite() {
+        format!("{v:.1}")
+    } else {
+        format!("{v}")
+    }
 }
 
 fn req_str<'a>(sec: &'a Section, key: &str, who: &str) -> Result<&'a str, CimoneError> {
@@ -245,6 +321,16 @@ fn opt_lib(sec: &Section, who: &str) -> Result<Option<UkernelId>, CimoneError> {
     }
 }
 
+/// One `[[platform]]` definition: the derived [`Platform`] plus the base
+/// it was derived from, kept so the spec can render itself back to
+/// config text as `base` + overrides.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformDef {
+    /// Registry id (or alias) the platform derives from.
+    pub base: String,
+    pub platform: Platform,
+}
+
 /// A full campaign: ordered workloads, the fleet they run on, and the
 /// validation problem size.
 #[derive(Debug, Clone, PartialEq)]
@@ -258,7 +344,7 @@ pub struct CampaignSpec {
     pub fleet: Vec<(String, usize)>,
     /// Platforms defined by `[[platform]]` sections, registered on top of
     /// the built-ins when the spec builds its registry/inventory.
-    pub custom_platforms: Vec<Platform>,
+    pub custom_platforms: Vec<PlatformDef>,
 }
 
 impl Default for CampaignSpec {
@@ -364,8 +450,11 @@ impl CampaignSpec {
         }
         let mut reg = PlatformRegistry::builtin();
         for sec in cfg.table_arrays.get("platform").map(Vec::as_slice).unwrap_or(&[]) {
+            // `base` is re-read here (register_section already validates
+            // its presence) so the def can render itself back to text
+            let base = sec.get("base").and_then(Value::as_str).unwrap_or_default().to_string();
             let p = reg.register_section(sec)?;
-            spec.custom_platforms.push((*p).clone());
+            spec.custom_platforms.push(PlatformDef { base, platform: (*p).clone() });
         }
         for sec in cfg.table_arrays.get("fleet").map(Vec::as_slice).unwrap_or(&[]) {
             // a misspelled key (e.g. `cout`) must not silently default
@@ -406,8 +495,8 @@ impl CampaignSpec {
     /// plus any `[[platform]]` definitions.
     pub fn registry(&self) -> Result<PlatformRegistry, CimoneError> {
         let mut reg = PlatformRegistry::builtin();
-        for p in &self.custom_platforms {
-            reg.register(p.clone())?;
+        for def in &self.custom_platforms {
+            reg.register(def.platform.clone())?;
         }
         Ok(reg)
     }
@@ -435,6 +524,111 @@ impl CampaignSpec {
         let cfg = Config::load(path).map_err(CimoneError::Spec)?;
         CampaignSpec::from_config(&cfg)
     }
+
+    /// Render the spec back to spec-file text. `CampaignSpec::parse` on
+    /// the result reconstructs an equal spec: workloads and fleet render
+    /// every key explicitly, `[[platform]]` definitions render as their
+    /// base plus only the overridden keys (so inherited fields stay
+    /// bit-identical through the round-trip).
+    pub fn render(&self) -> String {
+        let mut out = format!("[campaign]\nvalidate_n = {}\n", self.validate_n);
+        let mut reg = PlatformRegistry::builtin();
+        for def in &self.custom_platforms {
+            out.push('\n');
+            out.push_str(&render_platform_def(&mut reg, def));
+        }
+        for (platform, count) in &self.fleet {
+            out.push_str(&format!("\n[[fleet]]\nplatform = \"{platform}\"\ncount = {count}\n"));
+        }
+        for w in &self.workloads {
+            out.push('\n');
+            out.push_str(&w.render());
+        }
+        out
+    }
+}
+
+/// Render one `[[platform]]` definition as `base` + the overrides that
+/// differ from what `PlatformRegistry::register_section` would derive
+/// with no overrides at all. The actual platform is then registered into
+/// `reg` so later definitions can use it as their own base.
+///
+/// Precondition (guaranteed for specs built by `from_config`, which
+/// derives every def through `register_section`): `def.base` resolves in
+/// `reg`. A hand-built def with a bogus base renders as id + base only —
+/// such text cannot re-parse anyway, since `register_section` would
+/// reject the unknown base with a typed error.
+fn render_platform_def(reg: &mut PlatformRegistry, def: &PlatformDef) -> String {
+    let p = &def.platform;
+    let mut s = format!("[[platform]]\nid = \"{}\"\nbase = \"{}\"\n", p.id, def.base);
+    if let Ok(base) = reg.get(&def.base) {
+        // the no-override derivation, mirroring register_section
+        let mut d = (*base).clone();
+        let base_label = d.label.clone();
+        d.id = p.id.clone();
+        d.aliases = Vec::new();
+        d.label = format!("{} (custom, from {base_label})", p.id);
+        d.host_prefix = p.id.clone();
+
+        for (key, actual, default) in [
+            ("label", &p.label, &d.label),
+            ("partition", &p.partition, &d.partition),
+            ("os", &p.os, &d.os),
+            ("host_prefix", &p.host_prefix, &d.host_prefix),
+        ] {
+            if actual != default {
+                s.push_str(&format!("{key} = \"{actual}\"\n"));
+            }
+        }
+        if p.default_lib != d.default_lib {
+            s.push_str(&format!("default_lib = \"{}\"\n", p.default_lib.spec_name()));
+        }
+        if p.desc.sockets.len() != d.desc.sockets.len() {
+            s.push_str(&format!("sockets = {}\n", p.desc.sockets.len()));
+        }
+        let (a, b) = (&p.desc.sockets[0], &d.desc.sockets[0]);
+        if a.cores != b.cores {
+            s.push_str(&format!("cores = {}\n", a.cores));
+        }
+        if a.core.freq_hz != b.core.freq_hz {
+            s.push_str(&format!("freq_ghz = {}\n", fmt_float(a.core.freq_hz / 1e9)));
+        }
+        if a.mem.capacity_bytes != b.mem.capacity_bytes {
+            let gb = a.mem.capacity_bytes as f64 / (1u64 << 30) as f64;
+            s.push_str(&format!("mem_gb = {}\n", fmt_float(gb)));
+        }
+        if a.mem.channels != b.mem.channels {
+            s.push_str(&format!("channels = {}\n", a.mem.channels));
+        }
+        if a.mem.channel_bw_bytes != b.mem.channel_bw_bytes {
+            s.push_str(&format!("channel_bw_gb = {}\n", fmt_float(a.mem.channel_bw_bytes / 1e9)));
+        }
+        if a.mem.efficiency != b.mem.efficiency {
+            s.push_str(&format!("mem_efficiency = {}\n", fmt_float(a.mem.efficiency)));
+        }
+        if a.mem.per_core_bw_bytes != b.mem.per_core_bw_bytes {
+            s.push_str(&format!("per_core_bw_gb = {}\n", fmt_float(a.mem.per_core_bw_bytes / 1e9)));
+        }
+        for (key, actual, default) in [
+            ("numa_penalty", p.desc.numa_penalty, d.desc.numa_penalty),
+            ("idle_w", p.power.idle_w, d.power.idle_w),
+            ("per_core_w", p.power.per_core_active_w, d.power.per_core_active_w),
+            (
+                "traffic_bytes_per_flop",
+                p.calib.traffic_bytes_per_flop,
+                d.calib.traffic_bytes_per_flop,
+            ),
+            ("smp_alpha", p.calib.smp_alpha, d.calib.smp_alpha),
+            ("bw_gamma", p.calib.bw_gamma, d.calib.bw_gamma),
+        ] {
+            if actual != default {
+                s.push_str(&format!("{key} = {}\n", fmt_float(actual)));
+            }
+        }
+    }
+    // later [[platform]] sections may derive from this one
+    let _ = reg.register(p.clone());
+    s
 }
 
 #[cfg(test)]
@@ -633,6 +827,45 @@ lib = "blis-opt"
             let built = w.build();
             assert_eq!(built.name(), w.name());
             assert!(built.nodes() >= 1);
+            assert_eq!(built.nodes(), w.nodes());
         }
+    }
+
+    #[test]
+    fn paper_default_renders_and_reparses_to_an_equal_spec() {
+        let spec = CampaignSpec::paper_default();
+        let back = CampaignSpec::parse(&spec.render()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn spec_with_fleet_and_custom_platform_round_trips() {
+        let spec = CampaignSpec::parse(
+            "[campaign]\nvalidate_n = 48\n\n\
+             [[platform]]\nid = \"sg2044-oc\"\nbase = \"sg2044\"\nfreq_ghz = 3.0\nidle_w = 70.0\npartition = \"oc\"\n\n\
+             [[fleet]]\nplatform = \"sg2044-oc\"\ncount = 2\n\n\
+             [[workload]]\nkind = \"hpl\"\nname = \"h\"\nplatform = \"sg2044-oc\"\npartition = \"oc\"\ncores_per_node = 64\n\n\
+             [[workload]]\nkind = \"blis-ablation\"\nname = \"b\"\npartition = \"mcv2\"\nlib = \"blis-opt\"\nruntime_s = 60.5\n",
+        )
+        .unwrap();
+        let text = spec.render();
+        let back = CampaignSpec::parse(&text).unwrap();
+        assert_eq!(back, spec);
+        // only overridden platform keys are written back out
+        assert!(text.contains("freq_ghz = 3.0"), "{text}");
+        assert!(text.contains("idle_w = 70.0"), "{text}");
+        assert!(!text.contains("mem_gb"), "inherited keys must not render: {text}");
+    }
+
+    #[test]
+    fn chained_custom_platforms_round_trip() {
+        // oc2 derives from oc1, which derives from a built-in
+        let spec = CampaignSpec::parse(
+            "[[platform]]\nid = \"oc1\"\nbase = \"sg2044\"\nfreq_ghz = 3.0\n\n\
+             [[platform]]\nid = \"oc2\"\nbase = \"oc1\"\nidle_w = 80.0\n",
+        )
+        .unwrap();
+        let back = CampaignSpec::parse(&spec.render()).unwrap();
+        assert_eq!(back, spec);
     }
 }

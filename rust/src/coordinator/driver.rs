@@ -31,9 +31,12 @@ use super::workload::{JobEstimate, Workload};
 
 /// One campaign job's outcome: runtime, headline metric, and the
 /// power/energy numbers derived from its platform's power model.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct JobRow {
     pub name: String,
+    /// Metric family (`gflops` | `bandwidth`), so consumers like the
+    /// scenario comparison can classify rows without re-parsing names.
+    pub metric: &'static str,
     /// Simulated seconds the job occupies its nodes.
     pub runtime_s: f64,
     /// Headline metric (GB/s for STREAM, GFLOP/s for HPL).
@@ -54,6 +57,7 @@ fn job_row(w: &dyn Workload, est: &JobEstimate) -> JobRow {
         if est.metric == "gflops" && total_w > 0.0 { Some(est.value / total_w) } else { None };
     JobRow {
         name: w.name().to_string(),
+        metric: est.metric,
         runtime_s: est.runtime_s,
         headline: est.headline,
         avg_node_w: est.avg_node_w,
@@ -78,40 +82,35 @@ impl CampaignReport {
     /// Machine-readable export for the artifacts pipeline
     /// (`cimone campaign --json`).
     pub fn to_json(&self) -> Json {
-        let mut root = BTreeMap::new();
-        root.insert("makespan_s".to_string(), Json::Num(self.makespan_s));
-        root.insert("hpl_residual".to_string(), Json::Num(self.hpl_residual));
-        root.insert("hpl_passed".to_string(), Json::Bool(self.hpl_passed));
-        root.insert("stream_validated".to_string(), Json::Bool(self.stream_validated));
-        root.insert(
-            "jobs".to_string(),
-            Json::Arr(self.jobs.iter().map(JobRow::to_json).collect()),
-        );
         let metrics: BTreeMap<String, Json> = self
             .monitor
             .query_prefix("")
             .into_iter()
             .map(|(k, v)| (k.to_string(), Json::Num(v)))
             .collect();
-        root.insert("metrics".to_string(), Json::Obj(metrics));
-        Json::Obj(root)
+        Json::obj([
+            ("makespan_s", Json::Num(self.makespan_s)),
+            ("hpl_residual", Json::Num(self.hpl_residual)),
+            ("hpl_passed", Json::Bool(self.hpl_passed)),
+            ("stream_validated", Json::Bool(self.stream_validated)),
+            ("jobs", Json::Arr(self.jobs.iter().map(JobRow::to_json).collect())),
+            ("metrics", Json::Obj(metrics)),
+        ])
     }
 }
 
 impl JobRow {
     /// Machine-readable form, used by both `--json` and `--dry-run --json`.
     pub fn to_json(&self) -> Json {
-        let mut o = BTreeMap::new();
-        o.insert("name".to_string(), Json::Str(self.name.clone()));
-        o.insert("runtime_s".to_string(), Json::Num(self.runtime_s));
-        o.insert("headline".to_string(), Json::Num(self.headline));
-        o.insert("avg_node_w".to_string(), Json::Num(self.avg_node_w));
-        o.insert("energy_j".to_string(), Json::Num(self.energy_j));
-        o.insert(
-            "gflops_per_w".to_string(),
-            self.gflops_per_w.map(Json::Num).unwrap_or(Json::Null),
-        );
-        Json::Obj(o)
+        Json::obj([
+            ("name", Json::Str(self.name.clone())),
+            ("metric", Json::Str(self.metric.to_string())),
+            ("runtime_s", Json::Num(self.runtime_s)),
+            ("headline", Json::Num(self.headline)),
+            ("avg_node_w", Json::Num(self.avg_node_w)),
+            ("energy_j", Json::Num(self.energy_j)),
+            ("gflops_per_w", self.gflops_per_w.map(Json::Num).unwrap_or(Json::Null)),
+        ])
     }
 }
 
@@ -356,6 +355,7 @@ mod tests {
         assert_eq!(back.get("jobs").unwrap().as_arr().unwrap().len(), 9);
         let job0 = back.get("jobs").unwrap().idx(0).unwrap();
         assert_eq!(job0.get("name").unwrap().as_str(), Some("stream-mcv1"));
+        assert_eq!(job0.get("metric").unwrap().as_str(), Some("bandwidth"));
         assert!(job0.get("avg_node_w").unwrap().as_f64().unwrap() > 0.0);
         assert!(back.get("metrics").unwrap().get("hpl-mcv2-1s.gflops").is_some());
     }

@@ -24,6 +24,15 @@
 //!   without scheduling, and [`driver::CampaignReport::to_json`] exports
 //!   the report for the artifacts pipeline.
 //!
+//! - [`scenario`] multiplies the whole stack: a
+//!   [`scenario::ScenarioMatrix`] expands a base spec across axes
+//!   (platforms, fleet sizes, libraries, workload subsets) into named
+//!   scenarios, runs them with rayon fan-out, and aggregates the
+//!   campaign reports into a Green500-style
+//!   [`scenario::ComparisonReport`] with speedup-vs-baseline columns
+//!   (`cimone sweep`). The built-in `generations` matrix reproduces the
+//!   paper's 127x HPL / 69x STREAM MCv1 -> MCv2 headline.
+//!
 //! [`experiments`] / [`report`] / [`sweeps`] regenerate every paper
 //! figure (and the SG2044/MCv3 extension sweeps) on top of the same
 //! models; all failures are typed [`crate::CimoneError`]s.
@@ -32,12 +41,17 @@ pub mod campaign;
 pub mod driver;
 pub mod experiments;
 pub mod report;
+pub mod scenario;
 pub mod sweeps;
 pub mod workload;
 
-pub use campaign::{CampaignSpec, WorkloadSpec};
+pub use campaign::{CampaignSpec, PlatformDef, WorkloadSpec};
 pub use driver::{
     dry_run_spec, run_campaign, run_campaign_on, run_campaign_spec, CampaignReport, JobRow,
 };
 pub use experiments::{fig3, fig4, fig5, fig6, fig7, headline};
+pub use scenario::{
+    dry_run_matrix, run_matrix, ComparisonReport, Scenario, ScenarioMatrix, ScenarioOutcome,
+    ScenarioSpec,
+};
 pub use workload::{JobEstimate, Workload};

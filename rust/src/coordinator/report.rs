@@ -104,6 +104,17 @@ pub fn render_headline() -> String {
     )
 }
 
+/// The Green500-style generation table: the built-in scenario matrix,
+/// dry-run (pure modelling) and rendered with its speedup-vs-MCv1
+/// columns — the table form of [`render_headline`], extended down the
+/// road. `cimone sweep` runs the same matrix for real.
+pub fn render_green500() -> String {
+    use super::scenario::{dry_run_matrix, ScenarioMatrix};
+    let report = dry_run_matrix(&ScenarioMatrix::generations())
+        .expect("the built-in generation matrix is valid");
+    report.render()
+}
+
 pub fn render_all(fig6_scale: f64) -> String {
     [
         render_fig3(),
@@ -112,6 +123,7 @@ pub fn render_all(fig6_scale: f64) -> String {
         render_fig6(fig6_scale),
         render_fig7(),
         render_headline(),
+        render_green500(),
     ]
     .join("\n\n")
 }
@@ -138,5 +150,14 @@ mod tests {
     fn fig6_small_scale_renders() {
         let s = render_fig6(0.25);
         assert!(s.contains("BLIS L1"));
+    }
+
+    #[test]
+    fn green500_table_names_every_generation() {
+        let s = render_green500();
+        for id in ["mcv1-u740", "mcv2-pioneer", "mcv2-dual", "sg2044", "mcv3"] {
+            assert!(s.contains(id), "missing {id} in:\n{s}");
+        }
+        assert!(s.contains("127x HPL"), "{s}");
     }
 }

@@ -6,7 +6,7 @@
 //! have shown with more pages" experiments that DESIGN.md's ablation
 //! list calls out.
 
-use crate::arch::platform::{self, Platform};
+use crate::arch::platform::{self, PlatformRegistry};
 use crate::arch::presets;
 use crate::blas::perf::PerfModel;
 use crate::hpl::model::{project, ClusterConfig};
@@ -14,6 +14,8 @@ use crate::isa::rvv::Lmul;
 use crate::net::Link;
 use crate::ukernel::{ablation, UkernelId};
 use crate::util::table::Table;
+
+use super::scenario::{dry_run_matrix, fmt_speedup, ComparisonReport, ScenarioMatrix};
 
 /// Core-count x library grid on the dual-socket node (the superset of
 /// Figs 4 and 7).
@@ -107,23 +109,22 @@ pub fn lmul_ablation() -> Table {
     t
 }
 
-/// The platform cases of the generation sweeps: each platform with its
-/// full-node core count and the library its fleet runs.
-fn generation_cases() -> Vec<(Platform, UkernelId, usize)> {
-    vec![
-        (platform::mcv1_u740(), UkernelId::OpenblasGeneric, 4),
-        (platform::mcv2_pioneer(), UkernelId::OpenblasC920, 64),
-        (platform::mcv2_dual(), UkernelId::BlisLmul4, 128),
-        (platform::sg2044(), UkernelId::OpenblasC920, 64),
-        (platform::mcv3(), UkernelId::OpenblasC920, 128),
-    ]
+/// The generation comparison every "down the road" table derives from:
+/// the built-in [`ScenarioMatrix::generations`] matrix, dry-run (pure
+/// modelling, nothing scheduled).
+fn generation_report() -> ComparisonReport {
+    dry_run_matrix(&ScenarioMatrix::generations())
+        .expect("the built-in generation matrix is valid")
 }
 
-/// Energy-to-solution: HPL at fixed N on each node generation — the
-/// efficiency argument implicit in the paper's Top500 comparison,
-/// extended down the road to the SG2044 and MCv3 platforms.
-pub fn energy_to_solution(n: usize) -> Table {
-    use crate::util::stats::hpl_flops;
+/// Energy-to-solution: the generation matrix's HPL jobs (fixed
+/// N = 57600) — the efficiency argument implicit in the paper's Top500
+/// comparison, extended down the road to the SG2044 and MCv3 platforms.
+pub fn energy_to_solution() -> Table {
+    energy_table(&generation_report())
+}
+
+fn energy_table(report: &ComparisonReport) -> Table {
     let mut t = Table::new(vec![
         "node",
         "Gflop/s",
@@ -132,42 +133,61 @@ pub fn energy_to_solution(n: usize) -> Table {
         "energy (kWh)",
         "Gflop/s/W",
     ]);
-    for (p, lib, cores) in generation_cases() {
-        let gf = PerfModel::new(&p, lib).node_gflops(cores);
-        let watts = p.power.node_power(cores);
-        let secs = hpl_flops(n) / (gf * 1e9);
+    for o in &report.scenarios {
+        let Some(hpl) = o.jobs.iter().find(|j| j.metric == "gflops") else {
+            continue;
+        };
         t.row(vec![
-            p.label.clone(),
-            format!("{gf:.1}"),
-            format!("{watts:.0}"),
-            format!("{:.2}", secs / 3600.0),
-            format!("{:.2}", watts * secs / 3.6e6),
-            format!("{:.2}", gf / watts),
+            o.name.clone(),
+            format!("{:.1}", hpl.headline),
+            format!("{:.0}", hpl.avg_node_w),
+            format!("{:.2}", hpl.runtime_s / 3600.0),
+            format!("{:.2}", hpl.energy_j / 3.6e6),
+            format!("{:.2}", o.gflops_per_w),
         ]);
     }
     t
 }
 
-/// "Down the road": single-node HPL and peak across the registered
-/// platform generations — the trajectory the Monte Cimone papers track.
+/// "Down the road": single-node HPL, STREAM and speedup-vs-MCv1 across
+/// the platform generations — the matrix-driven replacement for the old
+/// hard-coded case list, sharing its rows with `cimone sweep`.
 pub fn generation_sweep() -> Table {
-    let mut t = Table::new(vec!["platform", "cores", "peak GF/s", "HPL GF/s", "HPL %peak"]);
-    for (p, lib, cores) in generation_cases() {
-        let gf = PerfModel::new(&p, lib).node_gflops(cores);
-        let peak = p.peak_gflops();
+    generation_table(&generation_report())
+}
+
+fn generation_table(report: &ComparisonReport) -> Table {
+    let reg = PlatformRegistry::builtin();
+    let mut t = Table::new(vec![
+        "platform",
+        "peak GF/s",
+        "HPL GF/s",
+        "HPL %peak",
+        "STREAM GB/s",
+        "HPL x",
+        "STREAM x",
+    ]);
+    for o in &report.scenarios {
+        // scenario names of the generations matrix are platform ids
+        let peak = reg.get(&o.name).map(|p| p.peak_gflops()).unwrap_or(0.0);
+        let (hpl_x, stream_x) = report.speedup_of(o);
         t.row(vec![
-            p.id.clone(),
-            cores.to_string(),
+            o.name.clone(),
             format!("{peak:.1}"),
-            format!("{gf:.1}"),
-            format!("{:.0}%", 100.0 * gf / peak),
+            format!("{:.1}", o.hpl_gflops),
+            format!("{:.0}%", 100.0 * o.hpl_gflops / peak.max(1e-30)),
+            format!("{:.1}", o.stream_gbs),
+            fmt_speedup(hpl_x),
+            fmt_speedup(stream_x),
         ]);
     }
     t
 }
 
-/// Render the whole extension suite.
+/// Render the whole extension suite. The generation matrix is dry-run
+/// once and shared by both generation tables.
 pub fn render_all() -> String {
+    let report = generation_report();
     format!(
         "== Extension: cores x library grid (dual-socket MCv2) ==\n{}\n\n\
          == Extension: node-count scaling, 1 vs 10 GbE (N=57600) ==\n{}\n\n\
@@ -179,8 +199,8 @@ pub fn render_all() -> String {
         node_scaling(4).render(),
         nb_sensitivity(57_600, &[64, 128, 192, 256, 384]).render(),
         lmul_ablation().render(),
-        energy_to_solution(57_600).render(),
-        generation_sweep().render()
+        energy_table(&report).render(),
+        generation_table(&report).render()
     )
 }
 
@@ -225,33 +245,39 @@ mod tests {
 
     #[test]
     fn mcv2_wins_energy_to_solution() {
-        use crate::util::stats::hpl_flops;
-        let v1 = platform::mcv1_u740();
-        let v2 = platform::mcv2_dual();
-        let gf_old = PerfModel::new(&v1, UkernelId::OpenblasGeneric).node_gflops(4);
-        let gf_new = PerfModel::new(&v2, UkernelId::BlisLmul4).node_gflops(128);
-        let e = |gf: f64, p: &Platform, cores| {
-            p.power.node_power(cores) * hpl_flops(57_600) / (gf * 1e9)
+        // the generation matrix's HPL jobs carry energy-to-solution at
+        // the shared N = 57600 calibration point
+        let report = generation_report();
+        let energy = |name: &str| {
+            report
+                .outcome(name)
+                .unwrap()
+                .jobs
+                .iter()
+                .find(|j| j.metric == "gflops")
+                .unwrap()
+                .energy_j
         };
-        let e_old = e(gf_old, &v1, 4);
-        let e_new = e(gf_new, &v2, 128);
-        // MCv2 burns ~10x the power but is ~150x faster
+        let e_old = energy("mcv1-u740");
+        let e_new = energy("mcv2-dual");
+        // MCv2 burns ~10x the power but is ~130x faster
         assert!(e_new < e_old / 10.0, "{e_new:.0} J vs {e_old:.0} J");
+        let s = energy_to_solution().render();
+        assert!(s.contains("kWh") && s.contains("mcv3"), "{s}");
     }
 
     #[test]
     fn generation_sweep_is_monotone_down_the_road() {
         // HPL GF/s must rise with every generation in the sweep
-        let rows = generation_cases();
-        let gfs: Vec<f64> = rows
-            .iter()
-            .map(|(p, lib, cores)| PerfModel::new(p, *lib).node_gflops(*cores))
-            .collect();
+        let report = generation_report();
+        let gfs: Vec<f64> = report.scenarios.iter().map(|o| o.hpl_gflops).collect();
+        assert_eq!(gfs.len(), 5);
         for w in gfs.windows(2) {
             assert!(w[1] > w[0], "{gfs:?}");
         }
         let s = generation_sweep().render();
         assert!(s.contains("sg2044") && s.contains("mcv3"), "{s}");
+        assert!(s.contains("STREAM x"), "{s}");
     }
 
     #[test]

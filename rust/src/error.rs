@@ -58,6 +58,11 @@ pub enum CimoneError {
     #[error("vector machine: {0}")]
     Machine(String),
 
+    /// A STREAM sweep was asked for a projection at a thread count it
+    /// never ran.
+    #[error("kernel `{kernel}` has no projection at {threads} threads (available: {available})")]
+    NoProjection { kernel: String, threads: usize, available: String },
+
     /// stream.c-style end-of-run validation failed.
     #[error("STREAM validation failed at {index}: a={a} b={b} c={c}")]
     StreamValidation { index: usize, a: f64, b: f64, c: f64 },

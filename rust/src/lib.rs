@@ -40,7 +40,14 @@
 //!   power/energy), schedules, monitors, and reports (human-readable or
 //!   JSON). The paper's own 9-job campaign is
 //!   `CampaignSpec::paper_default()`; figure renderers live alongside in
-//!   [`coordinator::report`].
+//!   [`coordinator::report`]. On top sits the scenario sweep engine
+//!   ([`coordinator::scenario`]): a `ScenarioMatrix` expands one base
+//!   campaign across axes (platforms, fleet sizes, BLAS libraries,
+//!   workload subsets) into named scenarios, runs them with rayon
+//!   fan-out, and aggregates them into a Green500-style
+//!   `ComparisonReport` with speedup-vs-baseline columns — the built-in
+//!   generation matrix reproduces the abstract's 127x HPL / 69x STREAM
+//!   MCv1 -> MCv2 uplifts (`cimone sweep`).
 //! - [`error`] — the typed [`CimoneError`] every layer above reports
 //!   failures with (convertible into the crate-wide [`Result`]).
 

@@ -16,15 +16,21 @@
 //!         [--spec file.toml]         ... driven by a declarative campaign spec
 //!         [--dry-run]                ... validate + estimate only, no scheduling
 //!         [--json]                   ... machine-readable CampaignReport
+//! cimone sweep [--spec file.toml]    scenario sweep -> Green500-style table
+//!         [--dry-run] [--json]       ... default: the built-in generation
+//!                                        matrix (127x HPL / 69x STREAM)
 //! cimone platforms                   the registered platform fleet (SoC table)
 //! cimone translate-demo              section 3.3.1 RVV 1.0 -> 0.7.1 retrofit
 //! ```
 //!
 //! Campaign specs name platforms by registry id or alias (`mcv2-pioneer`,
 //! `sg2044`, ...), may define their own via `[[platform]]` sections, and
-//! pick the simulated machine with `[[fleet]]` entries.
+//! pick the simulated machine with `[[fleet]]` entries. Sweep specs add
+//! `[matrix]` axes and `[[scenario]]` sections that expand one base
+//! campaign into many named scenarios compared against the first.
 
 use cimone::arch::PlatformRegistry;
+use cimone::coordinator::scenario::{self, ScenarioMatrix};
 use cimone::coordinator::{driver, report, CampaignSpec};
 use cimone::error::CimoneError;
 use cimone::hpl::driver::{run as hpl_run, Backend, HplConfig};
@@ -159,6 +165,31 @@ fn run(args: &Args) -> Result<(), CimoneError> {
                 }
             }
         }
+        Some("sweep") => {
+            // scenario sweep: a matrix spec expands into N campaigns run
+            // as one batch; without --spec, the built-in generation
+            // matrix reproduces the paper's 127x / 69x headline table
+            let matrix = match args.get("spec") {
+                Some(path) => ScenarioMatrix::load(path)?,
+                None => ScenarioMatrix::generations(),
+            };
+            let report = if args.flag("dry-run") {
+                scenario::dry_run_matrix(&matrix)?
+            } else {
+                scenario::run_matrix(&matrix)?
+            };
+            if args.flag("json") {
+                println!("{}", report.to_json().render());
+            } else {
+                if args.flag("dry-run") {
+                    println!(
+                        "dry run: {} scenarios estimated, nothing scheduled",
+                        report.scenarios.len()
+                    );
+                }
+                println!("{}", report.render());
+            }
+        }
         Some("platforms") => {
             let reg = PlatformRegistry::builtin();
             let mut t = Table::new(vec![
@@ -199,7 +230,7 @@ fn run(args: &Args) -> Result<(), CimoneError> {
             )));
         }
         None => {
-            println!("usage: cimone <stream|hpl|cluster-hpl|cache-miss|blis-compare|headline|report-all|run-hpl|validate|campaign|platforms|translate-demo>");
+            println!("usage: cimone <stream|hpl|cluster-hpl|cache-miss|blis-compare|headline|report-all|sweeps|run-hpl|validate|campaign|sweep|platforms|translate-demo>");
         }
     }
     Ok(())

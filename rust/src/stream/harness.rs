@@ -6,6 +6,7 @@ use std::time::Instant;
 
 use super::kernels;
 use crate::arch::soc::SocDescriptor;
+use crate::error::CimoneError;
 use crate::mem::stream_model::{predict_node_bandwidth, KERNEL_FACTORS};
 
 /// Sweep configuration.
@@ -32,6 +33,28 @@ pub struct KernelResult {
     pub host_bytes_per_sec: f64,
     /// projected (threads, bytes/s) series for the target node
     pub projected: Vec<(usize, f64)>,
+}
+
+impl KernelResult {
+    /// Projected bandwidth (bytes/s) at `threads`. The sweep only runs
+    /// the thread counts its config lists, so an absent count is a typed
+    /// [`CimoneError::NoProjection`], not a panic.
+    pub fn projected_at(&self, threads: usize) -> Result<f64, CimoneError> {
+        self.projected
+            .iter()
+            .find(|(t, _)| *t == threads)
+            .map(|(_, bw)| *bw)
+            .ok_or_else(|| CimoneError::NoProjection {
+                kernel: self.kernel.to_string(),
+                threads,
+                available: self
+                    .projected
+                    .iter()
+                    .map(|(t, _)| t.to_string())
+                    .collect::<Vec<_>>()
+                    .join(", "),
+            })
+    }
 }
 
 /// Full report.
@@ -104,9 +127,22 @@ mod tests {
     #[test]
     fn projection_hits_paper_number_at_64_threads() {
         let r = run_sweep(&tiny(), &presets::sg2042());
-        let copy = &r.results[0];
-        let at64 = copy.projected.iter().find(|(t, _)| *t == 64).unwrap().1;
+        let at64 = r.results[0].projected_at(64).unwrap();
         assert!((at64 - 41.9e9).abs() < 1e9, "{at64}");
+    }
+
+    #[test]
+    fn missing_thread_count_is_a_typed_error_not_a_panic() {
+        let r = run_sweep(&tiny(), &presets::sg2042());
+        match r.results[0].projected_at(7) {
+            Err(CimoneError::NoProjection { kernel, threads, available }) => {
+                assert_eq!(kernel, "copy");
+                assert_eq!(threads, 7);
+                // the error names what the sweep did run
+                assert_eq!(available, "1, 64");
+            }
+            other => panic!("expected NoProjection, got {other:?}"),
+        }
     }
 
     #[test]

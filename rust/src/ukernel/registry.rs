@@ -34,6 +34,17 @@ impl UkernelId {
         }
     }
 
+    /// Canonical spec-file spelling; always re-parseable by
+    /// [`UkernelId::parse`], so spec render/parse round-trips.
+    pub fn spec_name(&self) -> &'static str {
+        match self {
+            UkernelId::OpenblasGeneric => "openblas-generic",
+            UkernelId::OpenblasC920 => "openblas-c920",
+            UkernelId::BlisLmul1 => "blis-lmul1",
+            UkernelId::BlisLmul4 => "blis-lmul4",
+        }
+    }
+
     pub fn parse(s: &str) -> Option<UkernelId> {
         match s {
             "openblas-generic" | "generic" => Some(UkernelId::OpenblasGeneric),
@@ -99,6 +110,13 @@ mod tests {
         assert_eq!(UkernelId::parse("openblas"), Some(UkernelId::OpenblasC920));
         assert_eq!(UkernelId::parse("generic"), Some(UkernelId::OpenblasGeneric));
         assert_eq!(UkernelId::parse("mkl"), None);
+    }
+
+    #[test]
+    fn spec_name_reparses_to_the_same_id() {
+        for id in UkernelId::all() {
+            assert_eq!(UkernelId::parse(id.spec_name()), Some(id));
+        }
     }
 
     #[test]

@@ -16,6 +16,12 @@ pub enum Json {
 }
 
 impl Json {
+    /// Build an object from `(key, value)` pairs — the writer-side
+    /// counterpart of [`Json::get`], used by every `--json` export.
+    pub fn obj<K: Into<String>, I: IntoIterator<Item = (K, Json)>>(pairs: I) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
     pub fn parse(text: &str) -> Result<Json, String> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.ws();
@@ -358,6 +364,15 @@ mod tests {
         let j = Json::parse(doc).unwrap();
         let back = Json::parse(&j.render()).unwrap();
         assert_eq!(j, back);
+    }
+
+    #[test]
+    fn obj_builder_matches_hand_built_map() {
+        let j = Json::obj([("b", Json::Num(1.0)), ("a", Json::Bool(true))]);
+        assert_eq!(j.get("a"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("b"), Some(&Json::Num(1.0)));
+        // BTreeMap ordering: keys render sorted regardless of insert order
+        assert_eq!(j.render(), r#"{"a":true,"b":1}"#);
     }
 
     #[test]

@@ -1,0 +1,414 @@
+//! Integration: the scenario sweep engine, plus the golden regression
+//! suite that pins the paper campaign's numbers so refactors can't
+//! silently drift from the paper.
+//!
+//! The golden windows anchor each job to the paper's published value
+//! (Fig 3 / Fig 5 / Fig 7), the power pins are exact (the platform power
+//! models are plain affine arithmetic), and a re-run must reproduce
+//! every row bit-for-bit.
+
+use std::fs;
+
+use cimone::arch::platform::PlatformRegistry;
+use cimone::coordinator::scenario::{
+    dry_run_matrix, run_matrix, MatrixAxes, ScenarioMatrix, ScenarioSpec,
+};
+use cimone::coordinator::{driver, CampaignSpec, WorkloadSpec};
+use cimone::error::CimoneError;
+use cimone::util::json::Json;
+
+// ---------------------------------------------------------------------
+// golden regression: the paper campaign
+// ---------------------------------------------------------------------
+
+/// Golden row: job name, paper-anchored headline window `[lo, hi)`,
+/// exact average node power (W), and the node count its energy covers.
+const GOLDEN_PAPER_CAMPAIGN: [(&str, f64, f64, f64, usize); 9] = [
+    ("stream-mcv1", 1.0, 1.25, 29.8, 1),       // Fig 3: 1.1 GB/s
+    ("stream-mcv2-1s", 41.4, 42.4, 149.6, 1),  // Fig 3: 41.9 GB/s
+    ("stream-mcv2-2s", 79.9, 85.9, 199.6, 1),  // Fig 3: 82.9 GB/s
+    ("hpl-mcv1-full", 11.0, 15.0, 29.8, 8),    // Fig 5: 13 GF/s
+    ("hpl-mcv2-1s", 125.0, 155.0, 149.6, 1),   // Fig 5: 139 GF/s
+    ("hpl-mcv2-2n", 150.0, 225.0, 149.6, 2),   // Fig 5: 185 GF/s
+    ("hpl-mcv2-2s", 225.0, 265.0, 289.2, 1),   // Fig 5: 245 GF/s
+    ("hpl-blis-vanilla", 150.0, 180.0, 289.2, 1), // Fig 7: 165 GF/s
+    ("hpl-blis-opt", 225.0, 265.0, 289.2, 1),  // Fig 7: 245.8 GF/s
+];
+
+#[test]
+fn golden_paper_campaign_pins_every_job_metric() {
+    let r = driver::run_campaign(64).unwrap();
+    assert!(r.hpl_passed, "residual {}", r.hpl_residual);
+    assert!(r.stream_validated);
+    assert_eq!(r.jobs.len(), GOLDEN_PAPER_CAMPAIGN.len());
+
+    for ((name, lo, hi, watts, energy_nodes), j) in GOLDEN_PAPER_CAMPAIGN.iter().zip(&r.jobs) {
+        assert_eq!(&j.name, name, "job order drifted");
+        assert!(
+            (*lo..*hi).contains(&j.headline),
+            "{name}: headline {:.2} left the golden window [{lo}, {hi})",
+            j.headline
+        );
+        // power models are affine: idle + per_core * active, exactly
+        assert!(
+            (j.avg_node_w - watts).abs() < 1e-9,
+            "{name}: power {} != {watts}",
+            j.avg_node_w
+        );
+        // energy-to-solution is power x modeled nodes x runtime, exactly
+        let want_energy = j.avg_node_w * *energy_nodes as f64 * j.runtime_s;
+        assert!(
+            (j.energy_j - want_energy).abs() < 1e-9 * want_energy.max(1.0),
+            "{name}: energy {} != {want_energy}",
+            j.energy_j
+        );
+        assert!(j.runtime_s.is_finite() && j.runtime_s > 0.0, "{name}: {}", j.runtime_s);
+        // the monitor carries the same rows
+        assert_eq!(r.monitor.latest(&format!("{name}.power_w")), Some(j.avg_node_w));
+        assert_eq!(r.monitor.latest(&format!("{name}.energy_j")), Some(j.energy_j));
+        match j.metric {
+            "gflops" => {
+                assert_eq!(r.monitor.latest(&format!("{name}.gflops")), Some(j.headline));
+            }
+            "bandwidth" => {
+                let bw = r.monitor.latest(&format!("{name}.bandwidth")).unwrap();
+                assert!((bw - j.headline * 1e9).abs() < 1e-3 * bw, "{name}: {bw}");
+            }
+            other => panic!("{name}: unexpected metric family `{other}`"),
+        }
+    }
+
+    // the BLIS ablation occupies its fixed slot, and the campaign's
+    // makespan covers it
+    assert_eq!(r.jobs[7].runtime_s, 3600.0);
+    assert_eq!(r.jobs[8].runtime_s, 3600.0);
+    assert!(r.makespan_s >= 3600.0, "{}", r.makespan_s);
+
+    // bit-for-bit determinism: the golden numbers can't wander between runs
+    let r2 = driver::run_campaign(64).unwrap();
+    assert_eq!(r.makespan_s, r2.makespan_s);
+    for (a, b) in r.jobs.iter().zip(&r2.jobs) {
+        assert_eq!(a, b, "job `{}` not reproducible", a.name);
+    }
+}
+
+// ---------------------------------------------------------------------
+// sweep engine end to end
+// ---------------------------------------------------------------------
+
+#[test]
+fn builtin_generation_matrix_reproduces_the_paper_headline() {
+    let report = run_matrix(&ScenarioMatrix::generations()).unwrap();
+    assert_eq!(report.scenarios.len(), 5);
+    assert_eq!(report.baseline().unwrap().name, "mcv1-u740");
+
+    let dual = report.outcome("mcv2-dual").unwrap();
+    let (hpl_x, stream_x) = report.speedup_of(dual);
+    let (hpl_x, stream_x) = (hpl_x.unwrap(), stream_x.unwrap());
+    // the abstract: 127x HPL DP FLOP/s, 69x STREAM bandwidth per node
+    assert!((100.0..160.0).contains(&hpl_x), "HPL uplift {hpl_x:.0}x (paper 127x)");
+    assert!((55.0..85.0).contains(&stream_x), "STREAM uplift {stream_x:.0}x (paper 69x)");
+
+    // every scenario actually ran: scheduled makespans, finite metrics
+    for o in &report.scenarios {
+        assert!(o.makespan_s > 0.0, "{}: {}", o.name, o.makespan_s);
+        assert!(o.hpl_gflops.is_finite() && o.hpl_gflops > 0.0, "{}", o.name);
+        assert!(o.gflops_per_w > 0.0, "{}", o.name);
+    }
+    // down the road: each generation's HPL beats its predecessor
+    for pair in report.scenarios.windows(2) {
+        assert!(
+            pair[1].hpl_gflops > pair[0].hpl_gflops,
+            "{} !> {}",
+            pair[1].name,
+            pair[0].name
+        );
+    }
+
+    // a dry run of the same matrix estimates identical headline numbers
+    // without scheduling anything
+    let dry = dry_run_matrix(&ScenarioMatrix::generations()).unwrap();
+    for (d, f) in dry.scenarios.iter().zip(&report.scenarios) {
+        assert_eq!(d.name, f.name);
+        assert_eq!(d.makespan_s, 0.0);
+        assert!((d.hpl_gflops - f.hpl_gflops).abs() < 1e-9);
+        assert!((d.stream_gbs - f.stream_gbs).abs() < 1e-9);
+    }
+}
+
+const SWEEP_SPEC: &str = r#"
+# MCv1-vs-MCv2 generation matrix (the paper's headline comparison)
+[campaign]
+validate_n = 48
+
+[[workload]]
+kind = "stream"
+name = "stream"
+platform = "mcv2-dual"
+partition = "mcv2"
+threads = 64
+
+[[workload]]
+kind = "hpl"
+name = "hpl"
+platform = "mcv2-dual"
+partition = "mcv2"
+cores_per_node = 128
+
+[matrix]
+platforms = ["mcv1-u740", "mcv2-dual"]
+"#;
+
+#[test]
+fn sweep_spec_file_runs_end_to_end_with_the_paper_ratios() {
+    let path = std::env::temp_dir().join("cimone_integration_sweep.toml");
+    fs::write(&path, SWEEP_SPEC).unwrap();
+    let matrix = ScenarioMatrix::load(path.to_str().unwrap()).unwrap();
+    let _ = fs::remove_file(&path);
+
+    let report = run_matrix(&matrix).unwrap();
+    assert_eq!(report.scenarios.len(), 2);
+    let dual = report.outcome("mcv2-dual").unwrap();
+    let (hpl_x, stream_x) = report.speedup_of(dual);
+    let (hpl_x, stream_x) = (hpl_x.unwrap(), stream_x.unwrap());
+    assert!((100.0..160.0).contains(&hpl_x), "~127x HPL, got {hpl_x:.0}x");
+    assert!((55.0..85.0).contains(&stream_x), "~69x STREAM, got {stream_x:.0}x");
+
+    // the JSON export of the same report parses and carries the ratios
+    let parsed = Json::parse(&report.to_json().render()).unwrap();
+    let rows = parsed.get("scenarios").unwrap().as_arr().unwrap();
+    let dual_row = rows
+        .iter()
+        .find(|r| r.get("name").unwrap().as_str() == Some("mcv2-dual"))
+        .unwrap();
+    let jx = dual_row.get("hpl_speedup").unwrap().as_f64().unwrap();
+    assert!((jx - hpl_x).abs() < 1e-9, "{jx} vs {hpl_x}");
+}
+
+#[test]
+fn unknown_axis_values_in_spec_files_are_typed_errors() {
+    // a platform the registry has never heard of
+    let bad = SWEEP_SPEC.replace("\"mcv1-u740\"", "\"epyc-9654\"");
+    match ScenarioMatrix::parse(&bad) {
+        Err(CimoneError::UnknownPlatform { id, known }) => {
+            assert_eq!(id, "epyc-9654");
+            assert!(known.contains("mcv2-dual"), "{known}");
+        }
+        other => panic!("expected UnknownPlatform, got {other:?}"),
+    }
+    // an unknown BLAS library on the libs axis
+    let bad = SWEEP_SPEC.replace(
+        "platforms = [\"mcv1-u740\", \"mcv2-dual\"]",
+        "libs = [\"mkl\"]",
+    );
+    assert!(matches!(
+        ScenarioMatrix::parse(&bad),
+        Err(CimoneError::Spec(ref m)) if m.contains("unknown library `mkl`")
+    ));
+    // a workload-subset filter that selects nothing
+    let bad = format!("{SWEEP_SPEC}workloads = [\"dgemm-*\"]\n");
+    assert!(matches!(
+        ScenarioMatrix::parse(&bad),
+        Err(CimoneError::Spec(ref m)) if m.contains("matches nothing")
+    ));
+}
+
+// ---------------------------------------------------------------------
+// equivalence properties
+// ---------------------------------------------------------------------
+
+/// An oversubscribed campaign on a 3-node fleet of one platform: enough
+/// competing jobs that queueing and backfill both engage.
+fn platform_campaign(platform_id: &str) -> CampaignSpec {
+    let reg = PlatformRegistry::builtin();
+    let p = reg.get(platform_id).unwrap();
+    let cores = p.desc.total_cores();
+    let mut spec = CampaignSpec::new();
+    spec.fleet = vec![(p.id.clone(), 3)];
+    for (i, nodes) in [(0usize, 2usize), (1, 1), (2, 3), (3, 1)] {
+        spec.push(WorkloadSpec::Hpl {
+            name: format!("hpl-{i}"),
+            partition: p.partition.clone(),
+            nodes,
+            platform: p.id.clone(),
+            cluster_nodes: nodes,
+            cores_per_node: cores,
+            lib: None,
+        });
+    }
+    spec.push(WorkloadSpec::Stream {
+        name: "stream-0".into(),
+        partition: p.partition.clone(),
+        nodes: 1,
+        platform: p.id.clone(),
+        threads: cores,
+    });
+    spec
+}
+
+/// Submit a spec's estimated jobs into a fresh scheduler for the fleet.
+fn loaded_scheduler(spec: &CampaignSpec) -> cimone::sched::Scheduler {
+    let inv = spec.build_inventory().unwrap();
+    let mut sched = inv.scheduler();
+    for ws in &spec.workloads {
+        let w = ws.build();
+        let est = w.estimate(&inv).unwrap();
+        sched.submit(w.name(), w.partition(), w.nodes(), est.runtime_s).unwrap();
+    }
+    sched
+}
+
+#[test]
+fn parallel_and_serial_drain_agree_for_every_builtin_platform() {
+    let reg = PlatformRegistry::builtin();
+    for id in reg.ids() {
+        let spec = platform_campaign(&id);
+        let mut serial = loaded_scheduler(&spec);
+        let mut parallel = loaded_scheduler(&spec);
+        let m1 = serial.drain();
+        let m2 = parallel.drain_parallel();
+        assert_eq!(m1, m2, "{id}: makespan diverged");
+        assert_eq!(serial.jobs.len(), parallel.jobs.len());
+        for (a, b) in serial.jobs.iter().zip(&parallel.jobs) {
+            assert_eq!(a.id, b.id, "{id}");
+            assert_eq!(a.state, b.state, "{id}: job `{}` diverged", a.name);
+            assert_eq!(a.allocated, b.allocated, "{id}: job `{}` allocation", a.name);
+        }
+    }
+}
+
+#[test]
+fn parallel_drain_matches_serial_on_a_mixed_generation_fleet() {
+    // four independent partitions, each oversubscribed: the fan-out case
+    // drain_parallel exists for
+    let mut spec = CampaignSpec::new();
+    spec.fleet = vec![
+        ("mcv1-u740".into(), 2),
+        ("mcv2-pioneer".into(), 2),
+        ("mcv2-dual".into(), 1),
+        ("sg2044".into(), 2),
+        ("mcv3".into(), 2),
+    ];
+    for (platform, partition, cores) in [
+        ("mcv1-u740", "mcv1", 4usize),
+        ("mcv2-pioneer", "mcv2", 64),
+        ("sg2044", "sg2044", 64),
+        ("mcv3", "mcv3", 128),
+    ] {
+        for i in 0..3usize {
+            spec.push(WorkloadSpec::Hpl {
+                name: format!("hpl-{platform}-{i}"),
+                partition: partition.into(),
+                nodes: 1 + i % 2,
+                platform: platform.into(),
+                cluster_nodes: 1 + i % 2,
+                cores_per_node: cores,
+                lib: None,
+            });
+        }
+    }
+    let mut serial = loaded_scheduler(&spec);
+    let mut parallel = loaded_scheduler(&spec);
+    let m1 = serial.drain();
+    let m2 = parallel.drain_parallel();
+    assert_eq!(m1, m2);
+    for (a, b) in serial.jobs.iter().zip(&parallel.jobs) {
+        assert_eq!((a.id, &a.state, &a.allocated), (b.id, &b.state, &b.allocated));
+    }
+}
+
+#[test]
+fn scenario_fan_out_is_order_independent() {
+    let gens = ["mcv1-u740", "mcv2-pioneer", "sg2044"];
+    let matrix_of = |order: &[&str]| {
+        let mut m = ScenarioMatrix::generations();
+        // explicit scenarios in the given order instead of the axis
+        m.axes = MatrixAxes::default();
+        m.scenarios = order
+            .iter()
+            .map(|id| ScenarioSpec {
+                name: id.to_string(),
+                platform: Some(id.to_string()),
+                ..ScenarioSpec::default()
+            })
+            .collect();
+        m
+    };
+    let forward = run_matrix(&matrix_of(&gens)).unwrap();
+    let mut shuffled = gens;
+    shuffled.reverse();
+    let backward = run_matrix(&matrix_of(&shuffled)).unwrap();
+    let rotated = run_matrix(&matrix_of(&[gens[1], gens[2], gens[0]])).unwrap();
+
+    // report rows follow matrix order...
+    let names: Vec<&str> = backward.scenarios.iter().map(|o| o.name.as_str()).collect();
+    assert!(names.starts_with(&["sg2044", "mcv2-pioneer", "mcv1-u740"]), "{names:?}");
+    // ...but each scenario's outcome is identical whatever ran beside it
+    for id in gens {
+        let a = forward.outcome(id).unwrap();
+        assert_eq!(a, backward.outcome(id).unwrap(), "{id} diverged under reversal");
+        assert_eq!(a, rotated.outcome(id).unwrap(), "{id} diverged under rotation");
+    }
+}
+
+// ---------------------------------------------------------------------
+// spec render round-trips
+// ---------------------------------------------------------------------
+
+#[test]
+fn campaign_and_matrix_specs_round_trip_through_render() {
+    // campaign side: [[platform]] override + [[fleet]] + every workload kind
+    let campaign_text = r#"
+[campaign]
+validate_n = 48
+
+[[platform]]
+id = "sg2044-oc"
+base = "sg2044"
+freq_ghz = 3.0
+idle_w = 70.0
+
+[[fleet]]
+platform = "sg2044-oc"
+count = 4
+
+[[workload]]
+kind = "stream"
+name = "s"
+platform = "sg2044-oc"
+partition = "sg2044"
+threads = 64
+
+[[workload]]
+kind = "hpl"
+name = "h"
+platform = "sg2044-oc"
+partition = "sg2044"
+nodes = 2
+cores_per_node = 64
+lib = "openblas-c920"
+
+[[workload]]
+kind = "blis-ablation"
+name = "b"
+partition = "mcv2"
+lib = "blis-opt"
+runtime_s = 120.5
+"#;
+    let spec = CampaignSpec::parse(campaign_text).unwrap();
+    let back = CampaignSpec::parse(&spec.render()).unwrap();
+    assert_eq!(back, spec);
+
+    // matrix side: the same base plus axes and an explicit scenario
+    let matrix_text = format!(
+        "{campaign_text}\n[matrix]\nplatforms = [\"mcv1-u740\", \"mcv2-dual\"]\nworkloads = [\"hpl\"]\n\n\
+         [[scenario]]\nname = \"oc-rack\"\nplatform = \"sg2044-oc\"\ncount = 4\nlib = \"blis-lmul4\"\n"
+    );
+    let matrix = ScenarioMatrix::parse(&matrix_text).unwrap();
+    let back = ScenarioMatrix::parse(&matrix.render()).unwrap();
+    assert_eq!(back, matrix);
+
+    // and the built-in generation matrix round-trips too
+    let gens = ScenarioMatrix::generations();
+    assert_eq!(ScenarioMatrix::parse(&gens.render()).unwrap(), gens);
+}
