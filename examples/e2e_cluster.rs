@@ -40,11 +40,12 @@ fn main() -> cimone::Result<()> {
     // --- 1. fleet ---
     let inv = monte_cimone_v2();
     println!(
-        "[1/5] fleet: {} nodes ({} MCv1 + {} MCv2), {:.0} Gflop/s peak, 1 GbE fabric",
+        "[1/5] fleet: {} nodes ({} MCv1 + {} MCv2), {:.0} Gflop/s peak, fabric: {}",
         inv.nodes.len(),
         8,
         4,
-        inv.peak_gflops()
+        inv.peak_gflops(),
+        inv.fabric.label
     );
 
     // --- 2. real HPL through the PJRT artifacts (all three layers) ---

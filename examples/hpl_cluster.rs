@@ -9,7 +9,7 @@
 use cimone::arch::platform::{mcv1_u740, mcv2_pioneer};
 use cimone::coordinator::report;
 use cimone::hpl::model::{project, ClusterConfig};
-use cimone::net::Link;
+use cimone::net::Fabric;
 use cimone::util::table::Table;
 
 fn main() {
@@ -36,15 +36,15 @@ fn main() {
 
     // network ablation
     let mut t = Table::new(vec!["fabric", "2-node Gflop/s", "scaling", "MCv1 8-node Gflop/s"]);
-    for (name, link) in [("1 GbE (paper)", Link::gbe()), ("10 GbE (ablation)", Link::ten_gbe())] {
+    for fabric in [Fabric::gbe_flat(), Fabric::ten_gbe_flat()] {
         let mut cfg = ClusterConfig::hpl_default(mcv2_pioneer(), 2, 64);
-        cfg.link = link;
+        cfg.fabric = fabric.clone();
         let p = project(&cfg);
         // mcv1-u740's platform default is already OpenBLAS-generic
         let mut v1 = ClusterConfig::hpl_default(mcv1_u740(), 8, 4);
-        v1.link = link;
+        v1.fabric = fabric.clone();
         t.row(vec![
-            name.to_string(),
+            fabric.label.clone(),
             format!("{:.1}", p.gflops),
             format!("{:.2}x", p.gflops / one_node),
             format!("{:.1}", project(&v1).gflops),

@@ -6,7 +6,7 @@
 use cimone::coordinator::report;
 use cimone::hpl::driver::{run, Backend, HplConfig};
 use cimone::hpl::model::{project, ClusterConfig};
-use cimone::net::Link;
+use cimone::net::Fabric;
 use cimone::util::bench::Bench;
 
 fn main() {
@@ -25,7 +25,7 @@ fn main() {
     );
     // ablation: the same cluster on 10 GbE
     let mut ten = cfg.clone();
-    ten.link = Link::ten_gbe();
+    ten.fabric = Fabric::ten_gbe_flat();
     let p10 = project(&ten);
     println!(
         "ablation (10 GbE): {:.1} Gflop/s, efficiency {:.2} (1 GbE: {:.2})",

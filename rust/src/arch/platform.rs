@@ -94,6 +94,11 @@ pub struct Platform {
     pub os: String,
     /// BLAS library HPL defaults to on this platform.
     pub default_lib: UkernelId,
+    /// Interconnect fabric id (or alias) clusters of this platform hang
+    /// off by default — resolved against the
+    /// [`crate::net::FabricRegistry`] (MCv1/MCv2 ship on `gbe-flat`, the
+    /// MCv3 projection on `ten-gbe-flat`).
+    pub default_fabric: String,
     pub desc: SocDescriptor,
     pub power: PowerModel,
     pub calib: PerfCalib,
@@ -122,6 +127,9 @@ impl Platform {
         }
         if self.partition.is_empty() {
             return Err(self.err("partition must be non-empty"));
+        }
+        if self.default_fabric.is_empty() || self.default_fabric.contains(char::is_whitespace) {
+            return Err(self.err("default_fabric must be non-empty and free of whitespace"));
         }
         if self.desc.sockets.is_empty() {
             return Err(self.err("descriptor has no sockets"));
@@ -196,6 +204,7 @@ pub fn mcv1_u740() -> Platform {
         host_prefix: "mc".into(),
         os: "Ubuntu 21.04".into(),
         default_lib: UkernelId::OpenblasGeneric,
+        default_fabric: "gbe-flat".into(),
         desc: presets::u740(),
         // U740 SoC ~5 W + board overhead
         power: PowerModel { idle_w: 25.0, per_core_active_w: 1.2 },
@@ -213,6 +222,7 @@ pub fn mcv2_pioneer() -> Platform {
         host_prefix: "mcv2".into(),
         os: "Fedora 38".into(),
         default_lib: UkernelId::OpenblasC920,
+        default_fabric: "gbe-flat".into(),
         desc: presets::sg2042(),
         // SG2042 TDP ~120 W/socket; Pioneer box idles ~60 W
         power: PowerModel { idle_w: 60.0, per_core_active_w: 1.4 },
@@ -230,6 +240,7 @@ pub fn mcv2_dual() -> Platform {
         host_prefix: "mcv2".into(),
         os: "Fedora 38".into(),
         default_lib: UkernelId::OpenblasC920,
+        default_fabric: "gbe-flat".into(),
         desc: presets::sg2042_dual(),
         power: PowerModel { idle_w: 110.0, per_core_active_w: 1.4 },
         calib: PerfCalib::sg2042_class(),
@@ -247,6 +258,7 @@ pub fn sg2044() -> Platform {
         host_prefix: "sg2044".into(),
         os: "Fedora 41".into(),
         default_lib: UkernelId::OpenblasC920,
+        default_fabric: "gbe-flat".into(),
         desc: presets::sg2044(),
         // lower idle than the Pioneer (DDR5 PHY efficiency), hotter cores
         // at 2.6 GHz
@@ -266,6 +278,9 @@ pub fn mcv3() -> Platform {
         host_prefix: "mcv3".into(),
         os: "Fedora 41".into(),
         default_lib: UkernelId::OpenblasC920,
+        // arXiv 2605.22831: MCv3 moves to 10 GbE precisely because the
+        // 1 GbE fabric could no longer feed SG2042-class nodes
+        default_fabric: "ten-gbe-flat".into(),
         desc: presets::sg2044_dual(),
         power: PowerModel { idle_w: 100.0, per_core_active_w: 1.7 },
         calib: PerfCalib::sg2042_class(),
@@ -357,6 +372,7 @@ impl PlatformRegistry {
             "os",
             "host_prefix",
             "default_lib",
+            "default_fabric",
             "sockets",
             "cores",
             "freq_ghz",
@@ -403,6 +419,9 @@ impl PlatformRegistry {
             ("partition", &mut p.partition),
             ("os", &mut p.os),
             ("host_prefix", &mut p.host_prefix),
+            // resolution against the fabric registry happens at campaign
+            // load time, where custom [[fabric]] sections are in scope
+            ("default_fabric", &mut p.default_fabric),
         ] {
             if let Some(v) = sec.get(key) {
                 *target = v

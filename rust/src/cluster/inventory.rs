@@ -8,32 +8,55 @@
 //! from each platform's `partition` field, in fleet order.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use super::node::Node;
 use crate::arch::platform::PlatformRegistry;
 use crate::error::CimoneError;
-use crate::net::Link;
+use crate::net::{Fabric, FabricRegistry};
 use crate::sched::{Partition, Scheduler};
 
 /// The paper's fleet as a spec: `(platform id, node count)`.
 pub const PAPER_FLEET: &[(&str, usize)] =
     &[("mcv1-u740", 8), ("mcv2-pioneer", 3), ("mcv2-dual", 1)];
 
-/// The full machine: nodes + fabric.
+/// The full machine: nodes + the interconnect they hang off, plus the
+/// fabric registry workload-level `fabric =` overrides resolve against.
 #[derive(Debug, Clone)]
 pub struct Inventory {
     pub nodes: Vec<Node>,
-    pub fabric: Link,
+    /// The machine's resolved interconnect.
+    pub fabric: Arc<Fabric>,
+    /// Registry the machine fabric came from (built-ins plus any
+    /// `[[fabric]]` definitions of the campaign spec that built this
+    /// inventory); per-workload overrides resolve here.
+    pub fabrics: FabricRegistry,
 }
 
 impl Inventory {
     /// Build a fleet from `(platform_id, count)` pairs resolved against a
     /// registry. Node ids are sequential in spec order; hostnames are
     /// `<host_prefix>-NN` with one counter per prefix (which reproduces
-    /// the paper's `mc-01..08` / `mcv2-01..04` naming exactly).
+    /// the paper's `mc-01..08` / `mcv2-01..04` naming exactly). The
+    /// fabric defaults to the first platform's `default_fabric` resolved
+    /// against the built-in [`FabricRegistry`].
     pub fn from_fleet<S: AsRef<str>>(
         registry: &PlatformRegistry,
         fleet: &[(S, usize)],
+    ) -> Result<Inventory, CimoneError> {
+        Inventory::from_fleet_on(registry, &FabricRegistry::builtin(), fleet, None)
+    }
+
+    /// [`Inventory::from_fleet`] with an explicit fabric registry and an
+    /// optional machine-fabric id (falling back to the first platform's
+    /// `default_fabric`, then to the paper's `gbe-flat`). Checks the
+    /// switch has a port per node ([`CimoneError::FabricTooSmall`]) so
+    /// the flow model never sees an out-of-range rank.
+    pub fn from_fleet_on<S: AsRef<str>>(
+        registry: &PlatformRegistry,
+        fabrics: &FabricRegistry,
+        fleet: &[(S, usize)],
+        fabric: Option<&str>,
     ) -> Result<Inventory, CimoneError> {
         let mut nodes = Vec::new();
         let mut counters: BTreeMap<String, usize> = BTreeMap::new();
@@ -47,7 +70,16 @@ impl Inventory {
                 nodes.push(Node::new(id, hostname, platform.clone()));
             }
         }
-        Ok(Inventory { nodes, fabric: Link::gbe() })
+        let fabric_id: String = match fabric {
+            Some(id) => id.to_string(),
+            None => match nodes.first() {
+                Some(n) => n.platform.default_fabric.clone(),
+                None => "gbe-flat".to_string(),
+            },
+        };
+        let fabric = fabrics.get(&fabric_id)?;
+        fabric.validate_cluster(nodes.len())?;
+        Ok(Inventory { nodes, fabric, fabrics: fabrics.clone() })
     }
 
     /// Node by *id* (not vector position — the two coincide in the
@@ -164,6 +196,47 @@ mod tests {
         assert!(matches!(
             Inventory::from_fleet(&reg, &[("epyc", 2)]),
             Err(CimoneError::UnknownPlatform { .. })
+        ));
+    }
+
+    #[test]
+    fn fleet_fabric_defaults_to_the_leading_platforms_interconnect() {
+        // the paper fleet rides the 1 GbE ToR; an MCv3 fleet its 10 GbE
+        assert_eq!(monte_cimone_v2().fabric.id, "gbe-flat");
+        let reg = PlatformRegistry::builtin();
+        let inv = Inventory::from_fleet(&reg, &[("mcv3", 2)]).unwrap();
+        assert_eq!(inv.fabric.id, "ten-gbe-flat");
+    }
+
+    #[test]
+    fn explicit_fleet_fabric_overrides_the_platform_default() {
+        let reg = PlatformRegistry::builtin();
+        let inv = Inventory::from_fleet_on(
+            &reg,
+            &FabricRegistry::builtin(),
+            &[("mcv2-pioneer", 4)],
+            Some("10gbe"), // alias resolves too
+        )
+        .unwrap();
+        assert_eq!(inv.fabric.id, "ten-gbe-flat");
+    }
+
+    #[test]
+    fn fleet_wider_than_the_switch_is_typed_at_build_time() {
+        let reg = PlatformRegistry::builtin();
+        assert!(matches!(
+            Inventory::from_fleet(&reg, &[("mcv2-pioneer", 17)]),
+            Err(CimoneError::FabricTooSmall { ports: 16, nodes: 17, .. })
+        ));
+        // unknown fabric ids are typed too
+        assert!(matches!(
+            Inventory::from_fleet_on(
+                &reg,
+                &FabricRegistry::builtin(),
+                &[("mcv2-pioneer", 2)],
+                Some("infiniband"),
+            ),
+            Err(CimoneError::UnknownFabric { .. })
         ));
     }
 }

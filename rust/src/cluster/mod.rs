@@ -2,8 +2,9 @@
 //! itself as a simulated object: a node fleet built from `(platform_id,
 //! count)` specs against the [`crate::arch::PlatformRegistry`] (the
 //! paper's MCv1 blades + MCv2 Pioneers + dual-socket SR1 is
-//! [`inventory::PAPER_FLEET`]), the 1 GbE fabric, and an ExaMon-like
-//! metric sink.
+//! [`inventory::PAPER_FLEET`]), the interconnect it hangs off (a
+//! resolved [`crate::net::Fabric`] — the paper's 1 GbE by default), and
+//! an ExaMon-like metric sink.
 
 pub mod inventory;
 pub mod monitor;

@@ -15,15 +15,22 @@
 //! ```text
 //! [campaign]
 //! validate_n = 96          # real-numerics HPL validation size
+//! # fabric = "ten-gbe-flat"  # optional machine interconnect
 //!
 //! [[platform]]             # optional: derive a custom platform
 //! id = "sg2044-oc"
 //! base = "sg2044"          # any registered id or alias
 //! freq_ghz = 3.0           # see arch::platform for all override keys
 //!
+//! [[fabric]]               # optional: derive a custom interconnect
+//! id = "gbe-8to1"
+//! base = "gbe-flat"        # any registered fabric id or alias
+//! backplane_factor = 0.125 # see net::fabric for all override keys
+//!
 //! [[fleet]]                # optional: the machine to simulate;
 //! platform = "sg2044"      # omitted => the paper's 12-node fleet
 //! count = 4
+//! # fabric = "gbe-8to1"    # machine interconnect (same as [campaign])
 //!
 //! [[workload]]
 //! kind = "stream"          # stream | hpl | blis-ablation
@@ -42,6 +49,7 @@
 //! cores_per_node = 64
 //! # cluster_nodes = 2      # defaults to `nodes`
 //! # lib = "openblas-c920"  # defaults to the platform's library
+//! # fabric = "ten-gbe-flat" # defaults to the machine's fabric
 //!
 //! [[workload]]
 //! kind = "blis-ablation"
@@ -53,9 +61,12 @@
 //! # runtime_s = 3600
 //! ```
 
+use std::sync::Arc;
+
 use crate::arch::platform::{Platform, PlatformRegistry};
 use crate::cluster::inventory::{Inventory, PAPER_FLEET};
 use crate::error::CimoneError;
+use crate::net::{Fabric, FabricRegistry};
 use crate::ukernel::UkernelId;
 use crate::util::config::{Config, Section, Value};
 
@@ -74,6 +85,8 @@ pub enum WorkloadSpec {
         cluster_nodes: usize,
         cores_per_node: usize,
         lib: Option<UkernelId>,
+        /// Fabric override (registry id); `None` rides the machine fabric.
+        fabric: Option<String>,
     },
     BlisAblation {
         name: String,
@@ -144,6 +157,7 @@ impl WorkloadSpec {
                 cluster_nodes,
                 cores_per_node,
                 lib,
+                fabric,
             } => Box::new(HplWorkload {
                 name,
                 partition,
@@ -152,6 +166,7 @@ impl WorkloadSpec {
                 cluster_nodes,
                 cores_per_node,
                 lib,
+                fabric,
             }),
             WorkloadSpec::BlisAblation { name, partition, platform, lib, cores, runtime_s } => {
                 Box::new(BlisAblationWorkload { name, partition, platform, lib, cores, runtime_s })
@@ -163,7 +178,38 @@ impl WorkloadSpec {
     pub fn from_section(sec: &Section) -> Result<WorkloadSpec, CimoneError> {
         let name = req_str(sec, "name", "?")?.to_string();
         let partition = req_str(sec, "partition", &name)?.to_string();
-        match req_str(sec, "kind", &name)? {
+        let kind = req_str(sec, "kind", &name)?;
+        // a misspelled key (or one the kind does not accept, like
+        // `fabric` on a stream job) must be a load-time error, not a
+        // silently ignored no-op
+        let known: &[&str] = match kind {
+            "stream" => &["kind", "name", "partition", "platform", "node", "nodes", "threads"],
+            "hpl" => &[
+                "kind",
+                "name",
+                "partition",
+                "platform",
+                "node",
+                "nodes",
+                "cluster_nodes",
+                "cores_per_node",
+                "lib",
+                "fabric",
+            ],
+            "blis-ablation" => {
+                &["kind", "name", "partition", "platform", "node", "lib", "cores", "runtime_s"]
+            }
+            _ => &[], // unknown kinds are rejected below with their own error
+        };
+        if !known.is_empty() {
+            if let Some(unknown) = sec.keys().find(|k| !known.contains(&k.as_str())) {
+                return Err(CimoneError::Spec(format!(
+                    "workload `{name}`: unknown key `{unknown}` for kind `{kind}` (known: {})",
+                    known.join(", ")
+                )));
+            }
+        }
+        match kind {
             "stream" => Ok(WorkloadSpec::Stream {
                 nodes: opt_usize(sec, "nodes", &name)?.unwrap_or(1),
                 platform: req_platform(sec, &name)?,
@@ -182,6 +228,7 @@ impl WorkloadSpec {
                         || CimoneError::Spec(format!("workload `{name}`: missing `cores_per_node`")),
                     )?,
                     lib: opt_lib(sec, &name)?,
+                    fabric: opt_str(sec, "fabric", &name)?,
                     nodes,
                     name,
                     partition,
@@ -230,6 +277,7 @@ impl WorkloadSpec {
                 cluster_nodes,
                 cores_per_node,
                 lib,
+                fabric,
             } => {
                 let mut s = format!(
                     "[[workload]]\nkind = \"hpl\"\nname = \"{name}\"\nplatform = \"{platform}\"\n\
@@ -238,6 +286,9 @@ impl WorkloadSpec {
                 );
                 if let Some(lib) = lib {
                     s.push_str(&format!("lib = \"{}\"\n", lib.spec_name()));
+                }
+                if let Some(fabric) = fabric {
+                    s.push_str(&format!("fabric = \"{fabric}\"\n"));
                 }
                 s
             }
@@ -264,10 +315,43 @@ pub(crate) fn fmt_float(v: f64) -> String {
     }
 }
 
+/// The spec value to write for a key whose parse runs back through a
+/// unit conversion (e.g. `latency_us * 1e-6`): `forward` is the naive
+/// inverse, but one rounding each way can land 1 ulp off `target`,
+/// breaking the `parse(render()) == spec` guarantee. Nudge by ulps until
+/// `back` reproduces `target` exactly — guaranteed to terminate on specs
+/// that came through a section parser, where `target = back(v)` for some
+/// writable `v` within a few ulps of `forward`.
+fn exact_preimage(forward: f64, target: f64, back: impl Fn(f64) -> f64) -> f64 {
+    if back(forward) == target {
+        return forward;
+    }
+    let bits = forward.to_bits() as i64;
+    for delta in 1..=4i64 {
+        for cand in [f64::from_bits((bits - delta) as u64), f64::from_bits((bits + delta) as u64)]
+        {
+            if back(cand) == target {
+                return cand;
+            }
+        }
+    }
+    forward
+}
+
 fn req_str<'a>(sec: &'a Section, key: &str, who: &str) -> Result<&'a str, CimoneError> {
     sec.get(key)
         .and_then(Value::as_str)
         .ok_or_else(|| CimoneError::Spec(format!("workload `{who}`: missing string key `{key}`")))
+}
+
+fn opt_str(sec: &Section, key: &str, who: &str) -> Result<Option<String>, CimoneError> {
+    match sec.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(|s| Some(s.to_string()))
+            .ok_or_else(|| CimoneError::Spec(format!("workload `{who}`: `{key}` must be a string"))),
+    }
 }
 
 /// Positive-integer key: 0 would flow into the models as a divisor and
@@ -331,6 +415,16 @@ pub struct PlatformDef {
     pub platform: Platform,
 }
 
+/// One `[[fabric]]` definition: the derived [`Fabric`] plus the base it
+/// was derived from, kept so the spec can render itself back to config
+/// text as `base` + overrides.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricDef {
+    /// Registry id (or alias) the fabric derives from.
+    pub base: String,
+    pub fabric: Fabric,
+}
+
 /// A full campaign: ordered workloads, the fleet they run on, and the
 /// validation problem size.
 #[derive(Debug, Clone, PartialEq)]
@@ -345,6 +439,12 @@ pub struct CampaignSpec {
     /// Platforms defined by `[[platform]]` sections, registered on top of
     /// the built-ins when the spec builds its registry/inventory.
     pub custom_platforms: Vec<PlatformDef>,
+    /// Machine interconnect (fabric registry id); `None` falls back to
+    /// the leading fleet platform's `default_fabric`.
+    pub fabric: Option<String>,
+    /// Fabrics defined by `[[fabric]]` sections, registered on top of
+    /// the built-ins when the spec builds its fabric registry.
+    pub custom_fabrics: Vec<FabricDef>,
 }
 
 impl Default for CampaignSpec {
@@ -354,6 +454,8 @@ impl Default for CampaignSpec {
             validate_n: 96,
             fleet: Vec::new(),
             custom_platforms: Vec::new(),
+            fabric: None,
+            custom_fabrics: Vec::new(),
         }
     }
 }
@@ -415,6 +517,7 @@ impl CampaignSpec {
                 cluster_nodes: nodes,
                 cores_per_node,
                 lib,
+                fabric: None,
             });
         }
         for (name, lib) in [
@@ -440,6 +543,17 @@ impl CampaignSpec {
     /// typo is a typed error at load time, not at estimation time.
     pub fn from_config(cfg: &Config) -> Result<CampaignSpec, CimoneError> {
         let mut spec = CampaignSpec::new();
+        // a misspelled [campaign] key (e.g. `fabrik`) must not silently
+        // run the campaign on the wrong interconnect or validation size
+        if let Some(sec) = cfg.sections.get("campaign") {
+            if let Some(unknown) =
+                sec.keys().find(|k| !["validate_n", "fabric"].contains(&k.as_str()))
+            {
+                return Err(CimoneError::Spec(format!(
+                    "[campaign]: unknown key `{unknown}` (known: validate_n, fabric)"
+                )));
+            }
+        }
         if let Some(v) = cfg.get("campaign.validate_n") {
             spec.validate_n = v
                 .as_int()
@@ -448,44 +562,103 @@ impl CampaignSpec {
                     CimoneError::Spec("campaign.validate_n must be a positive int".into())
                 })? as usize;
         }
+        // fabrics first: platforms and fleet entries may reference them
+        let mut freg = FabricRegistry::builtin();
+        for sec in cfg.table_arrays.get("fabric").map(Vec::as_slice).unwrap_or(&[]) {
+            let base = sec.get("base").and_then(Value::as_str).unwrap_or_default().to_string();
+            let f = freg.register_section(sec)?;
+            spec.custom_fabrics.push(FabricDef { base, fabric: (*f).clone() });
+        }
+        if let Some(v) = cfg.get("campaign.fabric") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| CimoneError::Spec("campaign.fabric must be a string".into()))?;
+            // canonicalize aliases to the registry id at load time
+            spec.fabric = Some(freg.get(s)?.id.clone());
+        }
         let mut reg = PlatformRegistry::builtin();
         for sec in cfg.table_arrays.get("platform").map(Vec::as_slice).unwrap_or(&[]) {
             // `base` is re-read here (register_section already validates
             // its presence) so the def can render itself back to text
             let base = sec.get("base").and_then(Value::as_str).unwrap_or_default().to_string();
             let p = reg.register_section(sec)?;
+            // a custom platform's default_fabric must resolve, here at
+            // load time, against the spec's own fabric registry
+            freg.get(&p.default_fabric)?;
             spec.custom_platforms.push(PlatformDef { base, platform: (*p).clone() });
         }
         for sec in cfg.table_arrays.get("fleet").map(Vec::as_slice).unwrap_or(&[]) {
             // a misspelled key (e.g. `cout`) must not silently default
-            if let Some(unknown) = sec.keys().find(|k| k.as_str() != "platform" && k.as_str() != "count") {
+            if let Some(unknown) = sec
+                .keys()
+                .find(|k| !["platform", "count", "fabric"].contains(&k.as_str()))
+            {
                 return Err(CimoneError::Spec(format!(
-                    "[[fleet]]: unknown key `{unknown}` (known: platform, count)"
+                    "[[fleet]]: unknown key `{unknown}` (known: platform, count, fabric)"
                 )));
             }
             let platform = req_str(sec, "platform", "[[fleet]]")?.to_string();
             let count = opt_usize(sec, "count", "[[fleet]]")?.unwrap_or(1);
             // resolve now so a bad fleet entry fails at load time
             reg.get(&platform)?;
+            if let Some(f) = opt_str(sec, "fabric", "[[fleet]]")? {
+                let id = freg.get(&f)?.id.clone();
+                // one machine, one wire: conflicting fabric keys are a typo
+                if let Some(prev) = &spec.fabric {
+                    if *prev != id {
+                        return Err(CimoneError::Spec(format!(
+                            "conflicting machine fabrics `{prev}` and `{id}` \
+                             (the fleet shares one interconnect)"
+                        )));
+                    }
+                }
+                spec.fabric = Some(id);
+            }
             spec.fleet.push((platform, count));
         }
         for sec in cfg.table_arrays.get("workload").map(Vec::as_slice).unwrap_or(&[]) {
-            let w = WorkloadSpec::from_section(sec)?;
+            let mut w = WorkloadSpec::from_section(sec)?;
             reg.get(w.platform())?;
+            // canonicalize the per-job fabric override (typed if unknown)
+            if let WorkloadSpec::Hpl { fabric: Some(f), .. } = &mut w {
+                *f = freg.get(f)?.id.clone();
+            }
             spec.push(w);
         }
         spec.validate()?;
         Ok(spec)
     }
 
-    /// Cross-workload invariants (unique job names). Called by the config
-    /// loaders and again by the engine, so code-built specs are held to
-    /// the same rules.
+    /// Cross-workload invariants: unique job names, resolvable fabrics,
+    /// and a switch port per node (machine-wide and per HPL job). Called
+    /// by the config loaders and again by the engine, so code-built specs
+    /// are held to the same rules.
     pub fn validate(&self) -> Result<(), CimoneError> {
         let mut seen = std::collections::BTreeSet::new();
         for w in &self.workloads {
             if !seen.insert(w.name()) {
                 return Err(CimoneError::Spec(format!("duplicate workload name `{}`", w.name())));
+            }
+        }
+        // fabric fit: the whole fleet must hang off the machine switch,
+        // and every per-job override must carry that job's HPL cluster —
+        // typed errors here, at load time, instead of a port-array panic
+        // inside `Switch::flows_time` mid-sweep
+        let freg = self.fabric_registry()?;
+        let machine = self.resolve_fabric(&freg)?;
+        let fleet_nodes: usize = if self.fleet.is_empty() {
+            PAPER_FLEET.iter().map(|(_, c)| *c).sum()
+        } else {
+            self.fleet.iter().map(|(_, c)| *c).sum()
+        };
+        machine.validate_cluster(fleet_nodes)?;
+        for w in &self.workloads {
+            if let WorkloadSpec::Hpl { fabric, cluster_nodes, .. } = w {
+                let f = match fabric {
+                    Some(id) => freg.get(id)?,
+                    None => Arc::clone(&machine),
+                };
+                f.validate_cluster(*cluster_nodes)?;
             }
         }
         Ok(())
@@ -501,15 +674,42 @@ impl CampaignSpec {
         Ok(reg)
     }
 
+    /// The fabric registry this spec runs against: the built-in fabrics
+    /// plus any `[[fabric]]` definitions.
+    pub fn fabric_registry(&self) -> Result<FabricRegistry, CimoneError> {
+        let mut reg = FabricRegistry::builtin();
+        for def in &self.custom_fabrics {
+            reg.register(def.fabric.clone())?;
+        }
+        Ok(reg)
+    }
+
+    /// The machine interconnect: the spec's explicit `fabric` key, or the
+    /// leading fleet platform's `default_fabric`, or the paper's 1 GbE.
+    fn resolve_fabric(&self, freg: &FabricRegistry) -> Result<Arc<Fabric>, CimoneError> {
+        match &self.fabric {
+            Some(id) => freg.get(id),
+            None => {
+                let first = self.fleet.first().map(|(p, _)| p.as_str());
+                match first {
+                    Some(pid) => freg.get(&self.registry()?.get(pid)?.default_fabric),
+                    // the paper fleet leads with MCv1 -> gbe-flat
+                    None => freg.get("gbe-flat"),
+                }
+            }
+        }
+    }
+
     /// Build the inventory this spec describes: its `[[fleet]]` entries
     /// resolved against [`Self::registry`], or the paper's machine when
-    /// no fleet is given.
+    /// no fleet is given, hanging off the spec's resolved fabric.
     pub fn build_inventory(&self) -> Result<Inventory, CimoneError> {
         let reg = self.registry()?;
+        let freg = self.fabric_registry()?;
         if self.fleet.is_empty() {
-            Inventory::from_fleet(&reg, PAPER_FLEET)
+            Inventory::from_fleet_on(&reg, &freg, PAPER_FLEET, self.fabric.as_deref())
         } else {
-            Inventory::from_fleet(&reg, &self.fleet)
+            Inventory::from_fleet_on(&reg, &freg, &self.fleet, self.fabric.as_deref())
         }
     }
 
@@ -532,6 +732,14 @@ impl CampaignSpec {
     /// bit-identical through the round-trip).
     pub fn render(&self) -> String {
         let mut out = format!("[campaign]\nvalidate_n = {}\n", self.validate_n);
+        if let Some(fabric) = &self.fabric {
+            out.push_str(&format!("fabric = \"{fabric}\"\n"));
+        }
+        let mut freg = FabricRegistry::builtin();
+        for def in &self.custom_fabrics {
+            out.push('\n');
+            out.push_str(&render_fabric_def(&mut freg, def));
+        }
         let mut reg = PlatformRegistry::builtin();
         for def in &self.custom_platforms {
             out.push('\n');
@@ -575,6 +783,7 @@ fn render_platform_def(reg: &mut PlatformRegistry, def: &PlatformDef) -> String 
             ("partition", &p.partition, &d.partition),
             ("os", &p.os, &d.os),
             ("host_prefix", &p.host_prefix, &d.host_prefix),
+            ("default_fabric", &p.default_fabric, &d.default_fabric),
         ] {
             if actual != default {
                 s.push_str(&format!("{key} = \"{actual}\"\n"));
@@ -628,6 +837,52 @@ fn render_platform_def(reg: &mut PlatformRegistry, def: &PlatformDef) -> String 
     }
     // later [[platform]] sections may derive from this one
     let _ = reg.register(p.clone());
+    s
+}
+
+/// Render one `[[fabric]]` definition as `base` + the overrides that
+/// differ from what `FabricRegistry::register_section` would derive with
+/// no overrides at all — the fabric analogue of [`render_platform_def`],
+/// with the same precondition on `def.base`.
+fn render_fabric_def(reg: &mut FabricRegistry, def: &FabricDef) -> String {
+    let f = &def.fabric;
+    let mut s = format!("[[fabric]]\nid = \"{}\"\nbase = \"{}\"\n", f.id, def.base);
+    if let Ok(base) = reg.get(&def.base) {
+        // the no-override derivation, mirroring register_section
+        let mut d = (*base).clone();
+        let base_label = d.label.clone();
+        d.id = f.id.clone();
+        d.aliases = Vec::new();
+        d.label = format!("{} (custom, from {base_label})", f.id);
+
+        if f.label != d.label {
+            s.push_str(&format!("label = \"{}\"\n", f.label));
+        }
+        // unit-converted keys go through exact_preimage: the naive
+        // inverse of the parse-side conversion can be 1 ulp off, which
+        // would break the parse(render()) == spec equality
+        if f.link.raw_bps != d.link.raw_bps {
+            let gbps = exact_preimage(f.link.raw_bps / 1e9, f.link.raw_bps, |g| g * 1e9);
+            s.push_str(&format!("raw_gbps = {}\n", fmt_float(gbps)));
+        }
+        if f.link.latency_s != d.link.latency_s {
+            let us = exact_preimage(f.link.latency_s * 1e6, f.link.latency_s, |us| us * 1e-6);
+            s.push_str(&format!("latency_us = {}\n", fmt_float(us)));
+        }
+        for (key, actual, default) in [
+            ("efficiency", f.link.efficiency, d.link.efficiency),
+            ("backplane_factor", f.backplane_factor, d.backplane_factor),
+        ] {
+            if actual != default {
+                s.push_str(&format!("{key} = {}\n", fmt_float(actual)));
+            }
+        }
+        if f.ports != d.ports {
+            s.push_str(&format!("ports = {}\n", f.ports));
+        }
+    }
+    // later [[fabric]] sections may derive from this one
+    let _ = reg.register(f.clone());
     s
 }
 
@@ -725,6 +980,33 @@ lib = "blis-opt"
         )
         .unwrap_err();
         assert!(matches!(err, CimoneError::Spec(ref m) if m.contains("unknown kind `dgemm`")));
+    }
+
+    #[test]
+    fn misspelled_campaign_keys_are_rejected() {
+        let err = CampaignSpec::parse("[campaign]\nfabrik = \"ten-gbe-flat\"\n").unwrap_err();
+        assert!(matches!(err, CimoneError::Spec(ref m) if m.contains("unknown key `fabrik`")));
+    }
+
+    #[test]
+    fn unknown_or_misplaced_workload_keys_are_rejected() {
+        // a misspelled `fabric` must not silently run on the wrong wire
+        let err = CampaignSpec::parse(
+            "[[workload]]\nkind = \"hpl\"\nname = \"h\"\nplatform = \"mcv2\"\npartition = \"mcv2\"\n\
+             cores_per_node = 64\nfabrik = \"ten-gbe-flat\"\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CimoneError::Spec(ref m) if m.contains("unknown key `fabrik`")));
+        // ...and `fabric` on a stream job (which has no network model)
+        // is equally a load-time error, not an ignored key
+        let err = CampaignSpec::parse(
+            "[[workload]]\nkind = \"stream\"\nname = \"s\"\nplatform = \"mcv2\"\npartition = \"mcv2\"\n\
+             threads = 64\nfabric = \"ten-gbe-flat\"\n",
+        )
+        .unwrap_err();
+        assert!(
+            matches!(err, CimoneError::Spec(ref m) if m.contains("unknown key `fabric`") && m.contains("kind `stream`"))
+        );
     }
 
     #[test]
@@ -867,5 +1149,114 @@ lib = "blis-opt"
         .unwrap();
         let back = CampaignSpec::parse(&spec.render()).unwrap();
         assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn fleet_fabric_key_sets_the_machine_interconnect() {
+        let spec = CampaignSpec::parse(
+            "[[fleet]]\nplatform = \"mcv2-pioneer\"\ncount = 4\nfabric = \"10gbe\"\n",
+        )
+        .unwrap();
+        // the alias is canonicalized to the registry id at load time
+        assert_eq!(spec.fabric.as_deref(), Some("ten-gbe-flat"));
+        assert_eq!(spec.build_inventory().unwrap().fabric.id, "ten-gbe-flat");
+        // without the key, the leading platform's default fabric rules
+        let spec =
+            CampaignSpec::parse("[[fleet]]\nplatform = \"mcv3\"\ncount = 2\n").unwrap();
+        assert!(spec.fabric.is_none());
+        assert_eq!(spec.build_inventory().unwrap().fabric.id, "ten-gbe-flat");
+    }
+
+    #[test]
+    fn conflicting_fleet_fabrics_are_rejected() {
+        let err = CampaignSpec::parse(
+            "[[fleet]]\nplatform = \"mcv1-u740\"\ncount = 2\nfabric = \"gbe-flat\"\n\n\
+             [[fleet]]\nplatform = \"mcv2-pioneer\"\ncount = 2\nfabric = \"ten-gbe-flat\"\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CimoneError::Spec(ref m) if m.contains("conflicting machine fabrics")));
+    }
+
+    #[test]
+    fn unknown_fabric_names_are_typed_at_load_time() {
+        // machine-level
+        let err = CampaignSpec::parse("[campaign]\nfabric = \"infiniband\"\n").unwrap_err();
+        assert!(matches!(err, CimoneError::UnknownFabric { ref id, .. } if id == "infiniband"));
+        // workload-level
+        let err = CampaignSpec::parse(
+            "[[workload]]\nkind = \"hpl\"\nname = \"h\"\nplatform = \"mcv2\"\npartition = \"mcv2\"\n\
+             cores_per_node = 64\nfabric = \"infiniband\"\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CimoneError::UnknownFabric { ref id, .. } if id == "infiniband"));
+    }
+
+    #[test]
+    fn fleet_wider_than_the_fabric_switch_is_typed_at_load_time() {
+        // 17 Pioneers cannot hang off the paper's 16-port ToR switch
+        let err = CampaignSpec::parse("[[fleet]]\nplatform = \"mcv2-pioneer\"\ncount = 17\n")
+            .unwrap_err();
+        assert!(matches!(
+            err,
+            CimoneError::FabricTooSmall { ports: 16, nodes: 17, .. }
+        ));
+        // ...but a wider custom fabric carries them
+        let spec = CampaignSpec::parse(
+            "[[fabric]]\nid = \"gbe-big\"\nbase = \"gbe-flat\"\nports = 24\n\n\
+             [[fleet]]\nplatform = \"mcv2-pioneer\"\ncount = 17\nfabric = \"gbe-big\"\n",
+        )
+        .unwrap();
+        assert_eq!(spec.build_inventory().unwrap().fabric.ports, 24);
+        // an HPL job's fabric override is held to the same port check
+        let err = CampaignSpec::parse(
+            "[[workload]]\nkind = \"hpl\"\nname = \"h\"\nplatform = \"mcv2\"\npartition = \"mcv2\"\n\
+             nodes = 2\ncluster_nodes = 17\ncores_per_node = 64\nfabric = \"gbe-flat\"\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CimoneError::FabricTooSmall { nodes: 17, .. }));
+    }
+
+    #[test]
+    fn custom_fabric_sections_feed_workloads_and_round_trip() {
+        let spec = CampaignSpec::parse(
+            "[campaign]\nvalidate_n = 48\nfabric = \"gbe-8to1\"\n\n\
+             [[fabric]]\nid = \"gbe-8to1\"\nbase = \"gbe-flat\"\nbackplane_factor = 0.125\n\n\
+             [[fleet]]\nplatform = \"mcv2-pioneer\"\ncount = 4\n\n\
+             [[workload]]\nkind = \"hpl\"\nname = \"h\"\nplatform = \"mcv2\"\npartition = \"mcv2\"\n\
+             nodes = 2\ncores_per_node = 64\nfabric = \"ten-gbe\"\n",
+        )
+        .unwrap();
+        assert_eq!(spec.custom_fabrics.len(), 1);
+        assert_eq!(spec.build_inventory().unwrap().fabric.id, "gbe-8to1");
+        match &spec.workloads[0] {
+            WorkloadSpec::Hpl { fabric, .. } => {
+                assert_eq!(fabric.as_deref(), Some("ten-gbe-flat"))
+            }
+            other => panic!("expected Hpl, got {other:?}"),
+        }
+        let text = spec.render();
+        let back = CampaignSpec::parse(&text).unwrap();
+        assert_eq!(back, spec);
+        // only overridden fabric keys render back out
+        assert!(text.contains("backplane_factor = 0.125"), "{text}");
+        assert!(!text.contains("latency_us"), "inherited keys must not render: {text}");
+    }
+
+    #[test]
+    fn fabric_unit_conversions_round_trip_for_awkward_floats() {
+        // latency_us parses through the inexact constant 1e-6, so a
+        // naive `latency_s * 1e6` render lands 1 ulp off for ~a quarter
+        // of all values; exact_preimage must absorb that
+        for (i, us) in [420.5773751150367f64, 65.0, 19.999999999999996, 0.3333333333333333, 123.456]
+            .iter()
+            .enumerate()
+        {
+            let spec = CampaignSpec::parse(&format!(
+                "[[fabric]]\nid = \"lat-{i}\"\nbase = \"gbe-flat\"\nlatency_us = {us}\nraw_gbps = {us}\n",
+            ))
+            .unwrap();
+            let back = CampaignSpec::parse(&spec.render()).unwrap();
+            assert_eq!(back, spec, "latency_us/raw_gbps = {us} did not round-trip");
+        }
     }
 }

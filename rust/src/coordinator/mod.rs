@@ -26,12 +26,15 @@
 //!
 //! - [`scenario`] multiplies the whole stack: a
 //!   [`scenario::ScenarioMatrix`] expands a base spec across axes
-//!   (platforms, fleet sizes, libraries, workload subsets) into named
-//!   scenarios, runs them with rayon fan-out, and aggregates the
-//!   campaign reports into a Green500-style
-//!   [`scenario::ComparisonReport`] with speedup-vs-baseline columns
-//!   (`cimone sweep`). The built-in `generations` matrix reproduces the
-//!   paper's 127x HPL / 69x STREAM MCv1 -> MCv2 headline.
+//!   (platforms, fleet sizes, node counts, libraries, interconnect
+//!   fabrics, workload subsets) into named scenarios, runs them with
+//!   rayon fan-out, and aggregates the campaign reports into a
+//!   Green500-style [`scenario::ComparisonReport`] with
+//!   speedup-vs-baseline columns (`cimone sweep`). The built-in
+//!   `generations` matrix reproduces the paper's 127x HPL / 69x STREAM
+//!   MCv1 -> MCv2 headline; `fabric-scaling` crosses generations with
+//!   fabrics (via the [`crate::net::FabricRegistry`]) to reproduce the
+//!   Fig 5 interconnect collapse.
 //!
 //! [`experiments`] / [`report`] / [`sweeps`] regenerate every paper
 //! figure (and the SG2044/MCv3 extension sweeps) on top of the same
@@ -45,7 +48,7 @@ pub mod scenario;
 pub mod sweeps;
 pub mod workload;
 
-pub use campaign::{CampaignSpec, PlatformDef, WorkloadSpec};
+pub use campaign::{CampaignSpec, FabricDef, PlatformDef, WorkloadSpec};
 pub use driver::{
     dry_run_spec, run_campaign, run_campaign_on, run_campaign_spec, CampaignReport, JobRow,
 };

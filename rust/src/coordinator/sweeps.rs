@@ -11,7 +11,7 @@ use crate::arch::presets;
 use crate::blas::perf::PerfModel;
 use crate::hpl::model::{project, ClusterConfig};
 use crate::isa::rvv::Lmul;
-use crate::net::Link;
+use crate::net::Fabric;
 use crate::ukernel::{ablation, UkernelId};
 use crate::util::table::Table;
 
@@ -42,8 +42,8 @@ pub fn grid_cores_by_library(core_counts: &[usize]) -> Table {
     t
 }
 
-/// Node-count scaling on 1 GbE and 10 GbE — extends Fig 5 to the whole
-/// MCv2 partition (and hypothetical growth).
+/// Node-count scaling on the `gbe-flat` and `ten-gbe-flat` fabrics —
+/// extends Fig 5 to the whole MCv2 partition (and hypothetical growth).
 pub fn node_scaling(max_nodes: usize) -> Table {
     let mut t = Table::new(vec![
         "nodes",
@@ -55,7 +55,7 @@ pub fn node_scaling(max_nodes: usize) -> Table {
     for nodes in 1..=max_nodes {
         let mut cfg = ClusterConfig::hpl_default(platform::mcv2_pioneer(), nodes, 64);
         let p1 = project(&cfg);
-        cfg.link = Link::ten_gbe();
+        cfg.fabric = Fabric::ten_gbe_flat();
         let p10 = project(&cfg);
         t.row(vec![
             nodes.to_string(),
@@ -64,6 +64,47 @@ pub fn node_scaling(max_nodes: usize) -> Table {
             format!("{:.1}", p10.gflops),
             format!("{:.0}%", 100.0 * p10.efficiency_vs_one_node),
         ]);
+    }
+    t
+}
+
+/// The Fig 5 punchline as one table: the built-in
+/// [`ScenarioMatrix::fabric_scaling`] matrix (generation x fabric x node
+/// count), dry-run and pivoted so each `(platform, fabric)` pair is a
+/// row of HPL GFLOP/s per node count plus its scaling efficiency at the
+/// widest point — near-linear MCv1 on 1 GbE, collapsing MCv2 on the
+/// same wire, restored by 10 GbE.
+pub fn fabric_scaling_table() -> Table {
+    let matrix = ScenarioMatrix::fabric_scaling();
+    let report = dry_run_matrix(&matrix)
+        .expect("the built-in fabric-scaling matrix is valid");
+    let widths = &matrix.axes.node_counts;
+    let widest = *widths.last().expect("the scaling axis is non-empty");
+    let mut headers = vec!["platform".to_string(), "fabric".to_string()];
+    headers.extend(widths.iter().map(|n| format!("{n}n GF/s")));
+    headers.push(format!("eff@{widest}n"));
+    let mut t = Table::new(headers);
+    for p in &matrix.axes.platforms {
+        for f in &matrix.axes.fabrics {
+            // a missing name means the built-in matrix and this pivot
+            // drifted apart — a programmer error, never a zero row
+            let gf = |n: usize| -> f64 {
+                report
+                    .outcome(&format!("{p}/{n}n/{f}"))
+                    .unwrap_or_else(|| {
+                        panic!("fabric-scaling scenario `{p}/{n}n/{f}` missing from the report")
+                    })
+                    .hpl_gflops
+            };
+            // per-node rate at the widest point over the rate at the
+            // narrowest — correct whatever width the axis starts at
+            let base_per_node = gf(widths[0]) / widths[0] as f64;
+            let eff = gf(widest) / widest as f64 / base_per_node.max(1e-30);
+            let mut row = vec![p.clone(), f.clone()];
+            row.extend(widths.iter().map(|&n| format!("{:.1}", gf(n))));
+            row.push(format!("{:.0}%", 100.0 * eff));
+            t.row(row);
+        }
     }
     t
 }
@@ -191,12 +232,14 @@ pub fn render_all() -> String {
     format!(
         "== Extension: cores x library grid (dual-socket MCv2) ==\n{}\n\n\
          == Extension: node-count scaling, 1 vs 10 GbE (N=57600) ==\n{}\n\n\
+         == Extension: fabric scaling, generation x interconnect (Fig 5 effect) ==\n{}\n\n\
          == Extension: NB sensitivity (N=57600, 2 nodes, 1 GbE) ==\n{}\n\n\
          == Extension: LMUL ablation (why the paper stops at 4) ==\n{}\n\n\
          == Extension: energy to solution (HPL N=57600) ==\n{}\n\n\
          == Extension: down the road (MCv1 -> MCv2 -> SG2044 -> MCv3) ==\n{}",
         grid_cores_by_library(&[1, 4, 16, 64, 128]).render(),
         node_scaling(4).render(),
+        fabric_scaling_table().render(),
         nb_sensitivity(57_600, &[64, 128, 192, 256, 384]).render(),
         lmul_ablation().render(),
         energy_table(&report).render(),
@@ -222,8 +265,18 @@ mod tests {
         let mut cfg = ClusterConfig::hpl_default(platform::mcv2_pioneer(), 4, 64);
         let p = project(&cfg);
         assert!(p.efficiency_vs_one_node < 0.55, "{}", p.efficiency_vs_one_node);
-        cfg.link = Link::ten_gbe();
+        cfg.fabric = Fabric::ten_gbe_flat();
         assert!(project(&cfg).efficiency_vs_one_node > p.efficiency_vs_one_node);
+    }
+
+    #[test]
+    fn fabric_scaling_table_carries_the_fig5_story() {
+        let s = fabric_scaling_table().render();
+        // one row per (platform, fabric) pair, widths as columns
+        assert!(s.contains("mcv1-u740") && s.contains("mcv2-pioneer"), "{s}");
+        assert!(s.contains("gbe-flat") && s.contains("ten-gbe-flat"), "{s}");
+        assert!(s.contains("8n GF/s") && s.contains("eff@8n"), "{s}");
+        assert_eq!(fabric_scaling_table().n_rows(), 4);
     }
 
     #[test]
@@ -285,6 +338,7 @@ mod tests {
         let s = render_all();
         assert!(s.contains("LMUL ablation"));
         assert!(s.contains("down the road"));
+        assert!(s.contains("fabric scaling"));
         assert!(s.len() > 500);
     }
 }

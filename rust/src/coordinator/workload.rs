@@ -129,6 +129,9 @@ pub struct HplWorkload {
     pub cores_per_node: usize,
     /// BLAS library override; `None` uses the platform's default.
     pub lib: Option<UkernelId>,
+    /// Fabric override (registry id or alias); `None` uses the
+    /// inventory's machine fabric.
+    pub fabric: Option<String>,
 }
 
 impl Workload for HplWorkload {
@@ -146,11 +149,21 @@ impl Workload for HplWorkload {
 
     fn estimate(&self, inv: &Inventory) -> Result<JobEstimate, CimoneError> {
         let p = platform_of(inv, &self.platform)?;
-        let mut cfg =
-            ClusterConfig::hpl_default(Arc::clone(p), self.cluster_nodes, self.cores_per_node);
+        // the machine's resolved fabric, unless the job names its own
+        let fabric = match &self.fabric {
+            Some(id) => inv.fabrics.get(id)?,
+            None => Arc::clone(&inv.fabric),
+        };
+        let mut cfg = ClusterConfig::with_fabric(
+            Arc::clone(p),
+            self.cluster_nodes,
+            self.cores_per_node,
+            (*fabric).clone(),
+        );
         if let Some(lib) = self.lib {
             cfg.lib = lib;
         }
+        cfg.validate()?; // a cluster wider than the switch is typed here
         let proj = project(&cfg);
         let runtime_s = proj.t_comp + proj.t_comm;
         let active = self.cores_per_node.min(p.desc.total_cores());
@@ -248,6 +261,7 @@ mod tests {
             cluster_nodes: 1,
             cores_per_node: 64,
             lib: None,
+            fabric: None,
         };
         let est = w.estimate(&inv).unwrap();
         let direct = project(&ClusterConfig::hpl_default(
@@ -323,9 +337,42 @@ mod tests {
             cluster_nodes: 1,
             cores_per_node: 64,
             lib: None,
+            fabric: None,
         };
         let est = w.estimate(&inv).unwrap();
         assert!(est.value.is_finite() && est.value > 0.0);
         assert!(est.energy_j.is_finite() && est.energy_j > 0.0);
+    }
+
+    #[test]
+    fn hpl_fabric_override_beats_the_machine_fabric() {
+        let inv = monte_cimone_v2(); // machine fabric: gbe-flat
+        let mk = |fabric: Option<&str>| HplWorkload {
+            name: "hpl-2n".into(),
+            partition: "mcv2".into(),
+            nodes: 2,
+            platform: "mcv2-pioneer".into(),
+            cluster_nodes: 2,
+            cores_per_node: 64,
+            lib: None,
+            fabric: fabric.map(str::to_string),
+        };
+        let on_gbe = mk(None).estimate(&inv).unwrap();
+        let on_ten = mk(Some("ten-gbe-flat")).estimate(&inv).unwrap();
+        assert!(
+            on_ten.value > 1.1 * on_gbe.value,
+            "10 GbE {:.1} !>> 1 GbE {:.1}",
+            on_ten.value,
+            on_gbe.value
+        );
+        // unknown override: typed at estimation time
+        assert!(matches!(
+            mk(Some("infiniband")).estimate(&inv),
+            Err(CimoneError::UnknownFabric { .. })
+        ));
+        // a modeled cluster wider than the switch: typed, not a panic
+        let mut w = mk(Some("gbe-flat"));
+        w.cluster_nodes = 17;
+        assert!(matches!(w.estimate(&inv), Err(CimoneError::FabricTooSmall { .. })));
     }
 }

@@ -37,6 +37,25 @@ pub enum CimoneError {
     #[error("no node of platform `{0}` in the inventory")]
     NoNodeOfPlatform(String),
 
+    /// A fabric id was looked up in a registry that does not know it.
+    #[error("unknown fabric `{id}` (registered: {known})")]
+    UnknownFabric { id: String, known: String },
+
+    /// A fabric (or one of its aliases) was registered twice.
+    #[error("fabric name `{0}` is already registered (id or alias clash)")]
+    DuplicateFabric(String),
+
+    /// A fabric violates its own invariants (zero bandwidth, no ports,
+    /// out-of-range backplane factor, ...).
+    #[error("invalid fabric `{id}`: {reason}")]
+    InvalidFabric { id: String, reason: String },
+
+    /// A fleet or HPL cluster is wider than its fabric's switch — caught
+    /// at campaign load time so the flow model never indexes past its
+    /// port arrays.
+    #[error("fabric `{fabric}` has {ports} ports but the cluster needs {nodes}")]
+    FabricTooSmall { fabric: String, ports: usize, nodes: usize },
+
     /// A job was submitted with a non-finite or non-positive runtime
     /// (would hang or panic the simulated-time event loop).
     #[error("job `{job}` has invalid runtime {runtime_s}s (must be finite and > 0)")]

@@ -2,14 +2,18 @@
 //!
 //! Combines the calibrated node model ([`crate::blas::perf`]) with the
 //! interconnect cost model ([`crate::net`]) using HPL's communication
-//! structure: per panel, a panel broadcast + a row-slab exchange; per
-//! column, a pivot-search allreduce.
+//! structure: per panel, a panel broadcast, a row-slab exchange routed
+//! through the switch ([`crate::net::Switch::flows_time`]) and a
+//! pivot-row fan-in gather to the panel root; per column, a pivot-search
+//! allreduce. The fabric is data: a resolved [`Fabric`], defaulting to
+//! the platform's own `default_fabric` registry entry.
 
 use std::sync::Arc;
 
 use crate::arch::platform::Platform;
 use crate::blas::perf::PerfModel;
-use crate::net::{Collectives, Link};
+use crate::error::CimoneError;
+use crate::net::{Fabric, FabricRegistry};
 use crate::ukernel::UkernelId;
 use crate::util::stats::hpl_flops;
 
@@ -26,21 +30,52 @@ pub struct ClusterConfig {
     /// reproduces Fig 5's scaling ratios.
     pub n: usize,
     pub nb: usize,
-    pub link: Link,
+    /// The resolved interconnect the cluster hangs off.
+    pub fabric: Fabric,
 }
 
 impl ClusterConfig {
     /// The standard run shape: the platform's default BLAS library, the
-    /// calibration problem size, and the paper's 1 GbE fabric. Accepts a
-    /// `Platform` by value or an already-shared `Arc<Platform>`.
+    /// calibration problem size, and the platform's own interconnect
+    /// (`default_fabric`, resolved against the built-in
+    /// [`FabricRegistry`] — so MCv1/MCv2 model the paper's 1 GbE and the
+    /// MCv3 projection its 10 GbE). Accepts a `Platform` by value or an
+    /// already-shared `Arc<Platform>`.
+    ///
+    /// A `default_fabric` naming a custom (non-built-in) fabric falls
+    /// back to the paper's `gbe-flat` here; the campaign layer resolves
+    /// custom fabrics explicitly via [`ClusterConfig::with_fabric`].
     pub fn hpl_default(
         platform: impl Into<Arc<Platform>>,
         nodes: usize,
         cores_per_node: usize,
     ) -> Self {
         let platform = platform.into();
+        let fabric = FabricRegistry::builtin()
+            .get(&platform.default_fabric)
+            .map(|f| (*f).clone())
+            .unwrap_or_else(|_| Fabric::gbe_flat());
+        ClusterConfig::with_fabric(platform, nodes, cores_per_node, fabric)
+    }
+
+    /// The standard run shape on an explicitly resolved fabric.
+    pub fn with_fabric(
+        platform: impl Into<Arc<Platform>>,
+        nodes: usize,
+        cores_per_node: usize,
+        fabric: Fabric,
+    ) -> Self {
+        let platform = platform.into();
         let lib = platform.default_lib;
-        ClusterConfig { platform, nodes, cores_per_node, lib, n: 57_600, nb: 192, link: Link::gbe() }
+        ClusterConfig { platform, nodes, cores_per_node, lib, n: 57_600, nb: 192, fabric }
+    }
+
+    /// Cross-checks between the cluster shape and its fabric: the switch
+    /// must have a port per node. Campaign loading runs this before any
+    /// flow model sees the configuration.
+    pub fn validate(&self) -> Result<(), CimoneError> {
+        self.fabric.validate()?;
+        self.fabric.validate_cluster(self.nodes)
     }
 }
 
@@ -63,14 +98,27 @@ pub fn project(cfg: &ClusterConfig) -> HplProjection {
     let t_comm = if p <= 1 {
         0.0
     } else {
-        let coll = Collectives::new(cfg.link, p);
+        let coll = cfg.fabric.collectives(p);
+        // switch_for keeps what-if sweeps total past the physical port
+        // count (an idealized larger switch of the same class); real
+        // fleets are port-checked as typed errors by ClusterConfig/
+        // campaign validation before they reach this model
+        let sw = cfg.fabric.switch_for(p);
         let panels = cfg.n / cfg.nb;
+        // per-peer pivot-row block gathered to the panel root each panel
+        let pivot_bytes = (cfg.nb * cfg.nb * 8) as f64;
         let mut t = 0.0;
         for pi in 0..panels {
             let rows = (cfg.n - pi * cfg.nb) as f64;
             let panel_bytes = rows * cfg.nb as f64 * 8.0;
             t += coll.bcast(panel_bytes); // L panel broadcast
-            t += coll.exchange(panel_bytes); // U row-slab swap traffic
+            // U row-slab swap: a ring shift through the switch — equal
+            // to the flat-link exchange on a non-blocking fabric, but
+            // the backplane bound engages on oversubscribed ones
+            t += sw.ring_shift_time(p, panel_bytes);
+            // pivot-row swap: every peer sends its pivot block to the
+            // panel root — the fan-in the flat model cannot see
+            t += sw.gather_time(p, pivot_bytes);
         }
         // pivot search: one tiny allreduce per column
         t += cfg.n as f64 * coll.allreduce(8.0);
@@ -149,9 +197,47 @@ mod tests {
     fn ten_gbe_ablation_restores_scaling() {
         // DESIGN.md ablation: a 10 GbE fabric would have fixed MCv2 scaling
         let mut cfg = ClusterConfig::hpl_default(mcv2_pioneer(), 2, 64);
-        cfg.link = Link::ten_gbe();
+        cfg.fabric = Fabric::ten_gbe_flat();
         let p = project(&cfg);
         assert!(p.efficiency_vs_one_node > 0.85, "{:.3}", p.efficiency_vs_one_node);
+    }
+
+    #[test]
+    fn hpl_default_resolves_the_platforms_own_fabric() {
+        // MCv1/MCv2 model the paper's 1 GbE; MCv3 its 10 GbE upgrade
+        assert_eq!(ClusterConfig::hpl_default(mcv2_pioneer(), 2, 64).fabric.id, "gbe-flat");
+        assert_eq!(ClusterConfig::hpl_default(mcv1_u740(), 8, 4).fabric.id, "gbe-flat");
+        assert_eq!(ClusterConfig::hpl_default(mcv3(), 2, 128).fabric.id, "ten-gbe-flat");
+    }
+
+    #[test]
+    fn oversubscribed_fabric_collapses_scaling_further() {
+        let flat = project(&ClusterConfig::hpl_default(mcv2_pioneer(), 8, 64));
+        let mut cfg = ClusterConfig::hpl_default(mcv2_pioneer(), 8, 64);
+        cfg.fabric = Fabric::gbe_oversub();
+        let over = project(&cfg);
+        assert!(
+            over.efficiency_vs_one_node < flat.efficiency_vs_one_node,
+            "oversub {:.3} !< flat {:.3}",
+            over.efficiency_vs_one_node,
+            flat.efficiency_vs_one_node
+        );
+    }
+
+    #[test]
+    fn cluster_wider_than_the_switch_is_a_typed_error() {
+        let cfg = ClusterConfig::hpl_default(mcv2_pioneer(), 17, 64);
+        assert!(matches!(
+            cfg.validate(),
+            Err(CimoneError::FabricTooSmall { ports: 16, nodes: 17, .. })
+        ));
+        assert!(ClusterConfig::hpl_default(mcv2_pioneer(), 16, 64).validate().is_ok());
+        // ...but the projection itself stays total for what-if sweeps:
+        // past the port count it models an idealized larger switch of
+        // the same class instead of panicking
+        let p = project(&cfg);
+        assert!(p.gflops.is_finite() && p.gflops > 0.0, "{}", p.gflops);
+        assert!(p.efficiency_vs_one_node < 1.0);
     }
 
     #[test]

@@ -19,14 +19,18 @@
 //! cimone sweep [--spec file.toml]    scenario sweep -> Green500-style table
 //!         [--dry-run] [--json]       ... default: the built-in generation
 //!                                        matrix (127x HPL / 69x STREAM)
+//!         [--matrix fabric-scaling]  ... or another built-in matrix: the
+//!                                        Fig 5 node-count x fabric sweep
 //! cimone platforms                   the registered platform fleet (SoC table)
+//! cimone fabrics                     the registered interconnects
 //! cimone translate-demo              section 3.3.1 RVV 1.0 -> 0.7.1 retrofit
 //! ```
 //!
 //! Campaign specs name platforms by registry id or alias (`mcv2-pioneer`,
 //! `sg2044`, ...), may define their own via `[[platform]]` sections, and
-//! pick the simulated machine with `[[fleet]]` entries. Sweep specs add
-//! `[matrix]` axes and `[[scenario]]` sections that expand one base
+//! pick the simulated machine with `[[fleet]]` entries — including its
+//! interconnect (`fabric =` keys, `[[fabric]]` overrides). Sweep specs
+//! add `[matrix]` axes and `[[scenario]]` sections that expand one base
 //! campaign into many named scenarios compared against the first.
 
 use cimone::arch::PlatformRegistry;
@@ -167,11 +171,23 @@ fn run(args: &Args) -> Result<(), CimoneError> {
         }
         Some("sweep") => {
             // scenario sweep: a matrix spec expands into N campaigns run
-            // as one batch; without --spec, the built-in generation
-            // matrix reproduces the paper's 127x / 69x headline table
-            let matrix = match args.get("spec") {
-                Some(path) => ScenarioMatrix::load(path)?,
-                None => ScenarioMatrix::generations(),
+            // as one batch; without --spec, a built-in matrix runs — the
+            // generation table (127x / 69x headline) by default, or the
+            // Fig 5 node-count x fabric sweep via --matrix
+            let matrix = match (args.get("spec"), args.get("matrix")) {
+                (Some(_), Some(_)) => {
+                    return Err(CimoneError::Cli(
+                        "--spec and --matrix are mutually exclusive".into(),
+                    ));
+                }
+                (Some(path), None) => ScenarioMatrix::load(path)?,
+                (None, Some("generations")) | (None, None) => ScenarioMatrix::generations(),
+                (None, Some("fabric-scaling")) => ScenarioMatrix::fabric_scaling(),
+                (None, Some(other)) => {
+                    return Err(CimoneError::Cli(format!(
+                        "unknown built-in matrix `{other}` (generations | fabric-scaling)"
+                    )));
+                }
             };
             let report = if args.flag("dry-run") {
                 scenario::dry_run_matrix(&matrix)?
@@ -214,6 +230,30 @@ fn run(args: &Args) -> Result<(), CimoneError> {
             }
             println!("{}", t.render());
         }
+        Some("fabrics") => {
+            let reg = cimone::net::FabricRegistry::builtin();
+            let mut t = Table::new(vec![
+                "id",
+                "label",
+                "Gb/s",
+                "latency us",
+                "ports",
+                "backplane",
+                "aliases",
+            ]);
+            for f in reg.fabrics() {
+                t.row(vec![
+                    f.id.clone(),
+                    f.label.clone(),
+                    format!("{:.0}", f.link.raw_bps / 1e9),
+                    format!("{:.0}", f.link.latency_s * 1e6),
+                    f.ports.to_string(),
+                    format!("{:.2}", f.backplane_factor),
+                    f.aliases.join(", "),
+                ]);
+            }
+            println!("{}", t.render());
+        }
         Some("translate-demo") => {
             let kernel = cimone::ukernel::blis_lmul1::BlisLmul1;
             let prog = kernel.program(PanelLayout::new(8, 4, 1));
@@ -230,7 +270,7 @@ fn run(args: &Args) -> Result<(), CimoneError> {
             )));
         }
         None => {
-            println!("usage: cimone <stream|hpl|cluster-hpl|cache-miss|blis-compare|headline|report-all|sweeps|run-hpl|validate|campaign|sweep|platforms|translate-demo>");
+            println!("usage: cimone <stream|hpl|cluster-hpl|cache-miss|blis-compare|headline|report-all|sweeps|run-hpl|validate|campaign|sweep|platforms|fabrics|translate-demo>");
         }
     }
     Ok(())

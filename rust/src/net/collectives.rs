@@ -47,8 +47,13 @@ impl Collectives {
             + 2.0 * (pf - 1.0) / pf * bytes / self.link.payload_bytes_per_sec()
     }
 
-    /// Pairwise exchange (HPL's row swaps): each rank sends/receives
-    /// `bytes` once.
+    /// Pairwise exchange: each rank sends/receives `bytes` once. This is
+    /// the *flat-link baseline* for HPL's U row-slab swap — the HPL
+    /// projection now routes that swap through
+    /// [`crate::net::Switch::ring_shift_time`], which reduces to exactly
+    /// this on a non-blocking fabric (property-tested in
+    /// `integration_net.rs`) but additionally models the backplane bound
+    /// on oversubscribed ones.
     pub fn exchange(&self, bytes: f64) -> f64 {
         if self.p == 1 {
             return 0.0;

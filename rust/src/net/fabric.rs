@@ -1,0 +1,429 @@
+//! Data-driven interconnect fabrics — the network analogue of the open
+//! platform API ([`crate::arch::platform`]).
+//!
+//! A [`Fabric`] bundles everything the models need to know about one
+//! cluster interconnect: identity (id, label, aliases), the per-port
+//! [`Link`], and the switch topology parameters (port count,
+//! backplane oversubscription). Fabrics are registered by string id in a
+//! [`FabricRegistry`] and resolved wherever the stack used to hardcode
+//! `Link::gbe()` — the HPL projection, inventories, campaign specs and
+//! the scenario matrix. The built-ins:
+//!
+//! | id             | wire                                | source            |
+//! |----------------|-------------------------------------|-------------------|
+//! | `gbe-flat`     | 1 GbE, unmanaged 16-port ToR switch | the paper (Fig 5) |
+//! | `ten-gbe-flat` | 10 GbE, non-blocking 32-port switch | MCv3, arXiv 2605.22831 |
+//! | `gbe-oversub`  | 1 GbE, 16 ports, 4:1 oversubscribed | worst-case ablation |
+//!
+//! Fabrics validate their own invariants on registration as typed
+//! [`CimoneError::InvalidFabric`] values, and the campaign layer checks
+//! `ports >= fleet node count` at load time
+//! ([`CimoneError::FabricTooSmall`]) so [`Switch::flows_time`] never
+//! sees an out-of-range port.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::collectives::Collectives;
+use super::link::Link;
+use super::topo::Switch;
+use crate::error::CimoneError;
+use crate::util::config::Section;
+
+/// One registrable cluster interconnect: identity + link + topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fabric {
+    /// Registry key and spec-file spelling (e.g. `gbe-flat`).
+    pub id: String,
+    /// Human label used in reports (e.g. `1 GbE flat (unmanaged ToR)`).
+    pub label: String,
+    /// Alternate spec-file spellings (`gbe`, `10gbe`, ...).
+    pub aliases: Vec<String>,
+    /// The per-port link (bandwidth, latency, protocol efficiency).
+    pub link: Link,
+    /// Switch port count — the hard ceiling on fleet size.
+    pub ports: usize,
+    /// Backplane speedup vs the sum of ports (1.0 = non-blocking,
+    /// < 1.0 = oversubscribed).
+    pub backplane_factor: f64,
+}
+
+impl Fabric {
+    /// The paper's fabric: Monte Cimone's unmanaged 1 GbE ToR switch.
+    pub fn gbe_flat() -> Fabric {
+        Fabric {
+            id: "gbe-flat".into(),
+            label: "1 GbE flat (unmanaged ToR)".into(),
+            aliases: vec!["gbe".into(), "1gbe".into()],
+            link: Link::gbe(),
+            ports: 16,
+            backplane_factor: 1.0,
+        }
+    }
+
+    /// The MCv3 direction (arXiv 2605.22831): 10 GbE, non-blocking.
+    pub fn ten_gbe_flat() -> Fabric {
+        Fabric {
+            id: "ten-gbe-flat".into(),
+            label: "10 GbE flat (non-blocking)".into(),
+            aliases: vec!["10gbe".into(), "ten-gbe".into()],
+            link: Link::ten_gbe(),
+            ports: 32,
+            backplane_factor: 1.0,
+        }
+    }
+
+    /// Worst-case ablation: the paper's 1 GbE wire behind a 4:1
+    /// oversubscribed backplane — what a cheap stacked switch would do.
+    pub fn gbe_oversub() -> Fabric {
+        Fabric {
+            id: "gbe-oversub".into(),
+            label: "1 GbE 4:1 oversubscribed".into(),
+            aliases: vec!["gbe-4to1".into()],
+            link: Link::gbe(),
+            ports: 16,
+            backplane_factor: 0.25,
+        }
+    }
+
+    /// Does `name` refer to this fabric (id or alias)?
+    pub fn matches(&self, name: &str) -> bool {
+        self.id == name || self.aliases.iter().any(|a| a == name)
+    }
+
+    /// The switch topology model of this fabric.
+    pub fn switch(&self) -> Switch {
+        Switch { link: self.link, ports: self.ports, backplane_factor: self.backplane_factor }
+    }
+
+    /// A switch of this fabric's class with at least `ranks` ports: the
+    /// real port count where the cluster fits, otherwise an idealized
+    /// larger switch of the same wire and oversubscription ratio. The
+    /// HPL projection uses this so what-if scaling sweeps stay total;
+    /// *physical* port limits are enforced separately, as typed
+    /// [`CimoneError::FabricTooSmall`], by [`Fabric::validate_cluster`]
+    /// on every campaign path.
+    pub fn switch_for(&self, ranks: usize) -> Switch {
+        Switch {
+            link: self.link,
+            ports: self.ports.max(ranks),
+            backplane_factor: self.backplane_factor,
+        }
+    }
+
+    /// Collective cost calculator for `p` ranks over this fabric's link.
+    pub fn collectives(&self, p: usize) -> Collectives {
+        Collectives::new(self.link, p)
+    }
+
+    fn err(&self, reason: impl Into<String>) -> CimoneError {
+        CimoneError::InvalidFabric { id: self.id.clone(), reason: reason.into() }
+    }
+
+    /// Check the fabric's own invariants; every registration path runs
+    /// this, so malformed fabrics never reach the models.
+    pub fn validate(&self) -> Result<(), CimoneError> {
+        if self.id.is_empty() || self.id.contains(char::is_whitespace) {
+            return Err(self.err("id must be non-empty and free of whitespace"));
+        }
+        if !(self.link.raw_bps.is_finite() && self.link.raw_bps > 0.0) {
+            return Err(self.err("link bandwidth must be finite and > 0"));
+        }
+        if !(self.link.latency_s.is_finite() && self.link.latency_s >= 0.0) {
+            return Err(self.err("link latency must be finite and >= 0"));
+        }
+        if !(self.link.efficiency > 0.0 && self.link.efficiency <= 1.0) {
+            return Err(self.err("link efficiency must be in (0, 1]"));
+        }
+        if self.ports < 2 {
+            return Err(self.err("a switch needs at least 2 ports"));
+        }
+        if !(self.backplane_factor > 0.0 && self.backplane_factor <= 1.0) {
+            return Err(self.err("backplane_factor must be in (0, 1]"));
+        }
+        Ok(())
+    }
+
+    /// Can a `nodes`-wide cluster hang off this fabric? The campaign
+    /// layer runs this at load time so [`Switch::flows_time`] never
+    /// indexes past its port arrays mid-sweep.
+    pub fn validate_cluster(&self, nodes: usize) -> Result<(), CimoneError> {
+        if nodes > self.ports {
+            return Err(CimoneError::FabricTooSmall {
+                fabric: self.id.clone(),
+                ports: self.ports,
+                nodes,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Fabrics keyed by id, resolvable by id or alias.
+#[derive(Debug, Clone, Default)]
+pub struct FabricRegistry {
+    by_id: BTreeMap<String, Arc<Fabric>>,
+}
+
+impl FabricRegistry {
+    /// An empty registry.
+    pub fn new() -> FabricRegistry {
+        FabricRegistry::default()
+    }
+
+    /// The built-in fabrics: the paper's 1 GbE, the MCv3 10 GbE, and the
+    /// oversubscribed ablation variant.
+    pub fn builtin() -> FabricRegistry {
+        let mut reg = FabricRegistry::new();
+        for f in [Fabric::gbe_flat(), Fabric::ten_gbe_flat(), Fabric::gbe_oversub()] {
+            reg.register(f).expect("built-in fabrics are valid and unique");
+        }
+        reg
+    }
+
+    /// Validate and add a fabric. Ids and aliases share one namespace;
+    /// any clash with an already-registered name is rejected.
+    pub fn register(&mut self, fabric: Fabric) -> Result<Arc<Fabric>, CimoneError> {
+        fabric.validate()?;
+        for name in std::iter::once(&fabric.id).chain(fabric.aliases.iter()) {
+            if self.resolve(name).is_some() {
+                return Err(CimoneError::DuplicateFabric(name.clone()));
+            }
+        }
+        let arc = Arc::new(fabric);
+        self.by_id.insert(arc.id.clone(), Arc::clone(&arc));
+        Ok(arc)
+    }
+
+    fn resolve(&self, name: &str) -> Option<&Arc<Fabric>> {
+        self.by_id.get(name).or_else(|| self.by_id.values().find(|f| f.matches(name)))
+    }
+
+    /// Look a fabric up by id or alias.
+    pub fn get(&self, name: &str) -> Result<Arc<Fabric>, CimoneError> {
+        self.resolve(name).cloned().ok_or_else(|| CimoneError::UnknownFabric {
+            id: name.to_string(),
+            known: self.ids().join(", "),
+        })
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.resolve(name).is_some()
+    }
+
+    /// Registered ids, sorted.
+    pub fn ids(&self) -> Vec<String> {
+        self.by_id.keys().cloned().collect()
+    }
+
+    /// All registered fabrics, in id order.
+    pub fn fabrics(&self) -> impl Iterator<Item = &Arc<Fabric>> {
+        self.by_id.values()
+    }
+
+    /// Register a fabric described by a `[[fabric]]` campaign-spec
+    /// section: a required `base` fabric (id or alias) plus overrides.
+    ///
+    /// ```text
+    /// [[fabric]]
+    /// id = "gbe-8to1"
+    /// base = "gbe-flat"
+    /// backplane_factor = 0.125
+    /// # other overrides: label, raw_gbps, latency_us, efficiency, ports
+    /// ```
+    pub fn register_section(&mut self, sec: &Section) -> Result<Arc<Fabric>, CimoneError> {
+        const KNOWN_KEYS: &[&str] = &[
+            "id",
+            "base",
+            "label",
+            "raw_gbps",
+            "latency_us",
+            "efficiency",
+            "ports",
+            "backplane_factor",
+        ];
+        let id = sec
+            .get("id")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| CimoneError::Spec("[[fabric]]: missing string key `id`".into()))?
+            .to_string();
+        let spec_err =
+            |msg: String| -> CimoneError { CimoneError::Spec(format!("fabric `{id}`: {msg}")) };
+        // a misspelled override must be a load-time error, not a fabric
+        // silently identical to its base
+        if let Some(unknown) = sec.keys().find(|k| !KNOWN_KEYS.contains(&k.as_str())) {
+            return Err(spec_err(format!(
+                "unknown key `{unknown}` (known: {})",
+                KNOWN_KEYS.join(", ")
+            )));
+        }
+        let base = sec
+            .get("base")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| spec_err("missing string key `base`".into()))?;
+        let mut f: Fabric = (*self.get(base)?).clone();
+        let base_label = f.label.clone();
+        f.id = id.clone();
+        f.aliases = Vec::new();
+        f.label = format!("{id} (custom, from {base_label})");
+
+        if let Some(v) = sec.get("label") {
+            f.label = v
+                .as_str()
+                .ok_or_else(|| spec_err("`label` must be a string".into()))?
+                .to_string();
+        }
+        let get_f64 = |key: &str| -> Result<Option<f64>, CimoneError> {
+            match sec.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_float()
+                    .filter(|x| x.is_finite())
+                    .map(Some)
+                    .ok_or_else(|| spec_err(format!("`{key}` must be a finite number"))),
+            }
+        };
+        if let Some(g) = get_f64("raw_gbps")? {
+            f.link.raw_bps = g * 1e9;
+        }
+        if let Some(us) = get_f64("latency_us")? {
+            f.link.latency_s = us * 1e-6;
+        }
+        if let Some(e) = get_f64("efficiency")? {
+            f.link.efficiency = e;
+        }
+        if let Some(b) = get_f64("backplane_factor")? {
+            f.backplane_factor = b;
+        }
+        if let Some(v) = sec.get("ports") {
+            f.ports = v
+                .as_int()
+                .filter(|i| *i > 0)
+                .ok_or_else(|| spec_err("`ports` must be a positive int".into()))?
+                as usize;
+        }
+        self.register(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_fabrics_register_and_resolve_aliases() {
+        let reg = FabricRegistry::builtin();
+        assert_eq!(reg.ids(), ["gbe-flat", "gbe-oversub", "ten-gbe-flat"]);
+        assert_eq!(reg.get("gbe").unwrap().id, "gbe-flat");
+        assert_eq!(reg.get("10gbe").unwrap().id, "ten-gbe-flat");
+        assert_eq!(reg.get("gbe-4to1").unwrap().id, "gbe-oversub");
+        assert!(reg.contains("1gbe"));
+    }
+
+    #[test]
+    fn unknown_fabric_is_typed_and_lists_known_ids() {
+        let reg = FabricRegistry::builtin();
+        match reg.get("infiniband") {
+            Err(CimoneError::UnknownFabric { id, known }) => {
+                assert_eq!(id, "infiniband");
+                assert!(known.contains("gbe-flat"), "{known}");
+            }
+            other => panic!("expected UnknownFabric, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_id_and_alias_rejected() {
+        let mut reg = FabricRegistry::builtin();
+        assert!(matches!(
+            reg.register(Fabric::gbe_flat()),
+            Err(CimoneError::DuplicateFabric(_))
+        ));
+        let mut f = Fabric::gbe_flat();
+        f.id = "gbe-b".into();
+        f.aliases = vec!["10gbe".into()]; // clashes with ten-gbe-flat's alias
+        assert!(matches!(reg.register(f), Err(CimoneError::DuplicateFabric(_))));
+    }
+
+    #[test]
+    fn validation_catches_broken_invariants() {
+        let breakers: [fn(&mut Fabric); 5] = [
+            |f| f.link.raw_bps = 0.0,
+            |f| f.link.efficiency = 1.5,
+            |f| f.ports = 1,
+            |f| f.backplane_factor = 0.0,
+            |f| f.id = "has space".into(),
+        ];
+        for broken in breakers {
+            let mut f = Fabric::gbe_flat();
+            broken(&mut f);
+            assert!(matches!(f.validate(), Err(CimoneError::InvalidFabric { .. })), "{f:?}");
+        }
+    }
+
+    #[test]
+    fn cluster_fit_is_a_typed_error() {
+        let f = Fabric::gbe_flat();
+        assert!(f.validate_cluster(16).is_ok());
+        match f.validate_cluster(17) {
+            Err(CimoneError::FabricTooSmall { fabric, ports, nodes }) => {
+                assert_eq!((fabric.as_str(), ports, nodes), ("gbe-flat", 16, 17));
+            }
+            other => panic!("expected FabricTooSmall, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn switch_and_collectives_carry_the_fabric_link() {
+        let f = Fabric::ten_gbe_flat();
+        let sw = f.switch();
+        assert_eq!(sw.ports, 32);
+        assert_eq!(sw.link, f.link);
+        assert_eq!(f.collectives(4).p, 4);
+    }
+
+    #[test]
+    fn custom_fabric_from_section_inherits_and_overrides() {
+        use crate::util::config::Config;
+        let cfg = Config::parse(
+            "[[fabric]]\nid = \"gbe-8to1\"\nbase = \"gbe-flat\"\nbackplane_factor = 0.125\nports = 48\n",
+        )
+        .unwrap();
+        let mut reg = FabricRegistry::builtin();
+        let f = reg.register_section(&cfg.table_arrays["fabric"][0]).unwrap();
+        assert_eq!(f.id, "gbe-8to1");
+        assert_eq!(f.ports, 48);
+        assert!((f.backplane_factor - 0.125).abs() < 1e-12);
+        // inherited wire
+        assert_eq!(f.link, Link::gbe());
+        assert_eq!(reg.get("gbe-8to1").unwrap().id, "gbe-8to1");
+    }
+
+    #[test]
+    fn custom_fabric_unknown_key_is_rejected() {
+        use crate::util::config::Config;
+        let cfg = Config::parse(
+            "[[fabric]]\nid = \"typo\"\nbase = \"gbe-flat\"\nprots = 48\n",
+        )
+        .unwrap();
+        let mut reg = FabricRegistry::builtin();
+        match reg.register_section(&cfg.table_arrays["fabric"][0]) {
+            Err(CimoneError::Spec(m)) => assert!(m.contains("unknown key `prots`"), "{m}"),
+            other => panic!("expected Spec error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn custom_fabric_bad_override_is_rejected() {
+        use crate::util::config::Config;
+        let cfg = Config::parse(
+            "[[fabric]]\nid = \"dud\"\nbase = \"gbe-flat\"\nefficiency = 2.0\n",
+        )
+        .unwrap();
+        let mut reg = FabricRegistry::builtin();
+        assert!(matches!(
+            reg.register_section(&cfg.table_arrays["fabric"][0]),
+            Err(CimoneError::InvalidFabric { .. })
+        ));
+    }
+}

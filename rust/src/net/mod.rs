@@ -4,11 +4,19 @@
 //! Fig 5's punchline depends on this substrate: the same 1 GbE that let
 //! MCv1 scale HPL almost linearly is "no longer sufficient" for MCv2's
 //! 100x-faster nodes — a pure compute/communication-ratio effect.
+//!
+//! The layer is data-driven: a [`Fabric`] (identity + [`Link`] +
+//! [`Switch`] topology parameters) is registered by id/alias in a
+//! [`FabricRegistry`] — `gbe-flat` (the paper), `ten-gbe-flat` (MCv3,
+//! arXiv 2605.22831) and the oversubscribed `gbe-oversub` ablation — and
+//! resolved wherever the stack used to hardcode `Link::gbe()`.
 
 pub mod collectives;
+pub mod fabric;
 pub mod link;
 pub mod topo;
 
 pub use collectives::Collectives;
+pub use fabric::{Fabric, FabricRegistry};
 pub use link::Link;
 pub use topo::Switch;

@@ -1,0 +1,328 @@
+//! Integration: the network layer, property-tested.
+//!
+//! `util::prop::forall` drives randomized checks over the collective
+//! cost models, the switch flow model and the fabric registry — the
+//! analytic invariants (monotonicity, closed-form bounds, permutation
+//! invariance, strict 10 GbE dominance) that the golden scenario suite
+//! relies on but cannot probe exhaustively. Byte counts are drawn as
+//! integer-valued f64 so per-port sums are exact and the permutation
+//! property can assert bit-for-bit equality.
+
+use cimone::coordinator::CampaignSpec;
+use cimone::error::CimoneError;
+use cimone::net::{Collectives, Fabric, FabricRegistry, Link, Switch};
+use cimone::util::prop::check;
+use cimone::util::rng::Rng;
+
+/// Random rank count in [2, 16] (the gbe-flat switch's port range).
+fn draw_p(rng: &mut Rng) -> usize {
+    rng.range_usize(2, 17)
+}
+
+/// Integer-valued payload in [1 B, ~2 GB]; the size class scales the
+/// magnitude so small payloads (latency-dominated) are probed first.
+fn draw_bytes(rng: &mut Rng, size: usize) -> f64 {
+    let cap = 1u64 << (8 + (size % 24)); // 256 B .. ~2 GB
+    rng.range_usize(1, cap as usize + 1) as f64
+}
+
+/// A set of non-loopback flows on a 16-port switch.
+fn draw_flows(rng: &mut Rng, size: usize) -> Vec<(usize, usize, f64)> {
+    let count = 1 + size.min(31);
+    (0..count)
+        .map(|_| {
+            let src = rng.range_usize(0, 16);
+            let mut dst = rng.range_usize(0, 16);
+            if dst == src {
+                dst = (dst + 1) % 16;
+            }
+            (src, dst, draw_bytes(rng, size))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// collectives: monotonicity + closed-form bounds
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_collectives_monotone_in_bytes_and_nonnegative() {
+    check(
+        "bcast/allreduce monotone + non-negative",
+        11,
+        400,
+        |rng: &mut Rng, size| {
+            let (a, b) = (draw_bytes(rng, size), draw_bytes(rng, size));
+            (draw_p(rng), a.min(b), a.max(b))
+        },
+        |&(p, lo, hi)| {
+            let c = Collectives::new(Link::gbe(), p);
+            let ops: [fn(&Collectives, f64) -> f64; 2] =
+                [Collectives::bcast, Collectives::allreduce];
+            for f in ops {
+                let (tlo, thi) = (f(&c, lo), f(&c, hi));
+                if !(tlo >= 0.0 && thi >= 0.0) {
+                    return Err(format!("negative time: {tlo} / {thi}"));
+                }
+                if tlo > thi {
+                    return Err(format!("p={p}: t({lo})={tlo} > t({hi})={thi}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bcast_crossover_never_exceeds_either_closed_form() {
+    // bcast picks min(binomial, pipelined ring); whatever the crossover
+    // point, it must never exceed either closed form
+    check(
+        "bcast <= binomial and <= ring",
+        13,
+        400,
+        |rng: &mut Rng, size| (draw_p(rng), draw_bytes(rng, size)),
+        |&(p, bytes)| {
+            let link = Link::gbe();
+            let t = Collectives::new(link, p).bcast(bytes);
+            let binomial = (p as f64).log2().ceil().max(1.0) * link.msg_time(bytes);
+            let ring = (p - 1) as f64 * link.latency_s + bytes / link.payload_bytes_per_sec();
+            if t > binomial {
+                return Err(format!("p={p} bytes={bytes}: {t} > binomial {binomial}"));
+            }
+            if t > ring {
+                return Err(format!("p={p} bytes={bytes}: {t} > ring {ring}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// switch flow model: flat-link lower bound + permutation invariance
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_flows_time_at_least_flat_link_time() {
+    // fan-in can only hurt: the switch can never beat each flow running
+    // alone on its own dedicated link
+    check(
+        "flows_time >= max flat msg_time",
+        17,
+        300,
+        draw_flows,
+        |flows: &Vec<(usize, usize, f64)>| {
+            let sw = Switch::monte_cimone();
+            let t = sw.flows_time(flows);
+            let flat = flows
+                .iter()
+                .map(|&(_, _, b)| sw.link.msg_time(b))
+                .fold(0.0f64, f64::max);
+            if t < flat {
+                return Err(format!("{t} < flat bound {flat} for {} flows", flows.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_flows_time_permutation_invariant() {
+    // integer byte counts make per-port sums exact, so reordering the
+    // flow list must not change the answer at all
+    check(
+        "flows_time order-independent",
+        19,
+        300,
+        draw_flows,
+        |flows: &Vec<(usize, usize, f64)>| {
+            let sw = Switch::monte_cimone();
+            let t = sw.flows_time(flows);
+            let mut reversed = flows.clone();
+            reversed.reverse();
+            let mut rotated = flows.clone();
+            rotated.rotate_left(flows.len() / 2);
+            let mut sorted = flows.clone();
+            sorted.sort_by(|a, b| a.2.total_cmp(&b.2).then(a.0.cmp(&b.0)).then(a.1.cmp(&b.1)));
+            for (label, perm) in
+                [("reversed", &reversed), ("rotated", &rotated), ("sorted", &sorted)]
+            {
+                let tp = sw.flows_time(perm);
+                if tp != t {
+                    return Err(format!("{label}: {tp} != {t}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ring_shift_reduces_to_flat_exchange_on_nonblocking_fabric() {
+    // the HPL projection swapped Collectives::exchange for
+    // Switch::ring_shift_time; on a non-blocking switch the two must be
+    // the *same* model (bit-for-bit — identical arithmetic), so the
+    // golden HPL numbers could not move
+    check(
+        "ring shift == flat exchange when non-blocking",
+        15,
+        300,
+        |rng: &mut Rng, size| (draw_p(rng), draw_bytes(rng, size)),
+        |&(p, bytes)| {
+            let flat = Collectives::new(Link::gbe(), p).exchange(bytes);
+            let switched = Fabric::gbe_flat().switch().ring_shift_time(p, bytes);
+            if switched != flat {
+                return Err(format!("p={p} bytes={bytes}: switch {switched} != flat {flat}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_oversubscribed_switch_never_beats_nonblocking() {
+    check(
+        "oversubscription only hurts",
+        23,
+        300,
+        draw_flows,
+        |flows: &Vec<(usize, usize, f64)>| {
+            let flat = Fabric::gbe_flat().switch().flows_time(flows);
+            let over = Fabric::gbe_oversub().switch().flows_time(flows);
+            if over < flat {
+                return Err(format!("oversub {over} < non-blocking {flat}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// 10 GbE strictly dominates 1 GbE
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_ten_gbe_strictly_dominates_gbe() {
+    let gbe = Fabric::gbe_flat();
+    let ten = Fabric::ten_gbe_flat();
+    check(
+        "10 GbE < 1 GbE on every payload",
+        29,
+        400,
+        |rng: &mut Rng, size| (draw_p(rng), draw_bytes(rng, size)),
+        |&(p, bytes)| {
+            let (cg, ct) = (gbe.collectives(p), ten.collectives(p));
+            for (label, a, b) in [
+                ("bcast", cg.bcast(bytes), ct.bcast(bytes)),
+                ("allreduce", cg.allreduce(bytes), ct.allreduce(bytes)),
+                ("msg", gbe.link.msg_time(bytes), ten.link.msg_time(bytes)),
+                (
+                    "gather",
+                    gbe.switch().gather_time(p, bytes),
+                    ten.switch().gather_time(p, bytes),
+                ),
+            ] {
+                if b >= a {
+                    return Err(format!("p={p} bytes={bytes}: 10GbE {label} {b} >= 1GbE {a}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// fabric registry + campaign-level typed errors
+// ---------------------------------------------------------------------
+
+#[test]
+fn builtin_fabric_registry_resolves_ids_and_aliases() {
+    let reg = FabricRegistry::builtin();
+    assert_eq!(reg.ids(), ["gbe-flat", "gbe-oversub", "ten-gbe-flat"]);
+    for (alias, id) in [("gbe", "gbe-flat"), ("1gbe", "gbe-flat"), ("10gbe", "ten-gbe-flat")] {
+        assert_eq!(reg.get(alias).unwrap().id, id);
+    }
+    match reg.get("myrinet") {
+        Err(CimoneError::UnknownFabric { id, known }) => {
+            assert_eq!(id, "myrinet");
+            assert!(known.contains("ten-gbe-flat"), "{known}");
+        }
+        other => panic!("expected UnknownFabric, got {other:?}"),
+    }
+}
+
+#[test]
+fn fleet_wider_than_the_switch_is_a_load_time_error() {
+    // satellite of rust/src/net/topo.rs's fixed `ports: 16`: a 17-node
+    // fleet on the paper's ToR switch is a typed error when the spec
+    // loads, not an index panic inside flows_time mid-campaign
+    let err = CampaignSpec::parse("[[fleet]]\nplatform = \"mcv2-pioneer\"\ncount = 17\n")
+        .unwrap_err();
+    match err {
+        CimoneError::FabricTooSmall { fabric, ports, nodes } => {
+            assert_eq!((fabric.as_str(), ports, nodes), ("gbe-flat", 16, 17));
+        }
+        other => panic!("expected FabricTooSmall, got {other:?}"),
+    }
+    // the 32-port 10 GbE fabric carries the same fleet
+    let spec = CampaignSpec::parse(
+        "[[fleet]]\nplatform = \"mcv2-pioneer\"\ncount = 17\nfabric = \"ten-gbe-flat\"\n",
+    )
+    .unwrap();
+    assert_eq!(spec.build_inventory().unwrap().nodes.len(), 17);
+}
+
+#[test]
+fn custom_fabric_spec_round_trips_and_misspellings_are_typed() {
+    let spec = CampaignSpec::parse(
+        "[[fabric]]\nid = \"gbe-8to1\"\nbase = \"gbe\"\nbackplane_factor = 0.125\n\n\
+         [[fleet]]\nplatform = \"mcv2-pioneer\"\ncount = 8\nfabric = \"gbe-8to1\"\n",
+    )
+    .unwrap();
+    assert_eq!(spec.fabric.as_deref(), Some("gbe-8to1"));
+    let back = CampaignSpec::parse(&spec.render()).unwrap();
+    assert_eq!(back, spec);
+
+    // a misspelled override key must not silently clone the base
+    let err = CampaignSpec::parse(
+        "[[fabric]]\nid = \"typo\"\nbase = \"gbe\"\nbackplan_factor = 0.125\n",
+    )
+    .unwrap_err();
+    assert!(
+        matches!(err, CimoneError::Spec(ref m) if m.contains("unknown key `backplan_factor`")),
+        "{err:?}"
+    );
+    // an invalid override is typed as InvalidFabric
+    let err = CampaignSpec::parse(
+        "[[fabric]]\nid = \"dud\"\nbase = \"gbe\"\nbackplane_factor = 2.0\n",
+    )
+    .unwrap_err();
+    assert!(matches!(err, CimoneError::InvalidFabric { .. }), "{err:?}");
+}
+
+#[test]
+fn shrink_lite_reports_a_failing_case_with_its_seed() {
+    // the harness itself: a deliberately false property must surface a
+    // concrete counterexample (guards the suite against vacuous passes)
+    use cimone::util::prop::{forall, PropResult};
+    let r = forall(
+        31,
+        200,
+        |rng: &mut Rng, size| draw_bytes(rng, size),
+        |&bytes| {
+            // false: claims every payload crosses 1 GbE in under 1 ms
+            if Link::gbe().msg_time(bytes) < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("{bytes} B too slow"))
+            }
+        },
+    );
+    match r {
+        PropResult::Fail { case, seed, .. } => {
+            assert_eq!(seed, 31);
+            assert!(Link::gbe().msg_time(case) >= 1e-3);
+        }
+        PropResult::Pass { .. } => panic!("property should have failed"),
+    }
+}

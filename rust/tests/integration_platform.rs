@@ -79,6 +79,7 @@ fn successor_estimates_are_finite_and_ordered_vs_mcv2() {
             cluster_nodes: 1,
             cores_per_node: cores,
             lib: None,
+            fabric: None,
         });
     }
     spec.validate_n = 48;

@@ -11,7 +11,7 @@ use std::fs;
 
 use cimone::arch::platform::PlatformRegistry;
 use cimone::coordinator::scenario::{
-    dry_run_matrix, run_matrix, MatrixAxes, ScenarioMatrix, ScenarioSpec,
+    dry_run_matrix, run_matrix, ComparisonReport, MatrixAxes, ScenarioMatrix, ScenarioSpec,
 };
 use cimone::coordinator::{driver, CampaignSpec, WorkloadSpec};
 use cimone::error::CimoneError;
@@ -136,6 +136,132 @@ fn builtin_generation_matrix_reproduces_the_paper_headline() {
     }
 }
 
+/// HPL scaling efficiency at `nodes` for one (platform, fabric) leg of
+/// the fabric-scaling matrix: GF/s at `nodes` over `nodes` x GF/s at 1.
+fn scaling_eff(report: &ComparisonReport, platform: &str, fabric: &str, nodes: usize) -> f64 {
+    let gf = |n: usize| -> f64 {
+        report
+            .outcome(&format!("{platform}/{n}n/{fabric}"))
+            .unwrap_or_else(|| panic!("missing scenario {platform}/{n}n/{fabric}"))
+            .hpl_gflops
+    };
+    gf(nodes) / (nodes as f64 * gf(1))
+}
+
+#[test]
+fn golden_fabric_scaling_matrix_reproduces_the_fig5_effect() {
+    // the paper's Fig 5 punchline, end to end through the sweep engine:
+    // MCv1 scales almost linearly on the 1 GbE it shipped with, MCv2's
+    // ~127x-faster nodes collapse on the same wire, and the MCv3-style
+    // 10 GbE fabric restores the scaling
+    let report = dry_run_matrix(&ScenarioMatrix::fabric_scaling()).unwrap();
+    assert_eq!(report.scenarios.len(), 16, "2 platforms x 4 widths x 2 fabrics");
+
+    let mcv1_gbe = scaling_eff(&report, "mcv1-u740", "gbe-flat", 8);
+    let mcv2_gbe = scaling_eff(&report, "mcv2-pioneer", "gbe-flat", 8);
+    let mcv2_ten = scaling_eff(&report, "mcv2-pioneer", "ten-gbe-flat", 8);
+    // "the 1 Gb/s network was sufficient for obtaining almost an HPL
+    // linear scaling" (MCv1)
+    assert!(mcv1_gbe >= 0.90, "MCv1 on 1 GbE: {mcv1_gbe:.3}");
+    // "... is no longer sufficient" (MCv2): materially below its own
+    // 10 GbE run of the same jobs
+    assert!(mcv2_gbe < 0.50, "MCv2 on 1 GbE: {mcv2_gbe:.3}");
+    assert!(
+        mcv2_ten >= 2.0 * mcv2_gbe,
+        "10 GbE {mcv2_ten:.3} must at least double 1 GbE {mcv2_gbe:.3}"
+    );
+    assert!(mcv2_ten > 0.65, "MCv2 on 10 GbE: {mcv2_ten:.3}");
+    // the fabric only matters once there is a wire: single-node runs are
+    // fabric-independent
+    for p in ["mcv1-u740", "mcv2-pioneer"] {
+        let a = report.outcome(&format!("{p}/1n/gbe-flat")).unwrap().hpl_gflops;
+        let b = report.outcome(&format!("{p}/1n/ten-gbe-flat")).unwrap().hpl_gflops;
+        assert_eq!(a, b, "{p}: single-node HPL must not depend on the fabric");
+    }
+    // efficiency decays monotonically with node count on every leg
+    for (p, f) in [
+        ("mcv1-u740", "gbe-flat"),
+        ("mcv1-u740", "ten-gbe-flat"),
+        ("mcv2-pioneer", "gbe-flat"),
+        ("mcv2-pioneer", "ten-gbe-flat"),
+    ] {
+        let effs: Vec<f64> = [1, 2, 4, 8].iter().map(|&n| scaling_eff(&report, p, f, n)).collect();
+        for w in effs.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "{p}/{f}: efficiency rose {w:?}");
+        }
+    }
+
+    // bit-for-bit rerun: the golden numbers cannot wander
+    let rerun = dry_run_matrix(&ScenarioMatrix::fabric_scaling()).unwrap();
+    assert_eq!(rerun, report);
+
+    // unknown fabric ids on the axis are typed errors at load time
+    let mut bad = ScenarioMatrix::fabric_scaling();
+    bad.axes.fabrics.push("infiniband".into());
+    assert!(matches!(
+        bad.expand(),
+        Err(CimoneError::UnknownFabric { ref id, .. }) if id == "infiniband"
+    ));
+}
+
+const FABRIC_ABLATION_SPEC: &str = r#"
+# MCv2 fleet, same jobs on the paper's 1 GbE vs the MCv3-style 10 GbE
+[campaign]
+validate_n = 48
+
+[[fabric]]
+id = "gbe-8to1"
+base = "gbe-flat"
+backplane_factor = 0.125
+
+[[fleet]]
+platform = "mcv2-pioneer"
+count = 8
+
+[[workload]]
+kind = "hpl"
+name = "hpl-8n"
+platform = "mcv2-pioneer"
+partition = "mcv2"
+nodes = 8
+cores_per_node = 64
+
+[matrix]
+fabrics = ["gbe-flat", "ten-gbe-flat", "gbe-8to1"]
+"#;
+
+#[test]
+fn golden_fabric_ablation_scenario_is_pinned_and_reproducible() {
+    let matrix = ScenarioMatrix::parse(FABRIC_ABLATION_SPEC).unwrap();
+    let report = run_matrix(&matrix).unwrap();
+    assert_eq!(report.scenarios.len(), 3);
+
+    // scaling-efficiency window: 8-node GF/s over 8x the single-node
+    // projection (the same number the hpl/model golden tests pin)
+    let single = cimone::hpl::model::cluster_hpl_gflops(
+        &cimone::hpl::model::ClusterConfig::hpl_default(
+            cimone::arch::platform::mcv2_pioneer(),
+            1,
+            64,
+        ),
+    );
+    let eff = |name: &str| report.outcome(name).unwrap().hpl_gflops / (8.0 * single);
+    let (gbe, ten, over) = (eff("gbe-flat"), eff("ten-gbe-flat"), eff("gbe-8to1"));
+    assert!((0.15..0.50).contains(&gbe), "MCv2 8-node on 1 GbE: {gbe:.3}");
+    assert!((0.65..1.0).contains(&ten), "MCv2 8-node on 10 GbE: {ten:.3}");
+    // the oversubscribed custom fabric is the worst of the three
+    assert!(over < gbe, "8:1 oversub {over:.3} !< flat {gbe:.3}");
+
+    // every scenario really ran (scheduled makespan, validated numerics)
+    for o in &report.scenarios {
+        assert!(o.makespan_s > 0.0, "{}", o.name);
+    }
+
+    // bit-for-bit rerun of the full pipeline
+    let rerun = run_matrix(&matrix).unwrap();
+    assert_eq!(rerun, report);
+}
+
 const SWEEP_SPEC: &str = r#"
 # MCv1-vs-MCv2 generation matrix (the paper's headline comparison)
 [campaign]
@@ -234,6 +360,7 @@ fn platform_campaign(platform_id: &str) -> CampaignSpec {
             cluster_nodes: nodes,
             cores_per_node: cores,
             lib: None,
+            fabric: None,
         });
     }
     spec.push(WorkloadSpec::Stream {
@@ -304,6 +431,7 @@ fn parallel_drain_matches_serial_on_a_mixed_generation_fleet() {
                 cluster_nodes: 1 + i % 2,
                 cores_per_node: cores,
                 lib: None,
+                fabric: None,
             });
         }
     }
@@ -362,11 +490,18 @@ fn campaign_and_matrix_specs_round_trip_through_render() {
 [campaign]
 validate_n = 48
 
+[[fabric]]
+id = "ten-gbe-oversub"
+base = "ten-gbe-flat"
+backplane_factor = 0.5
+ports = 48
+
 [[platform]]
 id = "sg2044-oc"
 base = "sg2044"
 freq_ghz = 3.0
 idle_w = 70.0
+default_fabric = "ten-gbe-oversub"
 
 [[fleet]]
 platform = "sg2044-oc"
@@ -387,6 +522,7 @@ partition = "sg2044"
 nodes = 2
 cores_per_node = 64
 lib = "openblas-c920"
+fabric = "ten-gbe-oversub"
 
 [[workload]]
 kind = "blis-ablation"
@@ -396,19 +532,28 @@ lib = "blis-opt"
 runtime_s = 120.5
 "#;
     let spec = CampaignSpec::parse(campaign_text).unwrap();
+    // the [[fabric]] section landed in the spec and the custom platform
+    // points its default at it
+    assert_eq!(spec.custom_fabrics.len(), 1);
+    assert_eq!(spec.build_inventory().unwrap().fabric.id, "ten-gbe-oversub");
     let back = CampaignSpec::parse(&spec.render()).unwrap();
     assert_eq!(back, spec);
 
-    // matrix side: the same base plus axes and an explicit scenario
+    // matrix side: the same base plus axes (fabrics included) and an
+    // explicit scenario pinning its own interconnect
     let matrix_text = format!(
-        "{campaign_text}\n[matrix]\nplatforms = [\"mcv1-u740\", \"mcv2-dual\"]\nworkloads = [\"hpl\"]\n\n\
-         [[scenario]]\nname = \"oc-rack\"\nplatform = \"sg2044-oc\"\ncount = 4\nlib = \"blis-lmul4\"\n"
+        "{campaign_text}\n[matrix]\nplatforms = [\"mcv1-u740\", \"mcv2-dual\"]\nworkloads = [\"hpl\"]\n\
+         fabrics = [\"gbe-flat\", \"ten-gbe-oversub\"]\n\n\
+         [[scenario]]\nname = \"oc-rack\"\nplatform = \"sg2044-oc\"\ncount = 4\nnodes = 4\nlib = \"blis-lmul4\"\n\
+         fabric = \"ten-gbe-oversub\"\n"
     );
     let matrix = ScenarioMatrix::parse(&matrix_text).unwrap();
     let back = ScenarioMatrix::parse(&matrix.render()).unwrap();
     assert_eq!(back, matrix);
 
-    // and the built-in generation matrix round-trips too
+    // and both built-in matrices round-trip too
     let gens = ScenarioMatrix::generations();
     assert_eq!(ScenarioMatrix::parse(&gens.render()).unwrap(), gens);
+    let fs = ScenarioMatrix::fabric_scaling();
+    assert_eq!(ScenarioMatrix::parse(&fs.render()).unwrap(), fs);
 }
