@@ -16,15 +16,16 @@ use cimone::isa::asm::render_program;
 use cimone::isa::exec::VecMachine;
 use cimone::isa::timing::CycleModel;
 use cimone::isa::translate::rvv10_to_thead;
-use cimone::ukernel::{MicroKernel, PanelLayout, UkernelId};
+use cimone::ukernel::{KernelRegistry, PanelLayout};
 use cimone::util::Matrix;
 
 fn main() {
     let kc = 2;
     let layout = PanelLayout::new(8, 4, kc);
+    let reg = KernelRegistry::builtin();
 
     // 1. the shipped kernel
-    let lmul1 = UkernelId::BlisLmul1.build();
+    let lmul1 = reg.get("blis-lmul1").unwrap();
     let prog10 = lmul1.program(layout);
     println!("--- BLIS rv64iv micro-kernel (RVV 1.0), kc={kc} ---");
     println!("{}\n", render_program(&prog10));
@@ -39,8 +40,8 @@ fn main() {
     let b = Matrix::random_hpl(kc, 4, 2);
     let c = Matrix::random_hpl(8, 4, 3);
     let mem = layout.pack(&a, &b, &c);
-    let mut m10 = VecMachine::new(128, layout.mem_words());
-    let mut m07 = VecMachine::new(128, layout.mem_words());
+    let mut m10 = VecMachine::new(128, layout.mem_words()).unwrap();
+    let mut m07 = VecMachine::new(128, layout.mem_words()).unwrap();
     m10.mem = mem.clone();
     m07.mem = mem;
     m10.run(&prog10).unwrap();
@@ -49,7 +50,7 @@ fn main() {
     println!("retrofit check: RVV 1.0 and 0.7.1 programs produce bitwise-equal C\n");
 
     // 4. the optimization
-    let lmul4 = UkernelId::BlisLmul4.build();
+    let lmul4 = reg.get("blis-lmul4").unwrap();
     let deep = PanelLayout::new(8, 4, 128);
     let p1 = lmul1.program(deep);
     let p4 = lmul4.program(deep);
@@ -71,8 +72,8 @@ fn main() {
     let a = Matrix::random_hpl(8, 128, 4);
     let b = Matrix::random_hpl(128, 4, 5);
     let c = Matrix::random_hpl(8, 4, 6);
-    let o1 = lmul1.run(&a, &b, &c, 128).unwrap();
-    let o4 = lmul4.run(&a, &b, &c, 128).unwrap();
+    let o1 = lmul1.run(&a, &b, &c).unwrap();
+    let o4 = lmul4.run(&a, &b, &c).unwrap();
     assert!(o1.allclose(&o4, 0.0, 0.0));
     println!("numerics check: both schedules produce bitwise-identical results");
 }

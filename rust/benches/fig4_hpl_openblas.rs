@@ -7,7 +7,7 @@
 use cimone::arch::presets;
 use cimone::blas::perf::PerfModel;
 use cimone::coordinator::report;
-use cimone::ukernel::{analysis, UkernelId};
+use cimone::ukernel::{analysis, KernelRegistry};
 use cimone::util::bench::Bench;
 
 fn main() {
@@ -16,11 +16,12 @@ fn main() {
 
     // the kernel-model numbers underneath the figure
     let core = presets::c920();
-    for id in [UkernelId::OpenblasGeneric, UkernelId::OpenblasC920] {
-        let p = analysis::analyze(id, &core);
+    let reg = KernelRegistry::builtin();
+    for id in ["openblas-generic", "openblas-c920"] {
+        let p = analysis::analyze(&reg.get(id).unwrap(), &core);
         println!(
             "{:<28} {:>6.2} insts/k-step {:>7.2} cyc/k-step {:>6.2} raw GF/s {:>6.2} eff GF/s",
-            format!("{id:?}"),
+            id,
             p.insts_per_kstep,
             p.cycles_per_kstep,
             p.raw_gflops,
@@ -30,10 +31,11 @@ fn main() {
 
     let b = Bench::default();
     let d = cimone::arch::platform::mcv2_pioneer();
+    let ob = reg.get("openblas-c920").unwrap();
     let m1 = b.run("PerfModel::new (cycle analysis)", || {
-        std::hint::black_box(PerfModel::new(&d, UkernelId::OpenblasC920));
+        std::hint::black_box(PerfModel::new(&d, std::sync::Arc::clone(&ob)));
     });
-    let pm = PerfModel::new(&d, UkernelId::OpenblasC920);
+    let pm = PerfModel::new(&d, ob);
     let m2 = b.run("node_gflops(64)", || {
         std::hint::black_box(pm.node_gflops(64));
     });

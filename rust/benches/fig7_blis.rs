@@ -5,7 +5,7 @@
 
 use cimone::arch::presets;
 use cimone::coordinator::report;
-use cimone::ukernel::{analysis, MicroKernel, PanelLayout, UkernelId};
+use cimone::ukernel::{analysis, KernelRegistry};
 use cimone::util::bench::Bench;
 use cimone::util::Matrix;
 
@@ -16,11 +16,12 @@ fn main() {
     // the micro-kernel story backing the figure
     let core = presets::c920();
     println!("micro-kernel analysis (C920 cycle model, KC=128):");
-    for id in [UkernelId::BlisLmul1, UkernelId::BlisLmul4, UkernelId::OpenblasC920] {
-        let p = analysis::analyze(id, &core);
+    let reg = KernelRegistry::builtin();
+    for id in ["blis-lmul1", "blis-lmul4", "openblas-c920"] {
+        let p = analysis::analyze(&reg.get(id).unwrap(), &core);
         println!(
             "  {:<26} {:>5.1} insts/k {:>6.1} cyc/k {:>5.2} flops/cyc {:>5.2} GF/s eff",
-            format!("{id:?}"),
+            id,
             p.insts_per_kstep,
             p.cycles_per_kstep,
             p.flops_per_cycle,
@@ -39,10 +40,10 @@ fn main() {
     let a = Matrix::random_hpl(8, 256, 1);
     let bm = Matrix::random_hpl(256, 4, 2);
     let c = Matrix::random_hpl(8, 4, 3);
-    for id in [UkernelId::BlisLmul1, UkernelId::BlisLmul4] {
-        let k = id.build();
-        let m = b.run(&format!("VecMachine exec {id:?} (kc=256)"), || {
-            std::hint::black_box(k.run(&a, &bm, &c, 128).unwrap());
+    for id in ["blis-lmul1", "blis-lmul4"] {
+        let k = reg.get(id).unwrap();
+        let m = b.run(&format!("VecMachine exec {id} (kc=256)"), || {
+            std::hint::black_box(k.run(&a, &bm, &c).unwrap());
         });
         println!("{}", m.report());
     }

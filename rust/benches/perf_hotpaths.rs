@@ -13,7 +13,7 @@ use cimone::arch::presets;
 use cimone::blas::blocking::Blocking;
 use cimone::cache::{simulate_gemm, GemmTraceConfig};
 use cimone::hpl::lu::{lu_blocked, native_update};
-use cimone::ukernel::{MicroKernel, UkernelId};
+use cimone::ukernel::KernelRegistry;
 use cimone::util::bench::Bench;
 use cimone::util::stats::hpl_flops;
 use cimone::util::Matrix;
@@ -24,12 +24,12 @@ fn main() {
     println!("=== perf hot paths ===");
 
     // --- ISA functional machine throughput ---
-    let k = UkernelId::BlisLmul4.build();
+    let k = KernelRegistry::builtin().get("blis-lmul4").unwrap();
     let a = Matrix::random_hpl(8, 256, 1);
     let bm = Matrix::random_hpl(256, 4, 2);
     let c = Matrix::random_hpl(8, 4, 3);
     let m = b.run("isa exec: lmul4 ukernel kc=256", || {
-        std::hint::black_box(k.run(&a, &bm, &c, 128).unwrap());
+        std::hint::black_box(k.run(&a, &bm, &c).unwrap());
     });
     // 256 k-steps x 12 insts + 9 fixed
     let insts = 256.0 * 12.0 + 9.0;

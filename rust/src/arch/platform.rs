@@ -30,7 +30,6 @@ use std::sync::Arc;
 use super::presets;
 use super::soc::SocDescriptor;
 use crate::error::CimoneError;
-use crate::ukernel::UkernelId;
 use crate::util::config::Section;
 
 /// Node power as idle + per-active-core dynamic draw (Monte Cimone has
@@ -92,8 +91,12 @@ pub struct Platform {
     pub host_prefix: String,
     /// OS image, as the fleet records it.
     pub os: String,
-    /// BLAS library HPL defaults to on this platform.
-    pub default_lib: UkernelId,
+    /// BLAS kernel registry id (or alias) HPL defaults to on this
+    /// platform — resolved against the
+    /// [`crate::ukernel::KernelRegistry`] (MCv1 runs the scalar
+    /// OpenBLAS, MCv2 the C920 asm, and the SG2044/MCv3 successors the
+    /// native RVV 1.0 BLIS tuning points).
+    pub default_lib: String,
     /// Interconnect fabric id (or alias) clusters of this platform hang
     /// off by default — resolved against the
     /// [`crate::net::FabricRegistry`] (MCv1/MCv2 ship on `gbe-flat`, the
@@ -130,6 +133,9 @@ impl Platform {
         }
         if self.default_fabric.is_empty() || self.default_fabric.contains(char::is_whitespace) {
             return Err(self.err("default_fabric must be non-empty and free of whitespace"));
+        }
+        if self.default_lib.is_empty() || self.default_lib.contains(char::is_whitespace) {
+            return Err(self.err("default_lib must be non-empty and free of whitespace"));
         }
         if self.desc.sockets.is_empty() {
             return Err(self.err("descriptor has no sockets"));
@@ -203,7 +209,7 @@ pub fn mcv1_u740() -> Platform {
         partition: "mcv1".into(),
         host_prefix: "mc".into(),
         os: "Ubuntu 21.04".into(),
-        default_lib: UkernelId::OpenblasGeneric,
+        default_lib: "openblas-generic".into(),
         default_fabric: "gbe-flat".into(),
         desc: presets::u740(),
         // U740 SoC ~5 W + board overhead
@@ -221,7 +227,7 @@ pub fn mcv2_pioneer() -> Platform {
         partition: "mcv2".into(),
         host_prefix: "mcv2".into(),
         os: "Fedora 38".into(),
-        default_lib: UkernelId::OpenblasC920,
+        default_lib: "openblas-c920".into(),
         default_fabric: "gbe-flat".into(),
         desc: presets::sg2042(),
         // SG2042 TDP ~120 W/socket; Pioneer box idles ~60 W
@@ -239,7 +245,7 @@ pub fn mcv2_dual() -> Platform {
         partition: "mcv2".into(),
         host_prefix: "mcv2".into(),
         os: "Fedora 38".into(),
-        default_lib: UkernelId::OpenblasC920,
+        default_lib: "openblas-c920".into(),
         default_fabric: "gbe-flat".into(),
         desc: presets::sg2042_dual(),
         power: PowerModel { idle_w: 110.0, per_core_active_w: 1.4 },
@@ -257,7 +263,9 @@ pub fn sg2044() -> Platform {
         partition: "sg2044".into(),
         host_prefix: "sg2044".into(),
         os: "Fedora 41".into(),
-        default_lib: UkernelId::OpenblasC920,
+        // arXiv 2508.13840: the C920v2 speaks ratified RVV 1.0 natively;
+        // the LMUL=2 deep-unroll BLIS tuning point is its best kernel
+        default_lib: "blis-rvv1-lmul2".into(),
         default_fabric: "gbe-flat".into(),
         desc: presets::sg2044(),
         // lower idle than the Pioneer (DDR5 PHY efficiency), hotter cores
@@ -277,7 +285,9 @@ pub fn mcv3() -> Platform {
         partition: "mcv3".into(),
         host_prefix: "mcv3".into(),
         os: "Fedora 41".into(),
-        default_lib: UkernelId::OpenblasC920,
+        // native RVV 1.0, LMUL=4: the dual-socket node's contended
+        // front end still rewards Fig 2b's minimal fetch bandwidth
+        default_lib: "blis-rvv1-lmul4".into(),
         // arXiv 2605.22831: MCv3 moves to 10 GbE precisely because the
         // 1 GbE fabric could no longer feed SG2042-class nodes
         default_fabric: "ten-gbe-flat".into(),
@@ -419,9 +429,11 @@ impl PlatformRegistry {
             ("partition", &mut p.partition),
             ("os", &mut p.os),
             ("host_prefix", &mut p.host_prefix),
-            // resolution against the fabric registry happens at campaign
-            // load time, where custom [[fabric]] sections are in scope
+            // resolution against the fabric/kernel registries happens at
+            // campaign load time, where custom [[fabric]] / [[kernel]]
+            // sections are in scope
             ("default_fabric", &mut p.default_fabric),
+            ("default_lib", &mut p.default_lib),
         ] {
             if let Some(v) = sec.get(key) {
                 *target = v
@@ -429,11 +441,6 @@ impl PlatformRegistry {
                     .ok_or_else(|| spec_err(format!("`{key}` must be a string")))?
                     .to_string();
             }
-        }
-        if let Some(v) = sec.get("default_lib") {
-            let s = v.as_str().ok_or_else(|| spec_err("`default_lib` must be a string".into()))?;
-            p.default_lib = UkernelId::parse(s)
-                .ok_or_else(|| spec_err(format!("unknown library `{s}`")))?;
         }
 
         let get_f64 = |key: &str| -> Result<Option<f64>, CimoneError> {

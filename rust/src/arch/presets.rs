@@ -23,6 +23,7 @@ pub fn c920() -> CoreModel {
         freq_hz: 2.0e9,
         issue_width: 2,
         vlen_bits: 128,
+        native_rvv10: false,
         vfma_lanes_per_cycle: 2,
         vinst_dispatch_cycles: 2.0,
         scalar_fma_per_cycle: 1.0,
@@ -41,6 +42,7 @@ pub fn c920v2() -> CoreModel {
         freq_hz: 2.6e9,
         issue_width: 2,
         vlen_bits: 128,
+        native_rvv10: true,
         vfma_lanes_per_cycle: 2,
         vinst_dispatch_cycles: 1.0,
         scalar_fma_per_cycle: 1.0,
@@ -59,6 +61,7 @@ pub fn u74() -> CoreModel {
         freq_hz: 1.0e9,
         issue_width: 2,
         vlen_bits: 0,
+        native_rvv10: false,
         vfma_lanes_per_cycle: 0,
         vinst_dispatch_cycles: 0.0,
         scalar_fma_per_cycle: 0.5,

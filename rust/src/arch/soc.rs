@@ -25,6 +25,12 @@ pub struct CoreModel {
     pub issue_width: usize,
     /// Vector register length in bits (0 = no vector unit).
     pub vlen_bits: usize,
+    /// Does the core speak ratified RVV 1.0 natively (C920v2 and later)?
+    /// `false` = the theadvector/0.7.1 era; meaningless when
+    /// `vlen_bits == 0`. Kernels tuned for the other dialect pay a port
+    /// tax in [`crate::ukernel::analysis`] (the paper's Section 3.3.1
+    /// retrofit, or the reverse port of hand-scheduled 0.7.1 asm).
+    pub native_rvv10: bool,
     /// FP64 lanes the vector FMA datapath retires per cycle.
     pub vfma_lanes_per_cycle: usize,
     /// Fixed dispatch/sequencing overhead, in cycles, charged per vector

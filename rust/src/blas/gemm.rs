@@ -56,7 +56,7 @@ pub fn gemm_acc(
                         bp.set_block(0, 0, &b.block(pc, jc + jr, kcb, nrb));
                         let mut cp = Matrix::zeros(bl.mr, bl.nr);
                         cp.set_block(0, 0, &c.block(ic + ir, jc + jr, mrb, nrb));
-                        let out = lib.kernel.run(&ap, &bp, &cp, 128)?;
+                        let out = lib.kernel.run(&ap, &bp, &cp)?;
                         c.set_block(ic + ir, jc + jr, &out.block(0, 0, mrb, nrb));
                     }
                 }
@@ -70,15 +70,16 @@ pub fn gemm_acc(
 mod tests {
     use super::*;
     use crate::arch::presets;
-    use crate::ukernel::UkernelId;
+    use crate::ukernel::KernelRegistry;
     use crate::util::prop;
     use crate::util::Rng;
 
-    fn lib(id: UkernelId) -> BlasLibrary {
-        BlasLibrary::for_socket(id, &presets::sg2042().sockets[0])
+    fn lib(id: &str) -> BlasLibrary {
+        let kernel = KernelRegistry::builtin().get(id).unwrap();
+        BlasLibrary::for_socket(kernel, &presets::sg2042().sockets[0])
     }
 
-    fn check_against_naive(id: UkernelId, m: usize, n: usize, k: usize, seed: u64) {
+    fn check_against_naive(id: &str, m: usize, n: usize, k: usize, seed: u64) {
         let l = lib(id);
         let a = Matrix::random_hpl(m, k, seed);
         let b = Matrix::random_hpl(k, n, seed + 1);
@@ -86,33 +87,33 @@ mod tests {
         let mut want = c.clone();
         gemm_acc(&l, &mut c, &a, &b).unwrap();
         Matrix::gemm_acc(&mut want, &a, &b);
-        assert!(c.allclose(&want, 1e-11, 1e-11), "{id:?} {m}x{n}x{k}");
+        assert!(c.allclose(&want, 1e-11, 1e-11), "{id} {m}x{n}x{k}");
     }
 
     #[test]
     fn all_libraries_aligned_sizes() {
-        for id in UkernelId::all() {
-            check_against_naive(id, 16, 16, 16, 100);
+        for id in KernelRegistry::builtin().ids() {
+            check_against_naive(&id, 16, 16, 16, 100);
         }
     }
 
     #[test]
     fn ragged_edges_all_libraries() {
-        for id in UkernelId::all() {
-            check_against_naive(id, 13, 7, 9, 200);
+        for id in KernelRegistry::builtin().ids() {
+            check_against_naive(&id, 13, 7, 9, 200);
         }
     }
 
     #[test]
     fn tall_skinny_and_wide() {
-        check_against_naive(UkernelId::BlisLmul4, 40, 3, 5, 300);
-        check_against_naive(UkernelId::OpenblasC920, 3, 40, 5, 301);
-        check_against_naive(UkernelId::OpenblasGeneric, 5, 3, 40, 302);
+        check_against_naive("blis-lmul4", 40, 3, 5, 300);
+        check_against_naive("openblas-c920", 3, 40, 5, 301);
+        check_against_naive("openblas-generic", 5, 3, 40, 302);
     }
 
     #[test]
     fn shape_mismatch_is_error() {
-        let l = lib(UkernelId::BlisLmul4);
+        let l = lib("blis-lmul4");
         let a = Matrix::zeros(4, 4);
         let b = Matrix::zeros(5, 4);
         let mut c = Matrix::zeros(4, 4);
@@ -135,7 +136,7 @@ mod tests {
                 )
             },
             |&(m, n, k, seed)| {
-                let l = lib(UkernelId::BlisLmul4);
+                let l = lib("blis-lmul4");
                 let a = Matrix::random_hpl(m, k, seed);
                 let b = Matrix::random_hpl(k, n, seed ^ 1);
                 let mut c = Matrix::random_hpl(m, n, seed ^ 2);

@@ -1,36 +1,33 @@
-//! The four BLAS libraries of the paper's evaluation, as (micro-kernel,
-//! blocking) pairs with a uniform interface.
+//! A BLAS library instance: one registered micro-kernel descriptor
+//! paired with the blocking its policy derives for a concrete socket.
+
+use std::sync::Arc;
 
 use super::blocking::Blocking;
 use crate::arch::soc::Socket;
-use crate::ukernel::{MicroKernel, UkernelId};
+use crate::ukernel::{BlockingPolicy, KernelDescriptor};
 
-/// A BLAS library = micro-kernel + blocking policy + metadata.
+/// A BLAS library = micro-kernel descriptor + derived blocking.
 pub struct BlasLibrary {
-    pub id: UkernelId,
-    pub kernel: Box<dyn MicroKernel>,
+    pub kernel: Arc<KernelDescriptor>,
     pub blocking: Blocking,
 }
 
 impl BlasLibrary {
-    /// Instantiate a library for a given socket (blocking derives from the
-    /// cache geometry for BLIS, is fixed for OpenBLAS).
-    pub fn for_socket(id: UkernelId, socket: &Socket) -> BlasLibrary {
-        let kernel = id.build();
+    /// Instantiate a library for a given socket; the blocking follows
+    /// the descriptor's policy (BLIS derives analytically from the
+    /// cache hierarchy, OpenBLAS ships fixed x86-tuned parameters).
+    pub fn for_socket(kernel: Arc<KernelDescriptor>, socket: &Socket) -> BlasLibrary {
         let (mr, nr) = kernel.tile();
-        let blocking = match id {
-            // BLIS derives blocking analytically from the cache hierarchy
-            UkernelId::BlisLmul1 | UkernelId::BlisLmul4 => Blocking::blis_for(socket, mr, nr),
-            // OpenBLAS ships fixed parameters tuned elsewhere
-            UkernelId::OpenblasGeneric | UkernelId::OpenblasC920 => {
-                Blocking::openblas_fixed(mr, nr)
-            }
+        let blocking = match kernel.blocking {
+            BlockingPolicy::CacheDerived => Blocking::blis_for(socket, mr, nr),
+            BlockingPolicy::Fixed => Blocking::openblas_fixed(mr, nr),
         };
-        BlasLibrary { id, kernel, blocking }
+        BlasLibrary { kernel, blocking }
     }
 
-    pub fn label(&self) -> &'static str {
-        self.id.label()
+    pub fn label(&self) -> &str {
+        &self.kernel.label
     }
 }
 
@@ -38,12 +35,14 @@ impl BlasLibrary {
 mod tests {
     use super::*;
     use crate::arch::presets;
+    use crate::ukernel::KernelRegistry;
 
     #[test]
     fn blis_and_openblas_blockings_differ() {
+        let reg = KernelRegistry::builtin();
         let s = &presets::sg2042().sockets[0];
-        let blis = BlasLibrary::for_socket(UkernelId::BlisLmul4, s);
-        let ob = BlasLibrary::for_socket(UkernelId::OpenblasC920, s);
+        let blis = BlasLibrary::for_socket(reg.get("blis-lmul4").unwrap(), s);
+        let ob = BlasLibrary::for_socket(reg.get("openblas-c920").unwrap(), s);
         assert_ne!(blis.blocking, ob.blocking);
         // the Fig-6 premise: BLIS's working set fits the per-cluster L2
         let l2_share = s.l2.size_bytes / s.l2.shared_by;
@@ -53,9 +52,10 @@ mod tests {
 
     #[test]
     fn tiles_match_kernels() {
+        let reg = KernelRegistry::builtin();
         let s = &presets::sg2042().sockets[0];
-        for id in UkernelId::all() {
-            let lib = BlasLibrary::for_socket(id, s);
+        for k in reg.kernels() {
+            let lib = BlasLibrary::for_socket(Arc::clone(k), s);
             let (mr, nr) = lib.kernel.tile();
             assert_eq!((lib.blocking.mr, lib.blocking.nr), (mr, nr));
         }

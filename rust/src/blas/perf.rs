@@ -19,27 +19,39 @@
 //!    (0.88, giving the paper's 1.76x dual/single ratio).
 //!
 //! All three constants live in the platform's [`PerfCalib`] — the model
-//! itself is platform-agnostic and works for any registered platform.
+//! itself is platform- AND kernel-agnostic: any registered
+//! [`KernelDescriptor`] models on any registered platform.
+
+use std::sync::Arc;
 
 use crate::arch::platform::{PerfCalib, Platform};
 use crate::arch::soc::SocDescriptor;
+use crate::error::CimoneError;
 use crate::ukernel::analysis;
-use crate::ukernel::UkernelId;
+use crate::ukernel::{KernelDescriptor, KernelRegistry};
 
 /// Node-level performance model for one library on one platform.
 pub struct PerfModel<'a> {
     pub desc: &'a SocDescriptor,
     pub calib: PerfCalib,
-    pub lib: UkernelId,
+    pub lib: Arc<KernelDescriptor>,
     /// Per-core effective DGEMM GFLOP/s at 1 core (cycle model output).
     pub per_core_gflops: f64,
 }
 
 impl<'a> PerfModel<'a> {
-    pub fn new(platform: &'a Platform, lib: UkernelId) -> Self {
+    pub fn new(platform: &'a Platform, lib: Arc<KernelDescriptor>) -> Self {
         let core = &platform.desc.sockets[0].core;
-        let per_core_gflops = analysis::analyze(lib, core).effective_gflops;
+        let per_core_gflops = analysis::analyze(&lib, core).effective_gflops;
         PerfModel { desc: &platform.desc, calib: platform.calib, lib, per_core_gflops }
+    }
+
+    /// [`PerfModel::new`] with the kernel resolved from the *built-in*
+    /// registry by id or alias (typed [`CimoneError::UnknownKernel`]
+    /// otherwise). Campaign paths resolve against their own registry —
+    /// custom `[[kernel]]` sections included — and use `new` directly.
+    pub fn by_id(platform: &'a Platform, lib: &str) -> Result<Self, CimoneError> {
+        Ok(PerfModel::new(platform, KernelRegistry::builtin().get(lib)?))
     }
 
     /// Combined scaling factor at `n` active cores on one socket.
@@ -50,8 +62,7 @@ impl<'a> PerfModel<'a> {
         let base = 1.0 / (1.0 + self.calib.smp_alpha * (n as f64 - 1.0));
         let socket = &self.desc.sockets[0];
         let bw = socket.mem.attainable_bw();
-        let demand =
-            self.per_core_gflops * 1e9 * self.calib.traffic_bytes_per_flop * n as f64;
+        let demand = self.per_core_gflops * 1e9 * self.calib.traffic_bytes_per_flop * n as f64;
         let excess = ((demand - bw) / bw).max(0.0);
         base / (1.0 + self.calib.bw_gamma * excess)
     }
@@ -88,8 +99,8 @@ mod tests {
     #[test]
     fn fig4_one_core_rates() {
         let d = mcv2_pioneer();
-        let opt = PerfModel::new(&d, UkernelId::OpenblasC920).node_gflops(1);
-        let gen = PerfModel::new(&d, UkernelId::OpenblasGeneric).node_gflops(1);
+        let opt = PerfModel::by_id(&d, "openblas-c920").unwrap().node_gflops(1);
+        let gen = PerfModel::by_id(&d, "openblas-generic").unwrap().node_gflops(1);
         assert!((2.9..3.5).contains(&opt), "opt 1-core {opt:.2}");
         let ratio = gen / opt;
         assert!((0.60..0.76).contains(&ratio), "generic/opt @1 core {ratio:.3}");
@@ -99,10 +110,10 @@ mod tests {
     fn fig4_sixty_four_core_node() {
         // paper: MCv2 single-socket HPL ~ 244.9/1.76 ~ 139 Gflop/s
         let d = mcv2_pioneer();
-        let opt = PerfModel::new(&d, UkernelId::OpenblasC920).node_gflops(64);
+        let opt = PerfModel::by_id(&d, "openblas-c920").unwrap().node_gflops(64);
         assert!((125.0..155.0).contains(&opt), "64-core optimized {opt:.1}");
         // "which increases to 89% of the optimized one"
-        let gen = PerfModel::new(&d, UkernelId::OpenblasGeneric).node_gflops(64);
+        let gen = PerfModel::by_id(&d, "openblas-generic").unwrap().node_gflops(64);
         let ratio = gen / opt;
         assert!((0.82..0.95).contains(&ratio), "generic/opt @64 {ratio:.3}");
     }
@@ -110,12 +121,12 @@ mod tests {
     #[test]
     fn fig4_relative_degradation_at_full_cores() {
         // both libraries lose per-core efficiency at 64 cores
-        for id in [UkernelId::OpenblasC920, UkernelId::OpenblasGeneric] {
+        for id in ["openblas-c920", "openblas-generic"] {
             let d = mcv2_pioneer();
-            let m = PerfModel::new(&d, id);
+            let m = PerfModel::by_id(&d, id).unwrap();
             let eff64 = m.node_gflops(64) / 64.0;
             let eff1 = m.node_gflops(1);
-            assert!(eff64 < 0.92 * eff1, "{id:?}: {eff64:.2} vs {eff1:.2}");
+            assert!(eff64 < 0.92 * eff1, "{id}: {eff64:.2} vs {eff1:.2}");
         }
     }
 
@@ -123,9 +134,9 @@ mod tests {
     fn fig7_128_core_numbers() {
         // paper: OpenBLAS-opt 244.9, BLIS-vanilla 165.0, BLIS-opt 245.8
         let d = mcv2_dual();
-        let ob = PerfModel::new(&d, UkernelId::OpenblasC920).node_gflops(128);
-        let bv = PerfModel::new(&d, UkernelId::BlisLmul1).node_gflops(128);
-        let bo = PerfModel::new(&d, UkernelId::BlisLmul4).node_gflops(128);
+        let ob = PerfModel::by_id(&d, "openblas-c920").unwrap().node_gflops(128);
+        let bv = PerfModel::by_id(&d, "blis-lmul1").unwrap().node_gflops(128);
+        let bo = PerfModel::by_id(&d, "blis-lmul4").unwrap().node_gflops(128);
         assert!((225.0..265.0).contains(&ob), "openblas-opt {ob:.1}");
         assert!((150.0..180.0).contains(&bv), "blis-vanilla {bv:.1}");
         assert!((225.0..265.0).contains(&bo), "blis-opt {bo:.1}");
@@ -141,8 +152,8 @@ mod tests {
         // paper: dual-socket node = 1.76x single-socket node
         let d1 = mcv2_pioneer();
         let d2 = mcv2_dual();
-        let s = PerfModel::new(&d1, UkernelId::OpenblasC920).node_gflops(64);
-        let d = PerfModel::new(&d2, UkernelId::OpenblasC920).node_gflops(128);
+        let s = PerfModel::by_id(&d1, "openblas-c920").unwrap().node_gflops(64);
+        let d = PerfModel::by_id(&d2, "openblas-c920").unwrap().node_gflops(128);
         let ratio = d / s;
         assert!((1.70..1.82).contains(&ratio), "dual/single {ratio:.3}");
     }
@@ -152,8 +163,8 @@ mod tests {
         // paper abstract: "127x on HPL DP FLOP/s" node-vs-node
         let v1 = mcv1_u740();
         let v2 = mcv2_dual();
-        let old = PerfModel::new(&v1, UkernelId::OpenblasGeneric).node_gflops(4);
-        let new = PerfModel::new(&v2, UkernelId::OpenblasC920).node_gflops(128);
+        let old = PerfModel::by_id(&v1, "openblas-generic").unwrap().node_gflops(4);
+        let new = PerfModel::by_id(&v2, "openblas-c920").unwrap().node_gflops(128);
         let ratio = new / old;
         assert!((100.0..160.0).contains(&ratio), "HPL uplift {ratio:.0}x (old={old:.2})");
     }
@@ -162,7 +173,7 @@ mod tests {
     fn mcv1_node_matches_cluster_math() {
         // 8 MCv1 nodes reached ~13 Gflop/s => ~1.6 per node
         let v1 = mcv1_u740();
-        let node = PerfModel::new(&v1, UkernelId::OpenblasGeneric).node_gflops(4);
+        let node = PerfModel::by_id(&v1, "openblas-generic").unwrap().node_gflops(4);
         assert!((1.3..2.0).contains(&node), "MCv1 node {node:.2}");
     }
 
@@ -173,20 +184,46 @@ mod tests {
         let old = mcv2_pioneer();
         let new = sg2044();
         for cores in [1usize, 16, 64] {
-            let o = PerfModel::new(&old, UkernelId::OpenblasC920).node_gflops(cores);
-            let n = PerfModel::new(&new, UkernelId::OpenblasC920).node_gflops(cores);
+            let o = PerfModel::by_id(&old, "openblas-c920").unwrap().node_gflops(cores);
+            let n = PerfModel::by_id(&new, "openblas-c920").unwrap().node_gflops(cores);
             assert!(n.is_finite() && n > o, "at {cores} cores: sg2044 {n:.1} vs sg2042 {o:.1}");
         }
         // and the MCv3 dual-socket projection clears the SR1
-        let d_old = PerfModel::new(&mcv2_dual(), UkernelId::OpenblasC920).node_gflops(128);
-        let d_new = PerfModel::new(&mcv3(), UkernelId::OpenblasC920).node_gflops(128);
+        let d_old = PerfModel::by_id(&mcv2_dual(), "openblas-c920").unwrap().node_gflops(128);
+        let d_new = PerfModel::by_id(&mcv3(), "openblas-c920").unwrap().node_gflops(128);
         assert!(d_new > d_old, "mcv3 {d_new:.1} vs mcv2-dual {d_old:.1}");
+    }
+
+    #[test]
+    fn native_kernel_is_the_sg2044_node_winner() {
+        // the blas-tuning premise at node level: the native RVV 1.0
+        // tuning point clears every 0.7.1-era kernel on the C920v2
+        let p = sg2044();
+        let native = PerfModel::by_id(&p, "blis-rvv1-lmul2").unwrap().node_gflops(64);
+        for other in ["openblas-c920", "blis-lmul1", "blis-lmul4", "openblas-generic"] {
+            let o = PerfModel::by_id(&p, other).unwrap().node_gflops(64);
+            assert!(native > o, "{other}: {o:.1} !< native {native:.1}");
+        }
+        // while the SG2042's LMUL=4 > LMUL=1 ordering stays the paper's
+        let old = mcv2_pioneer();
+        let v1 = PerfModel::by_id(&old, "blis-lmul1").unwrap().node_gflops(64);
+        let v4 = PerfModel::by_id(&old, "blis-lmul4").unwrap().node_gflops(64);
+        assert!(v4 > 1.3 * v1, "{v4:.1} vs {v1:.1}");
+    }
+
+    #[test]
+    fn unknown_kernel_id_is_typed() {
+        let d = mcv2_pioneer();
+        assert!(matches!(
+            PerfModel::by_id(&d, "mkl"),
+            Err(CimoneError::UnknownKernel { ref name, .. }) if name == "mkl"
+        ));
     }
 
     #[test]
     fn sigma_monotone_nonincreasing() {
         let d = mcv2_pioneer();
-        let m = PerfModel::new(&d, UkernelId::OpenblasC920);
+        let m = PerfModel::by_id(&d, "openblas-c920").unwrap();
         let mut last = f64::INFINITY;
         for n in [1, 2, 4, 8, 16, 32, 48, 64] {
             let s = m.sigma(n);
@@ -199,7 +236,7 @@ mod tests {
     #[test]
     fn zero_cores_zero_gflops() {
         let d = mcv2_pioneer();
-        let m = PerfModel::new(&d, UkernelId::BlisLmul4);
+        let m = PerfModel::by_id(&d, "blis-lmul4").unwrap();
         assert_eq!(m.node_gflops(0), 0.0);
         assert_eq!(m.sigma(0), 0.0);
     }
@@ -207,7 +244,7 @@ mod tests {
     #[test]
     fn cores_clamped_to_node() {
         let d = mcv2_pioneer();
-        let m = PerfModel::new(&d, UkernelId::BlisLmul4);
+        let m = PerfModel::by_id(&d, "blis-lmul4").unwrap();
         assert_eq!(m.node_gflops(64), m.node_gflops(9999));
     }
 }

@@ -15,6 +15,7 @@ use crate::arch::platform::PlatformRegistry;
 use crate::error::CimoneError;
 use crate::net::{Fabric, FabricRegistry};
 use crate::sched::{Partition, Scheduler};
+use crate::ukernel::KernelRegistry;
 
 /// The paper's fleet as a spec: `(platform id, node count)`.
 pub const PAPER_FLEET: &[(&str, usize)] =
@@ -31,6 +32,10 @@ pub struct Inventory {
     /// `[[fabric]]` definitions of the campaign spec that built this
     /// inventory); per-workload overrides resolve here.
     pub fabrics: FabricRegistry,
+    /// Micro-kernel registry workload `lib =` keys and platform
+    /// `default_lib`s resolve against (built-ins plus any `[[kernel]]`
+    /// definitions of the campaign spec that built this inventory).
+    pub kernels: KernelRegistry,
 }
 
 impl Inventory {
@@ -44,17 +49,26 @@ impl Inventory {
         registry: &PlatformRegistry,
         fleet: &[(S, usize)],
     ) -> Result<Inventory, CimoneError> {
-        Inventory::from_fleet_on(registry, &FabricRegistry::builtin(), fleet, None)
+        Inventory::from_fleet_on(
+            registry,
+            &FabricRegistry::builtin(),
+            &KernelRegistry::builtin(),
+            fleet,
+            None,
+        )
     }
 
-    /// [`Inventory::from_fleet`] with an explicit fabric registry and an
-    /// optional machine-fabric id (falling back to the first platform's
+    /// [`Inventory::from_fleet`] with explicit fabric and kernel
+    /// registries (the campaign layer passes its own, custom
+    /// `[[fabric]]`/`[[kernel]]` sections included) and an optional
+    /// machine-fabric id (falling back to the first platform's
     /// `default_fabric`, then to the paper's `gbe-flat`). Checks the
     /// switch has a port per node ([`CimoneError::FabricTooSmall`]) so
     /// the flow model never sees an out-of-range rank.
     pub fn from_fleet_on<S: AsRef<str>>(
         registry: &PlatformRegistry,
         fabrics: &FabricRegistry,
+        kernels: &KernelRegistry,
         fleet: &[(S, usize)],
         fabric: Option<&str>,
     ) -> Result<Inventory, CimoneError> {
@@ -79,7 +93,13 @@ impl Inventory {
         };
         let fabric = fabrics.get(&fabric_id)?;
         fabric.validate_cluster(nodes.len())?;
-        Ok(Inventory { nodes, fabric, fabrics: fabrics.clone() })
+        // every node platform's default kernel must resolve — the same
+        // load-time guarantee the fabric gets, so estimation never hits
+        // an UnknownKernel the spec could have caught
+        for n in &nodes {
+            kernels.get(&n.platform.default_lib)?;
+        }
+        Ok(Inventory { nodes, fabric, fabrics: fabrics.clone(), kernels: kernels.clone() })
     }
 
     /// Node by *id* (not vector position — the two coincide in the
@@ -200,6 +220,14 @@ mod tests {
     }
 
     #[test]
+    fn inventory_carries_the_builtin_kernel_registry() {
+        let inv = monte_cimone_v2();
+        assert!(inv.kernels.contains("blis-lmul4"));
+        assert!(inv.kernels.contains("blis-opt")); // aliases resolve too
+        assert!(!inv.kernels.contains("mkl"));
+    }
+
+    #[test]
     fn fleet_fabric_defaults_to_the_leading_platforms_interconnect() {
         // the paper fleet rides the 1 GbE ToR; an MCv3 fleet its 10 GbE
         assert_eq!(monte_cimone_v2().fabric.id, "gbe-flat");
@@ -214,6 +242,7 @@ mod tests {
         let inv = Inventory::from_fleet_on(
             &reg,
             &FabricRegistry::builtin(),
+            &KernelRegistry::builtin(),
             &[("mcv2-pioneer", 4)],
             Some("10gbe"), // alias resolves too
         )
@@ -233,6 +262,7 @@ mod tests {
             Inventory::from_fleet_on(
                 &reg,
                 &FabricRegistry::builtin(),
+                &KernelRegistry::builtin(),
                 &[("mcv2-pioneer", 2)],
                 Some("infiniband"),
             ),

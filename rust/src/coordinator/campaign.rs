@@ -27,6 +27,11 @@
 //! base = "gbe-flat"        # any registered fabric id or alias
 //! backplane_factor = 0.125 # see net::fabric for all override keys
 //!
+//! [[kernel]]               # optional: derive a custom BLAS micro-kernel
+//! id = "blis-rvv1-u8"
+//! base = "blis-rvv1-lmul2" # any registered kernel id or alias
+//! k_unroll = 8             # see ukernel::registry for all override keys
+//!
 //! [[fleet]]                # optional: the machine to simulate;
 //! platform = "sg2044"      # omitted => the paper's 12-node fleet
 //! count = 4
@@ -67,7 +72,7 @@ use crate::arch::platform::{Platform, PlatformRegistry};
 use crate::cluster::inventory::{Inventory, PAPER_FLEET};
 use crate::error::CimoneError;
 use crate::net::{Fabric, FabricRegistry};
-use crate::ukernel::UkernelId;
+use crate::ukernel::{KernelDescriptor, KernelRegistry};
 use crate::util::config::{Config, Section, Value};
 
 use super::workload::{BlisAblationWorkload, HplWorkload, StreamWorkload, Workload};
@@ -84,7 +89,9 @@ pub enum WorkloadSpec {
         platform: String,
         cluster_nodes: usize,
         cores_per_node: usize,
-        lib: Option<UkernelId>,
+        /// Kernel override (registry id); `None` uses the platform's
+        /// `default_lib`.
+        lib: Option<String>,
         /// Fabric override (registry id); `None` rides the machine fabric.
         fabric: Option<String>,
     },
@@ -92,7 +99,8 @@ pub enum WorkloadSpec {
         name: String,
         partition: String,
         platform: String,
-        lib: UkernelId,
+        /// Kernel registry id of the ablated micro-kernel.
+        lib: String,
         cores: usize,
         runtime_s: f64,
     },
@@ -285,7 +293,7 @@ impl WorkloadSpec {
                      cores_per_node = {cores_per_node}\n"
                 );
                 if let Some(lib) = lib {
-                    s.push_str(&format!("lib = \"{}\"\n", lib.spec_name()));
+                    s.push_str(&format!("lib = \"{lib}\"\n"));
                 }
                 if let Some(fabric) = fabric {
                     s.push_str(&format!("fabric = \"{fabric}\"\n"));
@@ -295,9 +303,8 @@ impl WorkloadSpec {
             WorkloadSpec::BlisAblation { name, partition, platform, lib, cores, runtime_s } => {
                 format!(
                     "[[workload]]\nkind = \"blis-ablation\"\nname = \"{name}\"\n\
-                     platform = \"{platform}\"\npartition = \"{partition}\"\nlib = \"{}\"\n\
+                     platform = \"{platform}\"\npartition = \"{partition}\"\nlib = \"{lib}\"\n\
                      cores = {cores}\nruntime_s = {}\n",
-                    lib.spec_name(),
                     fmt_float(*runtime_s)
                 )
             }
@@ -391,17 +398,15 @@ fn req_platform(sec: &Section, who: &str) -> Result<String, CimoneError> {
     })
 }
 
-fn opt_lib(sec: &Section, who: &str) -> Result<Option<UkernelId>, CimoneError> {
+/// The raw `lib =` key; canonicalization against the spec's kernel
+/// registry (aliases -> id, unknown -> typed `UnknownKernel`) happens in
+/// `CampaignSpec::from_config`, where custom `[[kernel]]`s are in scope.
+fn opt_lib(sec: &Section, who: &str) -> Result<Option<String>, CimoneError> {
     match sec.get("lib") {
         None => Ok(None),
-        Some(v) => {
-            let s = v.as_str().ok_or_else(|| {
-                CimoneError::Spec(format!("workload `{who}`: `lib` must be a string"))
-            })?;
-            UkernelId::parse(s)
-                .map(Some)
-                .ok_or_else(|| CimoneError::Spec(format!("workload `{who}`: unknown library `{s}`")))
-        }
+        Some(v) => v.as_str().map(|s| Some(s.to_string())).ok_or_else(|| {
+            CimoneError::Spec(format!("workload `{who}`: `lib` must be a string"))
+        }),
     }
 }
 
@@ -425,6 +430,16 @@ pub struct FabricDef {
     pub fabric: Fabric,
 }
 
+/// One `[[kernel]]` definition: the derived [`KernelDescriptor`] plus
+/// the base it was derived from, kept so the spec can render itself
+/// back to config text as `base` + overrides.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelDef {
+    /// Registry id (or alias) the kernel derives from.
+    pub base: String,
+    pub kernel: KernelDescriptor,
+}
+
 /// A full campaign: ordered workloads, the fleet they run on, and the
 /// validation problem size.
 #[derive(Debug, Clone, PartialEq)]
@@ -445,6 +460,9 @@ pub struct CampaignSpec {
     /// Fabrics defined by `[[fabric]]` sections, registered on top of
     /// the built-ins when the spec builds its fabric registry.
     pub custom_fabrics: Vec<FabricDef>,
+    /// Micro-kernels defined by `[[kernel]]` sections, registered on
+    /// top of the built-ins when the spec builds its kernel registry.
+    pub custom_kernels: Vec<KernelDef>,
 }
 
 impl Default for CampaignSpec {
@@ -456,6 +474,7 @@ impl Default for CampaignSpec {
             custom_platforms: Vec::new(),
             fabric: None,
             custom_fabrics: Vec::new(),
+            custom_kernels: Vec::new(),
         }
     }
 }
@@ -497,14 +516,7 @@ impl CampaignSpec {
             });
         }
         for (name, partition, nodes, platform, cores_per_node, lib) in [
-            (
-                "hpl-mcv1-full",
-                "mcv1",
-                8usize,
-                "mcv1-u740",
-                4usize,
-                Some(UkernelId::OpenblasGeneric),
-            ),
+            ("hpl-mcv1-full", "mcv1", 8usize, "mcv1-u740", 4usize, Some("openblas-generic")),
             ("hpl-mcv2-1s", "mcv2", 1, "mcv2-pioneer", 64, None),
             ("hpl-mcv2-2n", "mcv2", 2, "mcv2-pioneer", 64, None),
             ("hpl-mcv2-2s", "mcv2", 1, "mcv2-dual", 128, None),
@@ -516,19 +528,16 @@ impl CampaignSpec {
                 platform: platform.into(),
                 cluster_nodes: nodes,
                 cores_per_node,
-                lib,
+                lib: lib.map(str::to_string),
                 fabric: None,
             });
         }
-        for (name, lib) in [
-            ("hpl-blis-vanilla", UkernelId::BlisLmul1),
-            ("hpl-blis-opt", UkernelId::BlisLmul4),
-        ] {
+        for (name, lib) in [("hpl-blis-vanilla", "blis-lmul1"), ("hpl-blis-opt", "blis-lmul4")] {
             spec.push(WorkloadSpec::BlisAblation {
                 name: name.into(),
                 partition: "mcv2".into(),
                 platform: "mcv2-dual".into(),
-                lib,
+                lib: lib.into(),
                 cores: 128,
                 runtime_s: 3600.0,
             });
@@ -576,15 +585,24 @@ impl CampaignSpec {
             // canonicalize aliases to the registry id at load time
             spec.fabric = Some(freg.get(s)?.id.clone());
         }
+        // kernels next: platforms and workloads may reference them
+        let mut kreg = KernelRegistry::builtin();
+        for sec in cfg.table_arrays.get("kernel").map(Vec::as_slice).unwrap_or(&[]) {
+            let base = sec.get("base").and_then(Value::as_str).unwrap_or_default().to_string();
+            let k = kreg.register_section(sec)?;
+            spec.custom_kernels.push(KernelDef { base, kernel: (*k).clone() });
+        }
         let mut reg = PlatformRegistry::builtin();
         for sec in cfg.table_arrays.get("platform").map(Vec::as_slice).unwrap_or(&[]) {
             // `base` is re-read here (register_section already validates
             // its presence) so the def can render itself back to text
             let base = sec.get("base").and_then(Value::as_str).unwrap_or_default().to_string();
             let p = reg.register_section(sec)?;
-            // a custom platform's default_fabric must resolve, here at
-            // load time, against the spec's own fabric registry
+            // a custom platform's default_fabric and default_lib must
+            // resolve, here at load time, against the spec's own
+            // registries
             freg.get(&p.default_fabric)?;
+            kreg.get(&p.default_lib)?;
             spec.custom_platforms.push(PlatformDef { base, platform: (*p).clone() });
         }
         for sec in cfg.table_arrays.get("fleet").map(Vec::as_slice).unwrap_or(&[]) {
@@ -623,21 +641,42 @@ impl CampaignSpec {
             if let WorkloadSpec::Hpl { fabric: Some(f), .. } = &mut w {
                 *f = freg.get(f)?.id.clone();
             }
+            // ...and the kernel names (aliases -> registry ids, unknown
+            // kernels typed at load time, custom [[kernel]]s in scope)
+            match &mut w {
+                WorkloadSpec::Hpl { lib: Some(l), .. }
+                | WorkloadSpec::BlisAblation { lib: l, .. } => {
+                    *l = kreg.get(l)?.id.clone();
+                }
+                _ => {}
+            }
             spec.push(w);
         }
         spec.validate()?;
         Ok(spec)
     }
 
-    /// Cross-workload invariants: unique job names, resolvable fabrics,
-    /// and a switch port per node (machine-wide and per HPL job). Called
-    /// by the config loaders and again by the engine, so code-built specs
-    /// are held to the same rules.
+    /// Cross-workload invariants: unique job names, resolvable fabrics
+    /// and kernels, and a switch port per node (machine-wide and per HPL
+    /// job). Called by the config loaders and again by the engine, so
+    /// code-built specs are held to the same rules.
     pub fn validate(&self) -> Result<(), CimoneError> {
         let mut seen = std::collections::BTreeSet::new();
         for w in &self.workloads {
             if !seen.insert(w.name()) {
                 return Err(CimoneError::Spec(format!("duplicate workload name `{}`", w.name())));
+            }
+        }
+        // kernel fit: every named library must resolve (typed
+        // UnknownKernel at load time, not mid-estimation)
+        let kreg = self.kernel_registry()?;
+        for w in &self.workloads {
+            match w {
+                WorkloadSpec::Hpl { lib: Some(l), .. }
+                | WorkloadSpec::BlisAblation { lib: l, .. } => {
+                    kreg.get(l)?;
+                }
+                _ => {}
             }
         }
         // fabric fit: the whole fleet must hang off the machine switch,
@@ -684,6 +723,16 @@ impl CampaignSpec {
         Ok(reg)
     }
 
+    /// The micro-kernel registry this spec runs against: the built-in
+    /// kernels plus any `[[kernel]]` definitions.
+    pub fn kernel_registry(&self) -> Result<KernelRegistry, CimoneError> {
+        let mut reg = KernelRegistry::builtin();
+        for def in &self.custom_kernels {
+            reg.register(def.kernel.clone())?;
+        }
+        Ok(reg)
+    }
+
     /// The machine interconnect: the spec's explicit `fabric` key, or the
     /// leading fleet platform's `default_fabric`, or the paper's 1 GbE.
     fn resolve_fabric(&self, freg: &FabricRegistry) -> Result<Arc<Fabric>, CimoneError> {
@@ -706,10 +755,13 @@ impl CampaignSpec {
     pub fn build_inventory(&self) -> Result<Inventory, CimoneError> {
         let reg = self.registry()?;
         let freg = self.fabric_registry()?;
+        // workload `lib =` keys and platform defaults resolve against
+        // the spec's own kernels ([[kernel]] sections included)
+        let kreg = self.kernel_registry()?;
         if self.fleet.is_empty() {
-            Inventory::from_fleet_on(&reg, &freg, PAPER_FLEET, self.fabric.as_deref())
+            Inventory::from_fleet_on(&reg, &freg, &kreg, PAPER_FLEET, self.fabric.as_deref())
         } else {
-            Inventory::from_fleet_on(&reg, &freg, &self.fleet, self.fabric.as_deref())
+            Inventory::from_fleet_on(&reg, &freg, &kreg, &self.fleet, self.fabric.as_deref())
         }
     }
 
@@ -739,6 +791,11 @@ impl CampaignSpec {
         for def in &self.custom_fabrics {
             out.push('\n');
             out.push_str(&render_fabric_def(&mut freg, def));
+        }
+        let mut kreg = KernelRegistry::builtin();
+        for def in &self.custom_kernels {
+            out.push('\n');
+            out.push_str(&render_kernel_def(&mut kreg, def));
         }
         let mut reg = PlatformRegistry::builtin();
         for def in &self.custom_platforms {
@@ -790,7 +847,7 @@ fn render_platform_def(reg: &mut PlatformRegistry, def: &PlatformDef) -> String 
             }
         }
         if p.default_lib != d.default_lib {
-            s.push_str(&format!("default_lib = \"{}\"\n", p.default_lib.spec_name()));
+            s.push_str(&format!("default_lib = \"{}\"\n", p.default_lib));
         }
         if p.desc.sockets.len() != d.desc.sockets.len() {
             s.push_str(&format!("sockets = {}\n", p.desc.sockets.len()));
@@ -886,6 +943,57 @@ fn render_fabric_def(reg: &mut FabricRegistry, def: &FabricDef) -> String {
     s
 }
 
+/// Render one `[[kernel]]` definition as `base` + the overrides that
+/// differ from what `KernelRegistry::register_section` would derive with
+/// no overrides at all — the kernel analogue of [`render_platform_def`],
+/// with the same precondition on `def.base`.
+fn render_kernel_def(reg: &mut KernelRegistry, def: &KernelDef) -> String {
+    let k = &def.kernel;
+    let mut s = format!("[[kernel]]\nid = \"{}\"\nbase = \"{}\"\n", k.id, def.base);
+    if let Ok(base) = reg.get(&def.base) {
+        // the no-override derivation, mirroring register_section
+        let mut d = (*base).clone();
+        let base_label = d.label.clone();
+        d.id = k.id.clone();
+        d.aliases = Vec::new();
+        d.label = format!("{} (custom, from {base_label})", k.id);
+
+        if k.label != d.label {
+            s.push_str(&format!("label = \"{}\"\n", k.label));
+        }
+        if k.family != d.family {
+            s.push_str(&format!("family = \"{}\"\n", k.family.spec_name()));
+        }
+        if k.vlen_bits != d.vlen_bits {
+            s.push_str(&format!("vlen = {}\n", k.vlen_bits));
+        }
+        if k.lmul != d.lmul {
+            s.push_str(&format!("lmul = {}\n", k.lmul.multiplier()));
+        }
+        if k.mr != d.mr {
+            s.push_str(&format!("mr = {}\n", k.mr));
+        }
+        if k.nr != d.nr {
+            s.push_str(&format!("nr = {}\n", k.nr));
+        }
+        if k.k_unroll != d.k_unroll {
+            s.push_str(&format!("k_unroll = {}\n", k.k_unroll));
+        }
+        if k.blocking != d.blocking {
+            s.push_str(&format!("blocking = \"{}\"\n", k.blocking.spec_name()));
+        }
+        if k.host_overhead != d.host_overhead {
+            s.push_str(&format!("host_overhead = {}\n", fmt_float(k.host_overhead)));
+        }
+        if k.native_rvv10 != d.native_rvv10 {
+            s.push_str(&format!("native_rvv10 = {}\n", k.native_rvv10));
+        }
+    }
+    // later [[kernel]] sections may derive from this one
+    let _ = reg.register(k.clone());
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -964,7 +1072,8 @@ lib = "blis-opt"
         }
         match &spec.workloads[2] {
             WorkloadSpec::BlisAblation { lib, cores, runtime_s, platform, .. } => {
-                assert_eq!(*lib, UkernelId::BlisLmul4);
+                // the `blis-opt` alias canonicalized to the registry id
+                assert_eq!(lib, "blis-lmul4");
                 assert_eq!(*cores, 128);
                 assert_eq!(*runtime_s, 3600.0);
                 assert_eq!(platform, "mcv2-dual");
@@ -1240,6 +1349,71 @@ lib = "blis-opt"
         // only overridden fabric keys render back out
         assert!(text.contains("backplane_factor = 0.125"), "{text}");
         assert!(!text.contains("latency_us"), "inherited keys must not render: {text}");
+    }
+
+    #[test]
+    fn custom_kernel_sections_feed_workloads_and_round_trip() {
+        let spec = CampaignSpec::parse(
+            "[campaign]\nvalidate_n = 48\n\n\
+             [[kernel]]\nid = \"blis-rvv1-u8\"\nbase = \"blis-rvv1-lmul2\"\nk_unroll = 8\nhost_overhead = 0.15\n\n\
+             [[platform]]\nid = \"sg2044-tuned\"\nbase = \"sg2044\"\ndefault_lib = \"blis-rvv1-u8\"\n\n\
+             [[fleet]]\nplatform = \"sg2044-tuned\"\ncount = 2\n\n\
+             [[workload]]\nkind = \"blis-ablation\"\nname = \"b\"\npartition = \"sg2044\"\n\
+             platform = \"sg2044-tuned\"\nlib = \"blis-rvv1-u8\"\ncores = 64\n",
+        )
+        .unwrap();
+        assert_eq!(spec.custom_kernels.len(), 1);
+        // the custom kernel reaches the inventory's registry
+        let inv = spec.build_inventory().unwrap();
+        let k = inv.kernels.get("blis-rvv1-u8").unwrap();
+        assert_eq!(k.k_unroll, 8);
+        // ...and the custom platform's default_lib points at it
+        assert_eq!(inv.node(0).platform.default_lib, "blis-rvv1-u8");
+        let text = spec.render();
+        let back = CampaignSpec::parse(&text).unwrap();
+        assert_eq!(back, spec);
+        // only overridden kernel keys render back out
+        assert!(text.contains("k_unroll = 8"), "{text}");
+        assert!(text.contains("host_overhead = 0.15"), "{text}");
+        assert!(!text.contains("lmul ="), "inherited keys must not render: {text}");
+    }
+
+    #[test]
+    fn unknown_kernel_names_are_typed_at_load_time() {
+        // workload-level
+        let err = CampaignSpec::parse(
+            "[[workload]]\nkind = \"hpl\"\nname = \"h\"\nplatform = \"mcv2\"\npartition = \"mcv2\"\n\
+             cores_per_node = 64\nlib = \"mkl\"\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CimoneError::UnknownKernel { ref name, .. } if name == "mkl"));
+        // custom-platform default_lib
+        let err = CampaignSpec::parse(
+            "[[platform]]\nid = \"oc\"\nbase = \"sg2044\"\ndefault_lib = \"mkl\"\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CimoneError::UnknownKernel { ref name, .. } if name == "mkl"));
+        // a malformed [[kernel]] override is typed too
+        let err = CampaignSpec::parse(
+            "[[kernel]]\nid = \"dud\"\nbase = \"blis-lmul4\"\nlmul = 8\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CimoneError::InvalidKernel { .. }));
+    }
+
+    #[test]
+    fn chained_custom_kernels_round_trip() {
+        // k2 derives from k1, which derives from a built-in; the
+        // native_rvv10 dialect flag survives the render round-trip
+        let spec = CampaignSpec::parse(
+            "[[kernel]]\nid = \"k1\"\nbase = \"blis-lmul4\"\nk_unroll = 2\nnative_rvv10 = true\n\n\
+             [[kernel]]\nid = \"k2\"\nbase = \"k1\"\nhost_overhead = 0.1\n",
+        )
+        .unwrap();
+        assert!(spec.custom_kernels[0].kernel.native_rvv10);
+        assert!(spec.custom_kernels[1].kernel.native_rvv10, "inherited through the chain");
+        let back = CampaignSpec::parse(&spec.render()).unwrap();
+        assert_eq!(back, spec);
     }
 
     #[test]

@@ -9,7 +9,7 @@ use crate::blas::perf::PerfModel;
 use crate::cache::{simulate_gemm, GemmTraceConfig};
 use crate::hpl::model::{cluster_hpl_gflops, ClusterConfig};
 use crate::mem::stream_model::predict_node_bandwidth;
-use crate::ukernel::UkernelId;
+use crate::ukernel::KernelRegistry;
 
 /// Fig 3 — STREAM bandwidth: one row per node configuration.
 /// Returns (label, threads, GB/s).
@@ -41,9 +41,10 @@ pub fn fig3() -> Vec<(String, usize, f64)> {
 /// Fig 4 — HPL vs core count for generic/optimized OpenBLAS on one MCv2
 /// socket. Returns (cores, generic GF/s, optimized GF/s).
 pub fn fig4(core_counts: &[usize]) -> Vec<(usize, f64, f64)> {
+    let reg = KernelRegistry::builtin();
     let d = mcv2_pioneer();
-    let gen = PerfModel::new(&d, UkernelId::OpenblasGeneric);
-    let opt = PerfModel::new(&d, UkernelId::OpenblasC920);
+    let gen = PerfModel::new(&d, reg.get("openblas-generic").expect("built-in kernel"));
+    let opt = PerfModel::new(&d, reg.get("openblas-c920").expect("built-in kernel"));
     core_counts
         .iter()
         .map(|&c| (c, gen.node_gflops(c), opt.node_gflops(c)))
@@ -110,10 +111,11 @@ pub const FIG6_CORES: [usize; 4] = [1, 8, 16, 32];
 /// counts on the MCv2 dual-socket node. Returns
 /// (cores, openblas, blis_vanilla, blis_opt).
 pub fn fig7(core_counts: &[usize]) -> Vec<(usize, f64, f64, f64)> {
+    let reg = KernelRegistry::builtin();
     let d = mcv2_dual();
-    let ob = PerfModel::new(&d, UkernelId::OpenblasC920);
-    let bv = PerfModel::new(&d, UkernelId::BlisLmul1);
-    let bo = PerfModel::new(&d, UkernelId::BlisLmul4);
+    let ob = PerfModel::new(&d, reg.get("openblas-c920").expect("built-in kernel"));
+    let bv = PerfModel::new(&d, reg.get("blis-lmul1").expect("built-in kernel"));
+    let bo = PerfModel::new(&d, reg.get("blis-lmul4").expect("built-in kernel"));
     core_counts
         .iter()
         .map(|&c| (c, ob.node_gflops(c), bv.node_gflops(c), bo.node_gflops(c)))
@@ -126,10 +128,13 @@ pub const FIG7_CORES: [usize; 6] = [1, 8, 16, 32, 64, 128];
 /// The abstract's headline: node-level uplift MCv2 vs MCv1.
 /// Returns (hpl_uplift, stream_uplift).
 pub fn headline() -> (f64, f64) {
+    let reg = KernelRegistry::builtin();
     let v1 = mcv1_u740();
     let v2 = mcv2_dual();
-    let hpl_old = PerfModel::new(&v1, UkernelId::OpenblasGeneric).node_gflops(4);
-    let hpl_new = PerfModel::new(&v2, UkernelId::OpenblasC920).node_gflops(128);
+    let hpl_old =
+        PerfModel::new(&v1, reg.get("openblas-generic").expect("built-in kernel")).node_gflops(4);
+    let hpl_new =
+        PerfModel::new(&v2, reg.get("openblas-c920").expect("built-in kernel")).node_gflops(128);
     let st_old = predict_node_bandwidth(&presets::u740(), 4, true);
     let st_new = predict_node_bandwidth(&presets::sg2042_dual(), 64, true);
     (hpl_new / hpl_old, st_new / st_old)

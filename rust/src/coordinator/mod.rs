@@ -48,7 +48,7 @@ pub mod scenario;
 pub mod sweeps;
 pub mod workload;
 
-pub use campaign::{CampaignSpec, FabricDef, PlatformDef, WorkloadSpec};
+pub use campaign::{CampaignSpec, FabricDef, KernelDef, PlatformDef, WorkloadSpec};
 pub use driver::{
     dry_run_spec, run_campaign, run_campaign_on, run_campaign_spec, CampaignReport, JobRow,
 };

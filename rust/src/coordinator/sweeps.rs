@@ -12,7 +12,7 @@ use crate::blas::perf::PerfModel;
 use crate::hpl::model::{project, ClusterConfig};
 use crate::isa::rvv::Lmul;
 use crate::net::Fabric;
-use crate::ukernel::{ablation, UkernelId};
+use crate::ukernel::{ablation, KernelRegistry};
 use crate::util::table::Table;
 
 use super::scenario::{dry_run_matrix, fmt_speedup, ComparisonReport, ScenarioMatrix};
@@ -21,9 +21,11 @@ use super::scenario::{dry_run_matrix, fmt_speedup, ComparisonReport, ScenarioMat
 /// Figs 4 and 7).
 pub fn grid_cores_by_library(core_counts: &[usize]) -> Table {
     let d = platform::mcv2_dual();
-    let models: Vec<(UkernelId, PerfModel)> = UkernelId::all()
-        .into_iter()
-        .map(|id| (id, PerfModel::new(&d, id)))
+    let reg = KernelRegistry::builtin();
+    let ids = ["openblas-generic", "openblas-c920", "blis-lmul1", "blis-lmul4"];
+    let models: Vec<PerfModel> = ids
+        .iter()
+        .map(|id| PerfModel::new(&d, reg.get(id).expect("built-in kernel")))
         .collect();
     let mut t = Table::new(vec![
         "cores",
@@ -34,7 +36,7 @@ pub fn grid_cores_by_library(core_counts: &[usize]) -> Table {
     ]);
     for &c in core_counts {
         let mut row = vec![c.to_string()];
-        for (_, m) in &models {
+        for m in &models {
             row.push(format!("{:.1}", m.node_gflops(c)));
         }
         t.row(row);
@@ -128,25 +130,69 @@ pub fn nb_sensitivity(n: usize, nbs: &[usize]) -> Table {
 }
 
 /// The LMUL ablation (M1/M2/M4 + infeasible M8) — why the paper stops
-/// at 4.
+/// at 4. Descriptor-driven: every row is an `ablation::point` sweep
+/// descriptor, and M8's row is its typed validation failure.
 pub fn lmul_ablation() -> Table {
     let core = presets::c920();
     let mut t = Table::new(vec!["LMUL", "insts/k-step", "cycles/k-step", "feasible"]);
-    for lmul in [Lmul::M1, Lmul::M2, Lmul::M4] {
-        let (i, c) = ablation::analyze_lmul(lmul, 64, &core);
-        t.row(vec![
-            format!("{lmul:?}"),
-            format!("{i:.1}"),
-            format!("{c:.1}"),
-            "yes".to_string(),
-        ]);
+    for row in ablation::sweep(&[128], &[Lmul::M1, Lmul::M2, Lmul::M4, Lmul::M8], &[1], 64, &core)
+    {
+        match (row.insts_per_kstep, row.cycles_per_kstep) {
+            (Some(i), Some(c)) => {
+                t.row(vec![
+                    format!("{:?}", row.desc.lmul),
+                    format!("{i:.1}"),
+                    format!("{c:.1}"),
+                    "yes".to_string(),
+                ]);
+            }
+            _ => {
+                let reason = row.desc.validate().unwrap_err().to_string();
+                t.row(vec![
+                    format!("{:?}", row.desc.lmul),
+                    "-".to_string(),
+                    "-".to_string(),
+                    format!("no ({reason})"),
+                ]);
+            }
+        }
     }
-    t.row(vec![
-        "M8".to_string(),
-        "-".to_string(),
-        "-".to_string(),
-        "no (4 col groups x 8 regs = whole file)".to_string(),
-    ]);
+    t
+}
+
+/// The kernel-tuning punchline as one table: the built-in
+/// [`ScenarioMatrix::blas_tuning`] matrix, dry-run and pivoted so each
+/// platform is a row of node GFLOP/s per registered kernel plus the
+/// winning kernel — Fig 2's LMUL uplift on the SG2042 next to the
+/// native-RVV 1.0 takeover on the SG2044.
+pub fn blas_tuning_table() -> Table {
+    let matrix = ScenarioMatrix::blas_tuning();
+    let report =
+        dry_run_matrix(&matrix).expect("the built-in blas-tuning matrix is valid");
+    let mut headers = vec!["platform".to_string()];
+    headers.extend(matrix.axes.libs.iter().map(|l| format!("{l} GF/s")));
+    headers.push("best".to_string());
+    let mut t = Table::new(headers);
+    for p in &matrix.axes.platforms {
+        let gf = |l: &String| -> f64 {
+            report
+                .outcome(&format!("{p}/{l}"))
+                .unwrap_or_else(|| {
+                    panic!("blas-tuning scenario `{p}/{l}` missing from the report")
+                })
+                .hpl_gflops
+        };
+        let best = matrix
+            .axes
+            .libs
+            .iter()
+            .max_by(|a, b| gf(a).total_cmp(&gf(b)))
+            .expect("the libs axis is non-empty");
+        let mut row = vec![p.clone()];
+        row.extend(matrix.axes.libs.iter().map(|l| format!("{:.1}", gf(l))));
+        row.push(best.clone());
+        t.row(row);
+    }
     t
 }
 
@@ -235,6 +281,7 @@ pub fn render_all() -> String {
          == Extension: fabric scaling, generation x interconnect (Fig 5 effect) ==\n{}\n\n\
          == Extension: NB sensitivity (N=57600, 2 nodes, 1 GbE) ==\n{}\n\n\
          == Extension: LMUL ablation (why the paper stops at 4) ==\n{}\n\n\
+         == Extension: kernel tuning, SG2042 vs SG2044 (blas-tuning matrix) ==\n{}\n\n\
          == Extension: energy to solution (HPL N=57600) ==\n{}\n\n\
          == Extension: down the road (MCv1 -> MCv2 -> SG2044 -> MCv3) ==\n{}",
         grid_cores_by_library(&[1, 4, 16, 64, 128]).render(),
@@ -242,6 +289,7 @@ pub fn render_all() -> String {
         fabric_scaling_table().render(),
         nb_sensitivity(57_600, &[64, 128, 192, 256, 384]).render(),
         lmul_ablation().render(),
+        blas_tuning_table().render(),
         energy_table(&report).render(),
         generation_table(&report).render()
     )
@@ -334,11 +382,28 @@ mod tests {
     }
 
     #[test]
+    fn blas_tuning_table_carries_both_punchlines() {
+        let t = blas_tuning_table();
+        let s = t.render();
+        assert!(s.contains("mcv2-pioneer") && s.contains("sg2044"), "{s}");
+        assert!(s.contains("blis-lmul1 GF/s") && s.contains("blis-rvv1-lmul2 GF/s"), "{s}");
+        assert_eq!(t.n_rows(), 2);
+    }
+
+    #[test]
+    fn lmul_ablation_marks_m8_infeasible() {
+        let s = lmul_ablation().render();
+        assert!(s.contains("M8"), "{s}");
+        assert!(s.contains("invalid kernel"), "M8 row must carry the typed reason: {s}");
+    }
+
+    #[test]
     fn render_all_nonempty() {
         let s = render_all();
         assert!(s.contains("LMUL ablation"));
         assert!(s.contains("down the road"));
         assert!(s.contains("fabric scaling"));
+        assert!(s.contains("kernel tuning"));
         assert!(s.len() > 500);
     }
 }

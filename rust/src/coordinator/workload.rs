@@ -18,7 +18,6 @@ use crate::cluster::{Inventory, Monitor};
 use crate::error::CimoneError;
 use crate::hpl::model::{project, ClusterConfig};
 use crate::mem::stream_model::predict_node_bandwidth;
-use crate::ukernel::UkernelId;
 
 /// Bytes one simulated STREAM job moves: 10 iterations x 3 arrays x
 /// ~128 MB, matching the paper-scale working set.
@@ -127,8 +126,10 @@ pub struct HplWorkload {
     /// Nodes in the HPL cluster-projection model (usually == `nodes`).
     pub cluster_nodes: usize,
     pub cores_per_node: usize,
-    /// BLAS library override; `None` uses the platform's default.
-    pub lib: Option<UkernelId>,
+    /// BLAS kernel override (registry id or alias); `None` uses the
+    /// platform's `default_lib`. Both resolve against the inventory's
+    /// kernel registry, so custom `[[kernel]]` sections reach HPL.
+    pub lib: Option<String>,
     /// Fabric override (registry id or alias); `None` uses the
     /// inventory's machine fabric.
     pub fabric: Option<String>,
@@ -154,15 +155,19 @@ impl Workload for HplWorkload {
             Some(id) => inv.fabrics.get(id)?,
             None => Arc::clone(&inv.fabric),
         };
-        let mut cfg = ClusterConfig::with_fabric(
+        // resolve the kernel against the inventory's registry (typed
+        // UnknownKernel; custom [[kernel]] definitions are in scope)
+        let lib = match &self.lib {
+            Some(id) => inv.kernels.get(id)?,
+            None => inv.kernels.get(&p.default_lib)?,
+        };
+        let cfg = ClusterConfig::with_lib_fabric(
             Arc::clone(p),
             self.cluster_nodes,
             self.cores_per_node,
+            lib,
             (*fabric).clone(),
         );
-        if let Some(lib) = self.lib {
-            cfg.lib = lib;
-        }
         cfg.validate()?; // a cluster wider than the switch is typed here
         let proj = project(&cfg);
         let runtime_s = proj.t_comp + proj.t_comm;
@@ -191,7 +196,8 @@ pub struct BlisAblationWorkload {
     pub partition: String,
     /// Registry id of the node platform (the paper uses `mcv2-dual`).
     pub platform: String,
-    pub lib: UkernelId,
+    /// Kernel registry id (or alias) of the ablated micro-kernel.
+    pub lib: String,
     pub cores: usize,
     /// Fixed simulated runtime (the ablation compares rates, not time).
     pub runtime_s: f64,
@@ -212,7 +218,8 @@ impl Workload for BlisAblationWorkload {
 
     fn estimate(&self, inv: &Inventory) -> Result<JobEstimate, CimoneError> {
         let p = platform_of(inv, &self.platform)?;
-        let gf = PerfModel::new(p.as_ref(), self.lib).node_gflops(self.cores);
+        let lib = inv.kernels.get(&self.lib)?;
+        let gf = PerfModel::new(p.as_ref(), lib).node_gflops(self.cores);
         let active = self.cores.min(p.desc.total_cores());
         let avg_node_w = p.power.node_power(active);
         Ok(JobEstimate {
@@ -282,7 +289,7 @@ mod tests {
             name: "hpl-blis-opt".into(),
             partition: "mcv2".into(),
             platform: "sg2042-dual".into(), // alias of mcv2-dual
-            lib: UkernelId::BlisLmul4,
+            lib: "blis-opt".into(), // kernel aliases resolve too
             cores: 128,
             runtime_s: 3600.0,
         };
@@ -298,7 +305,7 @@ mod tests {
             name: "x".into(),
             partition: "mcv2".into(),
             platform: "mcv2-dual".into(),
-            lib: UkernelId::BlisLmul1,
+            lib: "blis-lmul1".into(),
             cores: 128,
             runtime_s: 3600.0,
         };

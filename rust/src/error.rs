@@ -37,6 +37,20 @@ pub enum CimoneError {
     #[error("no node of platform `{0}` in the inventory")]
     NoNodeOfPlatform(String),
 
+    /// A kernel id was looked up in a registry that does not know it.
+    #[error("unknown kernel `{name}` (registered: {known})")]
+    UnknownKernel { name: String, known: String },
+
+    /// A kernel (or one of its aliases) was registered twice.
+    #[error("kernel name `{0}` is already registered (id or alias clash)")]
+    DuplicateKernel(String),
+
+    /// A kernel descriptor violates its own invariants (unsupported
+    /// VLEN, register file overflow, zero tile, ...) — caught at load
+    /// time, like `FabricTooSmall`, so generators never see it.
+    #[error("invalid kernel `{id}`: {reason}")]
+    InvalidKernel { id: String, reason: String },
+
     /// A fabric id was looked up in a registry that does not know it.
     #[error("unknown fabric `{id}` (registered: {known})")]
     UnknownFabric { id: String, known: String },

@@ -17,17 +17,18 @@ use crate::util::stats::hpl_flops;
 use crate::util::{Matrix, Rng};
 
 /// Which engine performs the trailing updates.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Backend {
     /// Host-native triple loop (fast path; used by the perf benches).
     Native,
     /// The functional-vector-machine BLAS library simulation (slow but
-    /// exercises the micro-kernel programs end to end).
-    SimulatedBlas(crate::ukernel::UkernelId),
+    /// exercises the micro-kernel programs end to end) through one
+    /// registered kernel descriptor.
+    SimulatedBlas(std::sync::Arc<crate::ukernel::KernelDescriptor>),
 }
 
 /// One HPL run configuration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct HplConfig {
     pub n: usize,
     pub nb: usize,
@@ -59,11 +60,11 @@ pub fn run(cfg: &HplConfig) -> Result<HplResult, CimoneError> {
     let b: Vec<f64> = (0..cfg.n).map(|_| rng.hpl_entry()).collect();
 
     let t0 = Instant::now();
-    let factors = match cfg.backend {
+    let factors = match &cfg.backend {
         Backend::Native => lu_blocked(&a, cfg.nb, &mut native_update)?,
-        Backend::SimulatedBlas(id) => {
+        Backend::SimulatedBlas(kernel) => {
             let socket = crate::arch::presets::sg2042().sockets[0].clone();
-            let lib = BlasLibrary::for_socket(id, &socket);
+            let lib = BlasLibrary::for_socket(std::sync::Arc::clone(kernel), &socket);
             let mut update = |c: &mut Matrix, l: &Matrix, u: &Matrix| {
                 // C -= L*U via the library (negate L like native_update)
                 let mut neg = l.clone();
@@ -92,7 +93,7 @@ pub fn run(cfg: &HplConfig) -> Result<HplResult, CimoneError> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ukernel::UkernelId;
+    use crate::ukernel::KernelRegistry;
 
     #[test]
     fn native_run_passes_validation() {
@@ -104,15 +105,16 @@ mod tests {
 
     #[test]
     fn simulated_blas_backends_pass_validation() {
-        for id in [UkernelId::BlisLmul4, UkernelId::OpenblasC920] {
+        let reg = KernelRegistry::builtin();
+        for id in ["blis-lmul4", "openblas-c920", "blis-rvv1-lmul2"] {
             let r = run(&HplConfig {
                 n: 64,
                 nb: 16,
                 seed: 2,
-                backend: Backend::SimulatedBlas(id),
+                backend: Backend::SimulatedBlas(reg.get(id).unwrap()),
             })
             .unwrap();
-            assert!(r.passed, "{id:?} residual {}", r.residual);
+            assert!(r.passed, "{id} residual {}", r.residual);
         }
     }
 
@@ -126,7 +128,7 @@ mod tests {
             n: 64,
             nb: 16,
             seed: 3,
-            backend: Backend::SimulatedBlas(UkernelId::BlisLmul1),
+            backend: Backend::SimulatedBlas(KernelRegistry::builtin().get("blis-lmul1").unwrap()),
         })
         .unwrap();
         assert!(native.passed && sim.passed);

@@ -14,7 +14,8 @@ use crate::arch::platform::Platform;
 use crate::blas::perf::PerfModel;
 use crate::error::CimoneError;
 use crate::net::{Fabric, FabricRegistry};
-use crate::ukernel::UkernelId;
+use crate::ukernel::registry as kernels;
+use crate::ukernel::{KernelDescriptor, KernelRegistry};
 use crate::util::stats::hpl_flops;
 
 /// A homogeneous cluster HPL run. The platform is shared (`Arc`) so
@@ -24,7 +25,8 @@ pub struct ClusterConfig {
     pub platform: Arc<Platform>,
     pub nodes: usize,
     pub cores_per_node: usize,
-    pub lib: UkernelId,
+    /// The resolved micro-kernel descriptor HPL's DGEMM runs through.
+    pub lib: Arc<KernelDescriptor>,
     /// HPL problem size. The paper never states theirs; EXPERIMENTS.md
     /// documents N = 57600, NB = 192 as the calibration point that
     /// reproduces Fig 5's scaling ratios.
@@ -42,9 +44,10 @@ impl ClusterConfig {
     /// MCv3 projection its 10 GbE). Accepts a `Platform` by value or an
     /// already-shared `Arc<Platform>`.
     ///
-    /// A `default_fabric` naming a custom (non-built-in) fabric falls
-    /// back to the paper's `gbe-flat` here; the campaign layer resolves
-    /// custom fabrics explicitly via [`ClusterConfig::with_fabric`].
+    /// A `default_fabric` (or `default_lib`) naming a custom
+    /// (non-built-in) entry falls back to the paper's `gbe-flat` /
+    /// `openblas-c920` here; the campaign layer resolves custom fabrics
+    /// and kernels explicitly against its own registries.
     pub fn hpl_default(
         platform: impl Into<Arc<Platform>>,
         nodes: usize,
@@ -58,7 +61,10 @@ impl ClusterConfig {
         ClusterConfig::with_fabric(platform, nodes, cores_per_node, fabric)
     }
 
-    /// The standard run shape on an explicitly resolved fabric.
+    /// The standard run shape on an explicitly resolved fabric; the
+    /// BLAS kernel is the platform's `default_lib` resolved against the
+    /// built-in [`KernelRegistry`] (campaign paths override `lib` with
+    /// their own resolution, custom `[[kernel]]` sections included).
     pub fn with_fabric(
         platform: impl Into<Arc<Platform>>,
         nodes: usize,
@@ -66,7 +72,24 @@ impl ClusterConfig {
         fabric: Fabric,
     ) -> Self {
         let platform = platform.into();
-        let lib = platform.default_lib;
+        let lib = KernelRegistry::builtin()
+            .get(&platform.default_lib)
+            .unwrap_or_else(|_| Arc::new(kernels::openblas_c920()));
+        ClusterConfig::with_lib_fabric(platform, nodes, cores_per_node, lib, fabric)
+    }
+
+    /// The standard run shape with both the kernel and the fabric
+    /// already resolved — the campaign path, where the inventory's own
+    /// registries (custom `[[kernel]]`/`[[fabric]]` sections included)
+    /// did the resolution and no built-in fallback belongs.
+    pub fn with_lib_fabric(
+        platform: impl Into<Arc<Platform>>,
+        nodes: usize,
+        cores_per_node: usize,
+        lib: Arc<KernelDescriptor>,
+        fabric: Fabric,
+    ) -> Self {
+        let platform = platform.into();
         ClusterConfig { platform, nodes, cores_per_node, lib, n: 57_600, nb: 192, fabric }
     }
 
@@ -90,7 +113,8 @@ pub struct HplProjection {
 
 /// Project the HPL performance of a cluster configuration.
 pub fn project(cfg: &ClusterConfig) -> HplProjection {
-    let node_rate = PerfModel::new(&cfg.platform, cfg.lib).node_gflops(cfg.cores_per_node) * 1e9;
+    let node_rate =
+        PerfModel::new(&cfg.platform, Arc::clone(&cfg.lib)).node_gflops(cfg.cores_per_node) * 1e9;
     let flops = hpl_flops(cfg.n);
     let p = cfg.nodes;
     let t_comp = flops / (p as f64 * node_rate);

@@ -5,13 +5,23 @@
 //! must produce bit-identical GEMM tiles (tested against the naive
 //! [`crate::util::Matrix`] oracle and, transitively, against the Pallas
 //! kernels through the shared seeds in the integration tests).
+//!
+//! The machine is VLEN-generic: any power-of-two VLEN >= 64 builds a
+//! register file of `32 x VLEN/64` f64 lanes, so descriptor-driven
+//! kernel sweeps (`ukernel::ablation`) can explore 64/128/256/512-bit
+//! configurations. An unsupported VLEN is a typed load-time
+//! [`CimoneError::InvalidKernel`], not a panic.
 
 use super::inst::{Inst, Program};
 use super::rvv::{vsetvl, Lmul, Sew, VType};
+use crate::error::CimoneError;
 
-/// Maximum lanes of one register *group* we ever need (LMUL=8 × 2 lanes).
-const MAX_GROUP_LANES: usize = 16;
-/// Physical lanes per architectural register at VLEN=128.
+/// RVV's architectural VLEN ceiling (2^16 bits) — also what keeps a
+/// typo'd spec VLEN from turning into a multi-terabyte register-file
+/// allocation instead of a typed error.
+pub const MAX_VLEN_BITS: usize = 1 << 16;
+
+/// FP64 lanes per architectural register at a given VLEN.
 const fn lanes_per_reg(vlen_bits: usize) -> usize {
     vlen_bits / 64
 }
@@ -20,11 +30,14 @@ const fn lanes_per_reg(vlen_bits: usize) -> usize {
 #[derive(Debug, Clone)]
 pub struct VecMachine {
     pub vlen_bits: usize,
-    /// log2(lanes per register) — lanes are a power of two (2 or 4), so
-    /// group indexing uses shifts/masks instead of div/mod (hot path).
+    /// log2(lanes per register) — lanes are a power of two, so group
+    /// indexing uses shifts/masks instead of div/mod (hot path).
     lane_shift: u32,
-    /// 32 architectural vector registers, each `vlen/64` f64 lanes.
-    v: [[f64; 8]; 32],
+    /// 32 architectural vector registers, flattened to `32 x vlen/64`
+    /// f64 lanes; a register *group* rooted at `v` is the contiguous
+    /// lane run starting at `v << lane_shift` (as in hardware, where
+    /// LMUL groups span consecutive registers).
+    v: Vec<f64>,
     /// 32 scalar FP registers.
     pub f: [f64; 32],
     /// Flat f64 memory, element-addressed.
@@ -39,39 +52,52 @@ pub struct VecMachine {
 }
 
 impl VecMachine {
-    /// New machine with `mem_elems` f64 words of zeroed memory.
-    pub fn new(vlen_bits: usize, mem_elems: usize) -> Self {
-        assert!(vlen_bits == 128 || vlen_bits == 256, "unsupported VLEN");
-        assert!(lanes_per_reg(vlen_bits) <= 8);
-        VecMachine {
+    /// New machine with `mem_elems` f64 words of zeroed memory. VLEN
+    /// must be a power of two in 64..=[`MAX_VLEN_BITS`] (RVV's
+    /// architectural ceiling); anything else is a typed
+    /// [`CimoneError::InvalidKernel`] at construction time.
+    pub fn new(vlen_bits: usize, mem_elems: usize) -> Result<Self, CimoneError> {
+        if vlen_bits < 64 || vlen_bits > MAX_VLEN_BITS || !vlen_bits.is_power_of_two() {
+            return Err(CimoneError::InvalidKernel {
+                id: "vec-machine".into(),
+                reason: format!(
+                    "unsupported VLEN {vlen_bits} (need a power of two in 64..={MAX_VLEN_BITS})"
+                ),
+            });
+        }
+        let lanes = lanes_per_reg(vlen_bits);
+        Ok(VecMachine {
             vlen_bits,
-            lane_shift: lanes_per_reg(vlen_bits).trailing_zeros(),
-            v: [[0.0; 8]; 32],
+            lane_shift: lanes.trailing_zeros(),
+            v: vec![0.0; 32 * lanes],
             f: [0.0; 32],
             mem: vec![0.0; mem_elems],
             vl: 0,
             vtype: VType::new(Sew::E64, Lmul::M1),
             retired: 0,
             flops: 0,
-        }
+        })
     }
 
     fn lanes(&self) -> usize {
         lanes_per_reg(self.vlen_bits)
     }
 
+    /// Lane `lane` of architectural register `vreg` (debug/test access).
+    pub fn reg_lane(&self, vreg: u8, lane: usize) -> f64 {
+        self.v[((vreg as usize) << self.lane_shift) + lane]
+    }
+
     /// Read lane `i` of the *group* rooted at `vreg` (crosses register
     /// boundaries under LMUL>1, as hardware does).
     #[inline(always)]
     fn group_get(&self, vreg: u8, i: usize) -> f64 {
-        let mask = (1usize << self.lane_shift) - 1;
-        self.v[vreg as usize + (i >> self.lane_shift)][i & mask]
+        self.v[((vreg as usize) << self.lane_shift) + i]
     }
 
     #[inline(always)]
     fn group_set(&mut self, vreg: u8, i: usize, val: f64) {
-        let mask = (1usize << self.lane_shift) - 1;
-        self.v[vreg as usize + (i >> self.lane_shift)][i & mask] = val;
+        self.v[((vreg as usize) << self.lane_shift) + i] = val;
     }
 
     /// Execute one instruction.
@@ -181,7 +207,6 @@ impl VecMachine {
         if vreg as usize + need > 32 {
             return Err(format!("register group v{vreg} (+{need}) out of file"));
         }
-        let _ = MAX_GROUP_LANES;
         Ok(())
     }
 }
@@ -192,7 +217,7 @@ mod tests {
     use crate::isa::inst::Dialect;
 
     fn m128() -> VecMachine {
-        VecMachine::new(128, 256)
+        VecMachine::new(128, 256).unwrap()
     }
 
     fn vt(lmul: Lmul) -> VType {
@@ -221,10 +246,10 @@ mod tests {
         assert_eq!(m.vl, 8);
         m.step(&Inst::Vle { sew: Sew::E64, vd: 4, addr: 0 }).unwrap();
         // lanes must land across v4..v7
-        assert_eq!(m.v[4][0], 0.0);
-        assert_eq!(m.v[4][1], 1.0);
-        assert_eq!(m.v[5][0], 2.0);
-        assert_eq!(m.v[7][1], 7.0);
+        assert_eq!(m.reg_lane(4, 0), 0.0);
+        assert_eq!(m.reg_lane(4, 1), 1.0);
+        assert_eq!(m.reg_lane(5, 0), 2.0);
+        assert_eq!(m.reg_lane(7, 1), 7.0);
     }
 
     #[test]
@@ -273,10 +298,52 @@ mod tests {
 
     #[test]
     fn oob_load_is_error_not_panic() {
-        let mut m = VecMachine::new(128, 4);
+        let mut m = VecMachine::new(128, 4).unwrap();
         m.step(&Inst::Vsetvli { avl: 2, vtype: vt(Lmul::M1) }).unwrap();
         assert!(m.step(&Inst::Vle { sew: Sew::E64, vd: 0, addr: 3 }).is_err());
         assert!(m.step(&Inst::Fld { fd: 0, addr: 99 }).is_err());
+    }
+
+    #[test]
+    fn unsupported_vlen_is_a_typed_error_not_a_panic() {
+        // the seed asserted on anything but {128, 256}; now 64/512/1024
+        // build and bad widths are typed errors
+        for bad in [0usize, 32, 96, 100, 130, MAX_VLEN_BITS * 2] {
+            match VecMachine::new(bad, 16) {
+                Err(CimoneError::InvalidKernel { reason, .. }) => {
+                    assert!(reason.contains("VLEN"), "{reason}");
+                }
+                other => panic!("VLEN {bad}: expected InvalidKernel, got {other:?}"),
+            }
+        }
+        for good in [64usize, 128, 256, 512, 1024] {
+            assert!(VecMachine::new(good, 16).is_ok(), "VLEN {good}");
+        }
+    }
+
+    #[test]
+    fn vlen64_machine_has_one_lane_per_register() {
+        let mut m = VecMachine::new(64, 16).unwrap();
+        m.mem[0] = 7.0;
+        m.mem[1] = 8.0;
+        m.step(&Inst::Vsetvli { avl: 2, vtype: vt(Lmul::M2) }).unwrap();
+        assert_eq!(m.vl, 2, "VLEN=64 m2 group holds 2 f64 lanes");
+        m.step(&Inst::Vle { sew: Sew::E64, vd: 2, addr: 0 }).unwrap();
+        // the group spans v2 and v3, one lane each
+        assert_eq!(m.reg_lane(2, 0), 7.0);
+        assert_eq!(m.reg_lane(3, 0), 8.0);
+    }
+
+    #[test]
+    fn vlen512_lmul1_holds_a_whole_column() {
+        let mut m = VecMachine::new(512, 32).unwrap();
+        for i in 0..8 {
+            m.mem[i] = i as f64;
+        }
+        m.step(&Inst::Vsetvli { avl: 8, vtype: vt(Lmul::M1) }).unwrap();
+        assert_eq!(m.vl, 8, "512/64 = 8 lanes in ONE register");
+        m.step(&Inst::Vle { sew: Sew::E64, vd: 31, addr: 0 }).unwrap();
+        assert_eq!(m.reg_lane(31, 7), 7.0);
     }
 
     #[test]

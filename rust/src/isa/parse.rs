@@ -208,25 +208,25 @@ fn parse_addr(lineno: usize, tok: Option<&str>) -> Result<usize, ParseError> {
 mod tests {
     use super::*;
     use crate::isa::asm::render_program;
-    use crate::ukernel::{MicroKernel, PanelLayout, UkernelId};
+    use crate::ukernel::{KernelRegistry, PanelLayout};
 
     #[test]
     fn roundtrip_all_kernel_programs() {
-        // parse(render(p)) == p for every micro-kernel, both dialects
-        for id in UkernelId::all() {
-            let k = id.build();
+        // parse(render(p)) == p for every registered micro-kernel, both
+        // dialects
+        for k in KernelRegistry::builtin().kernels() {
             let (mr, nr) = k.tile();
             let p = k.program(PanelLayout::new(mr, nr, 3));
             let text = render_program(&p);
-            let back = parse_program(&text).unwrap_or_else(|e| panic!("{id:?}: {e}"));
-            assert_eq!(back.dialect, p.dialect, "{id:?}");
-            assert_eq!(back.insts, p.insts, "{id:?}");
+            let back = parse_program(&text).unwrap_or_else(|e| panic!("{}: {e}", k.id));
+            assert_eq!(back.dialect, p.dialect, "{}", k.id);
+            assert_eq!(back.insts, p.insts, "{}", k.id);
         }
     }
 
     #[test]
     fn roundtrip_translated_program() {
-        let k = UkernelId::BlisLmul1.build();
+        let k = KernelRegistry::builtin().get("blis-lmul1").unwrap();
         let p10 = k.program(PanelLayout::new(8, 4, 2));
         let p07 = crate::isa::translate::rvv10_to_thead(&p10).unwrap();
         let back = parse_program(&render_program(&p07)).unwrap();
@@ -299,7 +299,7 @@ mod tests {
     vse64.v v0, 6(a0)
 ";
         let p = parse_program(text).unwrap();
-        let mut m = VecMachine::new(128, 16);
+        let mut m = VecMachine::new(128, 16).unwrap();
         m.mem[0] = 2.0;
         m.mem[1] = 5.0;
         m.mem[4] = 3.0;

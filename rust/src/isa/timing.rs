@@ -72,10 +72,23 @@ impl<'a> CycleModel<'a> {
 
     /// Analyze a program. `Program`s are straight-line; loops must be
     /// peeled/multiplied by the caller (ukernel::analysis does this).
+    /// vl tracking assumes the core's own VLEN (>= 128); programs built
+    /// for a wider machine go through [`CycleModel::analyze_at`].
     pub fn analyze(&self, prog: &Program) -> TimingBreakdown {
+        self.analyze_at(prog, self.core.vlen_bits.max(128))
+    }
+
+    /// [`CycleModel::analyze`] with an explicit VLEN for the vl/vsetvl
+    /// tracking — the descriptor-driven kernel sweeps time programs
+    /// written for VLENs other than the core's shipping width. This is
+    /// deliberately total: a wider-VLEN kernel on narrower silicon is a
+    /// *what-if* projection (the ROADMAP's codesign direction), not an
+    /// error — nothing anywhere rejects a kernel-VLEN/core-VLEN
+    /// mismatch, by design.
+    pub fn analyze_at(&self, prog: &Program, vlen_bits: usize) -> TimingBreakdown {
         let mut _vtype = VType::new(Sew::E64, Lmul::M1);
         let mut vl = 0usize;
-        let vlen = self.core.vlen_bits.max(128);
+        let vlen = vlen_bits.max(64);
         let mut t = TimingBreakdown {
             cycles: 0.0,
             vector_cycles: 0.0,

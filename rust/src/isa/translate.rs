@@ -143,8 +143,8 @@ mod tests {
         // the same result. Run both programs on identical machines.
         let src = sample_rvv10();
         let dst = rvv10_to_thead(&src).unwrap();
-        let mut m1 = VecMachine::new(128, 256);
-        let mut m2 = VecMachine::new(128, 256);
+        let mut m1 = VecMachine::new(128, 256).unwrap();
+        let mut m2 = VecMachine::new(128, 256).unwrap();
         for i in 0..8 {
             m1.mem[i] = (i as f64) * 1.25 - 2.0;
             m2.mem[i] = (i as f64) * 1.25 - 2.0;

@@ -12,9 +12,13 @@
 //!
 //! - [`isa`] — RVV 0.7.1 (theadvector) / RVV 1.0 instruction model with a
 //!   *functional* vector machine (real f64 numerics) and a timing model.
-//! - [`ukernel`] — the four GEMM micro-kernels of the paper (OpenBLAS
-//!   generic/C920, BLIS LMUL=1 of Fig 2a, BLIS LMUL=4 of Fig 2b) as
-//!   instruction schedules.
+//! - [`ukernel`] — the data-driven micro-kernel registry: GEMM kernels
+//!   are [`ukernel::KernelDescriptor`]s (generator family + VLEN, LMUL,
+//!   tile, K-unroll, blocking tunables) in a
+//!   [`ukernel::KernelRegistry`]; built-ins cover the paper's four
+//!   (OpenBLAS generic/C920, BLIS LMUL=1 of Fig 2a, BLIS LMUL=4 of
+//!   Fig 2b) plus the native RVV 1.0 tuning points of the SG2044/MCv3
+//!   successors, and spec files derive more via `[[kernel]]` sections.
 //! - [`blas`] — BLIS-style blocked GEMM over the micro-kernels, cache
 //!   blocking derivation and the calibrated per-library performance model.
 //! - [`cache`] — trace-driven set-associative L1/L2/L3 simulator (Fig 6).

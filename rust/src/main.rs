@@ -21,8 +21,12 @@
 //!                                        matrix (127x HPL / 69x STREAM)
 //!         [--matrix fabric-scaling]  ... or another built-in matrix: the
 //!                                        Fig 5 node-count x fabric sweep
+//!         [--matrix blas-tuning]     ... or the kernel-tuning sweep: the
+//!                                        Fig 2 LMUL uplift on SG2042 vs the
+//!                                        native-RVV 1.0 winner on SG2044
 //! cimone platforms                   the registered platform fleet (SoC table)
 //! cimone fabrics                     the registered interconnects
+//! cimone kernels                     the registered BLAS micro-kernels
 //! cimone translate-demo              section 3.3.1 RVV 1.0 -> 0.7.1 retrofit
 //! ```
 //!
@@ -41,7 +45,7 @@ use cimone::hpl::driver::{run as hpl_run, Backend, HplConfig};
 use cimone::hpl::validate::HPL_THRESHOLD;
 use cimone::isa::asm::render_program;
 use cimone::isa::translate::rvv10_to_thead;
-use cimone::ukernel::{MicroKernel, PanelLayout, UkernelId};
+use cimone::ukernel::{KernelRegistry, PanelLayout};
 use cimone::util::cli::Args;
 use cimone::util::table::Table;
 use cimone::util::Matrix;
@@ -97,10 +101,8 @@ fn run(args: &Args) -> Result<(), CimoneError> {
             let nb = args.get_usize("nb", 32)?;
             let backend = match args.get("lib") {
                 None => Backend::Native,
-                Some(l) => Backend::SimulatedBlas(
-                    UkernelId::parse(l)
-                        .ok_or_else(|| CimoneError::Cli(format!("unknown library `{l}`")))?,
-                ),
+                // typed UnknownKernel (listing the registered ids) on a typo
+                Some(l) => Backend::SimulatedBlas(KernelRegistry::builtin().get(l)?),
             };
             let r =
                 hpl_run(&HplConfig { n, nb, seed: args.get_usize("seed", 42)? as u64, backend })?;
@@ -183,9 +185,11 @@ fn run(args: &Args) -> Result<(), CimoneError> {
                 (Some(path), None) => ScenarioMatrix::load(path)?,
                 (None, Some("generations")) | (None, None) => ScenarioMatrix::generations(),
                 (None, Some("fabric-scaling")) => ScenarioMatrix::fabric_scaling(),
+                (None, Some("blas-tuning")) => ScenarioMatrix::blas_tuning(),
                 (None, Some(other)) => {
                     return Err(CimoneError::Cli(format!(
-                        "unknown built-in matrix `{other}` (generations | fabric-scaling)"
+                        "unknown built-in matrix `{other}` \
+                         (generations | fabric-scaling | blas-tuning)"
                     )));
                 }
             };
@@ -254,8 +258,38 @@ fn run(args: &Args) -> Result<(), CimoneError> {
             }
             println!("{}", t.render());
         }
+        Some("kernels") => {
+            let reg = KernelRegistry::builtin();
+            let mut t = Table::new(vec![
+                "id",
+                "label",
+                "family",
+                "VLEN",
+                "LMUL",
+                "tile",
+                "unroll",
+                "blocking",
+                "overhead",
+                "aliases",
+            ]);
+            for k in reg.kernels() {
+                t.row(vec![
+                    k.id.clone(),
+                    k.label.clone(),
+                    k.family.spec_name().to_string(),
+                    if k.vlen_bits == 0 { "scalar".into() } else { k.vlen_bits.to_string() },
+                    format!("m{}", k.lmul.multiplier()),
+                    format!("{}x{}", k.mr, k.nr),
+                    k.k_unroll.to_string(),
+                    k.blocking.spec_name().to_string(),
+                    format!("{:.0}%", 100.0 * k.host_overhead),
+                    k.aliases.join(", "),
+                ]);
+            }
+            println!("{}", t.render());
+        }
         Some("translate-demo") => {
-            let kernel = cimone::ukernel::blis_lmul1::BlisLmul1;
+            let kernel = KernelRegistry::builtin().get("blis-lmul1")?;
             let prog = kernel.program(PanelLayout::new(8, 4, 1));
             println!("--- BLIS rv64iv micro-kernel (RVV 1.0), one k-step ---");
             println!("{}", render_program(&prog));
@@ -270,7 +304,7 @@ fn run(args: &Args) -> Result<(), CimoneError> {
             )));
         }
         None => {
-            println!("usage: cimone <stream|hpl|cluster-hpl|cache-miss|blis-compare|headline|report-all|sweeps|run-hpl|validate|campaign|sweep|platforms|fabrics|translate-demo>");
+            println!("usage: cimone <stream|hpl|cluster-hpl|cache-miss|blis-compare|headline|report-all|sweeps|run-hpl|validate|campaign|sweep|platforms|fabrics|kernels|translate-demo>");
         }
     }
     Ok(())

@@ -1,123 +1,138 @@
-//! LMUL ablation: the paper jumps from LMUL=1 to LMUL=4 — this module
-//! fills in the design space (M1/M2/M4 and the *infeasible* M8) so the
-//! ablation bench can show WHY 4 is the right grouping for an 8-row
-//! micro-tile on VLEN=128:
+//! Descriptor-driven kernel-parameter ablation: the paper jumps from
+//! LMUL=1 straight to LMUL=4 — this module fills in the design space as
+//! *data*, sweeping [`KernelDescriptor`]s over LMUL x K-unroll x VLEN
+//! instead of the seed's hard-coded case list:
 //!
 //! - LMUL=1: 4 loads + 4 FMAs per column (Fig 2a, BLIS's shipped kernel);
 //! - LMUL=2: 2 + 2 — halves the instruction count;
 //! - LMUL=4: 1 + 1 — one register group IS the column (Fig 2b, the paper);
 //! - LMUL=8: the column only fills half a group, and the four C-column
-//!   accumulator groups alone need all 32 registers — the kernel cannot
-//!   be register-allocated. `grouped_program` still emits it so tests can
-//!   show validation rejecting it (the paper's implicit reason for
-//!   stopping at 4).
+//!   accumulator groups alone need all 32 registers — the descriptor
+//!   fails validation with a typed [`CimoneError::InvalidKernel`], the
+//!   paper's implicit reason for stopping at 4.
+//!
+//! The K-unroll and VLEN axes are what the SG2044's native RVV 1.0
+//! pipeline re-opens (arXiv 2508.13840): once vector dispatch stops
+//! being the bottleneck, deeper unroll and wider registers move the
+//! tuning point — the story `cimone sweep --matrix blas-tuning` tells
+//! at node level.
+//!
+//! [`CimoneError::InvalidKernel`]: crate::error::CimoneError::InvalidKernel
 
-use super::layout::PanelLayout;
-use crate::isa::inst::{Dialect, Inst, Program};
-use crate::isa::rvv::{Lmul, Sew, VType};
+use super::registry::{blis_lmul4, BlockingPolicy, KernelDescriptor, KernelFamily};
+use super::PanelLayout;
+use crate::arch::soc::CoreModel;
+use crate::isa::rvv::Lmul;
+use crate::isa::timing::CycleModel;
 
+/// The paper's register-tile geometry, shared by every sweep point.
 pub const MR: usize = 8;
 pub const NR: usize = 4;
-/// FP64 lanes per register at VLEN=128.
-const LANES: usize = 2;
 
-/// Emit the grouped micro-kernel for an arbitrary LMUL.
-///
-/// Register map generalizes blis_lmul1/blis_lmul4: C column j occupies the
-/// group starting at `j * regs_per_col`, the A column lives at v16 (or the
-/// first group boundary past the accumulators).
-pub fn grouped_program(lmul: Lmul, l: PanelLayout) -> Program {
-    assert_eq!((l.mr, l.nr), (MR, NR));
-    let group = lmul.multiplier();
-    let elems_per_group = group * LANES;
-    // how many architectural registers one 8-element column needs
-    let regs_per_col = MR.div_ceil(elems_per_group) * group;
-    let ops_per_col = MR.div_ceil(elems_per_group);
-    let a_base = ((NR * regs_per_col).div_ceil(group) * group).max(16) as u8;
-
-    let mut p = Program::new(Dialect::Rvv10);
-    let mut vt = VType::new(Sew::E64, lmul);
-    vt.tail_agnostic = true;
-    vt.mask_agnostic = true;
-    p.push(Inst::Vsetvli { avl: elems_per_group.min(MR), vtype: vt });
-
-    for j in 0..NR {
-        for r in 0..ops_per_col {
-            p.push(Inst::Vle {
-                sew: Sew::E64,
-                vd: (j * regs_per_col + r * group) as u8,
-                addr: l.c_offset(j) + r * elems_per_group,
-            });
-        }
+fn lmul_tag(lmul: Lmul) -> &'static str {
+    match lmul {
+        Lmul::M1 => "m1",
+        Lmul::M2 => "m2",
+        Lmul::M4 => "m4",
+        Lmul::M8 => "m8",
+        Lmul::Fractional => "mf",
     }
-    for k in 0..l.kc {
-        for r in 0..ops_per_col {
-            p.push(Inst::Vle {
-                sew: Sew::E64,
-                vd: a_base + (r * group) as u8,
-                addr: l.a_offset(k) + r * elems_per_group,
-            });
-        }
-        for j in 0..NR {
-            p.push(Inst::Fld { fd: j as u8, addr: l.b_offset(k) + j });
-            for r in 0..ops_per_col {
-                p.push(Inst::VfmaccVf {
-                    vd: (j * regs_per_col + r * group) as u8,
-                    fs: j as u8,
-                    vs2: a_base + (r * group) as u8,
-                });
+}
+
+/// One sweep point: a `blis-rvv` descriptor for the paper's 8x4 tile at
+/// the given (VLEN, LMUL, K-unroll). Not necessarily feasible — callers
+/// gate on [`KernelDescriptor::validate`], which is the point: the
+/// infeasible corners of the grid are *typed errors*, not panics.
+pub fn point(vlen_bits: usize, lmul: Lmul, k_unroll: usize) -> KernelDescriptor {
+    KernelDescriptor {
+        id: format!("blis-v{vlen_bits}-{}-u{k_unroll}", lmul_tag(lmul)),
+        label: format!(
+            "BLIS sweep point (VLEN={vlen_bits}, LMUL={}, unroll {k_unroll})",
+            lmul.multiplier()
+        ),
+        aliases: Vec::new(),
+        family: KernelFamily::BlisRvv,
+        vlen_bits,
+        lmul,
+        native_rvv10: false,
+        mr: MR,
+        nr: NR,
+        k_unroll,
+        blocking: BlockingPolicy::CacheDerived,
+        host_overhead: blis_lmul4().host_overhead,
+    }
+}
+
+/// Is this LMUL register-allocatable for the 8x4 kernel at VLEN=128?
+/// (The constraint that stops the paper at LMUL=4.)
+pub fn feasible(lmul: Lmul) -> bool {
+    point(128, lmul, 1).validate().is_ok()
+}
+
+/// Ablation row: instructions/k-step and cycles/k-step for one sweep
+/// point on a core model.
+pub fn analyze_point(desc: &KernelDescriptor, kc: usize, core: &CoreModel) -> (f64, f64) {
+    let p = desc.program(PanelLayout::new(desc.mr, desc.nr, kc));
+    let t = CycleModel::new(core).analyze_at(&p, super::analysis::timing_vlen(desc, core));
+    (t.insts as f64 / kc as f64, t.cycles / kc as f64)
+}
+
+/// The classic LMUL-only cut of the sweep (VLEN=128, no unroll) — what
+/// `sweeps::lmul_ablation` tabulates.
+pub fn analyze_lmul(lmul: Lmul, kc: usize, core: &CoreModel) -> (f64, f64) {
+    analyze_point(&point(128, lmul, 1), kc, core)
+}
+
+/// One row of the full LMUL x K-unroll x VLEN grid.
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub desc: KernelDescriptor,
+    /// `None` when the descriptor fails validation (register-file
+    /// overflow): the grid stays total, infeasibility is data too.
+    pub insts_per_kstep: Option<f64>,
+    pub cycles_per_kstep: Option<f64>,
+}
+
+/// Sweep the full grid on one core model. Infeasible points (e.g.
+/// LMUL=8, or 8x4 at VLEN=64) come back with `None` metrics instead of
+/// being silently dropped.
+pub fn sweep(
+    vlens: &[usize],
+    lmuls: &[Lmul],
+    unrolls: &[usize],
+    kc: usize,
+    core: &CoreModel,
+) -> Vec<AblationRow> {
+    let mut rows = Vec::new();
+    for &vlen in vlens {
+        for &lmul in lmuls {
+            for &unroll in unrolls {
+                let desc = point(vlen, lmul, unroll);
+                let (insts, cycles) = match desc.validate() {
+                    Ok(()) => {
+                        let (i, c) = analyze_point(&desc, kc, core);
+                        (Some(i), Some(c))
+                    }
+                    Err(_) => (None, None),
+                };
+                rows.push(AblationRow { desc, insts_per_kstep: insts, cycles_per_kstep: cycles });
             }
         }
-        p.push(Inst::Addi);
-        p.push(Inst::Addi);
-        p.push(Inst::Bnez);
     }
-    for j in 0..NR {
-        for r in 0..ops_per_col {
-            p.push(Inst::Vse {
-                sew: Sew::E64,
-                vs: (j * regs_per_col + r * group) as u8,
-                addr: l.c_offset(j) + r * elems_per_group,
-            });
-        }
-    }
-    p
-}
-
-/// Is this LMUL register-allocatable for the 8x4 kernel on a 32-register
-/// file? (The constraint that stops the paper at LMUL=4.)
-pub fn feasible(lmul: Lmul) -> bool {
-    let group = lmul.multiplier();
-    let elems_per_group = group * LANES;
-    let regs_per_col = MR.div_ceil(elems_per_group) * group;
-    let a_regs = MR.div_ceil(elems_per_group) * group;
-    NR * regs_per_col + a_regs <= 32 - group // leave one group of headroom
-}
-
-/// Ablation row: cycles/k-step and instructions/k-step for one LMUL.
-pub fn analyze_lmul(lmul: Lmul, kc: usize, core: &crate::arch::soc::CoreModel) -> (f64, f64) {
-    let p = grouped_program(lmul, PanelLayout::new(MR, NR, kc));
-    let t = crate::isa::timing::CycleModel::new(core).analyze(&p);
-    (t.insts as f64 / kc as f64, t.cycles / kc as f64)
+    rows
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::presets::c920;
-    use crate::isa::exec::VecMachine;
+    use crate::arch::presets::{c920, c920v2};
     use crate::util::Matrix;
 
     fn run_numeric(lmul: Lmul, kc: usize) -> Matrix {
-        let l = PanelLayout::new(MR, NR, kc);
-        let p = grouped_program(lmul, l);
         let a = Matrix::random_hpl(MR, kc, 1);
         let b = Matrix::random_hpl(kc, NR, 2);
         let c = Matrix::random_hpl(MR, NR, 3);
-        let mut m = VecMachine::new(128, l.mem_words());
-        m.mem = l.pack(&a, &b, &c);
-        m.run(&p).unwrap();
-        l.unpack_c(&m.mem)
+        point(128, lmul, 1).run(&a, &b, &c).unwrap()
     }
 
     #[test]
@@ -126,6 +141,18 @@ mod tests {
         for lmul in [Lmul::M2, Lmul::M4] {
             let got = run_numeric(lmul, 16);
             assert!(got.allclose(&want, 0.0, 0.0), "{lmul:?}");
+        }
+    }
+
+    #[test]
+    fn unroll_depth_never_changes_the_numerics() {
+        let a = Matrix::random_hpl(MR, 13, 4);
+        let b = Matrix::random_hpl(13, NR, 5);
+        let c = Matrix::random_hpl(MR, NR, 6);
+        let want = point(128, Lmul::M2, 1).run(&a, &b, &c).unwrap();
+        for unroll in [2usize, 4, 8, 32] {
+            let got = point(128, Lmul::M2, unroll).run(&a, &b, &c).unwrap();
+            assert!(got.allclose(&want, 0.0, 0.0), "unroll {unroll}");
         }
     }
 
@@ -158,6 +185,21 @@ mod tests {
     }
 
     #[test]
+    fn c920v2_flattens_the_lmul_axis() {
+        // the native RVV 1.0 front end (dispatch floor 1.0) erases the
+        // LMUL=1 penalty — which is why the SG2044 tuning point moves to
+        // unroll depth instead (the blas-tuning story)
+        let core = c920v2();
+        let (_, c1) = analyze_lmul(Lmul::M1, 64, &core);
+        let (_, c4) = analyze_lmul(Lmul::M4, 64, &core);
+        assert!((c1 / c4 - 1.0).abs() < 0.05, "{c1:.1} vs {c4:.1}");
+        // deeper unroll still helps (bookkeeping amortization)
+        let (_, u1) = analyze_point(&point(128, Lmul::M2, 1), 64, &core);
+        let (_, u8) = analyze_point(&point(128, Lmul::M2, 8), 64, &core);
+        assert!(u8 < u1, "{u8:.2} !< {u1:.2}");
+    }
+
+    #[test]
     fn m8_is_not_register_allocatable() {
         assert!(feasible(Lmul::M1));
         assert!(feasible(Lmul::M2));
@@ -166,13 +208,43 @@ mod tests {
     }
 
     #[test]
-    fn m4_matches_the_dedicated_kernel() {
-        use crate::ukernel::registry::{MicroKernel, UkernelId};
+    fn m4_point_is_exactly_the_registered_paper_kernel() {
+        // the sweep generator and the built-in descriptor share one code
+        // path: identical programs, instruction for instruction
+        let l = PanelLayout::new(MR, NR, 64);
+        let sweep_prog = point(128, Lmul::M4, 1).program(l);
+        let builtin_prog = blis_lmul4().program(l);
+        assert_eq!(sweep_prog.insts, builtin_prog.insts);
+        assert_eq!(sweep_prog.dialect, builtin_prog.dialect);
+    }
+
+    #[test]
+    fn grid_sweep_is_total_with_typed_infeasibility() {
         let core = c920();
-        let (i_gen, _) = analyze_lmul(Lmul::M4, 64, &core);
-        let k = UkernelId::BlisLmul4.build();
-        let p = k.program(PanelLayout::new(MR, NR, 64));
-        let i_ded = p.len() as f64 / 64.0;
-        assert!((i_gen - i_ded).abs() < 0.6, "{i_gen} vs {i_ded}");
+        let lmuls = [Lmul::M1, Lmul::M2, Lmul::M4, Lmul::M8];
+        let rows = sweep(&[64, 128, 256], &lmuls, &[1, 4], 32, &core);
+        assert_eq!(rows.len(), 3 * 4 * 2);
+        // LMUL=8 at VLEN=128 is marked infeasible, not dropped
+        let m8 = rows
+            .iter()
+            .find(|r| r.desc.vlen_bits == 128 && r.desc.lmul == Lmul::M8 && r.desc.k_unroll == 1)
+            .unwrap();
+        assert!(m8.insts_per_kstep.is_none());
+        // the Fig 2b point is present and measured
+        let m4 = rows
+            .iter()
+            .find(|r| r.desc.vlen_bits == 128 && r.desc.lmul == Lmul::M4 && r.desc.k_unroll == 1)
+            .unwrap();
+        assert!((m4.insts_per_kstep.unwrap() - 12.0).abs() < 0.6);
+        // wider registers cut instructions further at the same LMUL
+        let v256 = rows
+            .iter()
+            .find(|r| r.desc.vlen_bits == 256 && r.desc.lmul == Lmul::M2 && r.desc.k_unroll == 1)
+            .unwrap();
+        let v128 = rows
+            .iter()
+            .find(|r| r.desc.vlen_bits == 128 && r.desc.lmul == Lmul::M2 && r.desc.k_unroll == 1)
+            .unwrap();
+        assert!(v256.insts_per_kstep.unwrap() < v128.insts_per_kstep.unwrap());
     }
 }

@@ -1,11 +1,13 @@
 //! Micro-kernel analysis: per-core performance + instruction-mix metrics.
 //!
 //! Bridges [`crate::isa::timing`] to [`crate::blas::perf`]: for each
-//! kernel, builds a representative KC-step program, runs the cycle model,
-//! and reports raw (in-kernel) and effective (host-overhead-adjusted)
-//! per-core GFLOP/s — the numbers HPL's projection is built on.
+//! kernel *descriptor*, builds a representative KC-step program, runs
+//! the cycle model, and reports raw (in-kernel) and effective
+//! (host-overhead-adjusted) per-core GFLOP/s — the numbers HPL's
+//! projection is built on. Any registered [`KernelDescriptor`] analyzes
+//! against any [`CoreModel`]; nothing here enumerates kernels.
 
-use super::registry::UkernelId;
+use super::registry::{blis_lmul1, blis_lmul4, KernelDescriptor};
 use super::PanelLayout;
 use crate::arch::soc::CoreModel;
 use crate::isa::timing::CycleModel;
@@ -14,48 +16,74 @@ use crate::isa::timing::CycleModel;
 /// that C load/store amortizes, like a real KC~256 blocked DGEMM).
 pub const ANALYSIS_KC: usize = 128;
 
+/// Extra host-overhead fraction charged when a vector kernel runs on a
+/// core speaking the *other* RVV dialect: 0.7.1-era kernels (the
+/// paper's four) need a port to run on a ratified-RVV 1.0 pipeline,
+/// and native RVV 1.0 kernels run through the Section 3.3.1 retrofit
+/// on theadvector cores. Scalar kernels are portable C and never pay
+/// it. Calibrated so the SG2042's best kernel stays the paper's
+/// LMUL=4 retrofit while the SG2044's becomes the native tuning point
+/// (arXiv 2508.13840) — the `blas-tuning` sweep's contrast.
+pub const PORT_TAX: f64 = 0.08;
+
 /// Analysis result for one kernel on one core model.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct UkernelPerf {
-    pub id: UkernelId,
+    /// Registry id of the analyzed kernel.
+    pub id: String,
     pub insts_per_kstep: f64,
     pub cycles_per_kstep: f64,
     pub flops_per_cycle: f64,
     /// In-kernel GFLOP/s on this core.
     pub raw_gflops: f64,
-    /// After library host overhead (packing/framework) — the per-core
-    /// DGEMM rate HPL actually sees.
+    /// After library host overhead (packing/framework) and any
+    /// cross-dialect port tax — the per-core DGEMM rate HPL actually
+    /// sees.
     pub effective_gflops: f64,
 }
 
-/// Analyze one kernel against a core model.
-pub fn analyze(id: UkernelId, core: &CoreModel) -> UkernelPerf {
-    let k = id.build();
-    let (mr, nr) = k.tile();
-    let prog = k.program(PanelLayout::new(mr, nr, ANALYSIS_KC));
-    let t = CycleModel::new(core).analyze(&prog);
+/// The VLEN the cycle model tracks vl at for one (kernel, core) pair:
+/// the widest of the two (floored at 128). Program avl's never exceed
+/// the kernel's own VLMAX, so this reproduces the schedule's intended
+/// element counts exactly — one contract, shared by [`analyze`] and
+/// the ablation sweeps.
+pub fn timing_vlen(desc: &KernelDescriptor, core: &CoreModel) -> usize {
+    desc.vlen_bits.max(core.vlen_bits).max(128)
+}
+
+/// Analyze one kernel descriptor against a core model.
+pub fn analyze(desc: &KernelDescriptor, core: &CoreModel) -> UkernelPerf {
+    let (mr, nr) = desc.tile();
+    let prog = desc.program(PanelLayout::new(mr, nr, ANALYSIS_KC));
+    let t = CycleModel::new(core).analyze_at(&prog, timing_vlen(desc, core));
     let raw = t.gflops(core);
+    let tax = if desc.vlen_bits > 0 && desc.native_rvv10 != core.native_rvv10 {
+        PORT_TAX
+    } else {
+        0.0
+    };
     UkernelPerf {
-        id,
+        id: desc.id.clone(),
         insts_per_kstep: t.insts as f64 / ANALYSIS_KC as f64,
         cycles_per_kstep: t.cycles / ANALYSIS_KC as f64,
         flops_per_cycle: t.flops_per_cycle(),
         raw_gflops: raw,
-        effective_gflops: raw * (1.0 - k.host_overhead()),
+        effective_gflops: raw * (1.0 - desc.host_overhead - tax).max(0.0),
     }
 }
 
 /// The paper's headline micro-kernel comparison: LMUL=4 vs LMUL=1 speedup.
 pub fn lmul_speedup(core: &CoreModel) -> f64 {
-    let t1 = analyze(UkernelId::BlisLmul1, core);
-    let t4 = analyze(UkernelId::BlisLmul4, core);
+    let t1 = analyze(&blis_lmul1(), core);
+    let t4 = analyze(&blis_lmul4(), core);
     t4.raw_gflops / t1.raw_gflops
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::presets::{c920, u74};
+    use crate::arch::presets::{c920, c920v2, u74};
+    use crate::ukernel::registry::KernelRegistry;
 
     #[test]
     fn lmul4_speedup_in_paper_band() {
@@ -68,24 +96,28 @@ mod tests {
     #[test]
     fn effective_rates_match_calibration_targets() {
         // EXPERIMENTS.md 'Calibration': per-core DGEMM rates on the C920
-        // that reproduce Figs 4/7 through the HPL projection.
+        // that reproduce Figs 4/7 through the HPL projection. The
+        // refactor must not move these: built-in descriptors generate
+        // the seed's programs bit for bit.
+        let reg = KernelRegistry::builtin();
         let core = c920();
-        let check = |id, lo, hi| {
-            let e = analyze(id, &core).effective_gflops;
-            assert!((lo..hi).contains(&e), "{id:?}: {e:.2} GF/s outside [{lo}, {hi}]");
+        let check = |id: &str, lo: f64, hi: f64| {
+            let e = analyze(&reg.get(id).unwrap(), &core).effective_gflops;
+            assert!((lo..hi).contains(&e), "{id}: {e:.2} GF/s outside [{lo}, {hi}]");
         };
-        check(UkernelId::OpenblasC920, 2.9, 3.5);
-        check(UkernelId::OpenblasGeneric, 1.9, 2.4);
-        check(UkernelId::BlisLmul1, 1.4, 1.9);
-        check(UkernelId::BlisLmul4, 2.9, 3.5);
+        check("openblas-c920", 2.9, 3.5);
+        check("openblas-generic", 1.9, 2.4);
+        check("blis-lmul1", 1.4, 1.9);
+        check("blis-lmul4", 2.9, 3.5);
     }
 
     #[test]
     fn generic_is_68_percent_of_optimized_at_one_core() {
         // Fig 4: "relative efficiency of 68% with one core"
+        let reg = KernelRegistry::builtin();
         let core = c920();
-        let g = analyze(UkernelId::OpenblasGeneric, &core).effective_gflops;
-        let o = analyze(UkernelId::OpenblasC920, &core).effective_gflops;
+        let g = analyze(&reg.get("openblas-generic").unwrap(), &core).effective_gflops;
+        let o = analyze(&reg.get("openblas-c920").unwrap(), &core).effective_gflops;
         let ratio = g / o;
         assert!((0.60..0.76).contains(&ratio), "ratio {ratio:.3}");
     }
@@ -94,25 +126,28 @@ mod tests {
     fn optimized_blis_reaches_openblas_parity() {
         // Fig 7: "results are now comparable to those of OpenBLAS and, in
         // some cases, even superior"
+        let reg = KernelRegistry::builtin();
         let core = c920();
-        let blis = analyze(UkernelId::BlisLmul4, &core).effective_gflops;
-        let ob = analyze(UkernelId::OpenblasC920, &core).effective_gflops;
+        let blis = analyze(&reg.get("blis-lmul4").unwrap(), &core).effective_gflops;
+        let ob = analyze(&reg.get("openblas-c920").unwrap(), &core).effective_gflops;
         assert!((blis / ob - 1.0).abs() < 0.08, "blis={blis:.2} ob={ob:.2}");
     }
 
     #[test]
     fn instruction_reduction_is_the_mechanism() {
+        let reg = KernelRegistry::builtin();
         let core = c920();
-        let i1 = analyze(UkernelId::BlisLmul1, &core).insts_per_kstep;
-        let i4 = analyze(UkernelId::BlisLmul4, &core).insts_per_kstep;
+        let i1 = analyze(&reg.get("blis-lmul1").unwrap(), &core).insts_per_kstep;
+        let i4 = analyze(&reg.get("blis-lmul4").unwrap(), &core).insts_per_kstep;
         assert!(i4 < i1 / 2.0, "{i4:.1} vs {i1:.1}");
     }
 
     #[test]
     fn scalar_kernel_slowest_on_c920() {
+        let reg = KernelRegistry::builtin();
         let core = c920();
-        let g = analyze(UkernelId::OpenblasGeneric, &core).raw_gflops;
-        let v = analyze(UkernelId::OpenblasC920, &core).raw_gflops;
+        let g = analyze(&reg.get("openblas-generic").unwrap(), &core).raw_gflops;
+        let v = analyze(&reg.get("openblas-c920").unwrap(), &core).raw_gflops;
         assert!(g < v);
     }
 
@@ -120,7 +155,35 @@ mod tests {
     fn u74_has_no_vector_path() {
         // only the scalar kernel is meaningful on MCv1; it must still analyze
         let core = u74();
-        let p = analyze(UkernelId::OpenblasGeneric, &core);
+        let p = analyze(&crate::ukernel::registry::openblas_generic(), &core);
         assert!(p.raw_gflops > 0.2 && p.raw_gflops < 2.0, "{}", p.raw_gflops);
+    }
+
+    #[test]
+    fn tuning_winner_flips_between_sg2042_and_sg2044() {
+        // the blas-tuning premise, at the per-core level: on the SG2042
+        // (0.7.1 retrofit era) the paper's LMUL=4 kernel is the best of
+        // the registered kernels; on the C920v2's native RVV 1.0
+        // pipeline a blis-rvv1-* kernel takes over (arXiv 2508.13840)
+        let reg = KernelRegistry::builtin();
+        let best = |core: &crate::arch::soc::CoreModel| {
+            reg.kernels()
+                .map(|k| {
+                    let e = analyze(k, core).effective_gflops;
+                    (k.id.clone(), e)
+                })
+                .max_by(|a, b| a.1.total_cmp(&b.1))
+                .unwrap()
+        };
+        let (old_winner, old_e) = best(&c920());
+        assert_eq!(old_winner, "blis-lmul4", "SG2042 winner at {old_e:.2} GF/s");
+        let (new_winner, new_e) = best(&c920v2());
+        assert!(new_winner.starts_with("blis-rvv1"), "SG2044 winner {new_winner} {new_e:.2}");
+        // and the native kernels pay the retrofit tax on the old core
+        let native_old =
+            analyze(&reg.get("blis-rvv1-lmul2").unwrap(), &c920()).effective_gflops;
+        let native_new =
+            analyze(&reg.get("blis-rvv1-lmul2").unwrap(), &c920v2()).effective_gflops;
+        assert!(native_new > native_old, "{native_new:.2} !> {native_old:.2}");
     }
 }

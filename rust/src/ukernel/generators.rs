@@ -1,0 +1,384 @@
+//! The two micro-kernel *generator families* behind the registry: every
+//! registered [`KernelDescriptor`](super::registry::KernelDescriptor)
+//! names one of these plus its tunables (VLEN, LMUL, MRxNR tile,
+//! K-unroll), and the generator emits the complete instruction schedule.
+//!
+//! - [`blis_rvv_program`] — BLIS's rank-1-update schedule (Fig 2): per
+//!   k-step, load a column of A into one or more LMUL register groups,
+//!   then for each of the NR columns of B load the scalar and issue the
+//!   grouped `vfmacc.vf` burst. The B scalar is consumed immediately
+//!   (the in-order stall the paper's Fig 2a kernel eats); deeper
+//!   `k_unroll` amortizes the loop bookkeeping, nothing else — the
+//!   schedule is what BLIS's `rv64iv` kernels actually compile to.
+//! - [`openblas_asm_program`] — OpenBLAS's hand-scheduled asm: all NR B
+//!   scalars are software-pipelined ahead of the A loads and the FMA
+//!   burst, so the in-order core never stalls on a just-loaded `f`
+//!   register. With `vlen_bits == 0` it degenerates to the pure-scalar
+//!   `fmadd.d` register-blocked kernel OpenBLAS builds for generic RV64.
+//!
+//! The four paper kernels are fixed points of these generators: the
+//! built-in descriptors reproduce the seed's hand-written programs
+//! bit-for-bit (pinned by `rust/tests/integration_kernels.rs`), and the
+//! same code paths generate every LMUL x K-unroll x VLEN sweep point of
+//! [`super::ablation`].
+
+use super::layout::PanelLayout;
+use crate::isa::inst::{Dialect, Inst, Program};
+use crate::isa::rvv::{Lmul, Sew, VType};
+
+/// Register geometry of one vector micro-kernel configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VectorGeometry {
+    /// FP64 lanes per architectural register (VLEN / 64).
+    pub lanes: usize,
+    /// Architectural registers per LMUL group.
+    pub group: usize,
+    /// Elements one full register group holds.
+    pub elems_per_group: usize,
+    /// Grouped loads/FMAs needed per MR-element column.
+    pub ops_per_col: usize,
+    /// Architectural registers one accumulator column occupies.
+    pub regs_per_col: usize,
+    /// First register of the A-column group(s).
+    pub a_base: usize,
+    /// One past the last architectural register the kernel touches.
+    pub regs_used: usize,
+}
+
+/// The shared derivation both register maps build on; only the A-column
+/// base rule differs per family, so it comes in as a function of the
+/// shared quantities — one place for the `regs_used` accounting the
+/// 32-register-file validation relies on.
+fn geometry(
+    vlen_bits: usize,
+    lmul: Lmul,
+    mr: usize,
+    nr: usize,
+    a_base: impl Fn(usize, usize) -> usize,
+) -> VectorGeometry {
+    let lanes = vlen_bits / 64;
+    let group = lmul.multiplier();
+    let elems_per_group = group * lanes;
+    let ops_per_col = mr.div_ceil(elems_per_group);
+    let regs_per_col = ops_per_col * group;
+    let a_base = a_base(group, ops_per_col);
+    VectorGeometry {
+        lanes,
+        group,
+        elems_per_group,
+        ops_per_col,
+        regs_per_col,
+        a_base,
+        regs_used: a_base + ops_per_col * group,
+    }
+}
+
+/// Derive the register map for a BLIS-style rank-1 kernel: C column `j`
+/// occupies the group run starting at `j * regs_per_col`, the A column
+/// lives at the first group boundary past the accumulators (v16 for
+/// every paper configuration — kept so the built-ins stay bit-identical
+/// to the seed's hand-written kernels).
+pub fn blis_geometry(vlen_bits: usize, lmul: Lmul, mr: usize, nr: usize) -> VectorGeometry {
+    geometry(vlen_bits, lmul, mr, nr, |group, ops_per_col| {
+        ((nr * ops_per_col * group).div_ceil(group) * group).max(16)
+    })
+}
+
+/// Register map for the OpenBLAS asm schedule: the accumulator groups
+/// are *interleaved* — C column `j`, group `r` sits at
+/// `r*nr*group + j*group` (the C920 kernel keeps the top halves of all
+/// four columns in v0..v7 and the bottom halves in v8..v15), and the A
+/// column follows the accumulators directly.
+pub fn openblas_geometry(vlen_bits: usize, lmul: Lmul, mr: usize, nr: usize) -> VectorGeometry {
+    geometry(vlen_bits, lmul, mr, nr, |group, ops_per_col| nr * group * ops_per_col)
+}
+
+/// BLIS rank-1-update schedule (the Fig 2 family), generalized over
+/// VLEN, LMUL and K-unroll. `lmul=M1` / `lmul=M4` at VLEN=128 with
+/// `k_unroll=1` reproduce the paper's Fig 2a / Fig 2b kernels
+/// instruction for instruction. Written in RVV 1.0 (the dialect BLIS
+/// ships); SG2042 callers retrofit it via [`crate::isa::translate`].
+pub fn blis_rvv_program(
+    vlen_bits: usize,
+    lmul: Lmul,
+    k_unroll: usize,
+    l: PanelLayout,
+) -> Program {
+    let g = blis_geometry(vlen_bits, lmul, l.mr, l.nr);
+    let mut p = Program::new(Dialect::Rvv10);
+    let mut vt = VType::new(Sew::E64, lmul);
+    vt.tail_agnostic = true;
+    vt.mask_agnostic = true;
+    p.push(Inst::Vsetvli { avl: g.elems_per_group.min(l.mr), vtype: vt });
+
+    // Load the C tile: `ops_per_col` grouped loads per column.
+    for j in 0..l.nr {
+        for r in 0..g.ops_per_col {
+            p.push(Inst::Vle {
+                sew: Sew::E64,
+                vd: (j * g.regs_per_col + r * g.group) as u8,
+                addr: l.c_offset(j) + r * g.elems_per_group,
+            });
+        }
+    }
+
+    // KC rank-1 update steps, bookkeeping amortized per unrolled block.
+    let mut k = 0;
+    while k < l.kc {
+        let block = k_unroll.min(l.kc - k);
+        for kk in k..k + block {
+            for r in 0..g.ops_per_col {
+                p.push(Inst::Vle {
+                    sew: Sew::E64,
+                    vd: (g.a_base + r * g.group) as u8,
+                    addr: l.a_offset(kk) + r * g.elems_per_group,
+                });
+            }
+            for j in 0..l.nr {
+                p.push(Inst::Fld { fd: j as u8, addr: l.b_offset(kk) + j });
+                for r in 0..g.ops_per_col {
+                    p.push(Inst::VfmaccVf {
+                        vd: (j * g.regs_per_col + r * g.group) as u8,
+                        fs: j as u8,
+                        vs2: (g.a_base + r * g.group) as u8,
+                    });
+                }
+            }
+        }
+        // pointer bumps for A and B, loop branch
+        p.push(Inst::Addi);
+        p.push(Inst::Addi);
+        p.push(Inst::Bnez);
+        k += block;
+    }
+
+    // Store C back.
+    for j in 0..l.nr {
+        for r in 0..g.ops_per_col {
+            p.push(Inst::Vse {
+                sew: Sew::E64,
+                vs: (j * g.regs_per_col + r * g.group) as u8,
+                addr: l.c_offset(j) + r * g.elems_per_group,
+            });
+        }
+    }
+    p
+}
+
+/// OpenBLAS hand-scheduled asm (the `dgemm_kernel_*_c920.S` family),
+/// generalized over VLEN, LMUL and K-unroll. `lmul=M2` at VLEN=128
+/// reproduces the SG2042-optimized kernel bit for bit; `vlen_bits == 0`
+/// reproduces the pure-scalar generic-RV64 kernel. Vector programs are
+/// native theadvector (the Xuantie toolchain emits 0.7.1 directly).
+pub fn openblas_asm_program(
+    vlen_bits: usize,
+    lmul: Lmul,
+    k_unroll: usize,
+    l: PanelLayout,
+) -> Program {
+    if vlen_bits == 0 {
+        return openblas_scalar_program(k_unroll, l);
+    }
+    let g = openblas_geometry(vlen_bits, lmul, l.mr, l.nr);
+    let mut p = Program::new(Dialect::Thead071);
+    let vt = VType::new(Sew::E64, lmul);
+    p.push(Inst::Vsetvli { avl: g.elems_per_group.min(l.mr), vtype: vt });
+
+    // C tile: interleaved accumulator groups (see `openblas_geometry`).
+    for j in 0..l.nr {
+        for r in 0..g.ops_per_col {
+            p.push(Inst::Vle {
+                sew: Sew::E64,
+                vd: (r * l.nr * g.group + j * g.group) as u8,
+                addr: l.c_offset(j) + r * g.elems_per_group,
+            });
+        }
+    }
+
+    let mut k = 0;
+    while k < l.kc {
+        let block = k_unroll.min(l.kc - k);
+        for kk in k..k + block {
+            // software pipeline: hoist ALL scalar loads first...
+            for j in 0..l.nr {
+                p.push(Inst::Fld { fd: j as u8, addr: l.b_offset(kk) + j });
+            }
+            // ...then the A column group(s)...
+            for r in 0..g.ops_per_col {
+                p.push(Inst::Vle {
+                    sew: Sew::E64,
+                    vd: (g.a_base + r * g.group) as u8,
+                    addr: l.a_offset(kk) + r * g.elems_per_group,
+                });
+            }
+            // ...then the FMA burst.
+            for j in 0..l.nr {
+                for r in 0..g.ops_per_col {
+                    p.push(Inst::VfmaccVf {
+                        vd: (r * l.nr * g.group + j * g.group) as u8,
+                        fs: j as u8,
+                        vs2: (g.a_base + r * g.group) as u8,
+                    });
+                }
+            }
+        }
+        p.push(Inst::Addi);
+        p.push(Inst::Addi);
+        p.push(Inst::Bnez);
+        k += block;
+    }
+
+    for j in 0..l.nr {
+        for r in 0..g.ops_per_col {
+            p.push(Inst::Vse {
+                sew: Sew::E64,
+                vs: (r * l.nr * g.group + j * g.group) as u8,
+                addr: l.c_offset(j) + r * g.elems_per_group,
+            });
+        }
+    }
+    p
+}
+
+/// The pure-scalar register-blocked kernel (what OpenBLAS's generic C
+/// kernel compiles to): accumulators in f16..f31, the A column in
+/// f0..f{MR-1}, the B row in f{MR}..f{MR+NR-1}, 2 FLOPs per `fmadd.d`.
+fn openblas_scalar_program(k_unroll: usize, l: PanelLayout) -> Program {
+    let mut p = Program::new(Dialect::Rvv10); // dialect irrelevant: no vector insts
+    // Load C tile into accumulators f16.. (column-major).
+    for j in 0..l.nr {
+        for i in 0..l.mr {
+            p.push(Inst::Fld { fd: (16 + j * l.mr + i) as u8, addr: l.c_offset(j) + i });
+        }
+    }
+    let mut k = 0;
+    while k < l.kc {
+        let block = k_unroll.min(l.kc - k);
+        for kk in k..k + block {
+            // A column -> f0.., B row -> f{mr}..
+            for i in 0..l.mr {
+                p.push(Inst::Fld { fd: i as u8, addr: l.a_offset(kk) + i });
+            }
+            for j in 0..l.nr {
+                p.push(Inst::Fld { fd: (l.mr + j) as u8, addr: l.b_offset(kk) + j });
+            }
+            for j in 0..l.nr {
+                for i in 0..l.mr {
+                    let acc = (16 + j * l.mr + i) as u8;
+                    p.push(Inst::FmaddD {
+                        fd: acc,
+                        fs1: i as u8,
+                        fs2: (l.mr + j) as u8,
+                        fs3: acc,
+                    });
+                }
+            }
+        }
+        p.push(Inst::Addi);
+        p.push(Inst::Addi);
+        p.push(Inst::Bnez);
+        k += block;
+    }
+    for j in 0..l.nr {
+        for i in 0..l.mr {
+            p.push(Inst::Fsd { fs: (16 + j * l.mr + i) as u8, addr: l.c_offset(j) + i });
+        }
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blis_geometry_reproduces_the_paper_register_maps() {
+        // Fig 2a: LMUL=1 at VLEN=128 — 4 registers per 8-element column,
+        // A at v16
+        let g = blis_geometry(128, Lmul::M1, 8, 4);
+        assert_eq!((g.elems_per_group, g.ops_per_col, g.regs_per_col), (2, 4, 4));
+        assert_eq!(g.a_base, 16);
+        assert_eq!(g.regs_used, 20);
+        // Fig 2b: LMUL=4 — one group IS the column
+        let g = blis_geometry(128, Lmul::M4, 8, 4);
+        assert_eq!((g.elems_per_group, g.ops_per_col, g.regs_per_col), (8, 1, 4));
+        assert_eq!(g.a_base, 16);
+        // LMUL=8: the four accumulator groups alone fill the file
+        let g = blis_geometry(128, Lmul::M8, 8, 4);
+        assert_eq!(g.a_base, 32);
+        assert!(g.regs_used > 32, "LMUL=8 must not be register-allocatable");
+    }
+
+    #[test]
+    fn openblas_geometry_matches_the_c920_kernel() {
+        let g = openblas_geometry(128, Lmul::M2, 8, 4);
+        assert_eq!((g.elems_per_group, g.ops_per_col), (4, 2));
+        assert_eq!(g.a_base, 16);
+        assert_eq!(g.regs_used, 20);
+    }
+
+    #[test]
+    fn k_unroll_amortizes_only_bookkeeping() {
+        let l = PanelLayout::new(8, 4, 8);
+        let u1 = blis_rvv_program(128, Lmul::M4, 1, l);
+        let u4 = blis_rvv_program(128, Lmul::M4, 4, l);
+        // 8 blocks of bookkeeping vs 2: 6 x 3 fewer instructions
+        assert_eq!(u1.len() - u4.len(), 6 * 3);
+        // the data-path instructions are identical and in order
+        let data = |p: &Program| {
+            p.insts
+                .iter()
+                .filter(|i| !matches!(i, Inst::Addi | Inst::Bnez))
+                .copied()
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(data(&u1), data(&u4));
+    }
+
+    #[test]
+    fn partial_tail_block_still_covers_every_kstep() {
+        // kc=7 with unroll 4: blocks of 4 and 3
+        let l = PanelLayout::new(8, 4, 7);
+        let p = blis_rvv_program(128, Lmul::M4, 4, l);
+        let fmas = p.insts.iter().filter(|i| matches!(i, Inst::VfmaccVf { .. })).count();
+        assert_eq!(fmas, 7 * 4, "one grouped FMA per column per k-step");
+        let branches = p.insts.iter().filter(|i| matches!(i, Inst::Bnez)).count();
+        assert_eq!(branches, 2, "two unrolled blocks");
+    }
+
+    #[test]
+    fn vlen256_halves_the_group_ops() {
+        // at VLEN=256 an LMUL=2 group already holds 8 f64 lanes
+        let l = PanelLayout::new(8, 4, 4);
+        let narrow = blis_rvv_program(128, Lmul::M2, 1, l);
+        let wide = blis_rvv_program(256, Lmul::M2, 1, l);
+        assert!(wide.len() < narrow.len(), "{} vs {}", wide.len(), narrow.len());
+        assert!(wide.validate_register_groups(256).is_ok());
+    }
+
+    #[test]
+    fn scalar_program_has_no_vector_instructions() {
+        let p = openblas_asm_program(0, Lmul::M1, 1, PanelLayout::new(4, 4, 5));
+        assert!(p.insts.iter().all(|i| !i.is_vector()));
+        // 8 fld + 16 fmadd per k-step + 3 bookkeeping, 16 C loads + stores
+        assert_eq!(p.len(), 32 + 5 * 24 + 5 * 3);
+    }
+
+    #[test]
+    fn openblas_vector_flds_are_hoisted() {
+        let p = openblas_asm_program(128, Lmul::M2, 1, PanelLayout::new(8, 4, 1));
+        let first_fma = p.insts.iter().position(|i| matches!(i, Inst::VfmaccVf { .. })).unwrap();
+        let last_fld = p.insts.iter().rposition(|i| matches!(i, Inst::Fld { .. })).unwrap();
+        assert!(last_fld < first_fma, "flds must precede the FMA burst");
+    }
+
+    #[test]
+    fn programs_validate_their_register_groups() {
+        for lmul in [Lmul::M1, Lmul::M2, Lmul::M4] {
+            let p = blis_rvv_program(128, lmul, 1, PanelLayout::new(8, 4, 3));
+            assert!(p.validate_register_groups(128).is_ok(), "{lmul:?}");
+        }
+        let p = openblas_asm_program(128, Lmul::M2, 1, PanelLayout::new(8, 4, 3));
+        assert!(p.validate_register_groups(128).is_ok());
+    }
+}

@@ -1,26 +1,32 @@
-//! The four GEMM micro-kernels of the paper's evaluation, as instruction
-//! schedules over [`crate::isa`]:
+//! The GEMM micro-kernel layer, data-driven: kernels are
+//! [`KernelDescriptor`]s in a [`KernelRegistry`] (the BLAS analogue of
+//! the platform and fabric registries), each naming a generator family
+//! plus its tunables (VLEN, LMUL, MRxNR tile, K-unroll, blocking
+//! policy). The built-ins cover the paper's evaluation and its native
+//! RVV 1.0 successors:
 //!
-//! | name               | paper role                                  |
-//! |--------------------|---------------------------------------------|
-//! | `openblas_generic` | OpenBLAS built for generic RV64 (no RVV)     |
-//! | `openblas_c920`    | OpenBLAS with SG2042-optimized asm kernels   |
-//! | `blis_lmul1`       | BLIS's shipped rv64iv kernel (Fig 2a)        |
-//! | `blis_lmul4`       | the paper's optimized kernel (Fig 2b)        |
+//! | id                 | paper role                                   |
+//! |--------------------|----------------------------------------------|
+//! | `openblas-generic` | OpenBLAS built for generic RV64 (no RVV)     |
+//! | `openblas-c920`    | OpenBLAS with SG2042-optimized asm kernels   |
+//! | `blis-lmul1`       | BLIS's shipped rv64iv kernel (Fig 2a)        |
+//! | `blis-lmul4`       | the paper's optimized kernel (Fig 2b)        |
+//! | `blis-rvv1-lmul2`  | SG2044-native RVV 1.0 tuning point           |
+//! | `blis-rvv1-lmul4`  | MCv3-native RVV 1.0 tuning point             |
 //!
-//! Each generator emits a complete micro-kernel [`Program`] (C-tile loads,
+//! Each descriptor's generator ([`generators`]) emits a complete
+//! micro-kernel [`Program`](crate::isa::inst::Program) (C-tile loads,
 //! KC rank-1 update steps, C-tile stores) over the packed-panel memory
-//! layout in [`layout`]. The programs EXECUTE for real on the functional
-//! vector machine, and the cycle model turns them into per-core GFLOP/s.
+//! layout in [`layout`]. The programs EXECUTE for real on the
+//! functional vector machine, and the cycle model ([`analysis`]) turns
+//! them into per-core GFLOP/s. [`ablation`] sweeps the descriptor space
+//! (LMUL x K-unroll x VLEN) that the seed hard-coded.
 
 pub mod ablation;
 pub mod analysis;
-pub mod blis_lmul1;
-pub mod blis_lmul4;
+pub mod generators;
 pub mod layout;
-pub mod openblas_c920;
-pub mod openblas_generic;
 pub mod registry;
 
 pub use layout::PanelLayout;
-pub use registry::{MicroKernel, UkernelId};
+pub use registry::{BlockingPolicy, KernelDescriptor, KernelFamily, KernelRegistry};

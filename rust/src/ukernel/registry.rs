@@ -1,102 +1,571 @@
-//! Micro-kernel trait + registry.
+//! Data-driven micro-kernel registry — the BLAS analogue of
+//! [`crate::arch::PlatformRegistry`] and [`crate::net::FabricRegistry`].
+//!
+//! A [`KernelDescriptor`] bundles identity (id, label, aliases) with a
+//! generator family ([`KernelFamily`]: `openblas-asm` | `blis-rvv`) and
+//! the tunable parameters the paper's BLAS exploration varies: VLEN,
+//! LMUL, the MRxNR register tile, the K-unroll depth, the blocking
+//! policy and the calibrated host (packing/framework) overhead.
+//! Descriptors self-validate as typed [`CimoneError::InvalidKernel`]
+//! (register-file overflow, unsupported VLEN, broken tiles are
+//! load-time errors) and are registered by string id or alias in a
+//! [`KernelRegistry`]. The built-ins:
+//!
+//! | id                | generator     | parameters            | paper role                |
+//! |-------------------|---------------|-----------------------|---------------------------|
+//! | `openblas-generic`| openblas-asm  | scalar (VLEN=0), 4x4  | no-vector baseline        |
+//! | `openblas-c920`   | openblas-asm  | VLEN=128 LMUL=2, 8x4  | SG2042-optimized asm      |
+//! | `blis-lmul1`      | blis-rvv      | VLEN=128 LMUL=1, 8x4  | BLIS shipped (Fig 2a)     |
+//! | `blis-lmul4`      | blis-rvv      | VLEN=128 LMUL=4, 8x4  | the paper's kernel (Fig 2b)|
+//! | `blis-rvv1-lmul2` | blis-rvv      | VLEN=128 LMUL=2, u4   | SG2044 native RVV 1.0     |
+//! | `blis-rvv1-lmul4` | blis-rvv      | VLEN=128 LMUL=4, u2   | MCv3 native RVV 1.0       |
+//!
+//! The four paper kernels produce bit-identical programs to the seed's
+//! hand-written modules (pinned in `rust/tests/integration_kernels.rs`);
+//! the two `blis-rvv1-*` kernels are the native RVV 1.0 tuning points
+//! of arXiv 2508.13840 / 2605.22831 — no retrofit glue, deeper K-unroll,
+//! packing tuned for the C920v2's doubled per-cluster L2 — which is why
+//! their calibrated host overheads sit below the retrofit kernels'.
 
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::generators;
 use super::layout::PanelLayout;
 use crate::error::CimoneError;
 use crate::isa::exec::VecMachine;
 use crate::isa::inst::Program;
+use crate::isa::rvv::Lmul;
+use crate::util::config::Section;
 use crate::util::Matrix;
 
-/// Identifier for the four kernels of the paper's evaluation.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum UkernelId {
-    OpenblasGeneric,
-    OpenblasC920,
-    BlisLmul1,
-    BlisLmul4,
+/// Which program generator emits the kernel's instruction schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelFamily {
+    /// OpenBLAS hand-scheduled asm: software-pipelined scalar loads
+    /// (scalar `fmadd.d` kernel when VLEN = 0).
+    OpenblasAsm,
+    /// BLIS rank-1-update RVV kernel (the Fig 2 schedule family).
+    BlisRvv,
 }
 
-impl UkernelId {
-    pub fn all() -> [UkernelId; 4] {
-        [
-            UkernelId::OpenblasGeneric,
-            UkernelId::OpenblasC920,
-            UkernelId::BlisLmul1,
-            UkernelId::BlisLmul4,
-        ]
-    }
-
-    pub fn label(&self) -> &'static str {
-        match self {
-            UkernelId::OpenblasGeneric => "OpenBLAS (generic RV64)",
-            UkernelId::OpenblasC920 => "OpenBLAS (C920-optimized)",
-            UkernelId::BlisLmul1 => "BLIS (vanilla RVV, LMUL=1)",
-            UkernelId::BlisLmul4 => "BLIS (optimized, LMUL=4)",
-        }
-    }
-
-    /// Canonical spec-file spelling; always re-parseable by
-    /// [`UkernelId::parse`], so spec render/parse round-trips.
+impl KernelFamily {
+    /// Canonical spec-file spelling.
     pub fn spec_name(&self) -> &'static str {
         match self {
-            UkernelId::OpenblasGeneric => "openblas-generic",
-            UkernelId::OpenblasC920 => "openblas-c920",
-            UkernelId::BlisLmul1 => "blis-lmul1",
-            UkernelId::BlisLmul4 => "blis-lmul4",
+            KernelFamily::OpenblasAsm => "openblas-asm",
+            KernelFamily::BlisRvv => "blis-rvv",
         }
     }
 
-    pub fn parse(s: &str) -> Option<UkernelId> {
+    pub fn parse(s: &str) -> Option<KernelFamily> {
         match s {
-            "openblas-generic" | "generic" => Some(UkernelId::OpenblasGeneric),
-            "openblas" | "openblas-opt" | "openblas-c920" => Some(UkernelId::OpenblasC920),
-            "blis" | "blis-vanilla" | "blis-lmul1" => Some(UkernelId::BlisLmul1),
-            "blis-opt" | "blis-lmul4" => Some(UkernelId::BlisLmul4),
+            "openblas-asm" => Some(KernelFamily::OpenblasAsm),
+            "blis-rvv" => Some(KernelFamily::BlisRvv),
             _ => None,
         }
     }
+}
 
-    pub fn build(&self) -> Box<dyn MicroKernel> {
+/// How the library derives its MC/KC/NC cache blocking.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockingPolicy {
+    /// BLIS's analytical model: derive from the socket's cache geometry.
+    CacheDerived,
+    /// OpenBLAS's fixed x86-tuned `param.h` constants.
+    Fixed,
+}
+
+impl BlockingPolicy {
+    /// Canonical spec-file spelling.
+    pub fn spec_name(&self) -> &'static str {
         match self {
-            UkernelId::OpenblasGeneric => Box::new(super::openblas_generic::OpenblasGeneric),
-            UkernelId::OpenblasC920 => Box::new(super::openblas_c920::OpenblasC920),
-            UkernelId::BlisLmul1 => Box::new(super::blis_lmul1::BlisLmul1),
-            UkernelId::BlisLmul4 => Box::new(super::blis_lmul4::BlisLmul4),
+            BlockingPolicy::CacheDerived => "cache-derived",
+            BlockingPolicy::Fixed => "fixed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BlockingPolicy> {
+        match s {
+            "cache-derived" => Some(BlockingPolicy::CacheDerived),
+            "fixed" => Some(BlockingPolicy::Fixed),
+            _ => None,
         }
     }
 }
 
-/// A GEMM micro-kernel: generates an instruction schedule for C += A*B on
-/// packed (MR x KC) x (KC x NR) panels.
-pub trait MicroKernel {
-    fn id(&self) -> UkernelId;
+/// One registrable GEMM micro-kernel: identity + generator family +
+/// tunables. The descriptor IS the kernel — `program`/`run` generate
+/// and execute its schedule directly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelDescriptor {
+    /// Registry key and spec-file spelling (e.g. `blis-lmul4`).
+    pub id: String,
+    /// Human label used in reports (e.g. `BLIS (optimized, LMUL=4)`).
+    pub label: String,
+    /// Alternate spec-file spellings (`blis-opt`, `openblas`, ...).
+    pub aliases: Vec<String>,
+    /// Which generator emits the instruction schedule.
+    pub family: KernelFamily,
+    /// Vector register length in bits; 0 = scalar kernel (no RVV).
+    /// Any power of two >= 64 is accepted — the functional machine and
+    /// cycle model are VLEN-generic.
+    pub vlen_bits: usize,
+    /// Register-group multiplier (ignored by scalar kernels).
+    pub lmul: Lmul,
+    /// Was the kernel tuned (and its `host_overhead` calibrated) for a
+    /// ratified-RVV 1.0 pipeline? The paper's four kernels carry
+    /// `false` — they are 0.7.1-era code (OpenBLAS's theadvector asm,
+    /// BLIS's rv64iv source run through the Section 3.3.1 retrofit).
+    /// Running a vector kernel on the *other* dialect's core pays the
+    /// port tax in [`crate::ukernel::analysis::PORT_TAX`]; scalar
+    /// kernels (VLEN=0) are portable C and never do.
+    pub native_rvv10: bool,
+    /// Register-tile rows (elements of C per column group run).
+    pub mr: usize,
+    /// Register-tile columns.
+    pub nr: usize,
+    /// K-steps per unrolled loop body (>= 1); deeper unroll amortizes
+    /// the pointer-bump/branch bookkeeping.
+    pub k_unroll: usize,
+    /// Cache-blocking derivation policy.
+    pub blocking: BlockingPolicy,
+    /// Fraction of end-to-end DGEMM time spent *outside* the
+    /// micro-kernel (packing, edge tiles, framework dispatch), in
+    /// [0, 1). Calibrated per library — see EXPERIMENTS.md 'Calibration'.
+    pub host_overhead: f64,
+}
+
+impl KernelDescriptor {
+    /// Does `name` refer to this kernel (id or alias)?
+    pub fn matches(&self, name: &str) -> bool {
+        self.id == name || self.aliases.iter().any(|a| a == name)
+    }
 
     /// Native register-tile geometry (mr, nr).
-    fn tile(&self) -> (usize, usize);
+    pub fn tile(&self) -> (usize, usize) {
+        (self.mr, self.nr)
+    }
 
-    /// Emit the full micro-kernel program for KC rank-1 update steps.
-    fn program(&self, layout: PanelLayout) -> Program;
+    fn err(&self, reason: impl Into<String>) -> CimoneError {
+        CimoneError::InvalidKernel { id: self.id.clone(), reason: reason.into() }
+    }
 
-    /// Fraction of end-to-end DGEMM time spent *outside* this kernel
-    /// (packing, edge tiles, BLAS framework dispatch). Calibrated per
-    /// library — see EXPERIMENTS.md 'Calibration'.
-    fn host_overhead(&self) -> f64;
+    /// Check the descriptor's own invariants; every registration path
+    /// runs this, so malformed kernels never reach the generators. This
+    /// is also where the paper's implicit LMUL=8 rejection lives: a
+    /// configuration whose accumulator + A-column groups overflow the
+    /// 32-register file is a typed error, not a miscompiled schedule.
+    pub fn validate(&self) -> Result<(), CimoneError> {
+        if self.id.is_empty() || self.id.contains(char::is_whitespace) {
+            return Err(self.err("id must be non-empty and free of whitespace"));
+        }
+        if self.mr == 0 || self.nr == 0 {
+            return Err(self.err("register tile must be non-empty (mr, nr >= 1)"));
+        }
+        if self.k_unroll == 0 {
+            return Err(self.err("k_unroll must be >= 1"));
+        }
+        if !(self.host_overhead >= 0.0 && self.host_overhead < 1.0) {
+            return Err(self.err("host_overhead must be in [0, 1)"));
+        }
+        if self.lmul.is_fractional() {
+            return Err(self.err("fractional LMUL is not a GEMM-kernel configuration"));
+        }
+        if self.vlen_bits == 0 {
+            // scalar path: accumulators live in f16..f31, A in f0..,
+            // B in f{mr}..
+            if self.family != KernelFamily::OpenblasAsm {
+                return Err(self.err("VLEN=0 (scalar) is only an openblas-asm configuration"));
+            }
+            if self.mr * self.nr > 16 {
+                return Err(self
+                    .err(format!("scalar {}x{} tile overflows f16..f31", self.mr, self.nr)));
+            }
+            if self.mr + self.nr > 16 {
+                return Err(self.err("scalar A column + B row overflow f0..f15"));
+            }
+            return Ok(());
+        }
+        if self.vlen_bits < 64
+            || self.vlen_bits > crate::isa::exec::MAX_VLEN_BITS
+            || !self.vlen_bits.is_power_of_two()
+        {
+            return Err(self.err(format!(
+                "unsupported VLEN {} (need 0 for scalar, or a power of two in 64..={})",
+                self.vlen_bits,
+                crate::isa::exec::MAX_VLEN_BITS
+            )));
+        }
+        if self.nr > 16 {
+            return Err(self.err("nr > 16 overflows the B-scalar FP registers"));
+        }
+        let g = match self.family {
+            KernelFamily::BlisRvv => {
+                generators::blis_geometry(self.vlen_bits, self.lmul, self.mr, self.nr)
+            }
+            KernelFamily::OpenblasAsm => {
+                generators::openblas_geometry(self.vlen_bits, self.lmul, self.mr, self.nr)
+            }
+        };
+        if self.mr > g.elems_per_group && self.mr % g.elems_per_group != 0 {
+            return Err(self.err(format!(
+                "mr={} is not a multiple of the {}-element register group",
+                self.mr, g.elems_per_group
+            )));
+        }
+        if g.regs_used > 32 {
+            return Err(self.err(format!(
+                "register allocation needs v0..v{} — overflows the 32-register file \
+                 (the constraint that stops the paper at LMUL=4)",
+                g.regs_used - 1
+            )));
+        }
+        Ok(())
+    }
 
-    /// Execute the kernel on real data via the functional machine.
-    /// Returns the updated C tile.
-    fn run(
-        &self,
-        a: &Matrix,
-        b: &Matrix,
-        c: &Matrix,
-        vlen_bits: usize,
-    ) -> Result<Matrix, CimoneError> {
-        let (mr, nr) = self.tile();
-        let layout = PanelLayout::new(mr, nr, a.cols());
+    /// Emit the full micro-kernel program for the layout's KC rank-1
+    /// update steps.
+    pub fn program(&self, l: PanelLayout) -> Program {
+        assert_eq!((l.mr, l.nr), (self.mr, self.nr), "{}: layout/tile mismatch", self.id);
+        match self.family {
+            KernelFamily::BlisRvv => {
+                generators::blis_rvv_program(self.vlen_bits, self.lmul, self.k_unroll, l)
+            }
+            KernelFamily::OpenblasAsm => {
+                generators::openblas_asm_program(self.vlen_bits, self.lmul, self.k_unroll, l)
+            }
+        }
+    }
+
+    /// Execute the kernel on real data via the functional machine (at
+    /// the kernel's own VLEN). Returns the updated C tile.
+    pub fn run(&self, a: &Matrix, b: &Matrix, c: &Matrix) -> Result<Matrix, CimoneError> {
+        let layout = PanelLayout::new(self.mr, self.nr, a.cols());
         let prog = self.program(layout);
-        let mut m = VecMachine::new(vlen_bits, layout.mem_words());
+        let mut m = VecMachine::new(self.vlen_bits.max(64), layout.mem_words())?;
         m.mem = layout.pack(a, b, c);
         m.run(&prog).map_err(CimoneError::Machine)?;
         Ok(layout.unpack_c(&m.mem))
+    }
+}
+
+/// OpenBLAS built for the generic RV64 target — the paper's no-vector
+/// baseline: "serving as a baseline that does not leverage the
+/// processor's vector unit" (Section 3.2). Calibrated overhead ~16%:
+/// the slow scalar inner loop makes framework time relatively small.
+pub fn openblas_generic() -> KernelDescriptor {
+    KernelDescriptor {
+        id: "openblas-generic".into(),
+        label: "OpenBLAS (generic RV64)".into(),
+        aliases: vec!["generic".into()],
+        family: KernelFamily::OpenblasAsm,
+        vlen_bits: 0,
+        lmul: Lmul::M1,
+        native_rvv10: false,
+        mr: 4,
+        nr: 4,
+        k_unroll: 1,
+        blocking: BlockingPolicy::Fixed,
+        host_overhead: 0.16,
+    }
+}
+
+/// OpenBLAS's SG2042-optimized DGEMM kernel (`dgemm_kernel_8x4_c920.S`):
+/// LMUL=2 groups, software-pipelined scalar loads, native theadvector.
+/// Calibrated overhead ~38%: its x86-ratio blocking is exactly the
+/// inefficiency Fig 6 exposes.
+pub fn openblas_c920() -> KernelDescriptor {
+    KernelDescriptor {
+        id: "openblas-c920".into(),
+        label: "OpenBLAS (C920-optimized)".into(),
+        aliases: vec!["openblas".into(), "openblas-opt".into()],
+        family: KernelFamily::OpenblasAsm,
+        vlen_bits: 128,
+        lmul: Lmul::M2,
+        native_rvv10: false,
+        mr: 8,
+        nr: 4,
+        k_unroll: 1,
+        blocking: BlockingPolicy::Fixed,
+        host_overhead: 0.38,
+    }
+}
+
+/// BLIS's shipped rv64iv kernel — the Fig 2a schedule (LMUL=1, four
+/// loads + four `vfmacc.vf` per column). Calibrated overhead ~35%.
+pub fn blis_lmul1() -> KernelDescriptor {
+    KernelDescriptor {
+        id: "blis-lmul1".into(),
+        label: "BLIS (vanilla RVV, LMUL=1)".into(),
+        aliases: vec!["blis".into(), "blis-vanilla".into()],
+        family: KernelFamily::BlisRvv,
+        vlen_bits: 128,
+        lmul: Lmul::M1,
+        native_rvv10: false,
+        mr: 8,
+        nr: 4,
+        k_unroll: 1,
+        blocking: BlockingPolicy::CacheDerived,
+        host_overhead: 0.35,
+    }
+}
+
+/// The paper's optimized BLIS kernel — the Fig 2b schedule (LMUL=4, one
+/// load / one `vfmacc.vf` per column). Same blocking and algorithm as
+/// [`blis_lmul1`]; only the schedule changes, which is the paper's
+/// point. Calibrated overhead ~23% (longer effective inner loop).
+pub fn blis_lmul4() -> KernelDescriptor {
+    KernelDescriptor {
+        id: "blis-lmul4".into(),
+        label: "BLIS (optimized, LMUL=4)".into(),
+        aliases: vec!["blis-opt".into()],
+        family: KernelFamily::BlisRvv,
+        vlen_bits: 128,
+        lmul: Lmul::M4,
+        native_rvv10: false,
+        mr: 8,
+        nr: 4,
+        k_unroll: 1,
+        blocking: BlockingPolicy::CacheDerived,
+        host_overhead: 0.23,
+    }
+}
+
+/// BLIS tuned natively for the C920v2's ratified RVV 1.0 pipeline
+/// (arXiv 2508.13840): with the reworked front end no longer
+/// dispatch-bound, LMUL=2 suffices (halving accumulator register
+/// pressure) and the win moves to a deeper K-unroll. Calibrated
+/// overhead ~18% — no retrofit glue, packing tuned for the SG2044's
+/// doubled per-cluster L2.
+pub fn blis_rvv1_lmul2() -> KernelDescriptor {
+    KernelDescriptor {
+        id: "blis-rvv1-lmul2".into(),
+        label: "BLIS (native RVV 1.0, LMUL=2)".into(),
+        aliases: vec!["blis-rvv1".into()],
+        family: KernelFamily::BlisRvv,
+        vlen_bits: 128,
+        lmul: Lmul::M2,
+        native_rvv10: true,
+        mr: 8,
+        nr: 4,
+        k_unroll: 4,
+        blocking: BlockingPolicy::CacheDerived,
+        host_overhead: 0.18,
+    }
+}
+
+/// The LMUL=4 native-RVV 1.0 tuning point (the MCv3 direction, arXiv
+/// 2605.22831): keeps Fig 2b's minimal fetch bandwidth — what a
+/// dual-socket node's contended front end still rewards — at a milder
+/// unroll. Calibrated overhead ~20%.
+pub fn blis_rvv1_lmul4() -> KernelDescriptor {
+    KernelDescriptor {
+        id: "blis-rvv1-lmul4".into(),
+        label: "BLIS (native RVV 1.0, LMUL=4)".into(),
+        aliases: vec![],
+        family: KernelFamily::BlisRvv,
+        vlen_bits: 128,
+        lmul: Lmul::M4,
+        native_rvv10: true,
+        mr: 8,
+        nr: 4,
+        k_unroll: 2,
+        blocking: BlockingPolicy::CacheDerived,
+        host_overhead: 0.20,
+    }
+}
+
+/// Kernels keyed by id, resolvable by id or alias.
+#[derive(Debug, Clone, Default)]
+pub struct KernelRegistry {
+    by_id: BTreeMap<String, Arc<KernelDescriptor>>,
+}
+
+impl KernelRegistry {
+    /// An empty registry.
+    pub fn new() -> KernelRegistry {
+        KernelRegistry::default()
+    }
+
+    /// The built-in kernels: the paper's four plus the native RVV 1.0
+    /// tuning points.
+    pub fn builtin() -> KernelRegistry {
+        let mut reg = KernelRegistry::new();
+        for k in [
+            openblas_generic(),
+            openblas_c920(),
+            blis_lmul1(),
+            blis_lmul4(),
+            blis_rvv1_lmul2(),
+            blis_rvv1_lmul4(),
+        ] {
+            reg.register(k).expect("built-in kernels are valid and unique");
+        }
+        reg
+    }
+
+    /// Validate and add a kernel. Ids and aliases share one namespace;
+    /// any clash with an already-registered name is rejected.
+    pub fn register(
+        &mut self,
+        kernel: KernelDescriptor,
+    ) -> Result<Arc<KernelDescriptor>, CimoneError> {
+        kernel.validate()?;
+        for name in std::iter::once(&kernel.id).chain(kernel.aliases.iter()) {
+            if self.resolve(name).is_some() {
+                return Err(CimoneError::DuplicateKernel(name.clone()));
+            }
+        }
+        let arc = Arc::new(kernel);
+        self.by_id.insert(arc.id.clone(), Arc::clone(&arc));
+        Ok(arc)
+    }
+
+    fn resolve(&self, name: &str) -> Option<&Arc<KernelDescriptor>> {
+        self.by_id.get(name).or_else(|| self.by_id.values().find(|k| k.matches(name)))
+    }
+
+    /// Look a kernel up by id or alias.
+    pub fn get(&self, name: &str) -> Result<Arc<KernelDescriptor>, CimoneError> {
+        self.resolve(name).cloned().ok_or_else(|| CimoneError::UnknownKernel {
+            name: name.to_string(),
+            known: self.ids().join(", "),
+        })
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.resolve(name).is_some()
+    }
+
+    /// Registered ids, sorted.
+    pub fn ids(&self) -> Vec<String> {
+        self.by_id.keys().cloned().collect()
+    }
+
+    /// All registered kernels, in id order.
+    pub fn kernels(&self) -> impl Iterator<Item = &Arc<KernelDescriptor>> {
+        self.by_id.values()
+    }
+
+    /// Register a kernel described by a `[[kernel]]` campaign-spec
+    /// section: a required `base` kernel (id or alias) plus overrides.
+    ///
+    /// ```text
+    /// [[kernel]]
+    /// id = "blis-rvv1-u8"
+    /// base = "blis-rvv1-lmul2"
+    /// k_unroll = 8
+    /// # other overrides: label, family, vlen, lmul, mr, nr, blocking,
+    /// # host_overhead, native_rvv10
+    /// ```
+    pub fn register_section(
+        &mut self,
+        sec: &Section,
+    ) -> Result<Arc<KernelDescriptor>, CimoneError> {
+        const KNOWN_KEYS: &[&str] = &[
+            "id",
+            "base",
+            "label",
+            "family",
+            "vlen",
+            "lmul",
+            "mr",
+            "nr",
+            "k_unroll",
+            "blocking",
+            "host_overhead",
+            "native_rvv10",
+        ];
+        let id = sec
+            .get("id")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| CimoneError::Spec("[[kernel]]: missing string key `id`".into()))?
+            .to_string();
+        let spec_err =
+            |msg: String| -> CimoneError { CimoneError::Spec(format!("kernel `{id}`: {msg}")) };
+        // a misspelled override must be a load-time error, not a kernel
+        // silently identical to its base
+        if let Some(unknown) = sec.keys().find(|k| !KNOWN_KEYS.contains(&k.as_str())) {
+            return Err(spec_err(format!(
+                "unknown key `{unknown}` (known: {})",
+                KNOWN_KEYS.join(", ")
+            )));
+        }
+        let base = sec
+            .get("base")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| spec_err("missing string key `base`".into()))?;
+        let mut k: KernelDescriptor = (*self.get(base)?).clone();
+        let base_label = k.label.clone();
+        k.id = id.clone();
+        k.aliases = Vec::new();
+        k.label = format!("{id} (custom, from {base_label})");
+
+        if let Some(v) = sec.get("label") {
+            k.label =
+                v.as_str().ok_or_else(|| spec_err("`label` must be a string".into()))?.to_string();
+        }
+        if let Some(v) = sec.get("family") {
+            let s = v.as_str().ok_or_else(|| spec_err("`family` must be a string".into()))?;
+            k.family = KernelFamily::parse(s).ok_or_else(|| {
+                spec_err(format!("unknown family `{s}` (openblas-asm | blis-rvv)"))
+            })?;
+        }
+        if let Some(v) = sec.get("blocking") {
+            let s = v.as_str().ok_or_else(|| spec_err("`blocking` must be a string".into()))?;
+            k.blocking = BlockingPolicy::parse(s).ok_or_else(|| {
+                spec_err(format!("unknown blocking `{s}` (cache-derived | fixed)"))
+            })?;
+        }
+        if let Some(v) = sec.get("vlen") {
+            // 0 = scalar; validate() enforces the power-of-two floor
+            k.vlen_bits = v
+                .as_int()
+                .filter(|i| *i >= 0)
+                .ok_or_else(|| spec_err("`vlen` must be a non-negative int".into()))?
+                as usize;
+        }
+        if let Some(v) = sec.get("lmul") {
+            let m = v.as_int().ok_or_else(|| spec_err("`lmul` must be an int (1|2|4|8)".into()))?;
+            k.lmul = match m {
+                1 => Lmul::M1,
+                2 => Lmul::M2,
+                4 => Lmul::M4,
+                8 => Lmul::M8,
+                other => return Err(spec_err(format!("`lmul` must be 1, 2, 4 or 8, got {other}"))),
+            };
+        }
+        let get_usize = |key: &str| -> Result<Option<usize>, CimoneError> {
+            match sec.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_int()
+                    .filter(|i| *i > 0)
+                    .map(|i| Some(i as usize))
+                    .ok_or_else(|| spec_err(format!("`{key}` must be a positive int"))),
+            }
+        };
+        if let Some(v) = get_usize("mr")? {
+            k.mr = v;
+        }
+        if let Some(v) = get_usize("nr")? {
+            k.nr = v;
+        }
+        if let Some(v) = get_usize("k_unroll")? {
+            k.k_unroll = v;
+        }
+        if let Some(v) = sec.get("host_overhead") {
+            k.host_overhead = v
+                .as_float()
+                .filter(|f| f.is_finite())
+                .ok_or_else(|| spec_err("`host_overhead` must be a finite number".into()))?;
+        }
+        if let Some(v) = sec.get("native_rvv10") {
+            k.native_rvv10 =
+                v.as_bool().ok_or_else(|| spec_err("`native_rvv10` must be a bool".into()))?;
+        }
+        self.register(k)
     }
 }
 
@@ -105,28 +574,176 @@ mod tests {
     use super::*;
 
     #[test]
-    fn parse_roundtrip() {
-        assert_eq!(UkernelId::parse("blis-opt"), Some(UkernelId::BlisLmul4));
-        assert_eq!(UkernelId::parse("openblas"), Some(UkernelId::OpenblasC920));
-        assert_eq!(UkernelId::parse("generic"), Some(UkernelId::OpenblasGeneric));
-        assert_eq!(UkernelId::parse("mkl"), None);
+    fn builtin_kernels_register_and_resolve_aliases() {
+        let reg = KernelRegistry::builtin();
+        assert_eq!(
+            reg.ids(),
+            [
+                "blis-lmul1",
+                "blis-lmul4",
+                "blis-rvv1-lmul2",
+                "blis-rvv1-lmul4",
+                "openblas-c920",
+                "openblas-generic",
+            ]
+        );
+        // the seed's `UkernelId::parse` spellings all still resolve
+        assert_eq!(reg.get("openblas").unwrap().id, "openblas-c920");
+        assert_eq!(reg.get("openblas-opt").unwrap().id, "openblas-c920");
+        assert_eq!(reg.get("generic").unwrap().id, "openblas-generic");
+        assert_eq!(reg.get("blis").unwrap().id, "blis-lmul1");
+        assert_eq!(reg.get("blis-vanilla").unwrap().id, "blis-lmul1");
+        assert_eq!(reg.get("blis-opt").unwrap().id, "blis-lmul4");
+        assert_eq!(reg.get("blis-rvv1").unwrap().id, "blis-rvv1-lmul2");
     }
 
     #[test]
-    fn spec_name_reparses_to_the_same_id() {
-        for id in UkernelId::all() {
-            assert_eq!(UkernelId::parse(id.spec_name()), Some(id));
+    fn unknown_kernel_is_typed_and_lists_known_ids() {
+        let reg = KernelRegistry::builtin();
+        match reg.get("mkl") {
+            Err(CimoneError::UnknownKernel { name, known }) => {
+                assert_eq!(name, "mkl");
+                assert!(known.contains("blis-lmul4"), "{known}");
+            }
+            other => panic!("expected UnknownKernel, got {other:?}"),
         }
     }
 
     #[test]
-    fn all_build() {
-        for id in UkernelId::all() {
-            let k = id.build();
-            assert_eq!(k.id(), id);
+    fn duplicate_id_and_alias_rejected() {
+        let mut reg = KernelRegistry::builtin();
+        assert!(matches!(reg.register(blis_lmul4()), Err(CimoneError::DuplicateKernel(_))));
+        let mut k = blis_lmul4();
+        k.id = "blis-b".into();
+        k.aliases = vec!["openblas".into()]; // clashes with openblas-c920's alias
+        assert!(matches!(reg.register(k), Err(CimoneError::DuplicateKernel(_))));
+    }
+
+    #[test]
+    fn validation_catches_broken_invariants() {
+        let breakers: [fn(&mut KernelDescriptor); 7] = [
+            |k| k.vlen_bits = 100,            // not a power of two
+            |k| k.vlen_bits = 1 << 40,        // past the architectural max
+            |k| k.lmul = Lmul::M8,            // 8x4 at M8 overflows the file
+            |k| k.mr = 0,                     // empty tile
+            |k| k.k_unroll = 0,               // zero unroll
+            |k| k.host_overhead = 1.0,        // outside [0, 1)
+            |k| k.id = "has space".into(),    // malformed id
+        ];
+        for broken in breakers {
+            let mut k = blis_lmul4();
+            broken(&mut k);
+            assert!(matches!(k.validate(), Err(CimoneError::InvalidKernel { .. })), "{k:?}");
+        }
+        // a scalar tile too big for f16..f31
+        let mut k = openblas_generic();
+        k.mr = 8;
+        k.nr = 4;
+        assert!(matches!(k.validate(), Err(CimoneError::InvalidKernel { .. })));
+        // scalar is an openblas-asm-only configuration
+        let mut k = blis_lmul1();
+        k.vlen_bits = 0;
+        assert!(matches!(k.validate(), Err(CimoneError::InvalidKernel { .. })));
+    }
+
+    #[test]
+    fn any_power_of_two_vlen_validates() {
+        for vlen in [64usize, 128, 256, 512, 1024] {
+            let mut k = blis_lmul4();
+            k.id = format!("blis-v{vlen}");
+            k.aliases = Vec::new();
+            k.vlen_bits = vlen;
+            // at VLEN=64 the 8x4 M4 tile needs 2 groups/column: 4 cols x
+            // 8 regs + the A groups overflow — that's a *typed* error
+            let v = k.validate();
+            if vlen == 64 {
+                assert!(matches!(v, Err(CimoneError::InvalidKernel { .. })));
+            } else {
+                assert!(v.is_ok(), "VLEN {vlen}: {v:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_builtins_run_c_plus_ab() {
+        let reg = KernelRegistry::builtin();
+        for k in reg.kernels() {
             let (mr, nr) = k.tile();
-            assert!(mr > 0 && nr > 0);
-            assert!((0.0..1.0).contains(&k.host_overhead()));
+            assert!((0.0..1.0).contains(&k.host_overhead), "{}", k.id);
+            let a = Matrix::random_hpl(mr, 16, 1);
+            let b = Matrix::random_hpl(16, nr, 2);
+            let c = Matrix::random_hpl(mr, nr, 3);
+            let out = k.run(&a, &b, &c).unwrap();
+            let mut want = c.clone();
+            Matrix::gemm_acc(&mut want, &a, &b);
+            assert!(out.allclose(&want, 1e-13, 1e-13), "{}", k.id);
         }
+    }
+
+    #[test]
+    fn native_rvv1_kernels_compute_identically_to_the_retrofits() {
+        // tuning changes the schedule, never the math: all four BLIS
+        // kernels round identically (same rank-1 order)
+        let reg = KernelRegistry::builtin();
+        let a = Matrix::random_hpl(8, 32, 21);
+        let b = Matrix::random_hpl(32, 4, 22);
+        let c = Matrix::random_hpl(8, 4, 23);
+        let want = reg.get("blis-lmul1").unwrap().run(&a, &b, &c).unwrap();
+        for id in ["blis-lmul4", "blis-rvv1-lmul2", "blis-rvv1-lmul4"] {
+            let out = reg.get(id).unwrap().run(&a, &b, &c).unwrap();
+            assert!(out.allclose(&want, 0.0, 0.0), "{id}: schedules must round identically");
+        }
+    }
+
+    #[test]
+    fn custom_kernel_from_section_inherits_and_overrides() {
+        use crate::util::config::Config;
+        let cfg = Config::parse(
+            "[[kernel]]\nid = \"blis-u8\"\nbase = \"blis-rvv1-lmul2\"\nk_unroll = 8\nhost_overhead = 0.15\n",
+        )
+        .unwrap();
+        let mut reg = KernelRegistry::builtin();
+        let k = reg.register_section(&cfg.table_arrays["kernel"][0]).unwrap();
+        assert_eq!(k.id, "blis-u8");
+        assert_eq!(k.k_unroll, 8);
+        assert!((k.host_overhead - 0.15).abs() < 1e-12);
+        // inherited geometry and dialect tuning
+        assert_eq!((k.vlen_bits, k.lmul, k.mr, k.nr), (128, Lmul::M2, 8, 4));
+        assert!(k.native_rvv10, "inherited from the native base");
+        assert_eq!(reg.get("blis-u8").unwrap().id, "blis-u8");
+        // ...and the dialect flag is overridable (a 0.7.1 re-port of a
+        // native kernel), so PORT_TAX follows the spec, not the base
+        let cfg = Config::parse(
+            "[[kernel]]\nid = \"blis-u8-071\"\nbase = \"blis-u8\"\nnative_rvv10 = false\n",
+        )
+        .unwrap();
+        let k = reg.register_section(&cfg.table_arrays["kernel"][0]).unwrap();
+        assert!(!k.native_rvv10);
+    }
+
+    #[test]
+    fn custom_kernel_unknown_key_is_rejected() {
+        use crate::util::config::Config;
+        let cfg =
+            Config::parse("[[kernel]]\nid = \"typo\"\nbase = \"blis-lmul4\"\nk_unrol = 4\n")
+                .unwrap();
+        let mut reg = KernelRegistry::builtin();
+        match reg.register_section(&cfg.table_arrays["kernel"][0]) {
+            Err(CimoneError::Spec(m)) => assert!(m.contains("unknown key `k_unrol`"), "{m}"),
+            other => panic!("expected Spec error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn custom_kernel_bad_override_is_rejected() {
+        use crate::util::config::Config;
+        // lmul = 8 on the 8x4 tile cannot be register-allocated
+        let cfg = Config::parse("[[kernel]]\nid = \"dud\"\nbase = \"blis-lmul4\"\nlmul = 8\n")
+            .unwrap();
+        let mut reg = KernelRegistry::builtin();
+        assert!(matches!(
+            reg.register_section(&cfg.table_arrays["kernel"][0]),
+            Err(CimoneError::InvalidKernel { .. })
+        ));
     }
 }

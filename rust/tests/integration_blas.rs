@@ -3,26 +3,28 @@
 //! oracle and across libraries; plus the ISA retrofit pass on the real
 //! kernel programs.
 
+use std::sync::Arc;
+
 use cimone::arch::presets;
 use cimone::blas::gemm::gemm_acc;
 use cimone::blas::library::BlasLibrary;
 use cimone::isa::translate::rvv10_to_thead;
-use cimone::ukernel::{MicroKernel, PanelLayout, UkernelId};
+use cimone::ukernel::{KernelRegistry, PanelLayout};
 use cimone::util::Matrix;
 
 #[test]
-fn all_four_libraries_agree_on_the_same_gemm() {
+fn all_registered_libraries_agree_on_the_same_gemm() {
     let socket = presets::sg2042().sockets[0].clone();
     let a = Matrix::random_hpl(48, 36, 1);
     let b = Matrix::random_hpl(36, 52, 2);
     let c0 = Matrix::random_hpl(48, 52, 3);
     let mut want = c0.clone();
     Matrix::gemm_acc(&mut want, &a, &b);
-    for id in UkernelId::all() {
-        let lib = BlasLibrary::for_socket(id, &socket);
+    for k in KernelRegistry::builtin().kernels() {
+        let lib = BlasLibrary::for_socket(Arc::clone(k), &socket);
         let mut c = c0.clone();
         gemm_acc(&lib, &mut c, &a, &b).unwrap();
-        assert!(c.allclose(&want, 1e-10, 1e-10), "{id:?}");
+        assert!(c.allclose(&want, 1e-10, 1e-10), "{}", k.id);
     }
 }
 
@@ -31,8 +33,9 @@ fn translated_blis_kernel_runs_identically_on_the_machine() {
     // Section 3.3.1 end-to-end: take BLIS's RVV 1.0 micro-kernel program,
     // retrofit it to theadvector, execute both, demand bitwise equality.
     use cimone::isa::exec::VecMachine;
-    for id in [UkernelId::BlisLmul1, UkernelId::BlisLmul4] {
-        let k = id.build();
+    let reg = KernelRegistry::builtin();
+    for id in ["blis-lmul1", "blis-lmul4", "blis-rvv1-lmul2", "blis-rvv1-lmul4"] {
+        let k = reg.get(id).unwrap();
         let (mr, nr) = k.tile();
         let layout = PanelLayout::new(mr, nr, 24);
         let prog10 = k.program(layout);
@@ -43,13 +46,13 @@ fn translated_blis_kernel_runs_identically_on_the_machine() {
         let c = Matrix::random_hpl(mr, nr, 9);
         let mem = layout.pack(&a, &b, &c);
 
-        let mut m10 = VecMachine::new(128, layout.mem_words());
+        let mut m10 = VecMachine::new(128, layout.mem_words()).unwrap();
         m10.mem = mem.clone();
         m10.run(&prog10).unwrap();
-        let mut m07 = VecMachine::new(128, layout.mem_words());
+        let mut m07 = VecMachine::new(128, layout.mem_words()).unwrap();
         m07.mem = mem;
         m07.run(&prog07).unwrap();
-        assert_eq!(m10.mem, m07.mem, "{id:?}: retrofit changed numerics");
+        assert_eq!(m10.mem, m07.mem, "{id}: retrofit changed numerics");
     }
 }
 
@@ -57,9 +60,10 @@ fn translated_blis_kernel_runs_identically_on_the_machine() {
 fn lmul_schedules_bitwise_identical_through_blocked_gemm() {
     // the paper's invariant: the optimization changes the schedule, not
     // the math — even composed through the full macro-kernel loop nest
+    let reg = KernelRegistry::builtin();
     let socket = presets::sg2042().sockets[0].clone();
-    let lib1 = BlasLibrary::for_socket(UkernelId::BlisLmul1, &socket);
-    let lib4 = BlasLibrary::for_socket(UkernelId::BlisLmul4, &socket);
+    let lib1 = BlasLibrary::for_socket(reg.get("blis-lmul1").unwrap(), &socket);
+    let lib4 = BlasLibrary::for_socket(reg.get("blis-lmul4").unwrap(), &socket);
     let a = Matrix::random_hpl(40, 24, 11);
     let b = Matrix::random_hpl(24, 28, 12);
     let mut c1 = Matrix::random_hpl(40, 28, 13);
@@ -74,9 +78,9 @@ fn perf_ordering_matches_fig7_at_all_core_counts() {
     use cimone::blas::perf::PerfModel;
     let d = cimone::arch::platform::mcv2_dual();
     for cores in [1, 8, 16, 32, 64, 128] {
-        let ob = PerfModel::new(&d, UkernelId::OpenblasC920).node_gflops(cores);
-        let bv = PerfModel::new(&d, UkernelId::BlisLmul1).node_gflops(cores);
-        let bo = PerfModel::new(&d, UkernelId::BlisLmul4).node_gflops(cores);
+        let ob = PerfModel::by_id(&d, "openblas-c920").unwrap().node_gflops(cores);
+        let bv = PerfModel::by_id(&d, "blis-lmul1").unwrap().node_gflops(cores);
+        let bo = PerfModel::by_id(&d, "blis-lmul4").unwrap().node_gflops(cores);
         assert!(bv < ob, "vanilla BLIS must trail OpenBLAS at {cores} cores");
         assert!(bo > bv * 1.3, "optimization must pay off at {cores} cores");
         assert!((bo / ob) > 0.94, "parity at {cores} cores: {bo:.1} vs {ob:.1}");

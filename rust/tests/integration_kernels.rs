@@ -1,0 +1,457 @@
+//! Integration: the open kernel registry.
+//!
+//! Three layers of pinning keep the refactor honest:
+//!
+//! 1. **Bit-for-bit program goldens** — the seed's four hand-written
+//!    kernel generators are preserved here as reference
+//!    implementations; the registry's built-in descriptors must emit
+//!    *identical* instruction sequences at every KC depth tested.
+//! 2. **Property tests** (`util::prop::forall`) — every registered
+//!    kernel's GEMM program, executed on the functional vector machine,
+//!    matches the scalar reference GEMM across random small shapes —
+//!    including BLIS sweep variants at wider VLENs (the machine is
+//!    VLEN-generic).
+//! 3. **A pinned SG2042-vs-SG2044 kernel-tuning comparison from spec
+//!    text** — the spec-file path of the `blas-tuning` story, with
+//!    golden windows and a bit-for-bit rerun.
+
+use std::sync::Arc;
+
+use cimone::coordinator::scenario::{dry_run_matrix, ScenarioMatrix};
+use cimone::error::CimoneError;
+use cimone::isa::inst::{Dialect, Inst, Program};
+use cimone::isa::rvv::{Lmul, Sew, VType};
+use cimone::ukernel::{ablation, KernelDescriptor, KernelRegistry, PanelLayout};
+use cimone::util::json::Json;
+use cimone::util::{prop, Matrix, Rng};
+
+// ---------------------------------------------------------------------
+// 1. bit-for-bit program goldens (the seed's generators, verbatim)
+// ---------------------------------------------------------------------
+
+/// The seed's `BlisLmul1::program` (Fig 2a schedule), kept verbatim.
+fn seed_blis_lmul1(l: PanelLayout) -> Program {
+    const LANES: usize = 2;
+    const MR: usize = 8;
+    const NR: usize = 4;
+    const REGS_PER_COL: usize = MR / LANES;
+    let mut p = Program::new(Dialect::Rvv10);
+    let mut vt = VType::new(Sew::E64, Lmul::M1);
+    vt.tail_agnostic = true;
+    vt.mask_agnostic = true;
+    p.push(Inst::Vsetvli { avl: LANES, vtype: vt });
+    for j in 0..NR {
+        for r in 0..REGS_PER_COL {
+            p.push(Inst::Vle {
+                sew: Sew::E64,
+                vd: (j * REGS_PER_COL + r) as u8,
+                addr: l.c_offset(j) + r * LANES,
+            });
+        }
+    }
+    for k in 0..l.kc {
+        for r in 0..REGS_PER_COL {
+            let addr = l.a_offset(k) + r * LANES;
+            p.push(Inst::Vle { sew: Sew::E64, vd: (16 + r) as u8, addr });
+        }
+        for j in 0..NR {
+            p.push(Inst::Fld { fd: j as u8, addr: l.b_offset(k) + j });
+            for r in 0..REGS_PER_COL {
+                p.push(Inst::VfmaccVf {
+                    vd: (j * REGS_PER_COL + r) as u8,
+                    fs: j as u8,
+                    vs2: (16 + r) as u8,
+                });
+            }
+        }
+        p.push(Inst::Addi);
+        p.push(Inst::Addi);
+        p.push(Inst::Bnez);
+    }
+    for j in 0..NR {
+        for r in 0..REGS_PER_COL {
+            p.push(Inst::Vse {
+                sew: Sew::E64,
+                vs: (j * REGS_PER_COL + r) as u8,
+                addr: l.c_offset(j) + r * LANES,
+            });
+        }
+    }
+    p
+}
+
+/// The seed's `BlisLmul4::program` (Fig 2b schedule), kept verbatim.
+fn seed_blis_lmul4(l: PanelLayout) -> Program {
+    const MR: usize = 8;
+    const NR: usize = 4;
+    let mut p = Program::new(Dialect::Rvv10);
+    let mut vt = VType::new(Sew::E64, Lmul::M4);
+    vt.tail_agnostic = true;
+    vt.mask_agnostic = true;
+    p.push(Inst::Vsetvli { avl: MR, vtype: vt });
+    for j in 0..NR {
+        p.push(Inst::Vle { sew: Sew::E64, vd: (j * 4) as u8, addr: l.c_offset(j) });
+    }
+    for k in 0..l.kc {
+        p.push(Inst::Vle { sew: Sew::E64, vd: 16, addr: l.a_offset(k) });
+        for j in 0..NR {
+            p.push(Inst::Fld { fd: j as u8, addr: l.b_offset(k) + j });
+            p.push(Inst::VfmaccVf { vd: (j * 4) as u8, fs: j as u8, vs2: 16 });
+        }
+        p.push(Inst::Addi);
+        p.push(Inst::Addi);
+        p.push(Inst::Bnez);
+    }
+    for j in 0..NR {
+        p.push(Inst::Vse { sew: Sew::E64, vs: (j * 4) as u8, addr: l.c_offset(j) });
+    }
+    p
+}
+
+/// The seed's `OpenblasC920::program`, kept verbatim.
+fn seed_openblas_c920(l: PanelLayout) -> Program {
+    const NR: usize = 4;
+    const GROUP_ELEMS: usize = 4;
+    let mut p = Program::new(Dialect::Thead071);
+    let vt = VType::new(Sew::E64, Lmul::M2);
+    p.push(Inst::Vsetvli { avl: GROUP_ELEMS, vtype: vt });
+    for j in 0..NR {
+        p.push(Inst::Vle { sew: Sew::E64, vd: (j * 2) as u8, addr: l.c_offset(j) });
+        let hi = l.c_offset(j) + GROUP_ELEMS;
+        p.push(Inst::Vle { sew: Sew::E64, vd: (8 + j * 2) as u8, addr: hi });
+    }
+    for k in 0..l.kc {
+        for j in 0..NR {
+            p.push(Inst::Fld { fd: j as u8, addr: l.b_offset(k) + j });
+        }
+        p.push(Inst::Vle { sew: Sew::E64, vd: 16, addr: l.a_offset(k) });
+        p.push(Inst::Vle { sew: Sew::E64, vd: 18, addr: l.a_offset(k) + GROUP_ELEMS });
+        for j in 0..NR {
+            p.push(Inst::VfmaccVf { vd: (j * 2) as u8, fs: j as u8, vs2: 16 });
+            p.push(Inst::VfmaccVf { vd: (8 + j * 2) as u8, fs: j as u8, vs2: 18 });
+        }
+        p.push(Inst::Addi);
+        p.push(Inst::Addi);
+        p.push(Inst::Bnez);
+    }
+    for j in 0..NR {
+        p.push(Inst::Vse { sew: Sew::E64, vs: (j * 2) as u8, addr: l.c_offset(j) });
+        let hi = l.c_offset(j) + GROUP_ELEMS;
+        p.push(Inst::Vse { sew: Sew::E64, vs: (8 + j * 2) as u8, addr: hi });
+    }
+    p
+}
+
+/// The seed's `OpenblasGeneric::program`, kept verbatim.
+fn seed_openblas_generic(l: PanelLayout) -> Program {
+    const MR: usize = 4;
+    const NR: usize = 4;
+    let mut p = Program::new(Dialect::Rvv10);
+    for j in 0..NR {
+        for i in 0..MR {
+            p.push(Inst::Fld { fd: (16 + j * MR + i) as u8, addr: l.c_offset(j) + i });
+        }
+    }
+    for k in 0..l.kc {
+        for i in 0..MR {
+            p.push(Inst::Fld { fd: i as u8, addr: l.a_offset(k) + i });
+        }
+        for j in 0..NR {
+            p.push(Inst::Fld { fd: (4 + j) as u8, addr: l.b_offset(k) + j });
+        }
+        for j in 0..NR {
+            for i in 0..MR {
+                let acc = (16 + j * MR + i) as u8;
+                p.push(Inst::FmaddD { fd: acc, fs1: i as u8, fs2: (4 + j) as u8, fs3: acc });
+            }
+        }
+        p.push(Inst::Addi);
+        p.push(Inst::Addi);
+        p.push(Inst::Bnez);
+    }
+    for j in 0..NR {
+        for i in 0..MR {
+            p.push(Inst::Fsd { fs: (16 + j * MR + i) as u8, addr: l.c_offset(j) + i });
+        }
+    }
+    p
+}
+
+#[test]
+fn builtin_descriptors_reproduce_the_seed_programs_bit_for_bit() {
+    let reg = KernelRegistry::builtin();
+    type SeedGen = fn(PanelLayout) -> Program;
+    let goldens: [(&str, SeedGen); 4] = [
+        ("blis-lmul1", seed_blis_lmul1),
+        ("blis-lmul4", seed_blis_lmul4),
+        ("openblas-c920", seed_openblas_c920),
+        ("openblas-generic", seed_openblas_generic),
+    ];
+    for (id, seed) in goldens {
+        let k = reg.get(id).unwrap();
+        let (mr, nr) = k.tile();
+        for kc in [1usize, 2, 7, 64, 128] {
+            let l = PanelLayout::new(mr, nr, kc);
+            let got = k.program(l);
+            let want = seed(l);
+            assert_eq!(got.dialect, want.dialect, "{id} kc={kc}");
+            assert_eq!(got.insts, want.insts, "{id} kc={kc}: program drifted from the seed");
+        }
+    }
+}
+
+#[test]
+fn seed_instruction_count_formulas_still_hold() {
+    // the per-k-step counts the paper's Fig 2 reasoning is built on
+    let reg = KernelRegistry::builtin();
+    let kc = 10;
+    let count = |id: &str| {
+        let k = reg.get(id).unwrap();
+        let (mr, nr) = k.tile();
+        k.program(PanelLayout::new(mr, nr, kc)).len()
+    };
+    assert_eq!(count("blis-lmul1"), 1 + 16 + 16 + kc * 27);
+    assert_eq!(count("blis-lmul4"), 1 + 4 + 4 + kc * 12);
+    assert_eq!(count("openblas-c920"), 1 + 8 + 8 + kc * 17);
+    assert_eq!(count("openblas-generic"), 16 + 16 + kc * 27);
+}
+
+// ---------------------------------------------------------------------
+// 2. property tests: machine execution vs the scalar oracle
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_every_registered_kernel_matches_scalar_gemm() {
+    let reg = KernelRegistry::builtin();
+    // built-ins plus BLIS sweep variants at every supported wider VLEN
+    // (the functional machine is VLEN-generic now)
+    let mut kernels: Vec<Arc<KernelDescriptor>> = reg.kernels().cloned().collect();
+    for vlen in [256usize, 512, 1024] {
+        for lmul in [Lmul::M1, Lmul::M2, Lmul::M4] {
+            for unroll in [1usize, 4] {
+                let k = ablation::point(vlen, lmul, unroll);
+                if k.validate().is_ok() {
+                    kernels.push(Arc::new(k));
+                }
+            }
+        }
+    }
+    assert!(kernels.len() > 20, "sweep variants must widen the pool: {}", kernels.len());
+    prop::check(
+        "registered kernel GEMM == scalar reference GEMM",
+        0xC1A0,
+        64,
+        |rng: &mut Rng, size: usize| {
+            let kc = rng.range_usize(1, size.clamp(1, 24) + 2);
+            (rng.range_usize(0, kernels.len()), kc, rng.next_u64())
+        },
+        |&(ki, kc, seed)| {
+            let k = &kernels[ki];
+            let (mr, nr) = k.tile();
+            let a = Matrix::random_hpl(mr, kc, seed);
+            let b = Matrix::random_hpl(kc, nr, seed ^ 1);
+            let c = Matrix::random_hpl(mr, nr, seed ^ 2);
+            let out = k.run(&a, &b, &c).map_err(|e| format!("{}: {e}", k.id))?;
+            let mut want = c.clone();
+            Matrix::gemm_acc(&mut want, &a, &b);
+            if out.allclose(&want, 1e-12, 1e-12) {
+                Ok(())
+            } else {
+                Err(format!("{} kc={kc}: tile mismatch", k.id))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_vector_kernels_round_identically_across_vlen() {
+    // same rank-1 order => bit-identical tiles, whatever the VLEN/LMUL
+    // grouping — the paper's "optimization changes the schedule, not
+    // the math" invariant, generalized to the whole sweep space
+    let baseline = ablation::point(128, Lmul::M1, 1);
+    prop::check(
+        "sweep points round identically",
+        0xC1A1,
+        32,
+        |rng: &mut Rng, size: usize| (rng.range_usize(1, size.clamp(1, 16) + 2), rng.next_u64()),
+        |&(kc, seed)| {
+            let a = Matrix::random_hpl(8, kc, seed);
+            let b = Matrix::random_hpl(kc, 4, seed ^ 1);
+            let c = Matrix::random_hpl(8, 4, seed ^ 2);
+            let want = baseline.run(&a, &b, &c).map_err(|e| e.to_string())?;
+            for vlen in [128usize, 256, 512] {
+                for lmul in [Lmul::M1, Lmul::M2, Lmul::M4] {
+                    let k = ablation::point(vlen, lmul, 2);
+                    if k.validate().is_err() {
+                        continue;
+                    }
+                    let out = k.run(&a, &b, &c).map_err(|e| format!("{}: {e}", k.id))?;
+                    if !out.allclose(&want, 0.0, 0.0) {
+                        return Err(format!("{} kc={kc}: rounding drifted", k.id));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// 3. the pinned SG2042-vs-SG2044 kernel-tuning comparison (spec text)
+// ---------------------------------------------------------------------
+
+const TUNING_SPEC: &str = r#"
+# SG2042 vs SG2044 kernel tuning, as data: one 64-core DGEMM ablation
+# crossed over platforms x registered kernels, plus a custom deeper
+# unroll derived in-spec.
+[campaign]
+validate_n = 48
+
+[[kernel]]
+id = "blis-rvv1-u8"
+base = "blis-rvv1-lmul2"
+k_unroll = 8
+
+[[workload]]
+kind = "blis-ablation"
+name = "dgemm"
+platform = "mcv2-pioneer"
+partition = "mcv2"
+lib = "blis-lmul1"
+cores = 64
+
+[matrix]
+platforms = ["mcv2-pioneer", "sg2044"]
+libs = ["blis-lmul1", "blis-lmul4", "blis-rvv1-lmul2", "blis-rvv1-u8"]
+"#;
+
+#[test]
+fn golden_kernel_tuning_comparison_is_pinned_and_reproducible() {
+    let matrix = ScenarioMatrix::parse(TUNING_SPEC).unwrap();
+    let report = dry_run_matrix(&matrix).unwrap();
+    assert_eq!(report.scenarios.len(), 8, "2 platforms x 4 kernels");
+
+    let gf = |name: &str| report.outcome(name).unwrap().hpl_gflops;
+    // golden windows, anchored to Fig 7's 128-core numbers halved to one
+    // socket (BLIS vanilla ~165/2, BLIS opt ~245.8/1.76) and the SG2044
+    // evaluation's uplift
+    let pins = [
+        ("mcv2-pioneer/blis-lmul1", 80.0, 105.0),
+        ("mcv2-pioneer/blis-lmul4", 125.0, 155.0),
+        ("sg2044/blis-lmul1", 160.0, 190.0),
+        ("sg2044/blis-rvv1-lmul2", 235.0, 275.0),
+    ];
+    for (name, lo, hi) in pins {
+        let v = gf(name);
+        assert!((lo..hi).contains(&v), "{name}: {v:.1} left the golden window [{lo}, {hi})");
+    }
+    // the acceptance punchlines: LMUL=4 > LMUL=1 on the SG2042...
+    assert!(gf("mcv2-pioneer/blis-lmul4") > 1.3 * gf("mcv2-pioneer/blis-lmul1"));
+    // ...and a native-RVV 1.0 kernel wins the SG2044 column
+    let sg2044_best = report
+        .scenarios
+        .iter()
+        .filter(|o| o.name.starts_with("sg2044/"))
+        .max_by(|a, b| a.hpl_gflops.total_cmp(&b.hpl_gflops))
+        .unwrap();
+    assert!(
+        sg2044_best.name.contains("blis-rvv1"),
+        "SG2044 winner must be native RVV 1.0, got {} at {:.1}",
+        sg2044_best.name,
+        sg2044_best.hpl_gflops
+    );
+    // the custom in-spec kernel (deeper unroll) really participates and
+    // lands between its base's neighbours, not at zero
+    let custom = gf("sg2044/blis-rvv1-u8");
+    assert!(custom > 200.0, "custom kernel row: {custom:.1}");
+
+    // bit-for-bit rerun: the golden numbers cannot wander
+    let rerun = dry_run_matrix(&matrix).unwrap();
+    assert_eq!(rerun, report);
+
+    // spec render round-trips, custom [[kernel]] included
+    let back = ScenarioMatrix::parse(&matrix.render()).unwrap();
+    assert_eq!(back, matrix);
+}
+
+#[test]
+fn blas_tuning_builtin_json_reports_the_acceptance_numbers() {
+    // what `cimone sweep --matrix blas-tuning --dry-run --json` emits,
+    // validated through our own parser
+    let report = dry_run_matrix(&ScenarioMatrix::blas_tuning()).unwrap();
+    let parsed = Json::parse(&report.to_json().render()).unwrap();
+    let rows = parsed.get("scenarios").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 8);
+    let gf = |name: &str| {
+        rows.iter()
+            .find(|r| r.get("name").unwrap().as_str() == Some(name))
+            .unwrap_or_else(|| panic!("missing scenario {name}"))
+            .get("hpl_gflops")
+            .unwrap()
+            .as_f64()
+            .unwrap()
+    };
+    // LMUL=4 > LMUL=1 on SG2042 (Fig 2's uplift, node level)
+    assert!(gf("mcv2-pioneer/blis-lmul4") > 1.3 * gf("mcv2-pioneer/blis-lmul1"));
+    // the native-RVV 1.0 kernel is the SG2044 winner
+    let native = gf("sg2044/blis-rvv1-lmul2");
+    for other in ["sg2044/blis-lmul1", "sg2044/blis-lmul4", "sg2044/blis-rvv1-lmul4"] {
+        assert!(native > gf(other), "{other}: {:.1} !< {native:.1}", gf(other));
+    }
+}
+
+// ---------------------------------------------------------------------
+// typed-error surface
+// ---------------------------------------------------------------------
+
+#[test]
+fn unknown_kernels_are_typed_everywhere() {
+    use cimone::cluster::monte_cimone_v2;
+    use cimone::coordinator::workload::{BlisAblationWorkload, HplWorkload, Workload};
+    let inv = monte_cimone_v2();
+    // estimation-time resolution (registry travels with the inventory)
+    let w = BlisAblationWorkload {
+        name: "x".into(),
+        partition: "mcv2".into(),
+        platform: "mcv2-dual".into(),
+        lib: "mkl".into(),
+        cores: 128,
+        runtime_s: 3600.0,
+    };
+    assert!(matches!(
+        w.estimate(&inv),
+        Err(CimoneError::UnknownKernel { ref name, .. }) if name == "mkl"
+    ));
+    let w = HplWorkload {
+        name: "h".into(),
+        partition: "mcv2".into(),
+        nodes: 1,
+        platform: "mcv2-pioneer".into(),
+        cluster_nodes: 1,
+        cores_per_node: 64,
+        lib: Some("mkl".into()),
+        fabric: None,
+    };
+    assert!(matches!(
+        w.estimate(&inv),
+        Err(CimoneError::UnknownKernel { ref name, .. }) if name == "mkl"
+    ));
+}
+
+#[test]
+fn kernel_aliases_resolve_end_to_end_from_spec_text() {
+    use cimone::coordinator::CampaignSpec;
+    // the seed's `blis-opt` / `openblas` spellings still work in specs
+    let spec = CampaignSpec::parse(
+        "[[workload]]\nkind = \"blis-ablation\"\nname = \"b\"\npartition = \"mcv2\"\nlib = \"blis-opt\"\n\n\
+         [[workload]]\nkind = \"hpl\"\nname = \"h\"\nplatform = \"mcv2\"\npartition = \"mcv2\"\n\
+         cores_per_node = 64\nlib = \"openblas\"\n",
+    )
+    .unwrap();
+    let inv = spec.build_inventory().unwrap();
+    let rows = cimone::coordinator::dry_run_spec(&inv, &spec).unwrap();
+    assert_eq!(rows.len(), 2);
+    for r in &rows {
+        assert!(r.headline > 0.0, "{}: {}", r.name, r.headline);
+    }
+}

@@ -54,20 +54,19 @@ fn ukernel_artifacts_match_isa_machine() {
     // The same micro-panel through (a) the Pallas-authored HLO and (b) the
     // RVV functional machine running the BLIS schedules: one paper, three
     // layers, one answer.
-    use cimone::ukernel::{MicroKernel, UkernelId};
+    use cimone::ukernel::KernelRegistry;
     let Some(mut rt) = runtime_or_skip() else { return };
     let a = Matrix::random_hpl(8, 64, 21);
     let b = Matrix::random_hpl(64, 8, 22);
     let c = Matrix::random_hpl(8, 8, 23);
+    let reg = KernelRegistry::builtin();
     for variant in ["lmul1", "lmul4"] {
         let pjrt = entries::ukernel(&mut rt, variant, &a, &b, &c).expect("pjrt ukernel");
         // ISA kernels are 8x4: split the 8-column problem into two calls
-        let id = if variant == "lmul1" { UkernelId::BlisLmul1 } else { UkernelId::BlisLmul4 };
-        let k = id.build();
-        let left =
-            k.run(&a, &b.block(0, 0, 64, 4), &c.block(0, 0, 8, 4), 128).expect("isa left");
-        let right =
-            k.run(&a, &b.block(0, 4, 64, 4), &c.block(0, 4, 8, 4), 128).expect("isa right");
+        let id = if variant == "lmul1" { "blis-lmul1" } else { "blis-lmul4" };
+        let k = reg.get(id).unwrap();
+        let left = k.run(&a, &b.block(0, 0, 64, 4), &c.block(0, 0, 8, 4)).expect("isa left");
+        let right = k.run(&a, &b.block(0, 4, 64, 4), &c.block(0, 4, 8, 4)).expect("isa right");
         let mut isa = Matrix::zeros(8, 8);
         isa.set_block(0, 0, &left);
         isa.set_block(0, 4, &right);
