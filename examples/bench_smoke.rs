@@ -1,0 +1,48 @@
+//! CI smoke for `cimone bench`: validate a bench JSON file (as written
+//! by `cimone bench --quick --out FILE`) through `Json::parse`, check
+//! every recorded metric is present and positive, and print the
+//! determinism fingerprint so the CI job can compare two fresh runs.
+//!
+//! ```text
+//! cargo run --example bench_smoke -- BENCH_A.json
+//! ```
+//!
+//! Without an argument it runs the quick suite in-process instead and
+//! validates its JSON the same way.
+
+use cimone::util::json::Json;
+
+const REQUIRED_KEYS: [&str; 7] = [
+    "vec_machine_insts_per_s",
+    "program_gen_per_s",
+    "analyze_cold_per_s",
+    "analyze_warm_per_s",
+    "scenarios_per_s_cold",
+    "scenarios_per_s_warm",
+    "warm_speedup",
+];
+
+fn main() -> cimone::Result<()> {
+    let (text, source) = match std::env::args().nth(1) {
+        Some(path) => (std::fs::read_to_string(&path)?, path),
+        None => (cimone::perfsuite::run(true)?.json.render(), "in-process".to_string()),
+    };
+    let parsed = Json::parse(&text).map_err(anyhow::Error::msg)?;
+    for key in REQUIRED_KEYS {
+        let v = parsed.get(key).and_then(Json::as_f64).unwrap_or(-1.0);
+        anyhow::ensure!(v > 0.0, "{source}: `{key}` missing or non-positive ({v})");
+    }
+    let fp = parsed
+        .get("determinism_fingerprint")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("{source}: missing `determinism_fingerprint`"))?;
+    anyhow::ensure!(
+        fp.len() == 32 && fp.chars().all(|c| c.is_ascii_hexdigit()),
+        "{source}: fingerprint `{fp}` is not a 128-bit hex digest"
+    );
+    let warm = parsed.get("warm_speedup").and_then(Json::as_f64).unwrap_or(0.0);
+    eprintln!("bench smoke OK ({source}): warm/cold sweep speedup {warm:.1}x");
+    // stdout carries ONLY the fingerprint, for `FP=$(... bench_smoke ...)`
+    println!("{fp}");
+    Ok(())
+}

@@ -8,6 +8,9 @@
 //!   L3-num  : blocked LU factorization (native trailing updates)
 //!   L3-pjrt : PJRT gemm_256 end-to-end latency (when artifacts exist)
 //!   L3-model: full report-all projection pipeline
+//!   suite   : the `cimone bench` estimation-stack suite (cold vs warm
+//!             cache scenarios/s + determinism fingerprint — the same
+//!             numbers BENCH_6.json records)
 
 use cimone::arch::presets;
 use cimone::blas::blocking::Blocking;
@@ -107,4 +110,11 @@ fn main() {
         std::hint::black_box(cimone::coordinator::report::render_headline());
     });
     println!("{}", m.report());
+
+    // --- the estimation-stack suite (what `cimone bench` runs) ---
+    println!();
+    match cimone::perfsuite::run(false) {
+        Ok(suite) => println!("{}", suite.render()),
+        Err(e) => println!("perf suite failed: {e}"),
+    }
 }

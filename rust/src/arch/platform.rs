@@ -31,6 +31,7 @@ use super::presets;
 use super::soc::SocDescriptor;
 use crate::error::CimoneError;
 use crate::util::config::Section;
+use crate::util::hash::ContentHasher;
 
 /// Node power as idle + per-active-core dynamic draw (Monte Cimone has
 /// carried fine-grained power monitoring since MCv1).
@@ -116,6 +117,29 @@ impl Platform {
     /// Peak FP64 GFLOP/s of one node.
     pub fn peak_gflops(&self) -> f64 {
         self.desc.peak_flops() / 1e9
+    }
+
+    /// Canonical content feed for the estimation cache: identity plus
+    /// every field the workload estimators read (geometry, power,
+    /// calibration, defaults). Cosmetic fields (label, aliases,
+    /// partition, hostname, OS image) are deliberately excluded — they
+    /// never reach an estimate.
+    pub fn feed_content(&self, h: &mut ContentHasher) {
+        h.write_str(&self.id);
+        h.write_str(&self.default_lib);
+        h.write_str(&self.default_fabric);
+        self.desc.feed_content(h);
+        h.write_f64(self.power.idle_w).write_f64(self.power.per_core_active_w);
+        h.write_f64(self.calib.traffic_bytes_per_flop)
+            .write_f64(self.calib.smp_alpha)
+            .write_f64(self.calib.bw_gamma);
+    }
+
+    /// The 128-bit content digest of [`Platform::feed_content`].
+    pub fn content_hash(&self) -> u128 {
+        let mut h = ContentHasher::new();
+        self.feed_content(&mut h);
+        h.finish()
     }
 
     fn err(&self, reason: impl Into<String>) -> CimoneError {

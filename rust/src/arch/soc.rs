@@ -1,5 +1,7 @@
 //! SoC / node descriptor types.
 
+use crate::util::hash::ContentHasher;
+
 /// Geometry of one cache level.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheGeom {
@@ -14,6 +16,14 @@ pub struct CacheGeom {
 impl CacheGeom {
     pub fn sets(&self) -> usize {
         self.size_bytes / (self.line_bytes * self.ways)
+    }
+
+    /// Canonical content feed for the estimation cache.
+    pub fn feed_content(&self, h: &mut ContentHasher) {
+        h.write_usize(self.size_bytes)
+            .write_usize(self.line_bytes)
+            .write_usize(self.ways)
+            .write_usize(self.shared_by);
     }
 }
 
@@ -59,6 +69,19 @@ impl CoreModel {
             2.0 * self.scalar_fma_per_cycle * self.freq_hz
         }
     }
+
+    /// Canonical content feed for the estimation cache: every field the
+    /// cycle model reads, bit-exact.
+    pub fn feed_content(&self, h: &mut ContentHasher) {
+        h.write_f64(self.freq_hz)
+            .write_usize(self.issue_width)
+            .write_usize(self.vlen_bits)
+            .write_bool(self.native_rvv10)
+            .write_usize(self.vfma_lanes_per_cycle)
+            .write_f64(self.vinst_dispatch_cycles)
+            .write_f64(self.scalar_fma_per_cycle)
+            .write_f64(self.lsu_per_cycle);
+    }
 }
 
 /// Memory system of one socket.
@@ -83,6 +106,15 @@ impl MemorySystem {
     pub fn attainable_bw(&self) -> f64 {
         self.peak_bw() * self.efficiency
     }
+
+    /// Canonical content feed for the estimation cache.
+    pub fn feed_content(&self, h: &mut ContentHasher) {
+        h.write_usize(self.channels)
+            .write_f64(self.channel_bw_bytes)
+            .write_f64(self.efficiency)
+            .write_f64(self.per_core_bw_bytes)
+            .write_u64(self.capacity_bytes);
+    }
 }
 
 /// One socket: cores + caches + memory.
@@ -99,6 +131,19 @@ pub struct Socket {
 impl Socket {
     pub fn peak_flops(&self) -> f64 {
         self.cores as f64 * self.core.peak_flops()
+    }
+
+    /// Canonical content feed for the estimation cache.
+    pub fn feed_content(&self, h: &mut ContentHasher) {
+        h.write_usize(self.cores);
+        self.core.feed_content(h);
+        self.l1d.feed_content(h);
+        self.l2.feed_content(h);
+        h.write_bool(self.l3.is_some());
+        if let Some(l3) = &self.l3 {
+            l3.feed_content(h);
+        }
+        self.mem.feed_content(h);
     }
 }
 
@@ -133,6 +178,16 @@ impl SocDescriptor {
     pub fn hpl_max_n(&self, mem_fraction: f64) -> usize {
         let bytes = self.total_memory() as f64 * mem_fraction;
         (bytes / 8.0).sqrt() as usize
+    }
+
+    /// Canonical content feed for the estimation cache.
+    pub fn feed_content(&self, h: &mut ContentHasher) {
+        h.write_str(&self.name);
+        h.write_usize(self.sockets.len());
+        for s in &self.sockets {
+            s.feed_content(h);
+        }
+        h.write_f64(self.numa_penalty);
     }
 }
 

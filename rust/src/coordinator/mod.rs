@@ -54,7 +54,7 @@ pub use driver::{
 };
 pub use experiments::{fig3, fig4, fig5, fig6, fig7, headline};
 pub use scenario::{
-    dry_run_matrix, run_matrix, ComparisonReport, Scenario, ScenarioMatrix, ScenarioOutcome,
-    ScenarioSpec,
+    dry_run_matrix, dry_run_matrix_with, run_matrix, run_matrix_with, ComparisonReport, Scenario,
+    ScenarioMatrix, ScenarioOutcome, ScenarioSpec, SweepOptions,
 };
 pub use workload::{JobEstimate, Workload};

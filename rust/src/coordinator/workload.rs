@@ -9,6 +9,16 @@
 //! estimation time — a missing platform is a typed
 //! [`CimoneError::NoNodeOfPlatform`], and a new SoC generation needs no
 //! workload-layer change at all.
+//!
+//! Estimates are memoized through the content-addressed cache
+//! ([`crate::util::memo`]): after name resolution, each estimator keys
+//! the full [`JobEstimate`] on a canonical digest of its *resolved*
+//! inputs (platform geometry/power/calibration, kernel descriptor,
+//! fabric, problem shape), so a sweep revisiting a coordinate — every
+//! warm replay, and most scenarios of a dense matrix — skips the HPL
+//! projection and cycle-model work entirely. Cached values ARE cold
+//! outputs, so hits are bit-identical by construction; resolution and
+//! validation errors stay typed and are never cached.
 
 use std::sync::Arc;
 
@@ -18,10 +28,25 @@ use crate::cluster::{Inventory, Monitor};
 use crate::error::CimoneError;
 use crate::hpl::model::{project, ClusterConfig};
 use crate::mem::stream_model::predict_node_bandwidth;
+use crate::util::hash::ContentHasher;
+use crate::util::memo::{CacheStats, MemoCache};
 
 /// Bytes one simulated STREAM job moves: 10 iterations x 3 arrays x
 /// ~128 MB, matching the paper-scale working set.
 const STREAM_JOB_BYTES: f64 = 10.0 * 3.0 * 128e6;
+
+/// The estimate cache: one [`JobEstimate`] per resolved-input digest.
+static ESTIMATE_CACHE: MemoCache<JobEstimate> = MemoCache::new();
+
+/// Snapshot of the estimate-cache counters (for `cimone bench`).
+pub fn estimate_cache_stats() -> CacheStats {
+    ESTIMATE_CACHE.stats()
+}
+
+/// Drop the estimate cache — the perf harness's cold start.
+pub fn reset_estimate_cache() {
+    ESTIMATE_CACHE.reset();
+}
 
 /// What a workload contributes to the campaign once estimated on a fleet.
 #[derive(Debug, Clone)]
@@ -99,18 +124,27 @@ impl Workload for StreamWorkload {
 
     fn estimate(&self, inv: &Inventory) -> Result<JobEstimate, CimoneError> {
         let p = platform_of(inv, &self.platform)?;
-        let bw = predict_node_bandwidth(&p.desc, self.threads, true);
-        let runtime_s = (STREAM_JOB_BYTES / bw).max(1.0);
-        let active = self.threads.min(p.desc.total_cores());
-        let avg_node_w = p.power.node_power(active);
-        Ok(JobEstimate {
-            runtime_s,
-            metric: "bandwidth",
-            value: bw,
-            headline: bw / 1e9,
-            avg_node_w,
-            energy_j: avg_node_w * self.nodes as f64 * runtime_s,
-        })
+        let mut h = ContentHasher::new();
+        h.write_str("estimate-stream/v1");
+        p.feed_content(&mut h);
+        h.write_usize(self.threads).write_usize(self.nodes);
+        let p = Arc::clone(p);
+        let threads = self.threads;
+        let nodes = self.nodes;
+        Ok(ESTIMATE_CACHE.get_or_insert_with(h.finish(), move || {
+            let bw = predict_node_bandwidth(&p.desc, threads, true);
+            let runtime_s = (STREAM_JOB_BYTES / bw).max(1.0);
+            let active = threads.min(p.desc.total_cores());
+            let avg_node_w = p.power.node_power(active);
+            JobEstimate {
+                runtime_s,
+                metric: "bandwidth",
+                value: bw,
+                headline: bw / 1e9,
+                avg_node_w,
+                energy_j: avg_node_w * nodes as f64 * runtime_s,
+            }
+        }))
     }
 }
 
@@ -169,22 +203,35 @@ impl Workload for HplWorkload {
             (*fabric).clone(),
         );
         cfg.validate()?; // a cluster wider than the switch is typed here
-        let proj = project(&cfg);
-        let runtime_s = proj.t_comp + proj.t_comm;
-        let active = self.cores_per_node.min(p.desc.total_cores());
-        let avg_node_w = p.power.node_power(active);
-        Ok(JobEstimate {
-            runtime_s,
-            metric: "gflops",
-            value: proj.gflops,
-            headline: proj.gflops,
-            avg_node_w,
-            // energy follows the *modeled* cluster (`cluster_nodes`, the
-            // same node count the GFLOP/s projection uses), not the
-            // scheduler allocation, so energy and efficiency stay
-            // consistent when the two differ
-            energy_j: avg_node_w * self.cluster_nodes as f64 * runtime_s,
-        })
+        // key on the RESOLVED inputs the projection reads: the scheduler
+        // allocation (`self.nodes`) never enters the estimate, so
+        // scenarios differing only in allocation width share one entry
+        let mut h = ContentHasher::new();
+        h.write_str("estimate-hpl/v1");
+        p.feed_content(&mut h);
+        cfg.lib.feed_content(&mut h);
+        cfg.fabric.feed_content(&mut h);
+        h.write_usize(cfg.nodes).write_usize(cfg.cores_per_node);
+        h.write_usize(cfg.n).write_usize(cfg.nb);
+        let p = Arc::clone(p);
+        Ok(ESTIMATE_CACHE.get_or_insert_with(h.finish(), move || {
+            let proj = project(&cfg);
+            let runtime_s = proj.t_comp + proj.t_comm;
+            let active = cfg.cores_per_node.min(p.desc.total_cores());
+            let avg_node_w = p.power.node_power(active);
+            JobEstimate {
+                runtime_s,
+                metric: "gflops",
+                value: proj.gflops,
+                headline: proj.gflops,
+                avg_node_w,
+                // energy follows the *modeled* cluster (`cluster_nodes`,
+                // the same node count the GFLOP/s projection uses), not
+                // the scheduler allocation, so energy and efficiency stay
+                // consistent when the two differ
+                energy_j: avg_node_w * cfg.nodes as f64 * runtime_s,
+            }
+        }))
     }
 }
 
@@ -219,17 +266,27 @@ impl Workload for BlisAblationWorkload {
     fn estimate(&self, inv: &Inventory) -> Result<JobEstimate, CimoneError> {
         let p = platform_of(inv, &self.platform)?;
         let lib = inv.kernels.get(&self.lib)?;
-        let gf = PerfModel::new(p.as_ref(), lib).node_gflops(self.cores);
-        let active = self.cores.min(p.desc.total_cores());
-        let avg_node_w = p.power.node_power(active);
-        Ok(JobEstimate {
-            runtime_s: self.runtime_s,
-            metric: "gflops",
-            value: gf,
-            headline: gf,
-            avg_node_w,
-            energy_j: avg_node_w * self.runtime_s,
-        })
+        let mut h = ContentHasher::new();
+        h.write_str("estimate-blis/v1");
+        p.feed_content(&mut h);
+        lib.feed_content(&mut h);
+        h.write_usize(self.cores).write_f64(self.runtime_s);
+        let p = Arc::clone(p);
+        let cores = self.cores;
+        let runtime_s = self.runtime_s;
+        Ok(ESTIMATE_CACHE.get_or_insert_with(h.finish(), move || {
+            let gf = PerfModel::new(p.as_ref(), lib).node_gflops(cores);
+            let active = cores.min(p.desc.total_cores());
+            let avg_node_w = p.power.node_power(active);
+            JobEstimate {
+                runtime_s,
+                metric: "gflops",
+                value: gf,
+                headline: gf,
+                avg_node_w,
+                energy_j: avg_node_w * runtime_s,
+            }
+        }))
     }
 }
 

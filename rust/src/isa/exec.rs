@@ -11,6 +11,12 @@
 //! kernel sweeps (`ukernel::ablation`) can explore 64/128/256/512-bit
 //! configurations. An unsupported VLEN is a typed load-time
 //! [`CimoneError::InvalidKernel`], not a panic.
+//!
+//! The hot loop allocates nothing: loads/stores are `copy_from_slice`
+//! over the flat lane file, splats are `fill`, and the FMA/MUL arms
+//! stream both register groups as slices when they don't alias
+//! (falling back to the lane-by-lane order only on partial overlap, so
+//! the numerics stay bit-identical to the reference semantics).
 
 use super::inst::{Inst, Program};
 use super::rvv::{vsetvl, Lmul, Sew, VType};
@@ -24,6 +30,19 @@ pub const MAX_VLEN_BITS: usize = 1 << 16;
 /// FP64 lanes per architectural register at a given VLEN.
 const fn lanes_per_reg(vlen_bits: usize) -> usize {
     vlen_bits / 64
+}
+
+/// Mutable `v[d..d+len]` alongside shared `v[s..s+len]`. The two
+/// ranges must be disjoint — the fast-path callers check overlap and
+/// take the lane-by-lane fallback otherwise.
+fn disjoint_pair(v: &mut [f64], d: usize, s: usize, len: usize) -> (&mut [f64], &[f64]) {
+    if d < s {
+        let (lo, hi) = v.split_at_mut(s);
+        (&mut lo[d..d + len], &hi[..len])
+    } else {
+        let (lo, hi) = v.split_at_mut(d);
+        (&mut hi[..len], &lo[s..s + len])
+    }
 }
 
 /// The machine state.
@@ -116,10 +135,8 @@ impl VecMachine {
                 if addr + self.vl > self.mem.len() {
                     return Err(format!("vle OOB at {}..{}", addr, addr + self.vl));
                 }
-                for i in 0..self.vl {
-                    let m = self.mem[addr + i];
-                    self.group_set(vd, i, m);
-                }
+                let d = (vd as usize) << self.lane_shift;
+                self.v[d..d + self.vl].copy_from_slice(&self.mem[addr..addr + self.vl]);
             }
             Inst::Vse { sew, vs, addr } => {
                 self.check_sew(sew)?;
@@ -127,35 +144,63 @@ impl VecMachine {
                 if addr + self.vl > self.mem.len() {
                     return Err(format!("vse OOB at {}..{}", addr, addr + self.vl));
                 }
-                for i in 0..self.vl {
-                    self.mem[addr + i] = self.group_get(vs, i);
-                }
+                let s = (vs as usize) << self.lane_shift;
+                self.mem[addr..addr + self.vl].copy_from_slice(&self.v[s..s + self.vl]);
             }
             Inst::VfmaccVf { vd, fs, vs2 } => {
                 self.check_group(vd)?;
                 self.check_group(vs2)?;
                 let s = self.f[fs as usize];
-                for i in 0..self.vl {
-                    let acc = self.group_get(vd, i) + s * self.group_get(vs2, i);
-                    self.group_set(vd, i, acc);
+                let vl = self.vl;
+                let d = (vd as usize) << self.lane_shift;
+                let a = (vs2 as usize) << self.lane_shift;
+                if d == a {
+                    for x in &mut self.v[d..d + vl] {
+                        *x += s * *x;
+                    }
+                } else if d.abs_diff(a) >= vl {
+                    let (dst, src) = disjoint_pair(&mut self.v, d, a, vl);
+                    for (x, y) in dst.iter_mut().zip(src) {
+                        *x += s * *y;
+                    }
+                } else {
+                    // partial group overlap: keep the lane-by-lane
+                    // order so each write is visible to later reads
+                    for i in 0..vl {
+                        let acc = self.group_get(vd, i) + s * self.group_get(vs2, i);
+                        self.group_set(vd, i, acc);
+                    }
                 }
-                self.flops += 2 * self.vl as u64;
+                self.flops += 2 * vl as u64;
             }
             Inst::VfmulVf { vd, fs, vs2 } => {
                 self.check_group(vd)?;
                 self.check_group(vs2)?;
                 let s = self.f[fs as usize];
-                for i in 0..self.vl {
-                    self.group_set(vd, i, s * self.group_get(vs2, i));
+                let vl = self.vl;
+                let d = (vd as usize) << self.lane_shift;
+                let a = (vs2 as usize) << self.lane_shift;
+                if d == a {
+                    for x in &mut self.v[d..d + vl] {
+                        *x = s * *x;
+                    }
+                } else if d.abs_diff(a) >= vl {
+                    let (dst, src) = disjoint_pair(&mut self.v, d, a, vl);
+                    for (x, y) in dst.iter_mut().zip(src) {
+                        *x = s * *y;
+                    }
+                } else {
+                    for i in 0..vl {
+                        self.group_set(vd, i, s * self.group_get(vs2, i));
+                    }
                 }
-                self.flops += self.vl as u64;
+                self.flops += vl as u64;
             }
             Inst::VfmvVf { vd, fs } => {
                 self.check_group(vd)?;
                 let s = self.f[fs as usize];
-                for i in 0..self.vl {
-                    self.group_set(vd, i, s);
-                }
+                let d = (vd as usize) << self.lane_shift;
+                self.v[d..d + self.vl].fill(s);
             }
             Inst::VfaddVv { vd, vs1, vs2 } => {
                 self.check_group(vd)?;
@@ -378,5 +423,77 @@ mod tests {
         let mut m = m128();
         let bad = VType::new(Sew::E64, Lmul::Fractional);
         assert!(m.step(&Inst::Vsetvli { avl: 2, vtype: bad }).is_err());
+    }
+
+    #[test]
+    fn aliased_fmacc_updates_in_place() {
+        // vd == vs2 takes the in-place path: x += s * x
+        let mut m = m128();
+        m.f[0] = 3.0;
+        m.mem[0] = 1.0;
+        m.mem[1] = 2.0;
+        m.step(&Inst::Vsetvli { avl: 2, vtype: vt(Lmul::M1) }).unwrap();
+        m.step(&Inst::Vle { sew: Sew::E64, vd: 4, addr: 0 }).unwrap();
+        m.step(&Inst::VfmaccVf { vd: 4, fs: 0, vs2: 4 }).unwrap();
+        m.step(&Inst::Vse { sew: Sew::E64, vs: 4, addr: 8 }).unwrap();
+        assert_eq!(m.mem[8], 4.0);
+        assert_eq!(m.mem[9], 8.0);
+        assert_eq!(m.flops, 4);
+    }
+
+    #[test]
+    fn partially_overlapping_groups_keep_lane_order_semantics() {
+        // vd=1 overlaps vs2=0 by all but one register at LMUL=4: lane i
+        // of the source is read *after* destination lane i-2 was
+        // written, so the fallback's sequential feedback must survive
+        let mut m = m128();
+        for i in 0..8 {
+            m.mem[i] = (i + 1) as f64;
+        }
+        m.f[0] = 2.0;
+        m.step(&Inst::Vsetvli { avl: 8, vtype: vt(Lmul::M4) }).unwrap();
+        m.step(&Inst::Vle { sew: Sew::E64, vd: 0, addr: 0 }).unwrap();
+        m.step(&Inst::VfmaccVf { vd: 1, fs: 0, vs2: 0 }).unwrap();
+        // reference: the flat lane file v[0..10], updated lane by lane
+        let mut arr = [0.0f64; 10];
+        for (i, a) in arr.iter_mut().take(8).enumerate() {
+            *a = (i + 1) as f64;
+        }
+        for i in 0..8 {
+            arr[2 + i] += 2.0 * arr[i];
+        }
+        for (i, want) in arr[2..].iter().enumerate() {
+            assert_eq!(m.reg_lane(1, i), *want, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn fast_paths_are_bit_identical_across_vlens() {
+        // the slice fast paths must retire exactly the per-lane
+        // arithmetic: same program, any VLEN, bit-identical lanes
+        for vlen in [64usize, 128, 256, 512] {
+            let mut m = VecMachine::new(vlen, 64).unwrap();
+            for i in 0..16 {
+                m.mem[i] = (i as f64) * 0.375 - 2.0;
+            }
+            m.f[0] = 1.0 / 3.0; // rounding-sensitive scalar
+            m.step(&Inst::Vsetvli { avl: 8, vtype: vt(Lmul::M4) }).unwrap();
+            let vl = m.vl;
+            m.step(&Inst::Vle { sew: Sew::E64, vd: 8, addr: 0 }).unwrap();
+            m.step(&Inst::VfmvVf { vd: 0, fs: 0 }).unwrap();
+            m.step(&Inst::VfmaccVf { vd: 0, fs: 0, vs2: 8 }).unwrap();
+            m.step(&Inst::VfmulVf { vd: 16, fs: 0, vs2: 0 }).unwrap();
+            m.step(&Inst::Vse { sew: Sew::E64, vs: 16, addr: 32 }).unwrap();
+            let s = 1.0f64 / 3.0;
+            for i in 0..vl {
+                let x = (i as f64) * 0.375 - 2.0;
+                let want = s * (s + s * x);
+                assert_eq!(
+                    m.mem[32 + i].to_bits(),
+                    want.to_bits(),
+                    "VLEN {vlen} lane {i}"
+                );
+            }
+        }
     }
 }

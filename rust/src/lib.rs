@@ -70,6 +70,7 @@ pub mod sched;
 pub mod cluster;
 pub mod runtime;
 pub mod coordinator;
+pub mod perfsuite;
 
 pub use error::CimoneError;
 

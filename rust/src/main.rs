@@ -24,6 +24,11 @@
 //!         [--matrix blas-tuning]     ... or the kernel-tuning sweep: the
 //!                                        Fig 2 LMUL uplift on SG2042 vs the
 //!                                        native-RVV 1.0 winner on SG2044
+//!         [--top-k 4] [--shard 64]   ... streaming knobs: keep baseline +
+//!                                        best k rows; scenarios per batch
+//! cimone bench [--quick] [--json]    estimation-stack perf suite: simulated
+//!         [--out BENCH.json]         ... insts/s, analyses/s, scenarios/s
+//!                                        cold vs warm + determinism fingerprint
 //! cimone platforms                   the registered platform fleet (SoC table)
 //! cimone fabrics                     the registered interconnects
 //! cimone kernels                     the registered BLAS micro-kernels
@@ -193,21 +198,45 @@ fn run(args: &Args) -> Result<(), CimoneError> {
                     )));
                 }
             };
+            let opts = scenario::SweepOptions {
+                shard_size: args
+                    .get_usize("shard", scenario::SweepOptions::default().shard_size)?,
+                top_k: match args.get("top-k") {
+                    Some(_) => Some(args.get_usize("top-k", 0)?),
+                    None => None,
+                },
+            };
             let report = if args.flag("dry-run") {
-                scenario::dry_run_matrix(&matrix)?
+                scenario::dry_run_matrix_with(&matrix, &opts)?
             } else {
-                scenario::run_matrix(&matrix)?
+                scenario::run_matrix_with(&matrix, &opts)?
             };
             if args.flag("json") {
                 println!("{}", report.to_json().render());
             } else {
                 if args.flag("dry-run") {
                     println!(
-                        "dry run: {} scenarios estimated, nothing scheduled",
-                        report.scenarios.len()
+                        "dry run: {} of {} scenarios estimated, nothing scheduled",
+                        report.scenarios.len(),
+                        report.total
                     );
                 }
                 println!("{}", report.render());
+            }
+        }
+        Some("bench") => {
+            // the estimation-stack perf suite (recorded trajectory in
+            // BENCH_6.json); --quick is the CI smoke configuration
+            let suite = cimone::perfsuite::run(args.flag("quick"))?;
+            if args.flag("json") {
+                println!("{}", suite.json.render());
+            } else {
+                println!("{}", suite.render());
+            }
+            if let Some(path) = args.get("out") {
+                std::fs::write(path, suite.json.render() + "\n")
+                    .map_err(|e| CimoneError::Cli(format!("cannot write `{path}`: {e}")))?;
+                eprintln!("wrote {path}");
             }
         }
         Some("platforms") => {
@@ -304,7 +333,7 @@ fn run(args: &Args) -> Result<(), CimoneError> {
             )));
         }
         None => {
-            println!("usage: cimone <stream|hpl|cluster-hpl|cache-miss|blis-compare|headline|report-all|sweeps|run-hpl|validate|campaign|sweep|platforms|fabrics|kernels|translate-demo>");
+            println!("usage: cimone <stream|hpl|cluster-hpl|cache-miss|blis-compare|headline|report-all|sweeps|run-hpl|validate|campaign|sweep|bench|platforms|fabrics|kernels|translate-demo>");
         }
     }
     Ok(())

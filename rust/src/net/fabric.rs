@@ -29,6 +29,7 @@ use super::link::Link;
 use super::topo::Switch;
 use crate::error::CimoneError;
 use crate::util::config::Section;
+use crate::util::hash::ContentHasher;
 
 /// One registrable cluster interconnect: identity + link + topology.
 #[derive(Debug, Clone, PartialEq)]
@@ -89,6 +90,23 @@ impl Fabric {
     /// Does `name` refer to this fabric (id or alias)?
     pub fn matches(&self, name: &str) -> bool {
         self.id == name || self.aliases.iter().any(|a| a == name)
+    }
+
+    /// Canonical content feed for the estimation cache: identity plus
+    /// every parameter the network models read.
+    pub fn feed_content(&self, h: &mut ContentHasher) {
+        h.write_str(&self.id);
+        h.write_f64(self.link.raw_bps)
+            .write_f64(self.link.latency_s)
+            .write_f64(self.link.efficiency);
+        h.write_usize(self.ports).write_f64(self.backplane_factor);
+    }
+
+    /// The 128-bit content digest of [`Fabric::feed_content`].
+    pub fn content_hash(&self) -> u128 {
+        let mut h = ContentHasher::new();
+        self.feed_content(&mut h);
+        h.finish()
     }
 
     /// The switch topology model of this fabric.

@@ -1,0 +1,160 @@
+//! The `cimone bench` harness: a recorded perf trajectory for the
+//! estimation stack.
+//!
+//! Times the three hot layers end to end —
+//!
+//! - the functional vector machine ([`crate::isa::exec::VecMachine`]):
+//!   simulated instructions retired per second on the interned LMUL=4
+//!   micro-kernel program;
+//! - kernel generation + cycle analysis: programs decoded per second
+//!   and [`CycleModel::analyze_at`] passes per second, cold, vs the
+//!   memoized [`analysis::analyze`] path warm;
+//! - whole scenario sweeps: the built-in generation matrix estimated
+//!   per second with cold caches (reset every iteration) vs warm —
+//!   the headline the content-addressed cache exists for.
+//!
+//! Every run also emits a *determinism fingerprint*: the content hash
+//! of the cold sweep's `ComparisonReport` JSON. The warm rerun must
+//! fingerprint identically (cache hits are bit-identical to cold
+//! computation by construction) — a mismatch is a typed error, and CI
+//! compares the fingerprint across two fresh processes. Timings vary
+//! run to run; the fingerprint never may.
+
+use crate::arch::presets;
+use crate::coordinator::scenario::{dry_run_matrix, ScenarioMatrix};
+use crate::coordinator::workload;
+use crate::error::CimoneError;
+use crate::isa::exec::VecMachine;
+use crate::isa::timing::CycleModel;
+use crate::ukernel::{analysis, KernelRegistry, PanelLayout};
+use crate::util::bench::Bench;
+use crate::util::hash;
+use crate::util::json::Json;
+
+/// Everything one `cimone bench` run produced.
+#[derive(Debug, Clone)]
+pub struct SuiteReport {
+    /// Human-readable report, one measurement per line.
+    pub lines: Vec<String>,
+    /// Machine-readable export (`cimone bench --json` / `BENCH_6.json`).
+    pub json: Json,
+    /// Content hash of the cold sweep's report JSON — must be identical
+    /// across runs, machines and cache states.
+    pub fingerprint: String,
+}
+
+impl SuiteReport {
+    pub fn render(&self) -> String {
+        self.lines.join("\n")
+    }
+}
+
+/// Drop every estimation cache in the stack — the true cold start the
+/// cold-side measurements (and the warm-vs-cold golden test) need.
+pub fn reset_caches() {
+    analysis::reset_caches();
+    workload::reset_estimate_cache();
+}
+
+/// Run the suite. `quick` trades sample count for latency (the CI
+/// smoke); the defaults are the recorded-trajectory configuration.
+pub fn run(quick: bool) -> Result<SuiteReport, CimoneError> {
+    let b = if quick { Bench::quick() } else { Bench::default() };
+    let mut lines = vec!["=== cimone bench: estimation-stack hot paths ===".to_string()];
+
+    let desc = KernelRegistry::builtin().get("blis-lmul4")?;
+    let core = presets::c920();
+
+    // --- functional vector machine: simulated instructions / s ---
+    let layout = PanelLayout::new(desc.mr, desc.nr, 256);
+    let prog = analysis::interned_program(&desc, layout);
+    let mut vm = VecMachine::new(desc.vlen_bits, layout.mem_words())?;
+    let m = b.run("vec machine: lmul4 ukernel kc=256", || {
+        vm.run(&prog).expect("builtin program executes");
+        std::hint::black_box(vm.flops);
+    });
+    let vec_machine_insts_per_s = m.throughput(prog.len() as f64);
+    lines.push(format!(
+        "{}   ({:.1} M simulated insts/s)",
+        m.report(),
+        vec_machine_insts_per_s / 1e6
+    ));
+
+    // --- kernel generation: programs decoded / s (the intern-miss cost) ---
+    let m = b.run("program generation: blis-lmul4 kc=128", || {
+        std::hint::black_box(desc.program(PanelLayout::new(desc.mr, desc.nr, 128)));
+    });
+    let program_gen_per_s = m.throughput(1.0);
+    lines.push(format!("{}   ({:.0} programs/s)", m.report(), program_gen_per_s));
+
+    // --- cycle analysis: cold analyze_at vs the memoized warm path ---
+    let vlen = analysis::timing_vlen(&desc, &core);
+    let m = b.run("analyze_at (cold cycle model)", || {
+        std::hint::black_box(CycleModel::new(&core).analyze_at(&prog, vlen));
+    });
+    let analyze_cold_per_s = m.throughput(1.0);
+    lines.push(format!("{}   ({:.0} analyses/s)", m.report(), analyze_cold_per_s));
+
+    analysis::analyze(&desc, &core); // prime the coordinate
+    let m = b.run("analyze (warm memoized)", || {
+        std::hint::black_box(analysis::analyze(&desc, &core));
+    });
+    let analyze_warm_per_s = m.throughput(1.0);
+    lines.push(format!("{}   ({:.0} analyses/s)", m.report(), analyze_warm_per_s));
+
+    // --- whole sweeps: cold (caches reset each iteration) vs warm ---
+    let matrix = ScenarioMatrix::generations();
+    let n_scen = matrix.spec_count() as f64;
+    let mut cold_json = String::new();
+    let m = b.run("sweep generations (cold caches)", || {
+        reset_caches();
+        let r = dry_run_matrix(&matrix).expect("builtin matrix runs");
+        cold_json = r.to_json().render();
+        std::hint::black_box(&cold_json);
+    });
+    let scenarios_per_s_cold = m.throughput(n_scen);
+    lines.push(format!("{}   ({:.1} scenarios/s cold)", m.report(), scenarios_per_s_cold));
+    let fingerprint = hash::fingerprint(&cold_json);
+
+    let m = b.run("sweep generations (warm cache)", || {
+        let r = dry_run_matrix(&matrix).expect("builtin matrix runs");
+        std::hint::black_box(r.scenarios.len());
+    });
+    let scenarios_per_s_warm = m.throughput(n_scen);
+    lines.push(format!("{}   ({:.1} scenarios/s warm)", m.report(), scenarios_per_s_warm));
+
+    // the warm rerun must be bit-identical to the cold one — that is
+    // the cache's correctness contract, enforced on every bench run
+    let warm_json = dry_run_matrix(&matrix)?.to_json().render();
+    let warm_fp = hash::fingerprint(&warm_json);
+    if warm_fp != fingerprint {
+        return Err(CimoneError::Cli(format!(
+            "determinism fingerprint mismatch: cold {fingerprint} vs warm {warm_fp} \
+             (warm-cache sweep output is not bit-identical to cold)"
+        )));
+    }
+
+    let warm_speedup = scenarios_per_s_warm / scenarios_per_s_cold;
+    let (prog_stats, an_stats) = analysis::cache_stats();
+    let est_stats = workload::estimate_cache_stats();
+    lines.push(format!(
+        "warm/cold sweep speedup: {warm_speedup:.1}x   (cache hit rates: programs {:.0}%, analyses {:.0}%, estimates {:.0}%)",
+        prog_stats.hit_rate() * 100.0,
+        an_stats.hit_rate() * 100.0,
+        est_stats.hit_rate() * 100.0
+    ));
+    lines.push(format!("determinism fingerprint: {fingerprint}"));
+
+    let json = Json::obj([
+        ("bench", Json::Num(6.0)),
+        ("determinism_fingerprint", Json::Str(fingerprint.clone())),
+        ("vec_machine_insts_per_s", Json::Num(vec_machine_insts_per_s)),
+        ("program_gen_per_s", Json::Num(program_gen_per_s)),
+        ("analyze_cold_per_s", Json::Num(analyze_cold_per_s)),
+        ("analyze_warm_per_s", Json::Num(analyze_warm_per_s)),
+        ("scenarios_per_s_cold", Json::Num(scenarios_per_s_cold)),
+        ("scenarios_per_s_warm", Json::Num(scenarios_per_s_warm)),
+        ("warm_speedup", Json::Num(warm_speedup)),
+    ]);
+    Ok(SuiteReport { lines, json, fingerprint })
+}

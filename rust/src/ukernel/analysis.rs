@@ -6,11 +6,32 @@
 //! (host-overhead-adjusted) per-core GFLOP/s — the numbers HPL's
 //! projection is built on. Any registered [`KernelDescriptor`] analyzes
 //! against any [`CoreModel`]; nothing here enumerates kernels.
+//!
+//! Both steps are pure functions of their resolved inputs and dominate
+//! every scenario estimate, so they run behind the content-addressed
+//! memoization layer ([`crate::util::memo`]):
+//!
+//! - [`interned_program`] builds each distinct (generator tunables,
+//!   layout) program once and shares it as an `Arc<Program>` — keyed by
+//!   tunables only, so descriptors differing merely in id/overhead share
+//!   one program;
+//! - [`analyze`] memoizes the full [`UkernelPerf`] per (descriptor,
+//!   core) content digest.
+//!
+//! Cache hits are bit-identical to cold computation by construction
+//! (the cached value IS a cold run's output), which the golden suite
+//! asserts end to end. [`reset_caches`] gives `cimone bench` a true
+//! cold start; [`cache_stats`] feeds its hit-rate report.
+
+use std::sync::Arc;
 
 use super::registry::{blis_lmul1, blis_lmul4, KernelDescriptor};
 use super::PanelLayout;
 use crate::arch::soc::CoreModel;
+use crate::isa::inst::Program;
 use crate::isa::timing::CycleModel;
+use crate::util::hash::ContentHasher;
+use crate::util::memo::{CacheStats, MemoCache};
 
 /// Representative KC depth used for steady-state analysis (deep enough
 /// that C load/store amortizes, like a real KC~256 blocked DGEMM).
@@ -51,10 +72,47 @@ pub fn timing_vlen(desc: &KernelDescriptor, core: &CoreModel) -> usize {
     desc.vlen_bits.max(core.vlen_bits).max(128)
 }
 
-/// Analyze one kernel descriptor against a core model.
+/// The interned-program cache: one shared `Arc<Program>` per distinct
+/// (generator tunables, layout) coordinate.
+static PROGRAM_CACHE: MemoCache<Arc<Program>> = MemoCache::new();
+
+/// The analysis cache: one [`UkernelPerf`] per (descriptor, core)
+/// content digest.
+static ANALYZE_CACHE: MemoCache<UkernelPerf> = MemoCache::new();
+
+/// Build (or fetch) the shared program for `desc` at `layout`. Keyed by
+/// the generator inputs only — family, VLEN, LMUL, tile, K-unroll and
+/// the layout — NOT the descriptor's id, so e.g. `blis-lmul4` and a
+/// spec-file derivative differing only in `host_overhead` intern one
+/// program.
+pub fn interned_program(desc: &KernelDescriptor, layout: PanelLayout) -> Arc<Program> {
+    let mut h = ContentHasher::new();
+    h.write_str("ukernel-program/v1");
+    h.write_str(desc.family.spec_name());
+    h.write_usize(desc.vlen_bits);
+    h.write_usize(desc.lmul.multiplier());
+    h.write_usize(desc.k_unroll);
+    h.write_usize(layout.mr).write_usize(layout.nr).write_usize(layout.kc);
+    PROGRAM_CACHE.get_or_insert_with(h.finish(), || Arc::new(desc.program(layout)))
+}
+
+/// Analyze one kernel descriptor against a core model. Memoized on the
+/// (descriptor, core) content digest; the first call per coordinate
+/// runs [`analyze_uncached`] and later calls return the identical
+/// cached value.
 pub fn analyze(desc: &KernelDescriptor, core: &CoreModel) -> UkernelPerf {
+    let mut h = ContentHasher::new();
+    h.write_str("ukernel-analyze/v1");
+    desc.feed_content(&mut h);
+    core.feed_content(&mut h);
+    ANALYZE_CACHE.get_or_insert_with(h.finish(), || analyze_uncached(desc, core))
+}
+
+/// The uncached analysis pass — what a cache miss computes. Public so
+/// the perf harness can time the cold path explicitly.
+pub fn analyze_uncached(desc: &KernelDescriptor, core: &CoreModel) -> UkernelPerf {
     let (mr, nr) = desc.tile();
-    let prog = desc.program(PanelLayout::new(mr, nr, ANALYSIS_KC));
+    let prog = interned_program(desc, PanelLayout::new(mr, nr, ANALYSIS_KC));
     let t = CycleModel::new(core).analyze_at(&prog, timing_vlen(desc, core));
     let raw = t.gflops(core);
     let tax = if desc.vlen_bits > 0 && desc.native_rvv10 != core.native_rvv10 {
@@ -79,11 +137,60 @@ pub fn lmul_speedup(core: &CoreModel) -> f64 {
     t4.raw_gflops / t1.raw_gflops
 }
 
+/// Snapshot of the (program-intern, analyze) cache counters.
+pub fn cache_stats() -> (CacheStats, CacheStats) {
+    (PROGRAM_CACHE.stats(), ANALYZE_CACHE.stats())
+}
+
+/// Drop both caches — the perf harness's cold start. Safe at any time:
+/// concurrent users just recompute identical values.
+pub fn reset_caches() {
+    PROGRAM_CACHE.reset();
+    ANALYZE_CACHE.reset();
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::presets::{c920, c920v2, u74};
     use crate::ukernel::registry::KernelRegistry;
+
+    #[test]
+    fn memoized_analyze_matches_uncached_bit_for_bit() {
+        let reg = KernelRegistry::builtin();
+        let core = c920();
+        for id in ["openblas-generic", "openblas-c920", "blis-lmul1", "blis-lmul4"] {
+            let desc = reg.get(id).unwrap();
+            let cold = analyze_uncached(&desc, &core);
+            let cached = analyze(&desc, &core);
+            let again = analyze(&desc, &core);
+            for (a, b) in [(&cold, &cached), (&cached, &again)] {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.insts_per_kstep.to_bits(), b.insts_per_kstep.to_bits(), "{id}");
+                assert_eq!(a.cycles_per_kstep.to_bits(), b.cycles_per_kstep.to_bits(), "{id}");
+                assert_eq!(a.raw_gflops.to_bits(), b.raw_gflops.to_bits(), "{id}");
+                assert_eq!(a.effective_gflops.to_bits(), b.effective_gflops.to_bits(), "{id}");
+            }
+        }
+    }
+
+    #[test]
+    fn interned_program_is_shared_across_ids() {
+        // descriptors differing only in identity/overhead share one program
+        let a = blis_lmul4();
+        let mut b = blis_lmul4();
+        b.id = "blis-lmul4-respun".into();
+        b.host_overhead = 0.31;
+        let l = PanelLayout::new(a.mr, a.nr, 64);
+        let pa = interned_program(&a, l);
+        let pb = interned_program(&b, l);
+        assert!(Arc::ptr_eq(&pa, &pb));
+        // and the interned program is the generator's output, verbatim
+        assert_eq!(*pa, a.program(l));
+        // a different layout is a different coordinate
+        let pc = interned_program(&a, PanelLayout::new(a.mr, a.nr, 32));
+        assert!(!Arc::ptr_eq(&pa, &pc));
+    }
 
     #[test]
     fn lmul4_speedup_in_paper_band() {

@@ -37,7 +37,20 @@ use crate::isa::exec::VecMachine;
 use crate::isa::inst::Program;
 use crate::isa::rvv::Lmul;
 use crate::util::config::Section;
+use crate::util::hash::ContentHasher;
 use crate::util::Matrix;
+
+/// Stable hash code for an LMUL setting (total — [`Lmul::Fractional`]
+/// never validates into a registry but must still feed deterministically).
+fn lmul_code(l: Lmul) -> usize {
+    match l {
+        Lmul::M1 => 1,
+        Lmul::M2 => 2,
+        Lmul::M4 => 4,
+        Lmul::M8 => 8,
+        Lmul::Fractional => 255,
+    }
+}
 
 /// Which program generator emits the kernel's instruction schedule.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -147,6 +160,27 @@ impl KernelDescriptor {
         (self.mr, self.nr)
     }
 
+    /// Canonical content feed for the estimation cache: identity plus
+    /// every tunable the generators and the cycle model read. Cosmetic
+    /// fields (label, aliases) are excluded.
+    pub fn feed_content(&self, h: &mut ContentHasher) {
+        h.write_str(&self.id);
+        h.write_str(self.family.spec_name());
+        h.write_usize(self.vlen_bits);
+        h.write_usize(lmul_code(self.lmul));
+        h.write_bool(self.native_rvv10);
+        h.write_usize(self.mr).write_usize(self.nr).write_usize(self.k_unroll);
+        h.write_str(self.blocking.spec_name());
+        h.write_f64(self.host_overhead);
+    }
+
+    /// The 128-bit content digest of [`KernelDescriptor::feed_content`].
+    pub fn content_hash(&self) -> u128 {
+        let mut h = ContentHasher::new();
+        self.feed_content(&mut h);
+        h.finish()
+    }
+
     fn err(&self, reason: impl Into<String>) -> CimoneError {
         CimoneError::InvalidKernel { id: self.id.clone(), reason: reason.into() }
     }
@@ -239,10 +273,13 @@ impl KernelDescriptor {
     }
 
     /// Execute the kernel on real data via the functional machine (at
-    /// the kernel's own VLEN). Returns the updated C tile.
+    /// the kernel's own VLEN). Returns the updated C tile. The program
+    /// comes from the intern cache
+    /// ([`crate::ukernel::analysis::interned_program`]), so repeated
+    /// invocations at one shape decode the schedule exactly once.
     pub fn run(&self, a: &Matrix, b: &Matrix, c: &Matrix) -> Result<Matrix, CimoneError> {
         let layout = PanelLayout::new(self.mr, self.nr, a.cols());
-        let prog = self.program(layout);
+        let prog = super::analysis::interned_program(self, layout);
         let mut m = VecMachine::new(self.vlen_bits.max(64), layout.mem_words())?;
         m.mem = layout.pack(a, b, c);
         m.run(&prog).map_err(CimoneError::Machine)?;

@@ -1,0 +1,140 @@
+//! Canonical content hashing for the memoized estimation layer.
+//!
+//! The estimation hot path ([`crate::ukernel::analysis`], the workload
+//! estimators) is pure: identical resolved inputs — kernel descriptor
+//! tunables, platform geometry, fabric parameters, problem shape —
+//! always produce bit-identical outputs. A content hash of those inputs
+//! is therefore a sound memoization key. This module provides the
+//! canonical byte feed: FNV-1a in 128 bits (native `u128` arithmetic,
+//! no dependencies), with every scalar written in a fixed-width
+//! little-endian encoding and strings length-prefixed so that adjacent
+//! fields can never alias (`"ab" + "c"` hashes differently from
+//! `"a" + "bc"`).
+//!
+//! The same hasher renders the *determinism fingerprint* recorded by
+//! `cimone bench` ([`fingerprint`]): a 32-hex-digit digest of a report's
+//! JSON export, pinned in `BENCH_6.json` and re-checked twice per CI run
+//! so silent result drift fails the build.
+
+/// FNV-1a 128-bit offset basis.
+const FNV_OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+/// FNV-1a 128-bit prime (2^88 + 2^8 + 0x3b).
+const FNV_PRIME: u128 = 0x1000000000000000000013b;
+
+/// Incremental FNV-1a 128-bit hasher over a canonical byte feed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ContentHasher {
+    state: u128,
+}
+
+impl Default for ContentHasher {
+    fn default() -> Self {
+        ContentHasher::new()
+    }
+}
+
+impl ContentHasher {
+    pub fn new() -> ContentHasher {
+        ContentHasher { state: FNV_OFFSET }
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) -> &mut Self {
+        for &b in bytes {
+            self.state ^= b as u128;
+            self.state = self.state.wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    pub fn write_u64(&mut self, v: u64) -> &mut Self {
+        self.write_bytes(&v.to_le_bytes())
+    }
+
+    pub fn write_usize(&mut self, v: usize) -> &mut Self {
+        self.write_u64(v as u64)
+    }
+
+    /// Bit-exact float feed (`to_bits`): -0.0 and 0.0 hash differently,
+    /// which is the conservative direction for a memoization key.
+    pub fn write_f64(&mut self, v: f64) -> &mut Self {
+        self.write_u64(v.to_bits())
+    }
+
+    pub fn write_bool(&mut self, v: bool) -> &mut Self {
+        self.write_bytes(&[v as u8])
+    }
+
+    /// Length-prefixed string feed — concatenation-ambiguity free.
+    pub fn write_str(&mut self, s: &str) -> &mut Self {
+        self.write_usize(s.len());
+        self.write_bytes(s.as_bytes())
+    }
+
+    pub fn finish(&self) -> u128 {
+        self.state
+    }
+
+    /// 32-hex-digit rendering of the digest.
+    pub fn hex(&self) -> String {
+        format!("{:032x}", self.state)
+    }
+}
+
+/// Digest one text blob — the determinism-fingerprint entry point used
+/// by `cimone bench` over rendered report JSON.
+pub fn fingerprint(text: &str) -> String {
+    let mut h = ContentHasher::new();
+    h.write_bytes(text.as_bytes());
+    h.hex()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_feed_is_the_offset_basis() {
+        assert_eq!(ContentHasher::new().finish(), FNV_OFFSET);
+        assert_eq!(ContentHasher::new().hex().len(), 32);
+    }
+
+    #[test]
+    fn stable_across_reruns() {
+        let mut a = ContentHasher::new();
+        a.write_str("blis-lmul4").write_usize(128).write_f64(0.23).write_bool(true);
+        let mut b = ContentHasher::new();
+        b.write_str("blis-lmul4").write_usize(128).write_f64(0.23).write_bool(true);
+        assert_eq!(a.finish(), b.finish());
+        assert_eq!(fingerprint("report"), fingerprint("report"));
+    }
+
+    #[test]
+    fn distinct_inputs_distinct_digests() {
+        let one = fingerprint("lmul=1");
+        let four = fingerprint("lmul=4");
+        assert_ne!(one, four);
+        let mut a = ContentHasher::new();
+        a.write_usize(128);
+        let mut b = ContentHasher::new();
+        b.write_usize(256);
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn length_prefix_blocks_concat_aliasing() {
+        let mut a = ContentHasher::new();
+        a.write_str("ab").write_str("c");
+        let mut b = ContentHasher::new();
+        b.write_str("a").write_str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn float_feed_is_bit_exact() {
+        let mut pos = ContentHasher::new();
+        pos.write_f64(0.0);
+        let mut neg = ContentHasher::new();
+        neg.write_f64(-0.0);
+        assert_ne!(pos.finish(), neg.finish());
+    }
+}

@@ -1,0 +1,196 @@
+//! Sharded process-wide memoization keyed by content hash
+//! ([`crate::util::hash`]).
+//!
+//! A [`MemoCache`] is a `static`-friendly concurrent map from 128-bit
+//! content digests to cached values. Producers are pure and
+//! deterministic (the whole point of content addressing), so the cache
+//! needs no invalidation: a key either maps to *the* value or is
+//! absent. Under rayon fan-out two threads may race to compute the same
+//! coordinate; both compute bit-identical values and the first insert
+//! wins, so later lookups return a stable (pointer-stable, for `Arc`
+//! values) result.
+//!
+//! Shards are lazily initialized through `OnceLock`, keeping
+//! [`MemoCache::new`] `const` so caches can live in `static`s without
+//! any registration step. Hit/miss counters feed the `cimone bench`
+//! cold-vs-warm report, and [`MemoCache::reset`] gives the perf harness
+//! a true cold start.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Shard count (power of two — keys index by low bits).
+const SHARDS: usize = 16;
+
+/// Hit/miss/occupancy snapshot of one cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A concurrent content-addressed cache; see the module docs.
+pub struct MemoCache<V> {
+    shards: OnceLock<Vec<Mutex<HashMap<u128, V>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<V> MemoCache<V> {
+    /// `const` so caches can be `static`s.
+    pub const fn new() -> MemoCache<V> {
+        MemoCache { shards: OnceLock::new(), hits: AtomicU64::new(0), misses: AtomicU64::new(0) }
+    }
+
+    fn shards(&self) -> &[Mutex<HashMap<u128, V>>] {
+        self.shards.get_or_init(|| (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect())
+    }
+
+    fn shard(&self, key: u128) -> &Mutex<HashMap<u128, V>> {
+        &self.shards()[(key as usize) & (SHARDS - 1)]
+    }
+}
+
+impl<V> Default for MemoCache<V> {
+    fn default() -> Self {
+        MemoCache::new()
+    }
+}
+
+impl<V: Clone> MemoCache<V> {
+    /// Return the cached value for `key`, computing and inserting it via
+    /// `f` on a miss. Racing computations are resolved first-insert-wins,
+    /// so the returned value is stable once any thread has inserted.
+    pub fn get_or_insert_with(&self, key: u128, f: impl FnOnce() -> V) -> V {
+        let shard = self.shard(key);
+        let cached = shard.lock().unwrap().get(&key).cloned();
+        if let Some(v) = cached {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return v;
+        }
+        // Compute outside the lock; deterministic producers make racing
+        // computations bit-identical, so which thread wins is invisible.
+        let v = f();
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut m = shard.lock().unwrap();
+        m.entry(key).or_insert(v).clone()
+    }
+
+    /// Fallible form: errors propagate and are never cached, so a
+    /// transient failure does not poison the coordinate.
+    pub fn get_or_try_insert_with<E>(
+        &self,
+        key: u128,
+        f: impl FnOnce() -> Result<V, E>,
+    ) -> Result<V, E> {
+        let shard = self.shard(key);
+        let cached = shard.lock().unwrap().get(&key).cloned();
+        if let Some(v) = cached {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(v);
+        }
+        let v = f()?;
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut m = shard.lock().unwrap();
+        Ok(m.entry(key).or_insert(v).clone())
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let entries = self.shards().iter().map(|s| s.lock().unwrap().len()).sum();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries,
+        }
+    }
+
+    /// Drop every entry and zero the counters — the perf harness's cold
+    /// start. Concurrent users are unaffected beyond recomputing.
+    pub fn reset(&self) {
+        for s in self.shards() {
+            s.lock().unwrap().clear();
+        }
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    static CACHE: MemoCache<u64> = MemoCache::new();
+
+    #[test]
+    fn computes_once_then_hits() {
+        let cache: MemoCache<u64> = MemoCache::new();
+        let calls = AtomicUsize::new(0);
+        let compute = || {
+            calls.fetch_add(1, Ordering::SeqCst);
+            42u64
+        };
+        assert_eq!(cache.get_or_insert_with(7, compute), 42);
+        assert_eq!(cache.get_or_insert_with(7, compute), 42);
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn static_cache_usable_without_registration() {
+        assert_eq!(CACHE.get_or_insert_with(1, || 10), 10);
+        assert_eq!(CACHE.get_or_insert_with(1, || 99), 10);
+    }
+
+    #[test]
+    fn errors_propagate_and_do_not_poison() {
+        let cache: MemoCache<u64> = MemoCache::new();
+        let r: Result<u64, String> = cache.get_or_try_insert_with(3, || Err("transient".into()));
+        assert_eq!(r, Err("transient".to_string()));
+        assert_eq!(cache.stats().entries, 0);
+        let r: Result<u64, String> = cache.get_or_try_insert_with(3, || Ok(5));
+        assert_eq!(r, Ok(5));
+        assert_eq!(cache.stats().entries, 1);
+    }
+
+    #[test]
+    fn reset_clears_entries_and_counters() {
+        let cache: MemoCache<u64> = MemoCache::new();
+        cache.get_or_insert_with(1, || 1);
+        cache.get_or_insert_with(1, || 1);
+        cache.reset();
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (0, 0, 0));
+        assert_eq!(s.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn racing_threads_agree_on_one_value() {
+        let cache: Arc<MemoCache<Vec<u64>>> = Arc::new(MemoCache::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c = Arc::clone(&cache);
+            handles.push(std::thread::spawn(move || c.get_or_insert_with(11, || vec![1, 2, 3])));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), vec![1, 2, 3]);
+        }
+        assert_eq!(cache.stats().entries, 1);
+    }
+}

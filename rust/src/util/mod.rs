@@ -1,12 +1,15 @@
 //! In-house substrates the offline build cannot pull from crates.io:
 //! PRNG, CLI parsing, config files, ASCII tables/plots, stats, a bench
-//! harness and a mini property-testing framework.
+//! harness, a mini property-testing framework, and the content-hash +
+//! memoization pair behind the estimation cache.
 
 pub mod bench;
 pub mod cli;
 pub mod config;
+pub mod hash;
 pub mod json;
 pub mod matrix;
+pub mod memo;
 pub mod prop;
 pub mod rng;
 pub mod stats;

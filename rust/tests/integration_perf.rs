@@ -1,0 +1,144 @@
+//! Integration: the content-addressed estimation cache and the
+//! streaming sweep engine's public surface.
+//!
+//! Covers the cache-correctness contract from the outside: content
+//! hashes are stable across calls, distinct for every distinct tunable
+//! (LMUL, K-unroll, VLEN, fabric, platform), and blind to cosmetic
+//! fields; warm-cache sweeps return values equal to cold ones; and the
+//! `cimone bench` suite produces a complete, deterministic report.
+//!
+//! NOTE: only `quick_bench_suite_is_deterministic_and_complete` resets
+//! the caches (via the suite itself) — every other assertion here is
+//! value-based, so concurrent resets cannot make them flaky.
+
+use std::collections::BTreeMap;
+
+use cimone::arch::PlatformRegistry;
+use cimone::coordinator::{dry_run_matrix, dry_run_matrix_with, ScenarioMatrix, SweepOptions};
+use cimone::isa::rvv::Lmul;
+use cimone::net::FabricRegistry;
+use cimone::perfsuite;
+use cimone::ukernel::KernelRegistry;
+use cimone::util::json::Json;
+
+#[test]
+fn kernel_content_hashes_are_stable_and_pairwise_distinct() {
+    let reg = KernelRegistry::builtin();
+    let mut seen: BTreeMap<u128, String> = BTreeMap::new();
+    for k in reg.kernels() {
+        let h = k.content_hash();
+        assert_eq!(h, k.content_hash(), "{}: hash must be pure", k.id);
+        if let Some(prev) = seen.insert(h, k.id.clone()) {
+            panic!("kernel hash collision: `{prev}` vs `{}`", k.id);
+        }
+    }
+    assert!(seen.len() >= 6, "expected the full builtin registry, got {}", seen.len());
+}
+
+#[test]
+fn every_kernel_tunable_changes_the_hash() {
+    let base = (*KernelRegistry::builtin().get("blis-lmul4").unwrap()).clone();
+    let h0 = base.content_hash();
+    let mut variants = Vec::new();
+    let mut v = base.clone();
+    v.lmul = Lmul::M2;
+    variants.push(("lmul", v));
+    let mut v = base.clone();
+    v.k_unroll += 1;
+    variants.push(("k_unroll", v));
+    let mut v = base.clone();
+    v.vlen_bits *= 2;
+    variants.push(("vlen_bits", v));
+    let mut v = base.clone();
+    v.host_overhead += 0.01;
+    variants.push(("host_overhead", v));
+    let mut v = base.clone();
+    v.nr += 2;
+    variants.push(("tile", v));
+    let mut hashes = vec![h0];
+    for (what, v) in &variants {
+        let h = v.content_hash();
+        assert!(!hashes.contains(&h), "{what} change did not move the hash");
+        hashes.push(h);
+    }
+    // cosmetic fields stay out of the digest: same estimate coordinate
+    let mut v = base.clone();
+    v.label = "respun label".into();
+    v.aliases.push("some-alias".into());
+    assert_eq!(v.content_hash(), h0, "label/aliases must not shift the coordinate");
+}
+
+#[test]
+fn platform_and_fabric_hashes_track_content_not_cosmetics() {
+    let preg = PlatformRegistry::builtin();
+    let mut seen: BTreeMap<u128, String> = BTreeMap::new();
+    for p in preg.platforms() {
+        let h = p.content_hash();
+        assert_eq!(h, p.content_hash(), "{}: hash must be pure", p.id);
+        if let Some(prev) = seen.insert(h, p.id.clone()) {
+            panic!("platform hash collision: `{prev}` vs `{}`", p.id);
+        }
+    }
+    let dual = preg.get("mcv2-dual").unwrap();
+    let mut cosmetic = (*dual).clone();
+    cosmetic.label = "same machine, new sticker".into();
+    assert_eq!(cosmetic.content_hash(), dual.content_hash());
+    let mut tweaked = (*dual).clone();
+    tweaked.power.idle_w += 1.0;
+    assert_ne!(tweaked.content_hash(), dual.content_hash());
+
+    let freg = FabricRegistry::builtin();
+    let gbe = freg.get("gbe-flat").unwrap();
+    let ten = freg.get("ten-gbe-flat").unwrap();
+    assert_ne!(gbe.content_hash(), ten.content_hash());
+    let mut lossy = (*gbe).clone();
+    lossy.link.efficiency *= 0.5;
+    assert_ne!(lossy.content_hash(), gbe.content_hash());
+}
+
+#[test]
+fn streaming_top_k_through_the_coordinator_reexports() {
+    let m = ScenarioMatrix::fabric_scaling();
+    let full = dry_run_matrix(&m).unwrap();
+    assert_eq!((full.total, full.truncated), (16, 0));
+    let opts = SweepOptions { shard_size: 4, top_k: Some(3) };
+    let top = dry_run_matrix_with(&m, &opts).unwrap();
+    assert_eq!(top.scenarios.len(), 3);
+    assert_eq!((top.total, top.truncated), (16, 13));
+    // the baseline row survives, so speedup columns stay anchored
+    assert_eq!(top.baseline().unwrap().name, full.baseline().unwrap().name);
+    // kept rows carry the same outcomes as the full sweep, bit for bit
+    for o in &top.scenarios {
+        assert_eq!(Some(o), full.outcome(&o.name), "{}", o.name);
+    }
+    // the human-readable table states the cut
+    assert!(top.render().contains("13 of 16 scenarios truncated"), "{}", top.render());
+}
+
+#[test]
+fn quick_bench_suite_is_deterministic_and_complete() {
+    let a = perfsuite::run(true).unwrap();
+    assert_eq!(a.fingerprint.len(), 32, "{}", a.fingerprint);
+    assert!(a.fingerprint.chars().all(|c| c.is_ascii_hexdigit()), "{}", a.fingerprint);
+    let parsed = Json::parse(&a.json.render()).unwrap();
+    for key in [
+        "vec_machine_insts_per_s",
+        "program_gen_per_s",
+        "analyze_cold_per_s",
+        "analyze_warm_per_s",
+        "scenarios_per_s_cold",
+        "scenarios_per_s_warm",
+        "warm_speedup",
+    ] {
+        let v = parsed.get(key).and_then(Json::as_f64).unwrap_or(-1.0);
+        assert!(v > 0.0, "{key} = {v}");
+    }
+    assert_eq!(
+        parsed.get("determinism_fingerprint").and_then(Json::as_str),
+        Some(a.fingerprint.as_str())
+    );
+    // a second run — warm process, whatever the cache state — must
+    // fingerprint identically: the model outputs may never wander
+    let b = perfsuite::run(true).unwrap();
+    assert_eq!(b.fingerprint, a.fingerprint);
+}

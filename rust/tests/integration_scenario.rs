@@ -204,6 +204,34 @@ fn golden_fabric_scaling_matrix_reproduces_the_fig5_effect() {
     ));
 }
 
+#[test]
+fn golden_warm_cache_sweeps_are_bit_identical_to_cold() {
+    // the estimation cache's contract, end to end: replaying the
+    // built-in matrices against warm caches must reproduce the cold
+    // reports bit for bit — same rows, same render, same JSON text.
+    // (Other tests in this binary run concurrently and share the
+    // caches; that is the point — whatever the cache state, the values
+    // never move.)
+    cimone::perfsuite::reset_caches();
+    let gens = ScenarioMatrix::generations();
+    let cold = run_matrix(&gens).unwrap();
+    let cold_json = cold.to_json().render();
+    let cold_render = cold.render();
+    let warm = run_matrix(&gens).unwrap();
+    assert_eq!(warm, cold);
+    assert_eq!(warm.to_json().render(), cold_json);
+    assert_eq!(warm.render(), cold_render);
+
+    // dry-run path too, on the wider fabric-scaling grid
+    cimone::perfsuite::reset_caches();
+    let fs_matrix = ScenarioMatrix::fabric_scaling();
+    let cold = dry_run_matrix(&fs_matrix).unwrap();
+    let cold_json = cold.to_json().render();
+    let warm = dry_run_matrix(&fs_matrix).unwrap();
+    assert_eq!(warm, cold);
+    assert_eq!(warm.to_json().render(), cold_json);
+}
+
 const FABRIC_ABLATION_SPEC: &str = r#"
 # MCv2 fleet, same jobs on the paper's 1 GbE vs the MCv3-style 10 GbE
 [campaign]
