@@ -1,0 +1,43 @@
+//! CI smoke for the assembler front end: assemble the shipped example
+//! listing, check it against its generator twin, and validate the
+//! `cimone asm --analyze --json` output through `Json::parse`.
+//! Optionally validates an externally produced JSON file (e.g. piped
+//! from `cimone asm ... --analyze --json`) passed as the first argument.
+//!
+//! ```text
+//! cargo run --example asm_smoke [-- asm.json]
+//! ```
+
+use cimone::isa::assembler;
+use cimone::util::json::Json;
+
+fn main() -> cimone::Result<()> {
+    let path = "examples/kernels/dgemm_rvv1_8x8.S";
+    let text = std::fs::read_to_string(path)?;
+    let prog = assembler::assemble_named(&text, path).map_err(anyhow::Error::msg)?;
+    let (v, m, s) = prog.mix();
+    assert_eq!(prog.insts.len(), v + m + s, "mix does not partition the program");
+    assert!(v > 0, "{path}: no vector instructions?");
+
+    // validate an externally produced `--analyze --json` file when given one
+    if let Some(json_path) = std::env::args().nth(1) {
+        let external = std::fs::read_to_string(&json_path)?;
+        let parsed = Json::parse(&external).map_err(anyhow::Error::msg)?;
+        let dialect = parsed
+            .get("dialect")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("{json_path}: missing `dialect`"))?;
+        assert_eq!(dialect, "rvv10", "{json_path}: unexpected dialect");
+        let insts = parsed.get("insts").and_then(Json::as_usize).unwrap_or(0);
+        assert!(insts > 0, "{json_path}: zero instructions");
+        let flops = parsed.get("flops").and_then(Json::as_usize).unwrap_or(0);
+        let cycles = parsed.get("cycles").and_then(Json::as_f64).unwrap_or(0.0);
+        assert!(flops > 0, "{json_path}: zero flops");
+        assert!(cycles > 0.0, "{json_path}: zero cycles");
+        println!("{json_path}: valid analysis JSON ({insts} insts, {flops} flops)");
+    }
+
+    let n = v + m + s;
+    println!("asm smoke OK: {path} assembles to {n} insts ({v} vector, {m} mem, {s} other)");
+    Ok(())
+}

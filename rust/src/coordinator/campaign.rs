@@ -31,6 +31,11 @@
 //! id = "blis-rvv1-u8"
 //! base = "blis-rvv1-lmul2" # any registered kernel id or alias
 //! k_unroll = 8             # see ukernel::registry for all override keys
+//! # family = "asm-source"  # hand-written kernels: add a listing via
+//! # path = "dgemm.S"       #   a file next to the spec, or inline with
+//! # source = '''           #   a multi-line literal
+//! #     ...
+//! # '''
 //!
 //! [[fleet]]                # optional: the machine to simulate;
 //! platform = "sg2044"      # omitted => the paper's 12-node fleet
@@ -66,13 +71,14 @@
 //! # runtime_s = 3600
 //! ```
 
+use std::path::Path;
 use std::sync::Arc;
 
 use crate::arch::platform::{Platform, PlatformRegistry};
 use crate::cluster::inventory::{Inventory, PAPER_FLEET};
 use crate::error::CimoneError;
 use crate::net::{Fabric, FabricRegistry};
-use crate::ukernel::{KernelDescriptor, KernelRegistry};
+use crate::ukernel::{KernelDescriptor, KernelFamily, KernelRegistry};
 use crate::util::config::{Config, Section, Value};
 
 use super::workload::{BlisAblationWorkload, HplWorkload, StreamWorkload, Workload};
@@ -585,11 +591,14 @@ impl CampaignSpec {
             // canonicalize aliases to the registry id at load time
             spec.fabric = Some(freg.get(s)?.id.clone());
         }
-        // kernels next: platforms and workloads may reference them
+        // kernels next: platforms and workloads may reference them; an
+        // asm-source kernel's `path =` listing resolves relative to the
+        // spec file itself (when the config knows where it came from)
+        let spec_dir = cfg.origin.as_deref().and_then(|p| Path::new(p).parent());
         let mut kreg = KernelRegistry::builtin();
         for sec in cfg.table_arrays.get("kernel").map(Vec::as_slice).unwrap_or(&[]) {
             let base = sec.get("base").and_then(Value::as_str).unwrap_or_default().to_string();
-            let k = kreg.register_section(sec)?;
+            let k = kreg.register_section_with_dir(sec, spec_dir)?;
             spec.custom_kernels.push(KernelDef { base, kernel: (*k).clone() });
         }
         let mut reg = PlatformRegistry::builtin();
@@ -957,6 +966,11 @@ fn render_kernel_def(reg: &mut KernelRegistry, def: &KernelDef) -> String {
         d.id = k.id.clone();
         d.aliases = Vec::new();
         d.label = format!("{} (custom, from {base_label})", k.id);
+        // mirror register_section: a non-asm family never inherits a
+        // listing from its base
+        if d.family != KernelFamily::AsmSource {
+            d.asm = None;
+        }
 
         if k.label != d.label {
             s.push_str(&format!("label = \"{}\"\n", k.label));
@@ -987,6 +1001,13 @@ fn render_kernel_def(reg: &mut KernelRegistry, def: &KernelDef) -> String {
         }
         if k.native_rvv10 != d.native_rvv10 {
             s.push_str(&format!("native_rvv10 = {}\n", k.native_rvv10));
+        }
+        if k.asm != d.asm {
+            if let Some(a) = &k.asm {
+                // inline the listing so the rendered spec is
+                // self-contained (no `path =` file dependence)
+                s.push_str(&format!("source = '''\n{}\n'''\n", a.text.trim_end_matches('\n')));
+            }
         }
     }
     // later [[kernel]] sections may derive from this one

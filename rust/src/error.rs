@@ -91,6 +91,18 @@ pub enum CimoneError {
     #[error("vector machine: {0}")]
     Machine(String),
 
+    /// A [`crate::isa::Program`] violates an architectural invariant
+    /// (register-group misalignment, register-file overflow) — caught by
+    /// `Program::validate_register_groups` before any instruction runs.
+    #[error("invalid program at inst {inst}: {reason}")]
+    InvalidProgram { inst: usize, reason: String },
+
+    /// An assembly listing failed to assemble. Carries the full
+    /// source-located error (file/line/col plus a caret excerpt) from
+    /// [`crate::isa::assembler`].
+    #[error("{0}")]
+    Asm(#[from] crate::isa::assembler::AsmError),
+
     /// A STREAM sweep was asked for a projection at a thread count it
     /// never ran.
     #[error("kernel `{kernel}` has no projection at {threads} threads (available: {available})")]

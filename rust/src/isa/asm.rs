@@ -71,13 +71,19 @@ pub fn render_inst(inst: &Inst, dialect: Dialect) -> String {
     }
 }
 
-/// Render a whole program as assembly listing.
+/// Render a whole program as assembly listing. If the program contains
+/// any loop back-edge (`bnez t1, .loop`), the `.loop:` label is emitted
+/// as the first line so the listing assembles under
+/// [`crate::isa::assembler`]'s backward-branch validation — which makes
+/// `assemble(render_program(p)) == p` hold for every well-formed
+/// program (labels are structure, not instructions).
 pub fn render_program(prog: &Program) -> String {
-    prog.insts
-        .iter()
-        .map(|i| format!("    {}", render_inst(i, prog.dialect)))
-        .collect::<Vec<_>>()
-        .join("\n")
+    let mut lines = Vec::with_capacity(prog.insts.len() + 1);
+    if prog.insts.iter().any(|i| matches!(i, Inst::Bnez)) {
+        lines.push(".loop:".to_string());
+    }
+    lines.extend(prog.insts.iter().map(|i| format!("    {}", render_inst(i, prog.dialect))));
+    lines.join("\n")
 }
 
 #[cfg(test)]
@@ -113,10 +119,17 @@ mod tests {
     }
 
     #[test]
-    fn listing_has_one_line_per_inst() {
+    fn listing_has_one_line_per_inst_plus_loop_label() {
         let mut p = Program::new(Dialect::Thead071);
         p.push(Inst::Addi);
         p.push(Inst::Bnez);
-        assert_eq!(render_program(&p).lines().count(), 2);
+        let text = render_program(&p);
+        assert_eq!(text.lines().count(), 3);
+        assert_eq!(text.lines().next(), Some(".loop:"));
+
+        // no back-edge, no label
+        let mut straight = Program::new(Dialect::Rvv10);
+        straight.push(Inst::Addi);
+        assert_eq!(render_program(&straight).lines().count(), 1);
     }
 }

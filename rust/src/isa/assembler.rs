@@ -1,0 +1,996 @@
+//! Two-pass RVV assembler: real `.S` listings -> [`Program`].
+//!
+//! [`crate::isa::parse`] was line-oriented: it skipped labels, ignored
+//! directives and reported errors as a bare line number. This module
+//! lifts it into a real assembler front end, so *published* micro-kernel
+//! listings (OpenBLAS/BLIS `.S` files, the paper's Section 3.3.1
+//! retrofit sources) assemble into registry kernels without Rust edits:
+//!
+//! - **Two passes.** Pass one collects labels and filters directives
+//!   (`.globl`, `.align`, `.text`, ... are accepted and ignored;
+//!   `.macro` is rejected — this assembler is deliberately macro-free);
+//!   pass two parses instructions and resolves branch targets against
+//!   the symbol table. Branches must be *backward* (loop back-edges):
+//!   an undefined or forward target is a typed error, which is exactly
+//!   the loop-structure guarantee the kernel expander relies on.
+//! - **Source-located errors.** Every failure is an [`AsmError`] with
+//!   file, 1-based line/column, the token span and the offending source
+//!   line, rendered with a caret excerpt (`^^^^`) like a real toolchain.
+//! - **Single source of truth.** The mnemonic set is exactly what
+//!   [`Inst`] encodes (plus the scalar bookkeeping spellings real
+//!   listings use — `li`/`mv`/`add`/... map onto the [`Inst::Addi`]
+//!   marker, branch spellings onto [`Inst::Bnez`]); anything else is
+//!   rejected at parse time with an edit-distance suggestion.
+//! - **Round trip.** [`disassemble`] renders a program back to canonical
+//!   text (via [`crate::isa::asm`]) and `assemble(disassemble(p)) == p`
+//!   holds for both dialects — property-tested in
+//!   `rust/tests/integration_isa.rs`.
+//! - **Kernel mode.** [`assemble_kernel`] additionally recovers the
+//!   micro-kernel structure — prologue / loop body / epilogue around the
+//!   single backward branch, with memory operands classified by base
+//!   register (`a0` = packed A panel, `a1` = packed B panel, `a2` = C
+//!   tile) — and [`AsmKernel::expand`] re-synthesizes the full KC-step
+//!   program for any [`PanelLayout`], which is what lets an `asm-source`
+//!   [`crate::ukernel::KernelDescriptor`] drive the same analysis and
+//!   execution paths as the generator families.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::asm::render_program;
+use super::inst::{Dialect, Inst, Program};
+use super::rvv::{vsetvl, Lmul, Sew, VType};
+use crate::ukernel::PanelLayout;
+use crate::util::hash::ContentHasher;
+
+/// A source-located assembly error: file, 1-based line and column, the
+/// width of the offending token and the source line it sits on. The
+/// `Display` impl renders a compiler-style caret excerpt:
+///
+/// ```text
+/// kernel.S:3:5: unknown mnemonic `vfmaac.vf` (did you mean `vfmacc.vf`?)
+///     vfmaac.vf v0, f1, v8
+///     ^^^^^^^^^
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AsmError {
+    /// Source name (`<memory>` for in-process text).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// 1-based column of the offending token.
+    pub col: usize,
+    /// Token width in characters (>= 1), for the caret run.
+    pub span: usize,
+    pub message: String,
+    /// The offending source line, kept so the error renders its own
+    /// excerpt without needing the original text.
+    pub source_line: String,
+}
+
+impl fmt::Display for AsmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{}:{}:{}: {}", self.file, self.line, self.col, self.message)?;
+        writeln!(f, "    {}", self.source_line)?;
+        write!(f, "    {}{}", " ".repeat(self.col.saturating_sub(1)), "^".repeat(self.span.max(1)))
+    }
+}
+
+impl std::error::Error for AsmError {}
+
+/// Directives we accept and ignore (layout/linkage noise in real `.S`
+/// files). Anything else dotted is an error; `.macro` gets a dedicated
+/// message because it is a deliberate non-feature.
+const IGNORED_DIRECTIVES: &[&str] = &[
+    ".align",
+    ".attribute",
+    ".balign",
+    ".global",
+    ".globl",
+    ".option",
+    ".p2align",
+    ".section",
+    ".size",
+    ".text",
+    ".type",
+];
+
+/// Scalar bookkeeping spellings that map onto the [`Inst::Addi`] marker
+/// (address bumps / loop-counter arithmetic; functional no-ops for FP
+/// state, charged by the cycle model).
+const ADDI_LIKE: &[&str] = &["add", "addi", "addiw", "andi", "li", "mv", "slli", "srli", "sub"];
+
+/// Branch spellings that map onto the [`Inst::Bnez`] back-edge marker.
+/// The last operand is the target label.
+const BRANCH_LIKE: &[&str] = &["beqz", "bge", "bgtz", "blt", "bne", "bnez"];
+
+/// Every mnemonic the instruction tables encode, used for suggestions.
+const KNOWN_MNEMONICS: &[&str] = &[
+    "vsetvli",
+    "vle32.v",
+    "vle64.v",
+    "vle.v",
+    "vse32.v",
+    "vse64.v",
+    "vse.v",
+    "vfmacc.vf",
+    "vfmul.vf",
+    "vfmv.v.f",
+    "vfadd.vv",
+    "fld",
+    "fsd",
+    "fmadd.d",
+    "add",
+    "addi",
+    "addiw",
+    "andi",
+    "li",
+    "mv",
+    "slli",
+    "srli",
+    "sub",
+    "beqz",
+    "bge",
+    "bgtz",
+    "blt",
+    "bne",
+    "bnez",
+];
+
+/// Which packed panel a micro-kernel memory operand addresses, keyed by
+/// its base register: `a0` = A panel, `a1` = B panel, `a2` = C tile —
+/// the calling convention the BLIS/OpenBLAS micro-kernels (and our
+/// [`PanelLayout`]) share.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PanelBase {
+    A,
+    B,
+    C,
+}
+
+/// One assembled instruction plus the panel its memory operand (if any)
+/// addresses. In kernel mode the `addr` field of `inst` holds the
+/// *panel-relative* element offset.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelInst {
+    pub inst: Inst,
+    pub base: Option<PanelBase>,
+}
+
+/// A micro-kernel recovered from a listing: straight-line prologue (C
+/// loads, `vsetvli`), the single-backward-branch loop body covering
+/// `k_unroll` rank-1 steps, and the epilogue (C stores). Memory operands
+/// are panel-relative (see [`PanelBase`]); [`AsmKernel::expand`]
+/// re-synthesizes the absolute-addressed program for any layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AsmKernel {
+    pub dialect: Dialect,
+    /// The loop label the back-edge targets.
+    pub label: String,
+    pub prologue: Vec<KernelInst>,
+    pub body: Vec<KernelInst>,
+    pub epilogue: Vec<KernelInst>,
+}
+
+/// Assemble a listing from in-process text (file shown as `<memory>`).
+pub fn assemble(text: &str) -> Result<Program, AsmError> {
+    assemble_named(text, "<memory>")
+}
+
+/// Assemble a listing, reporting errors against `file`.
+pub fn assemble_named(text: &str, file: &str) -> Result<Program, AsmError> {
+    let unit = Unit::parse(text, file)?;
+    let mut p = Program::new(unit.dialect);
+    for li in unit.insts {
+        p.push(li.ki.inst);
+    }
+    Ok(p)
+}
+
+/// Render a program back to canonical assembly text, such that
+/// `assemble(disassemble(p)) == p` for both dialects. Delegates to
+/// [`render_program`] — one renderer, shared with the translator demo —
+/// which emits the `.loop:` label any `bnez` back-edge targets.
+pub fn disassemble(p: &Program) -> String {
+    render_program(p)
+}
+
+/// Assemble a listing into its micro-kernel structure (see
+/// [`AsmKernel`]). On top of [`assemble_named`]'s checks this requires
+/// exactly one backward branch (the k-loop) and classifies every memory
+/// operand by panel base register.
+pub fn assemble_kernel(text: &str, file: &str) -> Result<AsmKernel, AsmError> {
+    let unit = Unit::parse(text, file)?;
+    let branches: Vec<usize> = unit
+        .insts
+        .iter()
+        .enumerate()
+        .filter(|(_, li)| matches!(li.ki.inst, Inst::Bnez))
+        .map(|(i, _)| i)
+        .collect();
+    let err = |line: usize, col: usize, span: usize, msg: String| AsmError {
+        file: file.to_string(),
+        line,
+        col,
+        span,
+        message: msg,
+        source_line: unit.source_line(line),
+    };
+    let (branch_idx, label) = match branches.as_slice() {
+        [one] => (*one, unit.insts[*one].target.clone().unwrap_or_default()),
+        [] => {
+            return Err(err(
+                1,
+                1,
+                1,
+                "micro-kernel listings need exactly one backward loop branch, found none".into(),
+            ))
+        }
+        more => {
+            let li = &unit.insts[more[1]];
+            return Err(err(
+                li.line,
+                li.col,
+                li.span,
+                format!("micro-kernel listings need exactly one loop branch, found {}", more.len()),
+            ));
+        }
+    };
+    let label_line = unit.labels[&label];
+    let mut k = AsmKernel {
+        dialect: unit.dialect,
+        label,
+        prologue: Vec::new(),
+        body: Vec::new(),
+        epilogue: Vec::new(),
+    };
+    for (i, li) in unit.insts.iter().enumerate() {
+        if li.line <= label_line {
+            k.prologue.push(li.ki);
+        } else if i <= branch_idx {
+            k.body.push(li.ki);
+        } else {
+            k.epilogue.push(li.ki);
+        }
+    }
+    // panel-base discipline: prologue/epilogue touch only the C tile,
+    // the body may touch all three panels
+    for (ki, where_) in k
+        .prologue
+        .iter()
+        .map(|ki| (ki, "prologue"))
+        .chain(k.epilogue.iter().map(|ki| (ki, "epilogue")))
+    {
+        if matches!(ki.base, Some(PanelBase::A) | Some(PanelBase::B)) {
+            return Err(err(
+                1,
+                1,
+                1,
+                format!(
+                    "{where_} addresses the k-indexed {} panel — A/B panel operands \
+                     only make sense inside the loop body",
+                    if ki.base == Some(PanelBase::A) { "A" } else { "B" }
+                ),
+            ));
+        }
+    }
+    Ok(k)
+}
+
+impl AsmKernel {
+    /// Re-synthesize the absolute-addressed program for `layout`: the
+    /// prologue, `ceil(kc / k_unroll)` expansions of the loop body with
+    /// A/B panel offsets advanced per block (a partial tail block keeps
+    /// only the k-steps it covers, exactly like the generator families),
+    /// and the epilogue. Panel-relative offsets are resolved through
+    /// [`PanelLayout`]; call [`AsmKernel::check`] first (the descriptor
+    /// validation path does) so offsets are known in range.
+    pub fn expand(&self, l: PanelLayout, k_unroll: usize) -> Program {
+        let c_base = l.c_offset(0);
+        let mut p = Program::new(self.dialect);
+        for ki in &self.prologue {
+            p.push(rebase(ki, c_base, 0, 0));
+        }
+        let mut k = 0;
+        while k < l.kc {
+            let block = k_unroll.min(l.kc - k);
+            // which k-step of the unrolled body an inst belongs to: its
+            // own panel offset for A/B operands; everything else (FMA
+            // bursts) rides with the preceding load, as in every real
+            // schedule. A partial tail block keeps only the first
+            // `block` k-steps; bookkeeping is per-block, kept always.
+            let mut step = 0;
+            for ki in &self.body {
+                if matches!(ki.inst, Inst::Addi | Inst::Bnez) {
+                    p.push(ki.inst);
+                    continue;
+                }
+                match (ki.base, addr_of(&ki.inst)) {
+                    (Some(PanelBase::A), Some(a)) => step = a / l.mr,
+                    (Some(PanelBase::B), Some(a)) => step = a / l.nr,
+                    _ => {}
+                }
+                if step < block {
+                    p.push(rebase(ki, c_base, l.a_offset(k), l.b_offset(k)));
+                }
+            }
+            k += block;
+        }
+        for ki in &self.epilogue {
+            p.push(rebase(ki, c_base, 0, 0));
+        }
+        p
+    }
+
+    /// Validate the kernel against the descriptor's declared geometry:
+    /// panel offsets in range for an `mr` x `nr` tile unrolled
+    /// `k_unroll` deep, every `vsetvli` feasible at `vlen_bits`, and the
+    /// expanded program's register groups legal. Returns a reason string
+    /// (the descriptor wraps it as `CimoneError::InvalidKernel`).
+    pub fn check(
+        &self,
+        mr: usize,
+        nr: usize,
+        k_unroll: usize,
+        vlen_bits: usize,
+    ) -> Result<(), String> {
+        let mut steps_seen = vec![false; k_unroll];
+        for (ki, where_) in self
+            .prologue
+            .iter()
+            .map(|ki| (ki, "prologue"))
+            .chain(self.body.iter().map(|ki| (ki, "body")))
+            .chain(self.epilogue.iter().map(|ki| (ki, "epilogue")))
+        {
+            if let Inst::Vsetvli { avl, vtype } = ki.inst {
+                if vtype.lmul.is_fractional() {
+                    return Err("fractional LMUL is not a GEMM-kernel configuration".into());
+                }
+                let got = vsetvl(avl, vtype, vlen_bits);
+                if got != avl {
+                    return Err(format!(
+                        "vsetvli avl={avl} is infeasible at VLEN={vlen_bits} \
+                         (vsetvl grants vl={got})"
+                    ));
+                }
+            }
+            let (base, addr) = (ki.base, addr_of(&ki.inst));
+            if let (Some(b), Some(a)) = (base, addr) {
+                let (limit, what) = match b {
+                    PanelBase::A => (k_unroll * mr, "A-panel"),
+                    PanelBase::B => (k_unroll * nr, "B-panel"),
+                    PanelBase::C => (mr * nr, "C-tile"),
+                };
+                if a >= limit {
+                    return Err(format!(
+                        "{where_} {what} offset {a} out of range for mr={mr} nr={nr} \
+                         k_unroll={k_unroll} (limit {limit})"
+                    ));
+                }
+                if where_ == "body" {
+                    match b {
+                        PanelBase::A => steps_seen[a / mr] = true,
+                        PanelBase::B => steps_seen[a / nr] = true,
+                        PanelBase::C => {}
+                    }
+                }
+            }
+        }
+        if let Some(missing) = steps_seen.iter().position(|s| !s) {
+            return Err(format!(
+                "loop body never addresses k-step {missing} of the declared \
+                 k_unroll={k_unroll} (A offsets cover [k*mr, (k+1)*mr), B offsets [k*nr, (k+1)*nr))"
+            ));
+        }
+        // two blocks exercise the loop re-entry; register-group rules
+        // must hold over the whole expansion
+        let probe = PanelLayout::new(mr, nr, (2 * k_unroll).max(1));
+        self.expand(probe, k_unroll)
+            .validate_register_groups(vlen_bits)
+            .map_err(|e| e.to_string())
+    }
+
+    /// Canonical content feed for the estimation cache: the dialect plus
+    /// every instruction with its panel tag — a pure function of the
+    /// *resolved* kernel (comments, label spelling and whitespace do not
+    /// feed), so cosmetic edits to a listing keep cache keys stable.
+    pub fn feed_content(&self, h: &mut ContentHasher) {
+        h.write_str(match self.dialect {
+            Dialect::Rvv10 => "rvv10",
+            Dialect::Thead071 => "thead071",
+        });
+        for (part, insts) in [("p", &self.prologue), ("b", &self.body), ("e", &self.epilogue)] {
+            h.write_str(part).write_usize(insts.len());
+            for ki in insts {
+                h.write_str(&super::asm::render_inst(&ki.inst, self.dialect));
+                h.write_usize(match ki.base {
+                    None => 0,
+                    Some(PanelBase::A) => 1,
+                    Some(PanelBase::B) => 2,
+                    Some(PanelBase::C) => 3,
+                });
+            }
+        }
+    }
+}
+
+/// The absolute-addressed copy of a panel-relative instruction.
+fn rebase(ki: &KernelInst, c_base: usize, a_base: usize, b_base: usize) -> Inst {
+    let shift = match ki.base {
+        None => 0,
+        Some(PanelBase::A) => a_base,
+        Some(PanelBase::B) => b_base,
+        Some(PanelBase::C) => c_base,
+    };
+    match ki.inst {
+        Inst::Vle { sew, vd, addr } => Inst::Vle { sew, vd, addr: addr + shift },
+        Inst::Vse { sew, vs, addr } => Inst::Vse { sew, vs, addr: addr + shift },
+        Inst::Fld { fd, addr } => Inst::Fld { fd, addr: addr + shift },
+        Inst::Fsd { fs, addr } => Inst::Fsd { fs, addr: addr + shift },
+        other => other,
+    }
+}
+
+fn addr_of(inst: &Inst) -> Option<usize> {
+    match inst {
+        Inst::Vle { addr, .. }
+        | Inst::Vse { addr, .. }
+        | Inst::Fld { addr, .. }
+        | Inst::Fsd { addr, .. } => Some(*addr),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------
+// The two-pass front end.
+// ---------------------------------------------------------------------
+
+/// One parsed instruction with its source location, (for branches) the
+/// target label, and the dialect its spelling implies, if any.
+struct LocatedInst {
+    ki: KernelInst,
+    line: usize,
+    col: usize,
+    span: usize,
+    target: Option<String>,
+    dialect_hint: Option<Dialect>,
+}
+
+impl LocatedInst {
+    fn new(ki: KernelInst, line: usize, col: usize, span: usize) -> LocatedInst {
+        LocatedInst { ki, line, col, span, target: None, dialect_hint: None }
+    }
+}
+
+/// A fully parsed listing: instructions in order, the symbol table, the
+/// inferred dialect.
+struct Unit<'t> {
+    text: &'t str,
+    file: String,
+    dialect: Dialect,
+    insts: Vec<LocatedInst>,
+    labels: BTreeMap<String, usize>,
+}
+
+impl<'t> Unit<'t> {
+    fn source_line(&self, line: usize) -> String {
+        self.text.lines().nth(line.saturating_sub(1)).unwrap_or("").to_string()
+    }
+
+    fn parse(text: &'t str, file: &str) -> Result<Unit<'t>, AsmError> {
+        let mut u = Unit {
+            text,
+            file: file.to_string(),
+            dialect: Dialect::Rvv10,
+            insts: Vec::new(),
+            labels: BTreeMap::new(),
+        };
+        let err = |line: usize, col: usize, span: usize, msg: String| AsmError {
+            file: file.to_string(),
+            line,
+            col,
+            span,
+            message: msg,
+            source_line: text.lines().nth(line - 1).unwrap_or("").to_string(),
+        };
+
+        // Pass 1: labels and directives. A label stands alone on its
+        // line (`name:`); directives start with `.` and are either
+        // known-ignored or rejected.
+        let mut code_lines: Vec<(usize, &str, usize)> = Vec::new(); // (lineno, code, col)
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let code = raw.split('#').next().unwrap_or("");
+            let trimmed = code.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let col = code.len() - code.trim_start().len() + 1;
+            if let Some(name) = trimmed.strip_suffix(':') {
+                if name.is_empty() || name.contains(char::is_whitespace) {
+                    let span = trimmed.chars().count();
+                    return Err(err(lineno, col, span, format!("malformed label `{trimmed}`")));
+                }
+                if u.labels.insert(name.to_string(), lineno).is_some() {
+                    return Err(err(
+                        lineno,
+                        col,
+                        name.chars().count(),
+                        format!("label `{name}` is defined twice"),
+                    ));
+                }
+                continue;
+            }
+            if trimmed.starts_with('.') {
+                let dname = trimmed.split_whitespace().next().unwrap_or(trimmed);
+                if dname == ".macro" {
+                    return Err(err(
+                        lineno,
+                        col,
+                        dname.chars().count(),
+                        "directive `.macro` is not supported (this assembler is \
+                         deliberately macro-free; expand macros before ingesting)"
+                            .into(),
+                    ));
+                }
+                if !IGNORED_DIRECTIVES.contains(&dname) {
+                    return Err(err(
+                        lineno,
+                        col,
+                        dname.chars().count(),
+                        format!(
+                            "unknown directive `{dname}` (accepted and ignored: {})",
+                            IGNORED_DIRECTIVES.join(", ")
+                        ),
+                    ));
+                }
+                continue;
+            }
+            code_lines.push((lineno, code, col));
+        }
+
+        // Pass 2: instructions, dialect inference, branch resolution.
+        let mut dialect: Option<Dialect> = None;
+        for (lineno, code, col) in code_lines {
+            let li = parse_inst_line(&u, lineno, code, col)?;
+            if let Some(d) = li.dialect_hint {
+                match dialect {
+                    None => dialect = Some(d),
+                    Some(prev) if prev != d => {
+                        return Err(err(
+                            lineno,
+                            li.col,
+                            li.span,
+                            format!("mixed dialects: {prev:?} then {d:?}"),
+                        ))
+                    }
+                    _ => {}
+                }
+            }
+            if let Some(target) = &li.target {
+                match u.labels.get(target) {
+                    None => {
+                        return Err(err(
+                            lineno,
+                            li.col,
+                            li.span,
+                            format!("branch target `{target}` is not defined"),
+                        ))
+                    }
+                    Some(def) if *def > lineno => {
+                        return Err(err(
+                            lineno,
+                            li.col,
+                            li.span,
+                            format!(
+                                "branch target `{target}` (line {def}) is forward — only \
+                                 backward loop branches are supported"
+                            ),
+                        ))
+                    }
+                    _ => {}
+                }
+            }
+            u.insts.push(li);
+        }
+        u.dialect = dialect.unwrap_or(Dialect::Rvv10);
+        Ok(u)
+    }
+}
+
+/// Split one code line (comment already stripped) into the mnemonic and
+/// comma-separated operands, each with its 1-based column.
+fn split_operands(code: &str) -> (&str, usize, Vec<(&str, usize)>) {
+    let lead = code.len() - code.trim_start().len();
+    let rest = &code[lead..];
+    let mlen = rest.find(char::is_whitespace).unwrap_or(rest.len());
+    let mnemonic = &rest[..mlen];
+    let mut ops = Vec::new();
+    let tail_start = lead + mlen;
+    let tail = &code[tail_start..];
+    let mut off = 0;
+    for seg in tail.split(',') {
+        let t = seg.trim();
+        if !t.is_empty() {
+            let col = tail_start + off + (seg.len() - seg.trim_start().len()) + 1;
+            ops.push((t, col));
+        }
+        off += seg.len() + 1;
+    }
+    (mnemonic, lead + 1, ops)
+}
+
+fn levenshtein(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, ca) in a.iter().enumerate() {
+        let mut cur = vec![i + 1];
+        for (j, cb) in b.iter().enumerate() {
+            let cost = usize::from(ca != cb);
+            cur.push((prev[j] + cost).min(prev[j + 1] + 1).min(cur[j] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
+}
+
+/// Closest known mnemonic within edit distance 2, for error hints.
+fn suggest(bare: &str) -> Option<&'static str> {
+    KNOWN_MNEMONICS
+        .iter()
+        .map(|m| (levenshtein(bare, m), *m))
+        .min()
+        .filter(|(d, _)| *d <= 2)
+        .map(|(_, m)| m)
+}
+
+fn parse_inst_line(
+    u: &Unit<'_>,
+    lineno: usize,
+    code: &str,
+    _col: usize,
+) -> Result<LocatedInst, AsmError> {
+    let (mnemonic, mcol, ops) = split_operands(code);
+    let mspan = mnemonic.chars().count();
+    let err = |col: usize, span: usize, msg: String| AsmError {
+        file: u.file.clone(),
+        line: lineno,
+        col,
+        span: span.max(1),
+        message: msg,
+        source_line: u.source_line(lineno),
+    };
+    let (bare, mut hint) = match mnemonic.strip_prefix("th.") {
+        Some(b) => (b, Some(Dialect::Thead071)),
+        None => (mnemonic, None),
+    };
+
+    let op = |i: usize| -> Result<(&str, usize), AsmError> {
+        ops.get(i).copied().ok_or_else(|| {
+            err(mcol, mspan, format!("`{mnemonic}` is missing operand {}", i + 1))
+        })
+    };
+    let reg = |i: usize, class: char| -> Result<u8, AsmError> {
+        let (tok, col) = op(i)?;
+        let span = tok.chars().count();
+        let rest = tok.strip_prefix(class).ok_or_else(|| {
+            err(col, span, format!("expected {class}-register, got `{tok}`"))
+        })?;
+        let n: u8 = rest
+            .parse()
+            .map_err(|_| err(col, span, format!("bad register `{tok}`")))?;
+        if n >= 32 {
+            return Err(err(col, span, format!("register `{tok}` out of file (v0..v31)")));
+        }
+        Ok(n)
+    };
+    // `<offset>(<base>)` memory operand -> (offset, base register name)
+    let addr = |i: usize| -> Result<(usize, String), AsmError> {
+        let (tok, col) = op(i)?;
+        let span = tok.chars().count();
+        let (off_s, rest) = tok
+            .split_once('(')
+            .ok_or_else(|| err(col, span, format!("bad address `{tok}` (want `off(reg)`)")))?;
+        let base = rest
+            .strip_suffix(')')
+            .ok_or_else(|| err(col, span, format!("bad address `{tok}` (unclosed `(`)")))?;
+        let off: usize = off_s
+            .trim()
+            .parse()
+            .map_err(|_| err(col, span, format!("bad address offset `{off_s}`")))?;
+        Ok((off, base.trim().to_string()))
+    };
+    let panel = |base: &str| -> Option<PanelBase> {
+        match base {
+            "a0" => Some(PanelBase::A),
+            "a1" => Some(PanelBase::B),
+            "a2" => Some(PanelBase::C),
+            _ => None,
+        }
+    };
+
+    let mut target = None;
+    let (inst, base) = match bare {
+        "vsetvli" => {
+            // vsetvli rd, <avl>, e<sew>, m<lmul>[, ta, ma]
+            if ops.len() < 4 {
+                return Err(err(mcol, mspan, "vsetvli needs rd, avl, sew, lmul".into()));
+            }
+            let (avl_s, avl_col) = ops[1];
+            let avl: usize = avl_s
+                .parse()
+                .map_err(|_| err(avl_col, avl_s.chars().count(), format!("bad avl `{avl_s}`")))?;
+            let sew = match ops[2].0 {
+                "e32" => Sew::E32,
+                "e64" => Sew::E64,
+                o => {
+                    return Err(err(ops[2].1, o.chars().count(), format!("bad sew `{o}`")));
+                }
+            };
+            let lmul = match ops[3].0 {
+                "m1" => Lmul::M1,
+                "m2" => Lmul::M2,
+                "m4" => Lmul::M4,
+                "m8" => Lmul::M8,
+                "mf2" | "mf4" | "mf8" => Lmul::Fractional,
+                o => {
+                    return Err(err(ops[3].1, o.chars().count(), format!("bad lmul `{o}`")));
+                }
+            };
+            let has_flags = ops.len() >= 6 && ops[4].0 == "ta" && ops[5].0 == "ma";
+            if hint == Some(Dialect::Thead071) && has_flags {
+                return Err(err(ops[4].1, 2, "theadvector vsetvli takes no ta/ma flags".into()));
+            }
+            if has_flags && hint.is_none() {
+                // ta/ma spelling exists only in RVV 1.0
+                hint = Some(Dialect::Rvv10);
+            }
+            let mut vt = VType::new(sew, lmul);
+            vt.tail_agnostic = has_flags;
+            vt.mask_agnostic = has_flags;
+            (Inst::Vsetvli { avl, vtype: vt }, None)
+        }
+        // NOTE: an EEW-suffixed load without `th.` carries no dialect
+        // hint — a theadvector listing may legitimately spell explicit
+        // widths, and the historical parser accepted that mix.
+        m if m.starts_with("vle") && m.ends_with(".v") => {
+            let sew = parse_eew(m, hint).map_err(|msg| err(mcol, mspan, msg))?;
+            let vd = reg(0, 'v')?;
+            let (a, b) = addr(1)?;
+            (Inst::Vle { sew, vd, addr: a }, panel(&b))
+        }
+        m if m.starts_with("vse") && m.ends_with(".v") => {
+            let sew = parse_eew(m, hint).map_err(|msg| err(mcol, mspan, msg))?;
+            let vs = reg(0, 'v')?;
+            let (a, b) = addr(1)?;
+            (Inst::Vse { sew, vs, addr: a }, panel(&b))
+        }
+        "vfmacc.vf" => {
+            (Inst::VfmaccVf { vd: reg(0, 'v')?, fs: reg(1, 'f')?, vs2: reg(2, 'v')? }, None)
+        }
+        "vfmul.vf" => {
+            (Inst::VfmulVf { vd: reg(0, 'v')?, fs: reg(1, 'f')?, vs2: reg(2, 'v')? }, None)
+        }
+        "vfmv.v.f" => (Inst::VfmvVf { vd: reg(0, 'v')?, fs: reg(1, 'f')? }, None),
+        "vfadd.vv" => {
+            (Inst::VfaddVv { vd: reg(0, 'v')?, vs1: reg(1, 'v')?, vs2: reg(2, 'v')? }, None)
+        }
+        "fld" => {
+            let fd = reg(0, 'f')?;
+            let (a, b) = addr(1)?;
+            (Inst::Fld { fd, addr: a }, panel(&b))
+        }
+        "fsd" => {
+            let fs = reg(0, 'f')?;
+            let (a, b) = addr(1)?;
+            (Inst::Fsd { fs, addr: a }, panel(&b))
+        }
+        "fmadd.d" => (
+            Inst::FmaddD {
+                fd: reg(0, 'f')?,
+                fs1: reg(1, 'f')?,
+                fs2: reg(2, 'f')?,
+                fs3: reg(3, 'f')?,
+            },
+            None,
+        ),
+        m if ADDI_LIKE.contains(&m) => (Inst::Addi, None),
+        m if BRANCH_LIKE.contains(&m) => {
+            let (tok, _col) = op(if m.ends_with('z') { 1 } else { 2 })?;
+            target = Some(tok.to_string());
+            (Inst::Bnez, None)
+        }
+        other => {
+            let hint_msg = match suggest(other) {
+                Some(s) => format!(" (did you mean `{s}`?)"),
+                None => String::new(),
+            };
+            return Err(err(mcol, mspan, format!("unknown mnemonic `{other}`{hint_msg}")));
+        }
+    };
+    let mut li = LocatedInst::new(KernelInst { inst, base }, lineno, mcol, mspan);
+    li.target = target;
+    li.dialect_hint = hint;
+    Ok(li)
+}
+
+/// EEW from a load/store mnemonic: RVV 1.0 spells it (`vle64.v`),
+/// theadvector takes it from vtype (we default E64, the only
+/// theadvector element width in this codebase).
+fn parse_eew(m: &str, hint: Option<Dialect>) -> Result<Sew, String> {
+    let digits: String = m.chars().filter(|c| c.is_ascii_digit()).collect();
+    match (digits.as_str(), hint) {
+        ("64", _) => Ok(Sew::E64),
+        ("32", _) => Ok(Sew::E32),
+        ("", Some(Dialect::Thead071)) => Ok(Sew::E64),
+        ("", None) => Err("RVV 1.0 load/store needs an EEW suffix (vle64.v / vle32.v)".into()),
+        (d, _) => Err(format!("unsupported EEW `{d}`")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::exec::VecMachine;
+
+    #[test]
+    fn assembles_labels_directives_and_comments() {
+        let text = "
+# BLIS-style fragment
+.globl dgemm
+.align 2
+dgemm:
+    vsetvli t0, 2, e64, m1, ta, ma
+.loop:
+    vle64.v v8, 0(a0)       # A column
+    fld f0, 4(a1)
+    vfmacc.vf v0, f0, v8
+    addi a0, a0, 16
+    bnez t1, .loop
+    vse64.v v0, 6(a0)
+";
+        let p = assemble(text).unwrap();
+        assert_eq!(p.dialect, Dialect::Rvv10);
+        assert_eq!(p.len(), 7);
+        assert!(matches!(p.insts[3], Inst::VfmaccVf { vd: 0, fs: 0, vs2: 8 }));
+    }
+
+    #[test]
+    fn error_carries_file_line_col_and_caret() {
+        let text = "addi a0, a0, 8\n    vfmaac.vf v0, f1, v8\n";
+        let e = assemble_named(text, "kern.S").unwrap_err();
+        assert_eq!((e.file.as_str(), e.line, e.col), ("kern.S", 2, 5));
+        assert_eq!(e.span, "vfmaac.vf".len());
+        let shown = e.to_string();
+        assert!(shown.contains("kern.S:2:5"), "{shown}");
+        assert!(shown.contains("did you mean `vfmacc.vf`?"), "{shown}");
+        assert!(shown.contains("    ^^^^^^^^^"), "{shown}");
+        assert!(shown.contains("vfmaac.vf v0, f1, v8"), "{shown}");
+    }
+
+    #[test]
+    fn operand_errors_point_at_the_operand() {
+        let e = assemble("vfmacc.vf v0, x1, v8\n").unwrap_err();
+        assert_eq!((e.line, e.col), (1, 15));
+        assert!(e.message.contains("expected f-register"), "{e}");
+    }
+
+    #[test]
+    fn undefined_and_forward_branch_targets_rejected() {
+        let e = assemble("addi a0, a0, 8\nbnez t1, .loop\n").unwrap_err();
+        assert!(e.message.contains("`.loop` is not defined"), "{e}");
+        let e = assemble("bnez t1, .done\n.done:\n    addi a0, a0, 8\n").unwrap_err();
+        assert!(e.message.contains("forward"), "{e}");
+    }
+
+    #[test]
+    fn macro_directive_rejected_with_dedicated_message() {
+        let e = assemble(".macro rank1 n\n.endm\n").unwrap_err();
+        assert!(e.message.contains(".macro"), "{e}");
+        assert!(e.message.contains("macro-free"), "{e}");
+        // unknown directives are errors too (not silently skipped)
+        let e = assemble(".wibble 4\n").unwrap_err();
+        assert!(e.message.contains("unknown directive"), "{e}");
+    }
+
+    #[test]
+    fn scalar_bookkeeping_spellings_map_to_markers() {
+        let text = "top:\n    li t1, 128\n    mv t2, a0\n    slli t3, t1, 3\n    sub t1, t1, t2\n    bnez t1, top\n";
+        let p = assemble(text).unwrap();
+        assert_eq!(p.insts, vec![Inst::Addi, Inst::Addi, Inst::Addi, Inst::Addi, Inst::Bnez]);
+    }
+
+    #[test]
+    fn roundtrip_assemble_disassemble_builtins() {
+        use crate::ukernel::KernelRegistry;
+        for k in KernelRegistry::builtin().kernels() {
+            let (mr, nr) = k.tile();
+            let p = k.program(PanelLayout::new(mr, nr, 5));
+            let back = assemble(&disassemble(&p)).unwrap_or_else(|e| panic!("{}: {e}", k.id));
+            assert_eq!(back, p, "{}", k.id);
+        }
+    }
+
+    #[test]
+    fn kernel_mode_recovers_loop_structure() {
+        let text = "
+    vsetvli t0, 2, e64, m1, ta, ma
+    vle64.v v0, 0(a2)
+.loop:
+    vle64.v v8, 0(a0)
+    fld f0, 0(a1)
+    vfmacc.vf v0, f0, v8
+    addi a0, a0, 16
+    addi a1, a1, 8
+    bnez t1, .loop
+    vse64.v v0, 0(a2)
+";
+        let k = assemble_kernel(text, "<t>").unwrap();
+        assert_eq!(k.label, ".loop");
+        assert_eq!((k.prologue.len(), k.body.len(), k.epilogue.len()), (2, 6, 1));
+        assert_eq!(k.prologue[1].base, Some(PanelBase::C));
+        assert_eq!(k.body[0].base, Some(PanelBase::A));
+        assert_eq!(k.body[1].base, Some(PanelBase::B));
+        assert!(k.check(2, 1, 1, 128).is_ok());
+
+        // expansion covers every k-step and executes correctly
+        let l = PanelLayout::new(2, 1, 4);
+        let p = k.expand(l, 1);
+        let mut m = VecMachine::new(128, l.mem_words()).unwrap();
+        let a = crate::util::Matrix::random_hpl(2, 4, 1);
+        let b = crate::util::Matrix::random_hpl(4, 1, 2);
+        let c = crate::util::Matrix::random_hpl(2, 1, 3);
+        m.mem = l.pack(&a, &b, &c);
+        m.run(&p).unwrap();
+        let out = l.unpack_c(&m.mem);
+        let mut want = c.clone();
+        crate::util::Matrix::gemm_acc(&mut want, &a, &b);
+        assert!(out.allclose(&want, 1e-13, 1e-13));
+    }
+
+    #[test]
+    fn kernel_mode_requires_exactly_one_loop() {
+        let no_loop = "vsetvli t0, 2, e64, m1, ta, ma\nvle64.v v0, 0(a2)\n";
+        let e = assemble_kernel(no_loop, "<t>").unwrap_err();
+        assert!(e.message.contains("found none"), "{e}");
+    }
+
+    #[test]
+    fn kernel_check_catches_out_of_range_panel_offsets() {
+        let text = "
+.loop:
+    vle64.v v8, 16(a0)
+    fld f0, 0(a1)
+    vfmacc.vf v0, f0, v8
+    bnez t1, .loop
+";
+        let k = assemble_kernel(text, "<t>").unwrap();
+        // A offset 16 needs k_unroll*mr > 16; at mr=2, u=1 it's out
+        let e = k.check(2, 1, 1, 128).unwrap_err();
+        assert!(e.contains("A-panel offset 16 out of range"), "{e}");
+    }
+
+    #[test]
+    fn kernel_check_catches_infeasible_vsetvli() {
+        let text = "
+    vsetvli t0, 8, e64, m1, ta, ma
+.loop:
+    vle64.v v8, 0(a0)
+    fld f0, 0(a1)
+    vfmacc.vf v0, f0, v8
+    bnez t1, .loop
+";
+        let k = assemble_kernel(text, "<t>").unwrap();
+        // avl=8 at LMUL=1 needs VLEN>=512
+        let e = k.check(8, 1, 1, 128).unwrap_err();
+        assert!(e.contains("infeasible at VLEN=128"), "{e}");
+        assert!(k.check(8, 1, 1, 512).is_ok());
+    }
+
+    #[test]
+    fn suggestion_metric_is_sane() {
+        assert_eq!(suggest("vfmaac.vf"), Some("vfmacc.vf"));
+        assert_eq!(suggest("vsetvl"), Some("vsetvli"));
+        assert_eq!(suggest("frobnicate"), None);
+    }
+}

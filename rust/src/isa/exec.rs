@@ -119,12 +119,15 @@ impl VecMachine {
         self.v[((vreg as usize) << self.lane_shift) + i] = val;
     }
 
-    /// Execute one instruction.
-    pub fn step(&mut self, inst: &Inst) -> Result<(), String> {
+    /// Execute one instruction. Runtime faults (OOB access, SEW
+    /// mismatch, register-file overflow) come back as typed
+    /// [`CimoneError::Machine`].
+    pub fn step(&mut self, inst: &Inst) -> Result<(), CimoneError> {
+        let fault = |msg: String| Err(CimoneError::Machine(msg));
         match *inst {
             Inst::Vsetvli { avl, vtype } => {
                 if vtype.lmul.is_fractional() {
-                    return Err("fractional LMUL unsupported on this machine".into());
+                    return fault("fractional LMUL unsupported on this machine".into());
                 }
                 self.vtype = vtype;
                 self.vl = vsetvl(avl, vtype, self.vlen_bits);
@@ -133,7 +136,7 @@ impl VecMachine {
                 self.check_sew(sew)?;
                 self.check_group(vd)?;
                 if addr + self.vl > self.mem.len() {
-                    return Err(format!("vle OOB at {}..{}", addr, addr + self.vl));
+                    return fault(format!("vle OOB at {}..{}", addr, addr + self.vl));
                 }
                 let d = (vd as usize) << self.lane_shift;
                 self.v[d..d + self.vl].copy_from_slice(&self.mem[addr..addr + self.vl]);
@@ -142,7 +145,7 @@ impl VecMachine {
                 self.check_sew(sew)?;
                 self.check_group(vs)?;
                 if addr + self.vl > self.mem.len() {
-                    return Err(format!("vse OOB at {}..{}", addr, addr + self.vl));
+                    return fault(format!("vse OOB at {}..{}", addr, addr + self.vl));
                 }
                 let s = (vs as usize) << self.lane_shift;
                 self.mem[addr..addr + self.vl].copy_from_slice(&self.v[s..s + self.vl]);
@@ -213,12 +216,17 @@ impl VecMachine {
                 self.flops += self.vl as u64;
             }
             Inst::Fld { fd, addr } => {
-                self.f[fd as usize] =
-                    *self.mem.get(addr).ok_or_else(|| format!("fld OOB at {addr}"))?;
+                self.f[fd as usize] = *self
+                    .mem
+                    .get(addr)
+                    .ok_or_else(|| CimoneError::Machine(format!("fld OOB at {addr}")))?;
             }
             Inst::Fsd { fs, addr } => {
                 let v = self.f[fs as usize];
-                *self.mem.get_mut(addr).ok_or_else(|| format!("fsd OOB at {addr}"))? = v;
+                *self
+                    .mem
+                    .get_mut(addr)
+                    .ok_or_else(|| CimoneError::Machine(format!("fsd OOB at {addr}")))? = v;
             }
             Inst::FmaddD { fd, fs1, fs2, fs3 } => {
                 self.f[fd as usize] =
@@ -231,8 +239,10 @@ impl VecMachine {
         Ok(())
     }
 
-    /// Run a whole program.
-    pub fn run(&mut self, prog: &Program) -> Result<(), String> {
+    /// Run a whole program: typed validation
+    /// ([`CimoneError::InvalidProgram`]) before any instruction runs,
+    /// then typed runtime faults ([`CimoneError::Machine`]) per step.
+    pub fn run(&mut self, prog: &Program) -> Result<(), CimoneError> {
         prog.validate_register_groups(self.vlen_bits)?;
         for inst in &prog.insts {
             self.step(inst)?;
@@ -240,17 +250,22 @@ impl VecMachine {
         Ok(())
     }
 
-    fn check_sew(&self, sew: Sew) -> Result<(), String> {
+    fn check_sew(&self, sew: Sew) -> Result<(), CimoneError> {
         if sew != self.vtype.sew {
-            return Err(format!("SEW mismatch: inst {:?}, vtype {:?}", sew, self.vtype.sew));
+            return Err(CimoneError::Machine(format!(
+                "SEW mismatch: inst {:?}, vtype {:?}",
+                sew, self.vtype.sew
+            )));
         }
         Ok(())
     }
 
-    fn check_group(&self, vreg: u8) -> Result<(), String> {
+    fn check_group(&self, vreg: u8) -> Result<(), CimoneError> {
         let need = self.vl.div_ceil(self.lanes().max(1)).max(1);
         if vreg as usize + need > 32 {
-            return Err(format!("register group v{vreg} (+{need}) out of file"));
+            return Err(CimoneError::Machine(format!(
+                "register group v{vreg} (+{need}) out of file"
+            )));
         }
         Ok(())
     }

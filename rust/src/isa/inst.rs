@@ -10,6 +10,7 @@
 //! executor indexes with them directly.
 
 use super::rvv::{Lmul, Sew, VType};
+use crate::error::CimoneError;
 
 /// Which assembly dialect a program is written in.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -128,8 +129,12 @@ impl Program {
 
     /// Largest register-group alignment used; LMUL=4 ops must address
     /// v0/v4/v8/... — validated here (a real RVV constraint that bites
-    /// when retrofitting kernels).
-    pub fn validate_register_groups(&self, vlen_bits: usize) -> Result<(), String> {
+    /// when retrofitting kernels). Violations are typed
+    /// [`CimoneError::InvalidProgram`] carrying the faulting
+    /// instruction's index.
+    pub fn validate_register_groups(&self, vlen_bits: usize) -> Result<(), CimoneError> {
+        let _ = vlen_bits; // group rules depend only on LMUL (32 arch regs)
+        let fail = |inst: usize, reason: String| Err(CimoneError::InvalidProgram { inst, reason });
         let mut vtype = VType::new(Sew::E64, Lmul::M1);
         for (idx, inst) in self.insts.iter().enumerate() {
             match inst {
@@ -137,12 +142,10 @@ impl Program {
                 Inst::Vle { vd, .. } | Inst::Vse { vs: vd, .. } => {
                     let m = vtype.lmul.multiplier();
                     if *vd as usize % m != 0 {
-                        return Err(format!(
-                            "inst {idx}: v{vd} not aligned to LMUL={m} group"
-                        ));
+                        return fail(idx, format!("v{vd} not aligned to LMUL={m} group"));
                     }
                     if *vd as usize + m > 32 {
-                        return Err(format!("inst {idx}: group v{vd}..v{} overflows", vd + m as u8));
+                        return fail(idx, format!("group v{vd}..v{} overflows", vd + m as u8));
                     }
                 }
                 Inst::VfmaccVf { vd, vs2, .. }
@@ -151,19 +154,18 @@ impl Program {
                     let m = vtype.lmul.multiplier();
                     for r in [*vd, *vs2] {
                         if r as usize % m != 0 {
-                            return Err(format!("inst {idx}: v{r} not aligned to LMUL={m}"));
+                            return fail(idx, format!("v{r} not aligned to LMUL={m}"));
                         }
                     }
                 }
                 Inst::VfmvVf { vd, .. } => {
                     let m = vtype.lmul.multiplier();
                     if *vd as usize % m != 0 {
-                        return Err(format!("inst {idx}: v{vd} not aligned to LMUL={m}"));
+                        return fail(idx, format!("v{vd} not aligned to LMUL={m}"));
                     }
                 }
                 _ => {}
             }
-            let _ = vlen_bits;
         }
         Ok(())
     }

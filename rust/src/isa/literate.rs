@@ -1,0 +1,434 @@
+//! Literate ISA conformance suite: markdown in, assertions out.
+//!
+//! A `.cim.md` file is ordinary markdown documenting an ISA behaviour,
+//! with fenced code blocks the test harness executes (modeled on
+//! nullbyte-directive's `tests/isa/*.n1.md` conformance format):
+//!
+//! - ` ```asm ` — an assembly listing, assembled by
+//!   [`crate::isa::assembler`]. It becomes the *current program* for
+//!   the expectation blocks that follow.
+//! - ` ```expect ` — `key = value` assertions against the current
+//!   program: static properties (`dialect`, `insts`, `mix = v, m, s`),
+//!   executed lane state (`vlen`, `mem`, `mem.in[i]`, `f.in[i]`,
+//!   `mem.out[i]`, `flops`, `retired` — run on a [`VecMachine`]), and
+//!   analyzed timing (`cycles = lo .. hi` on the C920 model).
+//! - ` ```expect-error ` — the *listing must fail to assemble*, with
+//!   `line`/`col`/`contains` assertions against the [`AsmError`].
+//!
+//! Every `asm` block must be followed by at least one expectation block
+//! (a listing nobody checks is a vacuous conformance case, and an
+//! assembly failure without an `expect-error` is a real failure). The
+//! runner reports failures as `file:line: message` against the markdown
+//! source, so a broken case points at the exact fenced block.
+
+use std::path::Path;
+
+use super::assembler::{assemble_named, AsmError};
+use super::exec::VecMachine;
+use super::inst::{Dialect, Program};
+use super::timing::CycleModel;
+use crate::arch::presets::c920;
+
+/// Run one `.cim.md` file; returns the number of expectation blocks that
+/// passed, or the first failure as `file:line: message`.
+pub fn run_file(path: &Path) -> Result<usize, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    run_str(&text, &path.display().to_string())
+}
+
+/// [`run_file`] over in-memory text (unit tests, doc examples).
+pub fn run_str(text: &str, name: &str) -> Result<usize, String> {
+    let blocks = fenced_blocks(text, name)?;
+    let mut passed = 0usize;
+    let mut current: Option<(Result<Program, AsmError>, usize)> = None; // (result, block line)
+    let mut checked = true;
+    for b in &blocks {
+        match b.kind {
+            BlockKind::Asm => {
+                finish_case(&current, checked, name)?;
+                current = Some((assemble_named(&b.text, name), b.line));
+                checked = false;
+            }
+            BlockKind::Expect => {
+                let (res, _) = current
+                    .as_ref()
+                    .ok_or_else(|| format!("{name}:{}: expect block before any asm block", b.line))?;
+                let p = res.as_ref().map_err(|e| {
+                    format!("{name}:{}: listing failed to assemble: {e}", b.line)
+                })?;
+                check_expect(p, &b.text, name, b.line)?;
+                checked = true;
+                passed += 1;
+            }
+            BlockKind::ExpectError => {
+                let (res, _) = current
+                    .as_ref()
+                    .ok_or_else(|| format!("{name}:{}: expect-error before any asm block", b.line))?;
+                let e = match res {
+                    Err(e) => e,
+                    Ok(_) => {
+                        return Err(format!(
+                            "{name}:{}: listing assembled but expect-error demands failure",
+                            b.line
+                        ))
+                    }
+                };
+                check_expect_error(e, &b.text, name, b.line)?;
+                checked = true;
+                passed += 1;
+            }
+        }
+    }
+    finish_case(&current, checked, name)?;
+    if passed == 0 {
+        return Err(format!("{name}: no conformance cases found (no fenced asm/expect blocks)"));
+    }
+    Ok(passed)
+}
+
+fn finish_case(
+    current: &Option<(Result<Program, AsmError>, usize)>,
+    checked: bool,
+    name: &str,
+) -> Result<(), String> {
+    if let Some((res, line)) = current {
+        if !checked {
+            return match res {
+                Ok(_) => Err(format!(
+                    "{name}:{line}: asm block has no expect/expect-error block — vacuous case"
+                )),
+                Err(e) => Err(format!("{name}:{line}: listing failed to assemble: {e}")),
+            };
+        }
+    }
+    Ok(())
+}
+
+enum BlockKind {
+    Asm,
+    Expect,
+    ExpectError,
+}
+
+struct Block {
+    kind: BlockKind,
+    /// 1-based markdown line of the opening fence.
+    line: usize,
+    text: String,
+}
+
+fn fenced_blocks(text: &str, name: &str) -> Result<Vec<Block>, String> {
+    let mut blocks = Vec::new();
+    let mut open: Option<(Option<BlockKind>, usize, Vec<&str>)> = None;
+    for (idx, raw) in text.lines().enumerate() {
+        let line = idx + 1;
+        let trimmed = raw.trim_start();
+        if let Some(info) = trimmed.strip_prefix("```") {
+            match open.take() {
+                None => {
+                    let kind = match info.trim() {
+                        "asm" => Some(BlockKind::Asm),
+                        "expect" => Some(BlockKind::Expect),
+                        "expect-error" => Some(BlockKind::ExpectError),
+                        _ => None, // plain prose fence — collected but ignored
+                    };
+                    open = Some((kind, line, Vec::new()));
+                }
+                Some((kind, start, body)) => {
+                    if let Some(kind) = kind {
+                        blocks.push(Block { kind, line: start, text: body.join("\n") });
+                    }
+                }
+            }
+            continue;
+        }
+        if let Some((_, _, body)) = open.as_mut() {
+            body.push(raw);
+        }
+    }
+    if let Some((_, start, _)) = open {
+        return Err(format!("{name}:{start}: unterminated fenced block"));
+    }
+    Ok(blocks)
+}
+
+/// `key = value` pairs from an expectation block (`#` comments allowed).
+fn pairs(text: &str, name: &str, line: usize) -> Result<Vec<(String, String)>, String> {
+    let mut out = Vec::new();
+    for raw in text.lines() {
+        let code = raw.split('#').next().unwrap_or("").trim();
+        if code.is_empty() {
+            continue;
+        }
+        let (k, v) = code
+            .split_once('=')
+            .ok_or_else(|| format!("{name}:{line}: expectation line `{code}` is not key = value"))?;
+        out.push((k.trim().to_string(), v.trim().to_string()));
+    }
+    Ok(out)
+}
+
+fn check_expect(p: &Program, text: &str, name: &str, line: usize) -> Result<(), String> {
+    let fail = |msg: String| Err(format!("{name}:{line}: {msg}"));
+    let mut vlen = 128usize;
+    let mut mem_words = 64usize;
+    let mut mem_in: Vec<(usize, f64)> = Vec::new();
+    let mut f_in: Vec<(usize, f64)> = Vec::new();
+    let mut mem_out: Vec<(usize, f64)> = Vec::new();
+    let mut want_flops: Option<u64> = None;
+    let mut want_retired: Option<u64> = None;
+    let mut want_cycles: Option<(f64, f64)> = None;
+
+    for (k, v) in pairs(text, name, line)? {
+        match k.as_str() {
+            "dialect" => {
+                let want = match v.as_str() {
+                    "rvv10" => Dialect::Rvv10,
+                    "thead071" => Dialect::Thead071,
+                    other => return fail(format!("unknown dialect `{other}`")),
+                };
+                if p.dialect != want {
+                    return fail(format!("dialect: want {want:?}, got {:?}", p.dialect));
+                }
+            }
+            "insts" => {
+                let want: usize = parse_num(&v, &k, name, line)?;
+                if p.len() != want {
+                    return fail(format!("insts: want {want}, got {}", p.len()));
+                }
+            }
+            "mix" => {
+                let got = p.mix();
+                let parts: Vec<&str> = v.split(',').map(str::trim).collect();
+                if parts.len() != 3 {
+                    return fail(format!("mix wants `v, m, s`, got `{v}`"));
+                }
+                let want = (
+                    parse_num::<usize>(parts[0], &k, name, line)?,
+                    parse_num::<usize>(parts[1], &k, name, line)?,
+                    parse_num::<usize>(parts[2], &k, name, line)?,
+                );
+                if got != want {
+                    return fail(format!("mix: want {want:?}, got {got:?}"));
+                }
+            }
+            "vlen" => vlen = parse_num(&v, &k, name, line)?,
+            "mem" => mem_words = parse_num(&v, &k, name, line)?,
+            "flops" => want_flops = Some(parse_num(&v, &k, name, line)?),
+            "retired" => want_retired = Some(parse_num(&v, &k, name, line)?),
+            "cycles" => {
+                let (lo, hi) = v
+                    .split_once("..")
+                    .ok_or_else(|| format!("{name}:{line}: cycles wants `lo .. hi`, got `{v}`"))?;
+                want_cycles = Some((
+                    parse_num(lo.trim(), &k, name, line)?,
+                    parse_num(hi.trim(), &k, name, line)?,
+                ));
+            }
+            _ if k.starts_with("mem.in[") => {
+                mem_in.push((index_of(&k, "mem.in", name, line)?, parse_num(&v, &k, name, line)?))
+            }
+            _ if k.starts_with("f.in[") => {
+                f_in.push((index_of(&k, "f.in", name, line)?, parse_num(&v, &k, name, line)?))
+            }
+            _ if k.starts_with("mem.out[") => {
+                mem_out.push((index_of(&k, "mem.out", name, line)?, parse_num(&v, &k, name, line)?))
+            }
+            other => return fail(format!("unknown expectation key `{other}`")),
+        }
+    }
+
+    let must_execute = want_flops.is_some()
+        || want_retired.is_some()
+        || !mem_out.is_empty()
+        || !mem_in.is_empty()
+        || !f_in.is_empty();
+    if must_execute {
+        let mut m = VecMachine::new(vlen, mem_words).map_err(|e| format!("{name}:{line}: {e}"))?;
+        for (i, x) in &mem_in {
+            if *i >= m.mem.len() {
+                return fail(format!("mem.in[{i}] outside mem = {mem_words}"));
+            }
+            m.mem[*i] = *x;
+        }
+        for (i, x) in &f_in {
+            if *i >= 32 {
+                return fail(format!("f.in[{i}] outside the 32-entry FP file"));
+            }
+            m.f[*i] = *x;
+        }
+        m.run(p).map_err(|e| format!("{name}:{line}: execution failed: {e}"))?;
+        if let Some(want) = want_flops {
+            if m.flops != want {
+                return fail(format!("flops: want {want}, got {}", m.flops));
+            }
+        }
+        if let Some(want) = want_retired {
+            if m.retired != want {
+                return fail(format!("retired: want {want}, got {}", m.retired));
+            }
+        }
+        for (i, want) in &mem_out {
+            if *i >= m.mem.len() {
+                return fail(format!("mem.out[{i}] outside mem = {mem_words}"));
+            }
+            let got = m.mem[*i];
+            if (got - want).abs() > 1e-12 * want.abs().max(1.0) {
+                return fail(format!("mem.out[{i}]: want {want}, got {got}"));
+            }
+        }
+    }
+    if let Some((lo, hi)) = want_cycles {
+        let core = c920();
+        let t = CycleModel::new(&core).analyze_at(p, vlen);
+        if !(lo..=hi).contains(&t.cycles) {
+            return fail(format!("cycles: want {lo}..{hi} on c920, got {:.3}", t.cycles));
+        }
+    }
+    Ok(())
+}
+
+fn check_expect_error(e: &AsmError, text: &str, name: &str, line: usize) -> Result<(), String> {
+    let fail = |msg: String| Err(format!("{name}:{line}: {msg}"));
+    for (k, v) in pairs(text, name, line)? {
+        match k.as_str() {
+            "line" => {
+                let want: usize = parse_num(&v, &k, name, line)?;
+                if e.line != want {
+                    return fail(format!("error line: want {want}, got {} ({e})", e.line));
+                }
+            }
+            "col" => {
+                let want: usize = parse_num(&v, &k, name, line)?;
+                if e.col != want {
+                    return fail(format!("error col: want {want}, got {} ({e})", e.col));
+                }
+            }
+            "contains" => {
+                if !e.to_string().contains(&v) {
+                    return fail(format!("error does not contain `{v}`: {e}"));
+                }
+            }
+            other => return fail(format!("unknown expect-error key `{other}`")),
+        }
+    }
+    Ok(())
+}
+
+fn index_of(key: &str, prefix: &str, name: &str, line: usize) -> Result<usize, String> {
+    key.strip_prefix(prefix)
+        .and_then(|s| s.strip_prefix('['))
+        .and_then(|s| s.strip_suffix(']'))
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| format!("{name}:{line}: malformed indexed key `{key}`"))
+}
+
+fn parse_num<T: std::str::FromStr>(
+    v: &str,
+    key: &str,
+    name: &str,
+    line: usize,
+) -> Result<T, String> {
+    v.parse()
+        .map_err(|_| format!("{name}:{line}: bad number `{v}` for `{key}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_case_passes() {
+        let md = "
+# doc
+
+```asm
+    vsetvli t0, 2, e64, m1, ta, ma
+    vle64.v v8, 0(a0)
+    vfmacc.vf v0, f1, v8
+```
+
+```expect
+dialect = rvv10
+insts = 3
+mix = 2, 0, 1
+```
+";
+        assert_eq!(run_str(md, "<t>"), Ok(1));
+    }
+
+    #[test]
+    fn executed_state_checked() {
+        let md = "
+```asm
+    vsetvli t0, 2, e64, m1, ta, ma
+    fld f0, 4(a1)
+    vle64.v v8, 0(a0)
+    vfmacc.vf v0, f0, v8
+    vse64.v v0, 6(a0)
+```
+
+```expect
+mem.in[0] = 2.0
+mem.in[1] = 5.0
+mem.in[4] = 3.0
+mem.out[6] = 6.0
+mem.out[7] = 15.0
+flops = 4
+retired = 5
+```
+";
+        assert_eq!(run_str(md, "<t>"), Ok(1));
+        let bad = md.replace("mem.out[6] = 6.0", "mem.out[6] = 7.0");
+        let e = run_str(&bad, "<t>").unwrap_err();
+        assert!(e.contains("mem.out[6]"), "{e}");
+    }
+
+    #[test]
+    fn error_cases_need_expect_error() {
+        let md = "
+```asm
+    vfmaac.vf v0, f1, v8
+```
+
+```expect-error
+line = 1
+contains = did you mean
+```
+";
+        assert_eq!(run_str(md, "<t>"), Ok(1));
+        // a failing listing with a plain expect block is a failure
+        let md2 = md.replace("expect-error", "expect").replace("contains = did you mean", "");
+        assert!(run_str(&md2, "<t>").unwrap_err().contains("failed to assemble"));
+    }
+
+    #[test]
+    fn vacuous_asm_block_rejected() {
+        let md = "
+```asm
+    addi a0, a0, 8
+```
+";
+        assert!(run_str(md, "<t>").unwrap_err().contains("vacuous"));
+    }
+
+    #[test]
+    fn prose_fences_are_ignored() {
+        let md = "
+```text
+this is documentation, not a test
+```
+
+```asm
+    addi a0, a0, 8
+```
+
+```expect
+insts = 1
+mix = 0, 0, 1
+```
+";
+        assert_eq!(run_str(md, "<t>"), Ok(1));
+    }
+}

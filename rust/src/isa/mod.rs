@@ -12,20 +12,32 @@
 //! - [`inst`] — a small instruction IR covering the GEMM micro-kernels.
 //! - [`asm`] — assembly text rendering in *both* dialects (RVV 1.0 and
 //!   XuanTie/theadvector 0.7.1 with the `th.` prefix).
+//! - [`assembler`] — the two-pass assembler front end: labels,
+//!   directives, branch resolution, source-located [`assembler::AsmError`]
+//!   with caret excerpts, a disassembler round trip, and kernel-mode
+//!   ingestion of real `.S` micro-kernels ([`assembler::AsmKernel`]).
+//! - [`parse`] — the historical line-oriented entry points, now thin
+//!   delegations into [`assembler`].
 //! - [`translate`] — the verified 1.0 -> 0.7.1 retrofit pass.
 //! - [`exec`] — a functional vector machine executing the IR on real f64
 //!   data (numerics tested against [`crate::util::Matrix`] GEMM).
 //! - [`timing`] — the per-instruction cycle model that reproduces the
 //!   fetched-instruction bottleneck the paper optimizes.
+//! - [`literate`] — runner for the markdown ISA conformance suite
+//!   (`rust/tests/isa/*.cim.md`: fenced asm blocks assembled and
+//!   executed against fenced expectation blocks).
 
 pub mod asm;
+pub mod assembler;
 pub mod exec;
 pub mod inst;
+pub mod literate;
 pub mod parse;
 pub mod rvv;
 pub mod timing;
 pub mod translate;
 
+pub use assembler::{assemble, assemble_named, disassemble, AsmError, AsmKernel};
 pub use exec::VecMachine;
 pub use inst::{Dialect, Inst, Program};
 pub use rvv::{Lmul, Sew, VType};

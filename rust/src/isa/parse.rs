@@ -1,213 +1,32 @@
-//! Assembly parser: text -> [`Program`] for both dialects.
+//! Assembly parsing compat surface: text -> [`Program`].
 //!
-//! Completes the §3.3.1 story: the paper's retrofit was a *textual* port
-//! of BLIS's `.S` files, so the repo carries the full round trip —
-//! `render_program` (asm.rs) emits text, this module parses it back, and
-//! property tests assert `parse(render(p)) == p` for arbitrary kernel
-//! programs. It also lets users feed hand-written kernel listings to the
-//! cycle model (`cimone` consumes listings through this path).
+//! The original line-oriented parser grew into the full two-pass
+//! [`crate::isa::assembler`] (labels, directives, branch resolution,
+//! source-located errors); this module keeps the historical entry
+//! points as thin delegations so existing callers and the
+//! `parse(render(p)) == p` property suite keep working unchanged.
+//! [`ParseError`] *is* [`crate::isa::assembler::AsmError`] now — the
+//! old `{ line, message }` fields are still there, joined by
+//! `file`/`col`/`span` and a caret-excerpt `Display`.
 
-use super::inst::{Dialect, Inst, Program};
-use super::rvv::{Lmul, Sew, VType};
+use super::inst::Program;
 
-/// Parse error with line context.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct ParseError {
-    pub line: usize,
-    pub message: String,
-}
-
-impl std::fmt::Display for ParseError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "line {}: {}", self.line, self.message)
-    }
-}
-
-impl std::error::Error for ParseError {}
-
-fn err(line: usize, message: impl Into<String>) -> ParseError {
-    ParseError { line, message: message.into() }
-}
+pub use super::assembler::AsmError as ParseError;
 
 /// Parse an assembly listing. The dialect is inferred from the mnemonics
-/// (`th.`-prefixed => theadvector) and must be consistent.
+/// (`th.`-prefixed or `ta, ma`-flagged `vsetvli` spellings) and must be
+/// consistent. Labels, comments and layout directives are accepted;
+/// branch targets must resolve to previously defined labels.
 pub fn parse_program(text: &str) -> Result<Program, ParseError> {
-    let mut dialect: Option<Dialect> = None;
-    let mut insts = Vec::new();
-    for (lineno, raw) in text.lines().enumerate() {
-        let line = raw.split('#').next().unwrap_or("").trim();
-        if line.is_empty() || line.ends_with(':') {
-            continue; // blank or label
-        }
-        let (inst, d) = parse_line(lineno + 1, line)?;
-        match (dialect, d) {
-            (None, Some(d)) => dialect = Some(d),
-            (Some(a), Some(b)) if a != b => {
-                return Err(err(lineno + 1, format!("mixed dialects: {a:?} then {b:?}")))
-            }
-            _ => {}
-        }
-        insts.push(inst);
-    }
-    let mut p = Program::new(dialect.unwrap_or(Dialect::Rvv10));
-    for i in insts {
-        p.push(i);
-    }
-    Ok(p)
-}
-
-/// One line -> (instruction, dialect hint).
-fn parse_line(lineno: usize, line: &str) -> Result<(Inst, Option<Dialect>), ParseError> {
-    let (mnemonic, rest) = line.split_once(char::is_whitespace).unwrap_or((line, ""));
-    let (bare, dialect) = match mnemonic.strip_prefix("th.") {
-        Some(b) => (b, Some(Dialect::Thead071)),
-        None => (mnemonic, None),
-    };
-    let ops: Vec<&str> = rest.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
-    let inst = match bare {
-        "vsetvli" => parse_vsetvli(lineno, &ops, dialect)?,
-        m if m.starts_with("vle") && m.ends_with(".v") => {
-            let sew = parse_eew(lineno, m, dialect)?;
-            let (vd, addr) = parse_vreg_addr(lineno, &ops)?;
-            Inst::Vle { sew, vd, addr }
-        }
-        m if m.starts_with("vse") && m.ends_with(".v") => {
-            let sew = parse_eew(lineno, m, dialect)?;
-            let (vs, addr) = parse_vreg_addr(lineno, &ops)?;
-            Inst::Vse { sew, vs, addr }
-        }
-        "vfmacc.vf" => {
-            let (vd, fs, vs2) = parse_vfv(lineno, &ops)?;
-            Inst::VfmaccVf { vd, fs, vs2 }
-        }
-        "vfmul.vf" => {
-            let (vd, fs, vs2) = parse_vfv(lineno, &ops)?;
-            Inst::VfmulVf { vd, fs, vs2 }
-        }
-        "vfmv.v.f" => {
-            let vd = parse_reg(lineno, ops.first().copied(), 'v')?;
-            let fs = parse_reg(lineno, ops.get(1).copied(), 'f')?;
-            Inst::VfmvVf { vd, fs }
-        }
-        "vfadd.vv" => {
-            let vd = parse_reg(lineno, ops.first().copied(), 'v')?;
-            let vs1 = parse_reg(lineno, ops.get(1).copied(), 'v')?;
-            let vs2 = parse_reg(lineno, ops.get(2).copied(), 'v')?;
-            Inst::VfaddVv { vd, vs1, vs2 }
-        }
-        "fld" => {
-            let fd = parse_reg(lineno, ops.first().copied(), 'f')?;
-            let addr = parse_addr(lineno, ops.get(1).copied())?;
-            Inst::Fld { fd, addr }
-        }
-        "fsd" => {
-            let fs = parse_reg(lineno, ops.first().copied(), 'f')?;
-            let addr = parse_addr(lineno, ops.get(1).copied())?;
-            Inst::Fsd { fs, addr }
-        }
-        "fmadd.d" => {
-            let fd = parse_reg(lineno, ops.first().copied(), 'f')?;
-            let fs1 = parse_reg(lineno, ops.get(1).copied(), 'f')?;
-            let fs2 = parse_reg(lineno, ops.get(2).copied(), 'f')?;
-            let fs3 = parse_reg(lineno, ops.get(3).copied(), 'f')?;
-            Inst::FmaddD { fd, fs1, fs2, fs3 }
-        }
-        "addi" => Inst::Addi,
-        "bnez" => Inst::Bnez,
-        other => return Err(err(lineno, format!("unknown mnemonic `{other}`"))),
-    };
-    Ok((inst, dialect))
-}
-
-fn parse_vsetvli(
-    lineno: usize,
-    ops: &[&str],
-    dialect: Option<Dialect>,
-) -> Result<Inst, ParseError> {
-    // vsetvli t0, <avl>, e64, m4[, ta, ma]
-    if ops.len() < 4 {
-        return Err(err(lineno, "vsetvli needs rd, avl, sew, lmul"));
-    }
-    let avl: usize =
-        ops[1].parse().map_err(|_| err(lineno, format!("bad avl `{}`", ops[1])))?;
-    let sew = match ops[2] {
-        "e32" => Sew::E32,
-        "e64" => Sew::E64,
-        o => return Err(err(lineno, format!("bad sew `{o}`"))),
-    };
-    let lmul = match ops[3] {
-        "m1" => Lmul::M1,
-        "m2" => Lmul::M2,
-        "m4" => Lmul::M4,
-        "m8" => Lmul::M8,
-        "mf2" | "mf4" | "mf8" => Lmul::Fractional,
-        o => return Err(err(lineno, format!("bad lmul `{o}`"))),
-    };
-    let has_flags = ops.len() >= 6 && ops[4] == "ta" && ops[5] == "ma";
-    if dialect == Some(Dialect::Thead071) && has_flags {
-        return Err(err(lineno, "theadvector vsetvli takes no ta/ma flags"));
-    }
-    let mut vt = VType::new(sew, lmul);
-    vt.tail_agnostic = has_flags;
-    vt.mask_agnostic = has_flags;
-    Ok(Inst::Vsetvli { avl, vtype: vt })
-}
-
-fn parse_eew(lineno: usize, m: &str, dialect: Option<Dialect>) -> Result<Sew, ParseError> {
-    // RVV 1.0: vle64.v / vse64.v; thead 0.7.1: th.vle.v (EEW from vtype,
-    // rendered without digits — parser then defaults to E64, our only
-    // theadvector element width in this codebase)
-    let digits: String = m.chars().filter(|c| c.is_ascii_digit()).collect();
-    match (digits.as_str(), dialect) {
-        ("64", _) => Ok(Sew::E64),
-        ("32", _) => Ok(Sew::E32),
-        ("", Some(Dialect::Thead071)) => Ok(Sew::E64),
-        ("", None) => Err(err(lineno, "RVV 1.0 load/store needs an EEW suffix")),
-        (d, _) => Err(err(lineno, format!("unsupported EEW `{d}`"))),
-    }
-}
-
-fn parse_vreg_addr(lineno: usize, ops: &[&str]) -> Result<(u8, usize), ParseError> {
-    let v = parse_reg(lineno, ops.first().copied(), 'v')?;
-    let addr = parse_addr(lineno, ops.get(1).copied())?;
-    Ok((v, addr))
-}
-
-fn parse_vfv(lineno: usize, ops: &[&str]) -> Result<(u8, u8, u8), ParseError> {
-    Ok((
-        parse_reg(lineno, ops.first().copied(), 'v')?,
-        parse_reg(lineno, ops.get(1).copied(), 'f')?,
-        parse_reg(lineno, ops.get(2).copied(), 'v')?,
-    ))
-}
-
-fn parse_reg(lineno: usize, tok: Option<&str>, class: char) -> Result<u8, ParseError> {
-    let tok = tok.ok_or_else(|| err(lineno, "missing register operand"))?;
-    let rest = tok
-        .strip_prefix(class)
-        .ok_or_else(|| err(lineno, format!("expected {class}-register, got `{tok}`")))?;
-    let n: u8 = rest.parse().map_err(|_| err(lineno, format!("bad register `{tok}`")))?;
-    if n >= 32 {
-        return Err(err(lineno, format!("register `{tok}` out of file")));
-    }
-    Ok(n)
-}
-
-fn parse_addr(lineno: usize, tok: Option<&str>) -> Result<usize, ParseError> {
-    // form: <offset>(aN)
-    let tok = tok.ok_or_else(|| err(lineno, "missing address operand"))?;
-    let off = tok
-        .split('(')
-        .next()
-        .and_then(|s| s.parse::<usize>().ok())
-        .ok_or_else(|| err(lineno, format!("bad address `{tok}`")))?;
-    Ok(off)
+    super::assembler::assemble(text)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::isa::asm::render_program;
+    use crate::isa::inst::{Dialect, Inst};
+    use crate::isa::rvv::Sew;
     use crate::ukernel::{KernelRegistry, PanelLayout};
 
     #[test]
@@ -306,5 +125,18 @@ mod tests {
         m.run(&p).unwrap();
         assert_eq!(m.mem[6], 6.0);
         assert_eq!(m.mem[7], 15.0);
+    }
+
+    #[test]
+    fn parse_error_is_the_assembler_error() {
+        // ParseError IS AsmError: the historical fields are intact and
+        // the new source-location fields ride along
+        let e: ParseError = parse_program("vle64.v v0\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        assert_eq!(e.file, "<memory>");
+        assert!(e.col >= 1 && e.span >= 1);
+        // and it converts into the typed error surface via From
+        let typed: crate::error::CimoneError = e.into();
+        assert!(matches!(typed, crate::error::CimoneError::Asm(_)));
     }
 }

@@ -33,6 +33,11 @@
 //! cimone fabrics                     the registered interconnects
 //! cimone kernels                     the registered BLAS micro-kernels
 //! cimone translate-demo              section 3.3.1 RVV 1.0 -> 0.7.1 retrofit
+//! cimone asm file.S                  assemble a micro-kernel listing:
+//!         [--check]                  ... validate + summary (the default)
+//!         [--disasm]                 ... canonical disassembly round-trip
+//!         [--analyze] [--vlen 128]   ... cycle-model timing at a VLEN
+//!         [--json]                   ... machine-readable output
 //! ```
 //!
 //! Campaign specs name platforms by registry id or alias (`mcv2-pioneer`,
@@ -317,6 +322,9 @@ fn run(args: &Args) -> Result<(), CimoneError> {
             }
             println!("{}", t.render());
         }
+        Some("asm") => {
+            asm_command(args)?;
+        }
         Some("translate-demo") => {
             let kernel = KernelRegistry::builtin().get("blis-lmul1")?;
             let prog = kernel.program(PanelLayout::new(8, 4, 1));
@@ -333,7 +341,7 @@ fn run(args: &Args) -> Result<(), CimoneError> {
             )));
         }
         None => {
-            println!("usage: cimone <stream|hpl|cluster-hpl|cache-miss|blis-compare|headline|report-all|sweeps|run-hpl|validate|campaign|sweep|bench|platforms|fabrics|kernels|translate-demo>");
+            println!("usage: cimone <stream|hpl|cluster-hpl|cache-miss|blis-compare|headline|report-all|sweeps|run-hpl|validate|campaign|sweep|bench|platforms|fabrics|kernels|translate-demo|asm>");
         }
     }
     Ok(())
@@ -351,6 +359,85 @@ fn print_job_rows(rows: &[cimone::coordinator::JobRow]) {
             j.name, j.runtime_s, j.headline, j.avg_node_w, j.energy_j, eff
         );
     }
+}
+
+/// `cimone asm <file.S>`: assemble a hand-written micro-kernel listing.
+/// `--check` (the default) validates and prints a summary; `--disasm`
+/// prints the canonical round-trip listing; `--analyze` runs the cycle
+/// model at `--vlen` (default 128). `--json` makes any mode
+/// machine-readable. The positional path comes first: `--check file.S`
+/// would swallow the path as the flag's value.
+fn asm_command(args: &Args) -> Result<(), CimoneError> {
+    use cimone::arch::presets::c920;
+    use cimone::isa::assembler;
+    use cimone::isa::inst::Dialect;
+    use cimone::isa::timing::CycleModel;
+    use cimone::util::json::Json;
+
+    let path = args.positional.first().ok_or_else(|| {
+        CimoneError::Cli("asm: expected a listing path (usage: cimone asm <file.S>)".into())
+    })?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| CimoneError::Cli(format!("cannot read `{path}`: {e}")))?;
+    let prog = assembler::assemble_named(&text, path)?;
+    let dialect = match prog.dialect {
+        Dialect::Rvv10 => "rvv10",
+        Dialect::Thead071 => "thead071",
+    };
+    let (v, m, s) = prog.mix();
+
+    if args.flag("disasm") {
+        print!("{}", assembler::disassemble(&prog));
+        return Ok(());
+    }
+    if args.flag("analyze") {
+        let vlen = args.get_usize("vlen", 128)?;
+        let t = CycleModel::new(&c920()).analyze_at(&prog, vlen);
+        if args.flag("json") {
+            let j = Json::obj([
+                ("file", Json::Str(path.to_string())),
+                ("dialect", Json::Str(dialect.into())),
+                ("vlen", Json::Num(vlen as f64)),
+                ("insts", Json::Num(t.insts as f64)),
+                ("flops", Json::Num(t.flops as f64)),
+                ("cycles", Json::Num(t.cycles)),
+                ("vector_cycles", Json::Num(t.vector_cycles)),
+                ("scalar_mem_cycles", Json::Num(t.scalar_mem_cycles)),
+                ("scalar_fma_cycles", Json::Num(t.scalar_fma_cycles)),
+                ("scalar_other_cycles", Json::Num(t.scalar_other_cycles)),
+            ]);
+            println!("{}", j.render());
+        } else {
+            println!("{path}: {dialect}, {} insts, {} flops @ VLEN={vlen}", t.insts, t.flops);
+            println!(
+                "  {:.1} cycles ({:.1} vector, {:.1} scalar mem, {:.1} scalar fma, {:.1} other)",
+                t.cycles,
+                t.vector_cycles,
+                t.scalar_mem_cycles,
+                t.scalar_fma_cycles,
+                t.scalar_other_cycles
+            );
+        }
+        return Ok(());
+    }
+    // --check / default: assembly already succeeded; report the summary
+    if args.flag("json") {
+        let j = Json::obj([
+            ("file", Json::Str(path.to_string())),
+            ("dialect", Json::Str(dialect.into())),
+            ("insts", Json::Num(prog.insts.len() as f64)),
+            ("vector", Json::Num(v as f64)),
+            ("scalar_mem", Json::Num(m as f64)),
+            ("scalar_other", Json::Num(s as f64)),
+        ]);
+        println!("{}", j.render());
+    } else {
+        println!(
+            "{path}: OK — {dialect}, {} insts ({v} vector, {m} scalar mem, {s} scalar other)",
+            prog.insts.len()
+        );
+    }
+    Ok(())
 }
 
 /// `cimone validate`: run the PJRT artifacts against native numerics.

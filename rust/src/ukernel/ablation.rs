@@ -60,6 +60,7 @@ pub fn point(vlen_bits: usize, lmul: Lmul, k_unroll: usize) -> KernelDescriptor 
         k_unroll,
         blocking: BlockingPolicy::CacheDerived,
         host_overhead: blis_lmul4().host_overhead,
+        asm: None,
     }
 }
 

@@ -93,6 +93,11 @@ pub fn interned_program(desc: &KernelDescriptor, layout: PanelLayout) -> Arc<Pro
     h.write_usize(desc.lmul.multiplier());
     h.write_usize(desc.k_unroll);
     h.write_usize(layout.mr).write_usize(layout.nr).write_usize(layout.kc);
+    // asm-source kernels: the program comes from the assembled listing,
+    // not a generator, so the listing's canonical unit joins the key
+    if let Some(a) = &desc.asm {
+        a.unit.feed_content(&mut h);
+    }
     PROGRAM_CACHE.get_or_insert_with(h.finish(), || Arc::new(desc.program(layout)))
 }
 

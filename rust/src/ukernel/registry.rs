@@ -2,7 +2,8 @@
 //! [`crate::arch::PlatformRegistry`] and [`crate::net::FabricRegistry`].
 //!
 //! A [`KernelDescriptor`] bundles identity (id, label, aliases) with a
-//! generator family ([`KernelFamily`]: `openblas-asm` | `blis-rvv`) and
+//! generator family ([`KernelFamily`]: `openblas-asm` | `blis-rvv` |
+//! `asm-source`) and
 //! the tunable parameters the paper's BLAS exploration varies: VLEN,
 //! LMUL, the MRxNR register tile, the K-unroll depth, the blocking
 //! policy and the calibrated host (packing/framework) overhead.
@@ -30,11 +31,14 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
+use std::path::Path;
+
 use super::generators;
 use super::layout::PanelLayout;
 use crate::error::CimoneError;
+use crate::isa::assembler::{assemble_kernel, AsmKernel};
 use crate::isa::exec::VecMachine;
-use crate::isa::inst::Program;
+use crate::isa::inst::{Dialect, Program};
 use crate::isa::rvv::Lmul;
 use crate::util::config::Section;
 use crate::util::hash::ContentHasher;
@@ -60,6 +64,12 @@ pub enum KernelFamily {
     OpenblasAsm,
     /// BLIS rank-1-update RVV kernel (the Fig 2 schedule family).
     BlisRvv,
+    /// A real assembly listing ingested by [`crate::isa::assembler`]:
+    /// the program comes from an inline `source = '''...'''` block or a
+    /// `path = "..."` file in the `[[kernel]]` spec section, not from a
+    /// generator. This is how published OpenBLAS/BLIS `.S` micro-kernels
+    /// enter a sweep with zero Rust edits.
+    AsmSource,
 }
 
 impl KernelFamily {
@@ -68,6 +78,7 @@ impl KernelFamily {
         match self {
             KernelFamily::OpenblasAsm => "openblas-asm",
             KernelFamily::BlisRvv => "blis-rvv",
+            KernelFamily::AsmSource => "asm-source",
         }
     }
 
@@ -75,8 +86,42 @@ impl KernelFamily {
         match s {
             "openblas-asm" => Some(KernelFamily::OpenblasAsm),
             "blis-rvv" => Some(KernelFamily::BlisRvv),
+            "asm-source" => Some(KernelFamily::AsmSource),
             _ => None,
         }
+    }
+}
+
+/// The resolved assembly behind an `asm-source` kernel: the listing text
+/// and where it came from, plus the assembled [`AsmKernel`] unit.
+///
+/// Equality and the cache content feed go through the *assembled unit*
+/// only: two listings that differ in comments, label spelling or
+/// whitespace — or the same kernel loaded from a file vs. re-parsed out
+/// of a rendered spec — are the same kernel, with the same content
+/// digest. That is what keeps PR 6's warm-cache bit-identity guarantee
+/// intact across `render()` round trips.
+#[derive(Debug, Clone)]
+pub struct AsmSource {
+    /// Where the listing came from (`<spec>` for inline sources).
+    pub file: String,
+    /// The raw listing text, kept for `render()` round trips.
+    pub text: String,
+    /// The assembled micro-kernel unit.
+    pub unit: AsmKernel,
+}
+
+impl PartialEq for AsmSource {
+    fn eq(&self, other: &Self) -> bool {
+        self.unit == other.unit
+    }
+}
+
+impl AsmSource {
+    /// Assemble `text` into kernel form. `file` labels errors.
+    pub fn assemble(text: &str, file: &str) -> Result<AsmSource, CimoneError> {
+        let unit = assemble_kernel(text, file)?;
+        Ok(AsmSource { file: file.to_string(), text: text.to_string(), unit })
     }
 }
 
@@ -147,6 +192,10 @@ pub struct KernelDescriptor {
     /// micro-kernel (packing, edge tiles, framework dispatch), in
     /// [0, 1). Calibrated per library — see EXPERIMENTS.md 'Calibration'.
     pub host_overhead: f64,
+    /// The assembled listing behind an [`KernelFamily::AsmSource`]
+    /// kernel; `None` for the generator families. `Arc`-shared so
+    /// cloning descriptors through spec round trips stays cheap.
+    pub asm: Option<Arc<AsmSource>>,
 }
 
 impl KernelDescriptor {
@@ -172,6 +221,12 @@ impl KernelDescriptor {
         h.write_usize(self.mr).write_usize(self.nr).write_usize(self.k_unroll);
         h.write_str(self.blocking.spec_name());
         h.write_f64(self.host_overhead);
+        // asm-source kernels: the *assembled unit* feeds (canonical
+        // per-inst render), so comment/whitespace edits to a listing
+        // never shift cache keys
+        if let Some(a) = &self.asm {
+            a.unit.feed_content(h);
+        }
     }
 
     /// The 128-bit content digest of [`KernelDescriptor::feed_content`].
@@ -206,6 +261,12 @@ impl KernelDescriptor {
         if self.lmul.is_fractional() {
             return Err(self.err("fractional LMUL is not a GEMM-kernel configuration"));
         }
+        if self.asm.is_some() && self.family != KernelFamily::AsmSource {
+            return Err(self.err(format!(
+                "family `{}` does not take an assembly listing (use family = \"asm-source\")",
+                self.family.spec_name()
+            )));
+        }
         if self.vlen_bits == 0 {
             // scalar path: accumulators live in f16..f31, A in f0..,
             // B in f{mr}..
@@ -234,6 +295,27 @@ impl KernelDescriptor {
         if self.nr > 16 {
             return Err(self.err("nr > 16 overflows the B-scalar FP registers"));
         }
+        if self.family == KernelFamily::AsmSource {
+            let src = self
+                .asm
+                .as_ref()
+                .ok_or_else(|| self.err("asm-source kernel without an assembled listing"))?;
+            // dialect consistency: a theadvector listing cannot claim to
+            // be native RVV 1.0 code (PORT_TAX would be mischarged)
+            if src.unit.dialect == Dialect::Thead071 && self.native_rvv10 {
+                return Err(self.err(format!(
+                    "{}: theadvector listing with native_rvv10 = true — a 0.7.1 \
+                     source is not native RVV 1.0 code",
+                    src.file
+                )));
+            }
+            // panel-offset bounds, vsetvli feasibility at this VLEN, and
+            // register-group legality of the expanded program
+            return src
+                .unit
+                .check(self.mr, self.nr, self.k_unroll, self.vlen_bits)
+                .map_err(|reason| self.err(format!("{}: {reason}", src.file)));
+        }
         let g = match self.family {
             KernelFamily::BlisRvv => {
                 generators::blis_geometry(self.vlen_bits, self.lmul, self.mr, self.nr)
@@ -241,6 +323,7 @@ impl KernelDescriptor {
             KernelFamily::OpenblasAsm => {
                 generators::openblas_geometry(self.vlen_bits, self.lmul, self.mr, self.nr)
             }
+            KernelFamily::AsmSource => unreachable!("handled above"),
         };
         if self.mr > g.elems_per_group && self.mr % g.elems_per_group != 0 {
             return Err(self.err(format!(
@@ -269,6 +352,12 @@ impl KernelDescriptor {
             KernelFamily::OpenblasAsm => {
                 generators::openblas_asm_program(self.vlen_bits, self.lmul, self.k_unroll, l)
             }
+            KernelFamily::AsmSource => self
+                .asm
+                .as_ref()
+                .expect("validated: asm-source kernels carry their listing")
+                .unit
+                .expand(l, self.k_unroll),
         }
     }
 
@@ -282,7 +371,7 @@ impl KernelDescriptor {
         let prog = super::analysis::interned_program(self, layout);
         let mut m = VecMachine::new(self.vlen_bits.max(64), layout.mem_words())?;
         m.mem = layout.pack(a, b, c);
-        m.run(&prog).map_err(CimoneError::Machine)?;
+        m.run(&prog)?;
         Ok(layout.unpack_c(&m.mem))
     }
 }
@@ -305,6 +394,7 @@ pub fn openblas_generic() -> KernelDescriptor {
         k_unroll: 1,
         blocking: BlockingPolicy::Fixed,
         host_overhead: 0.16,
+        asm: None,
     }
 }
 
@@ -326,6 +416,7 @@ pub fn openblas_c920() -> KernelDescriptor {
         k_unroll: 1,
         blocking: BlockingPolicy::Fixed,
         host_overhead: 0.38,
+        asm: None,
     }
 }
 
@@ -345,6 +436,7 @@ pub fn blis_lmul1() -> KernelDescriptor {
         k_unroll: 1,
         blocking: BlockingPolicy::CacheDerived,
         host_overhead: 0.35,
+        asm: None,
     }
 }
 
@@ -366,6 +458,7 @@ pub fn blis_lmul4() -> KernelDescriptor {
         k_unroll: 1,
         blocking: BlockingPolicy::CacheDerived,
         host_overhead: 0.23,
+        asm: None,
     }
 }
 
@@ -389,6 +482,7 @@ pub fn blis_rvv1_lmul2() -> KernelDescriptor {
         k_unroll: 4,
         blocking: BlockingPolicy::CacheDerived,
         host_overhead: 0.18,
+        asm: None,
     }
 }
 
@@ -410,6 +504,7 @@ pub fn blis_rvv1_lmul4() -> KernelDescriptor {
         k_unroll: 2,
         blocking: BlockingPolicy::CacheDerived,
         host_overhead: 0.20,
+        asm: None,
     }
 }
 
@@ -500,6 +595,27 @@ impl KernelRegistry {
         &mut self,
         sec: &Section,
     ) -> Result<Arc<KernelDescriptor>, CimoneError> {
+        self.register_section_with_dir(sec, None)
+    }
+
+    /// [`KernelRegistry::register_section`] with a base directory for
+    /// resolving relative `path = "..."` listings (normally the spec
+    /// file's own directory). `asm-source` kernels take their program
+    /// from an inline `source = '''...'''` block or a `path` file:
+    ///
+    /// ```text
+    /// [[kernel]]
+    /// id = "dgemm-rvv1-8x8"
+    /// base = "blis-rvv1-lmul2"
+    /// family = "asm-source"
+    /// path = "kernels/dgemm_rvv1_8x8.S"
+    /// vlen = 256
+    /// ```
+    pub fn register_section_with_dir(
+        &mut self,
+        sec: &Section,
+        dir: Option<&Path>,
+    ) -> Result<Arc<KernelDescriptor>, CimoneError> {
         const KNOWN_KEYS: &[&str] = &[
             "id",
             "base",
@@ -513,6 +629,8 @@ impl KernelRegistry {
             "blocking",
             "host_overhead",
             "native_rvv10",
+            "source",
+            "path",
         ];
         let id = sec
             .get("id")
@@ -546,7 +664,7 @@ impl KernelRegistry {
         if let Some(v) = sec.get("family") {
             let s = v.as_str().ok_or_else(|| spec_err("`family` must be a string".into()))?;
             k.family = KernelFamily::parse(s).ok_or_else(|| {
-                spec_err(format!("unknown family `{s}` (openblas-asm | blis-rvv)"))
+                spec_err(format!("unknown family `{s}` (openblas-asm | blis-rvv | asm-source)"))
             })?;
         }
         if let Some(v) = sec.get("blocking") {
@@ -601,6 +719,50 @@ impl KernelRegistry {
         if let Some(v) = sec.get("native_rvv10") {
             k.native_rvv10 =
                 v.as_bool().ok_or_else(|| spec_err("`native_rvv10` must be a bool".into()))?;
+        }
+        match (sec.get("source"), sec.get("path")) {
+            (Some(_), Some(_)) => {
+                return Err(spec_err("`source` and `path` are mutually exclusive".into()));
+            }
+            (Some(v), None) => {
+                let text =
+                    v.as_str().ok_or_else(|| spec_err("`source` must be a string".into()))?;
+                if k.family != KernelFamily::AsmSource {
+                    return Err(spec_err("`source` requires family = \"asm-source\"".into()));
+                }
+                k.asm = Some(Arc::new(AsmSource::assemble(text, "<spec>")?));
+            }
+            (None, Some(v)) => {
+                let rel = v.as_str().ok_or_else(|| spec_err("`path` must be a string".into()))?;
+                if k.family != KernelFamily::AsmSource {
+                    return Err(spec_err("`path` requires family = \"asm-source\"".into()));
+                }
+                let full = match dir {
+                    Some(d) => d.join(rel),
+                    None => Path::new(rel).to_path_buf(),
+                };
+                let text = std::fs::read_to_string(&full).map_err(|e| {
+                    spec_err(format!("cannot read listing `{}`: {e}", full.display()))
+                })?;
+                k.asm = Some(Arc::new(AsmSource::assemble(&text, rel)?));
+            }
+            (None, None) => {
+                // family switched to asm-source without a listing (and
+                // the base didn't carry one): reject before validate()
+                // does, with the spec-level fix spelled out
+                if k.family == KernelFamily::AsmSource && k.asm.is_none() {
+                    return Err(spec_err(
+                        "family = \"asm-source\" needs `source = '''...'''` or `path = \"...\"`"
+                            .into(),
+                    ));
+                }
+                // family switched *away* from asm-source: drop the
+                // inherited listing rather than tripping the coherence
+                // guard in validate()
+                if k.family != KernelFamily::AsmSource {
+                    k.asm = None;
+                }
+            }
         }
         self.register(k)
     }
@@ -782,5 +944,126 @@ mod tests {
             reg.register_section(&cfg.table_arrays["kernel"][0]),
             Err(CimoneError::InvalidKernel { .. })
         ));
+    }
+
+    /// A complete 4x2 RVV 1.0 micro-kernel at VLEN=128 / LMUL=2 (one
+    /// group = one C column), one k-step per loop iteration.
+    const ASM_4X2: &str = "\
+    vsetvli t0, 4, e64, m2, ta, ma
+    vle64.v v0, 0(a2)
+    vle64.v v2, 4(a2)
+.loop:
+    vle64.v v4, 0(a0)
+    fld f0, 0(a1)
+    vfmacc.vf v0, f0, v4
+    fld f1, 1(a1)
+    vfmacc.vf v2, f1, v4
+    addi a0, a0, 32
+    addi a1, a1, 16
+    bnez t1, .loop
+    vse64.v v0, 0(a2)
+    vse64.v v2, 4(a2)
+";
+
+    fn asm_4x2_section(extra: &str) -> crate::util::config::Section {
+        use crate::util::config::Config;
+        let text = format!(
+            "[[kernel]]\nid = \"asm-4x2\"\nbase = \"blis-rvv1-lmul2\"\n\
+             family = \"asm-source\"\nmr = 4\nnr = 2\nk_unroll = 1\n{extra}\
+             source = '''\n{ASM_4X2}'''\n"
+        );
+        Config::parse(&text).unwrap().table_arrays["kernel"][0].clone()
+    }
+
+    #[test]
+    fn asm_source_kernel_registers_and_computes_c_plus_ab() {
+        let mut reg = KernelRegistry::builtin();
+        let k = reg.register_section(&asm_4x2_section("")).unwrap();
+        assert_eq!(k.family, KernelFamily::AsmSource);
+        assert!(k.asm.is_some());
+        assert_eq!((k.mr, k.nr, k.k_unroll), (4, 2, 1));
+        let a = Matrix::random_hpl(4, 16, 11);
+        let b = Matrix::random_hpl(16, 2, 12);
+        let c = Matrix::random_hpl(4, 2, 13);
+        let out = k.run(&a, &b, &c).unwrap();
+        let mut want = c.clone();
+        Matrix::gemm_acc(&mut want, &a, &b);
+        assert!(out.allclose(&want, 1e-13, 1e-13), "assembled kernel must compute C + A*B");
+    }
+
+    #[test]
+    fn asm_source_family_needs_a_listing() {
+        use crate::util::config::Config;
+        let cfg = Config::parse(
+            "[[kernel]]\nid = \"nolisting\"\nbase = \"blis-rvv1-lmul2\"\nfamily = \"asm-source\"\n",
+        )
+        .unwrap();
+        let mut reg = KernelRegistry::builtin();
+        match reg.register_section(&cfg.table_arrays["kernel"][0]) {
+            Err(CimoneError::Spec(m)) => assert!(m.contains("needs `source"), "{m}"),
+            other => panic!("expected Spec error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn listing_on_generator_family_is_rejected() {
+        use crate::util::config::Config;
+        let cfg = Config::parse(
+            "[[kernel]]\nid = \"mixed\"\nbase = \"blis-lmul4\"\nsource = '''\nbnez t1, .loop\n'''\n",
+        )
+        .unwrap();
+        let mut reg = KernelRegistry::builtin();
+        match reg.register_section(&cfg.table_arrays["kernel"][0]) {
+            Err(CimoneError::Spec(m)) => {
+                assert!(m.contains("requires family = \"asm-source\""), "{m}")
+            }
+            other => panic!("expected Spec error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn source_and_path_are_mutually_exclusive() {
+        use crate::util::config::Config;
+        let cfg = Config::parse(
+            "[[kernel]]\nid = \"both\"\nbase = \"blis-rvv1-lmul2\"\nfamily = \"asm-source\"\n\
+             path = \"x.S\"\nsource = '''\nbnez t1, .loop\n'''\n",
+        )
+        .unwrap();
+        let mut reg = KernelRegistry::builtin();
+        match reg.register_section(&cfg.table_arrays["kernel"][0]) {
+            Err(CimoneError::Spec(m)) => assert!(m.contains("mutually exclusive"), "{m}"),
+            other => panic!("expected Spec error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn declared_unroll_must_match_the_listing() {
+        // k_unroll = 2 while the body only covers k-step 0: typed, with
+        // the missing step named
+        let mut sec = asm_4x2_section("");
+        sec.insert("k_unroll".into(), crate::util::config::Value::Int(2));
+        let mut reg = KernelRegistry::builtin();
+        match reg.register_section(&sec) {
+            Err(CimoneError::InvalidKernel { reason, .. }) => {
+                assert!(reason.contains("k-step 1"), "{reason}")
+            }
+            other => panic!("expected InvalidKernel, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn content_hash_ignores_cosmetic_listing_edits() {
+        let mut reg = KernelRegistry::builtin();
+        let k = reg.register_section(&asm_4x2_section("")).unwrap();
+        // comments, blank lines and label spelling don't feed the cache
+        let cosmetic = format!("# cosmetic header\n\n{}", ASM_4X2.replace(".loop", ".kloop"));
+        let mut k2 = (*k).clone();
+        k2.asm = Some(Arc::new(AsmSource::assemble(&cosmetic, "other.S").unwrap()));
+        assert_eq!(k.content_hash(), k2.content_hash());
+        // a real edit (different avl) must change the key
+        let edited = ASM_4X2.replace("vsetvli t0, 4", "vsetvli t0, 2");
+        let mut k3 = (*k).clone();
+        k3.asm = Some(Arc::new(AsmSource::assemble(&edited, "edited.S").unwrap()));
+        assert_ne!(k.content_hash(), k3.content_hash());
     }
 }

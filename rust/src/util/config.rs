@@ -2,8 +2,11 @@
 //!
 //! Supports the subset our cluster/experiment configs need:
 //! `[section]` headers, `key = value` with string/int/float/bool values,
-//! flat arrays of those, `#` comments, and `[[section]]` table arrays
-//! (used for node inventories).
+//! flat arrays of those, `#` comments, `[[section]]` table arrays
+//! (used for node inventories), and `key = '''` multi-line literal
+//! strings (used for inline assembly listings in `[[kernel]]` sections
+//! — the body is taken verbatim, `#` included, until a line holding
+//! only `'''`).
 
 use std::collections::BTreeMap;
 
@@ -53,6 +56,11 @@ pub type Section = BTreeMap<String, Value>;
 pub struct Config {
     pub sections: BTreeMap<String, Section>,
     pub table_arrays: BTreeMap<String, Vec<Section>>,
+    /// The file this config was loaded from ([`Config::load`] sets it;
+    /// in-memory parses leave `None`). Relative paths inside the config
+    /// — e.g. a `[[kernel]]` `path = "..."` listing — resolve against
+    /// this file's directory.
+    pub origin: Option<String>,
 }
 
 impl Config {
@@ -61,8 +69,12 @@ impl Config {
         let mut cfg = Config::default();
         // current destination: (is_array, name)
         let mut cur: Option<(bool, String)> = None;
-        for (lineno, raw) in text.lines().enumerate() {
-            let line = strip_comment(raw).trim().to_string();
+        let lines: Vec<&str> = text.lines().collect();
+        let mut i = 0usize;
+        while i < lines.len() {
+            let lineno = i + 1;
+            let line = strip_comment(lines[i]).trim().to_string();
+            i += 1;
             if line.is_empty() {
                 continue;
             }
@@ -76,8 +88,34 @@ impl Config {
                 cur = Some((false, name));
             } else if let Some((k, v)) = line.split_once('=') {
                 let key = k.trim().to_string();
-                let val = parse_value(v.trim())
-                    .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+                let val = if v.trim() == "'''" {
+                    // multi-line literal string: raw lines, verbatim
+                    // (no comment stripping — `#` is asm syntax), up to
+                    // a line holding only `'''`
+                    let mut body = Vec::new();
+                    loop {
+                        match lines.get(i) {
+                            None => {
+                                return Err(format!(
+                                    "line {lineno}: unterminated `'''` string (no closing `'''`)"
+                                ));
+                            }
+                            Some(l) if l.trim() == "'''" => {
+                                i += 1;
+                                break;
+                            }
+                            Some(l) => {
+                                body.push(*l);
+                                i += 1;
+                            }
+                        }
+                    }
+                    let mut s = body.join("\n");
+                    s.push('\n');
+                    Value::Str(s)
+                } else {
+                    parse_value(v.trim()).map_err(|e| format!("line {lineno}: {e}"))?
+                };
                 let dest = match &cur {
                     Some((true, name)) => {
                         cfg.table_arrays.get_mut(name).unwrap().last_mut().unwrap()
@@ -87,16 +125,19 @@ impl Config {
                 };
                 dest.insert(key, val);
             } else {
-                return Err(format!("line {}: unparseable `{line}`", lineno + 1));
+                return Err(format!("line {lineno}: unparseable `{line}`"));
             }
         }
         Ok(cfg)
     }
 
-    /// Load from a file path.
+    /// Load from a file path. Records the path as [`Config::origin`] so
+    /// relative paths inside the config can resolve against it.
     pub fn load(path: &str) -> Result<Config, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
-        Config::parse(&text)
+        let mut cfg = Config::parse(&text)?;
+        cfg.origin = Some(path.to_string());
+        Ok(cfg)
     }
 
     pub fn section(&self, name: &str) -> Option<&Section> {
@@ -232,5 +273,33 @@ sockets = 2
     fn empty_array() {
         let c = Config::parse("[s]\na = []\n").unwrap();
         assert_eq!(c.get("s.a").unwrap(), &Value::Array(vec![]));
+    }
+
+    #[test]
+    fn multiline_string_is_verbatim() {
+        // the body keeps `#` (asm comments) and indentation untouched,
+        // and parsing resumes cleanly after the closing fence
+        let text = "[s]\nsrc = '''\n  fld f0, 0(a1)  # load B\n'''\nafter = 1\n";
+        let c = Config::parse(text).unwrap();
+        assert_eq!(c.get("s.src").unwrap().as_str(), Some("  fld f0, 0(a1)  # load B\n"));
+        assert_eq!(c.get("s.after").unwrap().as_int(), Some(1));
+    }
+
+    #[test]
+    fn multiline_string_spans_section_like_lines() {
+        let c = Config::parse("[s]\nsrc = '''\n[not a section]\n'''\n").unwrap();
+        assert_eq!(c.get("s.src").unwrap().as_str(), Some("[not a section]\n"));
+        assert!(!c.sections.contains_key("not a section"));
+    }
+
+    #[test]
+    fn unterminated_multiline_string_reports_opening_line() {
+        let err = Config::parse("[s]\nsrc = '''\nbody\n").unwrap_err();
+        assert!(err.contains("line 2") && err.contains("unterminated"), "{err}");
+    }
+
+    #[test]
+    fn parse_leaves_origin_unset() {
+        assert_eq!(Config::parse("[s]\nk = 1\n").unwrap().origin, None);
     }
 }

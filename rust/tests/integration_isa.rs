@@ -1,0 +1,296 @@
+//! Integration tests for the assembler front end: the literate `.cim.md`
+//! conformance suite, randomized round-trip properties over both
+//! dialects, a seeded differential fuzz harness (assembled programs
+//! executed on the vector machine vs the scalar GEMM oracle), source
+//! location / caret diagnostics, bit-identity of the shipped example
+//! listing with its generator twin, and the asm-source kernel sweep end
+//! to end (cold vs warm cache).
+
+use std::path::{Path, PathBuf};
+
+use cimone::coordinator::scenario::{self, ScenarioMatrix, SweepOptions};
+use cimone::isa::{assemble, assembler, disassemble, literate};
+use cimone::isa::{Dialect, Inst, Lmul, Program, Sew, VType, VecMachine};
+use cimone::ukernel::registry::blis_rvv1_lmul2;
+use cimone::ukernel::{KernelFamily, KernelRegistry, PanelLayout};
+use cimone::util::config::Config;
+use cimone::util::prop;
+use cimone::util::rng::Rng;
+use cimone::util::Matrix;
+
+fn repo_path(rel: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+// ---------------------------------------------------------------------
+// Literate conformance suite: every rust/tests/isa/*.cim.md must pass.
+// ---------------------------------------------------------------------
+
+#[test]
+fn literate_conformance_suite_passes() {
+    let dir = repo_path("rust/tests/isa");
+    let mut files: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("{}: {e}", dir.display()))
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.to_string_lossy().ends_with(".cim.md"))
+        .collect();
+    files.sort();
+    assert!(files.len() >= 3, "expected >= 3 conformance files, found {files:?}");
+    for f in &files {
+        let passed = literate::run_file(f).unwrap_or_else(|e| panic!("{e}"));
+        assert!(passed > 0, "{}: ran zero cases", f.display());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Round-trip properties: parse(render(p)) == p over arbitrary programs.
+// ---------------------------------------------------------------------
+
+/// An arbitrary well-formed program in the given dialect. Respects the
+/// canonical-form constraints the renderer implies: RVV 1.0 `vsetvli`
+/// always carries ta/ma, theadvector never does and spells only E64
+/// loads (EEW comes from vtype), and a theadvector program carries at
+/// least one `th.`-prefixed instruction so the dialect is inferable.
+fn arbitrary_program(rng: &mut Rng, size: usize, dialect: Dialect) -> Program {
+    let n = 1 + size.min(24);
+    let mut p = Program::new(dialect);
+    for _ in 0..n {
+        let sew = match dialect {
+            Dialect::Rvv10 => {
+                if rng.below(2) == 0 {
+                    Sew::E64
+                } else {
+                    Sew::E32
+                }
+            }
+            Dialect::Thead071 => Sew::E64,
+        };
+        let v = rng.below(32) as u8;
+        let f = rng.below(32) as u8;
+        let addr = rng.range_usize(0, 64);
+        let inst = match rng.below(10) {
+            0 => {
+                let lmul = [Lmul::M1, Lmul::M2, Lmul::M4, Lmul::M8][rng.below(4) as usize];
+                let mut vt = VType::new(sew, lmul);
+                if dialect == Dialect::Rvv10 {
+                    vt.tail_agnostic = true;
+                    vt.mask_agnostic = true;
+                }
+                Inst::Vsetvli { avl: rng.range_usize(1, 9), vtype: vt }
+            }
+            1 => Inst::Vle { sew, vd: v, addr },
+            2 => Inst::Vse { sew, vs: v, addr },
+            3 => Inst::VfmaccVf { vd: v, fs: f, vs2: rng.below(32) as u8 },
+            4 => Inst::VfmulVf { vd: v, fs: f, vs2: rng.below(32) as u8 },
+            5 => Inst::VfmvVf { vd: v, fs: f },
+            6 => Inst::VfaddVv { vd: v, vs1: rng.below(32) as u8, vs2: rng.below(32) as u8 },
+            7 => Inst::Fld { fd: f, addr },
+            8 => Inst::Fsd { fs: f, addr },
+            _ => Inst::FmaddD { fd: f, fs1: rng.below(32) as u8, fs2: rng.below(32) as u8, fs3: f },
+        };
+        p.push(inst);
+    }
+    if rng.below(2) == 0 {
+        p.push(Inst::Addi);
+        p.push(Inst::Bnez);
+    }
+    let has_vector = p.insts.iter().any(|i| {
+        matches!(
+            i,
+            Inst::Vsetvli { .. }
+                | Inst::Vle { .. }
+                | Inst::Vse { .. }
+                | Inst::VfmaccVf { .. }
+                | Inst::VfmulVf { .. }
+                | Inst::VfmvVf { .. }
+                | Inst::VfaddVv { .. }
+        )
+    });
+    if dialect == Dialect::Thead071 && !has_vector {
+        p.push(Inst::Vle { sew: Sew::E64, vd: 8, addr: 0 });
+    }
+    p
+}
+
+/// Sprinkle comments, blank lines, directives and unused labels into a
+/// rendered listing — all structure the assembler must see through.
+fn decorate(text: &str, rng: &mut Rng) -> String {
+    let mut out = vec!["# decorated listing".to_string(), ".globl kernel".to_string()];
+    for (i, line) in text.lines().enumerate() {
+        match rng.below(5) {
+            0 => out.push(String::new()),
+            1 => out.push(format!("    # noise {i}")),
+            2 => out.push(format!("unused{i}:")),
+            3 => out.push(".align 3".to_string()),
+            _ => {}
+        }
+        out.push(line.to_string());
+    }
+    out.join("\n")
+}
+
+#[test]
+fn roundtrip_property_both_dialects() {
+    for (dialect, seed) in [(Dialect::Rvv10, 11u64), (Dialect::Thead071, 12u64)] {
+        prop::check(
+            "assemble(decorate(disassemble(p))) == p",
+            seed,
+            120,
+            move |rng: &mut Rng, size: usize| {
+                let p = arbitrary_program(rng, size, dialect);
+                let text = decorate(&disassemble(&p), rng);
+                (p, text)
+            },
+            |(p, text)| {
+                let back = assemble(text).map_err(|e| e.to_string())?;
+                if back == *p {
+                    Ok(())
+                } else {
+                    Err(format!("round-trip changed the program:\n{text}"))
+                }
+            },
+        );
+    }
+}
+
+#[test]
+fn builtin_kernels_roundtrip_through_text() {
+    // the registered generator kernels survive disassemble -> assemble
+    // bit-identically (the property test's anchor on real programs)
+    for k in KernelRegistry::builtin().kernels() {
+        let (mr, nr) = k.tile();
+        let p = k.program(PanelLayout::new(mr, nr, 7));
+        let back = assemble(&disassemble(&p)).unwrap_or_else(|e| panic!("{}: {e}", k.id));
+        assert_eq!(back, p, "{}", k.id);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Seeded differential fuzz: random kernel geometries, assembled and
+// executed on the vector machine vs the scalar GEMM oracle.
+// ---------------------------------------------------------------------
+
+#[test]
+fn differential_fuzz_vecmachine_vs_scalar_oracle() {
+    let mut rng = Rng::new(0xC1_30_7E);
+    let mut executed = 0usize;
+    for round in 0..60 {
+        let vlen = [128usize, 256, 512][rng.below(3) as usize];
+        let lmul = [Lmul::M1, Lmul::M2][rng.below(2) as usize];
+        let mr = [2usize, 4, 8][rng.below(3) as usize];
+        let nr = rng.range_usize(1, 5);
+        let kc = rng.range_usize(1, 13);
+        let k_unroll = [1usize, 2, 4][rng.below(3) as usize];
+        let l = PanelLayout::new(mr, nr, kc);
+        let p = cimone::ukernel::generators::blis_rvv_program(vlen, lmul, k_unroll, l);
+        if p.validate_register_groups(vlen).is_err() {
+            continue; // infeasible corner of the random grid
+        }
+        // round-trip through text first: the executed program is the
+        // *assembled* one, so the whole front end is under test
+        let back = assemble(&disassemble(&p)).unwrap_or_else(|e| panic!("round {round}: {e}"));
+        assert_eq!(back, p, "round {round}: text round-trip changed the program");
+
+        let a = Matrix::random_hpl(mr, kc, rng.next_u64());
+        let b = Matrix::random_hpl(kc, nr, rng.next_u64());
+        let c = Matrix::random_hpl(mr, nr, rng.next_u64());
+        let mut m = VecMachine::new(vlen, l.mem_words()).unwrap();
+        m.mem = l.pack(&a, &b, &c);
+        m.run(&back).unwrap_or_else(|e| panic!("round {round}: {e}"));
+        let got = l.unpack_c(&m.mem);
+        let mut want = c.clone();
+        Matrix::gemm_acc(&mut want, &a, &b);
+        assert!(
+            got.allclose(&want, 1e-13, 1e-13),
+            "round {round}: vlen={vlen} lmul={lmul:?} {mr}x{nr} kc={kc} u={k_unroll} diverged"
+        );
+        executed += 1;
+    }
+    assert!(executed >= 30, "only {executed} feasible fuzz rounds — generator too narrow");
+}
+
+// ---------------------------------------------------------------------
+// Diagnostics: file/line/col + caret excerpt on the public error type.
+// ---------------------------------------------------------------------
+
+#[test]
+fn asm_errors_carry_source_location_and_caret() {
+    let text = ".globl k\n    vsetvli t0, 4, e64, m2, ta, ma\n    vfmaac.vf v0, f1, v8\n";
+    let e = assembler::assemble_named(text, "examples/broken.S").unwrap_err();
+    assert_eq!((e.file.as_str(), e.line, e.col), ("examples/broken.S", 3, 5));
+    assert_eq!(e.span, "vfmaac.vf".len());
+    let shown = e.to_string();
+    assert!(shown.contains("examples/broken.S:3:5"), "{shown}");
+    assert!(shown.contains("vfmaac.vf v0, f1, v8"), "excerpt missing: {shown}");
+    assert!(shown.contains("^^^^^^^^^"), "caret missing: {shown}");
+    assert!(shown.contains("did you mean `vfmacc.vf`?"), "{shown}");
+}
+
+#[test]
+fn asm_error_converts_into_the_crate_error() {
+    let e: cimone::error::CimoneError = assemble("frobnicate v0\n").unwrap_err().into();
+    let shown = e.to_string();
+    assert!(shown.contains("unknown mnemonic"), "{shown}");
+    assert!(shown.contains("1:1"), "location lost in conversion: {shown}");
+}
+
+// ---------------------------------------------------------------------
+// The shipped example listing is bit-identical to its generator twin
+// and flows through spec -> registry -> sweep end to end.
+// ---------------------------------------------------------------------
+
+fn example_kernel_section() -> cimone::util::config::Section {
+    let cfg = Config::parse(
+        "[[kernel]]\nid = \"dgemm-rvv1-8x8\"\nbase = \"blis-rvv1-lmul2\"\n\
+         family = \"asm-source\"\npath = \"kernels/dgemm_rvv1_8x8.S\"\n\
+         vlen = 256\nmr = 8\nnr = 8\nk_unroll = 1\n",
+    )
+    .unwrap();
+    cfg.table_arrays["kernel"][0].clone()
+}
+
+#[test]
+fn example_listing_matches_the_generator_bit_for_bit() {
+    let dir = repo_path("examples");
+    let mut reg = KernelRegistry::builtin();
+    let k = reg.register_section_with_dir(&example_kernel_section(), Some(dir.as_path())).unwrap();
+    assert_eq!(k.family, KernelFamily::AsmSource);
+
+    // the generator's descriptor for the same tuning point
+    let mut twin = blis_rvv1_lmul2();
+    twin.id = "twin".into();
+    twin.aliases = Vec::new();
+    twin.vlen_bits = 256;
+    twin.mr = 8;
+    twin.nr = 8;
+    twin.k_unroll = 1;
+    twin.validate().unwrap();
+
+    for kc in [1usize, 4, 40, 41] {
+        let l = PanelLayout::new(8, 8, kc);
+        let (pa, pg) = (k.program(l), twin.program(l));
+        assert_eq!(pa.dialect, pg.dialect, "kc={kc}");
+        assert_eq!(pa.insts, pg.insts, "kc={kc}: assembled != generated");
+    }
+
+    // and the assembled kernel computes C + A*B
+    let a = Matrix::random_hpl(8, 24, 7);
+    let b = Matrix::random_hpl(24, 8, 8);
+    let c = Matrix::random_hpl(8, 8, 9);
+    let out = k.run(&a, &b, &c).unwrap();
+    let mut want = c.clone();
+    Matrix::gemm_acc(&mut want, &a, &b);
+    assert!(out.allclose(&want, 1e-13, 1e-13));
+}
+
+#[test]
+fn asm_kernel_sweep_spec_runs_end_to_end_and_cache_is_transparent() {
+    let spec = repo_path("examples/sweep_asm_kernel.toml");
+    let m = ScenarioMatrix::load(&spec.display().to_string()).unwrap();
+    let opts = SweepOptions::default();
+    let cold = scenario::dry_run_matrix_with(&m, &opts).unwrap().to_json().render();
+    assert!(cold.contains("dgemm-rvv1-8x8"), "asm kernel missing from sweep: {cold}");
+    // warm pass (same process, caches populated) must be byte-identical
+    let warm = scenario::dry_run_matrix_with(&m, &opts).unwrap().to_json().render();
+    assert_eq!(cold, warm, "warm-cache sweep diverged from cold");
+}
