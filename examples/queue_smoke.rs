@@ -1,0 +1,55 @@
+//! CI smoke for the production queue campaign: run the 10,000-job
+//! multi-user queue spec end to end, validate the `--json` export
+//! through `Json::parse`, and check every stream drained with a
+//! bit-identical rerun. Optionally validates an externally produced
+//! campaign JSON file (e.g. piped from `cimone campaign --spec
+//! examples/queue_production.toml --json`) passed as the first argument.
+//!
+//! ```text
+//! cargo run --example queue_smoke [-- queue.json]
+//! ```
+
+use cimone::coordinator::{driver, CampaignSpec};
+use cimone::util::json::Json;
+
+fn main() -> cimone::Result<()> {
+    let spec = CampaignSpec::load("examples/queue_production.toml")?;
+    let inv = spec.build_inventory()?;
+    let report = driver::run_campaign_spec(&inv, &spec)?;
+
+    // the JSON export must round-trip through our own parser
+    let text = report.to_json().render();
+    let parsed = Json::parse(&text).map_err(anyhow::Error::msg)?;
+    let queues = parsed
+        .get("queues")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing `queues` array"))?;
+    assert_eq!(queues.len(), 4, "expected one row per user stream");
+    let total: f64 = queues
+        .iter()
+        .map(|q| q.get("jobs").and_then(Json::as_f64).unwrap_or(0.0))
+        .sum();
+    assert_eq!(total as usize, 10_000, "every queued job must drain");
+
+    // the event-driven drain is deterministic: a rerun is bit-identical
+    let rerun = driver::run_campaign_spec(&inv, &spec)?;
+    assert_eq!(rerun.makespan_s, report.makespan_s, "makespan must not drift");
+    assert_eq!(rerun.queues, report.queues, "queue outcomes must not drift");
+
+    // validate an externally produced JSON file when given one
+    if let Some(path) = std::env::args().nth(1) {
+        let external = std::fs::read_to_string(&path)?;
+        let parsed = Json::parse(&external).map_err(anyhow::Error::msg)?;
+        let n = parsed.get("queues").and_then(Json::as_arr).map(|a| a.len()).unwrap_or(0);
+        assert!(n > 0, "{path}: no queues in the campaign JSON");
+        println!("{path}: valid campaign JSON with {n} queue rows");
+    }
+
+    println!(
+        "queue smoke OK: {} jobs drained across {} streams, makespan {:.0}s",
+        total as usize,
+        queues.len(),
+        report.makespan_s
+    );
+    Ok(())
+}

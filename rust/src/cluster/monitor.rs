@@ -44,6 +44,11 @@ impl Monitor {
         Some(s.iter().map(|x| x.value).sum::<f64>() / s.len() as f64)
     }
 
+    /// Largest recorded value of a series (NaN-safe total order).
+    pub fn max(&self, metric: &str) -> Option<f64> {
+        self.series.get(metric)?.iter().map(|x| x.value).max_by(f64::total_cmp)
+    }
+
     /// All metrics matching a prefix (dotted-hierarchy query).
     pub fn query_prefix(&self, prefix: &str) -> Vec<(&str, f64)> {
         self.series
@@ -87,5 +92,15 @@ mod tests {
         let m = Monitor::new();
         assert_eq!(m.latest("nope"), None);
         assert_eq!(m.mean("nope"), None);
+        assert_eq!(m.max("nope"), None);
+    }
+
+    #[test]
+    fn max_tracks_the_series_peak() {
+        let mut m = Monitor::new();
+        m.record("w", 0.0, 120.0);
+        m.record("w", 1.0, 150.0);
+        m.record("w", 2.0, 90.0);
+        assert_eq!(m.max("w"), Some(150.0));
     }
 }

@@ -13,6 +13,32 @@ pub fn efficiency_gflops_per_w(platform: &Platform, active_cores: usize, gflops:
     gflops / platform.power.node_power(active_cores)
 }
 
+/// The most cores a node can run under a per-node power cap, given its
+/// affine power model — the inverse of [`PowerModel::node_power`].
+/// Returns `None` when even one active core exceeds the cap (the node
+/// cannot host work at all at that operating point).
+pub fn max_cores_under_cap(power: &PowerModel, cap_w: f64, total_cores: usize) -> Option<usize> {
+    if power.node_power(1) > cap_w {
+        return None;
+    }
+    if power.per_core_active_w <= 0.0 {
+        return Some(total_cores);
+    }
+    // first guess by inverting the affine model, then settle on the
+    // exact boundary against node_power itself: the division can land
+    // one off when the cap sits exactly on a representable power level
+    let guess = ((cap_w - power.idle_w) / power.per_core_active_w).floor();
+    let mut fit =
+        if guess.is_finite() && guess >= 1.0 { guess as usize } else { 1 }.min(total_cores);
+    while power.node_power(fit) > cap_w {
+        fit -= 1; // terminates: node_power(1) <= cap_w was checked above
+    }
+    while fit < total_cores && power.node_power(fit + 1) <= cap_w {
+        fit += 1;
+    }
+    Some(fit)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -31,6 +57,21 @@ mod tests {
         let v2 = efficiency_gflops_per_w(&platform::mcv2_pioneer(), 64, 139.0);
         let v1 = efficiency_gflops_per_w(&platform::mcv1_u740(), 4, 1.63);
         assert!(v2 > 10.0 * v1, "v2={v2:.3} v1={v1:.3}");
+    }
+
+    #[test]
+    fn power_cap_inverts_the_affine_model() {
+        // mcv2-pioneer: 60 + 1.4c W; a 120 W cap fits floor(60/1.4) = 42
+        let pm = platform::mcv2_pioneer().power;
+        assert_eq!(max_cores_under_cap(&pm, 120.0, 64), Some(42));
+        assert!(pm.node_power(42) <= 120.0);
+        assert!(pm.node_power(43) > 120.0);
+        // a generous cap clamps to the physical core count
+        assert_eq!(max_cores_under_cap(&pm, 1e6, 64), Some(64));
+        // the exact boundary is inclusive: 60 + 1.4 = 61.4 W at one core
+        assert_eq!(max_cores_under_cap(&pm, 61.4, 64), Some(1));
+        // ...and below it the node cannot host work at all
+        assert_eq!(max_cores_under_cap(&pm, 61.0, 64), None);
     }
 
     #[test]

@@ -69,6 +69,21 @@
 //! cores = 128
 //! # platform = "mcv2-dual" # default
 //! # runtime_s = 3600
+//!
+//! [[queue]]                # optional: a production-shaped job stream
+//! user = "alice"           # per-user accounting in the report
+//! workload = "hpl-sg2044-2n" # template: any [[workload]] name
+//! count = 100              # jobs in the stream
+//! start_s = 0.0            # arrival of the first job
+//! interval_s = 60.0        # spacing between arrivals (0 = all at once)
+//! priority = 1             # higher runs first; default 0
+//!
+//! [[outage]]               # optional: node-availability ablation
+//! node = 3                 # global node id (inventory order)
+//! down_s = 100.0           # leaves service here (busy nodes drain)
+//! up_s = 400.0             # returns here; omit to stay down
+//! # repeat = 5             # link flap: this many windows...
+//! # every = 1000.0         # ...spaced this far apart
 //! ```
 
 use std::path::Path;
@@ -416,6 +431,211 @@ fn opt_lib(sec: &Section, who: &str) -> Result<Option<String>, CimoneError> {
     }
 }
 
+/// One `[[queue]]` section: a production-shaped stream of jobs cloned
+/// from a template `[[workload]]`, arriving on a fixed cadence under one
+/// user's account. The scheduler drains these with FIFO + EASY-backfill
+/// semantics, so queue specs turn the paper campaign into a multi-user
+/// production scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueueSpec {
+    /// Owning user (multi-tenant accounting in the report).
+    pub user: String,
+    /// Name of the `[[workload]]` used as the job template.
+    pub workload: String,
+    /// Number of jobs in the stream.
+    pub count: usize,
+    /// Arrival time of the first job (simulated seconds).
+    pub start_s: f64,
+    /// Spacing between consecutive arrivals (0 = all at once).
+    pub interval_s: f64,
+    /// Scheduler priority of every job in the stream (higher first).
+    pub priority: i64,
+}
+
+impl QueueSpec {
+    /// Parse one `[[queue]]` section.
+    pub fn from_section(sec: &Section) -> Result<QueueSpec, CimoneError> {
+        const KNOWN: &[&str] = &["user", "workload", "count", "start_s", "interval_s", "priority"];
+        let err = |m: String| CimoneError::Spec(format!("[[queue]]: {m}"));
+        if let Some(unknown) = sec.keys().find(|k| !KNOWN.contains(&k.as_str())) {
+            return Err(err(format!("unknown key `{unknown}` (known: {})", KNOWN.join(", "))));
+        }
+        let str_key = |key: &str| -> Result<String, CimoneError> {
+            sec.get(key)
+                .and_then(Value::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| err(format!("missing string key `{key}`")))
+        };
+        let time_key = |key: &str| -> Result<f64, CimoneError> {
+            match sec.get(key) {
+                None => Ok(0.0),
+                Some(v) => v
+                    .as_float()
+                    .filter(|f| f.is_finite() && *f >= 0.0)
+                    .ok_or_else(|| err(format!("`{key}` must be a non-negative number"))),
+            }
+        };
+        let user = str_key("user")?;
+        if user.is_empty() {
+            return Err(err("`user` must be non-empty".into()));
+        }
+        let count = match sec.get("count") {
+            None => 1,
+            Some(v) => v
+                .as_int()
+                .filter(|i| *i > 0)
+                .ok_or_else(|| err("`count` must be a positive int".into()))?
+                as usize,
+        };
+        let priority = match sec.get("priority") {
+            None => 0,
+            Some(v) => v.as_int().ok_or_else(|| err("`priority` must be an int".into()))?,
+        };
+        Ok(QueueSpec {
+            user,
+            workload: str_key("workload")?,
+            count,
+            start_s: time_key("start_s")?,
+            interval_s: time_key("interval_s")?,
+            priority,
+        })
+    }
+
+    /// Job name of the `i`-th job in the stream.
+    pub fn job_name(&self, i: usize) -> String {
+        format!("{}/{}.{i}", self.user, self.workload)
+    }
+
+    /// Arrival time of the `i`-th job in the stream.
+    pub fn arrival_s(&self, i: usize) -> f64 {
+        self.start_s + i as f64 * self.interval_s
+    }
+
+    /// Render back to a `[[queue]]` section; [`QueueSpec::from_section`]
+    /// on the result reconstructs an equal value.
+    pub fn render(&self) -> String {
+        format!(
+            "[[queue]]\nuser = \"{}\"\nworkload = \"{}\"\ncount = {}\nstart_s = {}\n\
+             interval_s = {}\npriority = {}\n",
+            self.user,
+            self.workload,
+            self.count,
+            fmt_float(self.start_s),
+            fmt_float(self.interval_s),
+            self.priority
+        )
+    }
+}
+
+/// One `[[outage]]` section: a node-availability window (maintenance,
+/// failure injection) or — with `repeat`/`every` — a flapping link that
+/// takes the node out on a fixed cadence. Busy nodes drain gracefully:
+/// the running job finishes before the node leaves service.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutageSpec {
+    /// Global node id (inventory order).
+    pub node: usize,
+    /// When the node leaves service.
+    pub down_s: f64,
+    /// When it returns; `None` keeps it down for the whole campaign.
+    pub up_s: Option<f64>,
+    /// Number of down/up windows (link flap); 1 = a single outage.
+    pub repeat: usize,
+    /// Spacing between consecutive windows (required when `repeat` > 1).
+    pub every: f64,
+}
+
+impl OutageSpec {
+    /// Parse one `[[outage]]` section.
+    pub fn from_section(sec: &Section) -> Result<OutageSpec, CimoneError> {
+        const KNOWN: &[&str] = &["node", "down_s", "up_s", "repeat", "every"];
+        let err = |m: String| CimoneError::Spec(format!("[[outage]]: {m}"));
+        if let Some(unknown) = sec.keys().find(|k| !KNOWN.contains(&k.as_str())) {
+            return Err(err(format!("unknown key `{unknown}` (known: {})", KNOWN.join(", "))));
+        }
+        let node = sec
+            .get("node")
+            .and_then(Value::as_int)
+            .filter(|i| *i >= 0)
+            .ok_or_else(|| err("missing or invalid `node` (non-negative int)".into()))?
+            as usize;
+        let down_s = sec
+            .get("down_s")
+            .map(|v| {
+                v.as_float()
+                    .filter(|f| f.is_finite() && *f >= 0.0)
+                    .ok_or_else(|| err("`down_s` must be a non-negative number".into()))
+            })
+            .transpose()?
+            .unwrap_or(0.0);
+        let up_s = sec
+            .get("up_s")
+            .map(|v| {
+                v.as_float().filter(|f| f.is_finite() && *f > down_s).ok_or_else(|| {
+                    err(format!("`up_s` must be a finite number > down_s ({down_s})"))
+                })
+            })
+            .transpose()?;
+        let repeat = match sec.get("repeat") {
+            None => 1,
+            Some(v) => v
+                .as_int()
+                .filter(|i| *i >= 1)
+                .ok_or_else(|| err("`repeat` must be a positive int".into()))?
+                as usize,
+        };
+        let every = match sec.get("every") {
+            None => 0.0,
+            Some(v) => v
+                .as_float()
+                .filter(|f| f.is_finite() && *f >= 0.0)
+                .ok_or_else(|| err("`every` must be a non-negative number".into()))?,
+        };
+        if repeat > 1 {
+            let up = up_s
+                .ok_or_else(|| err("`repeat` > 1 needs `up_s` (flap windows must close)".into()))?;
+            if every <= 0.0 {
+                return Err(err("`repeat` > 1 needs `every` > 0 (window spacing)".into()));
+            }
+            if every < up - down_s {
+                return Err(err(format!(
+                    "`every` ({every}) must cover the window (up_s - down_s = {})",
+                    up - down_s
+                )));
+            }
+        }
+        Ok(OutageSpec { node, down_s, up_s, repeat, every })
+    }
+
+    /// The expanded `(down, up)` windows this outage describes, in time
+    /// order (window `k` is shifted by `k * every`).
+    pub fn windows(&self) -> Vec<(f64, Option<f64>)> {
+        (0..self.repeat)
+            .map(|k| {
+                let shift = k as f64 * self.every;
+                (self.down_s + shift, self.up_s.map(|u| u + shift))
+            })
+            .collect()
+    }
+
+    /// Render back to an `[[outage]]` section; [`OutageSpec::from_section`]
+    /// on the result reconstructs an equal value.
+    pub fn render(&self) -> String {
+        let mut s =
+            format!("[[outage]]\nnode = {}\ndown_s = {}\n", self.node, fmt_float(self.down_s));
+        if let Some(up) = self.up_s {
+            s.push_str(&format!("up_s = {}\n", fmt_float(up)));
+        }
+        if self.repeat != 1 {
+            s.push_str(&format!("repeat = {}\n", self.repeat));
+        }
+        if self.every != 0.0 {
+            s.push_str(&format!("every = {}\n", fmt_float(self.every)));
+        }
+        s
+    }
+}
+
 /// One `[[platform]]` definition: the derived [`Platform`] plus the base
 /// it was derived from, kept so the spec can render itself back to
 /// config text as `base` + overrides.
@@ -469,6 +689,12 @@ pub struct CampaignSpec {
     /// Micro-kernels defined by `[[kernel]]` sections, registered on
     /// top of the built-ins when the spec builds its kernel registry.
     pub custom_kernels: Vec<KernelDef>,
+    /// Production-shaped job streams (`[[queue]]` sections), expanded by
+    /// the campaign driver into per-user arrival sequences.
+    pub queues: Vec<QueueSpec>,
+    /// Node-availability windows (`[[outage]]` sections), applied to the
+    /// scheduler before the campaign's jobs are submitted.
+    pub outages: Vec<OutageSpec>,
 }
 
 impl Default for CampaignSpec {
@@ -481,6 +707,8 @@ impl Default for CampaignSpec {
             fabric: None,
             custom_fabrics: Vec::new(),
             custom_kernels: Vec::new(),
+            queues: Vec::new(),
+            outages: Vec::new(),
         }
     }
 }
@@ -661,6 +889,12 @@ impl CampaignSpec {
             }
             spec.push(w);
         }
+        for sec in cfg.table_arrays.get("queue").map(Vec::as_slice).unwrap_or(&[]) {
+            spec.queues.push(QueueSpec::from_section(sec)?);
+        }
+        for sec in cfg.table_arrays.get("outage").map(Vec::as_slice).unwrap_or(&[]) {
+            spec.outages.push(OutageSpec::from_section(sec)?);
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -707,6 +941,33 @@ impl CampaignSpec {
                     None => Arc::clone(&machine),
                 };
                 f.validate_cluster(*cluster_nodes)?;
+            }
+        }
+        // queue templates must name a workload in this spec, and a
+        // (user, template) pair must be unique — its jobs are named
+        // `user/template.i`, which must not collide between streams
+        let mut queue_ids = std::collections::BTreeSet::new();
+        for q in &self.queues {
+            if !self.workloads.iter().any(|w| w.name() == q.workload) {
+                return Err(CimoneError::Spec(format!(
+                    "queue for user `{}`: no workload named `{}` to use as a template",
+                    q.user, q.workload
+                )));
+            }
+            if !queue_ids.insert((q.user.as_str(), q.workload.as_str())) {
+                return Err(CimoneError::Spec(format!(
+                    "duplicate queue `{}/{}` (merge the streams or rename the user)",
+                    q.user, q.workload
+                )));
+            }
+        }
+        // outages must name a node the fleet actually has
+        for o in &self.outages {
+            if o.node >= fleet_nodes {
+                return Err(CimoneError::Spec(format!(
+                    "outage references node {} but the fleet has {fleet_nodes} nodes",
+                    o.node
+                )));
             }
         }
         Ok(())
@@ -817,6 +1078,14 @@ impl CampaignSpec {
         for w in &self.workloads {
             out.push('\n');
             out.push_str(&w.render());
+        }
+        for q in &self.queues {
+            out.push('\n');
+            out.push_str(&q.render());
+        }
+        for o in &self.outages {
+            out.push('\n');
+            out.push_str(&o.render());
         }
         out
     }
@@ -1453,5 +1722,102 @@ lib = "blis-opt"
             let back = CampaignSpec::parse(&spec.render()).unwrap();
             assert_eq!(back, spec, "latency_us/raw_gbps = {us} did not round-trip");
         }
+    }
+
+    const QUEUED: &str = r#"
+[[workload]]
+kind = "hpl"
+name = "hpl-small"
+platform = "mcv2"
+partition = "mcv2"
+cores_per_node = 64
+
+[[queue]]
+user = "alice"
+workload = "hpl-small"
+count = 3
+start_s = 10.0
+interval_s = 60.0
+priority = 2
+
+[[queue]]
+user = "bob"
+workload = "hpl-small"
+
+[[outage]]
+node = 9
+down_s = 100.0
+up_s = 400.0
+
+[[outage]]
+node = 10
+down_s = 0.0
+up_s = 50.0
+repeat = 3
+every = 200.0
+"#;
+
+    #[test]
+    fn queue_and_outage_sections_parse_with_defaults() {
+        let spec = CampaignSpec::parse(QUEUED).unwrap();
+        assert_eq!(spec.queues.len(), 2);
+        let a = &spec.queues[0];
+        assert_eq!((a.user.as_str(), a.count, a.priority), ("alice", 3, 2));
+        assert_eq!(a.job_name(1), "alice/hpl-small.1");
+        assert_eq!(a.arrival_s(2), 130.0);
+        let b = &spec.queues[1];
+        assert_eq!((b.count, b.start_s, b.interval_s, b.priority), (1, 0.0, 0.0, 0));
+        // the flap expands into shifted copies of its window
+        assert_eq!(spec.outages[0].windows(), vec![(100.0, Some(400.0))]);
+        assert_eq!(
+            spec.outages[1].windows(),
+            vec![(0.0, Some(50.0)), (200.0, Some(250.0)), (400.0, Some(450.0))]
+        );
+    }
+
+    #[test]
+    fn queue_and_outage_sections_round_trip() {
+        let spec = CampaignSpec::parse(QUEUED).unwrap();
+        let back = CampaignSpec::parse(&spec.render()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn queue_without_a_matching_template_is_rejected() {
+        let err = CampaignSpec::parse(
+            "[[workload]]\nkind = \"stream\"\nname = \"s\"\nplatform = \"mcv2\"\npartition = \"mcv2\"\nthreads = 64\n\n\
+             [[queue]]\nuser = \"alice\"\nworkload = \"hpl\"\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CimoneError::Spec(ref m) if m.contains("no workload named `hpl`")));
+    }
+
+    #[test]
+    fn queue_and_outage_key_typos_are_rejected() {
+        let err = CampaignSpec::parse("[[queue]]\nuser = \"a\"\nworkload = \"w\"\ncuont = 3\n")
+            .unwrap_err();
+        assert!(matches!(err, CimoneError::Spec(ref m) if m.contains("unknown key `cuont`")));
+        let err = CampaignSpec::parse("[[outage]]\nnode = 3\ndown = 5.0\n").unwrap_err();
+        assert!(matches!(err, CimoneError::Spec(ref m) if m.contains("unknown key `down`")));
+    }
+
+    #[test]
+    fn outage_invariants_are_load_time_errors() {
+        // the paper fleet has 12 nodes: node 12 does not exist
+        let err = CampaignSpec::parse("[[outage]]\nnode = 12\ndown_s = 0.0\n").unwrap_err();
+        assert!(matches!(err, CimoneError::Spec(ref m) if m.contains("fleet has 12 nodes")));
+        // a window that closes before it opens
+        let err = CampaignSpec::parse("[[outage]]\nnode = 0\ndown_s = 10.0\nup_s = 5.0\n")
+            .unwrap_err();
+        assert!(matches!(err, CimoneError::Spec(ref m) if m.contains("up_s")));
+        // a flap needs a closing edge and a spacing that covers the window
+        let err = CampaignSpec::parse("[[outage]]\nnode = 0\ndown_s = 0.0\nrepeat = 2\n")
+            .unwrap_err();
+        assert!(matches!(err, CimoneError::Spec(ref m) if m.contains("needs `up_s`")));
+        let err = CampaignSpec::parse(
+            "[[outage]]\nnode = 0\ndown_s = 0.0\nup_s = 100.0\nrepeat = 2\nevery = 50.0\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CimoneError::Spec(ref m) if m.contains("cover the window")));
     }
 }

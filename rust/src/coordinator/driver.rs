@@ -16,13 +16,14 @@
 //! spec, estimates every job and checks partition fit, but runs neither
 //! the real-numerics solve nor the drain — `cimone campaign --dry-run`.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use rayon::prelude::*;
 
 use crate::cluster::{monte_cimone_v2, Inventory, Monitor};
 use crate::error::CimoneError;
 use crate::hpl::driver::{run as hpl_run, Backend, HplConfig};
+use crate::sched::{JobRequest, Scheduler};
 use crate::stream::kernels::validate_kernels;
 use crate::util::json::Json;
 
@@ -66,10 +67,42 @@ fn job_row(w: &dyn Workload, est: &JobEstimate) -> JobRow {
     }
 }
 
+/// Aggregated outcome of one `[[queue]]` job stream after the drain.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueueOutcome {
+    pub user: String,
+    /// Template workload the stream cloned.
+    pub workload: String,
+    /// Jobs in the stream.
+    pub jobs: usize,
+    /// Mean queue wait (start - arrival) across the stream (s).
+    pub mean_wait_s: f64,
+    /// Worst queue wait in the stream (s).
+    pub max_wait_s: f64,
+    /// When the stream's last job completed (s).
+    pub end_s: f64,
+}
+
+impl QueueOutcome {
+    /// Machine-readable form for the `queues` array of the report JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("user", Json::Str(self.user.clone())),
+            ("workload", Json::Str(self.workload.clone())),
+            ("jobs", Json::Num(self.jobs as f64)),
+            ("mean_wait_s", Json::Num(self.mean_wait_s)),
+            ("max_wait_s", Json::Num(self.max_wait_s)),
+            ("end_s", Json::Num(self.end_s)),
+        ])
+    }
+}
+
 /// Campaign outcome.
 #[derive(Debug, Clone)]
 pub struct CampaignReport {
     pub jobs: Vec<JobRow>,
+    /// Per-queue wait/throughput aggregates (empty without `[[queue]]`s).
+    pub queues: Vec<QueueOutcome>,
     pub makespan_s: f64,
     /// real-numerics validation outcomes
     pub hpl_residual: f64,
@@ -94,6 +127,7 @@ impl CampaignReport {
             ("hpl_passed", Json::Bool(self.hpl_passed)),
             ("stream_validated", Json::Bool(self.stream_validated)),
             ("jobs", Json::Arr(self.jobs.iter().map(JobRow::to_json).collect())),
+            ("queues", Json::Arr(self.queues.iter().map(QueueOutcome::to_json).collect())),
             ("metrics", Json::Obj(metrics)),
         ])
     }
@@ -166,24 +200,93 @@ pub fn run_campaign_spec(
     // --- 2. instantiate + estimate every workload, in parallel ---
     let estimated = estimate_all(inv, spec)?;
 
-    // --- 3. submit in spec order (deterministic queueing + metrics) ---
+    // --- 3. degraded-fleet ablations: availability windows first, so
+    //        every submission sees the schedulable capacity it will get
+    apply_outages(&mut sched, spec)?;
+
+    // --- 4. submit in spec order (deterministic queueing + metrics);
+    //        workloads serving as queue templates are expanded into
+    //        their per-user streams instead of running once standalone
+    let templates: BTreeSet<&str> = spec.queues.iter().map(|q| q.workload.as_str()).collect();
     let mut jobs = Vec::with_capacity(estimated.len());
     for (w, est) in &estimated {
+        if templates.contains(w.name()) {
+            continue;
+        }
         sched.submit(w.name(), w.partition(), w.nodes(), est.runtime_s)?;
         w.metrics(&mut mon, sched.now, est);
         jobs.push(job_row(w.as_ref(), est));
     }
+    for q in &spec.queues {
+        let (w, est) = estimated
+            .iter()
+            .find(|(w, _)| w.name() == q.workload)
+            .expect("validated: queue template exists");
+        for i in 0..q.count {
+            sched.submit_request(
+                JobRequest::new(q.job_name(i), w.partition(), w.nodes(), est.runtime_s)
+                    .arriving_at(q.arrival_s(i))
+                    .with_priority(q.priority)
+                    .with_user(&q.user),
+            )?;
+        }
+    }
 
-    // --- 4. drain independent partitions concurrently ---
+    // --- 5. drain independent partitions concurrently ---
     let makespan = sched.drain_parallel();
+
+    // --- 6. per-queue wait/throughput aggregates from the drained state
+    let by_name: BTreeMap<&str, &crate::sched::Job> =
+        sched.jobs.iter().map(|j| (j.name.as_str(), j)).collect();
+    let mut queues = Vec::with_capacity(spec.queues.len());
+    for q in &spec.queues {
+        let mut wait_sum = 0.0f64;
+        let mut wait_max = 0.0f64;
+        let mut end_s = 0.0f64;
+        for i in 0..q.count {
+            let name = q.job_name(i);
+            let j = by_name.get(name.as_str()).expect("queue jobs were submitted");
+            let wait = j.wait_time().unwrap_or(0.0);
+            wait_sum += wait;
+            wait_max = wait_max.max(wait);
+            if let Some(e) = j.end_time() {
+                end_s = end_s.max(e);
+            }
+        }
+        let mean_wait_s = wait_sum / q.count as f64;
+        let prefix = format!("queue.{}.{}", q.user, q.workload);
+        mon.record(&format!("{prefix}.jobs"), makespan, q.count as f64);
+        mon.record(&format!("{prefix}.wait_mean_s"), makespan, mean_wait_s);
+        mon.record(&format!("{prefix}.wait_max_s"), makespan, wait_max);
+        queues.push(QueueOutcome {
+            user: q.user.clone(),
+            workload: q.workload.clone(),
+            jobs: q.count,
+            mean_wait_s,
+            max_wait_s: wait_max,
+            end_s,
+        });
+    }
+
     Ok(CampaignReport {
         jobs,
+        queues,
         makespan_s: makespan,
         hpl_residual: hpl.residual,
         hpl_passed: hpl.passed,
         stream_validated: stream_ok,
         monitor: mon,
     })
+}
+
+/// Feed the spec's expanded outage windows into a scheduler.
+fn apply_outages(sched: &mut Scheduler, spec: &CampaignSpec) -> Result<(), CimoneError> {
+    for o in &spec.outages {
+        for (down, up) in o.windows() {
+            sched.schedule_outage(o.node, down, up)?;
+        }
+    }
+    Ok(())
 }
 
 /// Validate a spec against an inventory without scheduling anything:
@@ -194,8 +297,12 @@ pub fn dry_run_spec(inv: &Inventory, spec: &CampaignSpec) -> Result<Vec<JobRow>,
     spec.validate()?;
     let estimated = estimate_all(inv, spec)?;
     // a scratch scheduler checks partition existence, width and runtime
-    // validity exactly as the real submission path would
+    // validity exactly as the real submission path would — outages
+    // applied first, so a job that cannot fit the degraded fleet is a
+    // dry-run error too (queue templates are fit-checked once here
+    // rather than `count` times)
     let mut sched = inv.scheduler();
+    apply_outages(&mut sched, spec)?;
     let mut rows = Vec::with_capacity(estimated.len());
     for (w, est) in &estimated {
         sched.submit(w.name(), w.partition(), w.nodes(), est.runtime_s)?;
@@ -377,6 +484,89 @@ mod tests {
         assert!(matches!(
             run_campaign_spec(&inv, &spec),
             Err(CimoneError::Spec(ref m)) if m.contains("duplicate")
+        ));
+    }
+
+    #[test]
+    fn queue_sections_expand_into_multi_user_streams() {
+        let inv = monte_cimone_v2();
+        let spec = CampaignSpec::parse(
+            "[campaign]\nvalidate_n = 48\n\n\
+             [[workload]]\nkind = \"hpl\"\nname = \"hpl-1s\"\nplatform = \"mcv2-pioneer\"\n\
+             partition = \"mcv2\"\ncores_per_node = 64\n\n\
+             [[queue]]\nuser = \"alice\"\nworkload = \"hpl-1s\"\ncount = 4\ninterval_s = 10.0\npriority = 1\n\n\
+             [[queue]]\nuser = \"bob\"\nworkload = \"hpl-1s\"\ncount = 2\nstart_s = 5.0\n",
+        )
+        .unwrap();
+        let r = run_campaign_spec(&inv, &spec).unwrap();
+        // the template ran only as stream clones, not standalone
+        assert!(r.jobs.is_empty(), "{:?}", r.jobs);
+        assert_eq!(r.queues.len(), 2);
+        let alice = &r.queues[0];
+        assert_eq!((alice.user.as_str(), alice.jobs), ("alice", 4));
+        assert!(alice.end_s > 0.0 && alice.end_s <= r.makespan_s);
+        assert!(alice.mean_wait_s >= 0.0 && alice.max_wait_s >= alice.mean_wait_s);
+        // the monitor carries the per-queue aggregates
+        assert_eq!(r.monitor.latest("queue.alice.hpl-1s.jobs"), Some(4.0));
+        assert_eq!(r.monitor.latest("queue.bob.hpl-1s.jobs"), Some(2.0));
+        assert_eq!(
+            r.monitor.latest("queue.alice.hpl-1s.wait_mean_s"),
+            Some(alice.mean_wait_s)
+        );
+        // ...and the JSON export carries the queues array
+        let back = Json::parse(&r.to_json().render()).unwrap();
+        let queues = back.get("queues").unwrap().as_arr().unwrap();
+        assert_eq!(queues.len(), 2);
+        assert_eq!(queues[0].get("user").unwrap().as_str(), Some("alice"));
+        assert_eq!(queues[0].get("jobs").unwrap().as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn queue_campaign_is_deterministic() {
+        let inv = monte_cimone_v2();
+        let spec = CampaignSpec::parse(
+            "[campaign]\nvalidate_n = 48\n\n\
+             [[workload]]\nkind = \"stream\"\nname = \"st\"\nplatform = \"mcv2-pioneer\"\n\
+             partition = \"mcv2\"\nthreads = 64\n\n\
+             [[queue]]\nuser = \"u\"\nworkload = \"st\"\ncount = 16\ninterval_s = 3.0\n",
+        )
+        .unwrap();
+        let a = run_campaign_spec(&inv, &spec).unwrap();
+        let b = run_campaign_spec(&inv, &spec).unwrap();
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.queues, b.queues);
+    }
+
+    #[test]
+    fn outages_reshape_the_campaign_and_dry_run_sees_them() {
+        let inv = monte_cimone_v2();
+        let base = "[campaign]\nvalidate_n = 48\n\n\
+             [[workload]]\nkind = \"hpl\"\nname = \"h2\"\nplatform = \"mcv2-pioneer\"\n\
+             partition = \"mcv2\"\nnodes = 2\ncores_per_node = 64\n";
+        let free = run_campaign_spec(&inv, &CampaignSpec::parse(base).unwrap()).unwrap();
+        // nodes 8+9 down from the start: the 2-node job waits for 10/11
+        // or reroutes — either way it still completes
+        let degraded = format!(
+            "{base}\n[[outage]]\nnode = 8\ndown_s = 0.0\n\n[[outage]]\nnode = 9\ndown_s = 0.0\n"
+        );
+        let spec = CampaignSpec::parse(&degraded).unwrap();
+        let r = run_campaign_spec(&inv, &spec).unwrap();
+        assert_eq!(r.jobs.len(), 1);
+        assert!(r.makespan_s >= free.makespan_s);
+        // downing the whole mcv2 partition makes the job unschedulable,
+        // and the dry run reports it with the same typed error
+        let dead = format!(
+            "{base}\n[[outage]]\nnode = 8\ndown_s = 0.0\n\n[[outage]]\nnode = 9\ndown_s = 0.0\n\n\
+             [[outage]]\nnode = 10\ndown_s = 0.0\n\n[[outage]]\nnode = 11\ndown_s = 0.0\n"
+        );
+        let spec = CampaignSpec::parse(&dead).unwrap();
+        assert!(matches!(
+            dry_run_spec(&inv, &spec),
+            Err(CimoneError::PartitionTooSmall { .. })
+        ));
+        assert!(matches!(
+            run_campaign_spec(&inv, &spec),
+            Err(CimoneError::PartitionTooSmall { .. })
         ));
     }
 

@@ -48,9 +48,12 @@ pub mod scenario;
 pub mod sweeps;
 pub mod workload;
 
-pub use campaign::{CampaignSpec, FabricDef, KernelDef, PlatformDef, WorkloadSpec};
+pub use campaign::{
+    CampaignSpec, FabricDef, KernelDef, OutageSpec, PlatformDef, QueueSpec, WorkloadSpec,
+};
 pub use driver::{
     dry_run_spec, run_campaign, run_campaign_on, run_campaign_spec, CampaignReport, JobRow,
+    QueueOutcome,
 };
 pub use experiments::{fig3, fig4, fig5, fig6, fig7, headline};
 pub use scenario::{

@@ -36,13 +36,16 @@
 //! node_counts = [2, 8]       # widens every HPL job (scaling sweeps)
 //! libs = ["openblas-c920", "blis-rvv1-lmul2"]   # any registered kernel id
 //! fabrics = ["gbe-flat", "ten-gbe-flat"]   # machine interconnects
+//! power_caps = [120.0, 250.0]   # per-node W caps (clamp active cores)
+//! nodes_down = [0, 2]        # degraded-fleet ablation: last N nodes out
 //! workloads = ["stream"]     # subset filters: kind, job name, `prefix*`
 //!
 //! [[scenario]]               # explicit named scenario, same knobs
 //! name = "mcv1-full-rack"
 //! platform = "mcv1-u740"
 //! count = 8
-//! # nodes = 4 / fabric = "ten-gbe-flat" also accepted
+//! # nodes = 4 / fabric = "ten-gbe-flat" / power_cap_w = 120.0 /
+//! # nodes_down = 2 also accepted
 //! ```
 //!
 //! Retargeting a scenario onto a platform rewrites every workload's
@@ -62,7 +65,7 @@ use crate::util::config::{Config, Section, Value};
 use crate::util::json::Json;
 use crate::util::table::Table;
 
-use super::campaign::{CampaignSpec, WorkloadSpec};
+use super::campaign::{CampaignSpec, OutageSpec, WorkloadSpec};
 use super::driver::{dry_run_spec, run_campaign_spec, JobRow};
 
 /// The `[matrix]` axes; empty axes do not participate in the product.
@@ -80,6 +83,13 @@ pub struct MatrixAxes {
     pub libs: Vec<String>,
     /// Interconnect fabrics (registry ids or aliases) to run on.
     pub fabrics: Vec<String>,
+    /// Per-node power caps in watts: each scenario clamps every job's
+    /// active cores to what fits under the cap on its platform — the
+    /// operating-point axis behind `cimone sweep --matrix power-cap`.
+    pub power_caps: Vec<f64>,
+    /// Degraded-fleet ablation: take the last N nodes out of service
+    /// from t = 0 (0 = the healthy baseline row).
+    pub nodes_down: Vec<usize>,
     /// Workload subset filters (kind, exact job name, or `prefix*`).
     pub workloads: Vec<String>,
 }
@@ -91,6 +101,8 @@ impl MatrixAxes {
             && self.node_counts.is_empty()
             && self.libs.is_empty()
             && self.fabrics.is_empty()
+            && self.power_caps.is_empty()
+            && self.nodes_down.is_empty()
             && self.workloads.is_empty()
     }
 }
@@ -111,6 +123,11 @@ pub struct ScenarioSpec {
     pub lib: Option<String>,
     /// Run the machine on this interconnect (fabric id or alias).
     pub fabric: Option<String>,
+    /// Per-node power cap in watts: clamp every job's active cores to
+    /// what its platform's affine power model fits under the cap.
+    pub power_cap_w: Option<f64>,
+    /// Take the last N fleet nodes out of service from t = 0.
+    pub nodes_down: Option<usize>,
     /// Keep only workloads matching at least one filter.
     pub workloads: Option<Vec<String>>,
 }
@@ -143,8 +160,17 @@ fn workload_matches(w: &WorkloadSpec, filter: &str) -> bool {
 impl ScenarioSpec {
     /// Parse one `[[scenario]]` section.
     pub fn from_section(sec: &Section) -> Result<ScenarioSpec, CimoneError> {
-        const KNOWN_KEYS: &[&str] =
-            &["name", "platform", "count", "nodes", "lib", "fabric", "workloads"];
+        const KNOWN_KEYS: &[&str] = &[
+            "name",
+            "platform",
+            "count",
+            "nodes",
+            "lib",
+            "fabric",
+            "power_cap_w",
+            "nodes_down",
+            "workloads",
+        ];
         let name = sec
             .get("name")
             .and_then(Value::as_str)
@@ -194,6 +220,23 @@ impl ScenarioSpec {
                 Some(v.as_str().ok_or_else(|| err("`lib` must be a string".into()))?.to_string())
             }
         };
+        let power_cap_w = match sec.get("power_cap_w") {
+            None => None,
+            Some(v) => Some(
+                v.as_float()
+                    .filter(|x| x.is_finite() && *x > 0.0)
+                    .ok_or_else(|| err("`power_cap_w` must be a positive number".into()))?,
+            ),
+        };
+        let nodes_down = match sec.get("nodes_down") {
+            None => None,
+            Some(v) => Some(
+                v.as_int()
+                    .filter(|i| *i >= 0)
+                    .ok_or_else(|| err("`nodes_down` must be a non-negative int".into()))?
+                    as usize,
+            ),
+        };
         let workloads = match sec.get("workloads") {
             None => None,
             Some(Value::Array(items)) => Some(
@@ -208,7 +251,17 @@ impl ScenarioSpec {
             ),
             Some(_) => return Err(err("`workloads` must be an array of strings".into())),
         };
-        Ok(ScenarioSpec { name, platform, count, nodes, lib, fabric, workloads })
+        Ok(ScenarioSpec {
+            name,
+            platform,
+            count,
+            nodes,
+            lib,
+            fabric,
+            power_cap_w,
+            nodes_down,
+            workloads,
+        })
     }
 
     /// Apply the overrides to the base campaign, producing the runnable
@@ -345,6 +398,61 @@ impl ScenarioSpec {
             }
         }
 
+        // the power-cap operating point: clamp every job's active cores
+        // to what its platform's affine model fits under the per-node
+        // cap (the inverse of `PowerModel::node_power`); an infeasible
+        // cap — below one active core — is a load-time error
+        if let Some(cap) = self.power_cap_w {
+            let reg = spec.registry()?;
+            for w in &mut spec.workloads {
+                let p = reg.get(w.platform())?;
+                let fit = crate::cluster::power::max_cores_under_cap(
+                    &p.power,
+                    cap,
+                    p.desc.total_cores(),
+                )
+                .ok_or_else(|| {
+                    err(format!(
+                        "power_cap_w {cap} W is below one active core on `{}` ({:.1} W)",
+                        p.id,
+                        p.power.node_power(1)
+                    ))
+                })?;
+                match w {
+                    WorkloadSpec::Stream { threads, .. } => *threads = (*threads).min(fit),
+                    WorkloadSpec::Hpl { cores_per_node, .. } => {
+                        *cores_per_node = (*cores_per_node).min(fit)
+                    }
+                    WorkloadSpec::BlisAblation { cores, .. } => *cores = (*cores).min(fit),
+                }
+            }
+        }
+
+        // degraded-fleet ablation: mark the last N fleet nodes down from
+        // t = 0 (permanent outages the scheduler routes jobs around)
+        if let Some(down) = self.nodes_down {
+            let total: usize = if spec.fleet.is_empty() {
+                // empty fleet = the default 12-node paper machine
+                crate::cluster::inventory::PAPER_FLEET.iter().map(|(_, c)| *c).sum()
+            } else {
+                spec.fleet.iter().map(|(_, c)| *c).sum()
+            };
+            if down >= total {
+                return Err(err(format!(
+                    "nodes_down {down} would empty the {total}-node fleet"
+                )));
+            }
+            for k in 0..down {
+                spec.outages.push(OutageSpec {
+                    node: total - 1 - k,
+                    down_s: 0.0,
+                    up_s: None,
+                    repeat: 1,
+                    every: 0.0,
+                });
+            }
+        }
+
         spec.validate()?;
         Ok(Scenario { name: self.name.clone(), spec })
     }
@@ -384,6 +492,37 @@ fn usize_list(sec: &Section, key: &str) -> Result<Vec<usize>, CimoneError> {
             .map(|v| {
                 v.as_int().filter(|i| *i > 0).map(|i| i as usize).ok_or_else(|| {
                     CimoneError::Spec(format!("[matrix].{key}: entries must be positive ints"))
+                })
+            })
+            .collect(),
+        Some(_) => Err(CimoneError::Spec(format!("[matrix].{key}: must be an array"))),
+    }
+}
+
+/// Like [`usize_list`] but 0 is allowed (the healthy `nodes_down` row).
+fn down_list(sec: &Section, key: &str) -> Result<Vec<usize>, CimoneError> {
+    match sec.get(key) {
+        None => Ok(Vec::new()),
+        Some(Value::Array(items)) => items
+            .iter()
+            .map(|v| {
+                v.as_int().filter(|i| *i >= 0).map(|i| i as usize).ok_or_else(|| {
+                    CimoneError::Spec(format!("[matrix].{key}: entries must be non-negative ints"))
+                })
+            })
+            .collect(),
+        Some(_) => Err(CimoneError::Spec(format!("[matrix].{key}: must be an array"))),
+    }
+}
+
+fn f64_list(sec: &Section, key: &str) -> Result<Vec<f64>, CimoneError> {
+    match sec.get(key) {
+        None => Ok(Vec::new()),
+        Some(Value::Array(items)) => items
+            .iter()
+            .map(|v| {
+                v.as_float().filter(|x| x.is_finite() && *x > 0.0).ok_or_else(|| {
+                    CimoneError::Spec(format!("[matrix].{key}: entries must be positive numbers"))
                 })
             })
             .collect(),
@@ -500,6 +639,42 @@ impl ScenarioMatrix {
         }
     }
 
+    /// The built-in power-cap operating-point matrix: one HPL job
+    /// crossed over every generation x node count (1, 2) x per-node
+    /// power cap (120 / 180 / 250 W, all above the dual-socket MCv2's
+    /// 111.4 W single-core floor). Each scenario clamps the job's
+    /// active cores to what the platform's affine power model fits
+    /// under the cap, so the Green500-style table directly shows each
+    /// generation's best GF/s-per-W operating point under power
+    /// capping — `cimone sweep --matrix power-cap`.
+    pub fn power_cap() -> ScenarioMatrix {
+        let mut base = CampaignSpec::new();
+        base.validate_n = 48;
+        base.push(WorkloadSpec::Hpl {
+            name: "hpl".into(),
+            partition: "mcv2".into(),
+            nodes: 1,
+            platform: "mcv2-dual".into(),
+            cluster_nodes: 1,
+            cores_per_node: 128, // clamped per platform, then per cap
+            lib: None,
+            fabric: None,
+        });
+        ScenarioMatrix {
+            base,
+            scenarios: Vec::new(),
+            axes: MatrixAxes {
+                platforms: ["mcv1-u740", "mcv2-pioneer", "mcv2-dual", "sg2044", "mcv3"]
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect(),
+                node_counts: vec![1, 2],
+                power_caps: vec![120.0, 180.0, 250.0],
+                ..MatrixAxes::default()
+            },
+        }
+    }
+
     /// How many scenario specs this matrix denotes — the explicit
     /// `[[scenario]]`s plus the full axis product (or the single `base`
     /// fallback) — without materializing any of them.
@@ -514,6 +689,8 @@ impl ScenarioMatrix {
                 * dim(self.axes.node_counts.len())
                 * dim(self.axes.libs.len())
                 * dim(self.axes.fabrics.len())
+                * dim(self.axes.power_caps.len())
+                * dim(self.axes.nodes_down.len())
                 * dim(self.axes.workloads.len())
         };
         let n = self.scenarios.len() + axis;
@@ -548,6 +725,8 @@ impl ScenarioMatrix {
         // decode innermost-first: the last axis varies fastest, exactly
         // like the nested loops the product used to be written as
         let ws = pick(&self.axes.workloads, &mut rem);
+        let d = pick(&self.axes.nodes_down, &mut rem);
+        let c = pick(&self.axes.power_caps, &mut rem);
         let f = pick(&self.axes.fabrics, &mut rem);
         let l = pick(&self.axes.libs, &mut rem);
         let n = pick(&self.axes.node_counts, &mut rem);
@@ -569,6 +748,12 @@ impl ScenarioMatrix {
         if let Some(f) = &f {
             parts.push(f.clone());
         }
+        if let Some(c) = c {
+            parts.push(format!("cap{c}W"));
+        }
+        if let Some(d) = d {
+            parts.push(format!("down{d}"));
+        }
         if let Some(ws) = &ws {
             parts.push(ws.clone());
         }
@@ -579,6 +764,8 @@ impl ScenarioMatrix {
             nodes: n,
             lib: l,
             fabric: f,
+            power_cap_w: c,
+            nodes_down: d,
             workloads: ws.map(|x| vec![x]),
         }
     }
@@ -627,20 +814,28 @@ impl ScenarioMatrix {
             }
         }
         for name in cfg.table_arrays.keys() {
-            if !["platform", "fabric", "kernel", "fleet", "workload", "scenario"]
+            if !["platform", "fabric", "kernel", "fleet", "workload", "queue", "outage", "scenario"]
                 .contains(&name.as_str())
             {
                 return Err(CimoneError::Spec(format!(
                     "unknown section `[[{name}]]` \
-                     (known: platform, fabric, kernel, fleet, workload, scenario)"
+                     (known: platform, fabric, kernel, fleet, workload, queue, outage, scenario)"
                 )));
             }
         }
         let base = CampaignSpec::from_config(cfg)?;
         let mut axes = MatrixAxes::default();
         if let Some(sec) = cfg.section("matrix") {
-            const KNOWN_KEYS: &[&str] =
-                &["platforms", "fleet_sizes", "node_counts", "libs", "fabrics", "workloads"];
+            const KNOWN_KEYS: &[&str] = &[
+                "platforms",
+                "fleet_sizes",
+                "node_counts",
+                "libs",
+                "fabrics",
+                "power_caps",
+                "nodes_down",
+                "workloads",
+            ];
             if let Some(unknown) = sec.keys().find(|k| !KNOWN_KEYS.contains(&k.as_str())) {
                 return Err(CimoneError::Spec(format!(
                     "[matrix]: unknown key `{unknown}` (known: {})",
@@ -651,12 +846,23 @@ impl ScenarioMatrix {
             axes.fleet_sizes = usize_list(sec, "fleet_sizes")?;
             axes.node_counts = usize_list(sec, "node_counts")?;
             axes.fabrics = str_list(sec, "fabrics")?;
+            axes.power_caps = f64_list(sec, "power_caps")?;
+            axes.nodes_down = down_list(sec, "nodes_down")?;
             axes.workloads = str_list(sec, "workloads")?;
             // canonicalize against the base spec's kernel registry so a
-            // bad axis value (or alias) resolves at load time
+            // bad axis value (or alias) resolves at load time, wrapped
+            // as a spec error naming the key it sits under
             let kreg = base.kernel_registry()?;
             for s in str_list(sec, "libs")? {
-                axes.libs.push(kreg.get(&s)?.id.clone());
+                match kreg.get(&s) {
+                    Ok(k) => axes.libs.push(k.id.clone()),
+                    Err(CimoneError::UnknownKernel { name, known }) => {
+                        return Err(CimoneError::Spec(format!(
+                            "[matrix].libs: unknown library `{name}` (registered: {known})"
+                        )))
+                    }
+                    Err(e) => return Err(e),
+                }
             }
         }
         let mut scenarios = Vec::new();
@@ -705,6 +911,16 @@ impl ScenarioMatrix {
             if !self.axes.fabrics.is_empty() {
                 out.push_str(&format!("fabrics = [{}]\n", quote_list(&self.axes.fabrics)));
             }
+            if !self.axes.power_caps.is_empty() {
+                let caps: Vec<String> =
+                    self.axes.power_caps.iter().map(|c| c.to_string()).collect();
+                out.push_str(&format!("power_caps = [{}]\n", caps.join(", ")));
+            }
+            if !self.axes.nodes_down.is_empty() {
+                let downs: Vec<String> =
+                    self.axes.nodes_down.iter().map(|d| d.to_string()).collect();
+                out.push_str(&format!("nodes_down = [{}]\n", downs.join(", ")));
+            }
             if !self.axes.workloads.is_empty() {
                 out.push_str(&format!("workloads = [{}]\n", quote_list(&self.axes.workloads)));
             }
@@ -725,6 +941,12 @@ impl ScenarioMatrix {
             }
             if let Some(f) = &sc.fabric {
                 out.push_str(&format!("fabric = \"{f}\"\n"));
+            }
+            if let Some(c) = sc.power_cap_w {
+                out.push_str(&format!("power_cap_w = {c}\n"));
+            }
+            if let Some(d) = sc.nodes_down {
+                out.push_str(&format!("nodes_down = {d}\n"));
             }
             if let Some(ws) = &sc.workloads {
                 out.push_str(&format!("workloads = [{}]\n", quote_list(ws)));
@@ -1148,14 +1370,16 @@ platforms = [\"mcv1-u740\", \"mcv2-dual\"]
         let m = ScenarioMatrix::parse(text).unwrap();
         assert_eq!(m.axes.platforms.len(), 2);
         assert_eq!(m.expand().unwrap().len(), 2);
-        // a bad library name in the matrix is rejected while loading
+        // a bad library name in the matrix is rejected while loading,
+        // as a spec error naming the `[matrix].libs` key it sits under
         let bad = text.replace(
             "platforms = [\"mcv1-u740\", \"mcv2-dual\"]",
             "libs = [\"mkl\"]",
         );
         assert!(matches!(
             ScenarioMatrix::parse(&bad),
-            Err(CimoneError::UnknownKernel { ref name, .. }) if name == "mkl"
+            Err(CimoneError::Spec(ref msg))
+                if msg.contains("[matrix].libs: unknown library `mkl`")
         ));
         // unknown [matrix] keys are rejected too
         let bad = text.replace("platforms =", "platfroms =");
@@ -1188,6 +1412,8 @@ platforms = [\"mcv1-u740\", \"mcv2-dual\"]
             nodes: None,
             lib: None,
             fabric: Some("ten-gbe-flat".into()),
+            power_cap_w: Some(120.0),
+            nodes_down: Some(2),
             workloads: Some(vec!["hpl".into()]),
         });
         let back = ScenarioMatrix::parse(&m.render()).unwrap();
@@ -1195,6 +1421,9 @@ platforms = [\"mcv1-u740\", \"mcv2-dual\"]
         // the fabric-scaling built-in (fabrics + node_counts axes) too
         let fs = ScenarioMatrix::fabric_scaling();
         assert_eq!(ScenarioMatrix::parse(&fs.render()).unwrap(), fs);
+        // ...and power-cap (power_caps + node_counts axes)
+        let pc = ScenarioMatrix::power_cap();
+        assert_eq!(ScenarioMatrix::parse(&pc.render()).unwrap(), pc);
     }
 
     #[test]
@@ -1257,6 +1486,69 @@ platforms = [\"mcv1-u740\", \"mcv2-dual\"]
     fn blas_tuning_matrix_round_trips_through_render() {
         let m = ScenarioMatrix::blas_tuning();
         assert_eq!(ScenarioMatrix::parse(&m.render()).unwrap(), m);
+    }
+
+    #[test]
+    fn power_cap_matrix_clamps_cores_to_the_operating_point() {
+        let m = ScenarioMatrix::power_cap();
+        let scenarios = m.expand().unwrap();
+        assert_eq!(scenarios.len(), 30, "5 platforms x 2 widths x 3 caps");
+        assert_eq!(scenarios[0].name, "mcv1-u740/1n/cap120W");
+        // the dual-socket MCv2 idles at 110 W: a 120 W cap leaves
+        // floor((120 - 110) / 1.4) = 7 active cores of its 128
+        let capped = scenarios.iter().find(|s| s.name == "mcv2-dual/1n/cap120W").unwrap();
+        match &capped.spec.workloads[0] {
+            WorkloadSpec::Hpl { cores_per_node, .. } => assert_eq!(*cores_per_node, 7),
+            other => panic!("expected Hpl, got {other:?}"),
+        }
+        // the U740's 4 cores fit under every cap (25 + 1.2c W)
+        let v1 = scenarios.iter().find(|s| s.name == "mcv1-u740/1n/cap120W").unwrap();
+        match &v1.spec.workloads[0] {
+            WorkloadSpec::Hpl { cores_per_node, .. } => assert_eq!(*cores_per_node, 4),
+            other => panic!("expected Hpl, got {other:?}"),
+        }
+        // a cap below a platform's one-core floor is a load-time error
+        let mut m = ScenarioMatrix::power_cap();
+        m.axes.power_caps = vec![100.0]; // < the dual-socket 111.4 W floor
+        assert!(matches!(
+            m.expand(),
+            Err(CimoneError::Spec(ref msg)) if msg.contains("below one active core")
+        ));
+    }
+
+    #[test]
+    fn nodes_down_scenarios_take_the_fleet_tail_out_of_service() {
+        let mut m = ScenarioMatrix::generations();
+        m.axes = MatrixAxes::default();
+        m.scenarios = vec![ScenarioSpec {
+            name: "degraded".into(),
+            platform: Some("mcv2-pioneer".into()),
+            count: Some(4),
+            nodes_down: Some(2),
+            ..ScenarioSpec::default()
+        }];
+        let scenarios = m.expand().unwrap();
+        let spec = &scenarios[0].spec;
+        assert_eq!(spec.outages.len(), 2);
+        let nodes: Vec<usize> = spec.outages.iter().map(|o| o.node).collect();
+        assert_eq!(nodes, vec![3, 2], "the fleet tail goes first");
+        assert!(spec.outages.iter().all(|o| o.down_s == 0.0 && o.up_s.is_none()));
+        // taking every node down is rejected at load time
+        m.scenarios[0].nodes_down = Some(4);
+        assert!(matches!(
+            m.expand(),
+            Err(CimoneError::Spec(ref msg)) if msg.contains("would empty the 4-node fleet")
+        ));
+        // on the default paper fleet the tail node is id 11 (mcv2)
+        let mut m = ScenarioMatrix::generations();
+        m.axes = MatrixAxes::default();
+        m.scenarios = vec![ScenarioSpec {
+            name: "paper-degraded".into(),
+            nodes_down: Some(1),
+            ..ScenarioSpec::default()
+        }];
+        let scenarios = m.expand().unwrap();
+        assert_eq!(scenarios[0].spec.outages[0].node, 11);
     }
 
     #[test]
@@ -1401,6 +1693,7 @@ count = 1
             ScenarioMatrix::generations(),
             ScenarioMatrix::fabric_scaling(),
             ScenarioMatrix::blas_tuning(),
+            ScenarioMatrix::power_cap(),
         ] {
             let expanded = m.expand().unwrap();
             assert_eq!(expanded.len(), m.spec_count());
@@ -1422,7 +1715,7 @@ count = 1
         };
         assert_eq!(bare.spec_count(), 1);
         assert_eq!(bare.spec_at(0).name, "base");
-        // full six-axis decode: last axis fastest, like the old loops
+        // full eight-axis decode: last axis fastest, like the old loops
         let m = ScenarioMatrix {
             base: CampaignSpec::new(),
             scenarios: Vec::new(),
@@ -1432,20 +1725,30 @@ count = 1
                 node_counts: vec![2, 4],
                 libs: vec!["x".into()],
                 fabrics: vec!["f1".into(), "f2".into()],
+                power_caps: vec![100.0],
+                nodes_down: vec![0, 1],
                 workloads: vec!["w".into()],
             },
         };
-        assert_eq!(m.spec_count(), 8);
-        let names: Vec<String> = (0..8).map(|i| m.spec_at(i).name).collect();
+        assert_eq!(m.spec_count(), 16);
+        let names: Vec<String> = (0..16).map(|i| m.spec_at(i).name).collect();
         let want = [
-            "a/n1/2n/x/f1/w",
-            "a/n1/2n/x/f2/w",
-            "a/n1/4n/x/f1/w",
-            "a/n1/4n/x/f2/w",
-            "b/n1/2n/x/f1/w",
-            "b/n1/2n/x/f2/w",
-            "b/n1/4n/x/f1/w",
-            "b/n1/4n/x/f2/w",
+            "a/n1/2n/x/f1/cap100W/down0/w",
+            "a/n1/2n/x/f1/cap100W/down1/w",
+            "a/n1/2n/x/f2/cap100W/down0/w",
+            "a/n1/2n/x/f2/cap100W/down1/w",
+            "a/n1/4n/x/f1/cap100W/down0/w",
+            "a/n1/4n/x/f1/cap100W/down1/w",
+            "a/n1/4n/x/f2/cap100W/down0/w",
+            "a/n1/4n/x/f2/cap100W/down1/w",
+            "b/n1/2n/x/f1/cap100W/down0/w",
+            "b/n1/2n/x/f1/cap100W/down1/w",
+            "b/n1/2n/x/f2/cap100W/down0/w",
+            "b/n1/2n/x/f2/cap100W/down1/w",
+            "b/n1/4n/x/f1/cap100W/down0/w",
+            "b/n1/4n/x/f1/cap100W/down1/w",
+            "b/n1/4n/x/f2/cap100W/down0/w",
+            "b/n1/4n/x/f2/cap100W/down1/w",
         ];
         assert_eq!(names, want);
     }

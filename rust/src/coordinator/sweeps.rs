@@ -196,6 +196,47 @@ pub fn blas_tuning_table() -> Table {
     t
 }
 
+/// The power-cap operating-point table: the built-in
+/// [`ScenarioMatrix::power_cap`] matrix, dry-run and pivoted so each
+/// generation is a row of GF/s-per-W per (node count, per-node cap)
+/// operating point plus the best one — the Green500 question asked
+/// under power capping, answered per generation.
+pub fn power_cap_table() -> Table {
+    let matrix = ScenarioMatrix::power_cap();
+    let report = dry_run_matrix(&matrix).expect("the built-in power-cap matrix is valid");
+    let points: Vec<(usize, f64)> = matrix
+        .axes
+        .node_counts
+        .iter()
+        .flat_map(|&n| matrix.axes.power_caps.iter().map(move |&c| (n, c)))
+        .collect();
+    let mut headers = vec!["platform".to_string()];
+    headers.extend(points.iter().map(|(n, c)| format!("{n}n@{c}W GF/s/W")));
+    headers.push("best".to_string());
+    let mut t = Table::new(headers);
+    for p in &matrix.axes.platforms {
+        // a missing name means the built-in matrix and this pivot
+        // drifted apart — a programmer error, never a zero row
+        let eff = |&(n, c): &(usize, f64)| -> f64 {
+            report
+                .outcome(&format!("{p}/{n}n/cap{c}W"))
+                .unwrap_or_else(|| {
+                    panic!("power-cap scenario `{p}/{n}n/cap{c}W` missing from the report")
+                })
+                .gflops_per_w
+        };
+        let best = points
+            .iter()
+            .max_by(|a, b| eff(a).total_cmp(&eff(b)))
+            .expect("the operating-point grid is non-empty");
+        let mut row = vec![p.clone()];
+        row.extend(points.iter().map(|pt| format!("{:.2}", eff(pt))));
+        row.push(format!("{}n@{}W", best.0, best.1));
+        t.row(row);
+    }
+    t
+}
+
 /// The generation comparison every "down the road" table derives from:
 /// the built-in [`ScenarioMatrix::generations`] matrix, dry-run (pure
 /// modelling, nothing scheduled).
@@ -282,6 +323,7 @@ pub fn render_all() -> String {
          == Extension: NB sensitivity (N=57600, 2 nodes, 1 GbE) ==\n{}\n\n\
          == Extension: LMUL ablation (why the paper stops at 4) ==\n{}\n\n\
          == Extension: kernel tuning, SG2042 vs SG2044 (blas-tuning matrix) ==\n{}\n\n\
+         == Extension: power-cap operating points, GF/s-per-W (power-cap matrix) ==\n{}\n\n\
          == Extension: energy to solution (HPL N=57600) ==\n{}\n\n\
          == Extension: down the road (MCv1 -> MCv2 -> SG2044 -> MCv3) ==\n{}",
         grid_cores_by_library(&[1, 4, 16, 64, 128]).render(),
@@ -290,6 +332,7 @@ pub fn render_all() -> String {
         nb_sensitivity(57_600, &[64, 128, 192, 256, 384]).render(),
         lmul_ablation().render(),
         blas_tuning_table().render(),
+        power_cap_table().render(),
         energy_table(&report).render(),
         generation_table(&report).render()
     )
@@ -388,6 +431,19 @@ mod tests {
         assert!(s.contains("mcv2-pioneer") && s.contains("sg2044"), "{s}");
         assert!(s.contains("blis-lmul1 GF/s") && s.contains("blis-rvv1-lmul2 GF/s"), "{s}");
         assert_eq!(t.n_rows(), 2);
+    }
+
+    #[test]
+    fn power_cap_table_names_an_operating_point_per_generation() {
+        let t = power_cap_table();
+        let s = t.render();
+        assert_eq!(t.n_rows(), 5, "one row per generation");
+        assert!(s.contains("1n@120W GF/s/W") && s.contains("2n@250W GF/s/W"), "{s}");
+        // every generation row names its best operating point
+        for p in ["mcv1-u740", "mcv2-pioneer", "mcv2-dual", "sg2044", "mcv3"] {
+            let line = s.lines().find(|l| l.contains(p)).unwrap_or_else(|| panic!("{p}: {s}"));
+            assert!(line.matches("n@").count() >= 1, "{line}");
+        }
     }
 
     #[test]

@@ -75,6 +75,11 @@ pub enum CimoneError {
     #[error("job `{job}` has invalid runtime {runtime_s}s (must be finite and > 0)")]
     InvalidRuntime { job: String, runtime_s: f64 },
 
+    /// A job was submitted with an arrival time in the past or not a
+    /// finite number (the event queue only moves forward).
+    #[error("job `{job}` has invalid arrival time {arrival_s}s (must be finite and >= now)")]
+    InvalidArrival { job: String, arrival_s: f64 },
+
     /// LU factorization requires a square system.
     #[error("lu_blocked requires a square matrix, got {rows}x{cols}")]
     NonSquareMatrix { rows: usize, cols: usize },

@@ -24,6 +24,9 @@
 //!         [--matrix blas-tuning]     ... or the kernel-tuning sweep: the
 //!                                        Fig 2 LMUL uplift on SG2042 vs the
 //!                                        native-RVV 1.0 winner on SG2044
+//!         [--matrix power-cap]       ... or the power-cap sweep: node count
+//!                                        x per-node W cap per generation,
+//!                                        best GF/s-per-W operating point
 //!         [--top-k 4] [--shard 64]   ... streaming knobs: keep baseline +
 //!                                        best k rows; scenarios per batch
 //! cimone bench [--quick] [--json]    estimation-stack perf suite: simulated
@@ -43,9 +46,13 @@
 //! Campaign specs name platforms by registry id or alias (`mcv2-pioneer`,
 //! `sg2044`, ...), may define their own via `[[platform]]` sections, and
 //! pick the simulated machine with `[[fleet]]` entries — including its
-//! interconnect (`fabric =` keys, `[[fabric]]` overrides). Sweep specs
-//! add `[matrix]` axes and `[[scenario]]` sections that expand one base
-//! campaign into many named scenarios compared against the first.
+//! interconnect (`fabric =` keys, `[[fabric]]` overrides). `[[queue]]`
+//! sections expand a workload into a per-user job stream (arrival times,
+//! priorities), and `[[outage]]` sections take nodes out of service over
+//! time windows (link flaps via `repeat` / `every`). Sweep specs add
+//! `[matrix]` axes and `[[scenario]]` sections that expand one base
+//! campaign into many named scenarios compared against the first —
+//! including `power_caps` / `nodes_down` operating-point axes.
 
 use cimone::arch::PlatformRegistry;
 use cimone::coordinator::scenario::{self, ScenarioMatrix};
@@ -196,10 +203,11 @@ fn run(args: &Args) -> Result<(), CimoneError> {
                 (None, Some("generations")) | (None, None) => ScenarioMatrix::generations(),
                 (None, Some("fabric-scaling")) => ScenarioMatrix::fabric_scaling(),
                 (None, Some("blas-tuning")) => ScenarioMatrix::blas_tuning(),
+                (None, Some("power-cap")) => ScenarioMatrix::power_cap(),
                 (None, Some(other)) => {
                     return Err(CimoneError::Cli(format!(
                         "unknown built-in matrix `{other}` \
-                         (generations | fabric-scaling | blas-tuning)"
+                         (generations | fabric-scaling | blas-tuning | power-cap)"
                     )));
                 }
             };

@@ -4,10 +4,16 @@
 pub type JobId = u64;
 
 /// Lifecycle of a job.
+///
+/// The end time is computed **once**, when the job starts, and stored
+/// exactly; every later comparison (event ordering, completion matching)
+/// uses the stored bits. Recomputing `start + runtime` at match time and
+/// comparing within an absolute epsilon breaks down at large simulated
+/// times, where 1e-9 is far below the spacing of representable doubles.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum JobState {
     Pending,
-    Running { start: f64 },
+    Running { start: f64, end: f64 },
     Completed { start: f64, end: f64 },
 }
 
@@ -20,7 +26,13 @@ pub struct Job {
     pub nodes: usize,
     /// Simulated wall-clock the job occupies its nodes for.
     pub runtime_s: f64,
+    /// Arrival time: the job enters the queue at this simulated time.
     pub submit_s: f64,
+    /// Higher priorities are considered first; ties break on arrival
+    /// time, then submission order. The default is 0.
+    pub priority: i64,
+    /// Owning user for multi-tenant accounting (empty for system jobs).
+    pub user: String,
     pub state: JobState,
     /// Node indices allocated (filled when running).
     pub allocated: Vec<usize>,
@@ -44,6 +56,8 @@ impl Job {
             nodes,
             runtime_s,
             submit_s,
+            priority: 0,
+            user: String::new(),
             state: JobState::Pending,
             allocated: vec![],
         }
@@ -53,10 +67,10 @@ impl Job {
         matches!(self.state, JobState::Pending)
     }
 
+    /// Exact stored end time (never recomputed from `start + runtime`).
     pub fn end_time(&self) -> Option<f64> {
         match self.state {
-            JobState::Running { start } => Some(start + self.runtime_s),
-            JobState::Completed { end, .. } => Some(end),
+            JobState::Running { end, .. } | JobState::Completed { end, .. } => Some(end),
             JobState::Pending => None,
         }
     }
@@ -64,7 +78,7 @@ impl Job {
     /// Queue wait time, defined once the job has started.
     pub fn wait_time(&self) -> Option<f64> {
         match self.state {
-            JobState::Running { start } | JobState::Completed { start, .. } => {
+            JobState::Running { start, .. } | JobState::Completed { start, .. } => {
                 Some(start - self.submit_s)
             }
             JobState::Pending => None,
@@ -81,11 +95,18 @@ mod tests {
         let mut j = Job::new(1, "hpl", "mcv2", 2, 100.0, 5.0);
         assert!(j.is_pending());
         assert_eq!(j.end_time(), None);
-        j.state = JobState::Running { start: 10.0 };
+        j.state = JobState::Running { start: 10.0, end: 110.0 };
         assert_eq!(j.end_time(), Some(110.0));
         assert_eq!(j.wait_time(), Some(5.0));
         j.state = JobState::Completed { start: 10.0, end: 110.0 };
         assert_eq!(j.end_time(), Some(110.0));
+    }
+
+    #[test]
+    fn defaults_are_system_priority_zero() {
+        let j = Job::new(2, "x", "p", 1, 1.0, 0.0);
+        assert_eq!(j.priority, 0);
+        assert!(j.user.is_empty());
     }
 
     #[test]

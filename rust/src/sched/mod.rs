@@ -1,10 +1,12 @@
 //! SLURM-like batch scheduler substrate.
 //!
 //! Monte Cimone exposes its MCv1 and MCv2 machines as SLURM partitions;
-//! the multi-node experiments (Fig 5) submit jobs against them. This
-//! module implements the orchestration layer: partitions, a job queue
-//! with FIFO + conservative-backfill scheduling over a simulated-time
-//! event loop, and node allocation tracking.
+//! the multi-node experiments (Fig 5) submit jobs against them, and the
+//! production-shaped scenarios drain multi-user queues under outages.
+//! This module implements the orchestration layer: partitions with
+//! availability state, a priority job queue with FIFO + EASY-backfill
+//! scheduling driven by an exact-time event heap (completions, arrivals,
+//! node availability windows), and node allocation tracking.
 
 pub mod allocation;
 pub mod job;
@@ -13,4 +15,4 @@ pub mod scheduler;
 
 pub use job::{Job, JobId, JobState};
 pub use partition::Partition;
-pub use scheduler::Scheduler;
+pub use scheduler::{JobRequest, Scheduler};

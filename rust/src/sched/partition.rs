@@ -5,6 +5,9 @@
 enum SlotState {
     Idle,
     Busy,
+    /// Busy, but scheduled to go [`Down`](SlotState::Down) when its job
+    /// releases it (graceful drain: the running job finishes first).
+    Draining,
     /// Drained by the operator / failed (failure injection for tests and
     /// resilience experiments) — never allocated until marked up.
     Down,
@@ -26,13 +29,21 @@ impl Partition {
         Partition { name: name.into(), node_ids, state: vec![SlotState::Idle; n] }
     }
 
-    /// Schedulable size (up nodes only).
+    /// Schedulable size: nodes that are up and not on their way down.
     pub fn size(&self) -> usize {
-        self.state.iter().filter(|s| **s != SlotState::Down).count()
+        self.state
+            .iter()
+            .filter(|s| !matches!(s, SlotState::Down | SlotState::Draining))
+            .count()
     }
 
     pub fn idle_count(&self) -> usize {
         self.state.iter().filter(|s| **s == SlotState::Idle).count()
+    }
+
+    /// Does this partition own global node `id`?
+    pub fn contains(&self, id: usize) -> bool {
+        self.node_ids.contains(&id)
     }
 
     /// Mark a node down (failure injection / drain). Busy nodes finish
@@ -49,15 +60,50 @@ impl Partition {
         }
     }
 
-    /// Return a downed node to service.
+    /// Take a node out of service, draining gracefully: an idle node goes
+    /// down immediately, a busy node finishes its job first and goes down
+    /// on release. Returns false if the id is not in this partition.
+    pub fn request_down(&mut self, id: usize) -> bool {
+        match self.node_ids.iter().position(|n| *n == id) {
+            Some(slot) => {
+                match self.state[slot] {
+                    SlotState::Idle => self.state[slot] = SlotState::Down,
+                    SlotState::Busy => self.state[slot] = SlotState::Draining,
+                    SlotState::Draining | SlotState::Down => {}
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Return a downed (or draining) node to service.
     pub fn mark_up(&mut self, id: usize) -> bool {
         match self.node_ids.iter().position(|n| *n == id) {
             Some(slot) if self.state[slot] == SlotState::Down => {
                 self.state[slot] = SlotState::Idle;
                 true
             }
+            Some(slot) if self.state[slot] == SlotState::Draining => {
+                // drain cancelled before the job finished: stays busy
+                self.state[slot] = SlotState::Busy;
+                true
+            }
             _ => false,
         }
+    }
+
+    /// Of the given allocated node ids, how many will return to the idle
+    /// pool when released (i.e. are not draining toward `Down`)?
+    pub fn returning_count(&self, ids: &[usize]) -> usize {
+        ids.iter()
+            .filter(|id| {
+                self.node_ids
+                    .iter()
+                    .position(|n| n == *id)
+                    .is_some_and(|slot| self.state[slot] == SlotState::Busy)
+            })
+            .count()
     }
 
     /// Try to allocate `n` nodes; returns their global ids.
@@ -78,12 +124,14 @@ impl Partition {
         Some(out)
     }
 
-    /// Release nodes by global id.
+    /// Release nodes by global id. Draining nodes go down instead of idle.
     pub fn release(&mut self, ids: &[usize]) {
         for id in ids {
             if let Some(slot) = self.node_ids.iter().position(|n| n == id) {
-                if self.state[slot] == SlotState::Busy {
-                    self.state[slot] = SlotState::Idle;
+                match self.state[slot] {
+                    SlotState::Busy => self.state[slot] = SlotState::Idle,
+                    SlotState::Draining => self.state[slot] = SlotState::Down,
+                    SlotState::Idle | SlotState::Down => {}
                 }
             }
         }
@@ -141,5 +189,39 @@ mod tests {
         p.mark_down(1);
         p.release(&[1]); // stray release of a downed node
         assert_eq!(p.idle_count(), 0);
+    }
+
+    #[test]
+    fn request_down_drains_busy_node_gracefully() {
+        let mut p = Partition::new("x", vec![1, 2]);
+        let got = p.allocate(1).unwrap();
+        assert!(p.request_down(got[0]));
+        // still occupied by its job, but no longer schedulable
+        assert_eq!(p.size(), 1);
+        assert_eq!(p.returning_count(&got), 0);
+        p.release(&got);
+        // released straight into Down, never back to the idle pool
+        assert_eq!(p.idle_count(), 1);
+        assert_eq!(p.size(), 1);
+        assert!(p.mark_up(got[0]));
+        assert_eq!(p.size(), 2);
+    }
+
+    #[test]
+    fn mark_up_cancels_pending_drain() {
+        let mut p = Partition::new("x", vec![1]);
+        let got = p.allocate(1).unwrap();
+        assert!(p.request_down(1));
+        assert!(p.mark_up(1), "drain can be cancelled while the job runs");
+        assert_eq!(p.returning_count(&got), 1);
+        p.release(&got);
+        assert_eq!(p.idle_count(), 1);
+    }
+
+    #[test]
+    fn contains_checks_membership() {
+        let p = Partition::new("x", vec![3, 5]);
+        assert!(p.contains(5));
+        assert!(!p.contains(4));
     }
 }

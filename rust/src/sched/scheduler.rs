@@ -1,40 +1,236 @@
-//! FIFO + conservative-backfill scheduler over simulated time.
+//! Event-driven FIFO + EASY-backfill scheduler over simulated time.
 //!
 //! Semantics match SLURM's default behaviour closely enough for the
-//! experiments: jobs are considered in submit order; the head-of-queue
-//! job reserves the earliest time enough nodes free up; later jobs may
-//! backfill onto idle nodes only if they finish before that reservation.
+//! experiments: arrived jobs are considered in queue order (priority
+//! desc, arrival asc, submission order); the head-of-queue job reserves
+//! the earliest time enough nodes free up; later jobs may backfill onto
+//! idle nodes only if they finish no later than that reservation.
+//!
+//! Time is advanced by a binary-heap event queue keyed on **exact stored
+//! times**: a job's end is computed once at start (`now + runtime`) and
+//! every later comparison uses those bits verbatim — no epsilon scans, no
+//! O(jobs) rescan per completion. This is what keeps week- and year-long
+//! simulated horizons exact: an absolute `1e-9` tolerance is far below
+//! the spacing of representable doubles near `1e9` seconds, so epsilon
+//! matching silently changes behaviour with the magnitude of `now`.
+//!
+//! Besides completions the queue carries job arrivals (future
+//! `submit_s`) and node availability windows
+//! ([`Scheduler::schedule_outage`]): degraded-fleet experiments mark
+//! nodes unavailable for `[down, up)` windows and the queue reschedules
+//! around them, busy nodes draining gracefully.
 //!
 //! Partitions never share nodes, so their event streams are independent;
 //! [`Scheduler::drain_parallel`] exploits this to drain each partition on
 //! its own OS thread while producing bit-identical simulated-time
 //! accounting to the serial [`Scheduler::drain`].
 
-use std::collections::BTreeMap;
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BTreeMap, BinaryHeap};
 
 use super::job::{Job, JobId, JobState};
 use super::partition::Partition;
 use crate::error::CimoneError;
 
-/// The scheduler: owns partitions and the job queue.
+/// A scheduler event: something that changes cluster or queue state at an
+/// exact simulated time.
+#[derive(Debug, Clone, Copy)]
+enum EventKind {
+    /// A running job (by index into `Scheduler::jobs`) reaches its stored
+    /// end time and releases its nodes.
+    Completion { job: usize },
+    /// A downed node returns to service.
+    NodeUp { node: usize },
+    /// A node leaves service (graceful drain if currently busy).
+    NodeDown { node: usize },
+    /// A job (by index) enters the queue at its arrival time.
+    Arrival { job: usize },
+}
+
+impl EventKind {
+    /// Processing order within one instant: completions release nodes
+    /// first, then availability changes, then arrivals — and a single
+    /// scheduling pass runs after the whole batch.
+    fn rank(&self) -> (u8, usize) {
+        match *self {
+            EventKind::Completion { job } => (0, job),
+            EventKind::NodeUp { node } => (1, node),
+            EventKind::NodeDown { node } => (2, node),
+            EventKind::Arrival { job } => (3, job),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    time: f64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // total_cmp gives a total order even for pathological floats, so
+        // a poisoned time can never panic the heap
+        self.time.total_cmp(&other.time).then_with(|| self.kind.rank().cmp(&other.kind.rank()))
+    }
+}
+
+/// A job submission: resource request plus queue metadata. Defaults model
+/// the legacy API (arrives now, priority 0, system user).
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    pub name: String,
+    pub partition: String,
+    pub nodes: usize,
+    pub runtime_s: f64,
+    /// Arrival time; `None` means "at the current simulated time".
+    pub arrival_s: Option<f64>,
+    pub priority: i64,
+    pub user: String,
+}
+
+impl JobRequest {
+    pub fn new(
+        name: impl Into<String>,
+        partition: impl Into<String>,
+        nodes: usize,
+        runtime_s: f64,
+    ) -> JobRequest {
+        JobRequest {
+            name: name.into(),
+            partition: partition.into(),
+            nodes,
+            runtime_s,
+            arrival_s: None,
+            priority: 0,
+            user: String::new(),
+        }
+    }
+
+    /// Set a (future) arrival time.
+    pub fn arriving_at(mut self, t: f64) -> JobRequest {
+        self.arrival_s = Some(t);
+        self
+    }
+
+    pub fn with_priority(mut self, priority: i64) -> JobRequest {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_user(mut self, user: impl Into<String>) -> JobRequest {
+        self.user = user.into();
+        self
+    }
+}
+
+/// Queue order: priority desc, then arrival asc, then submission order.
+/// With default priorities and same-instant arrivals this degrades to
+/// exact submission order, which is what keeps the paper campaign
+/// bit-for-bit against the pre-event-queue scheduler.
+fn queue_cmp(a: &Job, b: &Job) -> Ordering {
+    b.priority
+        .cmp(&a.priority)
+        .then(a.submit_s.total_cmp(&b.submit_s))
+        .then(a.id.cmp(&b.id))
+}
+
+/// The scheduler: owns partitions, the job queue, and the event queue.
 pub struct Scheduler {
     pub partitions: BTreeMap<String, Partition>,
     pub jobs: Vec<Job>,
     pub now: f64,
     next_id: JobId,
+    /// Min-heap of future events keyed on exact stored times.
+    events: BinaryHeap<Reverse<Event>>,
+    /// Indices of `Pending` jobs in queue order (see [`queue_cmp`]).
+    pending: Vec<usize>,
+    /// Running job indices per partition (for reservation lookups).
+    running: BTreeMap<String, Vec<usize>>,
+    /// Jobs not yet completed; lets `drain` stop without scanning.
+    incomplete: usize,
 }
 
 impl Scheduler {
     pub fn new(partitions: Vec<Partition>) -> Scheduler {
-        Scheduler {
-            partitions: partitions.into_iter().map(|p| (p.name.clone(), p)).collect(),
-            jobs: Vec::new(),
-            now: 0.0,
-            next_id: 1,
-        }
+        Scheduler::from_parts(partitions, Vec::new(), 0.0, 1, Vec::new())
     }
 
-    /// Submit a job at the current simulated time; returns its id.
+    /// Assemble a scheduler from parts, deriving the queue/event state
+    /// from the job states. Used by [`new`](Self::new) and by the
+    /// split/merge in [`drain_parallel`](Self::drain_parallel).
+    fn from_parts(
+        partitions: Vec<Partition>,
+        jobs: Vec<Job>,
+        now: f64,
+        next_id: JobId,
+        node_events: Vec<Event>,
+    ) -> Scheduler {
+        let mut s = Scheduler {
+            partitions: partitions.into_iter().map(|p| (p.name.clone(), p)).collect(),
+            jobs,
+            now,
+            next_id,
+            events: BinaryHeap::new(),
+            pending: Vec::new(),
+            running: BTreeMap::new(),
+            incomplete: 0,
+        };
+        s.rebuild_job_state();
+        for ev in node_events {
+            s.events.push(Reverse(ev));
+        }
+        s
+    }
+
+    /// Rebuild `events`/`pending`/`running`/`incomplete` from the job
+    /// states. Job state is the single source of truth, so splitting or
+    /// merging the queue cannot desynchronise the derived structures.
+    fn rebuild_job_state(&mut self) {
+        self.events.clear();
+        self.pending.clear();
+        self.running.clear();
+        self.incomplete = 0;
+        for idx in 0..self.jobs.len() {
+            match self.jobs[idx].state {
+                JobState::Pending => {
+                    self.incomplete += 1;
+                    self.pending.push(idx);
+                    let arrival = self.jobs[idx].submit_s;
+                    if arrival > self.now {
+                        self.events
+                            .push(Reverse(Event { time: arrival, kind: EventKind::Arrival { job: idx } }));
+                    }
+                }
+                JobState::Running { end, .. } => {
+                    self.incomplete += 1;
+                    let part = self.jobs[idx].partition.clone();
+                    self.running.entry(part).or_default().push(idx);
+                    self.events
+                        .push(Reverse(Event { time: end, kind: EventKind::Completion { job: idx } }));
+                }
+                JobState::Completed { .. } => {}
+            }
+        }
+        let jobs = &self.jobs;
+        self.pending.sort_by(|&a, &b| queue_cmp(&jobs[a], &jobs[b]));
+    }
+
+    /// Submit a job arriving at the current simulated time; returns its id.
     pub fn submit(
         &mut self,
         name: &str,
@@ -42,61 +238,135 @@ impl Scheduler {
         nodes: usize,
         runtime_s: f64,
     ) -> Result<JobId, CimoneError> {
-        let p = self
-            .partitions
-            .get(partition)
-            .ok_or_else(|| CimoneError::UnknownPartition(partition.to_string()))?;
-        if nodes > p.size() {
+        self.submit_request(JobRequest::new(name, partition, nodes, runtime_s))
+    }
+
+    /// Submit a job with full queue metadata (arrival time, priority,
+    /// owning user); returns its id.
+    pub fn submit_request(&mut self, req: JobRequest) -> Result<JobId, CimoneError> {
+        let have = match self.partitions.get(&req.partition) {
+            Some(p) => p.size(),
+            None => return Err(CimoneError::UnknownPartition(req.partition.clone())),
+        };
+        if req.nodes > have {
             return Err(CimoneError::PartitionTooSmall {
-                job: name.to_string(),
-                partition: partition.to_string(),
-                want: nodes,
-                have: p.size(),
+                job: req.name.clone(),
+                partition: req.partition.clone(),
+                want: req.nodes,
+                have,
             });
         }
-        // an infinite runtime would make `advance_to` spin forever (its
-        // completion check degrades to NaN comparisons); a non-positive
-        // one would rewind simulated time
-        if !runtime_s.is_finite() || runtime_s <= 0.0 {
-            return Err(CimoneError::InvalidRuntime { job: name.to_string(), runtime_s });
+        // an infinite runtime would leave a completion event that never
+        // fires; a non-positive one would rewind simulated time
+        if !req.runtime_s.is_finite() || req.runtime_s <= 0.0 {
+            return Err(CimoneError::InvalidRuntime {
+                job: req.name.clone(),
+                runtime_s: req.runtime_s,
+            });
+        }
+        let arrival = req.arrival_s.unwrap_or(self.now);
+        if !arrival.is_finite() || arrival < self.now {
+            return Err(CimoneError::InvalidArrival { job: req.name.clone(), arrival_s: arrival });
         }
         let id = self.next_id;
         self.next_id += 1;
-        self.jobs.push(Job::new(id, name, partition, nodes, runtime_s, self.now));
-        self.try_start();
+        let mut job = Job::new(id, req.name, req.partition, req.nodes, req.runtime_s, arrival);
+        job.priority = req.priority;
+        job.user = req.user;
+        let idx = self.jobs.len();
+        self.jobs.push(job);
+        self.incomplete += 1;
+        self.insert_pending(idx);
+        if arrival > self.now {
+            self.events.push(Reverse(Event { time: arrival, kind: EventKind::Arrival { job: idx } }));
+        } else {
+            self.try_start();
+        }
         Ok(id)
     }
 
-    /// Earliest running-job end time, if any.
-    fn next_completion(&self) -> Option<f64> {
-        self.jobs
-            .iter()
-            .filter_map(|j| match j.state {
-                JobState::Running { .. } => j.end_time(),
-                _ => None,
-            })
-            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    /// Insert a pending job index keeping `pending` in queue order.
+    fn insert_pending(&mut self, idx: usize) {
+        let jobs = &self.jobs;
+        let pos = match self.pending.binary_search_by(|&i| queue_cmp(&jobs[i], &jobs[idx])) {
+            Ok(p) | Err(p) => p,
+        };
+        self.pending.insert(pos, idx);
     }
 
-    /// Earliest time `extra` nodes will be free in `partition`, given the
+    /// Take `node` out of service during `[down_at, up_at)`; `up_at =
+    /// None` downs it for good. Boundaries at or before `now` apply
+    /// immediately; future ones become events. A busy node drains
+    /// gracefully: its running job finishes before the node goes down.
+    pub fn schedule_outage(
+        &mut self,
+        node: usize,
+        down_at: f64,
+        up_at: Option<f64>,
+    ) -> Result<(), CimoneError> {
+        if !self.partitions.values().any(|p| p.contains(node)) {
+            return Err(CimoneError::Spec(format!("outage references unknown node id {node}")));
+        }
+        if !down_at.is_finite() || down_at < 0.0 {
+            return Err(CimoneError::Spec(format!(
+                "outage down time must be finite and >= 0, got {down_at}"
+            )));
+        }
+        if let Some(u) = up_at {
+            if !u.is_finite() || u <= down_at {
+                return Err(CimoneError::Spec(format!(
+                    "outage up time must be finite and after its down time, got [{down_at}, {u})"
+                )));
+            }
+        }
+        let down = Event { time: down_at, kind: EventKind::NodeDown { node } };
+        if down_at <= self.now {
+            self.apply(down);
+        } else {
+            self.events.push(Reverse(down));
+        }
+        if let Some(u) = up_at {
+            let up = Event { time: u, kind: EventKind::NodeUp { node } };
+            if u <= self.now {
+                self.apply(up);
+            } else {
+                self.events.push(Reverse(up));
+            }
+        }
+        self.try_start();
+        Ok(())
+    }
+
+    /// Earliest time `want` nodes will be free in `partition`, given the
     /// currently running jobs (the head job's EASY-backfill reservation).
+    /// Draining nodes never return to the pool, so they do not count; a
+    /// head that cannot be satisfied by running-job releases (e.g. during
+    /// an outage window) gets an infinite reservation and waits for the
+    /// next availability event.
     fn reservation_time(&self, partition: &str, want: usize) -> f64 {
         let part = &self.partitions[partition];
         let mut idle = part.idle_count();
         if idle >= want {
             return self.now;
         }
-        // accumulate releases in end-time order
+        // accumulate releases in stored-end order
         let mut ends: Vec<(f64, usize)> = self
-            .jobs
-            .iter()
-            .filter(|j| j.partition == partition)
-            .filter_map(|j| match j.state {
-                JobState::Running { .. } => j.end_time().map(|e| (e, j.nodes)),
-                _ => None,
+            .running
+            .get(partition)
+            .map(|idxs| {
+                idxs.iter()
+                    .map(|&i| {
+                        let j = &self.jobs[i];
+                        let end = match j.state {
+                            JobState::Running { end, .. } => end,
+                            _ => unreachable!("running set holds only running jobs"),
+                        };
+                        (end, part.returning_count(&j.allocated))
+                    })
+                    .collect()
             })
-            .collect();
-        ends.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            .unwrap_or_default();
+        ends.sort_by(|a, b| a.0.total_cmp(&b.0));
         for (end, nodes) in ends {
             idle += nodes;
             if idle >= want {
@@ -108,72 +378,137 @@ impl Scheduler {
 
     /// Start every job that can start right now: FIFO head first, then
     /// EASY backfill (later jobs may jump the queue only if they finish
-    /// before the head job's reservation time).
+    /// no later than the head job's reservation time — exactly, with no
+    /// slack: a backfill ending any amount past the reservation would
+    /// delay the head).
     fn try_start(&mut self) {
-        // per-partition head-of-line reservation: (demand, reserved time)
+        // per-partition head-of-line reservation: (partition, reserved time)
         let mut hol: BTreeMap<String, f64> = BTreeMap::new();
         let now = self.now;
-        for idx in 0..self.jobs.len() {
-            if !self.jobs[idx].is_pending() {
+        let mut i = 0;
+        while i < self.pending.len() {
+            let idx = self.pending[i];
+            if self.jobs[idx].submit_s > now {
+                // not yet arrived: invisible to the queue until its
+                // arrival event fires
+                i += 1;
                 continue;
             }
-            let (part_name, want, runtime) = (
-                self.jobs[idx].partition.clone(),
-                self.jobs[idx].nodes,
-                self.jobs[idx].runtime_s,
-            );
+            let (part_name, want, runtime) = {
+                let j = &self.jobs[idx];
+                (j.partition.clone(), j.nodes, j.runtime_s)
+            };
             let head_reservation = hol.get(&part_name).copied();
             let idle = self.partitions[&part_name].idle_count();
             let can_start = match head_reservation {
                 None => idle >= want,
-                // backfill window: must complete before the head's start
-                Some(t_res) => idle >= want && now + runtime <= t_res + 1e-9,
+                // backfill window: must complete by the head's start
+                Some(t_res) => idle >= want && now + runtime <= t_res,
             };
             if can_start {
-                let part = self.partitions.get_mut(&part_name).unwrap();
-                let alloc = part.allocate(want).expect("idle_count said yes");
-                let job = &mut self.jobs[idx];
-                job.allocated = alloc;
-                job.state = JobState::Running { start: now };
-            } else if head_reservation.is_none() {
-                let t = self.reservation_time(&part_name, want);
-                hol.insert(part_name, t);
+                let alloc = {
+                    let part = self.partitions.get_mut(&part_name).unwrap();
+                    part.allocate(want).expect("idle_count said yes")
+                };
+                let end = now + runtime;
+                {
+                    let job = &mut self.jobs[idx];
+                    job.allocated = alloc;
+                    job.state = JobState::Running { start: now, end };
+                }
+                self.events.push(Reverse(Event { time: end, kind: EventKind::Completion { job: idx } }));
+                self.running.entry(part_name).or_default().push(idx);
+                self.pending.remove(i);
+            } else {
+                if head_reservation.is_none() {
+                    let t = self.reservation_time(&part_name, want);
+                    hol.insert(part_name, t);
+                }
+                i += 1;
             }
         }
     }
 
-    /// Advance simulated time to `t`, completing and starting jobs.
+    /// Apply one event's state change (no scheduling pass; the caller
+    /// runs [`try_start`](Self::try_start) once per same-instant batch).
+    fn apply(&mut self, ev: Event) {
+        match ev.kind {
+            EventKind::Completion { job: idx } => {
+                let (part, alloc) = {
+                    let j = &mut self.jobs[idx];
+                    match j.state {
+                        JobState::Running { start, end } => {
+                            j.state = JobState::Completed { start, end };
+                        }
+                        _ => unreachable!("completion event for a non-running job"),
+                    }
+                    (j.partition.clone(), j.allocated.clone())
+                };
+                self.partitions.get_mut(&part).unwrap().release(&alloc);
+                if let Some(v) = self.running.get_mut(&part) {
+                    if let Some(pos) = v.iter().position(|&i| i == idx) {
+                        v.swap_remove(pos);
+                    }
+                }
+                self.incomplete -= 1;
+            }
+            EventKind::NodeUp { node } => {
+                for p in self.partitions.values_mut() {
+                    if p.mark_up(node) {
+                        break;
+                    }
+                }
+            }
+            EventKind::NodeDown { node } => {
+                for p in self.partitions.values_mut() {
+                    if p.request_down(node) {
+                        break;
+                    }
+                }
+            }
+            // the job is pending with submit_s == now; the batch's
+            // try_start pass will consider it
+            EventKind::Arrival { .. } => {}
+        }
+    }
+
+    /// Advance simulated time to `t`, firing every event up to and
+    /// including `t`. Events at one instant (exact bit-equal times) are
+    /// applied as a batch — completions first, then availability
+    /// changes, then arrivals — followed by a single scheduling pass.
     pub fn advance_to(&mut self, t: f64) {
         assert!(t >= self.now);
-        loop {
-            match self.next_completion() {
-                Some(end) if end <= t => {
-                    self.now = end;
-                    // complete everything ending at `end`
-                    let mut released: Vec<(String, Vec<usize>)> = vec![];
-                    for j in self.jobs.iter_mut() {
-                        if let JobState::Running { start } = j.state {
-                            if (start + j.runtime_s - end).abs() < 1e-9 {
-                                j.state = JobState::Completed { start, end };
-                                released.push((j.partition.clone(), j.allocated.clone()));
-                            }
-                        }
-                    }
-                    for (part, ids) in released {
-                        self.partitions.get_mut(&part).unwrap().release(&ids);
-                    }
-                    self.try_start();
-                }
-                _ => break,
+        while let Some(&Reverse(ev)) = self.events.peek() {
+            if ev.time > t {
+                break;
             }
+            let t_ev = ev.time;
+            debug_assert!(t_ev >= self.now, "event queue may not rewind time");
+            self.now = t_ev;
+            while let Some(&Reverse(next)) = self.events.peek() {
+                // exact equality: times are stored once, never recomputed
+                if next.time != t_ev {
+                    break;
+                }
+                let Reverse(next) = self.events.pop().unwrap();
+                self.apply(next);
+            }
+            self.try_start();
         }
         self.now = t;
     }
 
-    /// Run until all jobs complete; returns the makespan.
+    /// Run until every job completes (or nothing further can complete);
+    /// returns the makespan.
     pub fn drain(&mut self) -> f64 {
-        while let Some(end) = self.next_completion() {
-            self.advance_to(end);
+        while self.incomplete > 0 {
+            let Some(&Reverse(ev)) = self.events.peek() else {
+                // pending jobs that no remaining event can unblock (e.g.
+                // nodes downed for good): stop, leaving them pending
+                break;
+            };
+            let t = ev.time;
+            self.advance_to(t);
         }
         self.now
     }
@@ -182,31 +517,44 @@ impl Scheduler {
     ///
     /// Correctness relies on partitions being disjoint node sets: a job's
     /// start/backfill decisions depend only on its own partition's state
-    /// and on the relative submit order within that partition, both of
+    /// and on the relative queue order within that partition, both of
     /// which are preserved when the queue is split. The result — per-job
-    /// start/end times and the overall makespan — is therefore identical
-    /// to the serial [`drain`](Self::drain), while independent workload
-    /// streams retire in parallel wall-clock time. (One femtosecond-scale
-    /// caveat: the serial drain's `advance_to` snaps completions in
-    /// *other* partitions that land within its 1e-9 tie epsilon onto the
-    /// same instant; the split drain keeps each partition's exact times.)
+    /// start/end times and the overall makespan — is identical to the
+    /// serial [`drain`](Self::drain): with event times stored exactly,
+    /// neither path has any cross-partition tie epsilon to disagree on.
     pub fn drain_parallel(&mut self) -> f64 {
         if self.partitions.len() <= 1 {
             return self.drain();
         }
         let start_now = self.now;
         let partitions = std::mem::take(&mut self.partitions);
+        let all_jobs = std::mem::take(&mut self.jobs);
+        let events = std::mem::take(&mut self.events);
+        self.pending.clear();
+        self.running.clear();
+        self.incomplete = 0;
+
         let mut by_part: BTreeMap<String, Vec<Job>> = BTreeMap::new();
-        for job in std::mem::take(&mut self.jobs) {
+        for job in all_jobs {
             by_part.entry(job.partition.clone()).or_default().push(job);
         }
+        // node availability events follow the partition owning the node;
+        // job events are rebuilt per sub-scheduler from job state
+        let mut node_events: BTreeMap<String, Vec<Event>> = BTreeMap::new();
+        for Reverse(ev) in events.into_vec() {
+            if let EventKind::NodeUp { node } | EventKind::NodeDown { node } = ev.kind {
+                if let Some(p) = partitions.values().find(|p| p.contains(node)) {
+                    node_events.entry(p.name.clone()).or_default().push(ev);
+                }
+            }
+        }
+        let next_id = self.next_id;
         let mut subs: Vec<Scheduler> = partitions
             .into_iter()
-            .map(|(name, part)| Scheduler {
-                jobs: by_part.remove(&name).unwrap_or_default(),
-                partitions: BTreeMap::from([(name, part)]),
-                now: start_now,
-                next_id: self.next_id,
+            .map(|(name, part)| {
+                let jobs = by_part.remove(&name).unwrap_or_default();
+                let evs = node_events.remove(&name).unwrap_or_default();
+                Scheduler::from_parts(vec![part], jobs, start_now, next_id, evs)
             })
             .collect();
 
@@ -219,13 +567,31 @@ impl Scheduler {
         });
 
         let mut makespan = start_now;
+        let mut leftover: Vec<Event> = Vec::new();
         for sub in subs {
-            makespan = makespan.max(sub.now);
-            self.partitions.extend(sub.partitions);
-            self.jobs.extend(sub.jobs);
+            let Scheduler { partitions: sub_parts, jobs: sub_jobs, events: sub_events, now, .. } =
+                sub;
+            makespan = makespan.max(now);
+            self.partitions.extend(sub_parts);
+            self.jobs.extend(sub_jobs);
+            for Reverse(ev) in sub_events.into_vec() {
+                if matches!(ev.kind, EventKind::NodeUp { .. } | EventKind::NodeDown { .. }) {
+                    leftover.push(ev);
+                }
+            }
         }
         self.jobs.sort_by_key(|j| j.id);
         self.now = makespan;
+        self.rebuild_job_state();
+        // sub-schedulers stop at their last completion, so an availability
+        // boundary may still lie at or before the merged makespan
+        for ev in leftover {
+            if ev.time <= self.now {
+                self.apply(ev);
+            } else {
+                self.events.push(Reverse(ev));
+            }
+        }
         makespan
     }
 
@@ -259,7 +625,9 @@ mod tests {
         let b = s.submit("b", "mcv2", 4, 50.0).unwrap();
         assert!(s.job(b).unwrap().is_pending());
         s.advance_to(50.0);
-        assert!(matches!(s.job(b).unwrap().state, JobState::Running { start } if start == 50.0));
+        assert!(
+            matches!(s.job(b).unwrap().state, JobState::Running { start, .. } if start == 50.0)
+        );
         assert!(matches!(s.job(a).unwrap().state, JobState::Completed { .. }));
     }
 
@@ -279,8 +647,116 @@ mod tests {
         // head starts exactly when the big job drains
         s.advance_to(100.0);
         assert!(
-            matches!(s.job(blocked).unwrap().state, JobState::Running { start } if start == 100.0)
+            matches!(s.job(blocked).unwrap().state, JobState::Running { start, .. } if start == 100.0)
         );
+    }
+
+    #[test]
+    fn backfill_ending_exactly_at_reservation_is_safe() {
+        let mut s = two_partition_sched();
+        s.submit("wall", "mcv2", 3, 100.0).unwrap(); // 3 of 4 busy until t=100
+        let head = s.submit("head", "mcv2", 4, 10.0).unwrap(); // reserves t=100
+        // regression: under the old `+ 1e-9` slack this job backfilled and
+        // pushed the head's start past its reservation
+        let over = s.submit("over-by-epsilon", "mcv2", 1, 100.0 + 1e-10).unwrap();
+        assert!(
+            s.job(over).unwrap().is_pending(),
+            "a backfill ending past the reservation must not start"
+        );
+        // ending *exactly* at the reservation is safe: it releases its
+        // node at the same instant the head starts
+        let exact = s.submit("exact-fit", "mcv2", 1, 100.0).unwrap();
+        assert!(matches!(s.job(exact).unwrap().state, JobState::Running { .. }));
+        s.drain();
+        assert_eq!(s.job(exact).unwrap().end_time(), Some(100.0));
+        assert_eq!(s.job(head).unwrap().wait_time(), Some(100.0), "head must start at exactly 100");
+        // the shut-out backfill runs after the head
+        assert!(
+            matches!(s.job(over).unwrap().state, JobState::Completed { start, .. } if start == 110.0)
+        );
+    }
+
+    #[test]
+    fn completions_match_exactly_at_large_times() {
+        // regression for the old epsilon completion scan: at simulated
+        // times past 1e9 s an absolute 1e-9 tolerance is below one ULP,
+        // so behaviour silently depended on the magnitude of `now`;
+        // stored ends make completion matching exact at every scale
+        let mut s = two_partition_sched();
+        let era = 3.0e9; // ~95 simulated years
+        let a = s.submit("era", "mcv2", 4, era).unwrap();
+        let b = s.submit("b", "mcv2", 2, 10.0).unwrap();
+        let c = s.submit("c", "mcv2", 2, 10.5).unwrap();
+        let makespan = s.drain();
+        assert_eq!(s.job(a).unwrap().end_time(), Some(era));
+        assert_eq!(s.job(b).unwrap().state, JobState::Completed { start: era, end: era + 10.0 });
+        assert_eq!(s.job(c).unwrap().state, JobState::Completed { start: era, end: era + 10.5 });
+        assert_eq!(makespan, era + 10.5);
+    }
+
+    #[test]
+    fn near_coincident_completions_keep_exact_distinct_ends() {
+        // the old scan snapped completions within 1e-9 onto one instant,
+        // recording the wrong end for the later job
+        let mut s = two_partition_sched();
+        let a = s.submit("a", "mcv1", 4, 10.0).unwrap();
+        let b = s.submit("b", "mcv1", 4, 10.0 + 1e-10).unwrap();
+        s.drain();
+        assert_eq!(s.job(a).unwrap().end_time(), Some(10.0));
+        assert_eq!(s.job(b).unwrap().end_time(), Some(10.0 + 1e-10));
+    }
+
+    #[test]
+    fn pathological_queue_cannot_panic_drain() {
+        // runtimes spanning 24 orders of magnitude: every comparison goes
+        // through total_cmp (events, reservations), so the drain orders
+        // them without panicking
+        let mut s = two_partition_sched();
+        for (i, rt) in [1e-12, 1e12, 5e-7, 3.5, 1e9, 2.0e-3].iter().enumerate() {
+            s.submit(&format!("p{i}"), "mcv2", 1 + i % 4, *rt).unwrap();
+        }
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 0.0] {
+            assert!(s.submit("bad", "mcv2", 1, bad).is_err());
+        }
+        let makespan = s.drain_parallel();
+        assert!(makespan.is_finite());
+        assert!(s.jobs.iter().all(|j| matches!(j.state, JobState::Completed { .. })));
+    }
+
+    #[test]
+    fn future_arrivals_enter_queue_at_their_time() {
+        let mut s = two_partition_sched();
+        let a = s
+            .submit_request(JobRequest::new("later", "mcv2", 2, 10.0).arriving_at(50.0))
+            .unwrap();
+        assert!(s.job(a).unwrap().is_pending());
+        s.advance_to(49.0);
+        assert!(s.job(a).unwrap().is_pending(), "must not start before it arrives");
+        s.advance_to(50.0);
+        assert!(
+            matches!(s.job(a).unwrap().state, JobState::Running { start, .. } if start == 50.0)
+        );
+        // waits count from arrival, not from the submit call
+        assert_eq!(s.job(a).unwrap().wait_time(), Some(0.0));
+        // arrivals in the past are rejected
+        assert!(matches!(
+            s.submit_request(JobRequest::new("late", "mcv2", 1, 1.0).arriving_at(10.0)),
+            Err(CimoneError::InvalidArrival { .. })
+        ));
+    }
+
+    #[test]
+    fn higher_priority_jobs_jump_the_queue() {
+        let mut s = two_partition_sched();
+        s.submit("occupier", "mcv2", 4, 10.0).unwrap();
+        let lo = s.submit_request(JobRequest::new("lo", "mcv2", 4, 10.0)).unwrap();
+        let hi = s
+            .submit_request(JobRequest::new("hi", "mcv2", 4, 10.0).with_priority(10).with_user("root"))
+            .unwrap();
+        s.drain();
+        assert_eq!(s.job(hi).unwrap().wait_time(), Some(10.0), "high priority runs first");
+        assert_eq!(s.job(lo).unwrap().wait_time(), Some(20.0));
+        assert_eq!(s.job(hi).unwrap().user, "root");
     }
 
     #[test]
@@ -318,7 +794,8 @@ mod tests {
 
     #[test]
     fn invalid_runtimes_rejected_not_hung() {
-        // inf would spin advance_to forever; <= 0 would rewind time
+        // inf would leave a completion event that never fires; <= 0 would
+        // rewind time
         let mut s = two_partition_sched();
         for bad in [0.0, -5.0, f64::INFINITY, f64::NAN] {
             assert!(
@@ -387,5 +864,48 @@ mod tests {
         s.drain();
         assert_eq!(s.job(a).unwrap().wait_time(), Some(0.0));
         assert_eq!(s.job(b).unwrap().wait_time(), Some(20.0));
+    }
+
+    #[test]
+    fn immediate_outage_shrinks_schedulable_size() {
+        let mut s = two_partition_sched();
+        s.schedule_outage(11, 0.0, None).unwrap();
+        assert!(s.submit("wide", "mcv2", 4, 1.0).is_err(), "only 3 nodes remain up");
+        assert!(s.submit("fits", "mcv2", 3, 1.0).is_ok());
+        // unknown nodes and inverted windows are typed spec errors
+        assert!(s.schedule_outage(99, 0.0, None).is_err());
+        assert!(s.schedule_outage(8, 5.0, Some(5.0)).is_err());
+    }
+
+    #[test]
+    fn outage_window_reroutes_jobs_and_restores_capacity() {
+        let mut s = two_partition_sched();
+        // take half of mcv1 out during [5, 30)
+        for n in 4..8 {
+            s.schedule_outage(n, 5.0, Some(30.0)).unwrap();
+        }
+        s.submit("a", "mcv1", 4, 10.0).unwrap();
+        let wide = s.submit("wide", "mcv1", 8, 10.0).unwrap();
+        let makespan = s.drain();
+        // the wide job needs every node: it must wait out the window
+        assert!(
+            matches!(s.job(wide).unwrap().state, JobState::Completed { start, .. } if start == 30.0)
+        );
+        assert_eq!(makespan, 40.0);
+    }
+
+    #[test]
+    fn outage_on_busy_node_drains_gracefully() {
+        let mut s = two_partition_sched();
+        let a = s.submit("a", "mcv2", 4, 10.0).unwrap();
+        // node 8 is busy with `a`: the outage lets the job finish first
+        s.schedule_outage(8, 2.0, None).unwrap();
+        let b = s.submit("b", "mcv2", 4, 5.0).unwrap();
+        let makespan = s.drain();
+        assert_eq!(s.job(a).unwrap().end_time(), Some(10.0), "running job is not preempted");
+        assert_eq!(makespan, 10.0);
+        // with node 8 gone for good, the 4-wide follow-up can never run
+        assert!(s.job(b).unwrap().is_pending());
+        assert_eq!(s.partitions["mcv2"].size(), 3);
     }
 }

@@ -368,6 +368,62 @@ fn unknown_axis_values_in_spec_files_are_typed_errors() {
 }
 
 // ---------------------------------------------------------------------
+// golden regression: the power-cap operating-point matrix
+// ---------------------------------------------------------------------
+
+#[test]
+fn golden_power_cap_matrix_names_each_generations_operating_point() {
+    let report = dry_run_matrix(&ScenarioMatrix::power_cap()).unwrap();
+    assert_eq!(report.scenarios.len(), 30, "5 generations x 2 node counts x 3 caps");
+    assert_eq!(report.total, 30);
+
+    // the cap in every scenario name binds: the active-core clamp keeps
+    // the affine power model at or under the cap
+    for o in &report.scenarios {
+        let cap: f64 = o
+            .name
+            .rsplit("/cap")
+            .next()
+            .and_then(|s| s.strip_suffix('W'))
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("no cap in `{}`", o.name));
+        assert!(o.avg_node_w <= cap + 1e-9, "{}: {} W over the {cap} W cap", o.name, o.avg_node_w);
+        assert!(o.hpl_gflops > 0.0 && o.gflops_per_w > 0.0, "{}", o.name);
+    }
+
+    // each generation has six candidate points and a best GF/s-per-W
+    // operating point among them; loosening the cap never costs FLOP/s
+    for p in ["mcv1-u740", "mcv2-pioneer", "mcv2-dual", "sg2044", "mcv3"] {
+        let points: Vec<_> =
+            report.scenarios.iter().filter(|o| o.name.starts_with(&format!("{p}/"))).collect();
+        assert_eq!(points.len(), 6, "{p}");
+        let best = points.iter().max_by(|a, b| a.gflops_per_w.total_cmp(&b.gflops_per_w)).unwrap();
+        assert!(points.iter().all(|o| o.gflops_per_w <= best.gflops_per_w), "{p}");
+        let gf = |name: String| report.outcome(&name).unwrap().hpl_gflops;
+        assert!(
+            gf(format!("{p}/1n/cap120W")) <= gf(format!("{p}/1n/cap250W")) + 1e-9,
+            "{p}: a tighter cap must not raise FLOP/s"
+        );
+    }
+
+    // the tight cap visibly bites on the hungriest node: MCv2-dual idles
+    // at 110 W, so 120 W leaves room for exactly 7 active cores...
+    let dual = report.outcome("mcv2-dual/1n/cap120W").unwrap();
+    assert!((dual.avg_node_w - (110.0 + 1.4 * 7.0)).abs() < 1e-9, "{}", dual.avg_node_w);
+    let open = report.outcome("mcv2-dual/1n/cap250W").unwrap();
+    assert!(dual.hpl_gflops < open.hpl_gflops, "the 120 W clamp must cost FLOP/s");
+    // ...while MCv1's four little cores fit under every cap, so its rows
+    // only differ in name
+    let m1 = |c: &str| report.outcome(&format!("mcv1-u740/1n/cap{c}W")).unwrap();
+    assert_eq!(m1("120").hpl_gflops.to_bits(), m1("250").hpl_gflops.to_bits());
+    assert_eq!(m1("120").avg_node_w.to_bits(), m1("180").avg_node_w.to_bits());
+
+    // bit-identical rerun: the operating points cannot wander
+    let rerun = dry_run_matrix(&ScenarioMatrix::power_cap()).unwrap();
+    assert_eq!(rerun, report);
+}
+
+// ---------------------------------------------------------------------
 // equivalence properties
 // ---------------------------------------------------------------------
 

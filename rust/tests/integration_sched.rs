@@ -1,0 +1,145 @@
+//! Scheduler equivalence and safety properties, end to end on the
+//! paper's 12-node machine: the serial [`Scheduler::drain`] and the
+//! concurrent per-partition [`Scheduler::drain_parallel`] must agree
+//! bit for bit on seeded random multi-user queues, a partition must
+//! never be oversubscribed, no job may start before it arrives — and a
+//! 10,000-job production queue drains deterministically.
+
+use cimone::cluster::monte_cimone_v2;
+use cimone::sched::{JobRequest, JobState, Scheduler};
+use cimone::util::rng::Rng;
+
+fn paper_scheduler() -> Scheduler {
+    monte_cimone_v2().scheduler()
+}
+
+/// A seeded random multi-user queue over both paper partitions: mixed
+/// widths, runtimes, arrival times, priorities and users — enough
+/// contention that queueing and backfill both engage.
+fn random_queue(seed: u64, n_jobs: usize) -> Vec<JobRequest> {
+    let mut rng = Rng::new(seed);
+    let mut reqs = Vec::with_capacity(n_jobs);
+    for i in 0..n_jobs {
+        let (partition, cap) = if rng.below(2) == 0 { ("mcv1", 8) } else { ("mcv2", 4) };
+        let nodes = rng.range_usize(1, cap + 1);
+        let runtime_s = rng.range_f64(1.0, 500.0);
+        let arrival_s = rng.range_f64(0.0, 300.0);
+        let priority = rng.below(3) as i64;
+        let user = format!("user{}", rng.below(4));
+        reqs.push(
+            JobRequest::new(format!("job-{i}"), partition, nodes, runtime_s)
+                .arriving_at(arrival_s)
+                .with_priority(priority)
+                .with_user(user),
+        );
+    }
+    reqs
+}
+
+/// Exact `(name, start, end)` of every job; panics on a job that never
+/// completed (a drain must finish everything).
+fn completed_spans(s: &Scheduler) -> Vec<(String, f64, f64)> {
+    s.jobs
+        .iter()
+        .map(|j| match j.state {
+            JobState::Completed { start, end } => (j.name.clone(), start, end),
+            other => panic!("job `{}` did not complete: {other:?}", j.name),
+        })
+        .collect()
+}
+
+#[test]
+fn serial_and_parallel_drains_agree_bit_for_bit() {
+    for seed in 0..20u64 {
+        let mut serial = paper_scheduler();
+        for r in random_queue(seed, 60) {
+            serial.submit_request(r).unwrap();
+        }
+        let mut parallel = paper_scheduler();
+        for r in random_queue(seed, 60) {
+            parallel.submit_request(r).unwrap();
+        }
+        let m_serial = serial.drain();
+        let m_parallel = parallel.drain_parallel();
+        // exact bits: with end times stored once, there is no epsilon
+        // for the two drain orders to disagree on
+        assert_eq!(m_serial.to_bits(), m_parallel.to_bits(), "seed {seed}");
+        assert_eq!(completed_spans(&serial), completed_spans(&parallel), "seed {seed}");
+    }
+}
+
+#[test]
+fn no_oversubscription_and_no_early_starts() {
+    for seed in [1u64, 7, 13] {
+        let mut s = paper_scheduler();
+        for r in random_queue(seed, 80) {
+            s.submit_request(r).unwrap();
+        }
+        s.drain();
+        for j in &s.jobs {
+            let JobState::Completed { start, .. } = j.state else {
+                panic!("job `{}` did not complete", j.name);
+            };
+            assert!(start >= j.submit_s, "`{}` started {start} before arrival {}", j.name, j.submit_s);
+        }
+        // at every job start, concurrently running jobs of the same
+        // partition can never exceed its node count
+        for (partition, cap) in [("mcv1", 8usize), ("mcv2", 4)] {
+            let spans: Vec<(f64, f64, usize)> = s
+                .jobs
+                .iter()
+                .filter(|j| j.partition == partition)
+                .map(|j| match j.state {
+                    JobState::Completed { start, end } => (start, end, j.nodes),
+                    _ => unreachable!(),
+                })
+                .collect();
+            for &(t, _, _) in &spans {
+                let used: usize = spans
+                    .iter()
+                    .filter(|(start, end, _)| *start <= t && t < *end)
+                    .map(|(_, _, nodes)| nodes)
+                    .sum();
+                assert!(
+                    used <= cap,
+                    "seed {seed}: partition `{partition}` holds {used} > {cap} nodes at t={t}"
+                );
+            }
+        }
+    }
+}
+
+/// The production-scale acceptance case: 10,000 jobs across four users,
+/// drained by the event-driven scheduler, with a bit-identical rerun.
+#[test]
+fn ten_thousand_job_queue_drains_deterministically() {
+    let build = || {
+        let mut s = paper_scheduler();
+        let mut rng = Rng::new(99);
+        for i in 0..10_000usize {
+            let user = ["alice", "bob", "carol", "dave"][rng.below(4) as usize];
+            let partition = if rng.below(4) == 0 { "mcv2" } else { "mcv1" };
+            let nodes = rng.range_usize(1, 3);
+            let runtime_s = rng.range_f64(5.0, 50.0);
+            let arrival_s = rng.range_f64(0.0, 40_000.0);
+            s.submit_request(
+                JobRequest::new(format!("{user}/job.{i}"), partition, nodes, runtime_s)
+                    .arriving_at(arrival_s)
+                    .with_priority(rng.below(2) as i64)
+                    .with_user(user),
+            )
+            .unwrap();
+        }
+        s
+    };
+    let mut a = build();
+    let makespan = a.drain_parallel();
+    assert_eq!(a.jobs.len(), 10_000);
+    let spans = completed_spans(&a); // panics if anything is left behind
+    let latest_arrival = a.jobs.iter().map(|j| j.submit_s).fold(0.0, f64::max);
+    assert!(makespan.is_finite() && makespan >= latest_arrival);
+
+    let mut b = build();
+    assert_eq!(b.drain_parallel().to_bits(), makespan.to_bits());
+    assert_eq!(completed_spans(&b), spans);
+}
