@@ -1,0 +1,83 @@
+//! CI smoke for the mixed-precision sweep: dry-run the built-in
+//! `precision` matrix, validate its `--json` output through
+//! `Json::parse`, and check the HPL-MxP punchline — SEW=32 strictly
+//! above FP64 HPL on every vector generation, but under the 2x
+//! lane-packing bound. Then load the `examples/sweep_precision.toml`
+//! spec (hpl + hpl-mxp + stream + spmv) end to end and hold the SpMV
+//! rows to the triad bandwidth roof. Optionally validates an externally
+//! produced JSON file (e.g. piped from
+//! `cimone sweep --matrix precision --dry-run --json`) passed as the
+//! first argument.
+//!
+//! ```text
+//! cargo run --example precision_smoke [-- precision.json]
+//! ```
+
+use cimone::coordinator::scenario::{dry_run_matrix, ScenarioMatrix};
+use cimone::mem::stream_model::SPMV_STREAM_FACTOR;
+use cimone::util::json::Json;
+
+fn main() -> cimone::Result<()> {
+    let matrix = ScenarioMatrix::precision();
+    let report = dry_run_matrix(&matrix)?;
+
+    // the JSON export must round-trip through our own parser
+    let text = report.to_json().render();
+    let parsed = Json::parse(&text).map_err(anyhow::Error::msg)?;
+    let rows = parsed
+        .get("scenarios")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing `scenarios` array"))?;
+    assert_eq!(rows.len(), 4, "expected one scenario per vector generation");
+
+    for row in rows {
+        let name = row.get("name").and_then(Json::as_str).unwrap_or("?").to_string();
+        let jobs = row
+            .get("jobs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("{name}: missing `jobs` array"))?;
+        let headline = |job: &str| -> f64 {
+            jobs.iter()
+                .find(|j| j.get("name").and_then(Json::as_str) == Some(job))
+                .and_then(|j| j.get("headline").and_then(Json::as_f64))
+                .unwrap_or(0.0)
+        };
+        let (hpl, mxp) = (headline("hpl"), headline("hpl-mxp"));
+        assert!(hpl > 0.0, "{name}: no FP64 HPL row");
+        assert!(mxp > hpl, "{name}: MxP {mxp:.1} GF/s !> HPL {hpl:.1} GF/s");
+        assert!(mxp < 2.5 * hpl, "{name}: MxP {mxp:.1} GF/s breaks the lane-packing bound");
+        println!("{name}: HPL {hpl:.1} GF/s -> MxP {mxp:.1} GF/s ({:.2}x)", mxp / hpl);
+    }
+
+    // the spec-file path: hpl + hpl-mxp + spmv end to end, with every
+    // SpMV projection at or under the platform's triad bandwidth roof
+    let spec = ScenarioMatrix::load("examples/sweep_precision.toml")?;
+    let spec_report = dry_run_matrix(&spec)?;
+    assert_eq!(spec_report.scenarios.len(), 4);
+    for o in &spec_report.scenarios {
+        let spmv = o
+            .jobs
+            .iter()
+            .find(|j| j.name == "spmv")
+            .ok_or_else(|| anyhow::anyhow!("{}: missing spmv job", o.name))?;
+        let roof = o.stream_gbs * SPMV_STREAM_FACTOR / 6.0;
+        assert!(
+            spmv.headline > 0.0 && spmv.headline <= roof,
+            "{}: SpMV {:.2} GF/s outside (0, {roof:.2}] triad roof",
+            o.name,
+            spmv.headline
+        );
+    }
+
+    // validate an externally produced JSON file when given one
+    if let Some(path) = std::env::args().nth(1) {
+        let external = std::fs::read_to_string(&path)?;
+        let parsed = Json::parse(&external).map_err(anyhow::Error::msg)?;
+        let n = parsed.get("scenarios").and_then(Json::as_arr).map(|a| a.len()).unwrap_or(0);
+        assert!(n > 0, "{path}: no scenarios in the sweep JSON");
+        println!("{path}: valid sweep JSON with {n} scenarios");
+    }
+
+    println!("precision smoke OK: MxP above HPL on all 4 vector generations, SpMV under the roof");
+    Ok(())
+}

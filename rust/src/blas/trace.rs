@@ -64,7 +64,7 @@ impl CallTrace {
             .iter()
             .filter(|c| matches!(c, BlasCall::Dgemm { .. }))
             .copied()
-            .max_by(|a, b| a.flops().partial_cmp(&b.flops()).unwrap())
+            .max_by(|a, b| a.flops().total_cmp(&b.flops()))
     }
 }
 

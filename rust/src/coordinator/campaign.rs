@@ -43,7 +43,7 @@
 //! # fabric = "gbe-8to1"    # machine interconnect (same as [campaign])
 //!
 //! [[workload]]
-//! kind = "stream"          # stream | hpl | blis-ablation
+//! kind = "stream"          # stream | hpl | hpl-mxp | spmv | blis-ablation
 //! name = "stream-sg2044"
 //! platform = "sg2044"      # registry id or alias (`node` also accepted)
 //! partition = "sg2044"
@@ -60,6 +60,23 @@
 //! # cluster_nodes = 2      # defaults to `nodes`
 //! # lib = "openblas-c920"  # defaults to the platform's library
 //! # fabric = "ten-gbe-flat" # defaults to the machine's fabric
+//!
+//! [[workload]]
+//! kind = "hpl-mxp"         # mixed-precision HPL: the kernel rebuilt at
+//! name = "mxp-sg2044"      #   SEW=32 (same optional keys as kind = "hpl")
+//! platform = "sg2044"
+//! partition = "sg2044"
+//! cores_per_node = 64
+//!
+//! [[workload]]
+//! kind = "spmv"            # HPCG-style sparse matrix-vector product
+//! name = "spmv-sg2044"
+//! platform = "sg2044"
+//! partition = "sg2044"
+//! threads = 64
+//! # rows = 1048576         # HPCG reference problem: 2^20 rows...
+//! # nnz_per_row = 27       # ...of a 27-point stencil...
+//! # index_bytes = 4        # ...stored as int32 CSR
 //!
 //! [[workload]]
 //! kind = "blis-ablation"
@@ -92,11 +109,15 @@ use std::sync::Arc;
 use crate::arch::platform::{Platform, PlatformRegistry};
 use crate::cluster::inventory::{Inventory, PAPER_FLEET};
 use crate::error::CimoneError;
+use crate::mem::stream_model::SparseShape;
 use crate::net::{Fabric, FabricRegistry};
 use crate::ukernel::{KernelDescriptor, KernelFamily, KernelRegistry};
 use crate::util::config::{Config, Section, Value};
 
-use super::workload::{BlisAblationWorkload, HplWorkload, StreamWorkload, Workload};
+use super::workload::{
+    BlisAblationWorkload, HplMxpWorkload, HplWorkload, SparseSpmvWorkload, StreamWorkload,
+    Workload,
+};
 
 /// One workload descriptor — plain data, buildable from code or config.
 /// Platforms are named by registry id or alias.
@@ -116,6 +137,36 @@ pub enum WorkloadSpec {
         /// Fabric override (registry id); `None` rides the machine fabric.
         fabric: Option<String>,
     },
+    /// Mixed-precision HPL (HPL-MxP): same projection machinery as `Hpl`,
+    /// with the job's kernel rebuilt at SEW=32 before projection.
+    HplMxp {
+        name: String,
+        partition: String,
+        nodes: usize,
+        platform: String,
+        cluster_nodes: usize,
+        cores_per_node: usize,
+        /// Kernel override (registry id); `None` uses the platform's
+        /// `default_lib`.
+        lib: Option<String>,
+        /// Fabric override (registry id); `None` rides the machine fabric.
+        fabric: Option<String>,
+    },
+    /// HPCG-style sparse matrix-vector product, bandwidth-bound through
+    /// the platform's DDR stream model.
+    Spmv {
+        name: String,
+        partition: String,
+        nodes: usize,
+        platform: String,
+        threads: usize,
+        /// CSR rows (HPCG reference: 2^20).
+        rows: usize,
+        /// Nonzeros per row (HPCG reference: the 27-point stencil).
+        nnz_per_row: usize,
+        /// CSR index width in bytes (4 = int32).
+        index_bytes: usize,
+    },
     BlisAblation {
         name: String,
         partition: String,
@@ -133,15 +184,20 @@ impl WorkloadSpec {
         match self {
             WorkloadSpec::Stream { name, .. }
             | WorkloadSpec::Hpl { name, .. }
+            | WorkloadSpec::HplMxp { name, .. }
+            | WorkloadSpec::Spmv { name, .. }
             | WorkloadSpec::BlisAblation { name, .. } => name,
         }
     }
 
-    /// Spec-file kind keyword (`stream` | `hpl` | `blis-ablation`).
+    /// Spec-file kind keyword (`stream` | `hpl` | `hpl-mxp` | `spmv` |
+    /// `blis-ablation`).
     pub fn kind(&self) -> &'static str {
         match self {
             WorkloadSpec::Stream { .. } => "stream",
             WorkloadSpec::Hpl { .. } => "hpl",
+            WorkloadSpec::HplMxp { .. } => "hpl-mxp",
+            WorkloadSpec::Spmv { .. } => "spmv",
             WorkloadSpec::BlisAblation { .. } => "blis-ablation",
         }
     }
@@ -149,7 +205,10 @@ impl WorkloadSpec {
     /// Nodes the described job allocates from its partition.
     pub fn nodes(&self) -> usize {
         match self {
-            WorkloadSpec::Stream { nodes, .. } | WorkloadSpec::Hpl { nodes, .. } => *nodes,
+            WorkloadSpec::Stream { nodes, .. }
+            | WorkloadSpec::Hpl { nodes, .. }
+            | WorkloadSpec::HplMxp { nodes, .. }
+            | WorkloadSpec::Spmv { nodes, .. } => *nodes,
             WorkloadSpec::BlisAblation { .. } => 1,
         }
     }
@@ -159,6 +218,8 @@ impl WorkloadSpec {
         match self {
             WorkloadSpec::Stream { partition, .. }
             | WorkloadSpec::Hpl { partition, .. }
+            | WorkloadSpec::HplMxp { partition, .. }
+            | WorkloadSpec::Spmv { partition, .. }
             | WorkloadSpec::BlisAblation { partition, .. } => partition,
         }
     }
@@ -168,6 +229,8 @@ impl WorkloadSpec {
         match self {
             WorkloadSpec::Stream { platform, .. }
             | WorkloadSpec::Hpl { platform, .. }
+            | WorkloadSpec::HplMxp { platform, .. }
+            | WorkloadSpec::Spmv { platform, .. }
             | WorkloadSpec::BlisAblation { platform, .. } => platform,
         }
     }
@@ -197,6 +260,42 @@ impl WorkloadSpec {
                 lib,
                 fabric,
             }),
+            WorkloadSpec::HplMxp {
+                name,
+                partition,
+                nodes,
+                platform,
+                cluster_nodes,
+                cores_per_node,
+                lib,
+                fabric,
+            } => Box::new(HplMxpWorkload {
+                name,
+                partition,
+                nodes,
+                platform,
+                cluster_nodes,
+                cores_per_node,
+                lib,
+                fabric,
+            }),
+            WorkloadSpec::Spmv {
+                name,
+                partition,
+                nodes,
+                platform,
+                threads,
+                rows,
+                nnz_per_row,
+                index_bytes,
+            } => Box::new(SparseSpmvWorkload {
+                name,
+                partition,
+                nodes,
+                platform,
+                threads,
+                shape: SparseShape { rows, nnz_per_row, index_bytes },
+            }),
             WorkloadSpec::BlisAblation { name, partition, platform, lib, cores, runtime_s } => {
                 Box::new(BlisAblationWorkload { name, partition, platform, lib, cores, runtime_s })
             }
@@ -213,7 +312,7 @@ impl WorkloadSpec {
         // silently ignored no-op
         let known: &[&str] = match kind {
             "stream" => &["kind", "name", "partition", "platform", "node", "nodes", "threads"],
-            "hpl" => &[
+            "hpl" | "hpl-mxp" => &[
                 "kind",
                 "name",
                 "partition",
@@ -224,6 +323,18 @@ impl WorkloadSpec {
                 "cores_per_node",
                 "lib",
                 "fabric",
+            ],
+            "spmv" => &[
+                "kind",
+                "name",
+                "partition",
+                "platform",
+                "node",
+                "nodes",
+                "threads",
+                "rows",
+                "nnz_per_row",
+                "index_bytes",
             ],
             "blis-ablation" => {
                 &["kind", "name", "partition", "platform", "node", "lib", "cores", "runtime_s"]
@@ -248,21 +359,51 @@ impl WorkloadSpec {
                 name,
                 partition,
             }),
-            "hpl" => {
+            "hpl" | "hpl-mxp" => {
                 let nodes = opt_usize(sec, "nodes", &name)?.unwrap_or(1);
-                Ok(WorkloadSpec::Hpl {
-                    platform: req_platform(sec, &name)?,
-                    cluster_nodes: opt_usize(sec, "cluster_nodes", &name)?.unwrap_or(nodes),
-                    cores_per_node: opt_usize(sec, "cores_per_node", &name)?.ok_or_else(
-                        || CimoneError::Spec(format!("workload `{name}`: missing `cores_per_node`")),
-                    )?,
-                    lib: opt_lib(sec, &name)?,
-                    fabric: opt_str(sec, "fabric", &name)?,
-                    nodes,
-                    name,
-                    partition,
-                })
+                let platform = req_platform(sec, &name)?;
+                let cluster_nodes = opt_usize(sec, "cluster_nodes", &name)?.unwrap_or(nodes);
+                let cores_per_node = opt_usize(sec, "cores_per_node", &name)?.ok_or_else(
+                    || CimoneError::Spec(format!("workload `{name}`: missing `cores_per_node`")),
+                )?;
+                let lib = opt_lib(sec, &name)?;
+                let fabric = opt_str(sec, "fabric", &name)?;
+                if kind == "hpl" {
+                    Ok(WorkloadSpec::Hpl {
+                        platform,
+                        cluster_nodes,
+                        cores_per_node,
+                        lib,
+                        fabric,
+                        nodes,
+                        name,
+                        partition,
+                    })
+                } else {
+                    Ok(WorkloadSpec::HplMxp {
+                        platform,
+                        cluster_nodes,
+                        cores_per_node,
+                        lib,
+                        fabric,
+                        nodes,
+                        name,
+                        partition,
+                    })
+                }
             }
+            "spmv" => Ok(WorkloadSpec::Spmv {
+                nodes: opt_usize(sec, "nodes", &name)?.unwrap_or(1),
+                platform: req_platform(sec, &name)?,
+                threads: opt_usize(sec, "threads", &name)?.ok_or_else(|| {
+                    CimoneError::Spec(format!("workload `{name}`: missing `threads`"))
+                })?,
+                rows: opt_usize(sec, "rows", &name)?.unwrap_or(1 << 20),
+                nnz_per_row: opt_usize(sec, "nnz_per_row", &name)?.unwrap_or(27),
+                index_bytes: opt_usize(sec, "index_bytes", &name)?.unwrap_or(4),
+                name,
+                partition,
+            }),
             "blis-ablation" => Ok(WorkloadSpec::BlisAblation {
                 platform: opt_platform(sec, &name)?.unwrap_or_else(|| "mcv2-dual".to_string()),
                 lib: opt_lib(sec, &name)?.ok_or_else(|| {
@@ -284,7 +425,8 @@ impl WorkloadSpec {
                 partition,
             }),
             other => Err(CimoneError::Spec(format!(
-                "workload `{name}`: unknown kind `{other}` (stream | hpl | blis-ablation)"
+                "workload `{name}`: unknown kind `{other}` \
+                 (stream | hpl | hpl-mxp | spmv | blis-ablation)"
             ))),
         }
     }
@@ -321,6 +463,43 @@ impl WorkloadSpec {
                 }
                 s
             }
+            WorkloadSpec::HplMxp {
+                name,
+                partition,
+                nodes,
+                platform,
+                cluster_nodes,
+                cores_per_node,
+                lib,
+                fabric,
+            } => {
+                let mut s = format!(
+                    "[[workload]]\nkind = \"hpl-mxp\"\nname = \"{name}\"\nplatform = \"{platform}\"\n\
+                     partition = \"{partition}\"\nnodes = {nodes}\ncluster_nodes = {cluster_nodes}\n\
+                     cores_per_node = {cores_per_node}\n"
+                );
+                if let Some(lib) = lib {
+                    s.push_str(&format!("lib = \"{lib}\"\n"));
+                }
+                if let Some(fabric) = fabric {
+                    s.push_str(&format!("fabric = \"{fabric}\"\n"));
+                }
+                s
+            }
+            WorkloadSpec::Spmv {
+                name,
+                partition,
+                nodes,
+                platform,
+                threads,
+                rows,
+                nnz_per_row,
+                index_bytes,
+            } => format!(
+                "[[workload]]\nkind = \"spmv\"\nname = \"{name}\"\nplatform = \"{platform}\"\n\
+                 partition = \"{partition}\"\nnodes = {nodes}\nthreads = {threads}\n\
+                 rows = {rows}\nnnz_per_row = {nnz_per_row}\nindex_bytes = {index_bytes}\n"
+            ),
             WorkloadSpec::BlisAblation { name, partition, platform, lib, cores, runtime_s } => {
                 format!(
                     "[[workload]]\nkind = \"blis-ablation\"\nname = \"{name}\"\n\
@@ -875,13 +1054,18 @@ impl CampaignSpec {
             let mut w = WorkloadSpec::from_section(sec)?;
             reg.get(w.platform())?;
             // canonicalize the per-job fabric override (typed if unknown)
-            if let WorkloadSpec::Hpl { fabric: Some(f), .. } = &mut w {
-                *f = freg.get(f)?.id.clone();
+            match &mut w {
+                WorkloadSpec::Hpl { fabric: Some(f), .. }
+                | WorkloadSpec::HplMxp { fabric: Some(f), .. } => {
+                    *f = freg.get(f)?.id.clone();
+                }
+                _ => {}
             }
             // ...and the kernel names (aliases -> registry ids, unknown
             // kernels typed at load time, custom [[kernel]]s in scope)
             match &mut w {
                 WorkloadSpec::Hpl { lib: Some(l), .. }
+                | WorkloadSpec::HplMxp { lib: Some(l), .. }
                 | WorkloadSpec::BlisAblation { lib: l, .. } => {
                     *l = kreg.get(l)?.id.clone();
                 }
@@ -916,6 +1100,7 @@ impl CampaignSpec {
         for w in &self.workloads {
             match w {
                 WorkloadSpec::Hpl { lib: Some(l), .. }
+                | WorkloadSpec::HplMxp { lib: Some(l), .. }
                 | WorkloadSpec::BlisAblation { lib: l, .. } => {
                     kreg.get(l)?;
                 }
@@ -935,12 +1120,16 @@ impl CampaignSpec {
         };
         machine.validate_cluster(fleet_nodes)?;
         for w in &self.workloads {
-            if let WorkloadSpec::Hpl { fabric, cluster_nodes, .. } = w {
-                let f = match fabric {
-                    Some(id) => freg.get(id)?,
-                    None => Arc::clone(&machine),
-                };
-                f.validate_cluster(*cluster_nodes)?;
+            match w {
+                WorkloadSpec::Hpl { fabric, cluster_nodes, .. }
+                | WorkloadSpec::HplMxp { fabric, cluster_nodes, .. } => {
+                    let f = match fabric {
+                        Some(id) => freg.get(id)?,
+                        None => Arc::clone(&machine),
+                    };
+                    f.validate_cluster(*cluster_nodes)?;
+                }
+                _ => {}
             }
         }
         // queue templates must name a workload in this spec, and a
@@ -1253,6 +1442,9 @@ fn render_kernel_def(reg: &mut KernelRegistry, def: &KernelDef) -> String {
         if k.lmul != d.lmul {
             s.push_str(&format!("lmul = {}\n", k.lmul.multiplier()));
         }
+        if k.sew != d.sew {
+            s.push_str(&format!("sew = {}\n", k.sew.bits()));
+        }
         if k.mr != d.mr {
             s.push_str(&format!("mr = {}\n", k.mr));
         }
@@ -1370,6 +1562,96 @@ lib = "blis-opt"
             }
             other => panic!("expected BlisAblation, got {other:?}"),
         }
+    }
+
+    const MIXED: &str = r#"
+[[workload]]
+kind = "hpl-mxp"
+name = "mxp-one"
+platform = "mcv2"
+partition = "mcv2"
+cores_per_node = 128
+lib = "blis-opt"
+fabric = "10gbe"
+
+[[workload]]
+kind = "spmv"
+name = "spmv-one"
+platform = "sg2044"
+partition = "sg2044"
+threads = 64
+"#;
+
+    #[test]
+    fn parses_spmv_and_hpl_mxp_kinds_from_config() {
+        let spec = CampaignSpec::parse(MIXED).unwrap();
+        assert_eq!(spec.len(), 2);
+        match &spec.workloads[0] {
+            WorkloadSpec::HplMxp { nodes, cluster_nodes, cores_per_node, lib, fabric, .. } => {
+                assert_eq!((*nodes, *cluster_nodes, *cores_per_node), (1, 1, 128));
+                // aliases canonicalize to registry ids at load time,
+                // exactly as they do for kind = "hpl"
+                assert_eq!(lib.as_deref(), Some("blis-lmul4"));
+                assert_eq!(fabric.as_deref(), Some("ten-gbe-flat"));
+            }
+            other => panic!("expected HplMxp, got {other:?}"),
+        }
+        assert_eq!(
+            spec.workloads[1],
+            WorkloadSpec::Spmv {
+                name: "spmv-one".into(),
+                partition: "sg2044".into(),
+                nodes: 1,
+                platform: "sg2044".into(),
+                threads: 64,
+                // the HPCG reference problem fills in the shape
+                rows: 1 << 20,
+                nnz_per_row: 27,
+                index_bytes: 4,
+            }
+        );
+        // the descriptors build matching runnable workloads
+        for w in &spec.workloads {
+            let built = w.build();
+            assert_eq!(built.name(), w.name());
+            assert_eq!(built.nodes(), w.nodes());
+        }
+    }
+
+    #[test]
+    fn spmv_and_mxp_render_and_reparse_to_an_equal_spec() {
+        let spec = CampaignSpec::parse(MIXED).unwrap();
+        let back = CampaignSpec::parse(&spec.render()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn spmv_shape_keys_are_rejected_on_other_kinds() {
+        // `rows` belongs to the sparse shape, not to dense HPL
+        let err = CampaignSpec::parse(
+            "[[workload]]\nkind = \"hpl\"\nname = \"h\"\nplatform = \"mcv2\"\npartition = \"mcv2\"\n\
+             cores_per_node = 64\nrows = 100\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CimoneError::Spec(ref m) if m.contains("unknown key `rows`")));
+        // ...and a zero-row spmv job is a load-time error, not a NaN
+        let err = CampaignSpec::parse(
+            "[[workload]]\nkind = \"spmv\"\nname = \"s\"\nplatform = \"sg2044\"\npartition = \"sg2044\"\n\
+             threads = 64\nrows = 0\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CimoneError::Spec(ref m) if m.contains("positive int")));
+    }
+
+    #[test]
+    fn mxp_fabric_override_is_held_to_the_port_check() {
+        // 17 nodes cannot hang off the 16-port ToR switch, MxP or not
+        let err = CampaignSpec::parse(
+            "[[workload]]\nkind = \"hpl-mxp\"\nname = \"m\"\nplatform = \"mcv2\"\npartition = \"mcv2\"\n\
+             nodes = 2\ncluster_nodes = 17\ncores_per_node = 64\nfabric = \"gbe-flat\"\n",
+        )
+        .unwrap_err();
+        assert!(matches!(err, CimoneError::FabricTooSmall { nodes: 17, .. }));
     }
 
     #[test]

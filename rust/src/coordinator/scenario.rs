@@ -284,7 +284,8 @@ impl ScenarioSpec {
                 if !hit {
                     return Err(err(format!(
                         "workload filter `{f}` matches nothing \
-                         (use a kind: stream | hpl | blis-ablation, a job name, or `prefix*`)"
+                         (use a kind: stream | hpl | hpl-mxp | spmv | blis-ablation, \
+                         a job name, or `prefix*`)"
                     )));
                 }
             }
@@ -298,9 +299,11 @@ impl ScenarioSpec {
             let id = spec.kernel_registry()?.get(lib)?.id.clone();
             for w in &mut spec.workloads {
                 match w {
-                    WorkloadSpec::Hpl { lib: l, .. } => *l = Some(id.clone()),
+                    WorkloadSpec::Hpl { lib: l, .. } | WorkloadSpec::HplMxp { lib: l, .. } => {
+                        *l = Some(id.clone())
+                    }
                     WorkloadSpec::BlisAblation { lib: l, .. } => *l = id.clone(),
-                    WorkloadSpec::Stream { .. } => {}
+                    WorkloadSpec::Stream { .. } | WorkloadSpec::Spmv { .. } => {}
                 }
             }
         }
@@ -316,9 +319,13 @@ impl ScenarioSpec {
         // follows via the platform/count logic below, or is fit-checked
         if let Some(n) = self.nodes {
             for w in &mut spec.workloads {
-                if let WorkloadSpec::Hpl { nodes, cluster_nodes, .. } = w {
-                    *nodes = n;
-                    *cluster_nodes = n;
+                match w {
+                    WorkloadSpec::Hpl { nodes, cluster_nodes, .. }
+                    | WorkloadSpec::HplMxp { nodes, cluster_nodes, .. } => {
+                        *nodes = n;
+                        *cluster_nodes = n;
+                    }
+                    _ => {}
                 }
             }
         }
@@ -334,10 +341,16 @@ impl ScenarioSpec {
                         *partition = p.partition.clone();
                         *threads = (*threads).min(cores).max(1);
                     }
-                    WorkloadSpec::Hpl { platform, partition, cores_per_node, .. } => {
+                    WorkloadSpec::Hpl { platform, partition, cores_per_node, .. }
+                    | WorkloadSpec::HplMxp { platform, partition, cores_per_node, .. } => {
                         *platform = p.id.clone();
                         *partition = p.partition.clone();
                         *cores_per_node = (*cores_per_node).min(cores).max(1);
+                    }
+                    WorkloadSpec::Spmv { platform, partition, threads, .. } => {
+                        *platform = p.id.clone();
+                        *partition = p.partition.clone();
+                        *threads = (*threads).min(cores).max(1);
                     }
                     WorkloadSpec::BlisAblation { platform, partition, cores: c, .. } => {
                         *platform = p.id.clone();
@@ -419,8 +432,10 @@ impl ScenarioSpec {
                     ))
                 })?;
                 match w {
-                    WorkloadSpec::Stream { threads, .. } => *threads = (*threads).min(fit),
-                    WorkloadSpec::Hpl { cores_per_node, .. } => {
+                    WorkloadSpec::Stream { threads, .. }
+                    | WorkloadSpec::Spmv { threads, .. } => *threads = (*threads).min(fit),
+                    WorkloadSpec::Hpl { cores_per_node, .. }
+                    | WorkloadSpec::HplMxp { cores_per_node, .. } => {
                         *cores_per_node = (*cores_per_node).min(fit)
                     }
                     WorkloadSpec::BlisAblation { cores, .. } => *cores = (*cores).min(fit),
@@ -670,6 +685,90 @@ impl ScenarioMatrix {
                     .collect(),
                 node_counts: vec![1, 2],
                 power_caps: vec![120.0, 180.0, 250.0],
+                ..MatrixAxes::default()
+            },
+        }
+    }
+
+    /// The built-in mixed-precision matrix: FP64 HPL next to HPL-MxP
+    /// (the same job with its kernel rebuilt at SEW=32, which packs two
+    /// elements per 64-bit lane) on every *vector* platform — the
+    /// HPL-MxP benchmark's question, "what does dropping to 32-bit
+    /// precision buy this machine?", answered per generation. The MCv1
+    /// U740 is deliberately absent: its scalar FP64 pipeline has no
+    /// element width to narrow, and an MxP job on it is a typed
+    /// `InvalidKernel` error — `cimone sweep --matrix precision`.
+    pub fn precision() -> ScenarioMatrix {
+        let mut base = CampaignSpec::new();
+        base.validate_n = 48;
+        base.push(WorkloadSpec::Hpl {
+            name: "hpl".into(),
+            partition: "mcv2".into(),
+            nodes: 1,
+            platform: "mcv2-dual".into(),
+            cluster_nodes: 1,
+            cores_per_node: 128, // clamped per platform
+            lib: None,           // each platform's own default library
+            fabric: None,
+        });
+        base.push(WorkloadSpec::HplMxp {
+            name: "hpl-mxp".into(),
+            partition: "mcv2".into(),
+            nodes: 1,
+            platform: "mcv2-dual".into(),
+            cluster_nodes: 1,
+            cores_per_node: 128,
+            lib: None,
+            fabric: None,
+        });
+        ScenarioMatrix {
+            base,
+            scenarios: Vec::new(),
+            axes: MatrixAxes {
+                platforms: ["mcv2-pioneer", "mcv2-dual", "sg2044", "mcv3"]
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect(),
+                ..MatrixAxes::default()
+            },
+        }
+    }
+
+    /// The built-in sparse matrix: STREAM triad next to an HPCG-shaped
+    /// SpMV (2^20 rows of a 27-point stencil in int32 CSR) on every
+    /// generation. Both jobs ride the same DDR stream model, so the
+    /// table reads as one roofline story: SpMV's GFLOP/s column is the
+    /// bandwidth column divided by the sparse flop:byte ratio, never
+    /// above it — `cimone sweep --matrix sparse`.
+    pub fn sparse() -> ScenarioMatrix {
+        let mut base = CampaignSpec::new();
+        base.validate_n = 48;
+        base.push(WorkloadSpec::Stream {
+            name: "stream".into(),
+            partition: "mcv2".into(),
+            nodes: 1,
+            platform: "mcv2-dual".into(),
+            threads: 64, // clamped per platform
+        });
+        base.push(WorkloadSpec::Spmv {
+            name: "spmv".into(),
+            partition: "mcv2".into(),
+            nodes: 1,
+            platform: "mcv2-dual".into(),
+            threads: 64,
+            // the HPCG reference problem
+            rows: 1 << 20,
+            nnz_per_row: 27,
+            index_bytes: 4,
+        });
+        ScenarioMatrix {
+            base,
+            scenarios: Vec::new(),
+            axes: MatrixAxes {
+                platforms: ["mcv1-u740", "mcv2-pioneer", "mcv2-dual", "sg2044", "mcv3"]
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect(),
                 ..MatrixAxes::default()
             },
         }
@@ -1287,6 +1386,37 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_outcomes_never_render_nan_speedups() {
+        // a stream-only baseline (hpl_gflops = 0) against a compute row:
+        // every speedup where either side lacks the metric must be a
+        // typed None — rendered `-`, JSON null — never NaN or inf
+        let row = |name: &str, hpl: f64, stream: f64| ScenarioOutcome {
+            name: name.into(),
+            nodes: 1,
+            hpl_gflops: hpl,
+            stream_gbs: stream,
+            avg_node_w: 30.0,
+            gflops_per_w: 0.0,
+            makespan_s: 0.0,
+            jobs: Vec::new(),
+        };
+        let report = ComparisonReport {
+            scenarios: vec![row("stream-only", 0.0, 12.0), row("hpl-only", 40.0, 0.0)],
+            total: 2,
+            truncated: 0,
+        };
+        let (hx, sx) = report.speedup_of(&report.scenarios[1]);
+        assert_eq!(hx, None, "0-baseline HPL speedup must be None, not inf");
+        assert_eq!(sx, None, "0-valued STREAM speedup must be None, not 0/NaN");
+        let s = report.render();
+        assert!(!s.contains("NaN") && !s.contains("inf"), "{s}");
+        assert_eq!(fmt_speedup(None), "-");
+        let j = report.to_json().render();
+        assert!(j.contains("\"hpl_speedup\":null"), "{j}");
+        assert!(!j.contains("NaN"), "{j}");
+    }
+
+    #[test]
     fn matrix_product_covers_all_axis_combinations() {
         let mut base = CampaignSpec::new();
         base.push(WorkloadSpec::Stream {
@@ -1424,6 +1554,11 @@ platforms = [\"mcv1-u740\", \"mcv2-dual\"]
         // ...and power-cap (power_caps + node_counts axes)
         let pc = ScenarioMatrix::power_cap();
         assert_eq!(ScenarioMatrix::parse(&pc.render()).unwrap(), pc);
+        // ...and the mixed-precision / sparse built-ins (new kinds)
+        let pr = ScenarioMatrix::precision();
+        assert_eq!(ScenarioMatrix::parse(&pr.render()).unwrap(), pr);
+        let sp = ScenarioMatrix::sparse();
+        assert_eq!(ScenarioMatrix::parse(&sp.render()).unwrap(), sp);
     }
 
     #[test]
@@ -1514,6 +1649,71 @@ platforms = [\"mcv1-u740\", \"mcv2-dual\"]
             m.expand(),
             Err(CimoneError::Spec(ref msg)) if msg.contains("below one active core")
         ));
+    }
+
+    #[test]
+    fn precision_matrix_shows_the_mixed_precision_uplift_everywhere() {
+        let m = ScenarioMatrix::precision();
+        let report = dry_run_matrix(&m).unwrap();
+        assert_eq!(report.scenarios.len(), 4, "the four vector generations");
+        for o in &report.scenarios {
+            let gf = |job: &str| -> f64 {
+                o.jobs.iter().find(|j| j.name == job).map(|j| j.headline).unwrap_or(0.0)
+            };
+            let (hpl, mxp) = (gf("hpl"), gf("hpl-mxp"));
+            assert!(hpl > 0.0, "{}: no FP64 HPL row", o.name);
+            // the HPL-MxP punchline: SEW=32 packs two elements per lane,
+            // so mixed precision strictly beats FP64 on every RVV
+            // platform — but never by more than the 2x lane-packing
+            // bound (the iterative-refinement overhead eats into it)
+            assert!(mxp > hpl, "{}: MxP {mxp:.1} !> HPL {hpl:.1}", o.name);
+            assert!(mxp < 2.5 * hpl, "{}: MxP {mxp:.1} vs HPL {hpl:.1}", o.name);
+        }
+        // warm rerun through the content-addressed estimate cache is
+        // bit-identical to the cold one (SEW feeds the cache key)
+        let again = dry_run_matrix(&m).unwrap();
+        assert_eq!(again, report);
+    }
+
+    #[test]
+    fn precision_matrix_on_the_scalar_generation_is_a_typed_error() {
+        // the U740's scalar FP64 pipeline has no element width to
+        // narrow: retargeting the MxP job onto it must fail with the
+        // kernel's typed FP64-only error, not a silent wrong number
+        let mut m = ScenarioMatrix::precision();
+        m.axes.platforms = vec!["mcv1-u740".into()];
+        let err = dry_run_matrix(&m).unwrap_err();
+        assert!(
+            matches!(err, CimoneError::InvalidKernel { ref reason, .. } if reason.contains("FP64-only")),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn sparse_matrix_stays_under_the_stream_roof() {
+        let m = ScenarioMatrix::sparse();
+        let report = dry_run_matrix(&m).unwrap();
+        assert_eq!(report.scenarios.len(), 5, "every generation, scalar included");
+        for o in &report.scenarios {
+            let spmv = o.jobs.iter().find(|j| j.name == "spmv").expect("spmv row");
+            assert_eq!(spmv.metric, "gflops");
+            assert!(spmv.headline > 0.0, "{}: SpMV projected 0 GF/s", o.name);
+            // roofline sanity: each CSR nonzero moves >= 12 bytes
+            // (8 B value + 4 B index) for 2 flops, so SpMV GF/s can
+            // never exceed the platform's triad bandwidth (the STREAM
+            // row times the triad kernel factor) divided by 6
+            let triad_roof = o.stream_gbs * crate::mem::stream_model::SPMV_STREAM_FACTOR / 6.0;
+            assert!(
+                spmv.headline <= triad_roof,
+                "{}: SpMV {:.2} GF/s breaks the {:.2} GF/s triad roof",
+                o.name,
+                spmv.headline,
+                triad_roof
+            );
+        }
+        // the sparse table is cache-stable too: warm == cold, bit for bit
+        let again = dry_run_matrix(&m).unwrap();
+        assert_eq!(again, report);
     }
 
     #[test]
@@ -1694,6 +1894,8 @@ count = 1
             ScenarioMatrix::fabric_scaling(),
             ScenarioMatrix::blas_tuning(),
             ScenarioMatrix::power_cap(),
+            ScenarioMatrix::precision(),
+            ScenarioMatrix::sparse(),
         ] {
             let expanded = m.expand().unwrap();
             assert_eq!(expanded.len(), m.spec_count());

@@ -237,6 +237,88 @@ pub fn power_cap_table() -> Table {
     t
 }
 
+/// The mixed-precision punchline as one table: the built-in
+/// [`ScenarioMatrix::precision`] matrix, dry-run and pivoted so each
+/// vector generation is a row of FP64 HPL next to HPL-MxP (the same
+/// job with its kernel rebuilt at SEW=32) — the HPL-MxP benchmark's
+/// Green500-style question, "what does dropping precision buy?",
+/// answered per generation with the uplift ratio and the
+/// mixed-precision GF/s-per-W.
+pub fn precision_table() -> Table {
+    let matrix = ScenarioMatrix::precision();
+    let report = dry_run_matrix(&matrix).expect("the built-in precision matrix is valid");
+    let mut t = Table::new(vec![
+        "platform",
+        "HPL GF/s",
+        "MxP GF/s",
+        "MxP/HPL",
+        "MxP GF/s/W",
+    ]);
+    for p in &matrix.axes.platforms {
+        // a missing name means the built-in matrix and this pivot
+        // drifted apart — a programmer error, never a zero row
+        let o = report
+            .outcome(p)
+            .unwrap_or_else(|| panic!("precision scenario `{p}` missing from the report"));
+        let job = |name: &str| {
+            o.jobs
+                .iter()
+                .find(|j| j.name == name)
+                .unwrap_or_else(|| panic!("precision scenario `{p}` has no `{name}` job"))
+        };
+        let (hpl, mxp) = (job("hpl"), job("hpl-mxp"));
+        t.row(vec![
+            p.clone(),
+            format!("{:.1}", hpl.headline),
+            format!("{:.1}", mxp.headline),
+            format!("{:.2}x", mxp.headline / hpl.headline.max(1e-30)),
+            mxp.gflops_per_w
+                .map(|e| format!("{e:.2}"))
+                .unwrap_or_else(|| "-".to_string()),
+        ]);
+    }
+    t
+}
+
+/// The sparse roofline as one table: the built-in
+/// [`ScenarioMatrix::sparse`] matrix, dry-run and pivoted so each
+/// generation is a row of STREAM triad GB/s next to the HPCG-shaped
+/// SpMV's projected GF/s and its share of the triad roof — one
+/// roofline story per generation, the memory-bound companion to the
+/// HPL tables.
+pub fn sparse_table() -> Table {
+    let matrix = ScenarioMatrix::sparse();
+    let report = dry_run_matrix(&matrix).expect("the built-in sparse matrix is valid");
+    let mut t = Table::new(vec![
+        "platform",
+        "STREAM GB/s",
+        "SpMV GF/s",
+        "roof GF/s",
+        "% of roof",
+    ]);
+    for p in &matrix.axes.platforms {
+        let o = report
+            .outcome(p)
+            .unwrap_or_else(|| panic!("sparse scenario `{p}` missing from the report"));
+        let spmv = o
+            .jobs
+            .iter()
+            .find(|j| j.name == "spmv")
+            .unwrap_or_else(|| panic!("sparse scenario `{p}` has no `spmv` job"));
+        // each CSR nonzero moves >= 12 streamed bytes for 2 flops, so
+        // the triad rate over 6 is the hard SpMV ceiling
+        let roof = o.stream_gbs * crate::mem::stream_model::SPMV_STREAM_FACTOR / 6.0;
+        t.row(vec![
+            p.clone(),
+            format!("{:.1}", o.stream_gbs),
+            format!("{:.2}", spmv.headline),
+            format!("{roof:.2}"),
+            format!("{:.0}%", 100.0 * spmv.headline / roof.max(1e-30)),
+        ]);
+    }
+    t
+}
+
 /// The generation comparison every "down the road" table derives from:
 /// the built-in [`ScenarioMatrix::generations`] matrix, dry-run (pure
 /// modelling, nothing scheduled).
@@ -324,6 +406,8 @@ pub fn render_all() -> String {
          == Extension: LMUL ablation (why the paper stops at 4) ==\n{}\n\n\
          == Extension: kernel tuning, SG2042 vs SG2044 (blas-tuning matrix) ==\n{}\n\n\
          == Extension: power-cap operating points, GF/s-per-W (power-cap matrix) ==\n{}\n\n\
+         == Extension: mixed precision, HPL vs HPL-MxP (precision matrix) ==\n{}\n\n\
+         == Extension: sparse roofline, STREAM vs SpMV (sparse matrix) ==\n{}\n\n\
          == Extension: energy to solution (HPL N=57600) ==\n{}\n\n\
          == Extension: down the road (MCv1 -> MCv2 -> SG2044 -> MCv3) ==\n{}",
         grid_cores_by_library(&[1, 4, 16, 64, 128]).render(),
@@ -333,6 +417,8 @@ pub fn render_all() -> String {
         lmul_ablation().render(),
         blas_tuning_table().render(),
         power_cap_table().render(),
+        precision_table().render(),
+        sparse_table().render(),
         energy_table(&report).render(),
         generation_table(&report).render()
     )
@@ -447,6 +533,40 @@ mod tests {
     }
 
     #[test]
+    fn precision_table_shows_the_uplift_on_every_vector_row() {
+        let t = precision_table();
+        let s = t.render();
+        assert_eq!(t.n_rows(), 4, "one row per vector generation");
+        assert!(s.contains("MxP GF/s") && s.contains("MxP/HPL"), "{s}");
+        assert!(!s.contains("mcv1-u740"), "the scalar U740 has no SEW to narrow: {s}");
+        // every ratio cell reads as a strict >1x uplift
+        for p in ["mcv2-pioneer", "mcv2-dual", "sg2044", "mcv3"] {
+            let line = s.lines().find(|l| l.contains(p)).unwrap_or_else(|| panic!("{p}: {s}"));
+            let ratio = line
+                .split_whitespace()
+                .find_map(|c| c.strip_suffix('x').and_then(|v| v.parse::<f64>().ok()))
+                .unwrap_or_else(|| panic!("no ratio cell in `{line}`"));
+            assert!(ratio > 1.0 && ratio < 2.5, "{p}: {ratio}");
+        }
+    }
+
+    #[test]
+    fn sparse_table_rows_stay_at_or_under_the_roof() {
+        let t = sparse_table();
+        let s = t.render();
+        assert_eq!(t.n_rows(), 5, "every generation, scalar included");
+        assert!(s.contains("SpMV GF/s") && s.contains("% of roof"), "{s}");
+        for p in ["mcv1-u740", "mcv2-pioneer", "mcv2-dual", "sg2044", "mcv3"] {
+            let line = s.lines().find(|l| l.contains(p)).unwrap_or_else(|| panic!("{p}: {s}"));
+            let pct = line
+                .split_whitespace()
+                .find_map(|c| c.strip_suffix('%').and_then(|v| v.parse::<f64>().ok()))
+                .unwrap_or_else(|| panic!("no roof-share cell in `{line}`"));
+            assert!(pct > 0.0 && pct <= 100.0, "{p}: {pct}% of the triad roof");
+        }
+    }
+
+    #[test]
     fn lmul_ablation_marks_m8_infeasible() {
         let s = lmul_ablation().render();
         assert!(s.contains("M8"), "{s}");
@@ -460,6 +580,8 @@ mod tests {
         assert!(s.contains("down the road"));
         assert!(s.contains("fabric scaling"));
         assert!(s.contains("kernel tuning"));
+        assert!(s.contains("mixed precision"));
+        assert!(s.contains("sparse roofline"));
         assert!(s.len() > 500);
     }
 }

@@ -27,13 +27,23 @@ use crate::blas::perf::PerfModel;
 use crate::cluster::{Inventory, Monitor};
 use crate::error::CimoneError;
 use crate::hpl::model::{project, ClusterConfig};
-use crate::mem::stream_model::predict_node_bandwidth;
+use crate::isa::rvv::Sew;
+use crate::mem::stream_model::{predict_node_bandwidth, predict_spmv, SparseShape};
 use crate::util::hash::ContentHasher;
 use crate::util::memo::{CacheStats, MemoCache};
 
 /// Bytes one simulated STREAM job moves: 10 iterations x 3 arrays x
 /// ~128 MB, matching the paper-scale working set.
 const STREAM_JOB_BYTES: f64 = 10.0 * 3.0 * 128e6;
+
+/// Matrix-vector sweeps one simulated SpMV job performs (HPCG-style
+/// repeated applications of the same operator).
+const SPMV_JOB_ITERS: f64 = 50.0;
+
+/// Fractional time HPL-MxP spends outside the FP32 factorization
+/// (GMRES-based iterative refinement back to FP64 accuracy). Small by
+/// construction — refinement is O(N^2) against the O(N^3) solve.
+const MXP_IR_OVERHEAD: f64 = 0.06;
 
 /// The estimate cache: one [`JobEstimate`] per resolved-input digest.
 static ESTIMATE_CACHE: MemoCache<JobEstimate> = MemoCache::new();
@@ -235,6 +245,171 @@ impl Workload for HplWorkload {
     }
 }
 
+/// Sparse matrix-vector product (the HPCG-style memory-bound workload):
+/// CSR SpMV projected through the DDR stream model and cache hierarchy.
+/// The headline is GF/s, but the governing quantity is effective DDR
+/// bandwidth — which [`predict_spmv`] keeps at or below the platform's
+/// STREAM triad rate by construction.
+#[derive(Debug, Clone)]
+pub struct SparseSpmvWorkload {
+    pub name: String,
+    pub partition: String,
+    pub nodes: usize,
+    /// Registry id (or alias) of the platform supplying the memory model.
+    pub platform: String,
+    pub threads: usize,
+    /// CSR problem shape (rows, nnz/row, index width).
+    pub shape: SparseShape,
+}
+
+impl SparseSpmvWorkload {
+    fn shape_err(&self, reason: impl Into<String>) -> CimoneError {
+        CimoneError::SparseShape { job: self.name.clone(), reason: reason.into() }
+    }
+}
+
+impl Workload for SparseSpmvWorkload {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn partition(&self) -> &str {
+        &self.partition
+    }
+
+    fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    fn estimate(&self, inv: &Inventory) -> Result<JobEstimate, CimoneError> {
+        let p = platform_of(inv, &self.platform)?;
+        // degenerate shapes are typed errors BEFORE any projection math
+        // runs — no NaN can reach the report — and errors never cache
+        self.shape.check().map_err(|reason| self.shape_err(reason))?;
+        if self.threads == 0 {
+            return Err(self.shape_err("threads must be >= 1"));
+        }
+        let mut h = ContentHasher::new();
+        h.write_str("estimate-spmv/v1");
+        p.feed_content(&mut h);
+        self.shape.feed_content(&mut h);
+        h.write_usize(self.threads).write_usize(self.nodes);
+        let p = Arc::clone(p);
+        let threads = self.threads;
+        let nodes = self.nodes;
+        let shape = self.shape;
+        Ok(ESTIMATE_CACHE.get_or_insert_with(h.finish(), move || {
+            let proj = predict_spmv(&p.desc, threads, shape)
+                .expect("shape and threads validated above; platform bandwidth is positive");
+            let runtime_s = (SPMV_JOB_ITERS * proj.time_s).max(1.0);
+            let active = threads.min(p.desc.total_cores());
+            let avg_node_w = p.power.node_power(active);
+            JobEstimate {
+                runtime_s,
+                metric: "gflops",
+                value: proj.gflops,
+                headline: proj.gflops,
+                avg_node_w,
+                energy_j: avg_node_w * nodes as f64 * runtime_s,
+            }
+        }))
+    }
+}
+
+/// HPL-MxP (mixed-precision LU + iterative refinement): the same
+/// cluster projection as [`HplWorkload`], run on a SEW=32 twin of the
+/// platform's BLAS kernel — double the elements per register group at
+/// an identical schedule — then taxed with the refinement overhead.
+/// Scalar (VLEN=0) kernels have no FP32 vector path, so an MxP job on
+/// such a platform is a typed [`CimoneError::InvalidKernel`].
+#[derive(Debug, Clone)]
+pub struct HplMxpWorkload {
+    pub name: String,
+    pub partition: String,
+    /// Nodes allocated from the scheduler partition.
+    pub nodes: usize,
+    /// Registry id (or alias) of the platform supplying the node model.
+    pub platform: String,
+    /// Nodes in the cluster-projection model (usually == `nodes`).
+    pub cluster_nodes: usize,
+    pub cores_per_node: usize,
+    /// BLAS kernel override (registry id or alias); `None` uses the
+    /// platform's `default_lib`. The resolved kernel is rebuilt at
+    /// SEW=32 with a doubled MR tile before projection.
+    pub lib: Option<String>,
+    /// Fabric override (registry id or alias); `None` uses the
+    /// inventory's machine fabric.
+    pub fabric: Option<String>,
+}
+
+impl Workload for HplMxpWorkload {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn partition(&self) -> &str {
+        &self.partition
+    }
+
+    fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    fn estimate(&self, inv: &Inventory) -> Result<JobEstimate, CimoneError> {
+        let p = platform_of(inv, &self.platform)?;
+        let fabric = match &self.fabric {
+            Some(id) => inv.fabrics.get(id)?,
+            None => Arc::clone(&inv.fabric),
+        };
+        let base = match &self.lib {
+            Some(id) => inv.kernels.get(id)?,
+            None => inv.kernels.get(&p.default_lib)?,
+        };
+        // the SEW=32 twin: same schedule family and register budget
+        // (MR doubles exactly as the elements-per-group do)
+        let mut mxp = (*base).clone();
+        mxp.id = format!("{}-mxp-e32", base.id);
+        mxp.label = format!("{} (MxP, SEW=32)", base.label);
+        mxp.aliases = Vec::new();
+        mxp.sew = Sew::E32;
+        mxp.mr *= 2;
+        // scalar kernels (VLEN=0) reject SEW=32 here — typed, per job
+        mxp.validate()?;
+        let cfg = ClusterConfig::with_lib_fabric(
+            Arc::clone(p),
+            self.cluster_nodes,
+            self.cores_per_node,
+            Arc::new(mxp),
+            (*fabric).clone(),
+        );
+        cfg.validate()?;
+        let mut h = ContentHasher::new();
+        h.write_str("estimate-hpl-mxp/v1");
+        p.feed_content(&mut h);
+        cfg.lib.feed_content(&mut h); // the E32 twin: sew feeds here
+        cfg.fabric.feed_content(&mut h);
+        h.write_usize(cfg.nodes).write_usize(cfg.cores_per_node);
+        h.write_usize(cfg.n).write_usize(cfg.nb);
+        let p = Arc::clone(p);
+        Ok(ESTIMATE_CACHE.get_or_insert_with(h.finish(), move || {
+            let proj = project(&cfg);
+            // the FP32 solve, plus GMRES refinement back to FP64 accuracy
+            let runtime_s = (proj.t_comp + proj.t_comm) * (1.0 + MXP_IR_OVERHEAD);
+            let gflops = proj.gflops / (1.0 + MXP_IR_OVERHEAD);
+            let active = cfg.cores_per_node.min(p.desc.total_cores());
+            let avg_node_w = p.power.node_power(active);
+            JobEstimate {
+                runtime_s,
+                metric: "gflops",
+                value: gflops,
+                headline: gflops,
+                avg_node_w,
+                energy_j: avg_node_w * cfg.nodes as f64 * runtime_s,
+            }
+        }))
+    }
+}
+
 /// BLIS micro-kernel ablation on the dual-socket node (Fig 7 @ 128
 /// cores): same HPL job shape, different micro-kernel.
 #[derive(Debug, Clone)]
@@ -406,6 +581,122 @@ mod tests {
         let est = w.estimate(&inv).unwrap();
         assert!(est.value.is_finite() && est.value > 0.0);
         assert!(est.energy_j.is_finite() && est.energy_j > 0.0);
+    }
+
+    #[test]
+    fn spmv_workload_estimates_bandwidth_bound_gflops() {
+        let inv = monte_cimone_v2();
+        let w = SparseSpmvWorkload {
+            name: "spmv-mcv2".into(),
+            partition: "mcv2".into(),
+            nodes: 1,
+            platform: "mcv2-pioneer".into(),
+            threads: 64,
+            shape: SparseShape { rows: 1 << 20, nnz_per_row: 27, index_bytes: 4 },
+        };
+        let est = w.estimate(&inv).unwrap();
+        assert_eq!(est.metric, "gflops");
+        assert!(est.value > 0.1 && est.value.is_finite(), "{}", est.value);
+        assert!(est.runtime_s >= 1.0);
+        assert!(est.avg_node_w > 60.0, "{}", est.avg_node_w);
+        // memory-bound: far below the platform's dense-HPL rate
+        let hpl = HplWorkload {
+            name: "hpl".into(),
+            partition: "mcv2".into(),
+            nodes: 1,
+            platform: "mcv2-pioneer".into(),
+            cluster_nodes: 1,
+            cores_per_node: 64,
+            lib: None,
+            fabric: None,
+        }
+        .estimate(&inv)
+        .unwrap();
+        assert!(est.value < 0.25 * hpl.value, "SpMV {} !<< HPL {}", est.value, hpl.value);
+    }
+
+    #[test]
+    fn degenerate_spmv_shape_is_a_typed_error_not_a_nan() {
+        let inv = monte_cimone_v2();
+        let mk = |rows, nnz, idx, threads| SparseSpmvWorkload {
+            name: "spmv-bad".into(),
+            partition: "mcv2".into(),
+            nodes: 1,
+            platform: "mcv2-pioneer".into(),
+            threads,
+            shape: SparseShape { rows, nnz_per_row: nnz, index_bytes: idx },
+        };
+        for w in [
+            mk(0, 27, 4, 64),      // no rows
+            mk(1 << 20, 0, 4, 64), // empty matrix: zero FLOPs
+            mk(1 << 20, 27, 0, 64),
+            mk(1 << 20, 27, 16, 64),
+            mk(1 << 20, 27, 4, 0), // no threads
+        ] {
+            match w.estimate(&inv) {
+                Err(CimoneError::SparseShape { job, reason }) => {
+                    assert_eq!(job, "spmv-bad");
+                    assert!(!reason.is_empty());
+                }
+                other => panic!("expected SparseShape, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn hpl_mxp_beats_fp64_hpl_on_the_vector_node() {
+        let inv = monte_cimone_v2();
+        let hpl = HplWorkload {
+            name: "hpl".into(),
+            partition: "mcv2".into(),
+            nodes: 1,
+            platform: "mcv2-pioneer".into(),
+            cluster_nodes: 1,
+            cores_per_node: 64,
+            lib: None,
+            fabric: None,
+        }
+        .estimate(&inv)
+        .unwrap();
+        let mxp = HplMxpWorkload {
+            name: "hpl-mxp".into(),
+            partition: "mcv2".into(),
+            nodes: 1,
+            platform: "mcv2-pioneer".into(),
+            cluster_nodes: 1,
+            cores_per_node: 64,
+            lib: None,
+            fabric: None,
+        }
+        .estimate(&inv)
+        .unwrap();
+        // SEW=32 doubles the per-core rate; refinement taxes ~6% back
+        assert!(mxp.value > hpl.value, "MxP {} !> HPL {}", mxp.value, hpl.value);
+        assert!(mxp.value < 2.5 * hpl.value, "MxP {} implausibly high", mxp.value);
+        assert!(mxp.runtime_s.is_finite() && mxp.runtime_s > 0.0);
+    }
+
+    #[test]
+    fn hpl_mxp_on_a_scalar_platform_is_a_typed_error() {
+        // MCv1's U740 has no vector unit: its default lib is the scalar
+        // fmadd.d kernel, which has no SEW=32 path — typed, per job
+        let inv = monte_cimone_v2();
+        let w = HplMxpWorkload {
+            name: "hpl-mxp-mcv1".into(),
+            partition: "mcv1".into(),
+            nodes: 1,
+            platform: "mcv1-u740".into(),
+            cluster_nodes: 1,
+            cores_per_node: 4,
+            lib: None,
+            fabric: None,
+        };
+        match w.estimate(&inv) {
+            Err(CimoneError::InvalidKernel { reason, .. }) => {
+                assert!(reason.contains("FP64-only"), "{reason}")
+            }
+            other => panic!("expected InvalidKernel, got {other:?}"),
+        }
     }
 
     #[test]

@@ -108,6 +108,12 @@ pub enum CimoneError {
     #[error("{0}")]
     Asm(#[from] crate::isa::assembler::AsmError),
 
+    /// A sparse workload was given a shape the bandwidth model cannot
+    /// project (zero rows, zero nnz/row, or a nonsense index width) —
+    /// caught before any divide so no NaN reaches the report.
+    #[error("job `{job}` has degenerate sparse shape: {reason}")]
+    SparseShape { job: String, reason: String },
+
     /// A STREAM sweep was asked for a projection at a thread count it
     /// never ran.
     #[error("kernel `{kernel}` has no projection at {threads} threads (available: {available})")]

@@ -12,6 +12,12 @@
 //! configurations. An unsupported VLEN is a typed load-time
 //! [`CimoneError::InvalidKernel`], not a panic.
 //!
+//! The machine is also SEW-generic: `vsetvli` with `e32` doubles the
+//! lanes per register and switches the arithmetic arms to f32
+//! rounding — each lane holds the f32 value widened to f64, so memory
+//! stays a flat f64 array and mixed-precision kernels (HPL-MxP's
+//! SEW=32 GEMM) execute with exactly single-precision numerics.
+//!
 //! The hot loop allocates nothing: loads/stores are `copy_from_slice`
 //! over the flat lane file, splats are `fill`, and the FMA/MUL arms
 //! stream both register groups as slices when they don't alias
@@ -49,13 +55,16 @@ fn disjoint_pair(v: &mut [f64], d: usize, s: usize, len: usize) -> (&mut [f64], 
 #[derive(Debug, Clone)]
 pub struct VecMachine {
     pub vlen_bits: usize,
-    /// log2(lanes per register) — lanes are a power of two, so group
-    /// indexing uses shifts/masks instead of div/mod (hot path).
+    /// log2(lanes per register) at the *current* SEW — lanes are a
+    /// power of two, so group indexing uses shifts/masks instead of
+    /// div/mod (hot path). Updated by `vsetvli` (e32 doubles it).
     lane_shift: u32,
-    /// 32 architectural vector registers, flattened to `32 x vlen/64`
-    /// f64 lanes; a register *group* rooted at `v` is the contiguous
-    /// lane run starting at `v << lane_shift` (as in hardware, where
-    /// LMUL groups span consecutive registers).
+    /// 32 architectural vector registers, flattened to `32 x vlen/32`
+    /// f64 lanes (sized for SEW=32, the narrowest element width; SEW=64
+    /// uses the low half); a register *group* rooted at `v` is the
+    /// contiguous lane run starting at `v << lane_shift` (as in
+    /// hardware, where LMUL groups span consecutive registers). Under
+    /// SEW=32 each lane holds an exact f32 value widened to f64.
     v: Vec<f64>,
     /// 32 scalar FP registers.
     pub f: [f64; 32],
@@ -88,7 +97,9 @@ impl VecMachine {
         Ok(VecMachine {
             vlen_bits,
             lane_shift: lanes.trailing_zeros(),
-            v: vec![0.0; 32 * lanes],
+            // sized for SEW=32 (vlen/32 lanes per register) so a later
+            // `vsetvli ... e32` never reallocates; SEW=64 uses a prefix
+            v: vec![0.0; 32 * (vlen_bits / 32)],
             f: [0.0; 32],
             mem: vec![0.0; mem_elems],
             vl: 0,
@@ -98,8 +109,15 @@ impl VecMachine {
         })
     }
 
+    /// Lanes per register at the current SEW.
     fn lanes(&self) -> usize {
-        lanes_per_reg(self.vlen_bits)
+        1 << self.lane_shift
+    }
+
+    /// Is the machine currently in 32-bit-element mode?
+    #[inline(always)]
+    fn e32(&self) -> bool {
+        self.vtype.sew == Sew::E32
     }
 
     /// Lane `lane` of architectural register `vreg` (debug/test access).
@@ -131,6 +149,9 @@ impl VecMachine {
                 }
                 self.vtype = vtype;
                 self.vl = vsetvl(avl, vtype, self.vlen_bits);
+                // e32 doubles the lanes per register; group indexing
+                // below shifts by the SEW-adjusted lane count
+                self.lane_shift = (self.vlen_bits / vtype.sew.bits()).trailing_zeros();
             }
             Inst::Vle { sew, vd, addr } => {
                 self.check_sew(sew)?;
@@ -139,7 +160,14 @@ impl VecMachine {
                     return fault(format!("vle OOB at {}..{}", addr, addr + self.vl));
                 }
                 let d = (vd as usize) << self.lane_shift;
-                self.v[d..d + self.vl].copy_from_slice(&self.mem[addr..addr + self.vl]);
+                if self.e32() {
+                    // an e32 load rounds each memory word to f32
+                    for i in 0..self.vl {
+                        self.v[d + i] = (self.mem[addr + i] as f32) as f64;
+                    }
+                } else {
+                    self.v[d..d + self.vl].copy_from_slice(&self.mem[addr..addr + self.vl]);
+                }
             }
             Inst::Vse { sew, vs, addr } => {
                 self.check_sew(sew)?;
@@ -157,7 +185,27 @@ impl VecMachine {
                 let vl = self.vl;
                 let d = (vd as usize) << self.lane_shift;
                 let a = (vs2 as usize) << self.lane_shift;
-                if d == a {
+                if self.e32() {
+                    // f32 numerics: the same non-fused add/mul order as
+                    // the f64 arms, rounded at 32 bits per operation
+                    let s32 = s as f32;
+                    if d == a {
+                        for x in &mut self.v[d..d + vl] {
+                            *x = ((*x as f32) + s32 * (*x as f32)) as f64;
+                        }
+                    } else if d.abs_diff(a) >= vl {
+                        let (dst, src) = disjoint_pair(&mut self.v, d, a, vl);
+                        for (x, y) in dst.iter_mut().zip(src) {
+                            *x = ((*x as f32) + s32 * (*y as f32)) as f64;
+                        }
+                    } else {
+                        for i in 0..vl {
+                            let acc = (self.group_get(vd, i) as f32)
+                                + s32 * (self.group_get(vs2, i) as f32);
+                            self.group_set(vd, i, acc as f64);
+                        }
+                    }
+                } else if d == a {
                     for x in &mut self.v[d..d + vl] {
                         *x += s * *x;
                     }
@@ -183,7 +231,24 @@ impl VecMachine {
                 let vl = self.vl;
                 let d = (vd as usize) << self.lane_shift;
                 let a = (vs2 as usize) << self.lane_shift;
-                if d == a {
+                if self.e32() {
+                    let s32 = s as f32;
+                    if d == a {
+                        for x in &mut self.v[d..d + vl] {
+                            *x = (s32 * (*x as f32)) as f64;
+                        }
+                    } else if d.abs_diff(a) >= vl {
+                        let (dst, src) = disjoint_pair(&mut self.v, d, a, vl);
+                        for (x, y) in dst.iter_mut().zip(src) {
+                            *x = (s32 * (*y as f32)) as f64;
+                        }
+                    } else {
+                        for i in 0..vl {
+                            let prod = s32 * (self.group_get(vs2, i) as f32);
+                            self.group_set(vd, i, prod as f64);
+                        }
+                    }
+                } else if d == a {
                     for x in &mut self.v[d..d + vl] {
                         *x = s * *x;
                     }
@@ -202,6 +267,7 @@ impl VecMachine {
             Inst::VfmvVf { vd, fs } => {
                 self.check_group(vd)?;
                 let s = self.f[fs as usize];
+                let s = if self.e32() { (s as f32) as f64 } else { s };
                 let d = (vd as usize) << self.lane_shift;
                 self.v[d..d + self.vl].fill(s);
             }
@@ -209,8 +275,11 @@ impl VecMachine {
                 self.check_group(vd)?;
                 self.check_group(vs1)?;
                 self.check_group(vs2)?;
+                let e32 = self.e32();
                 for i in 0..self.vl {
-                    let sum = self.group_get(vs1, i) + self.group_get(vs2, i);
+                    let (a, b) = (self.group_get(vs1, i), self.group_get(vs2, i));
+                    let sum =
+                        if e32 { ((a as f32) + (b as f32)) as f64 } else { a + b };
                     self.group_set(vd, i, sum);
                 }
                 self.flops += self.vl as u64;
@@ -479,6 +548,70 @@ mod tests {
         }
         for (i, want) in arr[2..].iter().enumerate() {
             assert_eq!(m.reg_lane(1, i), *want, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn e32_doubles_the_lanes_per_register() {
+        let mut m = m128();
+        m.step(&Inst::Vsetvli { avl: 8, vtype: VType::new(Sew::E32, Lmul::M1) }).unwrap();
+        assert_eq!(m.vl, 4, "VLEN=128 e32 m1 holds 4 lanes (vs 2 at e64)");
+        m.step(&Inst::Vsetvli { avl: 8, vtype: vt(Lmul::M1) }).unwrap();
+        assert_eq!(m.vl, 2, "switching back to e64 restores the lane count");
+    }
+
+    #[test]
+    fn e32_arithmetic_rounds_at_single_precision() {
+        let mut m = m128();
+        // 0.1 is inexact in both widths; the f32 rounding must show
+        m.mem[0] = 0.1;
+        m.f[0] = 0.1;
+        m.step(&Inst::Vsetvli { avl: 4, vtype: VType::new(Sew::E32, Lmul::M1) }).unwrap();
+        m.step(&Inst::Vle { sew: Sew::E32, vd: 8, addr: 0 }).unwrap();
+        assert_eq!(m.reg_lane(8, 0), (0.1f32) as f64, "e32 load rounds to f32");
+        m.step(&Inst::VfmulVf { vd: 4, fs: 0, vs2: 8 }).unwrap();
+        let want = ((0.1f64 as f32) * (0.1f32)) as f64;
+        assert_eq!(m.reg_lane(4, 0).to_bits(), want.to_bits());
+        assert_ne!(m.reg_lane(4, 0), 0.1 * 0.1, "f64 product would differ");
+    }
+
+    #[test]
+    fn e32_sew_mismatch_detected_both_ways() {
+        let mut m = m128();
+        m.step(&Inst::Vsetvli { avl: 2, vtype: VType::new(Sew::E32, Lmul::M1) }).unwrap();
+        assert!(m.step(&Inst::Vle { sew: Sew::E64, vd: 0, addr: 0 }).is_err());
+        assert!(m.step(&Inst::Vle { sew: Sew::E32, vd: 0, addr: 0 }).is_ok());
+    }
+
+    #[test]
+    fn e32_fast_paths_are_bit_identical_across_vlens() {
+        // the e32 mirror of the f64 cross-VLEN suite: same program, any
+        // VLEN, bit-identical f32-rounded lanes
+        for vlen in [64usize, 128, 256, 512] {
+            let mut m = VecMachine::new(vlen, 128).unwrap();
+            for i in 0..32 {
+                m.mem[i] = (i as f64) * 0.375 - 2.0;
+            }
+            m.f[0] = 1.0 / 3.0;
+            let e32 = VType::new(Sew::E32, Lmul::M4);
+            m.step(&Inst::Vsetvli { avl: 16, vtype: e32 }).unwrap();
+            let vl = m.vl;
+            assert_eq!(vl, (16).min(4 * vlen / 32), "VLEN {vlen}");
+            m.step(&Inst::Vle { sew: Sew::E32, vd: 8, addr: 0 }).unwrap();
+            m.step(&Inst::VfmvVf { vd: 0, fs: 0 }).unwrap();
+            m.step(&Inst::VfmaccVf { vd: 0, fs: 0, vs2: 8 }).unwrap();
+            m.step(&Inst::VfmulVf { vd: 16, fs: 0, vs2: 0 }).unwrap();
+            m.step(&Inst::Vse { sew: Sew::E32, vs: 16, addr: 64 }).unwrap();
+            let s = (1.0f64 / 3.0) as f32;
+            for i in 0..vl {
+                let x = ((i as f64) * 0.375 - 2.0) as f32;
+                let want = (s * (s + s * x)) as f64;
+                assert_eq!(
+                    m.mem[64 + i].to_bits(),
+                    want.to_bits(),
+                    "VLEN {vlen} lane {i}"
+                );
+            }
         }
     }
 

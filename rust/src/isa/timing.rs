@@ -26,6 +26,12 @@ use crate::arch::soc::CoreModel;
 /// (in-order bypass latency).
 pub const FLD_USE_STALL: f64 = 1.5;
 
+/// 64-bit-equivalent datapath lanes occupied by `vl` elements at the
+/// current SEW: E64 is 1 lane/element, E32 packs two elements per lane.
+fn eff_lanes(vl: usize, vtype: VType) -> f64 {
+    vl as f64 * (vtype.sew.bits() as f64 / 64.0)
+}
+
 /// Cycle accounting for one program execution.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TimingBreakdown {
@@ -64,9 +70,19 @@ impl<'a> CycleModel<'a> {
         CycleModel { core }
     }
 
-    /// Cost of one vector instruction at the given active lane count.
+    /// Cost of one vector instruction at the given active lane count
+    /// (64-bit-equivalent lanes; see [`CycleModel::vector_cost_eff`]).
     fn vector_cost(&self, lanes: usize) -> f64 {
-        let busy = lanes as f64 / self.core.vfma_lanes_per_cycle.max(1) as f64;
+        self.vector_cost_eff(lanes as f64)
+    }
+
+    /// Cost of one vector instruction occupying `eff_lanes` 64-bit
+    /// datapath lanes. SEW=32 elements pack two per lane, so an E32
+    /// instruction at vl elements occupies vl/2 effective lanes — the
+    /// mechanism behind mixed-precision (HPL-MxP) speedup: same datapath
+    /// width, twice the elements per cycle.
+    fn vector_cost_eff(&self, eff_lanes: f64) -> f64 {
+        let busy = eff_lanes / self.core.vfma_lanes_per_cycle.max(1) as f64;
         busy.max(self.core.vinst_dispatch_cycles)
     }
 
@@ -86,7 +102,7 @@ impl<'a> CycleModel<'a> {
     /// error — nothing anywhere rejects a kernel-VLEN/core-VLEN
     /// mismatch, by design.
     pub fn analyze_at(&self, prog: &Program, vlen_bits: usize) -> TimingBreakdown {
-        let mut _vtype = VType::new(Sew::E64, Lmul::M1);
+        let mut vtype = VType::new(Sew::E64, Lmul::M1);
         let mut vl = 0usize;
         let vlen = vlen_bits.max(64);
         let mut t = TimingBreakdown {
@@ -101,20 +117,20 @@ impl<'a> CycleModel<'a> {
         for (idx, inst) in prog.insts.iter().enumerate() {
             match inst {
                 Inst::Vsetvli { avl, vtype: vt } => {
-                    _vtype = *vt;
+                    vtype = *vt;
                     vl = super::rvv::vsetvl(*avl, *vt, vlen);
                     // vsetvli itself is a cheap scalar op
                     t.scalar_other_cycles += 1.0 / self.core.issue_width as f64;
                 }
                 Inst::Vle { .. } | Inst::Vse { .. } => {
-                    t.vector_cycles += self.vector_cost(vl);
+                    t.vector_cycles += self.vector_cost_eff(eff_lanes(vl, vtype));
                 }
                 Inst::VfmaccVf { .. } | Inst::VfmulVf { .. } | Inst::VfaddVv { .. } => {
-                    t.vector_cycles += self.vector_cost(vl);
+                    t.vector_cycles += self.vector_cost_eff(eff_lanes(vl, vtype));
                     t.flops += inst.flops(vl);
                 }
                 Inst::VfmvVf { .. } => {
-                    t.vector_cycles += self.vector_cost(vl);
+                    t.vector_cycles += self.vector_cost_eff(eff_lanes(vl, vtype));
                 }
                 Inst::Fld { fd, .. } => {
                     t.scalar_mem_cycles += 1.0 / self.core.lsu_per_cycle;
@@ -233,6 +249,32 @@ mod tests {
         assert!((m.vector_cost(2) - core.vinst_dispatch_cycles).abs() < 1e-12);
         // LMUL=4: 8 lanes / 2 = 4 > dispatch -> cost 4
         assert!((m.vector_cost(8) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn e32_packs_two_elements_per_lane() {
+        let core = c920();
+        let m = CycleModel::new(&core);
+        // Same element count: E32 occupies half the effective lanes, so
+        // the grouped vfmacc finishes in half the busy cycles (down to
+        // the dispatch floor) — the HPL-MxP mechanism.
+        let mut p64 = Program::new(Dialect::Rvv10);
+        p64.push(Inst::Vsetvli { avl: 8, vtype: VType::new(Sew::E64, Lmul::M4) });
+        p64.push(Inst::VfmaccVf { vd: 0, fs: 0, vs2: 8 });
+        let mut p32 = Program::new(Dialect::Rvv10);
+        p32.push(Inst::Vsetvli { avl: 8, vtype: VType::new(Sew::E32, Lmul::M2) });
+        p32.push(Inst::VfmaccVf { vd: 0, fs: 0, vs2: 8 });
+        let t64 = m.analyze_at(&p64, 128);
+        let t32 = m.analyze_at(&p32, 128);
+        // both run all 8 elements (same FLOPs), E32 in half the occupancy
+        assert_eq!(t64.flops, 16);
+        assert_eq!(t32.flops, 16);
+        assert!((t64.vector_cycles - 4.0).abs() < 1e-12, "{}", t64.vector_cycles);
+        assert!(
+            (t32.vector_cycles - core.vinst_dispatch_cycles.max(2.0)).abs() < 1e-12,
+            "{}",
+            t32.vector_cycles
+        );
     }
 
     #[test]

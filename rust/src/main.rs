@@ -27,6 +27,12 @@
 //!         [--matrix power-cap]       ... or the power-cap sweep: node count
 //!                                        x per-node W cap per generation,
 //!                                        best GF/s-per-W operating point
+//!         [--matrix precision]       ... or the mixed-precision sweep: FP64
+//!                                        HPL vs HPL-MxP (SEW=32, two elems
+//!                                        per lane) on every vector platform
+//!         [--matrix sparse]          ... or the sparse roofline: STREAM
+//!                                        triad vs an HPCG-shaped SpMV per
+//!                                        generation, both DDR-stream bound
 //!         [--top-k 4] [--shard 64]   ... streaming knobs: keep baseline +
 //!                                        best k rows; scenarios per batch
 //! cimone bench [--quick] [--json]    estimation-stack perf suite: simulated
@@ -204,10 +210,13 @@ fn run(args: &Args) -> Result<(), CimoneError> {
                 (None, Some("fabric-scaling")) => ScenarioMatrix::fabric_scaling(),
                 (None, Some("blas-tuning")) => ScenarioMatrix::blas_tuning(),
                 (None, Some("power-cap")) => ScenarioMatrix::power_cap(),
+                (None, Some("precision")) => ScenarioMatrix::precision(),
+                (None, Some("sparse")) => ScenarioMatrix::sparse(),
                 (None, Some(other)) => {
                     return Err(CimoneError::Cli(format!(
                         "unknown built-in matrix `{other}` \
-                         (generations | fabric-scaling | blas-tuning | power-cap)"
+                         (generations | fabric-scaling | blas-tuning | power-cap | \
+                          precision | sparse)"
                     )));
                 }
             };

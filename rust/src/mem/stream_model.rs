@@ -3,12 +3,135 @@
 
 use super::ddr::DdrModel;
 use crate::arch::soc::SocDescriptor;
+use crate::util::hash::ContentHasher;
 
 /// Relative bandwidth of the four STREAM kernels vs copy (empirical:
 /// add/triad slightly beat copy/scale on most DDR4 systems because two
 /// read streams amortize write-allocate traffic).
 pub const KERNEL_FACTORS: [(&str, f64); 4] =
     [("copy", 1.00), ("scale", 0.985), ("add", 1.04), ("triad", 1.045)];
+
+/// The triad factor from [`KERNEL_FACTORS`] — SpMV's streaming phase
+/// (values + column indices + y) behaves like triad: two read streams
+/// and one write stream amortizing write-allocate traffic.
+pub const SPMV_STREAM_FACTOR: f64 = 1.045;
+
+/// Efficiency of indexed-gather traffic relative to unit-stride
+/// streaming: each x[col[j]] miss pulls a whole line but uses 8 bytes,
+/// and the open-page locality the DDR model's `efficiency` assumes is
+/// gone. Calibrated so an SG2042-class socket lands at the ~10-15% of
+/// triad bandwidth HPCG-style SpMV typically sustains uncached.
+pub const SPMV_GATHER_EFF: f64 = 0.6;
+
+/// CSR problem shape of a sparse matrix-vector workload: `y = A*x` with
+/// `rows` rows averaging `nnz_per_row` nonzeros, column indices stored
+/// in `index_bytes`-wide integers. (A 27-point stencil at 1M rows is the
+/// HPCG-style default.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SparseShape {
+    pub rows: usize,
+    pub nnz_per_row: usize,
+    /// Width of one CSR column index / row pointer (4 = int32 CSR).
+    pub index_bytes: usize,
+}
+
+impl SparseShape {
+    /// Total nonzeros.
+    pub fn nnz(&self) -> f64 {
+        self.rows as f64 * self.nnz_per_row as f64
+    }
+
+    /// Degenerate-shape guard: a zero dimension would put 0 in a
+    /// denominator downstream and surface as a NaN GF/s row. Returns the
+    /// reason string callers wrap into
+    /// [`crate::error::CimoneError::SparseShape`].
+    pub fn check(&self) -> Result<(), String> {
+        if self.rows == 0 {
+            return Err("rows must be >= 1".into());
+        }
+        if self.nnz_per_row == 0 {
+            return Err("nnz_per_row must be >= 1 (an empty matrix has no FLOPs)".into());
+        }
+        if self.index_bytes == 0 || self.index_bytes > 8 {
+            return Err(format!(
+                "index_bytes must be in 1..=8, got {} (4 = int32 CSR)",
+                self.index_bytes
+            ));
+        }
+        Ok(())
+    }
+
+    /// Canonical content feed for the estimation cache.
+    pub fn feed_content(&self, h: &mut ContentHasher) {
+        h.write_usize(self.rows).write_usize(self.nnz_per_row).write_usize(self.index_bytes);
+    }
+}
+
+/// Projected SpMV performance of one node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpmvProjection {
+    /// Time for one y = A*x sweep (seconds).
+    pub time_s: f64,
+    /// 2 * nnz FLOPs over `time_s`.
+    pub gflops: f64,
+    /// Effective DDR traffic rate: (streamed + gathered bytes) / time.
+    /// A weighted harmonic mean of the streaming and gather rates, so it
+    /// never exceeds the node's triad bandwidth.
+    pub ddr_bytes_per_s: f64,
+    /// Fraction of x resident in the last-level caches (0..=1).
+    pub x_hit: f64,
+}
+
+/// Last-level cache bytes reachable from `threads` cores: the L3 where
+/// one exists, else the per-cluster L2 instances the threads span.
+fn llc_bytes(desc: &SocDescriptor) -> f64 {
+    desc.sockets
+        .iter()
+        .map(|s| match &s.l3 {
+            Some(l3) => l3.size_bytes as f64,
+            None => {
+                let instances = (s.cores / s.l2.shared_by.max(1)).max(1);
+                (s.l2.size_bytes * instances) as f64
+            }
+        })
+        .sum()
+}
+
+/// Project CSR SpMV (`y = A*x`) on a node: the streaming phase (values,
+/// column indices, row pointers, y) runs at triad bandwidth; the
+/// x-gather phase pays a full cache line per miss at
+/// [`SPMV_GATHER_EFF`] of that rate, with the hit fraction set by how
+/// much of x the last-level caches hold. Bandwidth-bound like STREAM,
+/// compute-free like HPCG's SpMV kernel.
+pub fn predict_spmv(
+    desc: &SocDescriptor,
+    threads: usize,
+    shape: SparseShape,
+) -> Result<SpmvProjection, String> {
+    shape.check()?;
+    let bw = predict_node_bandwidth(desc, threads, true) * SPMV_STREAM_FACTOR;
+    if bw <= 0.0 {
+        return Err(format!("no projected bandwidth at {threads} threads"));
+    }
+    let rows = shape.rows as f64;
+    let nnz = shape.nnz();
+    let idx = shape.index_bytes as f64;
+    // unit-stride traffic: values + column indices per nonzero, one row
+    // pointer and the y element per row
+    let stream_bytes = nnz * (8.0 + idx) + rows * (idx + 8.0);
+    // x residency: the gather stream hits wherever x fits in the LLCs
+    let x_bytes = rows * 8.0;
+    let x_hit = (llc_bytes(desc) / x_bytes).min(1.0);
+    let line = desc.sockets[0].l2.line_bytes.max(8) as f64;
+    let gather_bytes = nnz * (1.0 - x_hit) * line;
+    let time_s = stream_bytes / bw + gather_bytes / (bw * SPMV_GATHER_EFF);
+    Ok(SpmvProjection {
+        time_s,
+        gflops: 2.0 * nnz / time_s / 1e9,
+        ddr_bytes_per_s: (stream_bytes + gather_bytes) / time_s,
+        x_hit,
+    })
+}
 
 /// Predicted aggregate bandwidth (bytes/s) for `threads` spread over the
 /// node. `symmetric_pinning` splits threads evenly across sockets (the
@@ -104,5 +227,74 @@ mod tests {
     fn kernel_factors_cover_all_four() {
         let names: Vec<&str> = KERNEL_FACTORS.iter().map(|(n, _)| *n).collect();
         assert_eq!(names, vec!["copy", "scale", "add", "triad"]);
+    }
+
+    /// HPCG-style default shape: 1M rows, 27-point stencil, int32 CSR.
+    fn hpcg_shape() -> SparseShape {
+        SparseShape { rows: 1 << 20, nnz_per_row: 27, index_bytes: 4 }
+    }
+
+    #[test]
+    fn spmv_never_exceeds_triad_bandwidth() {
+        // the acceptance invariant: effective DDR rate is a harmonic
+        // mean of the stream and gather rates, <= triad by construction
+        for d in [presets::u740(), presets::sg2042(), presets::sg2042_dual()] {
+            let threads = d.total_cores();
+            let triad = predict_node_bandwidth(&d, threads, true) * SPMV_STREAM_FACTOR;
+            for shape in [
+                hpcg_shape(),
+                SparseShape { rows: 1 << 12, nnz_per_row: 7, index_bytes: 4 },
+                SparseShape { rows: 1 << 24, nnz_per_row: 50, index_bytes: 8 },
+            ] {
+                let p = predict_spmv(&d, threads, shape).unwrap();
+                assert!(
+                    p.ddr_bytes_per_s <= triad * (1.0 + 1e-12),
+                    "{}: {} > {triad}",
+                    d.name,
+                    p.ddr_bytes_per_s
+                );
+                assert!(p.gflops > 0.0 && p.gflops.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn cached_x_runs_at_stream_rate() {
+        // when x fits in the LLC the gather term vanishes and the
+        // effective rate IS the triad rate
+        let d = presets::sg2042();
+        let small = SparseShape { rows: 1 << 10, nnz_per_row: 27, index_bytes: 4 };
+        let p = predict_spmv(&d, 64, small).unwrap();
+        assert_eq!(p.x_hit, 1.0);
+        let triad = predict_node_bandwidth(&d, 64, true) * SPMV_STREAM_FACTOR;
+        assert!((p.ddr_bytes_per_s - triad).abs() < 1e-3 * triad);
+        // ...and a DDR-resident x is strictly slower per nonzero
+        let big = predict_spmv(&d, 64, hpcg_shape()).unwrap();
+        assert!(big.x_hit < 1.0);
+        assert!(big.gflops < p.gflops);
+    }
+
+    #[test]
+    fn degenerate_sparse_shapes_are_errors_not_nans() {
+        let d = presets::sg2042();
+        for shape in [
+            SparseShape { rows: 0, nnz_per_row: 27, index_bytes: 4 },
+            SparseShape { rows: 100, nnz_per_row: 0, index_bytes: 4 },
+            SparseShape { rows: 100, nnz_per_row: 27, index_bytes: 0 },
+            SparseShape { rows: 100, nnz_per_row: 27, index_bytes: 16 },
+        ] {
+            assert!(predict_spmv(&d, 64, shape).is_err(), "{shape:?}");
+        }
+        // zero threads: typed, not a division by zero bandwidth
+        assert!(predict_spmv(&d, 0, hpcg_shape()).is_err());
+    }
+
+    #[test]
+    fn spmv_scales_with_the_memory_system() {
+        // bandwidth-bound: the dual-socket node roughly doubles SpMV
+        let one = predict_spmv(&presets::sg2042(), 64, hpcg_shape()).unwrap();
+        let two = predict_spmv(&presets::sg2042_dual(), 128, hpcg_shape()).unwrap();
+        let ratio = two.gflops / one.gflops;
+        assert!((1.5..2.5).contains(&ratio), "{ratio}");
     }
 }

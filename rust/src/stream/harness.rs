@@ -125,10 +125,12 @@ mod tests {
     }
 
     #[test]
-    fn projection_hits_paper_number_at_64_threads() {
+    fn projection_hits_paper_number_at_64_threads() -> Result<(), CimoneError> {
         let r = run_sweep(&tiny(), &presets::sg2042());
-        let at64 = r.results[0].projected_at(64).unwrap();
+        // `?` through the typed NoProjection path PR 3 introduced
+        let at64 = r.results[0].projected_at(64)?;
         assert!((at64 - 41.9e9).abs() < 1e9, "{at64}");
+        Ok(())
     }
 
     #[test]

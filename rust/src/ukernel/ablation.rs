@@ -22,7 +22,7 @@
 use super::registry::{blis_lmul4, BlockingPolicy, KernelDescriptor, KernelFamily};
 use super::PanelLayout;
 use crate::arch::soc::CoreModel;
-use crate::isa::rvv::Lmul;
+use crate::isa::rvv::{Lmul, Sew};
 use crate::isa::timing::CycleModel;
 
 /// The paper's register-tile geometry, shared by every sweep point.
@@ -54,6 +54,7 @@ pub fn point(vlen_bits: usize, lmul: Lmul, k_unroll: usize) -> KernelDescriptor 
         family: KernelFamily::BlisRvv,
         vlen_bits,
         lmul,
+        sew: Sew::E64,
         native_rvv10: false,
         mr: MR,
         nr: NR,

@@ -91,6 +91,7 @@ pub fn interned_program(desc: &KernelDescriptor, layout: PanelLayout) -> Arc<Pro
     h.write_str(desc.family.spec_name());
     h.write_usize(desc.vlen_bits);
     h.write_usize(desc.lmul.multiplier());
+    h.write_usize(desc.sew.bits());
     h.write_usize(desc.k_unroll);
     h.write_usize(layout.mr).write_usize(layout.nr).write_usize(layout.kc);
     // asm-source kernels: the program comes from the assembled listing,
@@ -269,6 +270,26 @@ mod tests {
         let core = u74();
         let p = analyze(&crate::ukernel::registry::openblas_generic(), &core);
         assert!(p.raw_gflops > 0.2 && p.raw_gflops < 2.0, "{}", p.raw_gflops);
+    }
+
+    #[test]
+    fn e32_kernel_analyzes_at_twice_the_e64_rate() {
+        // the HPL-MxP premise at the per-core level: the doubled-MR
+        // SEW=32 twin issues the same schedule (same effective datapath
+        // occupancy) while moving twice the elements
+        use crate::isa::rvv::Sew;
+        use crate::ukernel::registry::blis_lmul4;
+        let core = c920();
+        let mut sp = blis_lmul4();
+        sp.id = "blis-lmul4-e32".into();
+        sp.aliases = Vec::new();
+        sp.sew = Sew::E32;
+        sp.mr = 16;
+        sp.validate().unwrap();
+        let r64 = analyze(&blis_lmul4(), &core).raw_gflops;
+        let r32 = analyze(&sp, &core).raw_gflops;
+        let ratio = r32 / r64;
+        assert!((1.9..2.1).contains(&ratio), "E32 ratio {ratio:.3}");
     }
 
     #[test]

@@ -29,7 +29,8 @@ use crate::isa::rvv::{Lmul, Sew, VType};
 /// Register geometry of one vector micro-kernel configuration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct VectorGeometry {
-    /// FP64 lanes per architectural register (VLEN / 64).
+    /// Elements per architectural register (VLEN / SEW — at the default
+    /// SEW=64 this is the FP64 lane count; SEW=32 doubles it).
     pub lanes: usize,
     /// Architectural registers per LMUL group.
     pub group: usize,
@@ -52,11 +53,12 @@ pub struct VectorGeometry {
 fn geometry(
     vlen_bits: usize,
     lmul: Lmul,
+    sew: Sew,
     mr: usize,
     nr: usize,
     a_base: impl Fn(usize, usize) -> usize,
 ) -> VectorGeometry {
-    let lanes = vlen_bits / 64;
+    let lanes = vlen_bits / sew.bits();
     let group = lmul.multiplier();
     let elems_per_group = group * lanes;
     let ops_per_col = mr.div_ceil(elems_per_group);
@@ -79,7 +81,20 @@ fn geometry(
 /// every paper configuration — kept so the built-ins stay bit-identical
 /// to the seed's hand-written kernels).
 pub fn blis_geometry(vlen_bits: usize, lmul: Lmul, mr: usize, nr: usize) -> VectorGeometry {
-    geometry(vlen_bits, lmul, mr, nr, |group, ops_per_col| {
+    blis_geometry_sew(vlen_bits, lmul, Sew::E64, mr, nr)
+}
+
+/// [`blis_geometry`] at an explicit element width: SEW=32 doubles the
+/// elements per group, so the same MR tile needs half the grouped ops —
+/// the register-map side of mixed-precision (HPL-MxP) kernels.
+pub fn blis_geometry_sew(
+    vlen_bits: usize,
+    lmul: Lmul,
+    sew: Sew,
+    mr: usize,
+    nr: usize,
+) -> VectorGeometry {
+    geometry(vlen_bits, lmul, sew, mr, nr, |group, ops_per_col| {
         ((nr * ops_per_col * group).div_ceil(group) * group).max(16)
     })
 }
@@ -90,7 +105,19 @@ pub fn blis_geometry(vlen_bits: usize, lmul: Lmul, mr: usize, nr: usize) -> Vect
 /// four columns in v0..v7 and the bottom halves in v8..v15), and the A
 /// column follows the accumulators directly.
 pub fn openblas_geometry(vlen_bits: usize, lmul: Lmul, mr: usize, nr: usize) -> VectorGeometry {
-    geometry(vlen_bits, lmul, mr, nr, |group, ops_per_col| nr * group * ops_per_col)
+    openblas_geometry_sew(vlen_bits, lmul, Sew::E64, mr, nr)
+}
+
+/// [`openblas_geometry`] at an explicit element width (see
+/// [`blis_geometry_sew`]).
+pub fn openblas_geometry_sew(
+    vlen_bits: usize,
+    lmul: Lmul,
+    sew: Sew,
+    mr: usize,
+    nr: usize,
+) -> VectorGeometry {
+    geometry(vlen_bits, lmul, sew, mr, nr, |group, ops_per_col| nr * group * ops_per_col)
 }
 
 /// BLIS rank-1-update schedule (the Fig 2 family), generalized over
@@ -104,9 +131,23 @@ pub fn blis_rvv_program(
     k_unroll: usize,
     l: PanelLayout,
 ) -> Program {
-    let g = blis_geometry(vlen_bits, lmul, l.mr, l.nr);
+    blis_rvv_program_sew(vlen_bits, lmul, Sew::E64, k_unroll, l)
+}
+
+/// [`blis_rvv_program`] at an explicit element width. SEW=32 keeps the
+/// exact schedule shape (same rank-1 update, same register map rules)
+/// but every grouped op moves twice the elements — the kernel side of
+/// the HPL-MxP mixed-precision workload.
+pub fn blis_rvv_program_sew(
+    vlen_bits: usize,
+    lmul: Lmul,
+    sew: Sew,
+    k_unroll: usize,
+    l: PanelLayout,
+) -> Program {
+    let g = blis_geometry_sew(vlen_bits, lmul, sew, l.mr, l.nr);
     let mut p = Program::new(Dialect::Rvv10);
-    let mut vt = VType::new(Sew::E64, lmul);
+    let mut vt = VType::new(sew, lmul);
     vt.tail_agnostic = true;
     vt.mask_agnostic = true;
     p.push(Inst::Vsetvli { avl: g.elems_per_group.min(l.mr), vtype: vt });
@@ -115,7 +156,7 @@ pub fn blis_rvv_program(
     for j in 0..l.nr {
         for r in 0..g.ops_per_col {
             p.push(Inst::Vle {
-                sew: Sew::E64,
+                sew,
                 vd: (j * g.regs_per_col + r * g.group) as u8,
                 addr: l.c_offset(j) + r * g.elems_per_group,
             });
@@ -129,7 +170,7 @@ pub fn blis_rvv_program(
         for kk in k..k + block {
             for r in 0..g.ops_per_col {
                 p.push(Inst::Vle {
-                    sew: Sew::E64,
+                    sew,
                     vd: (g.a_base + r * g.group) as u8,
                     addr: l.a_offset(kk) + r * g.elems_per_group,
                 });
@@ -156,7 +197,7 @@ pub fn blis_rvv_program(
     for j in 0..l.nr {
         for r in 0..g.ops_per_col {
             p.push(Inst::Vse {
-                sew: Sew::E64,
+                sew,
                 vs: (j * g.regs_per_col + r * g.group) as u8,
                 addr: l.c_offset(j) + r * g.elems_per_group,
             });
@@ -176,19 +217,33 @@ pub fn openblas_asm_program(
     k_unroll: usize,
     l: PanelLayout,
 ) -> Program {
+    openblas_asm_program_sew(vlen_bits, lmul, Sew::E64, k_unroll, l)
+}
+
+/// [`openblas_asm_program`] at an explicit element width (see
+/// [`blis_rvv_program_sew`]). The scalar (`vlen_bits == 0`) fallback is
+/// FP64-only — descriptor validation rejects SEW=32 scalar kernels
+/// before this generator runs.
+pub fn openblas_asm_program_sew(
+    vlen_bits: usize,
+    lmul: Lmul,
+    sew: Sew,
+    k_unroll: usize,
+    l: PanelLayout,
+) -> Program {
     if vlen_bits == 0 {
         return openblas_scalar_program(k_unroll, l);
     }
-    let g = openblas_geometry(vlen_bits, lmul, l.mr, l.nr);
+    let g = openblas_geometry_sew(vlen_bits, lmul, sew, l.mr, l.nr);
     let mut p = Program::new(Dialect::Thead071);
-    let vt = VType::new(Sew::E64, lmul);
+    let vt = VType::new(sew, lmul);
     p.push(Inst::Vsetvli { avl: g.elems_per_group.min(l.mr), vtype: vt });
 
     // C tile: interleaved accumulator groups (see `openblas_geometry`).
     for j in 0..l.nr {
         for r in 0..g.ops_per_col {
             p.push(Inst::Vle {
-                sew: Sew::E64,
+                sew,
                 vd: (r * l.nr * g.group + j * g.group) as u8,
                 addr: l.c_offset(j) + r * g.elems_per_group,
             });
@@ -206,7 +261,7 @@ pub fn openblas_asm_program(
             // ...then the A column group(s)...
             for r in 0..g.ops_per_col {
                 p.push(Inst::Vle {
-                    sew: Sew::E64,
+                    sew,
                     vd: (g.a_base + r * g.group) as u8,
                     addr: l.a_offset(kk) + r * g.elems_per_group,
                 });
@@ -231,7 +286,7 @@ pub fn openblas_asm_program(
     for j in 0..l.nr {
         for r in 0..g.ops_per_col {
             p.push(Inst::Vse {
-                sew: Sew::E64,
+                sew,
                 vs: (r * l.nr * g.group + j * g.group) as u8,
                 addr: l.c_offset(j) + r * g.elems_per_group,
             });
@@ -370,6 +425,34 @@ mod tests {
         let first_fma = p.insts.iter().position(|i| matches!(i, Inst::VfmaccVf { .. })).unwrap();
         let last_fld = p.insts.iter().rposition(|i| matches!(i, Inst::Fld { .. })).unwrap();
         assert!(last_fld < first_fma, "flds must precede the FMA burst");
+    }
+
+    #[test]
+    fn e32_geometry_halves_the_grouped_ops() {
+        // SEW=32 at VLEN=128: a register holds 4 elements, so the same
+        // 8-row tile needs half the grouped ops of the E64 map
+        let g64 = blis_geometry(128, Lmul::M1, 8, 4);
+        let g32 = blis_geometry_sew(128, Lmul::M1, Sew::E32, 8, 4);
+        assert_eq!(g32.lanes, 2 * g64.lanes);
+        assert_eq!(g32.ops_per_col * 2, g64.ops_per_col);
+        // the doubled-MR MxP tile lands on exactly the E64 register budget
+        let g = blis_geometry_sew(128, Lmul::M4, Sew::E32, 16, 4);
+        assert_eq!(g.regs_used, blis_geometry(128, Lmul::M4, 8, 4).regs_used);
+    }
+
+    #[test]
+    fn e32_program_matches_e64_shape_with_doubled_mr() {
+        // twice the rows at half the width: identical schedule shape
+        let p64 = blis_rvv_program(128, Lmul::M4, 1, PanelLayout::new(8, 4, 3));
+        let p32 =
+            blis_rvv_program_sew(128, Lmul::M4, Sew::E32, 1, PanelLayout::new(16, 4, 3));
+        assert_eq!(p64.len(), p32.len());
+        assert!(p32.validate_register_groups(128).is_ok());
+        // every vector memory op carries the 32-bit element width
+        assert!(p32.insts.iter().all(|i| match i {
+            Inst::Vle { sew, .. } | Inst::Vse { sew, .. } => *sew == Sew::E32,
+            _ => true,
+        }));
     }
 
     #[test]

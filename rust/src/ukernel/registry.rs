@@ -39,7 +39,7 @@ use crate::error::CimoneError;
 use crate::isa::assembler::{assemble_kernel, AsmKernel};
 use crate::isa::exec::VecMachine;
 use crate::isa::inst::{Dialect, Program};
-use crate::isa::rvv::Lmul;
+use crate::isa::rvv::{Lmul, Sew};
 use crate::util::config::Section;
 use crate::util::hash::ContentHasher;
 use crate::util::Matrix;
@@ -171,6 +171,12 @@ pub struct KernelDescriptor {
     pub vlen_bits: usize,
     /// Register-group multiplier (ignored by scalar kernels).
     pub lmul: Lmul,
+    /// Element width the kernel computes at. E64 is classic DGEMM (all
+    /// built-ins); E32 is the single-precision kernel behind the
+    /// HPL-MxP mixed-precision workload — same schedule, twice the
+    /// elements per register group. Scalar (VLEN=0) kernels are
+    /// FP64-only, enforced by [`KernelDescriptor::validate`].
+    pub sew: Sew,
     /// Was the kernel tuned (and its `host_overhead` calibrated) for a
     /// ratified-RVV 1.0 pipeline? The paper's four kernels carry
     /// `false` — they are 0.7.1-era code (OpenBLAS's theadvector asm,
@@ -221,6 +227,9 @@ impl KernelDescriptor {
         h.write_usize(self.mr).write_usize(self.nr).write_usize(self.k_unroll);
         h.write_str(self.blocking.spec_name());
         h.write_f64(self.host_overhead);
+        // element width changes every generated program and timing —
+        // it MUST shift the content digest (warm-cache bit-identity)
+        h.write_usize(self.sew.bits());
         // asm-source kernels: the *assembled unit* feeds (canonical
         // per-inst render), so comment/whitespace edits to a listing
         // never shift cache keys
@@ -273,6 +282,12 @@ impl KernelDescriptor {
             if self.family != KernelFamily::OpenblasAsm {
                 return Err(self.err("VLEN=0 (scalar) is only an openblas-asm configuration"));
             }
+            if self.sew != Sew::E64 {
+                return Err(self.err(
+                    "sew = 32 needs a vector kernel (vlen >= 64) — the scalar \
+                     fmadd.d path is FP64-only",
+                ));
+            }
             if self.mr * self.nr > 16 {
                 return Err(self
                     .err(format!("scalar {}x{} tile overflows f16..f31", self.mr, self.nr)));
@@ -300,6 +315,15 @@ impl KernelDescriptor {
                 .asm
                 .as_ref()
                 .ok_or_else(|| self.err("asm-source kernel without an assembled listing"))?;
+            // an assembly listing fixes its own element widths per
+            // instruction — the descriptor-level sew knob is for the
+            // generator families only
+            if self.sew != Sew::E64 {
+                return Err(self.err(
+                    "asm-source kernels carry their element width in the listing \
+                     (sew overrides apply to generator families only)",
+                ));
+            }
             // dialect consistency: a theadvector listing cannot claim to
             // be native RVV 1.0 code (PORT_TAX would be mischarged)
             if src.unit.dialect == Dialect::Thead071 && self.native_rvv10 {
@@ -317,12 +341,20 @@ impl KernelDescriptor {
                 .map_err(|reason| self.err(format!("{}: {reason}", src.file)));
         }
         let g = match self.family {
-            KernelFamily::BlisRvv => {
-                generators::blis_geometry(self.vlen_bits, self.lmul, self.mr, self.nr)
-            }
-            KernelFamily::OpenblasAsm => {
-                generators::openblas_geometry(self.vlen_bits, self.lmul, self.mr, self.nr)
-            }
+            KernelFamily::BlisRvv => generators::blis_geometry_sew(
+                self.vlen_bits,
+                self.lmul,
+                self.sew,
+                self.mr,
+                self.nr,
+            ),
+            KernelFamily::OpenblasAsm => generators::openblas_geometry_sew(
+                self.vlen_bits,
+                self.lmul,
+                self.sew,
+                self.mr,
+                self.nr,
+            ),
             KernelFamily::AsmSource => unreachable!("handled above"),
         };
         if self.mr > g.elems_per_group && self.mr % g.elems_per_group != 0 {
@@ -346,12 +378,20 @@ impl KernelDescriptor {
     pub fn program(&self, l: PanelLayout) -> Program {
         assert_eq!((l.mr, l.nr), (self.mr, self.nr), "{}: layout/tile mismatch", self.id);
         match self.family {
-            KernelFamily::BlisRvv => {
-                generators::blis_rvv_program(self.vlen_bits, self.lmul, self.k_unroll, l)
-            }
-            KernelFamily::OpenblasAsm => {
-                generators::openblas_asm_program(self.vlen_bits, self.lmul, self.k_unroll, l)
-            }
+            KernelFamily::BlisRvv => generators::blis_rvv_program_sew(
+                self.vlen_bits,
+                self.lmul,
+                self.sew,
+                self.k_unroll,
+                l,
+            ),
+            KernelFamily::OpenblasAsm => generators::openblas_asm_program_sew(
+                self.vlen_bits,
+                self.lmul,
+                self.sew,
+                self.k_unroll,
+                l,
+            ),
             KernelFamily::AsmSource => self
                 .asm
                 .as_ref()
@@ -388,6 +428,7 @@ pub fn openblas_generic() -> KernelDescriptor {
         family: KernelFamily::OpenblasAsm,
         vlen_bits: 0,
         lmul: Lmul::M1,
+        sew: Sew::E64,
         native_rvv10: false,
         mr: 4,
         nr: 4,
@@ -410,6 +451,7 @@ pub fn openblas_c920() -> KernelDescriptor {
         family: KernelFamily::OpenblasAsm,
         vlen_bits: 128,
         lmul: Lmul::M2,
+        sew: Sew::E64,
         native_rvv10: false,
         mr: 8,
         nr: 4,
@@ -430,6 +472,7 @@ pub fn blis_lmul1() -> KernelDescriptor {
         family: KernelFamily::BlisRvv,
         vlen_bits: 128,
         lmul: Lmul::M1,
+        sew: Sew::E64,
         native_rvv10: false,
         mr: 8,
         nr: 4,
@@ -452,6 +495,7 @@ pub fn blis_lmul4() -> KernelDescriptor {
         family: KernelFamily::BlisRvv,
         vlen_bits: 128,
         lmul: Lmul::M4,
+        sew: Sew::E64,
         native_rvv10: false,
         mr: 8,
         nr: 4,
@@ -476,6 +520,7 @@ pub fn blis_rvv1_lmul2() -> KernelDescriptor {
         family: KernelFamily::BlisRvv,
         vlen_bits: 128,
         lmul: Lmul::M2,
+        sew: Sew::E64,
         native_rvv10: true,
         mr: 8,
         nr: 4,
@@ -498,6 +543,7 @@ pub fn blis_rvv1_lmul4() -> KernelDescriptor {
         family: KernelFamily::BlisRvv,
         vlen_bits: 128,
         lmul: Lmul::M4,
+        sew: Sew::E64,
         native_rvv10: true,
         mr: 8,
         nr: 4,
@@ -588,8 +634,8 @@ impl KernelRegistry {
     /// id = "blis-rvv1-u8"
     /// base = "blis-rvv1-lmul2"
     /// k_unroll = 8
-    /// # other overrides: label, family, vlen, lmul, mr, nr, blocking,
-    /// # host_overhead, native_rvv10
+    /// # other overrides: label, family, vlen, lmul, sew, mr, nr,
+    /// # blocking, host_overhead, native_rvv10
     /// ```
     pub fn register_section(
         &mut self,
@@ -623,6 +669,7 @@ impl KernelRegistry {
             "family",
             "vlen",
             "lmul",
+            "sew",
             "mr",
             "nr",
             "k_unroll",
@@ -689,6 +736,14 @@ impl KernelRegistry {
                 4 => Lmul::M4,
                 8 => Lmul::M8,
                 other => return Err(spec_err(format!("`lmul` must be 1, 2, 4 or 8, got {other}"))),
+            };
+        }
+        if let Some(v) = sec.get("sew") {
+            let b = v.as_int().ok_or_else(|| spec_err("`sew` must be an int (32|64)".into()))?;
+            k.sew = match b {
+                32 => Sew::E32,
+                64 => Sew::E64,
+                other => return Err(spec_err(format!("`sew` must be 32 or 64, got {other}"))),
             };
         }
         let get_usize = |key: &str| -> Result<Option<usize>, CimoneError> {
@@ -944,6 +999,53 @@ mod tests {
             reg.register_section(&cfg.table_arrays["kernel"][0]),
             Err(CimoneError::InvalidKernel { .. })
         ));
+    }
+
+    #[test]
+    fn e32_kernel_validates_and_shifts_the_content_hash() {
+        let mut k = blis_lmul4();
+        k.id = "blis-lmul4-e32".into();
+        k.aliases = Vec::new();
+        k.sew = Sew::E32;
+        k.validate().unwrap();
+        // element width is a real tunable: it must move the cache key
+        assert_ne!(k.content_hash(), blis_lmul4().content_hash());
+        // the doubled-MR MxP tile is also allocatable (same register
+        // budget as the E64 original)
+        k.mr = 16;
+        k.validate().unwrap();
+    }
+
+    #[test]
+    fn e32_on_a_scalar_kernel_is_a_typed_error() {
+        let mut k = openblas_generic();
+        k.sew = Sew::E32;
+        match k.validate() {
+            Err(CimoneError::InvalidKernel { reason, .. }) => {
+                assert!(reason.contains("FP64-only"), "{reason}")
+            }
+            other => panic!("expected InvalidKernel, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn custom_kernel_sew_override_parses_and_rejects_junk() {
+        use crate::util::config::Config;
+        let cfg = Config::parse(
+            "[[kernel]]\nid = \"blis-sp\"\nbase = \"blis-lmul4\"\nsew = 32\nmr = 16\n",
+        )
+        .unwrap();
+        let mut reg = KernelRegistry::builtin();
+        let k = reg.register_section(&cfg.table_arrays["kernel"][0]).unwrap();
+        assert_eq!(k.sew, Sew::E32);
+        assert_eq!(k.mr, 16);
+        // only the two hardware widths exist
+        let cfg =
+            Config::parse("[[kernel]]\nid = \"dud\"\nbase = \"blis-lmul4\"\nsew = 16\n").unwrap();
+        match reg.register_section(&cfg.table_arrays["kernel"][0]) {
+            Err(CimoneError::Spec(m)) => assert!(m.contains("32 or 64"), "{m}"),
+            other => panic!("expected Spec error, got {other:?}"),
+        }
     }
 
     /// A complete 4x2 RVV 1.0 micro-kernel at VLEN=128 / LMUL=2 (one

@@ -23,7 +23,9 @@ impl Summary {
             0.0
         };
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a NaN sample (e.g. a failed timing read) must not
+        // panic the whole report — NaN sorts above every real number
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let median = if n % 2 == 1 {
             sorted[n / 2]
         } else {
@@ -103,6 +105,20 @@ mod tests {
     #[should_panic]
     fn empty_panics() {
         Summary::of(&[]);
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic() {
+        // a NaN sample used to panic the partial_cmp sort; now it sorts
+        // last (total_cmp order) and the finite order statistics survive
+        let s = Summary::of(&[2.0, f64::NAN, 1.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan(), "NaN sorts above every real number");
+        assert_eq!(s.median, 2.0);
+        // all-NaN is equally panic-free
+        let s = Summary::of(&[f64::NAN, f64::NAN]);
+        assert!(s.median.is_nan());
     }
 
     #[test]

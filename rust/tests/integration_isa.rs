@@ -210,6 +210,107 @@ fn differential_fuzz_vecmachine_vs_scalar_oracle() {
 }
 
 // ---------------------------------------------------------------------
+// Mixed-precision differential property: the SEW=32 kernel executed on
+// the vector machine vs a scalar f32 oracle, across VLENs (the kernel
+// side of HPL-MxP must be *exactly* single-precision, not fast-f64).
+// ---------------------------------------------------------------------
+
+#[test]
+fn e32_differential_property_vecmachine_vs_f32_oracle() {
+    #[derive(Clone, Debug)]
+    struct Case {
+        vlen: usize,
+        lmul: Lmul,
+        mr: usize,
+        nr: usize,
+        kc: usize,
+        k_unroll: usize,
+        seed: u64,
+    }
+    prop::check(
+        "E32 kernel == scalar f32 GEMM oracle",
+        0xE32_D1FF,
+        80,
+        |rng: &mut Rng, size: usize| Case {
+            vlen: [128usize, 256, 512][rng.below(3) as usize],
+            lmul: [Lmul::M1, Lmul::M2][rng.below(2) as usize],
+            mr: [2usize, 4, 8][rng.below(3) as usize],
+            nr: rng.range_usize(1, 5),
+            kc: rng.range_usize(1, 2 + size.min(11)),
+            k_unroll: [1usize, 2, 4][rng.below(3) as usize],
+            seed: rng.next_u64(),
+        },
+        |c| {
+            let l = PanelLayout::new(c.mr, c.nr, c.kc);
+            let p = cimone::ukernel::generators::blis_rvv_program_sew(
+                c.vlen, c.lmul, Sew::E32, c.k_unroll, l,
+            );
+            if p.validate_register_groups(c.vlen).is_err() {
+                return Ok(()); // infeasible corner of the random grid
+            }
+            // the executed program is the *assembled* one, as in the
+            // f64 fuzz harness: the text front end is under test too
+            let back = assemble(&disassemble(&p)).map_err(|e| e.to_string())?;
+            if back != p {
+                return Err("text round-trip changed the E32 program".into());
+            }
+            let a = Matrix::random_hpl(c.mr, c.kc, c.seed);
+            let b = Matrix::random_hpl(c.kc, c.nr, c.seed ^ 1);
+            let cm = Matrix::random_hpl(c.mr, c.nr, c.seed ^ 2);
+            let mut m = VecMachine::new(c.vlen, l.mem_words()).map_err(|e| e.to_string())?;
+            m.mem = l.pack(&a, &b, &cm);
+            m.run(&back).map_err(|e| e.to_string())?;
+            let got = l.unpack_c(&m.mem);
+            // scalar f32 oracle: every operand rounded to single
+            // precision, multiply and accumulate rounded per k-step
+            let mut want = Matrix::zeros(c.mr, c.nr);
+            for i in 0..c.mr {
+                for j in 0..c.nr {
+                    let mut acc = cm[(i, j)] as f32;
+                    for k in 0..c.kc {
+                        acc += (a[(i, k)] as f32) * (b[(k, j)] as f32);
+                    }
+                    want[(i, j)] = acc as f64;
+                }
+            }
+            if got.allclose(&want, 1e-5, 1e-5) {
+                Ok(())
+            } else {
+                Err(format!(
+                    "vlen={} lmul={:?} {}x{} kc={} u={} diverged from the f32 oracle",
+                    c.vlen, c.lmul, c.mr, c.nr, c.kc, c.k_unroll
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn e32_kernel_numerics_are_genuinely_single_precision() {
+    // the E32 run must disagree with the f64 oracle: if it matched at
+    // f64 tightness, the machine silently skipped the f32 rounding
+    let l = PanelLayout::new(4, 4, 8);
+    let p = cimone::ukernel::generators::blis_rvv_program_sew(256, Lmul::M1, Sew::E32, 1, l);
+    let a = Matrix::random_hpl(4, 8, 21);
+    let b = Matrix::random_hpl(8, 4, 22);
+    let c = Matrix::random_hpl(4, 4, 23);
+    let mut m = VecMachine::new(256, l.mem_words()).unwrap();
+    m.mem = l.pack(&a, &b, &c);
+    m.run(&p).unwrap();
+    let got = l.unpack_c(&m.mem);
+    let mut f64_want = c.clone();
+    Matrix::gemm_acc(&mut f64_want, &a, &b);
+    assert!(
+        !got.allclose(&f64_want, 1e-9, 1e-9),
+        "E32 run matched the f64 oracle bit-tight — f32 rounding never engaged"
+    );
+    assert!(
+        got.allclose(&f64_want, 1e-4, 1e-4),
+        "E32 run is not even single-precision close to the f64 oracle"
+    );
+}
+
+// ---------------------------------------------------------------------
 // Diagnostics: file/line/col + caret excerpt on the public error type.
 // ---------------------------------------------------------------------
 
