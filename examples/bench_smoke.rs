@@ -12,15 +12,23 @@
 
 use cimone::util::json::Json;
 
-const REQUIRED_KEYS: [&str; 7] = [
+const REQUIRED_KEYS: [&str; 12] = [
     "vec_machine_insts_per_s",
     "program_gen_per_s",
     "analyze_cold_per_s",
     "analyze_warm_per_s",
+    "trace_sim_interval_accesses_per_s",
+    "trace_sim_per_access_accesses_per_s",
+    "trace_sim_speedup",
+    "trace_memo_lookups_per_s",
     "scenarios_per_s_cold",
     "scenarios_per_s_warm",
     "warm_speedup",
+    "full_codesign_scenarios_per_s",
 ];
+
+/// The memo caches whose counters the bench surfaces under `caches`.
+const CACHES: [&str; 4] = ["programs", "analyses", "estimates", "traces"];
 
 fn main() -> cimone::Result<()> {
     let (text, source) = match std::env::args().nth(1) {
@@ -31,6 +39,18 @@ fn main() -> cimone::Result<()> {
     for key in REQUIRED_KEYS {
         let v = parsed.get(key).and_then(Json::as_f64).unwrap_or(-1.0);
         anyhow::ensure!(v > 0.0, "{source}: `{key}` missing or non-positive ({v})");
+    }
+    let caches = parsed
+        .get("caches")
+        .ok_or_else(|| anyhow::anyhow!("{source}: missing `caches` stats object"))?;
+    for name in CACHES {
+        let c = caches
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("{source}: missing `caches.{name}`"))?;
+        for counter in ["hits", "misses", "entries", "hit_rate"] {
+            let v = c.get(counter).and_then(Json::as_f64).unwrap_or(-1.0);
+            anyhow::ensure!(v >= 0.0, "{source}: `caches.{name}.{counter}` missing ({v})");
+        }
     }
     let fp = parsed
         .get("determinism_fingerprint")

@@ -18,6 +18,7 @@
 //! | `mcv2-dual`    | Sophgo SR1-2208A0, 2x SG2042            | the paper (MCv2)  |
 //! | `sg2044`       | Pioneer II class, 1x SG2044 (C920v2)    | arXiv 2508.13840  |
 //! | `mcv3`         | projected MCv3 node, 2x SG2044          | arXiv 2605.22831  |
+//! | `c930-eval`    | projected C930-class node (VLEN=256)    | what-if (PR 5 note)|
 //!
 //! Platforms validate their own invariants on registration (non-zero
 //! frequency, coherent socket/core counts, sane power and calibration
@@ -321,6 +322,27 @@ pub fn mcv3() -> Platform {
     }
 }
 
+/// Projected C930-class evaluation node: one 64-core VLEN-256 socket,
+/// DDR5 — the wider-VLEN what-if platform the PR 5 notes left open.
+/// Defaults to the matching VLEN-256 BLIS tuning point, which is the
+/// pairing the co-design sweeps exist to interrogate.
+pub fn c930_eval() -> Platform {
+    Platform {
+        id: "c930-eval".into(),
+        label: "C930-class eval (VLEN=256)".into(),
+        aliases: vec!["c930".into()],
+        partition: "c930".into(),
+        host_prefix: "c930".into(),
+        os: "Fedora 41".into(),
+        default_lib: "blis-rvv1-vl256".into(),
+        default_fabric: "ten-gbe-flat".into(),
+        desc: presets::c930_node(),
+        // 4-lane vector units draw harder than the C920v2's two
+        power: PowerModel { idle_w: 60.0, per_core_active_w: 2.0 },
+        calib: PerfCalib::sg2042_class(),
+    }
+}
+
 /// Platforms keyed by id, resolvable by id or alias.
 #[derive(Debug, Clone, Default)]
 pub struct PlatformRegistry {
@@ -333,11 +355,11 @@ impl PlatformRegistry {
         PlatformRegistry::default()
     }
 
-    /// The built-in fleet: MCv1, both MCv2 node types, and the SG2044 /
-    /// MCv3 successors.
+    /// The built-in fleet: MCv1, both MCv2 node types, the SG2044 /
+    /// MCv3 successors, and the C930-class what-if node.
     pub fn builtin() -> PlatformRegistry {
         let mut reg = PlatformRegistry::new();
-        for p in [mcv1_u740(), mcv2_pioneer(), mcv2_dual(), sg2044(), mcv3()] {
+        for p in [mcv1_u740(), mcv2_pioneer(), mcv2_dual(), sg2044(), mcv3(), c930_eval()] {
             reg.register(p).expect("built-in platforms are valid and unique");
         }
         reg
@@ -544,12 +566,16 @@ mod tests {
     #[test]
     fn builtin_fleet_registers_and_resolves_aliases() {
         let reg = PlatformRegistry::builtin();
-        assert_eq!(reg.ids(), ["mcv1-u740", "mcv2-dual", "mcv2-pioneer", "mcv3", "sg2044"]);
+        assert_eq!(
+            reg.ids(),
+            ["c930-eval", "mcv1-u740", "mcv2-dual", "mcv2-pioneer", "mcv3", "sg2044"]
+        );
         assert_eq!(reg.get("mcv1").unwrap().id, "mcv1-u740");
         assert_eq!(reg.get("sg2042").unwrap().id, "mcv2-pioneer");
         assert_eq!(reg.get("sr1-2208a0").unwrap().id, "mcv2-dual");
         assert_eq!(reg.get("pioneer-ii").unwrap().id, "sg2044");
         assert_eq!(reg.get("sg2044-dual").unwrap().id, "mcv3");
+        assert_eq!(reg.get("c930").unwrap().id, "c930-eval");
     }
 
     #[test]

@@ -50,6 +50,26 @@ pub fn c920v2() -> CoreModel {
     }
 }
 
+/// T-Head C930-class core: the announced VLEN-256 successor of the
+/// C920v2 (what-if projection for the next Monte Cimone generation).
+///
+/// - 2.5 GHz, dual-issue, ratified RVV 1.0.
+/// - VLEN = 256 (4 FP64 lanes), same 1-cycle vector dispatch as the
+///   C920v2 front end — so a full-width vfmacc retires 4 FMA lanes per
+///   cycle instead of 2, and LMUL=4 kernels keep the datapath busy.
+pub fn c930() -> CoreModel {
+    CoreModel {
+        freq_hz: 2.5e9,
+        issue_width: 2,
+        vlen_bits: 256,
+        native_rvv10: true,
+        vfma_lanes_per_cycle: 4,
+        vinst_dispatch_cycles: 1.0,
+        scalar_fma_per_cycle: 1.0,
+        lsu_per_cycle: 1.0,
+    }
+}
+
 /// SiFive U74 core (U740 SoC): no RVV, single FP pipe.
 ///
 /// MCv1 peak is 4.0 GF/s/node over 4 application cores = 1.0 GF/s/core
@@ -115,6 +135,26 @@ fn sg2044_socket() -> Socket {
     }
 }
 
+fn c930_socket() -> Socket {
+    Socket {
+        cores: 64,
+        core: c930(),
+        l1d: CacheGeom { size_bytes: 64 * 1024, line_bytes: 64, ways: 8, shared_by: 1 },
+        // 4 MB L2 per 4-core cluster: twice the SG2044's, sized so the
+        // wider vector unit's streaming B panels stay resident
+        l2: CacheGeom { size_bytes: 4 << 20, line_bytes: 64, ways: 16, shared_by: 4 },
+        l3: Some(CacheGeom { size_bytes: 128 << 20, line_bytes: 64, ways: 16, shared_by: 64 }),
+        mem: MemorySystem {
+            channels: 4,
+            channel_bw_bytes: 51.2e9, // DDR5-6400
+            // projected controller efficiency just past the SG2044's 50%
+            efficiency: 0.55,
+            per_core_bw_bytes: 3.5e9,
+            capacity_bytes: 128 * GB,
+        },
+    }
+}
+
 /// MCv2 Milk-V Pioneer Box: single SG2042, 128 GB DDR4.
 pub fn sg2042() -> SocDescriptor {
     SocDescriptor {
@@ -154,6 +194,17 @@ pub fn sg2044_dual() -> SocDescriptor {
         name: "mcv3-sg2044x2".into(),
         sockets: vec![sg2044_socket(), sg2044_socket()],
         numa_penalty: 0.90,
+    }
+}
+
+/// Projected C930-class evaluation node: single 64-core VLEN-256
+/// socket, 128 GB DDR5. The wider-VLEN what-if platform left open by
+/// the PR 5 notes.
+pub fn c930_node() -> SocDescriptor {
+    SocDescriptor {
+        name: "c930-eval".into(),
+        sockets: vec![c930_socket()],
+        numa_penalty: 1.0,
     }
 }
 
@@ -225,6 +276,19 @@ mod tests {
         assert!(
             new.sockets[0].mem.attainable_bw() > 1.5 * old.sockets[0].mem.attainable_bw()
         );
+    }
+
+    #[test]
+    fn c930_widens_the_vector_datapath() {
+        let core = c930();
+        assert_eq!(core.vlen_bits, 256);
+        assert!(core.native_rvv10);
+        assert_eq!(core.vfma_lanes_per_cycle, 4);
+        // per-core FP64 peak: 2.5 GHz x 4 lanes x 2 flops = 20 GF/s,
+        // vs the C920v2's 2.6 x 2 x 2 = 10.4
+        let node = c930_node();
+        assert!(node.peak_flops() > 1.8 * sg2044().peak_flops());
+        assert!(node.sockets[0].mem.attainable_bw() > sg2044().sockets[0].mem.attainable_bw());
     }
 
     #[test]

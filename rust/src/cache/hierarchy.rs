@@ -11,10 +11,24 @@ pub struct MultiCoreHierarchy {
     l2: Vec<SetAssocCache>,
     l3: Option<SetAssocCache>,
     l2_shared_by: usize,
+    /// Range touches go through the interval engine
+    /// ([`SetAssocCache::access_line_run`]) instead of the per-access
+    /// reference loop. Both paths are counter-identical by construction
+    /// (property-tested below); the reference stays for verification.
+    interval: bool,
+    /// Arena-reused L1 miss buffer for the interval path — range touches
+    /// never allocate per access.
+    miss_scratch: Vec<u64>,
 }
 
 impl MultiCoreHierarchy {
     pub fn new(socket: &Socket, cores: usize) -> Self {
+        Self::with_engine(socket, cores, true)
+    }
+
+    /// Build with the range engine chosen explicitly: `interval = false`
+    /// replays ranges through the retained per-access reference path.
+    pub fn with_engine(socket: &Socket, cores: usize, interval: bool) -> Self {
         assert!(cores >= 1 && cores <= socket.cores);
         let n_l2 = cores.div_ceil(socket.l2.shared_by);
         MultiCoreHierarchy {
@@ -22,6 +36,8 @@ impl MultiCoreHierarchy {
             l2: (0..n_l2).map(|_| SetAssocCache::new(socket.l2)).collect(),
             l3: socket.l3.map(SetAssocCache::new),
             l2_shared_by: socket.l2.shared_by,
+            interval,
+            miss_scratch: Vec::new(),
         }
     }
 
@@ -50,8 +66,21 @@ impl MultiCoreHierarchy {
     }
 
     /// A contiguous element range [lo, hi) in bytes: touch each line once
-    /// with the element count it covers.
+    /// with the element count it covers. Dispatches to the interval
+    /// engine (the default) or the per-access reference loop.
     pub fn access_range(&mut self, core: usize, lo: u64, hi: u64) {
+        if self.interval {
+            self.access_range_interval(core, lo, hi);
+        } else {
+            self.access_range_per_access(core, lo, hi);
+        }
+    }
+
+    /// The retained per-access reference path: one `access_block` per
+    /// line. The interval engine is property-tested bit-identical to
+    /// this loop; it is also what `cimone bench` times the engine
+    /// against.
+    pub fn access_range_per_access(&mut self, core: usize, lo: u64, hi: u64) {
         const LINE: u64 = 64;
         const ELEM: u64 = 8;
         let mut a = lo & !(LINE - 1);
@@ -62,6 +91,49 @@ impl MultiCoreHierarchy {
             self.access_block(core, a, elems);
             a += LINE;
         }
+    }
+
+    /// The interval path: resolve the whole line run against the core's
+    /// L1 in one `access_line_run` call, weight the retired-load counter
+    /// once for the range (the edge lines cover fewer elements than the
+    /// interior's eight), then replay the missed lines — sorted back
+    /// into reference order — down L2/L3 exactly as the per-line loop
+    /// would have.
+    fn access_range_interval(&mut self, core: usize, lo: u64, hi: u64) {
+        const LINE: u64 = 64;
+        const ELEM: u64 = 8;
+        if hi <= lo {
+            return;
+        }
+        let lo_line = lo / LINE;
+        let hi_line = (hi - 1) / LINE + 1;
+        let run_len = hi_line - lo_line;
+        // retired loads per line: interior lines cover LINE/ELEM
+        // elements, the edges only their covered fraction
+        let total_elems = if run_len == 1 {
+            (hi - lo).div_ceil(ELEM).max(1)
+        } else {
+            let first = ((lo_line + 1) * LINE - lo).div_ceil(ELEM).max(1);
+            let last = (hi - (hi_line - 1) * LINE).div_ceil(ELEM).max(1);
+            first + last + (run_len - 2) * (LINE / ELEM)
+        };
+        let mut misses = std::mem::take(&mut self.miss_scratch);
+        misses.clear();
+        let l1 = &mut self.l1[core];
+        l1.access_line_run(lo_line, hi_line, &mut misses);
+        l1.accesses += total_elems - run_len;
+        // per-set resolution emits misses out of order; the next level
+        // must see them in ascending (reference) order
+        misses.sort_unstable();
+        let l2 = &mut self.l2[core / self.l2_shared_by];
+        for &line in &misses {
+            if !l2.access(line * LINE) {
+                if let Some(l3) = &mut self.l3 {
+                    l3.access(line * LINE);
+                }
+            }
+        }
+        self.miss_scratch = misses;
     }
 
     /// Aggregate stats per level.
@@ -190,5 +262,52 @@ mod tests {
         let mut h = MultiCoreHierarchy::new(s, 4);
         h.access(0, 0);
         assert_eq!(h.stats().l3_accesses, 0);
+    }
+
+    #[test]
+    fn property_interval_engine_is_bit_identical_to_per_access() {
+        // seeded random [lo, hi) byte ranges over mixed hot/cold regions
+        // and cores, replayed through the interval engine and the
+        // retained per-access reference: LevelStats must be bit-equal
+        // after every single range (not just at the end), on sockets
+        // with and without an L3
+        prop::check(
+            "interval engine bit-identity",
+            0xB10C,
+            25,
+            |rng: &mut Rng, size: usize| {
+                let n = 30 + size * 25;
+                let cores = 1 + rng.below(8) as usize;
+                let seed = rng.next_u64();
+                let with_l3 = rng.below(2) == 0;
+                (n, cores, seed, with_l3)
+            },
+            |&(n, cores, seed, with_l3)| {
+                let soc = if with_l3 { presets::sg2042() } else { presets::u740() };
+                let s = &soc.sockets[0];
+                let cores = cores.min(s.cores);
+                let mut fast = MultiCoreHierarchy::with_engine(s, cores, true);
+                let mut refr = MultiCoreHierarchy::with_engine(s, cores, false);
+                let mut rng = Rng::new(seed);
+                for i in 0..n {
+                    let core = rng.below(cores as u64) as usize;
+                    // hot reused region, cold streaming region, and the
+                    // occasional giant run that sweeps every set
+                    let lo = match rng.below(3) {
+                        0 => rng.below(1 << 14),
+                        1 => rng.below(1 << 26),
+                        _ => rng.below(1 << 14) + (1 << 20),
+                    };
+                    let len = 1 + rng.below(64 * 400);
+                    fast.access_range(core, lo, lo + len);
+                    refr.access_range(core, lo, lo + len);
+                    let (a, b) = (fast.stats(), refr.stats());
+                    if a != b {
+                        return Err(format!("range {i} [{lo}, {}): {a:?} != {b:?}", lo + len));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -16,4 +16,7 @@ pub mod trace;
 pub use hierarchy::MultiCoreHierarchy;
 pub use set_assoc::SetAssocCache;
 pub use stats::LevelStats;
-pub use trace::{simulate_gemm, GemmTraceConfig};
+pub use trace::{
+    reset_trace_cache, simulate_gemm, simulate_gemm_with, trace_cache_stats, GemmTraceConfig,
+    TraceEngine,
+};

@@ -774,6 +774,99 @@ impl ScenarioMatrix {
         }
     }
 
+    /// The built-in full co-design product — `cimone sweep --matrix
+    /// full-codesign`: every vector platform (the C930-class what-if
+    /// included) x fleet size x HPL width x registered kernel x fabric
+    /// x power cap x degraded-fleet state x workload family, ~10^5
+    /// scenarios. This is the matrix the streaming sweep machinery
+    /// exists for: nothing materializes the product — specs decode on
+    /// demand ([`spec_at`](Self::spec_at)), name uniqueness is checked
+    /// per axis, and `--top-k` keeps the report bounded. MCv1 and the
+    /// scalar kernel sit out: the scalar U740 pipeline has no vector
+    /// datapath to co-design, and the scalar kernel has no SEW=32 twin
+    /// for the HPL-MxP rows.
+    pub fn full_codesign() -> ScenarioMatrix {
+        let mut base = CampaignSpec::new();
+        base.validate_n = 48;
+        base.push(WorkloadSpec::Hpl {
+            name: "hpl".into(),
+            partition: "mcv2".into(),
+            nodes: 1,
+            platform: "mcv2-dual".into(),
+            cluster_nodes: 1,
+            cores_per_node: 128, // clamped per platform, then per cap
+            lib: None,
+            fabric: None,
+        });
+        base.push(WorkloadSpec::HplMxp {
+            name: "hpl-mxp".into(),
+            partition: "mcv2".into(),
+            nodes: 1,
+            platform: "mcv2-dual".into(),
+            cluster_nodes: 1,
+            cores_per_node: 128,
+            lib: None,
+            fabric: None,
+        });
+        base.push(WorkloadSpec::Stream {
+            name: "stream".into(),
+            partition: "mcv2".into(),
+            nodes: 1,
+            platform: "mcv2-dual".into(),
+            threads: 64,
+        });
+        base.push(WorkloadSpec::Spmv {
+            name: "spmv".into(),
+            partition: "mcv2".into(),
+            nodes: 1,
+            platform: "mcv2-dual".into(),
+            threads: 64,
+            rows: 1 << 20,
+            nnz_per_row: 27,
+            index_bytes: 4,
+        });
+        base.push(WorkloadSpec::BlisAblation {
+            name: "dgemm".into(),
+            partition: "mcv2".into(),
+            platform: "mcv2-dual".into(),
+            lib: "blis-lmul1".into(),
+            cores: 64,
+            runtime_s: 3600.0,
+        });
+        ScenarioMatrix {
+            base,
+            scenarios: Vec::new(),
+            axes: MatrixAxes {
+                platforms: ["mcv2-pioneer", "mcv2-dual", "sg2044", "mcv3", "c930-eval"]
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect(),
+                fleet_sizes: vec![4, 8, 16, 32],
+                node_counts: vec![1, 2, 4],
+                libs: [
+                    "openblas-c920",
+                    "blis-lmul1",
+                    "blis-lmul4",
+                    "blis-rvv1-lmul2",
+                    "blis-rvv1-lmul4",
+                    "blis-rvv1-vl256",
+                ]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+                fabrics: vec!["gbe-flat".into(), "ten-gbe-flat".into()],
+                // all above every platform's single-active-core floor
+                // (the dual-socket MCv2's 111.4 W is the tallest)
+                power_caps: vec![120.0, 140.0, 160.0, 180.0, 200.0, 220.0, 250.0],
+                nodes_down: vec![0, 1, 2, 3],
+                workloads: ["hpl", "hpl-mxp", "stream", "spmv", "dgemm"]
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect(),
+            },
+        }
+    }
+
     /// How many scenario specs this matrix denotes — the explicit
     /// `[[scenario]]`s plus the full axis product (or the single `base`
     /// fallback) — without materializing any of them.
@@ -869,15 +962,62 @@ impl ScenarioMatrix {
         }
     }
 
+    /// Reject empty and duplicate scenario names. For a pure axis
+    /// product (no explicit `[[scenario]]`s) every name is the
+    /// positional `/`-join of one rendered part per non-empty axis, so
+    /// two specs collide iff some single axis repeats a rendered value —
+    /// checked per axis in O(sum of axis lengths) memory, never
+    /// O(product). Matrices with explicit scenarios (or axis values
+    /// that degenerate to empty parts) fall back to streaming every
+    /// name through one set.
+    pub(crate) fn check_names(&self) -> Result<(), CimoneError> {
+        let a = &self.axes;
+        let str_axes_sane = a
+            .platforms
+            .iter()
+            .chain(&a.libs)
+            .chain(&a.fabrics)
+            .chain(&a.workloads)
+            .all(|s| !s.is_empty());
+        if self.scenarios.is_empty() && !a.is_empty() && str_axes_sane {
+            fn distinct(
+                axis: &str,
+                parts: impl Iterator<Item = String>,
+            ) -> Result<(), CimoneError> {
+                let mut seen = BTreeSet::new();
+                for p in parts {
+                    if !seen.insert(p.clone()) {
+                        return Err(CimoneError::Spec(format!(
+                            "duplicate scenario name: [matrix].{axis} repeats `{p}`"
+                        )));
+                    }
+                }
+                Ok(())
+            }
+            distinct("platforms", a.platforms.iter().cloned())?;
+            distinct("fleet_sizes", a.fleet_sizes.iter().map(|s| format!("n{s}")))?;
+            distinct("node_counts", a.node_counts.iter().map(|n| format!("{n}n")))?;
+            distinct("libs", a.libs.iter().cloned())?;
+            distinct("fabrics", a.fabrics.iter().cloned())?;
+            distinct("power_caps", a.power_caps.iter().map(|c| format!("cap{c}W")))?;
+            distinct("nodes_down", a.nodes_down.iter().map(|d| format!("down{d}")))?;
+            distinct("workloads", a.workloads.iter().cloned())?;
+            return Ok(());
+        }
+        let mut seen = BTreeSet::new();
+        for i in 0..self.spec_count() {
+            check_name(&mut seen, &self.spec_at(i))?;
+        }
+        Ok(())
+    }
+
     /// Derive every scenario once — names checked, overrides resolved —
     /// without keeping any of them, so load-time validation of an
     /// arbitrarily large axis product stays O(shard) in memory.
     pub fn validate(&self) -> Result<(), CimoneError> {
-        let mut seen = BTreeSet::new();
+        self.check_names()?;
         for i in 0..self.spec_count() {
-            let s = self.spec_at(i);
-            check_name(&mut seen, &s)?;
-            s.derive(&self.base)?;
+            self.spec_at(i).derive(&self.base)?;
         }
         Ok(())
     }
@@ -889,12 +1029,10 @@ impl ScenarioMatrix {
     /// whole product — sweeps should prefer [`run_matrix_with`] /
     /// [`dry_run_matrix_with`], which stream over [`spec_at`](Self::spec_at).
     pub fn expand(&self) -> Result<Vec<Scenario>, CimoneError> {
-        let mut seen = BTreeSet::new();
+        self.check_names()?;
         let mut out = Vec::with_capacity(self.spec_count());
         for i in 0..self.spec_count() {
-            let s = self.spec_at(i);
-            check_name(&mut seen, &s)?;
-            out.push(s.derive(&self.base)?);
+            out.push(self.spec_at(i).derive(&self.base)?);
         }
         Ok(out)
     }
@@ -1277,10 +1415,9 @@ fn collect_matrix(
     run_one: impl Fn(&Scenario) -> Result<ScenarioOutcome, CimoneError> + Sync,
 ) -> Result<ComparisonReport, CimoneError> {
     let total = matrix.spec_count();
-    let mut seen = BTreeSet::new();
-    for i in 0..total {
-        check_name(&mut seen, &matrix.spec_at(i))?;
-    }
+    // name uniqueness before any work: per-axis (O(axes) memory) for
+    // pure products, streamed through one set otherwise
+    matrix.check_names()?;
     let shard = opts.shard_size.max(1);
     let mut kept: Vec<ScenarioOutcome> = Vec::new();
     let mut start = 0;
@@ -1953,6 +2090,58 @@ count = 1
             "b/n1/4n/x/f2/cap100W/down1/w",
         ];
         assert_eq!(names, want);
+    }
+
+    #[test]
+    fn full_codesign_matrix_streams_at_codesign_scale() {
+        let m = ScenarioMatrix::full_codesign();
+        // 5 platforms x 4 fleets x 3 widths x 6 kernels x 2 fabrics x
+        // 7 caps x 4 degraded states x 5 workload families
+        assert_eq!(m.spec_count(), 100_800);
+        // the per-axis name check accepts the product without ever
+        // materializing it
+        m.check_names().unwrap();
+        // mixed-radix decode at the corners and interior points: every
+        // spec derives (all axis combinations are valid by construction)
+        let last = m.spec_count() - 1;
+        assert_eq!(
+            m.spec_at(0).name,
+            "mcv2-pioneer/n4/1n/openblas-c920/gbe-flat/cap120W/down0/hpl"
+        );
+        assert_eq!(
+            m.spec_at(last).name,
+            "c930-eval/n32/4n/blis-rvv1-vl256/ten-gbe-flat/cap250W/down3/dgemm"
+        );
+        for i in [0, 1, 7 * 4 * 5, last / 3, last / 2, last - 1, last] {
+            let s = m.spec_at(i);
+            s.derive(&m.base).unwrap_or_else(|e| panic!("spec {i} `{}`: {e:?}", s.name));
+        }
+        // round-trips through render like every other built-in
+        assert_eq!(ScenarioMatrix::parse(&m.render()).unwrap(), m);
+    }
+
+    #[test]
+    fn per_axis_name_check_catches_duplicates_without_streaming() {
+        // a repeated axis value is exactly a duplicate-name collision;
+        // the fast path must report it as such
+        let mut m = ScenarioMatrix::full_codesign();
+        m.axes.libs.push("blis-lmul4".into());
+        assert!(matches!(
+            m.check_names(),
+            Err(CimoneError::Spec(ref msg))
+                if msg.contains("duplicate scenario name") && msg.contains("blis-lmul4")
+        ));
+        // with explicit scenarios in play the streaming path takes over
+        // and still catches a clash against a product name
+        let mut m = ScenarioMatrix::fabric_scaling();
+        m.scenarios.push(ScenarioSpec {
+            name: "mcv1-u740/1n/gbe-flat".into(),
+            ..ScenarioSpec::default()
+        });
+        assert!(matches!(
+            m.check_names(),
+            Err(CimoneError::Spec(ref msg)) if msg.contains("duplicate scenario name")
+        ));
     }
 
     #[test]

@@ -19,6 +19,11 @@
 //! cimone sweep [--spec file.toml]    scenario sweep -> Green500-style table
 //!         [--dry-run] [--json]       ... default: the built-in generation
 //!                                        matrix (127x HPL / 69x STREAM)
+//!         [--matrix full-codesign]   ... or the full co-design product:
+//!                                        kernels x platforms x fabrics x
+//!                                        fleets x caps x outages x workloads,
+//!                                        ~10^5 scenarios streamed through
+//!                                        the sharded --top-k aggregator
 //!         [--matrix fabric-scaling]  ... or another built-in matrix: the
 //!                                        Fig 5 node-count x fabric sweep
 //!         [--matrix blas-tuning]     ... or the kernel-tuning sweep: the
@@ -212,11 +217,12 @@ fn run(args: &Args) -> Result<(), CimoneError> {
                 (None, Some("power-cap")) => ScenarioMatrix::power_cap(),
                 (None, Some("precision")) => ScenarioMatrix::precision(),
                 (None, Some("sparse")) => ScenarioMatrix::sparse(),
+                (None, Some("full-codesign")) => ScenarioMatrix::full_codesign(),
                 (None, Some(other)) => {
                     return Err(CimoneError::Cli(format!(
                         "unknown built-in matrix `{other}` \
                          (generations | fabric-scaling | blas-tuning | power-cap | \
-                          precision | sparse)"
+                          precision | sparse | full-codesign)"
                     )));
                 }
             };

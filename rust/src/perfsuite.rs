@@ -1,7 +1,7 @@
 //! The `cimone bench` harness: a recorded perf trajectory for the
 //! estimation stack.
 //!
-//! Times the three hot layers end to end —
+//! Times the four hot layers end to end —
 //!
 //! - the functional vector machine ([`crate::isa::exec::VecMachine`]):
 //!   simulated instructions retired per second on the interned LMUL=4
@@ -9,19 +9,33 @@
 //! - kernel generation + cycle analysis: programs decoded per second
 //!   and [`CycleModel::analyze_at`] passes per second, cold, vs the
 //!   memoized [`analysis::analyze`] path warm;
+//! - the cache-trace simulator: element-weighted accesses replayed per
+//!   second through the interval engine vs the retained per-access
+//!   reference loop on the default Fig 6 GEMM trace set (both engines
+//!   produce bit-identical [`LevelStats`](crate::cache::LevelStats)),
+//!   plus the memoized `(GemmTraceConfig, Socket)` lookup path warm;
 //! - whole scenario sweeps: the built-in generation matrix estimated
-//!   per second with cold caches (reset every iteration) vs warm —
-//!   the headline the content-addressed cache exists for.
+//!   per second with cold caches (reset every iteration) vs warm, and
+//!   one streamed pass over the full-codesign product (kernels x
+//!   platforms x fabrics x fleets x caps x outages x workloads) through
+//!   the sharded top-k aggregator — the 10^5-scenario headline.
 //!
 //! Every run also emits a *determinism fingerprint*: the content hash
 //! of the cold sweep's `ComparisonReport` JSON. The warm rerun must
 //! fingerprint identically (cache hits are bit-identical to cold
 //! computation by construction) — a mismatch is a typed error, and CI
-//! compares the fingerprint across two fresh processes. Timings vary
-//! run to run; the fingerprint never may.
+//! compares the fingerprint across two fresh processes AND against the
+//! committed `BENCH_10.json`. Timings vary run to run; the fingerprint
+//! never may.
+
+use std::time::Instant;
 
 use crate::arch::presets;
-use crate::coordinator::scenario::{dry_run_matrix, ScenarioMatrix};
+use crate::blas::blocking::Blocking;
+use crate::cache::{self, GemmTraceConfig, TraceEngine};
+use crate::coordinator::scenario::{
+    dry_run_matrix, dry_run_matrix_with, ScenarioMatrix, SweepOptions,
+};
 use crate::coordinator::workload;
 use crate::error::CimoneError;
 use crate::isa::exec::VecMachine;
@@ -30,13 +44,14 @@ use crate::ukernel::{analysis, KernelRegistry, PanelLayout};
 use crate::util::bench::Bench;
 use crate::util::hash;
 use crate::util::json::Json;
+use crate::util::memo::CacheStats;
 
 /// Everything one `cimone bench` run produced.
 #[derive(Debug, Clone)]
 pub struct SuiteReport {
     /// Human-readable report, one measurement per line.
     pub lines: Vec<String>,
-    /// Machine-readable export (`cimone bench --json` / `BENCH_6.json`).
+    /// Machine-readable export (`cimone bench --json` / `BENCH_10.json`).
     pub json: Json,
     /// Content hash of the cold sweep's report JSON — must be identical
     /// across runs, machines and cache states.
@@ -54,10 +69,22 @@ impl SuiteReport {
 pub fn reset_caches() {
     analysis::reset_caches();
     workload::reset_estimate_cache();
+    cache::reset_trace_cache();
 }
 
-/// Run the suite. `quick` trades sample count for latency (the CI
-/// smoke); the defaults are the recorded-trajectory configuration.
+/// One cache's counters as a JSON object for the bench export.
+fn cache_json(s: CacheStats) -> Json {
+    Json::obj([
+        ("hits", Json::Num(s.hits as f64)),
+        ("misses", Json::Num(s.misses as f64)),
+        ("entries", Json::Num(s.entries as f64)),
+        ("hit_rate", Json::Num(s.hit_rate())),
+    ])
+}
+
+/// Run the suite. `quick` trades sample count (and the full-codesign
+/// product for a truncated one) for latency — the CI smoke; the
+/// defaults are the recorded-trajectory configuration.
 pub fn run(quick: bool) -> Result<SuiteReport, CimoneError> {
     let b = if quick { Bench::quick() } else { Bench::default() };
     let mut lines = vec!["=== cimone bench: estimation-stack hot paths ===".to_string()];
@@ -102,6 +129,34 @@ pub fn run(quick: bool) -> Result<SuiteReport, CimoneError> {
     let analyze_warm_per_s = m.throughput(1.0);
     lines.push(format!("{}   ({:.0} analyses/s)", m.report(), analyze_warm_per_s));
 
+    // --- cache-trace simulator: interval engine vs per-access loop ---
+    // the default trace set is the Fig 6 deep-K pair (BLIS derived
+    // blocking vs OpenBLAS fixed) on the SG2042 socket, two cores
+    let socket = presets::sg2042().sockets[0].clone();
+    let deep = |blocking: Blocking| GemmTraceConfig { m: 256, n: 256, k: 768, blocking, cores: 2 };
+    let trace_set = [deep(Blocking::blis_for(&socket, 8, 4)), deep(Blocking::openblas_fixed(8, 4))];
+    let mut accesses = 0.0;
+    for cfg in &trace_set {
+        let st = cache::simulate_gemm_with(cfg, &socket, TraceEngine::Interval);
+        accesses += st.l1_accesses as f64;
+    }
+    let m = b.run("trace sim: fig6 set (interval engine)", || {
+        for cfg in &trace_set {
+            std::hint::black_box(cache::simulate_gemm_with(cfg, &socket, TraceEngine::Interval));
+        }
+    });
+    let trace_interval_per_s = m.throughput(accesses);
+    lines.push(format!("{}   ({:.1} M accesses/s)", m.report(), trace_interval_per_s / 1e6));
+    let m = b.run("trace sim: fig6 set (per-access ref)", || {
+        for cfg in &trace_set {
+            std::hint::black_box(cache::simulate_gemm_with(cfg, &socket, TraceEngine::PerAccess));
+        }
+    });
+    let trace_per_access_per_s = m.throughput(accesses);
+    lines.push(format!("{}   ({:.1} M accesses/s)", m.report(), trace_per_access_per_s / 1e6));
+    let trace_speedup = trace_interval_per_s / trace_per_access_per_s;
+    lines.push(format!("interval/per-access trace speedup: {trace_speedup:.1}x"));
+
     // --- whole sweeps: cold (caches reset each iteration) vs warm ---
     let matrix = ScenarioMatrix::generations();
     let n_scen = matrix.spec_count() as f64;
@@ -134,27 +189,79 @@ pub fn run(quick: bool) -> Result<SuiteReport, CimoneError> {
         )));
     }
 
+    // --- the full co-design product, streamed through top-k ---
+    // one timed pass (not Bench-sampled: the full product is 10^5
+    // scenarios); --quick truncates the operating-point axes so CI
+    // exercises the identical code path at 300 scenarios
+    let mut fc = ScenarioMatrix::full_codesign();
+    if quick {
+        fc.axes.fleet_sizes.truncate(1);
+        fc.axes.node_counts.truncate(1);
+        fc.axes.power_caps.truncate(1);
+        fc.axes.nodes_down.truncate(1);
+    }
+    let fc_total = fc.spec_count() as f64;
+    let opts = SweepOptions { top_k: Some(8), ..Default::default() };
+    let t = Instant::now();
+    let fc_report = dry_run_matrix_with(&fc, &opts)?;
+    let fc_secs = t.elapsed().as_secs_f64();
+    let full_codesign_scenarios_per_s = fc_total / fc_secs;
+    lines.push(format!(
+        "full-codesign sweep: {} scenarios, top-k 8, {} rows kept   ({:.0} scenarios/s)",
+        fc_report.total,
+        fc_report.scenarios.len(),
+        full_codesign_scenarios_per_s
+    ));
+
+    // the memoized `(config, socket)` trace lookup path, warm — measured
+    // after the sweeps so the cold-sweep cache resets cannot zero the
+    // counters the report snapshots below
+    cache::simulate_gemm(&trace_set[0], &socket); // prime the coordinate
+    let m = b.run("trace sim (warm memoized)", || {
+        std::hint::black_box(cache::simulate_gemm(&trace_set[0], &socket));
+    });
+    let trace_memo_lookups_per_s = m.throughput(1.0);
+    lines.push(format!("{}   ({:.0} lookups/s)", m.report(), trace_memo_lookups_per_s));
+
     let warm_speedup = scenarios_per_s_warm / scenarios_per_s_cold;
     let (prog_stats, an_stats) = analysis::cache_stats();
     let est_stats = workload::estimate_cache_stats();
+    let trace_stats = cache::trace_cache_stats();
     lines.push(format!(
-        "warm/cold sweep speedup: {warm_speedup:.1}x   (cache hit rates: programs {:.0}%, analyses {:.0}%, estimates {:.0}%)",
+        "warm/cold sweep speedup: {warm_speedup:.1}x   (cache hit rates: programs {:.0}%, \
+         analyses {:.0}%, estimates {:.0}%, traces {:.0}%)",
         prog_stats.hit_rate() * 100.0,
         an_stats.hit_rate() * 100.0,
-        est_stats.hit_rate() * 100.0
+        est_stats.hit_rate() * 100.0,
+        trace_stats.hit_rate() * 100.0
     ));
     lines.push(format!("determinism fingerprint: {fingerprint}"));
 
     let json = Json::obj([
-        ("bench", Json::Num(6.0)),
+        ("bench", Json::Num(10.0)),
         ("determinism_fingerprint", Json::Str(fingerprint.clone())),
         ("vec_machine_insts_per_s", Json::Num(vec_machine_insts_per_s)),
         ("program_gen_per_s", Json::Num(program_gen_per_s)),
         ("analyze_cold_per_s", Json::Num(analyze_cold_per_s)),
         ("analyze_warm_per_s", Json::Num(analyze_warm_per_s)),
+        ("trace_sim_interval_accesses_per_s", Json::Num(trace_interval_per_s)),
+        ("trace_sim_per_access_accesses_per_s", Json::Num(trace_per_access_per_s)),
+        ("trace_sim_speedup", Json::Num(trace_speedup)),
+        ("trace_memo_lookups_per_s", Json::Num(trace_memo_lookups_per_s)),
         ("scenarios_per_s_cold", Json::Num(scenarios_per_s_cold)),
         ("scenarios_per_s_warm", Json::Num(scenarios_per_s_warm)),
         ("warm_speedup", Json::Num(warm_speedup)),
+        ("full_codesign_total", Json::Num(fc_total)),
+        ("full_codesign_scenarios_per_s", Json::Num(full_codesign_scenarios_per_s)),
+        (
+            "caches",
+            Json::obj([
+                ("programs", cache_json(prog_stats)),
+                ("analyses", cache_json(an_stats)),
+                ("estimates", cache_json(est_stats)),
+                ("traces", cache_json(trace_stats)),
+            ]),
+        ),
     ]);
     Ok(SuiteReport { lines, json, fingerprint })
 }

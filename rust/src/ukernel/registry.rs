@@ -20,6 +20,7 @@
 //! | `blis-lmul4`      | blis-rvv      | VLEN=128 LMUL=4, 8x4  | the paper's kernel (Fig 2b)|
 //! | `blis-rvv1-lmul2` | blis-rvv      | VLEN=128 LMUL=2, u4   | SG2044 native RVV 1.0     |
 //! | `blis-rvv1-lmul4` | blis-rvv      | VLEN=128 LMUL=4, u2   | MCv3 native RVV 1.0       |
+//! | `blis-rvv1-vl256` | blis-rvv      | VLEN=256 LMUL=4, 16x4 | C930-class what-if        |
 //!
 //! The four paper kernels produce bit-identical programs to the seed's
 //! hand-written modules (pinned in `rust/tests/integration_kernels.rs`);
@@ -554,6 +555,33 @@ pub fn blis_rvv1_lmul4() -> KernelDescriptor {
     }
 }
 
+/// The VLEN-256 C930-class tuning point (the wider-VLEN what-if left
+/// open by the PR 5 notes): the Fig 2b minimal-fetch schedule of
+/// [`blis_rvv1_lmul4`] widened to a 16x4 tile. At VLEN=256 an LMUL=4
+/// group holds 16 doubles, so one `vle` + one `vfmacc.vf` per column
+/// still covers the whole tile (accumulators in v0..v15, the A group at
+/// v16). Calibrated overhead ~32%: packing 16-row A panels is
+/// harsher on a 128-bit-era L2 than the 8-row retrofits, which is why
+/// this kernel only pays off on cores with the matching 4-lane datapath.
+pub fn blis_rvv1_vl256() -> KernelDescriptor {
+    KernelDescriptor {
+        id: "blis-rvv1-vl256".into(),
+        label: "BLIS (native RVV 1.0, VLEN=256)".into(),
+        aliases: vec!["blis-c930".into()],
+        family: KernelFamily::BlisRvv,
+        vlen_bits: 256,
+        lmul: Lmul::M4,
+        sew: Sew::E64,
+        native_rvv10: true,
+        mr: 16,
+        nr: 4,
+        k_unroll: 2,
+        blocking: BlockingPolicy::CacheDerived,
+        host_overhead: 0.32,
+        asm: None,
+    }
+}
+
 /// Kernels keyed by id, resolvable by id or alias.
 #[derive(Debug, Clone, Default)]
 pub struct KernelRegistry {
@@ -577,6 +605,7 @@ impl KernelRegistry {
             blis_lmul4(),
             blis_rvv1_lmul2(),
             blis_rvv1_lmul4(),
+            blis_rvv1_vl256(),
         ] {
             reg.register(k).expect("built-in kernels are valid and unique");
         }
@@ -766,10 +795,25 @@ impl KernelRegistry {
             k.k_unroll = v;
         }
         if let Some(v) = sec.get("host_overhead") {
-            k.host_overhead = v
-                .as_float()
-                .filter(|f| f.is_finite())
-                .ok_or_else(|| spec_err("`host_overhead` must be a finite number".into()))?;
+            k.host_overhead = match v.as_str() {
+                // `host_overhead = "auto"`: calibrate from the cache
+                // simulator's L2/L3 miss rates on the reference SG2042
+                // socket (the paper's calibration platform) — the
+                // geometry overrides above are already applied, so the
+                // simulated loop nest is the kernel's own
+                Some("auto") => super::analysis::calibrated_host_overhead(
+                    &k,
+                    &crate::arch::presets::sg2042().sockets[0],
+                ),
+                Some(other) => {
+                    return Err(spec_err(format!(
+                        "`host_overhead` must be a finite number or \"auto\", got `{other}`"
+                    )));
+                }
+                None => v.as_float().filter(|f| f.is_finite()).ok_or_else(|| {
+                    spec_err("`host_overhead` must be a finite number or \"auto\"".into())
+                })?,
+            };
         }
         if let Some(v) = sec.get("native_rvv10") {
             k.native_rvv10 =
@@ -837,6 +881,7 @@ mod tests {
                 "blis-lmul4",
                 "blis-rvv1-lmul2",
                 "blis-rvv1-lmul4",
+                "blis-rvv1-vl256",
                 "openblas-c920",
                 "openblas-generic",
             ]
@@ -849,6 +894,47 @@ mod tests {
         assert_eq!(reg.get("blis-vanilla").unwrap().id, "blis-lmul1");
         assert_eq!(reg.get("blis-opt").unwrap().id, "blis-lmul4");
         assert_eq!(reg.get("blis-rvv1").unwrap().id, "blis-rvv1-lmul2");
+        assert_eq!(reg.get("blis-c930").unwrap().id, "blis-rvv1-vl256");
+    }
+
+    #[test]
+    fn vl256_kernel_register_allocates_and_rejects_wider_tiles() {
+        // 16x4 at VLEN=256 / LMUL=4: one 16-double group per column run
+        // (accumulators v0..v15, A at v16..v19) — doubling nr pushes the
+        // accumulator file past v31, the LMUL=8-style overflow rejection
+        let k = blis_rvv1_vl256();
+        k.validate().unwrap();
+        let mut too_wide = k.clone();
+        too_wide.nr = 8;
+        assert!(matches!(too_wide.validate(), Err(CimoneError::InvalidKernel { .. })));
+    }
+
+    #[test]
+    fn auto_host_overhead_calibrates_from_the_cache_simulator() {
+        use crate::util::config::Config;
+        let cfg = Config::parse(
+            "[[kernel]]\nid = \"blis-auto\"\nbase = \"blis-lmul4\"\nhost_overhead = \"auto\"\n",
+        )
+        .unwrap();
+        let mut reg = KernelRegistry::builtin();
+        let k = reg.register_section(&cfg.table_arrays["kernel"][0]).unwrap();
+        // the calibration formula's floor/ceiling, and determinism: the
+        // value is exactly what the analysis-layer calibration returns
+        assert!((0.10..=0.45).contains(&k.host_overhead), "{}", k.host_overhead);
+        let want = super::super::analysis::calibrated_host_overhead(
+            &k,
+            &crate::arch::presets::sg2042().sockets[0],
+        );
+        assert_eq!(k.host_overhead.to_bits(), want.to_bits());
+        // junk strings stay typed errors
+        let cfg = Config::parse(
+            "[[kernel]]\nid = \"dud\"\nbase = \"blis-lmul4\"\nhost_overhead = \"manual\"\n",
+        )
+        .unwrap();
+        match reg.register_section(&cfg.table_arrays["kernel"][0]) {
+            Err(CimoneError::Spec(m)) => assert!(m.contains("\"auto\""), "{m}"),
+            other => panic!("expected Spec error, got {other:?}"),
+        }
     }
 
     #[test]

@@ -126,12 +126,32 @@ fn quick_bench_suite_is_deterministic_and_complete() {
         "program_gen_per_s",
         "analyze_cold_per_s",
         "analyze_warm_per_s",
+        "trace_sim_interval_accesses_per_s",
+        "trace_sim_per_access_accesses_per_s",
+        "trace_sim_speedup",
+        "trace_memo_lookups_per_s",
         "scenarios_per_s_cold",
         "scenarios_per_s_warm",
         "warm_speedup",
+        "full_codesign_total",
+        "full_codesign_scenarios_per_s",
     ] {
         let v = parsed.get(key).and_then(Json::as_f64).unwrap_or(-1.0);
         assert!(v > 0.0, "{key} = {v}");
+    }
+    // the memo caches behind the estimation stack are observable: every
+    // cache reports its counters, and the sweep-side caches saw traffic
+    let caches = parsed.get("caches").expect("caches stats object");
+    for name in ["programs", "analyses", "estimates", "traces"] {
+        let c = caches.get(name).unwrap_or_else(|| panic!("caches.{name}"));
+        for counter in ["hits", "misses", "entries", "hit_rate"] {
+            let v = c.get(counter).and_then(Json::as_f64).unwrap_or(-1.0);
+            assert!(v >= 0.0, "caches.{name}.{counter} = {v}");
+        }
+    }
+    for name in ["analyses", "estimates", "traces"] {
+        let hits = caches.get(name).and_then(|c| c.get("hits")).and_then(Json::as_f64);
+        assert!(hits.unwrap_or(0.0) > 0.0, "caches.{name} saw no hits");
     }
     assert_eq!(
         parsed.get("determinism_fingerprint").and_then(Json::as_str),

@@ -37,7 +37,7 @@ fn duplicate_registration_is_rejected() {
     p.aliases = vec!["mcv3".into()];
     assert!(matches!(reg.register(p), Err(CimoneError::DuplicatePlatform(ref n)) if n == "mcv3"));
     // the registry is unchanged after the failed registrations
-    assert_eq!(reg.ids().len(), 5);
+    assert_eq!(reg.ids().len(), 6);
 }
 
 #[test]
